@@ -1,0 +1,113 @@
+//! `cargo bench --bench ablation` — design-choice ablations DESIGN.md
+//! calls out:
+//!
+//!   * [BSI] vs SORT_DET_BSP crossover: Batcher wins only at very small
+//!     n/p (§6.2 item 3);
+//!   * sample-sort method: parallel bitonic vs sequential-at-proc-0
+//!     (§5.2 point 2);
+//!   * oversampling ω sweep: imbalance vs sampling cost (the paper's
+//!     "precise tuning of oversampling" claim);
+//!   * duplicate policy: the 3–6 % overhead (§6.1).
+
+use bsp_sort::bsp::{cray_t3d, BspMachine};
+use bsp_sort::gen::{generate_for_proc, Benchmark};
+use bsp_sort::sort::{bsi, det, det_iterative, DuplicatePolicy, SampleSortMethod, SortConfig};
+use bsp_sort::util::bench::black_box;
+
+fn predicted_det(p: usize, n: usize, cfg: &SortConfig) -> (f64, usize) {
+    let params = cray_t3d(p);
+    let machine = BspMachine::new(params);
+    let cfg = *cfg;
+    let run = machine.run(move |ctx| {
+        let local = generate_for_proc(Benchmark::Uniform, ctx.pid(), p, n / p);
+        det::sort_det_bsp(ctx, &params, local, n, &cfg)
+    });
+    let max_recv = run.outputs.iter().map(|r| r.received).max().unwrap();
+    (run.ledger.predicted_secs(&params), max_recv)
+}
+
+fn main() {
+    let p = 8;
+
+    // --- [BSI] crossover ---------------------------------------------------
+    println!("== ablation: [BSI] vs SORT_DET_BSP (predicted T3D seconds) ==");
+    println!("{:>10} {:>12} {:>12} {:>8}", "n", "[BSI]", "[DSQ]", "winner");
+    for logn in [10usize, 12, 14, 17, 20] {
+        let n = 1 << logn;
+        let params = cray_t3d(p);
+        let machine = BspMachine::new(params);
+        let cfg = SortConfig::default();
+        let run = machine.run(|ctx| {
+            let local = generate_for_proc(Benchmark::Uniform, ctx.pid(), p, n / p);
+            bsi::sort_bsi(ctx, local, &cfg)
+        });
+        let bsi_secs = run.ledger.predicted_secs(&params);
+        let (det_secs, _) = predicted_det(p, n, &cfg);
+        println!(
+            "{:>10} {:>12.4} {:>12.4} {:>8}",
+            n,
+            bsi_secs,
+            det_secs,
+            if bsi_secs < det_secs { "[BSI]" } else { "[DSQ]" }
+        );
+        black_box((bsi_secs, det_secs));
+    }
+
+    // --- sample sort method -------------------------------------------------
+    println!("\n== ablation: parallel bitonic vs sequential sample sort ==");
+    println!("{:>10} {:>14} {:>14}", "n", "bitonic", "sequential");
+    for logn in [16usize, 20] {
+        let n = 1 << logn;
+        let (bit, _) = predicted_det(p, n, &SortConfig::default().with_sample_sort(SampleSortMethod::Bitonic));
+        let (seqm, _) = predicted_det(p, n, &SortConfig::default().with_sample_sort(SampleSortMethod::Sequential));
+        println!("{:>10} {:>14.4} {:>14.4}", n, bit, seqm);
+    }
+
+    // --- ω sweep --------------------------------------------------------------
+    println!("\n== ablation: oversampling ω vs imbalance (n=1M, p=8) ==");
+    println!("{:>6} {:>14} {:>14}", "ω", "pred secs", "max recv");
+    let n = 1 << 20;
+    for omega in [1.0f64, 2.0, 4.0, 8.0, 16.0, 32.0] {
+        let cfg = SortConfig::default().with_omega(omega);
+        let (secs, max_recv) = predicted_det(p, n, &cfg);
+        println!("{:>6} {:>14.4} {:>14}", omega, secs, max_recv);
+    }
+
+    // --- rounds: one-round vs two-round deterministic sort -----------------
+    println!("\n== ablation: one-round vs two-round SORT_DET_BSP (p=16) ==");
+    println!("{:>10} {:>14} {:>14}", "n", "1 round", "2 rounds");
+    for logn in [16usize, 20] {
+        let n = 1 << logn;
+        let p16 = 16;
+        let (one, _) = {
+            let params = cray_t3d(p16);
+            let machine = BspMachine::new(params);
+            let cfg = SortConfig::default();
+            let run = machine.run(|ctx| {
+                let local = generate_for_proc(Benchmark::Uniform, ctx.pid(), p16, n / p16);
+                det::sort_det_bsp(ctx, &params, local, n, &cfg)
+            });
+            (run.ledger.predicted_secs(&params), 0)
+        };
+        let (two, _) = {
+            let params = cray_t3d(p16);
+            let machine = BspMachine::new(params);
+            let cfg = SortConfig::default();
+            let run = machine.run(|ctx| {
+                let local = generate_for_proc(Benchmark::Uniform, ctx.pid(), p16, n / p16);
+                det_iterative::sort_det_iterative(ctx, &params, local, n, &cfg)
+            });
+            (run.ledger.predicted_secs(&params), 0)
+        };
+        println!("{:>10} {:>14.4} {:>14.4}", n, one, two);
+    }
+
+    // --- duplicate policy --------------------------------------------------
+    println!("\n== ablation: duplicate tagging overhead on [U] (n=1M, p=8) ==");
+    let (tagged, _) = predicted_det(p, n, &SortConfig::default());
+    let (off, _) = predicted_det(p, n, &SortConfig::default().with_dup(DuplicatePolicy::Off));
+    println!(
+        "tagged {tagged:.4}s vs off {off:.4}s  -> overhead {:+.2}% (paper: 3-6%)",
+        100.0 * (tagged / off - 1.0)
+    );
+}

@@ -1,0 +1,95 @@
+//! `cargo bench --bench hot_paths` — microbenchmarks of the performance-
+//! critical substrates (the §Perf targets in EXPERIMENTS.md):
+//!
+//!   * sequential sorts (quicksort, radixsort) at 1M keys,
+//!   * p-way loser-tree merge,
+//!   * the engine's all-to-all routing superstep,
+//!   * end-to-end SORT_DET_BSP / SORT_IRAN_BSP at 2M keys / 8 procs,
+//!   * XLA local sort via PJRT when artifacts exist.
+
+use bsp_sort::bsp::{cray_t3d, BspMachine, Payload};
+use bsp_sort::gen::{generate_for_proc, Benchmark};
+use bsp_sort::seq;
+use bsp_sort::sort::{det, iran, SortConfig};
+use bsp_sort::util::bench::bench;
+use bsp_sort::util::rng::SplitMix64;
+
+fn main() {
+    let n = 1 << 20;
+
+    // --- sequential sorts ------------------------------------------------
+    let base: Vec<i32> = {
+        let mut rng = SplitMix64::new(1);
+        (0..n).map(|_| rng.next_i32()).collect()
+    };
+    bench("seq/quicksort/1M", |_| {
+        let mut keys = base.clone();
+        seq::quicksort(&mut keys);
+        keys[0]
+    });
+    bench("seq/radixsort/1M", |_| {
+        let mut keys = base.clone();
+        seq::radixsort(&mut keys);
+        keys[0]
+    });
+    bench("seq/std_unstable/1M", |_| {
+        let mut keys = base.clone();
+        keys.sort_unstable();
+        keys[0]
+    });
+
+    // --- p-way merge -------------------------------------------------------
+    let runs: Vec<Vec<i32>> = (0..16)
+        .map(|i| {
+            let mut rng = SplitMix64::new(i as u64 + 10);
+            let mut r: Vec<i32> = (0..n / 16).map(|_| rng.next_i32()).collect();
+            r.sort_unstable();
+            r
+        })
+        .collect();
+    bench("seq/multiway_merge/16x64K", |_| {
+        seq::multiway_merge(&runs).len()
+    });
+
+    // --- engine all-to-all ---------------------------------------------------
+    let p = 8;
+    let machine = BspMachine::new(cray_t3d(p));
+    bench("engine/all_to_all/8x128K", |_| {
+        let run = machine.run(|ctx| {
+            let parts: Vec<Payload> = (0..ctx.nprocs())
+                .map(|_| Payload::Keys(vec![1i32; 128 * 1024 / ctx.nprocs()]))
+                .collect();
+            let inbox = ctx.all_to_all(parts, "bench");
+            inbox.len()
+        });
+        run.outputs.len()
+    });
+
+    // --- end-to-end sorts ------------------------------------------------
+    let n2 = 2 << 20;
+    let params = cray_t3d(p);
+    let cfg = SortConfig::default();
+    bench("e2e/sort_det_bsp/2M/p8", |_| {
+        let run = machine.run(|ctx| {
+            let local = generate_for_proc(Benchmark::Uniform, ctx.pid(), p, n2 / p);
+            det::sort_det_bsp(ctx, &params, local, n2, &cfg)
+        });
+        run.outputs.iter().map(|r| r.keys.len()).sum::<usize>()
+    });
+    bench("e2e/sort_iran_bsp/2M/p8", |_| {
+        let run = machine.run(|ctx| {
+            let local = generate_for_proc(Benchmark::Uniform, ctx.pid(), p, n2 / p);
+            iran::sort_iran_bsp(ctx, &params, local, n2, &cfg, 77)
+        });
+        run.outputs.iter().map(|r| r.keys.len()).sum::<usize>()
+    });
+
+    // --- XLA local sort (optional) ------------------------------------------
+    match bsp_sort::runtime::Runtime::from_default_artifacts() {
+        Ok(rt) => {
+            let keys: Vec<i32> = base[..1 << 16].to_vec();
+            bench("xla/local_sort/64K", |_| rt.sort(&keys).unwrap().len());
+        }
+        Err(e) => eprintln!("skipping xla bench: {e}"),
+    }
+}

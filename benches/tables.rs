@@ -1,0 +1,60 @@
+//! `cargo bench --bench tables` — regenerate every paper table (scaled
+//! grid by default; set BENCH_FULL=1 for the paper's full 64M/128p grid)
+//! and print them, timing each regeneration.
+//!
+//! One bench per paper table (DESIGN.md §5), plus the three in-text
+//! validations.  This is the canonical reproduction entry point; its
+//! output is what EXPERIMENTS.md records.
+
+use bsp_sort::tables::{self, validate, TableOpts};
+use bsp_sort::util::bench::{bench_cfg, BenchConfig};
+
+fn opts() -> TableOpts {
+    if std::env::var("BENCH_FULL").is_ok() {
+        TableOpts::full()
+    } else {
+        TableOpts {
+            // Scaled default: 2M keys / 64 procs keeps the full 11-table
+            // sweep tractable on a small host while preserving shape.
+            max_n: std::env::var("BENCH_MAX_N")
+                .ok()
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(2 * tables::MEG),
+            max_p: 64,
+            seed: 0x0BEE,
+            reps: 1,
+        }
+    }
+}
+
+fn main() {
+    let cfg = BenchConfig {
+        warmup_iters: 0,
+        measure_iters: 1,
+        max_total: std::time::Duration::from_secs(3600),
+    };
+    let opts = opts();
+    for num in 1..=11usize {
+        let name = format!("table{num}");
+        let mut rendered = String::new();
+        bench_cfg(&name, &cfg, &mut |_| {
+            let out = tables::run_table(num, &opts).unwrap();
+            rendered = out.render();
+            out.rows.len()
+        });
+        println!("{rendered}");
+    }
+    for (name, f) in [
+        ("validate-g", validate::validate_g as fn(&TableOpts) -> tables::TableOutput),
+        ("predict", validate::predict),
+        ("ablate-dup", validate::ablate_duplicates),
+    ] {
+        let mut rendered = String::new();
+        bench_cfg(name, &cfg, &mut |_| {
+            let out = f(&opts);
+            rendered = out.render();
+            out.rows.len()
+        });
+        println!("{rendered}");
+    }
+}

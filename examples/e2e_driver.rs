@@ -1,0 +1,121 @@
+//! End-to-end driver: proves all three layers compose on a real workload.
+//!
+//! Pipeline per benchmark input (the paper's seven distributions):
+//!   1. generate the distributed input with the paper's seeding,
+//!   2. sort with SORT_DET_BSP and SORT_IRAN_BSP on the BSP machine
+//!      substrate (L3) — once with the paper's quicksort backend and once
+//!      with the **XLA backend**: the AOT-compiled Pallas bitonic network
+//!      (L1) inside the JAX local-sort graph (L2), executed via PJRT from
+//!      the Rust hot path,
+//!   3. verify the global order, report the headline metrics (predicted
+//!      T3D seconds, parallel efficiency, key imbalance).
+//!
+//! Run: `make artifacts && cargo run --release --example e2e_driver`
+//! The results table is recorded in EXPERIMENTS.md §End-to-end.
+
+use std::sync::Arc;
+
+use bsp_sort::bsp::{cray_t3d, BspMachine};
+use bsp_sort::gen::{generate_for_proc, Benchmark, ALL_BENCHMARKS};
+use bsp_sort::metrics::RunReport;
+use bsp_sort::runtime::XlaSorter;
+use bsp_sort::seq::{QuickSorter, SeqSorter};
+use bsp_sort::sort::{det, iran, SortConfig};
+
+fn main() -> anyhow::Result<()> {
+    let p = 8;
+    let n = 1 << 20; // 1M keys
+    let params = cray_t3d(p);
+    let machine = BspMachine::new(params);
+    let cfg = SortConfig::default();
+
+    // Layer-1/2 artifacts via PJRT; fall back with a clear message.
+    let xla: Option<Arc<XlaSorter>> = match XlaSorter::from_default_artifacts() {
+        Ok(s) => Some(Arc::new(s)),
+        Err(e) => {
+            eprintln!("warning: XLA backend unavailable ({e}); run `make artifacts`");
+            None
+        }
+    };
+
+    println!("end-to-end: n={n} keys, p={p}, predicted T3D seconds\n");
+    println!(
+        "{:<8} {:>12} {:>12} {:>12} {:>10} {:>12}",
+        "input", "[DSQ]", "[RSQ]", "[DSX](xla)", "eff[DSQ]", "imbalance"
+    );
+
+    let mut checked = 0usize;
+    for bench in ALL_BENCHMARKS {
+        // [DSQ]
+        let run_dsq = machine.run(|ctx| {
+            let local = generate_for_proc(bench, ctx.pid(), p, n / p);
+            det::sort_det_bsp(ctx, &params, local, n, &cfg)
+        });
+        verify(&run_dsq.outputs, n);
+        let rep = RunReport::new("[DSQ]", bench.tag(), n, &params, &run_dsq.ledger, &run_dsq.outputs);
+
+        // [RSQ]
+        let run_rsq = machine.run(|ctx| {
+            let local = generate_for_proc(bench, ctx.pid(), p, n / p);
+            iran::sort_iran_bsp(ctx, &params, local, n, &cfg, 0xE2E)
+        });
+        verify(&run_rsq.outputs, n);
+        let rsq_secs = run_rsq.ledger.predicted_secs(&params);
+
+        // [DSX]: the same BSP program with the XLA local sort (L1+L2).
+        let dsx_secs = match &xla {
+            Some(sorter) => {
+                let sorter = Arc::clone(sorter);
+                let run = machine.run(|ctx| {
+                    let mut local = generate_for_proc(bench, ctx.pid(), p, n / p);
+                    det::sort_det_bsp_with(ctx, &params, &mut local, n, &cfg, sorter.as_ref() as &dyn SeqSorter)
+                });
+                verify(&run.outputs, n);
+                // Also check the XLA path agrees with the quicksort path.
+                let a: Vec<i32> = run.outputs.iter().flat_map(|r| r.keys.clone()).collect();
+                let b: Vec<i32> = run_dsq.outputs.iter().flat_map(|r| r.keys.clone()).collect();
+                assert_eq!(a, b, "XLA and quicksort backends must agree on {}", bench.tag());
+                checked += 1;
+                Some(run.ledger.predicted_secs(&params))
+            }
+            None => None,
+        };
+
+        println!(
+            "{:<8} {:>12.3} {:>12.3} {:>12} {:>9.0}% {:>+11.1}%",
+            bench.tag(),
+            rep.predicted_secs,
+            rsq_secs,
+            dsx_secs.map(|s| format!("{s:.3}")).unwrap_or_else(|| "-".into()),
+            100.0 * rep.efficiency(&params),
+            100.0 * rep.imbalance.expansion,
+        );
+    }
+
+    // Single-processor quicksort reference (the speedup denominator).
+    let mut reference: Vec<i32> = (0..p).flat_map(|pid| generate_for_proc(Benchmark::Uniform, pid, p, n / p)).collect();
+    let t0 = std::time::Instant::now();
+    QuickSorter.sort(&mut reference);
+    println!(
+        "\nsequential quicksort of {n} keys on this host: {:.3} s (paper's T3D: ~3 s for 1M)",
+        t0.elapsed().as_secs_f64()
+    );
+    if xla.is_some() {
+        println!("XLA (L1 Pallas + L2 JAX via PJRT) agreed with quicksort on {checked}/7 inputs");
+    }
+    println!("end-to-end driver completed OK");
+    Ok(())
+}
+
+fn verify(outputs: &[bsp_sort::sort::ProcResult], n: usize) {
+    let mut last = i32::MIN;
+    let mut total = 0usize;
+    for r in outputs {
+        for &k in &r.keys {
+            assert!(k >= last, "not globally sorted");
+            last = k;
+        }
+        total += r.keys.len();
+    }
+    assert_eq!(total, n);
+}

@@ -1,0 +1,67 @@
+//! Scalability study: the Table 3 experiment as a library client.
+//!
+//! Sweeps p = 2..128 for all four variants on [U], printing predicted
+//! T3D seconds, speedup and efficiency, and the ω-controlled imbalance.
+//!
+//! Run: `cargo run --release --example scalability_study [-- --n 1048576]`
+
+use bsp_sort::bsp::{cray_t3d, BspMachine};
+use bsp_sort::gen::{generate_for_proc, Benchmark};
+use bsp_sort::seq::SeqSortKind;
+use bsp_sort::sort::{det, iran, SortConfig};
+use bsp_sort::theory;
+use bsp_sort::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env(&["n", "max-p"]).expect("args");
+    let n: usize = args.get_parsed("n", 1 << 21).expect("--n");
+    let max_p: usize = args.get_parsed("max-p", 128).expect("--max-p");
+
+    println!("scalability of the four variants on [U], n = {n} keys");
+    println!(
+        "{:<8} {:>6} {:>12} {:>10} {:>10} {:>12}",
+        "variant", "p", "pred secs", "speedup", "eff", "imbalance"
+    );
+
+    for (variant, seq, is_det) in [
+        ("[DSR]", SeqSortKind::Radix, true),
+        ("[DSQ]", SeqSortKind::Quick, true),
+        ("[RSR]", SeqSortKind::Radix, false),
+        ("[RSQ]", SeqSortKind::Quick, false),
+    ] {
+        let mut p = 2usize;
+        while p <= max_p {
+            if n % p != 0 {
+                p *= 2;
+                continue;
+            }
+            let params = cray_t3d(p);
+            let machine = BspMachine::new(params);
+            let cfg = SortConfig::default().with_seq(seq);
+            let run = machine.run(|ctx| {
+                let local = generate_for_proc(Benchmark::Uniform, ctx.pid(), p, n / p);
+                if is_det {
+                    det::sort_det_bsp(ctx, &params, local, n, &cfg)
+                } else {
+                    iran::sort_iran_bsp(ctx, &params, local, n, &cfg, 0xCAFE)
+                }
+            });
+            let secs = run.ledger.predicted_secs(&params);
+            let t_seq = params.comp_us(theory::seq_charge(n)) / 1e6;
+            let speedup = t_seq / secs;
+            let max_recv = run.outputs.iter().map(|r| r.received).max().unwrap();
+            let expansion = max_recv as f64 / (n as f64 / p as f64) - 1.0;
+            println!(
+                "{:<8} {:>6} {:>12.3} {:>10.2} {:>9.0}% {:>+11.1}%",
+                variant,
+                p,
+                secs,
+                speedup,
+                100.0 * speedup / p as f64,
+                100.0 * expansion
+            );
+            p *= 2;
+        }
+        println!();
+    }
+}

@@ -1,0 +1,74 @@
+"""AOT entrypoint: lower the Layer-2 local-sort graphs to HLO *text*.
+
+HLO text (not ``lowered.compile().serialize()`` and not a serialized
+HloModuleProto) is the interchange format: jax >= 0.5 emits protos with
+64-bit instruction ids which the xla crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly.  See /opt/xla-example/README.md.
+
+Usage (from python/):  python -m compile.aot --out-dir ../artifacts
+
+Python runs ONLY here, at build time; the Rust coordinator loads the
+emitted ``artifacts/local_sort_<n>.hlo.txt`` via PJRT and never touches
+Python on the sort path.  ``make artifacts`` skips the rebuild when the
+outputs are newer than their inputs.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_local_sort(n: int, blk: int) -> str:
+    spec = jax.ShapeDtypeStruct((n,), jnp.int32)
+    lowered = jax.jit(model.local_sort_fn(n, blk)).lower(spec)
+    return to_hlo_text(lowered)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--sizes",
+        default=",".join(str(s) for s in model.ARTIFACT_SIZES),
+        help="comma-separated power-of-two input sizes to lower",
+    )
+    ap.add_argument("--blk", type=int, default=model.DEFAULT_BLK)
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    sizes = [int(s) for s in args.sizes.split(",") if s]
+    manifest = {"blk": args.blk, "dtype": "s32", "artifacts": {}}
+    for n in sizes:
+        blk = min(args.blk, n)
+        text = lower_local_sort(n, blk)
+        name = model.artifact_name(n)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][str(n)] = f"{name}.hlo.txt"
+        print(f"wrote {path} ({len(text)} chars, blk={blk})")
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {args.out_dir}/manifest.json")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

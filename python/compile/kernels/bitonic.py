@@ -1,0 +1,151 @@
+"""Layer-1 Pallas kernels: bitonic sorting network over VMEM-resident blocks.
+
+The paper's hot spot is the per-processor local sort (50-65% of running
+time, Tables 4-7).  On the paper's Cray T3D this was a tuned sequential
+quicksort/radixsort.  The TPU-idiomatic rethink (DESIGN.md
+section "Hardware adaptation") is an *oblivious* sorting network:
+
+  * no data-dependent control flow -> perfect for the VPU's SIMD lanes;
+  * each block of 2^m keys lives entirely in VMEM for the whole network
+    (BlockSpec carves the (B, BLK) input into per-row blocks);
+  * the compare-exchange of a bitonic substage is expressible as a
+    reshape + minimum/maximum + select, i.e. pure vector ops, no gather.
+
+Two kernels:
+
+  ``block_sort``   -- full bitonic sort of each row, with a per-row
+                      direction flag (rows must alternate asc/desc so the
+                      result is stage-``BLK`` bitonic input for the
+                      cross-block stages handled at Layer 2).
+  ``block_merge``  -- the within-block tail (substages j = BLK/2 .. 1) of
+                      a cross-block bitonic stage, again with a per-row
+                      direction flag.
+
+Both are lowered with ``interpret=True``: the CPU PJRT plugin cannot run
+Mosaic custom-calls, and correctness (vs ``ref.py``) is what we validate
+here; TPU performance is estimated from the VMEM footprint in DESIGN.md.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Sentinel used to pad partial blocks: sorts after every real key.
+PAD_MAX = jnp.iinfo(jnp.int32).max
+
+
+def _compare_exchange(x: jax.Array, j: int, asc_groups: jax.Array) -> jax.Array:
+    """One bitonic substage with partner distance ``j`` over a 1-D row.
+
+    ``asc_groups`` has shape (n // (2*j), 1): the sort direction of each
+    group of ``2*j`` adjacent lanes.  Implemented as reshape + min/max so
+    it lowers to pure vector ops (no gather/scatter).
+    """
+    n = x.shape[-1]
+    y = x.reshape(n // (2 * j), 2, j)
+    a, b = y[:, 0, :], y[:, 1, :]
+    lo = jnp.minimum(a, b)
+    hi = jnp.maximum(a, b)
+    a2 = jnp.where(asc_groups, lo, hi)
+    b2 = jnp.where(asc_groups, hi, lo)
+    return jnp.stack([a2, b2], axis=1).reshape(n)
+
+
+def _bitonic_sort_row(x: jax.Array) -> jax.Array:
+    """Full ascending bitonic sort of a 1-D row of power-of-two length.
+
+    Classic network: stage k (run length) = 2, 4, ..., n; substage j =
+    k/2 ... 1.  The direction of lane i at stage k is ``(i & k) == 0``;
+    within a group of 2*j adjacent lanes this is constant, so it becomes
+    a per-group column vector.
+    """
+    n = x.shape[-1]
+    lanes = jnp.arange(n, dtype=jnp.int32)
+    k = 2
+    while k <= n:
+        j = k // 2
+        while j >= 1:
+            group_base = lanes[:: 2 * j]  # first lane of each group
+            asc = ((group_base & k) == 0)[:, None]
+            if k == n:
+                # Final merge stage: all-ascending.
+                asc = jnp.ones_like(asc)
+            x = _compare_exchange(x, j, asc)
+            j //= 2
+        k *= 2
+    return x
+
+
+def _block_sort_kernel(x_ref, dir_ref, o_ref):
+    """Sort one row ascending, then flip if the row direction is desc."""
+    row = x_ref[0, :]
+    row = _bitonic_sort_row(row)
+    asc = dir_ref[0, 0] != 0
+    o_ref[0, :] = jnp.where(asc, row, row[::-1])
+
+
+def _block_merge_kernel(x_ref, dir_ref, o_ref):
+    """Within-block tail of a cross-block stage: substages j=BLK/2..1.
+
+    The row is bitonic; the global stage k > BLK means the direction is
+    constant across the whole row (bit k of the global index depends only
+    on the row id), carried in ``dir_ref``.
+    """
+    row = x_ref[0, :]
+    n = row.shape[-1]
+    asc_scalar = (dir_ref[0, 0] != 0)
+    j = n // 2
+    while j >= 1:
+        asc = jnp.full((n // (2 * j), 1), asc_scalar)
+        row = _compare_exchange(row, j, asc)
+        j //= 2
+    o_ref[0, :] = row
+
+
+def _row_grid_call(kernel, x: jax.Array, dirs: jax.Array) -> jax.Array:
+    """Launch ``kernel`` over a (B, BLK) array, one grid step per row.
+
+    BlockSpec pins one (1, BLK) row of keys plus its (1, 1) direction flag
+    into VMEM per step -- this is the HBM<->VMEM schedule the paper
+    expressed with per-processor local memory.
+    """
+    b, blk = x.shape
+    return pl.pallas_call(
+        kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, blk), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, blk), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, blk), x.dtype),
+        interpret=True,
+    )(x, dirs)
+
+
+def block_sort(x: jax.Array, dirs: jax.Array) -> jax.Array:
+    """Bitonic-sort each row of ``x`` (shape (B, BLK), BLK a power of 2).
+
+    ``dirs`` is (B, 1) int32; nonzero = ascending, zero = descending.
+    """
+    _check_pow2(x.shape[-1])
+    return _row_grid_call(_block_sort_kernel, x, dirs)
+
+
+def block_merge(x: jax.Array, dirs: jax.Array) -> jax.Array:
+    """Run the within-block substages of one cross-block bitonic stage."""
+    _check_pow2(x.shape[-1])
+    return _row_grid_call(_block_merge_kernel, x, dirs)
+
+
+def _check_pow2(n: int) -> None:
+    if n & (n - 1) or n == 0:
+        raise ValueError(f"block length must be a power of two, got {n}")
+
+
+@jax.jit
+def bitonic_sort_jnp_row(x: jax.Array) -> jax.Array:  # pragma: no cover
+    """Non-pallas row sort used in microbenchmarks (same network, pure jnp)."""
+    return _bitonic_sort_row(x)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracles for the Pallas kernels (correctness references).
+
+Everything in this file is the "obviously correct" formulation; the pytest
+suite asserts the Pallas kernels and the Layer-2 model agree with these on
+randomized sweeps (see python/tests/).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def sort_rows_ref(x: jax.Array, dirs: jax.Array) -> jax.Array:
+    """Reference for kernels.bitonic.block_sort: per-row directed sort."""
+    asc = jnp.sort(x, axis=-1)
+    desc = asc[:, ::-1]
+    return jnp.where(dirs != 0, asc, desc)
+
+
+def local_sort_ref(x: jax.Array) -> jax.Array:
+    """Reference for model.local_sort: a flat ascending sort."""
+    return jnp.sort(x)
+
+
+def merge_stage_ref(x: jax.Array, dirs: jax.Array) -> jax.Array:
+    """Reference for block_merge: each row is bitonic, the result is the
+    row sorted in its given direction (a bitonic merge completes a sort
+    of a bitonic sequence)."""
+    return sort_rows_ref(x, dirs)

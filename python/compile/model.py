@@ -1,0 +1,115 @@
+"""Layer-2 JAX compute graph: the full local-sort used by the coordinator.
+
+The paper's per-processor local sort (Ph2 of Tables 4-7, 50-65% of total
+running time) is rebuilt here as a hybrid bitonic network:
+
+  1. the flat input of N = B * BLK int32 keys is reshaped to (B, BLK);
+  2. the L1 Pallas kernel ``block_sort`` sorts every block in VMEM with
+     alternating directions (completing the global stages k = 2 .. BLK);
+  3. the remaining global stages k = 2*BLK .. N interleave
+       - cross-block compare-exchanges (substages j >= BLK) expressed as
+         pure jnp min/max over row pairs -- these are HBM-level data
+         movements XLA fuses freely, and
+       - the within-block tail (substages j = BLK/2 .. 1) via the L1
+         ``block_merge`` kernel;
+  4. the result is the flat ascending sort of the input.
+
+Everything is static-shaped; `aot.py` lowers one executable per size so
+the Rust coordinator (Layer 3) can load and run them with zero Python on
+the sort path.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import bitonic
+
+
+def _log2(n: int) -> int:
+    if n & (n - 1) or n <= 0:
+        raise ValueError(f"expected a power of two, got {n}")
+    return n.bit_length() - 1
+
+
+def _cross_block_exchange(x: jax.Array, row_dist: int, asc_rows: jax.Array) -> jax.Array:
+    """Compare-exchange rows b and b ^ row_dist, direction per row.
+
+    Because partner rows share the direction bit (the stage bit k is above
+    the substage bit j), both sides of a pair see the same ``asc``.
+    """
+    b = x.shape[0]
+    y = x.reshape(b // (2 * row_dist), 2, row_dist, x.shape[1])
+    lo = jnp.minimum(y[:, 0], y[:, 1])
+    hi = jnp.maximum(y[:, 0], y[:, 1])
+    asc = asc_rows.reshape(b // (2 * row_dist), 2, row_dist, 1)[:, 0]
+    top = jnp.where(asc, lo, hi)
+    bot = jnp.where(asc, hi, lo)
+    return jnp.stack([top, bot], axis=1).reshape(b, x.shape[1])
+
+
+def local_sort(x: jax.Array, blk: int) -> jax.Array:
+    """Ascending sort of a flat int32 array of power-of-two length.
+
+    ``blk`` is the VMEM block length (power of two, <= len(x)).  The caller
+    (aot.py / Rust runtime) pads partial inputs with ``bitonic.PAD_MAX``.
+    """
+    n = x.shape[-1]
+    m = _log2(n)
+    mb = _log2(blk)
+    if blk > n:
+        raise ValueError(f"blk {blk} exceeds input length {n}")
+
+    nrows = n // blk
+    x = x.reshape(nrows, blk)
+    rows = jnp.arange(nrows, dtype=jnp.int32)[:, None]
+
+    # Stages k = 2 .. BLK: direction of row b at the final within-block
+    # stage is bit mb of the global index = bit 0 of b.
+    if n == blk:
+        dirs = jnp.ones((1, 1), jnp.int32)
+    else:
+        dirs = ((rows & 1) == 0).astype(jnp.int32)
+    x = bitonic.block_sort(x, dirs)
+
+    # Stages k = 2*BLK .. N.  Direction of element i at stage k is
+    # (i & k) == 0; since k >= 2*BLK this is a per-row constant, and for
+    # the final stage k = N it is identically ascending (i < N).
+    for ks in range(mb + 1, m + 1):  # k = 1 << ks
+        k_rows = 1 << (ks - mb)  # stage bit measured in rows
+        asc_rows = ((rows & k_rows) == 0).astype(jnp.int32)
+        # Cross-block substages j = k/2 .. BLK (in rows: k_rows/2 .. 1).
+        jr = k_rows // 2
+        while jr >= 1:
+            x = _cross_block_exchange(x, jr, asc_rows)
+            jr //= 2
+        # Within-block tail j = BLK/2 .. 1.
+        x = bitonic.block_merge(x, asc_rows)
+
+    return x.reshape(n)
+
+
+def local_sort_fn(n: int, blk: int):
+    """A jit-able closure sorting int32[n]; the unit aot.py lowers."""
+
+    def fn(x):
+        return (local_sort(x, blk),)
+
+    return fn
+
+
+# Default block length: 1024 int32 keys = 4 KiB per row buffer; with the
+# double-buffered in/out pair and the direction scalar this is ~8 KiB of
+# VMEM per grid step, far under the ~16 MiB VMEM budget -- chosen small to
+# keep the unrolled network per kernel shallow (lg^2(1024)/2 = 55 substages)
+# and let the grid pipeline HBM<->VMEM transfers across rows.
+DEFAULT_BLK = 1024
+
+# Sizes lowered by `make artifacts`; the Rust XlaSort backend picks the
+# smallest artifact >= its input and pads with PAD_MAX.
+ARTIFACT_SIZES = (1 << 10, 1 << 12, 1 << 14, 1 << 16, 1 << 18, 1 << 20)
+
+
+def artifact_name(n: int) -> str:
+    return f"local_sort_{n}"

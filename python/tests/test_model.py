@@ -1,0 +1,76 @@
+"""Layer-2 correctness: the hybrid block/cross-block local_sort graph."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import bitonic, ref
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    logn=st.integers(2, 12),
+    logblk=st.integers(1, 8),
+)
+def test_local_sort_matches_ref(seed, logn, logblk):
+    if logblk > logn:
+        logblk = logn
+    n, blk = 1 << logn, 1 << logblk
+    rng = np.random.default_rng(seed)
+    x = rng.integers(-(2**31), 2**31 - 1, size=n, dtype=np.int32)
+    got = np.asarray(model.local_sort(jnp.asarray(x), blk))
+    want = np.asarray(ref.local_sort_ref(jnp.asarray(x)))
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_local_sort_duplicate_heavy(seed):
+    rng = np.random.default_rng(seed)
+    x = rng.integers(0, 3, size=1 << 10, dtype=np.int32)
+    got = np.asarray(model.local_sort(jnp.asarray(x), 64))
+    np.testing.assert_array_equal(got, np.sort(x))
+
+
+def test_local_sort_with_pad_sentinels():
+    """The Rust runtime pads partial inputs with PAD_MAX; sentinels must
+    land at the tail."""
+    x = np.concatenate(
+        [
+            np.array([5, -7, 3], dtype=np.int32),
+            np.full(13, int(bitonic.PAD_MAX), dtype=np.int32),
+        ]
+    )
+    got = np.asarray(model.local_sort(jnp.asarray(x), 8))
+    np.testing.assert_array_equal(got[:3], [-7, 3, 5])
+    assert (got[3:] == int(bitonic.PAD_MAX)).all()
+
+
+def test_local_sort_blk_equals_n():
+    x = np.array([4, 2, 9, 1], dtype=np.int32)
+    got = np.asarray(model.local_sort(jnp.asarray(x), 4))
+    np.testing.assert_array_equal(got, [1, 2, 4, 9])
+
+
+def test_local_sort_rejects_oversized_blk():
+    with pytest.raises(ValueError):
+        model.local_sort(jnp.zeros(4, jnp.int32), 8)
+
+
+def test_local_sort_rejects_non_pow2():
+    with pytest.raises(ValueError):
+        model.local_sort(jnp.zeros(6, jnp.int32), 2)
+
+
+def test_jit_roundtrip_default_blk():
+    """The exact unit aot.py lowers, under jit, on a realistic size."""
+    n = 1 << 12
+    rng = np.random.default_rng(0)
+    x = rng.integers(-(2**31), 2**31 - 1, size=n, dtype=np.int32)
+    fn = jax.jit(model.local_sort_fn(n, min(model.DEFAULT_BLK, n)))
+    (got,) = fn(jnp.asarray(x))
+    np.testing.assert_array_equal(np.asarray(got), np.sort(x))

@@ -1,0 +1,329 @@
+//! Helman–JaJa–Bader comparators: the deterministic sorting algorithm of
+//! [39] and the randomized one of [40]/[41], rebuilt on our substrate for
+//! the Table 8/9 comparisons.
+//!
+//! **[39] deterministic** — sorting by regular sampling with *two* data
+//! communication rounds:
+//!   1. local sort; round 1 deterministically deals each processor's
+//!      sorted run into `p` blocks routed by position (a transpose),
+//!   2. each processor merges what it received, selects a regular sample,
+//!      the samples elect splitters,
+//!   3. round 2 routes by splitter, final merge.
+//! Duplicate keys are handled by tagging **every** key (key, origin) —
+//! the paper (§5.1.1, §6.4): "[39] ... handles duplicate keys by
+//! performing twice as much communication"; we charge 2 words per key in
+//! both routing rounds.
+//!
+//! **[40] randomized** — one sample round + one data round, but again
+//! with per-key tags doubling the routed words.
+
+use crate::bsp::engine::BspCtx;
+use crate::bsp::msg::{Payload, SampleRec};
+use crate::bsp::params::BspParams;
+use crate::primitives::broadcast;
+use crate::seq::{ops, search, QuickSorter, RadixSorter, SeqSortKind, SeqSorter};
+use crate::util::rng::SplitMix64;
+
+use super::super::sort::common::{ProcResult, PH2, PH3, PH4, PH5, PH6, PH7};
+use super::super::sort::config::SortConfig;
+
+/// Extra communication factor for per-key duplicate tagging: every routed
+/// key carries its origin tag, doubling the words on the wire.
+const TAG_WORDS_PER_KEY: usize = 2;
+
+fn backend(cfg: &SortConfig) -> Box<dyn SeqSorter> {
+    match cfg.seq {
+        SeqSortKind::Quick => Box::new(QuickSorter),
+        SeqSortKind::Radix => Box::new(RadixSorter),
+        SeqSortKind::Xla => panic!("baselines support Quick/Radix backends"),
+    }
+}
+
+/// Route `parts[i]` to processor `i`, charging `TAG_WORDS_PER_KEY` words
+/// per key (the tagged-communication model of [39]/[40]).
+fn route_tagged(ctx: &mut BspCtx, parts: Vec<Vec<i32>>, label: &str) -> Vec<Vec<i32>> {
+    let p = ctx.nprocs();
+    assert_eq!(parts.len(), p);
+    for (dst, mut part) in parts.into_iter().enumerate() {
+        // Model the (key, tag) pair stream: duplicate each payload's word
+        // count by sending the tag words as a sibling U64 payload.  The
+        // engine charges h from actual payload words, so the tag stream
+        // doubles h exactly as [39] describes.
+        let tags: Vec<u64> = vec![0u64; part.len() * (TAG_WORDS_PER_KEY - 1)];
+        ctx.send(dst, Payload::Keys(std::mem::take(&mut part)));
+        if !tags.is_empty() {
+            ctx.send(dst, Payload::U64s(tags));
+        }
+    }
+    ctx.sync(label);
+    let mut runs: Vec<Vec<i32>> = vec![Vec::new(); p];
+    for (src, payload) in ctx.take_inbox() {
+        if let Payload::Keys(ks) = payload {
+            runs[src] = ks;
+        }
+    }
+    runs
+}
+
+/// The deterministic algorithm of [39] (two communication rounds).
+pub fn sort_helman_det(
+    ctx: &mut BspCtx,
+    params: &BspParams,
+    mut local: Vec<i32>,
+    cfg: &SortConfig,
+) -> ProcResult {
+    let p = ctx.nprocs();
+    let pid = ctx.pid();
+    let sorter = backend(cfg);
+
+    // Step 1: local sort.
+    ctx.phase(PH2);
+    ctx.charge(sorter.charge(local.len()));
+    sorter.sort(&mut local);
+    let keys = local;
+
+    if p == 1 {
+        return ProcResult { received: keys.len(), runs: 1, keys };
+    }
+
+    // Step 2 (round 1, "PhR" of Table 8): deterministic transpose — the
+    // sorted run is dealt into p position blocks, block i to processor i.
+    ctx.phase("PhR:Transpose");
+    let n_local = keys.len();
+    let block = n_local.div_ceil(p);
+    let parts: Vec<Vec<i32>> = (0..p)
+        .map(|i| keys[(i * block).min(n_local)..((i + 1) * block).min(n_local)].to_vec())
+        .collect();
+    ctx.charge(ops::linear_charge(n_local));
+    let round1 = route_tagged(ctx, parts, "helman:round1");
+
+    // Step 3: merge the received runs; take a regular sample.
+    let runs1: Vec<Vec<i32>> = round1.into_iter().filter(|r| !r.is_empty()).collect();
+    let total1: usize = runs1.iter().map(|r| r.len()).sum();
+    ctx.charge(ops::merge_charge(total1, runs1.len().max(2)));
+    let merged1 = crate::seq::multiway_merge(&runs1);
+
+    ctx.phase(PH3);
+    let step = (merged1.len() / p).max(1);
+    let sample: Vec<SampleRec> = (0..p)
+        .map(|j| {
+            let idx = (j * step).min(merged1.len().saturating_sub(1));
+            SampleRec::new(merged1.get(idx).copied().unwrap_or(i32::MAX), pid, idx)
+        })
+        .collect();
+    ctx.charge(p as f64);
+    ctx.send(0, Payload::Recs(sample));
+    ctx.sync("helman:gather-sample");
+    let splitters = if pid == 0 {
+        let mut all: Vec<SampleRec> = ctx
+            .take_inbox()
+            .into_iter()
+            .flat_map(|(_, payload)| payload.into_recs())
+            .collect();
+        ctx.charge(ops::sort_charge(all.len()));
+        all.sort();
+        let seg = (all.len() / p).max(1);
+        (1..p).map(|i| all[(i * seg - 1).min(all.len() - 1)]).collect()
+    } else {
+        ctx.take_inbox();
+        Vec::new()
+    };
+    let splitters = broadcast::broadcast_recs(ctx, params, 0, splitters, p - 1, "helman:bcast");
+
+    // Step 4 (round 2): partition the merged run, route, final merge.
+    ctx.phase(PH4);
+    let cuts = search::partition_points(&merged1, pid, &splitters);
+    ctx.charge((p as f64 - 1.0) * ops::bsearch_charge(merged1.len().max(2)));
+
+    ctx.phase(PH5);
+    let parts: Vec<Vec<i32>> = (0..p).map(|i| merged1[cuts[i]..cuts[i + 1]].to_vec()).collect();
+    ctx.charge(ops::linear_charge(merged1.len()));
+    let round2 = route_tagged(ctx, parts, "helman:round2");
+
+    ctx.phase(PH6);
+    let runs2: Vec<Vec<i32>> = round2.into_iter().filter(|r| !r.is_empty()).collect();
+    let received: usize = runs2.iter().map(|r| r.len()).sum();
+    ctx.charge(ops::merge_charge(received, runs2.len().max(2)));
+    let merged = crate::seq::multiway_merge(&runs2);
+
+    ctx.phase(PH7);
+    ctx.sync("helman:done");
+
+    ProcResult { keys: merged, received, runs: runs2.len() }
+}
+
+/// The randomized algorithm of [40]: random sample → splitters → one
+/// tagged data round → local sort of the received keys.
+pub fn sort_helman_ran(
+    ctx: &mut BspCtx,
+    params: &BspParams,
+    mut local: Vec<i32>,
+    n_total: usize,
+    cfg: &SortConfig,
+    seed: u64,
+) -> ProcResult {
+    let p = ctx.nprocs();
+    let pid = ctx.pid();
+    let sorter = backend(cfg);
+
+    if p == 1 {
+        ctx.phase(PH6);
+        ctx.charge(sorter.charge(local.len()));
+        sorter.sort(&mut local);
+        return ProcResult { received: local.len(), runs: 1, keys: local };
+    }
+
+    // Sample: s = p·lg n keys per processor ([40] uses s = Θ(p lg n)).
+    ctx.phase(PH3);
+    let lgn = crate::util::lg(n_total as f64).max(1.0) as usize;
+    let share = (p * lgn).min(local.len().max(1));
+    let mut rng = SplitMix64::new(seed ^ ((pid as u64) << 16).wrapping_add(0x4040));
+    let sample: Vec<SampleRec> = if local.is_empty() {
+        vec![SampleRec::new(i32::MAX, pid, 0)]
+    } else {
+        rng.sample_indices(local.len(), share)
+            .into_iter()
+            .map(|i| SampleRec::new(local[i], pid, i))
+            .collect()
+    };
+    ctx.charge(share as f64);
+    ctx.send(0, Payload::Recs(sample));
+    ctx.sync("helmanr:gather");
+    let splitters = if pid == 0 {
+        let mut all: Vec<SampleRec> = ctx
+            .take_inbox()
+            .into_iter()
+            .flat_map(|(_, payload)| payload.into_recs())
+            .collect();
+        ctx.charge(ops::sort_charge(all.len()));
+        all.sort();
+        let seg = (all.len() / p).max(1);
+        (1..p).map(|i| all[(i * seg - 1).min(all.len() - 1)]).collect()
+    } else {
+        ctx.take_inbox();
+        Vec::new()
+    };
+    let splitters = broadcast::broadcast_recs(ctx, params, 0, splitters, p - 1, "helmanr:bcast");
+
+    // Bucket formation on the unsorted input + one tagged data round.
+    ctx.phase(PH5);
+    let mut buckets: Vec<Vec<i32>> = vec![Vec::new(); p];
+    for (i, &k) in local.iter().enumerate() {
+        let me = (k, pid as u32, i as u32);
+        let mut lo = 0usize;
+        let mut hi = splitters.len();
+        while lo < hi {
+            let mid = lo + (hi - lo) / 2;
+            let s = &splitters[mid];
+            if (s.key, s.proc, s.idx) <= me {
+                lo = mid + 1;
+            } else {
+                hi = mid;
+            }
+        }
+        buckets[lo].push(k);
+    }
+    ctx.charge(local.len() as f64 * (ops::bsearch_charge(p) + 3.0));
+    let inbox = route_tagged(ctx, buckets, "helmanr:route");
+
+    // Local sort of everything received.
+    ctx.phase(PH6);
+    let mut keys: Vec<i32> = Vec::new();
+    let mut nruns = 0usize;
+    for r in inbox {
+        if !r.is_empty() {
+            nruns += 1;
+        }
+        keys.extend_from_slice(&r);
+    }
+    let received = keys.len();
+    ctx.charge(sorter.charge(received));
+    sorter.sort(&mut keys);
+
+    ctx.phase(PH7);
+    ctx.sync("helmanr:done");
+
+    ProcResult { keys, received, runs: nruns }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bsp::engine::BspMachine;
+    use crate::bsp::params::cray_t3d;
+    use crate::gen::{generate_for_proc, Benchmark, ALL_BENCHMARKS};
+
+    fn check_sorted(p: usize, n: usize, bench: Benchmark, ran: bool) {
+        let params = cray_t3d(p);
+        let machine = BspMachine::new(params);
+        let cfg = SortConfig::default();
+        let run = machine.run(|ctx| {
+            let local = generate_for_proc(bench, ctx.pid(), p, n / p);
+            let input = local.clone();
+            let out = if ran {
+                sort_helman_ran(ctx, &params, local, n, &cfg, 21)
+            } else {
+                sort_helman_det(ctx, &params, local, &cfg)
+            };
+            (input, out)
+        });
+        let mut expect: Vec<i32> = run.outputs.iter().flat_map(|(i, _)| i.clone()).collect();
+        expect.sort_unstable();
+        let got: Vec<i32> = run.outputs.iter().flat_map(|(_, r)| r.keys.clone()).collect();
+        assert_eq!(got, expect, "{} ran={ran}", bench.tag());
+    }
+
+    #[test]
+    fn helman_det_sorts_every_benchmark() {
+        for bench in ALL_BENCHMARKS {
+            check_sorted(4, 1 << 12, bench, false);
+        }
+    }
+
+    #[test]
+    fn helman_ran_sorts_every_benchmark() {
+        for bench in ALL_BENCHMARKS {
+            check_sorted(4, 1 << 12, bench, true);
+        }
+    }
+
+    #[test]
+    fn helman_det_communicates_twice_as_much_as_dsr() {
+        // The Table 8/9 structural claim: [39] routes the data twice AND
+        // tags every key, so its total routed words exceed [DSR]'s by >2×.
+        let p = 4usize;
+        let n = 1 << 12;
+        let params = cray_t3d(p);
+        let machine = BspMachine::new(params);
+        let cfg = SortConfig::default();
+
+        let helman_words: u64 = {
+            let run = machine.run(|ctx| {
+                let local = generate_for_proc(Benchmark::Uniform, ctx.pid(), p, n / p);
+                sort_helman_det(ctx, &params, local, &cfg)
+            });
+            run.ledger
+                .supersteps
+                .iter()
+                .filter(|s| s.label.starts_with("helman:round"))
+                .map(|s| s.total_words)
+                .sum()
+        };
+        let det_words: u64 = {
+            let run = machine.run(|ctx| {
+                let local = generate_for_proc(Benchmark::Uniform, ctx.pid(), p, n / p);
+                crate::sort::det::sort_det_bsp(ctx, &params, local, n, &cfg)
+            });
+            run.ledger
+                .supersteps
+                .iter()
+                .filter(|s| s.label.starts_with("ph5"))
+                .map(|s| s.total_words)
+                .sum()
+        };
+        assert!(
+            helman_words as f64 >= 2.0 * det_words as f64,
+            "helman={helman_words} det={det_words}"
+        );
+    }
+}

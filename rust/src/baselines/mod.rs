@@ -1,0 +1,9 @@
+//! Comparator implementations from the literature (DESIGN.md §4.5):
+//! Helman–JaJa–Bader deterministic [39] and randomized [40]/[41], and
+//! PSRS [61]/[44].  Used by the Table 8/9/11 harnesses.
+
+pub mod helman;
+pub mod psrs;
+
+pub use helman::{sort_helman_det, sort_helman_ran};
+pub use psrs::sort_psrs;

@@ -1,0 +1,185 @@
+//! PSRS — Parallel Sorting by Regular Sampling (Shi & Schaeffer [61]),
+//! as implemented directly in [44] and (equivalently) the deterministic
+//! algorithm of [41].
+//!
+//! The un-oversampled ancestor of SORT_DET_BSP: each processor takes a
+//! regular sample of exactly `p` keys (no oversampling factor), the
+//! sample is gathered and sorted *sequentially* at processor 0, and no
+//! duplicate tagging exists — the paper notes "the algorithm in [44] as
+//! well as the algorithm in [41] can not handle duplicate keys", and the
+//! [WR] adversary drives its bucket expansion toward the 2·n/p regular
+//! sampling worst case.  Table 11 compares [DSQ] against this.
+
+use crate::bsp::engine::BspCtx;
+use crate::bsp::msg::{Payload, SampleRec};
+use crate::bsp::params::BspParams;
+use crate::primitives::broadcast;
+use crate::seq::{ops, search, QuickSorter, RadixSorter, SeqSortKind, SeqSorter};
+
+use super::super::sort::common::{ProcResult, PH2, PH3, PH4, PH5, PH6, PH7};
+use super::super::sort::config::SortConfig;
+
+/// Run PSRS on this processor's share of the input.
+pub fn sort_psrs(
+    ctx: &mut BspCtx,
+    params: &BspParams,
+    mut local: Vec<i32>,
+    cfg: &SortConfig,
+) -> ProcResult {
+    let p = ctx.nprocs();
+    let pid = ctx.pid();
+    let sorter: Box<dyn SeqSorter> = match cfg.seq {
+        SeqSortKind::Quick => Box::new(QuickSorter),
+        SeqSortKind::Radix => Box::new(RadixSorter),
+        SeqSortKind::Xla => panic!("PSRS supports Quick/Radix backends"),
+    };
+
+    // Phase 1: local sort.
+    ctx.phase(PH2);
+    ctx.charge(sorter.charge(local.len()));
+    sorter.sort(&mut local);
+    let keys = local;
+
+    if p == 1 {
+        return ProcResult { received: keys.len(), runs: 1, keys };
+    }
+
+    // Phase 2: regular sample of exactly p keys (positions 1, 1+n/p², …
+    // in [61]'s formulation — evenly spaced block heads).
+    ctx.phase(PH3);
+    let n_local = keys.len();
+    let step = (n_local / p).max(1);
+    let sample: Vec<SampleRec> = (0..p)
+        .map(|j| {
+            let idx = (j * step).min(n_local.saturating_sub(1));
+            // NO duplicate tags: key-only records (proc/idx zeroed) —
+            // this is exactly why PSRS breaks on duplicate-heavy input.
+            SampleRec { key: keys.get(idx).copied().unwrap_or(i32::MAX), proc: 0, idx: 0 }
+        })
+        .collect();
+    ctx.charge(p as f64);
+    ctx.send(0, Payload::Recs(sample));
+    ctx.sync("psrs:gather-sample");
+    let splitters = if pid == 0 {
+        let mut all: Vec<SampleRec> = ctx
+            .take_inbox()
+            .into_iter()
+            .flat_map(|(_, payload)| payload.into_recs())
+            .collect();
+        ctx.charge(ops::sort_charge(all.len()));
+        all.sort();
+        // p−1 splitters at positions p + ρ, 2p + ρ, … ([61] uses the
+        // medians of the p² sample; evenly spaced is equivalent).
+        (1..p).map(|i| all[i * p + p / 2 - 1]).collect()
+    } else {
+        ctx.take_inbox();
+        Vec::new()
+    };
+    let splitters = broadcast::broadcast_recs(ctx, params, 0, splitters, p - 1, "psrs:bcast");
+
+    // Phase 3: partition at the splitters (key-only comparison).
+    ctx.phase(PH4);
+    let mut cuts = Vec::with_capacity(p + 1);
+    cuts.push(0usize);
+    for s in &splitters {
+        cuts.push(search::upper_bound(&keys, s.key));
+    }
+    cuts.push(keys.len());
+    debug_assert!(cuts.windows(2).all(|w| w[0] <= w[1]));
+    ctx.charge((p as f64 - 1.0) * ops::bsearch_charge(n_local.max(2)));
+
+    // Phase 4: route + merge.
+    ctx.phase(PH5);
+    let parts: Vec<Payload> = (0..p)
+        .map(|i| Payload::Keys(keys[cuts[i]..cuts[i + 1]].to_vec()))
+        .collect();
+    ctx.charge(ops::linear_charge(n_local));
+    let inbox = ctx.all_to_all(parts, "psrs:route");
+
+    ctx.phase(PH6);
+    let runs: Vec<Vec<i32>> = inbox
+        .into_iter()
+        .map(|(_, payload)| payload.into_keys())
+        .filter(|r| !r.is_empty())
+        .collect();
+    let received: usize = runs.iter().map(|r| r.len()).sum();
+    ctx.charge(ops::merge_charge(received, runs.len().max(2)));
+    let merged = crate::seq::multiway_merge(&runs);
+
+    ctx.phase(PH7);
+    ctx.sync("psrs:done");
+
+    ProcResult { keys: merged, received, runs: runs.len() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bsp::engine::BspMachine;
+    use crate::bsp::params::cray_t3d;
+    use crate::gen::{generate_for_proc, Benchmark};
+
+    fn run_psrs(p: usize, n: usize, bench: Benchmark) -> (Vec<Vec<i32>>, Vec<ProcResult>) {
+        let params = cray_t3d(p);
+        let machine = BspMachine::new(params);
+        let cfg = SortConfig::default();
+        let run = machine.run(|ctx| {
+            let local = generate_for_proc(bench, ctx.pid(), p, n / p);
+            let input = local.clone();
+            (input, sort_psrs(ctx, &params, local, &cfg))
+        });
+        let inputs = run.outputs.iter().map(|(i, _)| i.clone()).collect();
+        let results = run.outputs.into_iter().map(|(_, r)| r).collect();
+        (inputs, results)
+    }
+
+    #[test]
+    fn sorts_distinct_key_benchmarks() {
+        for bench in [Benchmark::Uniform, Benchmark::Gaussian, Benchmark::WorstRegular] {
+            let (inputs, results) = run_psrs(4, 1 << 12, bench);
+            let mut expect: Vec<i32> = inputs.iter().flatten().copied().collect();
+            expect.sort_unstable();
+            let got: Vec<i32> = results.iter().flat_map(|r| r.keys.clone()).collect();
+            assert_eq!(got, expect, "{}", bench.tag());
+        }
+    }
+
+    #[test]
+    fn duplicates_still_sort_but_imbalance() {
+        // PSRS has no tags: all-equal inputs sort correctly but pile onto
+        // one processor — the deficiency Table 11 alludes to.
+        let p = 4usize;
+        let n = 1 << 10;
+        let params = cray_t3d(p);
+        let machine = BspMachine::new(params);
+        let run = machine.run(|ctx| {
+            let local = vec![9i32; n / p];
+            sort_psrs(ctx, &params, local, &SortConfig::default())
+        });
+        let total: usize = run.outputs.iter().map(|r| r.keys.len()).sum();
+        assert_eq!(total, n);
+        let max_recv = run.outputs.iter().map(|r| r.received).max().unwrap();
+        assert_eq!(max_recv, n, "PSRS collapses all-equal input onto one processor");
+    }
+
+    #[test]
+    fn dd_imbalance_exceeds_det_bound() {
+        // PSRS's missing duplicate handling is its Achilles heel (the
+        // paper: "[44] ... can not handle duplicate keys"): on [DD] its
+        // bucket expansion blows past SORT_DET_BSP's (1 + 1/⌈ω⌉) bound,
+        // which the tagged DET algorithm never exceeds (det.rs tests).
+        let p = 8usize;
+        let n = 1 << 13;
+        let (_, results) = run_psrs(p, n, Benchmark::DetDup);
+        let max_recv = results.iter().map(|r| r.received).max().unwrap();
+        let det_bound = crate::sort::det::nmax_bound(
+            n,
+            p,
+            crate::sort::det::omega_det(&SortConfig::default(), n),
+        );
+        assert!(
+            max_recv as f64 > det_bound,
+            "expected PSRS [DD] imbalance {max_recv} above the DET bound {det_bound}"
+        );
+    }
+}

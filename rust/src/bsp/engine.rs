@@ -1,0 +1,399 @@
+//! The SPMD superstep engine: `p` OS threads as BSP processors.
+//!
+//! A program is a closure `Fn(&mut BspCtx) -> T` executed by every
+//! processor.  Within a superstep a processor computes on local data,
+//! charges its operation count (the paper's charging policy, §1.1), and
+//! stages messages with [`BspCtx::send`]; [`BspCtx::sync`] is the
+//! superstep boundary — a two-barrier protocol delivers all staged
+//! messages (sorted by sender, which the routing step of the sorts relies
+//! on for stability) and reduces the per-processor accounting into the
+//! shared [`Ledger`].
+//!
+//! The engine executes *really* (threads + message passing, so wall-clock
+//! and correctness are genuine) and *predictively* (each superstep is
+//! priced `max{L, x + g·h}` under the configured [`BspParams`], which is
+//! how the paper's Cray T3D numbers are reproduced on different hardware —
+//! DESIGN.md §2).
+
+use std::collections::HashMap;
+use std::sync::{Barrier, Mutex};
+use std::time::Instant;
+
+use super::ledger::{Ledger, PhaseRecord, SuperstepRecord};
+use super::msg::Payload;
+use super::params::BspParams;
+
+/// The default phase label before any `phase()` call.
+pub const PHASE_INIT: &str = "Ph1:Init";
+
+struct World {
+    p: usize,
+    /// Staging mailboxes, indexed by destination processor.
+    mailboxes: Vec<Mutex<Vec<(usize, Payload)>>>,
+    barrier: Barrier,
+    ledger: Mutex<LedgerBuilder>,
+}
+
+#[derive(Default)]
+struct LedgerBuilder {
+    supersteps: Vec<SuperstepRecord>,
+    phases: HashMap<String, PhaseRecord>,
+}
+
+/// Per-processor handle passed to the SPMD closure.
+pub struct BspCtx<'w> {
+    pid: usize,
+    world: &'w World,
+    inbox: Vec<(usize, Payload)>,
+    superstep: usize,
+    // charges since last sync
+    ops: f64,
+    sent_words: u64,
+    // phase accounting
+    phase: String,
+    phase_ops: HashMap<String, f64>,
+    phase_wall: HashMap<String, f64>,
+    phase_mark: Instant,
+    sync_mark: Instant,
+}
+
+impl<'w> BspCtx<'w> {
+    /// This processor's identifier in `[0, nprocs)`.
+    pub fn pid(&self) -> usize {
+        self.pid
+    }
+
+    /// Number of BSP processors.
+    pub fn nprocs(&self) -> usize {
+        self.world.p
+    }
+
+    /// Charge `ops` basic operations (comparisons) to this processor in
+    /// the current superstep and phase (§1.1 charging policy).
+    pub fn charge(&mut self, ops: f64) {
+        self.ops += ops;
+        *self.phase_ops.entry(self.phase.clone()).or_default() += ops;
+    }
+
+    /// Stage a message for `dst`; delivered at the next `sync`.
+    pub fn send(&mut self, dst: usize, payload: Payload) {
+        debug_assert!(dst < self.world.p, "send to invalid pid {dst}");
+        self.sent_words += payload.words();
+        self.world.mailboxes[dst].lock().unwrap().push((self.pid, payload));
+    }
+
+    /// Enter a named phase (Ph1–Ph7 in the tables).  Wall-clock and op
+    /// charges accrue to the active phase.
+    pub fn phase(&mut self, name: &str) {
+        let now = Instant::now();
+        let elapsed = now.duration_since(self.phase_mark).as_secs_f64() * 1e6;
+        *self.phase_wall.entry(self.phase.clone()).or_default() += elapsed;
+        self.phase_mark = now;
+        self.phase = name.to_string();
+    }
+
+    /// Superstep boundary: deliver staged messages, record accounting.
+    ///
+    /// Every processor must call `sync` the same number of times with the
+    /// same `label` (SPMD discipline, checked in debug builds via the
+    /// reporter count).
+    pub fn sync(&mut self, label: &str) {
+        let wall_us = self.sync_mark.elapsed().as_secs_f64() * 1e6;
+
+        // Barrier 1: all sends for this superstep are staged.
+        self.world.barrier.wait();
+
+        // Take and order this processor's inbox.
+        let mut msgs = std::mem::take(&mut *self.world.mailboxes[self.pid].lock().unwrap());
+        msgs.sort_by_key(|(src, _)| *src);
+        let recv_words: u64 = msgs.iter().map(|(_, p)| p.words()).sum();
+        self.inbox = msgs;
+
+        // Report into the shared ledger.
+        {
+            let mut builder = self.world.ledger.lock().unwrap();
+            if builder.supersteps.len() <= self.superstep {
+                builder.supersteps.resize_with(self.superstep + 1, Default::default);
+            }
+            let rec = &mut builder.supersteps[self.superstep];
+            if rec.reporters == 0 {
+                rec.label = label.to_string();
+                rec.phase = self.phase.clone();
+            }
+            rec.reporters += 1;
+            rec.max_ops = rec.max_ops.max(self.ops);
+            rec.h_words = rec.h_words.max(self.sent_words.max(recv_words));
+            rec.total_words += self.sent_words;
+            rec.wall_us = rec.wall_us.max(wall_us);
+            // Count this superstep against the active phase (h volume is
+            // attributed post-hoc in `BspMachine::run`).
+            let first_reporter = rec.reporters == 1;
+            let phase = builder.phases.entry(self.phase.clone()).or_default();
+            if first_reporter {
+                phase.supersteps += 1;
+            }
+        }
+
+        // Barrier 2: nobody stages next-superstep messages into a mailbox
+        // that hasn't been drained yet.
+        self.world.barrier.wait();
+
+        self.ops = 0.0;
+        self.sent_words = 0;
+        self.superstep += 1;
+        self.sync_mark = Instant::now();
+    }
+
+    /// The messages delivered at the last `sync`, ordered by sender id.
+    pub fn take_inbox(&mut self) -> Vec<(usize, Payload)> {
+        std::mem::take(&mut self.inbox)
+    }
+
+    /// Convenience: exchange one payload with every processor
+    /// (all-to-all); returns the received payloads by sender.
+    pub fn all_to_all(&mut self, parts: Vec<Payload>, label: &str) -> Vec<(usize, Payload)> {
+        assert_eq!(parts.len(), self.nprocs());
+        for (dst, payload) in parts.into_iter().enumerate() {
+            self.send(dst, payload);
+        }
+        self.sync(label);
+        self.take_inbox()
+    }
+
+    /// Flush end-of-run phase accounting (called by the engine).
+    fn finish(&mut self) {
+        let now = Instant::now();
+        let elapsed = now.duration_since(self.phase_mark).as_secs_f64() * 1e6;
+        *self.phase_wall.entry(self.phase.clone()).or_default() += elapsed;
+        let mut builder = self.world.ledger.lock().unwrap();
+        for (name, ops) in &self.phase_ops {
+            let rec = builder.phases.entry(name.clone()).or_default();
+            rec.max_ops = rec.max_ops.max(*ops);
+        }
+        for (name, wall) in &self.phase_wall {
+            let rec = builder.phases.entry(name.clone()).or_default();
+            rec.wall_us = rec.wall_us.max(*wall);
+        }
+    }
+}
+
+/// Result of a BSP run: the per-processor outputs and the cost ledger.
+#[derive(Debug)]
+pub struct BspRun<T> {
+    pub outputs: Vec<T>,
+    pub ledger: Ledger,
+}
+
+/// A BSP machine: parameters + the ability to run SPMD programs.
+pub struct BspMachine {
+    pub params: BspParams,
+}
+
+impl BspMachine {
+    pub fn new(params: BspParams) -> Self {
+        BspMachine { params }
+    }
+
+    /// Execute `program` on `p` processors (threads); returns outputs in
+    /// pid order plus the superstep/phase ledger.
+    pub fn run<T, F>(&self, program: F) -> BspRun<T>
+    where
+        T: Send,
+        F: Fn(&mut BspCtx) -> T + Sync,
+    {
+        let p = self.params.p;
+        let world = World {
+            p,
+            mailboxes: (0..p).map(|_| Mutex::new(Vec::new())).collect(),
+            barrier: Barrier::new(p),
+            ledger: Mutex::new(LedgerBuilder::default()),
+        };
+        let started = Instant::now();
+        let mut outputs: Vec<Option<T>> = (0..p).map(|_| None).collect();
+
+        std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(p);
+            for pid in 0..p {
+                let world_ref = &world;
+                let program_ref = &program;
+                handles.push(scope.spawn(move || {
+                    let now = Instant::now();
+                    let mut ctx = BspCtx {
+                        pid,
+                        world: world_ref,
+                        inbox: Vec::new(),
+                        superstep: 0,
+                        ops: 0.0,
+                        sent_words: 0,
+                        phase: PHASE_INIT.to_string(),
+                        phase_ops: HashMap::new(),
+                        phase_wall: HashMap::new(),
+                        phase_mark: now,
+                        sync_mark: now,
+                    };
+                    let out = program_ref(&mut ctx);
+                    ctx.finish();
+                    (pid, out)
+                }));
+            }
+            for h in handles {
+                let (pid, out) = h.join().expect("BSP processor thread panicked");
+                outputs[pid] = Some(out);
+            }
+        });
+
+        let builder = world.ledger.into_inner().unwrap();
+        let mut ledger = Ledger {
+            supersteps: builder.supersteps,
+            phases: builder.phases.into_iter().collect(),
+            wall_us: started.elapsed().as_secs_f64() * 1e6,
+        };
+        // Attribute superstep h-volumes to phases post-hoc (max over the
+        // per-superstep h of each phase is less meaningful than the sum).
+        for s in &ledger.supersteps {
+            if let Some(phase) = ledger.phases.get_mut(&s.phase) {
+                phase.h_words += s.h_words;
+            }
+        }
+        BspRun {
+            outputs: outputs.into_iter().map(|o| o.unwrap()).collect(),
+            ledger,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bsp::params::cray_t3d;
+
+    fn machine(p: usize) -> BspMachine {
+        BspMachine::new(cray_t3d(p))
+    }
+
+    #[test]
+    fn pid_and_nprocs() {
+        let run = machine(4).run(|ctx| (ctx.pid(), ctx.nprocs()));
+        assert_eq!(run.outputs, vec![(0, 4), (1, 4), (2, 4), (3, 4)]);
+    }
+
+    #[test]
+    fn ring_exchange_delivers_in_sender_order() {
+        let run = machine(8).run(|ctx| {
+            let p = ctx.nprocs();
+            let dst = (ctx.pid() + 1) % p;
+            ctx.send(dst, Payload::Keys(vec![ctx.pid() as i32]));
+            ctx.sync("ring");
+            let inbox = ctx.take_inbox();
+            assert_eq!(inbox.len(), 1);
+            let (src, payload) = &inbox[0];
+            (*src, payload.clone().into_keys()[0])
+        });
+        for (pid, (src, val)) in run.outputs.iter().enumerate() {
+            let expect = (pid + 8 - 1) % 8;
+            assert_eq!(*src, expect);
+            assert_eq!(*val, expect as i32);
+        }
+    }
+
+    #[test]
+    fn all_to_all_is_complete_and_ordered() {
+        let run = machine(5).run(|ctx| {
+            let parts = (0..5)
+                .map(|dst| Payload::Keys(vec![(ctx.pid() * 10 + dst) as i32]))
+                .collect();
+            let recv = ctx.all_to_all(parts, "a2a");
+            recv.into_iter()
+                .map(|(src, p)| (src, p.into_keys()[0]))
+                .collect::<Vec<_>>()
+        });
+        for (pid, inbox) in run.outputs.iter().enumerate() {
+            assert_eq!(inbox.len(), 5);
+            for (i, (src, val)) in inbox.iter().enumerate() {
+                assert_eq!(*src, i, "inbox must be sorted by sender");
+                assert_eq!(*val as usize, i * 10 + pid);
+            }
+        }
+    }
+
+    #[test]
+    fn ledger_records_h_relation() {
+        let run = machine(4).run(|ctx| {
+            // Everyone sends 100 keys to processor 0.
+            ctx.send(0, Payload::Keys(vec![1; 100]));
+            ctx.sync("fan-in");
+            ctx.take_inbox().len()
+        });
+        assert_eq!(run.ledger.supersteps.len(), 1);
+        let s = &run.ledger.supersteps[0];
+        // h = max over procs of max(sent, recv) = 400 received at proc 0.
+        assert_eq!(s.h_words, 400);
+        assert_eq!(s.total_words, 400);
+        assert_eq!(s.reporters, 4);
+    }
+
+    #[test]
+    fn charges_are_max_reduced() {
+        let run = machine(4).run(|ctx| {
+            ctx.charge((ctx.pid() as f64 + 1.0) * 1000.0);
+            ctx.sync("compute");
+        });
+        assert_eq!(run.ledger.supersteps[0].max_ops, 4000.0);
+        let _ = run;
+    }
+
+    #[test]
+    fn multiple_supersteps_accumulate() {
+        let run = machine(3).run(|ctx| {
+            for step in 0..5 {
+                ctx.charge(10.0);
+                ctx.send((ctx.pid() + 1) % 3, Payload::U64s(vec![step]));
+                ctx.sync("loop");
+                ctx.take_inbox();
+            }
+        });
+        assert_eq!(run.ledger.supersteps.len(), 5);
+        for s in &run.ledger.supersteps {
+            assert_eq!(s.max_ops, 10.0);
+            assert_eq!(s.h_words, 1);
+        }
+        let _ = run;
+    }
+
+    #[test]
+    fn phases_attribute_ops_and_supersteps() {
+        let run = machine(2).run(|ctx| {
+            ctx.phase("Ph2:SeqSort");
+            ctx.charge(500.0);
+            ctx.sync("sort");
+            ctx.phase("Ph5:Routing");
+            ctx.send(1 - ctx.pid(), Payload::Keys(vec![0; 64]));
+            ctx.sync("route");
+            ctx.take_inbox();
+        });
+        let phases = &run.ledger.phases;
+        assert!(phases.contains_key("Ph2:SeqSort"));
+        assert!(phases.contains_key("Ph5:Routing"));
+        assert_eq!(phases["Ph2:SeqSort"].max_ops, 500.0);
+        assert_eq!(phases["Ph5:Routing"].h_words, 64);
+    }
+
+    #[test]
+    fn predicted_cost_uses_machine_params() {
+        let machine = BspMachine::new(cray_t3d(16));
+        let run = machine.run(|ctx| {
+            ctx.charge(7_000.0); // 1000 µs of compute at 7 comps/µs
+            ctx.sync("c");
+        });
+        let us = run.ledger.predicted_us(&machine.params);
+        assert!((us - 1000.0).abs() < 1e-9, "us={us}");
+    }
+
+    #[test]
+    fn empty_superstep_floors_at_l() {
+        let machine = BspMachine::new(cray_t3d(128));
+        let run = machine.run(|ctx| ctx.sync("noop"));
+        assert_eq!(run.ledger.predicted_us(&machine.params), 762.0);
+        let _ = run;
+    }
+}

@@ -1,0 +1,20 @@
+//! The BSP machine substrate (DESIGN.md §4.1).
+//!
+//! * [`params`] — `(p, L, g)` parameters and Cray T3D presets,
+//! * [`msg`] — message payloads and the §5.1.1 tagged sample record,
+//! * [`ledger`] — superstep/phase cost accounting,
+//! * [`engine`] — the threaded SPMD superstep executor.
+//!
+//! The same program runs *really* (threads, genuine data movement) and is
+//! priced *predictively* (`max{L, x + g·h}` per superstep), which is how
+//! the paper's T3D tables are regenerated on non-T3D hardware.
+
+pub mod engine;
+pub mod ledger;
+pub mod msg;
+pub mod params;
+
+pub use engine::{BspCtx, BspMachine, BspRun};
+pub use ledger::{Ledger, PhaseRecord, SuperstepRecord};
+pub use msg::{Payload, SampleRec};
+pub use params::{cray_t3d, BspParams};

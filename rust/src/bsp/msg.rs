@@ -1,0 +1,104 @@
+//! Message payloads exchanged between BSP processors.
+//!
+//! Word accounting follows the paper: keys and counters are one word
+//! each (the T3D's communication data type is a 64-bit integer, §6);
+//! tagged sample records carry `(key, processor id, array index)` and are
+//! charged **three** words — §6.1: duplicate handling "may triple in the
+//! worst case the sample size as it attaches to each sample key an
+//! integer processor identifier and an integer array index".
+
+/// A sample/splitter record: a key augmented with its §5.1.1 tags.
+///
+/// Ordering is lexicographic `(key, proc, idx)` — exactly the tie-break
+/// rule of the duplicate handling method: equal keys compare by owning
+/// processor, then by position in that processor's local (sorted) array.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct SampleRec {
+    pub key: i32,
+    pub proc: u32,
+    pub idx: u32,
+}
+
+impl SampleRec {
+    pub fn new(key: i32, proc: usize, idx: usize) -> Self {
+        SampleRec {
+            key,
+            proc: proc as u32,
+            idx: idx as u32,
+        }
+    }
+
+    /// The number of communication words a record costs (§6.1).
+    pub const WORDS: u64 = 3;
+}
+
+/// Payload variants; one enum keeps the engine monomorphic and the hot
+/// key-routing path copy-free (the `Vec` moves through the mailbox).
+#[derive(Clone, Debug)]
+pub enum Payload {
+    /// Plain keys — the routing hot path.
+    Keys(Vec<i32>),
+    /// Tagged sample/splitter records (3 words each).
+    Recs(Vec<SampleRec>),
+    /// Counters/offsets for prefix operations.
+    U64s(Vec<u64>),
+}
+
+impl Payload {
+    /// Communication size in words, per the paper's charging policy.
+    pub fn words(&self) -> u64 {
+        match self {
+            Payload::Keys(v) => v.len() as u64,
+            Payload::Recs(v) => v.len() as u64 * SampleRec::WORDS,
+            Payload::U64s(v) => v.len() as u64,
+        }
+    }
+
+    pub fn into_keys(self) -> Vec<i32> {
+        match self {
+            Payload::Keys(v) => v,
+            other => panic!("expected Keys payload, got {other:?}"),
+        }
+    }
+
+    pub fn into_recs(self) -> Vec<SampleRec> {
+        match self {
+            Payload::Recs(v) => v,
+            other => panic!("expected Recs payload, got {other:?}"),
+        }
+    }
+
+    pub fn into_u64s(self) -> Vec<u64> {
+        match self {
+            Payload::U64s(v) => v,
+            other => panic!("expected U64s payload, got {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sample_rec_order_is_key_proc_idx() {
+        let a = SampleRec::new(5, 0, 9);
+        let b = SampleRec::new(5, 1, 0);
+        let c = SampleRec::new(5, 1, 1);
+        let d = SampleRec::new(6, 0, 0);
+        assert!(a < b && b < c && c < d);
+    }
+
+    #[test]
+    fn words_charging_policy() {
+        assert_eq!(Payload::Keys(vec![1, 2, 3]).words(), 3);
+        assert_eq!(Payload::Recs(vec![SampleRec::new(1, 0, 0)]).words(), 3);
+        assert_eq!(Payload::U64s(vec![1, 2]).words(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "expected Keys")]
+    fn wrong_variant_panics() {
+        Payload::U64s(vec![]).into_keys();
+    }
+}

@@ -1,0 +1,360 @@
+//! Sorting benchmark input generators (paper §6.3).
+//!
+//! Seven distributions, faithful to the paper's definitions, each
+//! generated *per processor* with the paper's seeding (`21 + 1001·i` for
+//! processor `i`, glibc `random()`):
+//!
+//! | tag    | name                      |
+//! |--------|---------------------------|
+//! | [U]    | Uniform                   |
+//! | [G]    | Gaussian (4-call average) |
+//! | [B]    | Bucket sorted             |
+//! | [g-G]  | g-Group (g = 2 default)   |
+//! | [S]    | Staggered                 |
+//! | [DD]   | Deterministic duplicates  |
+//! | [WR]   | Worst-case regular [39]   |
+//!
+//! `INT_MAX` below is the paper's "maximum integer value plus one ... in
+//! a 32-bit signed arithmetic data type", i.e. 2³¹.
+
+use crate::util::rng::BsdRandom;
+
+/// `INT_MAX` of the paper: 2³¹ (as i64 to avoid overflow in range math).
+pub const INT_MAX_P1: i64 = 1 << 31;
+
+/// The seven benchmark distributions of §6.3.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Benchmark {
+    /// [U] uniform over [0, 2³¹−1].
+    Uniform,
+    /// [G] Gaussian approximation: mean of four `random()` calls.
+    Gaussian,
+    /// [B] bucket sorted: p per-proc buckets of n/p² uniform keys each.
+    Bucket,
+    /// [g-G] g-group with this g (paper tables use 2-G).
+    GGroup(usize),
+    /// [S] staggered.
+    Staggered,
+    /// [DD] deterministic duplicates.
+    DetDup,
+    /// [WR] worst-case-regular (the [39] adversary for regular sampling).
+    WorstRegular,
+}
+
+/// The table order used throughout the paper: U, G, 2-G, B, S, DD, WR.
+pub const ALL_BENCHMARKS: [Benchmark; 7] = [
+    Benchmark::Uniform,
+    Benchmark::Gaussian,
+    Benchmark::GGroup(2),
+    Benchmark::Bucket,
+    Benchmark::Staggered,
+    Benchmark::DetDup,
+    Benchmark::WorstRegular,
+];
+
+impl Benchmark {
+    pub fn tag(&self) -> String {
+        match self {
+            Benchmark::Uniform => "[U]".into(),
+            Benchmark::Gaussian => "[G]".into(),
+            Benchmark::Bucket => "[B]".into(),
+            Benchmark::GGroup(g) => format!("[{g}-G]"),
+            Benchmark::Staggered => "[S]".into(),
+            Benchmark::DetDup => "[DD]".into(),
+            Benchmark::WorstRegular => "[WR]".into(),
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Benchmark> {
+        match s.trim_matches(|c| c == '[' || c == ']').to_ascii_uppercase().as_str() {
+            "U" => Some(Benchmark::Uniform),
+            "G" => Some(Benchmark::Gaussian),
+            "B" => Some(Benchmark::Bucket),
+            "2-G" => Some(Benchmark::GGroup(2)),
+            "4-G" => Some(Benchmark::GGroup(4)),
+            "8-G" => Some(Benchmark::GGroup(8)),
+            "S" => Some(Benchmark::Staggered),
+            "DD" => Some(Benchmark::DetDup),
+            "WR" => Some(Benchmark::WorstRegular),
+            _ => None,
+        }
+    }
+}
+
+/// The paper's per-processor seed: `21 + 1001·i` (§6.3).
+pub fn paper_seed(pid: usize) -> u32 {
+    21 + 1001 * pid as u32
+}
+
+/// Generate processor `pid`'s share (`n_local = n_total/p` keys) of the
+/// benchmark.  `n_total` must be divisible by `p` (the paper's sizes are
+/// powers of two and p ∈ {8..128}).
+pub fn generate_for_proc(bench: Benchmark, pid: usize, p: usize, n_local: usize) -> Vec<i32> {
+    let mut rng = BsdRandom::new(paper_seed(pid));
+    match bench {
+        Benchmark::Uniform => (0..n_local).map(|_| rng.next_i32()).collect(),
+        Benchmark::Gaussian => (0..n_local)
+            .map(|_| {
+                let s = rng.next_i32() as i64
+                    + rng.next_i32() as i64
+                    + rng.next_i32() as i64
+                    + rng.next_i32() as i64;
+                (s / 4) as i32
+            })
+            .collect(),
+        Benchmark::Bucket => {
+            // p buckets of n_local/p keys; bucket i uniform in
+            // [i·INT_MAX/p, (i+1)·INT_MAX/p).
+            let per_bucket = n_local / p;
+            let width = INT_MAX_P1 / p as i64;
+            let mut out = Vec::with_capacity(n_local);
+            for i in 0..p {
+                let base = i as i64 * width;
+                let cnt = if i == p - 1 {
+                    n_local - per_bucket * (p - 1)
+                } else {
+                    per_bucket
+                };
+                for _ in 0..cnt {
+                    out.push((base + uniform_below(&mut rng, width)) as i32);
+                }
+            }
+            out
+        }
+        Benchmark::GGroup(g) => {
+            // Processors form p/g groups of g; within group j, bucket i of
+            // each processor is uniform in the window
+            // ((jg + p/2 + i) mod p) · INT_MAX/p.
+            let g = g.max(1).min(p);
+            let j = pid / g;
+            let per_bucket = n_local / g;
+            let width = INT_MAX_P1 / p as i64;
+            let mut out = Vec::with_capacity(n_local);
+            for i in 0..g {
+                let window = (j * g + p / 2 + i) % p;
+                let base = window as i64 * width;
+                let cnt = if i == g - 1 {
+                    n_local - per_bucket * (g - 1)
+                } else {
+                    per_bucket
+                };
+                for _ in 0..cnt {
+                    out.push((base + uniform_below(&mut rng, width)) as i32);
+                }
+            }
+            out
+        }
+        Benchmark::Staggered => {
+            let width = INT_MAX_P1 / p as i64;
+            let window = if pid < p / 2 { 2 * pid + 1 } else { pid - p / 2 };
+            let base = window as i64 * width;
+            (0..n_local)
+                .map(|_| (base + uniform_below(&mut rng, width)) as i32)
+                .collect()
+        }
+        Benchmark::DetDup => det_dup(pid, p, n_local),
+        Benchmark::WorstRegular => worst_regular(pid, p, n_local),
+    }
+}
+
+/// Generate the whole input (all processors), mostly for tests/examples.
+pub fn generate_all(bench: Benchmark, p: usize, n_total: usize) -> Vec<Vec<i32>> {
+    let n_local = n_total / p;
+    (0..p).map(|pid| generate_for_proc(bench, pid, p, n_local)).collect()
+}
+
+fn uniform_below(rng: &mut BsdRandom, bound: i64) -> i64 {
+    debug_assert!(bound > 0 && bound <= i32::MAX as i64 + 1);
+    if bound > i32::MAX as i64 {
+        rng.next_i32() as i64
+    } else {
+        rng.below(bound as i32) as i64
+    }
+}
+
+/// [DD] Deterministic duplicates (§6.3 item 6): the keys of the first
+/// p/2 processors are all `lg n`, of the next p/4 `lg(n/p)`, and so on;
+/// the last processor repeats the halving pattern *within* its own keys.
+fn det_dup(pid: usize, p: usize, n_local: usize) -> Vec<i32> {
+    let n_total = (n_local * p) as i64;
+    let lg = |x: i64| -> i32 {
+        if x <= 1 {
+            0
+        } else {
+            (63 - (x as u64).leading_zeros() as i64) as i32
+        }
+    };
+    if pid < p - 1 || p == 1 {
+        // Find the group: processors [p - p/2^(i-1), ...) style halving —
+        // equivalently the largest i >= 1 with pid < p - p/2^i gives the
+        // later groups; simplest is a forward scan of the halving blocks.
+        let mut start = 0usize;
+        let mut block = p / 2;
+        let mut i = 1usize;
+        let value = loop {
+            if block == 0 || pid < start + block.max(1) {
+                // value for group i: lg(n / p^{i-1}); clamp the power.
+                let mut denom: i64 = 1;
+                for _ in 0..i.saturating_sub(1) {
+                    denom = denom.saturating_mul(p as i64);
+                }
+                break lg(n_total / denom.max(1));
+            }
+            start += block;
+            block /= 2;
+            i += 1;
+        };
+        if p == 1 {
+            // single processor: fall through to the intra-proc pattern
+            return intra_dd(n_local, n_total, p);
+        }
+        vec![value; n_local]
+    } else {
+        intra_dd(n_local, n_total, p)
+    }
+}
+
+/// The last processor's [DD] share: n/(p·2^i) keys of value
+/// `lg(n/(p·2^{i-1}))`, halving until exhausted.
+fn intra_dd(n_local: usize, n_total: i64, p: usize) -> Vec<i32> {
+    let lg = |x: i64| -> i32 {
+        if x <= 1 {
+            0
+        } else {
+            (63 - (x as u64).leading_zeros() as i64) as i32
+        }
+    };
+    let mut out = Vec::with_capacity(n_local);
+    let mut chunk = n_local / 2;
+    let mut denom: i64 = p as i64;
+    while out.len() < n_local {
+        let value = lg(n_total / denom.max(1));
+        let take = chunk.max(1).min(n_local - out.len());
+        out.extend(std::iter::repeat(value).take(take));
+        chunk /= 2;
+        denom = denom.saturating_mul(2);
+    }
+    out
+}
+
+/// [WR] Worst-case for regular sampling, following [39]'s construction:
+/// the globally sorted sequence is dealt to processors cyclically, so
+/// every processor's regular sample is (nearly) the same and the induced
+/// buckets are maximally imbalanced for plain regular sampling (s = p).
+fn worst_regular(pid: usize, p: usize, n_local: usize) -> Vec<i32> {
+    let scale = INT_MAX_P1 / (n_local as i64 * p as i64).max(1);
+    (0..n_local)
+        .map(|j| ((j as i64 * p as i64 + pid as i64) * scale.max(1)) as i32)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const P: usize = 8;
+    const N_LOCAL: usize = 1 << 10;
+
+    #[test]
+    fn all_benchmarks_produce_requested_sizes() {
+        for b in ALL_BENCHMARKS {
+            for pid in 0..P {
+                let keys = generate_for_proc(b, pid, P, N_LOCAL);
+                assert_eq!(keys.len(), N_LOCAL, "{} pid={pid}", b.tag());
+            }
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        for b in ALL_BENCHMARKS {
+            let a = generate_for_proc(b, 3, P, N_LOCAL);
+            let c = generate_for_proc(b, 3, P, N_LOCAL);
+            assert_eq!(a, c, "{}", b.tag());
+        }
+    }
+
+    #[test]
+    fn uniform_keys_are_nonnegative_31bit() {
+        let keys = generate_for_proc(Benchmark::Uniform, 0, P, N_LOCAL);
+        assert!(keys.iter().all(|&k| k >= 0));
+        // And they vary.
+        assert!(keys.iter().collect::<std::collections::HashSet<_>>().len() > N_LOCAL / 2);
+    }
+
+    #[test]
+    fn gaussian_concentrates_toward_center() {
+        let keys = generate_for_proc(Benchmark::Gaussian, 0, P, 1 << 14);
+        let center = (INT_MAX_P1 / 2) as i32;
+        let near = keys
+            .iter()
+            .filter(|&&k| (k as i64 - center as i64).abs() < INT_MAX_P1 / 4)
+            .count();
+        // Mean-of-4 keeps ~95% within ±INT_MAX/4 of the center.
+        assert!(near as f64 > 0.9 * keys.len() as f64, "near={near}");
+    }
+
+    #[test]
+    fn bucket_keys_live_in_their_windows() {
+        let keys = generate_for_proc(Benchmark::Bucket, 2, P, N_LOCAL);
+        let width = INT_MAX_P1 / P as i64;
+        let per = N_LOCAL / P;
+        for (i, chunk) in keys.chunks(per).take(P).enumerate() {
+            for &k in chunk {
+                let lo = i as i64 * width;
+                assert!(
+                    (lo..lo + width).contains(&(k as i64)),
+                    "bucket {i} key {k} outside [{lo}, {})",
+                    lo + width
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn staggered_windows_cover_distinct_ranges() {
+        let width = INT_MAX_P1 / P as i64;
+        for pid in 0..P {
+            let keys = generate_for_proc(Benchmark::Staggered, pid, P, 128);
+            let window = if pid < P / 2 { 2 * pid + 1 } else { pid - P / 2 };
+            let lo = window as i64 * width;
+            assert!(keys.iter().all(|&k| (lo..lo + width).contains(&(k as i64))), "pid={pid}");
+        }
+    }
+
+    #[test]
+    fn det_dup_is_massively_duplicated() {
+        let mut all: Vec<i32> = Vec::new();
+        for pid in 0..P {
+            all.extend(generate_for_proc(Benchmark::DetDup, pid, P, N_LOCAL));
+        }
+        let distinct: std::collections::HashSet<_> = all.iter().collect();
+        assert!(distinct.len() <= 64, "distinct={}", distinct.len());
+    }
+
+    #[test]
+    fn worst_regular_is_cyclic_sorted_deal() {
+        let a = generate_for_proc(Benchmark::WorstRegular, 0, P, 64);
+        let b = generate_for_proc(Benchmark::WorstRegular, 1, P, 64);
+        assert!(a.windows(2).all(|w| w[0] < w[1]), "per-proc runs sorted");
+        assert!(a[0] < b[0] && b[0] < a[1], "interleaving holds");
+    }
+
+    #[test]
+    fn ggroup_windows_wrap_mod_p() {
+        let keys = generate_for_proc(Benchmark::GGroup(2), 0, P, 128);
+        let width = INT_MAX_P1 / P as i64;
+        // group j=0, buckets i=0,1 -> windows (p/2), (p/2+1) = 4,5.
+        let lo = 4 * width;
+        assert!(keys[..64].iter().all(|&k| (lo..lo + width).contains(&(k as i64))));
+        let lo2 = 5 * width;
+        assert!(keys[64..].iter().all(|&k| (lo2..lo2 + width).contains(&(k as i64))));
+    }
+
+    #[test]
+    fn parse_tags_roundtrip() {
+        for b in ALL_BENCHMARKS {
+            assert_eq!(Benchmark::parse(&b.tag()), Some(b), "{}", b.tag());
+        }
+    }
+}

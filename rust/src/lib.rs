@@ -1,0 +1,49 @@
+//! # bsp-sort
+//!
+//! A production-grade reproduction of *"BSP Sorting: An Experimental
+//! Study"* (Gerbessiotis & Siniolakis): one-optimal deterministic
+//! (`SORT_DET_BSP`) and randomized (`SORT_IRAN_BSP`) BSP sorting with
+//! regular/randomized oversampling and transparent duplicate-key
+//! handling, executed on a threaded BSP machine substrate and priced
+//! under the paper's Cray T3D `(p, L, g)` parameters.
+//!
+//! Three layers (DESIGN.md §3):
+//!
+//! * **L3 (this crate)** — the BSP substrate, primitives, the sorting
+//!   algorithms, baselines, generators, theory model, and the table
+//!   harness regenerating the paper's Tables 1–11;
+//! * **L2 (python/compile/model.py)** — the JAX local-sort graph, AOT
+//!   lowered to `artifacts/*.hlo.txt`;
+//! * **L1 (python/compile/kernels/bitonic.py)** — the Pallas bitonic
+//!   network kernel, loaded from Rust via PJRT ([`runtime`]).
+//!
+//! Quickstart:
+//!
+//! ```no_run
+//! use bsp_sort::bsp::{cray_t3d, BspMachine};
+//! use bsp_sort::gen::{Benchmark, generate_for_proc};
+//! use bsp_sort::sort::{det::sort_det_bsp, SortConfig};
+//!
+//! let p = 16;
+//! let n_total = 16 << 16;
+//! let params = cray_t3d(p);
+//! let machine = BspMachine::new(params);
+//! let cfg = SortConfig::default();
+//! let run = machine.run(|ctx| {
+//!     let keys = generate_for_proc(Benchmark::Uniform, ctx.pid(), p, n_total / p);
+//!     sort_det_bsp(ctx, &params, keys, n_total, &cfg)
+//! });
+//! println!("predicted T3D time: {:.3}s", run.ledger.predicted_secs(&params));
+//! ```
+
+pub mod baselines;
+pub mod bsp;
+pub mod gen;
+pub mod metrics;
+pub mod primitives;
+pub mod runtime;
+pub mod seq;
+pub mod sort;
+pub mod tables;
+pub mod theory;
+pub mod util;

@@ -1,0 +1,210 @@
+//! `bsp-sort` — CLI for the BSP sorting study.
+//!
+//! Subcommands:
+//!   table <N>        regenerate paper Table N (1..11)
+//!   all-tables       regenerate every table
+//!   sort             run one sorting configuration and report
+//!   predict          Prop 5.1/5.3 efficiency vs harness prediction
+//!   validate-g       back out g from the routing phase (§6.4)
+//!   ablate-dup       duplicate-handling overhead ablation (§6.1/§6.4)
+//!   selftest         tiny end-to-end sanity run (incl. PJRT if built)
+//!
+//! Common flags: --max-n <keys>, --max-p <procs>, --full, --reps <k>,
+//! --seed <s>; `sort` adds --algo, --bench, --n, --p, --seq, --no-dup.
+
+use bsp_sort::bsp::engine::BspMachine;
+use bsp_sort::bsp::params::cray_t3d;
+use bsp_sort::gen::Benchmark;
+use bsp_sort::metrics::RunReport;
+use bsp_sort::seq::SeqSortKind;
+use bsp_sort::sort::{DuplicatePolicy, SortConfig};
+use bsp_sort::tables::{self, runner, TableOpts};
+use bsp_sort::util::cli::Args;
+use bsp_sort::util::fmt_secs;
+
+const VALUE_OPTS: &[&str] = &[
+    "max-n", "max-p", "reps", "seed", "algo", "bench", "n", "p", "seq", "table",
+];
+
+fn main() {
+    let args = match Args::from_env(VALUE_OPTS) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let code = match run(cmd, &args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn opts_from(args: &Args) -> Result<TableOpts, Box<dyn std::error::Error>> {
+    let mut opts = if args.flag("full") {
+        TableOpts::full()
+    } else {
+        TableOpts::default()
+    };
+    opts.max_n = args.get_parsed("max-n", opts.max_n)?;
+    opts.max_p = args.get_parsed("max-p", opts.max_p)?;
+    opts.reps = args.get_parsed("reps", opts.reps)?;
+    opts.seed = args.get_parsed("seed", opts.seed)?;
+    Ok(opts)
+}
+
+fn run(cmd: &str, args: &Args) -> Result<(), Box<dyn std::error::Error>> {
+    match cmd {
+        "table" => {
+            let opts = opts_from(args)?;
+            let num: usize = args
+                .positional
+                .get(1)
+                .ok_or("usage: bsp-sort table <1..11>")?
+                .parse()?;
+            let out = tables::run_table(num, &opts).ok_or("table number must be 1..=11")?;
+            println!("{}", out.render());
+        }
+        "all-tables" => {
+            let opts = opts_from(args)?;
+            for num in 1..=11 {
+                let out = tables::run_table(num, &opts).unwrap();
+                println!("{}", out.render());
+            }
+            println!("{}", tables::validate::validate_g(&opts).render());
+            println!("{}", tables::validate::predict(&opts).render());
+            println!("{}", tables::validate::ablate_duplicates(&opts).render());
+        }
+        "predict" => {
+            let opts = opts_from(args)?;
+            println!("{}", tables::validate::predict(&opts).render());
+        }
+        "validate-g" => {
+            let opts = opts_from(args)?;
+            println!("{}", tables::validate::validate_g(&opts).render());
+        }
+        "ablate-dup" => {
+            let opts = opts_from(args)?;
+            println!("{}", tables::validate::ablate_duplicates(&opts).render());
+        }
+        "sort" => {
+            let opts = opts_from(args)?;
+            let algo = match args.get("algo").unwrap_or("det") {
+                "det" => runner::AlgoVariant::Det,
+                "iran" => runner::AlgoVariant::Iran,
+                "ran" => runner::AlgoVariant::Ran,
+                "bsi" => runner::AlgoVariant::Bsi,
+                "helman-det" => runner::AlgoVariant::HelmanDet,
+                "helman-ran" => runner::AlgoVariant::HelmanRan,
+                "psrs" => runner::AlgoVariant::Psrs,
+                other => return Err(format!("unknown --algo {other}").into()),
+            };
+            let bench = Benchmark::parse(args.get("bench").unwrap_or("U"))
+                .ok_or("unknown --bench (use U/G/B/2-G/S/DD/WR)")?;
+            let n: usize = args.get_parsed("n", 1 << 20)?;
+            let p: usize = args.get_parsed("p", 8)?;
+            let seq = match args.get("seq").unwrap_or("quick") {
+                "quick" | "q" => SeqSortKind::Quick,
+                "radix" | "r" => SeqSortKind::Radix,
+                other => return Err(format!("unknown --seq {other}").into()),
+            };
+            let mut cfg = SortConfig::default().with_seq(seq);
+            if args.flag("no-dup") {
+                cfg = cfg.with_dup(DuplicatePolicy::Off);
+            }
+            let spec = runner::RunSpec {
+                algo,
+                bench,
+                p,
+                n_total: n,
+                cfg,
+                seed: opts.seed,
+            };
+            let report = runner::execute(&spec);
+            print_report(&report);
+        }
+        "selftest" => {
+            selftest()?;
+        }
+        _ => {
+            println!("{}", HELP.trim());
+        }
+    }
+    Ok(())
+}
+
+fn print_report(r: &RunReport) {
+    let params = cray_t3d(r.p);
+    println!("algorithm       : {} on {}", r.algorithm, r.benchmark);
+    println!("n, p            : {} keys, {} procs", r.n_total, r.p);
+    println!("predicted T3D   : {} s", fmt_secs(r.predicted_secs));
+    println!("measured (host) : {} s", fmt_secs(r.wall_secs));
+    println!("efficiency      : {:.0}%", 100.0 * r.efficiency(&params));
+    println!(
+        "imbalance       : max {} / mean {:.0} keys (expansion {:+.1}%)",
+        r.imbalance.max_received,
+        r.imbalance.mean_received,
+        100.0 * r.imbalance.expansion
+    );
+    println!("phase breakdown (predicted seconds):");
+    for (ph, secs) in &r.phase_predicted {
+        println!("  {ph:<14} {}", fmt_secs(*secs));
+    }
+}
+
+fn selftest() -> Result<(), Box<dyn std::error::Error>> {
+    // 1. Engine + DET sort.
+    let p = 4;
+    let n = 1 << 14;
+    let params = cray_t3d(p);
+    let machine = BspMachine::new(params);
+    let cfg = SortConfig::default();
+    let run = machine.run(|ctx| {
+        let local =
+            bsp_sort::gen::generate_for_proc(Benchmark::Uniform, ctx.pid(), p, n / p);
+        bsp_sort::sort::det::sort_det_bsp(ctx, &params, local, n, &cfg)
+    });
+    let total: usize = run.outputs.iter().map(|r| r.keys.len()).sum();
+    assert_eq!(total, n);
+    println!(
+        "engine + SORT_DET_BSP         ok ({} keys, {} supersteps)",
+        n,
+        run.ledger.supersteps.len()
+    );
+
+    // 2. PJRT runtime (skipped gracefully when artifacts are absent).
+    match bsp_sort::runtime::Runtime::from_default_artifacts() {
+        Ok(rt) => {
+            let mut keys: Vec<i32> = (0..4096).rev().collect();
+            let sorted = rt.sort(&keys)?;
+            keys.sort_unstable();
+            assert_eq!(sorted, keys);
+            println!("PJRT local_sort artifact      ok (4096 keys via XLA)");
+        }
+        Err(e) => println!("PJRT runtime                  skipped ({e})"),
+    }
+    println!("selftest passed");
+    Ok(())
+}
+
+const HELP: &str = r#"
+bsp-sort — BSP sorting study (Gerbessiotis & Siniolakis) reproduction
+
+USAGE:
+  bsp-sort table <1..11> [--full] [--max-n K] [--max-p P] [--reps R]
+  bsp-sort all-tables [--full]
+  bsp-sort sort --algo det|iran|ran|bsi|helman-det|helman-ran|psrs
+                --bench U|G|B|2-G|S|DD|WR --n 8388608 --p 64
+                [--seq quick|radix] [--no-dup]
+  bsp-sort predict | validate-g | ablate-dup
+  bsp-sort selftest
+
+Tables report *predicted Cray T3D seconds* from the BSP cost model
+(p, L, g as measured in the paper); host wall-clock is reported by
+`sort`.  Default grid caps n at 8M; --full runs the paper's full 64M.
+"#;

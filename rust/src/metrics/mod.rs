@@ -1,0 +1,105 @@
+//! Run-level metrics: imbalance statistics, phase breakdowns, and the
+//! efficiency computations the §6.4 tables report.
+
+use crate::bsp::ledger::Ledger;
+use crate::bsp::params::BspParams;
+use crate::sort::common::ProcResult;
+use crate::theory;
+
+/// Key-imbalance statistics over the routing phase (Lemma 5.1 subject).
+#[derive(Clone, Copy, Debug)]
+pub struct Imbalance {
+    pub max_received: usize,
+    pub min_received: usize,
+    pub mean_received: f64,
+    /// max/mean − 1 — the paper's "maximum set imbalance" (kept < 15 %
+    /// in all their runs).
+    pub expansion: f64,
+}
+
+impl Imbalance {
+    pub fn from_results(results: &[ProcResult]) -> Imbalance {
+        let counts: Vec<usize> = results.iter().map(|r| r.received).collect();
+        let max = counts.iter().copied().max().unwrap_or(0);
+        let min = counts.iter().copied().min().unwrap_or(0);
+        let mean = counts.iter().sum::<usize>() as f64 / counts.len().max(1) as f64;
+        Imbalance {
+            max_received: max,
+            min_received: min,
+            mean_received: mean,
+            expansion: if mean > 0.0 { max as f64 / mean - 1.0 } else { 0.0 },
+        }
+    }
+}
+
+/// A complete measured+predicted account of one sorting run.
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    pub algorithm: String,
+    pub benchmark: String,
+    pub n_total: usize,
+    pub p: usize,
+    /// Wall-clock seconds on the host (genuine execution).
+    pub wall_secs: f64,
+    /// Predicted Cray T3D seconds from the BSP cost ledger.
+    pub predicted_secs: f64,
+    /// Predicted seconds split by phase name.
+    pub phase_predicted: Vec<(String, f64)>,
+    /// Measured wall seconds split by phase name.
+    pub phase_wall: Vec<(String, f64)>,
+    pub imbalance: Imbalance,
+}
+
+impl RunReport {
+    pub fn new(
+        algorithm: impl Into<String>,
+        benchmark: impl Into<String>,
+        n_total: usize,
+        params: &BspParams,
+        ledger: &Ledger,
+        results: &[ProcResult],
+    ) -> RunReport {
+        RunReport {
+            algorithm: algorithm.into(),
+            benchmark: benchmark.into(),
+            n_total,
+            p: params.p,
+            wall_secs: ledger.wall_us / 1e6,
+            predicted_secs: ledger.predicted_secs(params),
+            phase_predicted: ledger.phase_predicted_secs(params).into_iter().collect(),
+            phase_wall: ledger.phase_wall_secs().into_iter().collect(),
+            imbalance: Imbalance::from_results(results),
+        }
+    }
+
+    /// Parallel efficiency vs the `n lg n` sequential baseline at the
+    /// machine's comparison rate: `T_seq / (p · T_par)` (§1.1).
+    pub fn efficiency(&self, params: &BspParams) -> f64 {
+        let t_seq_us = params.comp_us(theory::seq_charge(self.n_total));
+        t_seq_us / (self.p as f64 * self.predicted_secs * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn result(received: usize) -> ProcResult {
+        ProcResult { keys: Vec::new(), received, runs: 1 }
+    }
+
+    #[test]
+    fn imbalance_expansion() {
+        let imb = Imbalance::from_results(&[result(100), result(100), result(120), result(80)]);
+        assert_eq!(imb.max_received, 120);
+        assert_eq!(imb.min_received, 80);
+        assert!((imb.expansion - 0.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn imbalance_empty_is_zero() {
+        let imb = Imbalance::from_results(&[]);
+        assert_eq!(imb.max_received, 0);
+        assert_eq!(imb.expansion, 0.0);
+    }
+}

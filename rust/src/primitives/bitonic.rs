@@ -1,0 +1,233 @@
+//! Distributed Batcher bitonic sort (merge-split formulation).
+//!
+//! Used for (a) the *parallel sample sort* of step 5 in both algorithms
+//! (sorting `p` sorted sample runs of length `s`, cost
+//! `2s(lg²p + lg p)/2` computation and `(lg²p + lg p)(L + g·s)/2`
+//! communication — §5.1 Proposition 5.1), and (b) the full [BSI] sort
+//! baseline of §6.2.
+//!
+//! Each processor holds a locally *sorted ascending* run of equal length;
+//! a compare-exchange of the network becomes a **merge-split**: partners
+//! exchange runs, merge, and the "low" side keeps the lower half.  By the
+//! 0-1 principle this block variant inherits the network's correctness.
+//! Requires `p` a power of two (all the paper's configurations are).
+
+use crate::bsp::engine::BspCtx;
+use crate::bsp::msg::{Payload, SampleRec};
+use crate::seq::ops;
+
+/// Items that can ride a [`Payload`] through the merge-split exchange.
+pub trait BitonicItem: Ord + Copy {
+    fn pack(items: Vec<Self>) -> Payload;
+    fn unpack(payload: Payload) -> Vec<Self>;
+    /// Words per item for charge bookkeeping (diagnostics only; the
+    /// engine charges from the payload itself).
+    fn words() -> u64;
+}
+
+impl BitonicItem for i32 {
+    fn pack(items: Vec<Self>) -> Payload {
+        Payload::Keys(items)
+    }
+    fn unpack(payload: Payload) -> Vec<Self> {
+        payload.into_keys()
+    }
+    fn words() -> u64 {
+        1
+    }
+}
+
+impl BitonicItem for SampleRec {
+    fn pack(items: Vec<Self>) -> Payload {
+        Payload::Recs(items)
+    }
+    fn unpack(payload: Payload) -> Vec<Self> {
+        payload.into_recs()
+    }
+    fn words() -> u64 {
+        SampleRec::WORDS
+    }
+}
+
+/// Bitonic-sort equal-length sorted runs across all processors.
+///
+/// On return, processor `k` holds the `k`-th chunk of the global sorted
+/// order (all chunks the same length as the input run).  `label` prefixes
+/// the superstep labels.
+pub fn bitonic_sort<T: BitonicItem>(ctx: &mut BspCtx, mut run: Vec<T>, label: &str) -> Vec<T> {
+    let p = ctx.nprocs();
+    assert!(p.is_power_of_two(), "bitonic sort requires p a power of two");
+    debug_assert!(run.windows(2).all(|w| w[0] <= w[1]), "input run must be sorted");
+    if p == 1 {
+        return run;
+    }
+    let pid = ctx.pid();
+    let lgp = p.trailing_zeros() as usize;
+
+    for stage in 0..lgp {
+        // Direction bit: ascending iff bit (stage+1) of pid is 0; the
+        // final stage's bit is >= lg p, i.e. always ascending.
+        let asc = (pid >> (stage + 1)) & 1 == 0;
+        for j in (0..=stage).rev() {
+            let partner = pid ^ (1 << j);
+            run = merge_split(ctx, run, partner, asc, &format!("{label}:s{stage}j{j}"));
+        }
+    }
+    run
+}
+
+/// One merge-split with `partner`: exchange runs, merge, keep a half.
+fn merge_split<T: BitonicItem>(
+    ctx: &mut BspCtx,
+    mine: Vec<T>,
+    partner: usize,
+    asc: bool,
+    label: &str,
+) -> Vec<T> {
+    let m = mine.len();
+    let keep_low = (ctx.pid() < partner) == asc;
+    ctx.send(partner, T::pack(mine.clone()));
+    ctx.sync(label);
+    let mut inbox = ctx.take_inbox();
+    assert_eq!(inbox.len(), 1, "merge-split expects exactly the partner's run");
+    let theirs = T::unpack(inbox.pop().unwrap().1);
+    assert_eq!(theirs.len(), m, "merge-split requires equal-length runs");
+
+    // Linear merge, keeping only the required half (2m comparisons max;
+    // charged as a 2-way merge of 2m items).
+    ctx.charge(ops::merge_charge(2 * m, 2));
+    let mut out = Vec::with_capacity(m);
+    if keep_low {
+        let (mut i, mut j) = (0usize, 0usize);
+        while out.len() < m {
+            // Ties favour `mine` when this pid is the lower one — with the
+            // tagged order of SampleRec ties cannot occur at all.
+            if j >= m || (i < m && mine[i] <= theirs[j]) {
+                out.push(mine[i]);
+                i += 1;
+            } else {
+                out.push(theirs[j]);
+                j += 1;
+            }
+        }
+    } else {
+        let (mut i, mut j) = (m as isize - 1, m as isize - 1);
+        while out.len() < m {
+            if j < 0 || (i >= 0 && mine[i as usize] > theirs[j as usize]) {
+                out.push(mine[i as usize]);
+                i -= 1;
+            } else {
+                out.push(theirs[j as usize]);
+                j -= 1;
+            }
+        }
+        out.reverse();
+    }
+    out
+}
+
+/// Number of supersteps the distributed bitonic sort performs.
+pub fn superstep_count(p: usize) -> usize {
+    let lgp = p.trailing_zeros() as usize;
+    lgp * (lgp + 1) / 2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bsp::engine::BspMachine;
+    use crate::bsp::params::cray_t3d;
+    use crate::util::check::check;
+    use crate::util::rng::SplitMix64;
+
+    fn run_bitonic_keys(p: usize, m: usize, seed: u64) -> (Vec<Vec<i32>>, Vec<i32>) {
+        let machine = BspMachine::new(cray_t3d(p));
+        let run = machine.run(|ctx| {
+            let mut rng = SplitMix64::new(seed ^ (ctx.pid() as u64) << 32);
+            let mut local: Vec<i32> = (0..m).map(|_| rng.next_i32()).collect();
+            local.sort_unstable();
+            let input = local.clone();
+            let out = bitonic_sort(ctx, local, "bsi");
+            (input, out)
+        });
+        let inputs: Vec<Vec<i32>> = run.outputs.iter().map(|(i, _)| i.clone()).collect();
+        let output: Vec<i32> = run.outputs.into_iter().flat_map(|(_, o)| o).collect();
+        (inputs, output)
+    }
+
+    #[test]
+    fn sorts_globally_across_procs() {
+        for p in [2usize, 4, 8, 16] {
+            let (inputs, output) = run_bitonic_keys(p, 33, 0xFEED + p as u64);
+            let mut expect: Vec<i32> = inputs.into_iter().flatten().collect();
+            expect.sort_unstable();
+            assert_eq!(output, expect, "p={p}");
+        }
+    }
+
+    #[test]
+    fn sorts_random_property() {
+        check("bitonic-global-sort", |rng| {
+            let p = 1 << (1 + rng.below(3)); // 2,4,8
+            let m = 1 + rng.below(40) as usize;
+            let (inputs, output) = run_bitonic_keys(p, m, rng.next_u64());
+            let mut expect: Vec<i32> = inputs.into_iter().flatten().collect();
+            expect.sort_unstable();
+            assert_eq!(output, expect);
+        });
+    }
+
+    #[test]
+    fn sorts_sample_recs_with_tag_order() {
+        let machine = BspMachine::new(cray_t3d(4));
+        let run = machine.run(|ctx| {
+            // All-equal keys: the tagged order (key, proc, idx) must
+            // produce a deterministic global order by (proc, idx).
+            let local: Vec<SampleRec> =
+                (0..8).map(|i| SampleRec::new(42, ctx.pid(), i)).collect();
+            bitonic_sort(ctx, local, "recs")
+        });
+        let flat: Vec<SampleRec> = run.outputs.into_iter().flatten().collect();
+        let mut expect = flat.clone();
+        expect.sort();
+        assert_eq!(flat, expect);
+        // Proc 0's records come first.
+        assert!(flat[..8].iter().all(|r| r.proc == 0));
+    }
+
+    #[test]
+    fn p1_is_identity() {
+        let machine = BspMachine::new(cray_t3d(1));
+        let run = machine.run(|ctx| bitonic_sort(ctx, vec![3i32, 5, 9], "one"));
+        assert_eq!(run.outputs[0], vec![3, 5, 9]);
+    }
+
+    #[test]
+    fn superstep_count_formula() {
+        assert_eq!(superstep_count(2), 1);
+        assert_eq!(superstep_count(4), 3);
+        assert_eq!(superstep_count(8), 6);
+        assert_eq!(superstep_count(128), 28);
+    }
+
+    #[test]
+    fn duplicate_heavy_keys() {
+        check("bitonic-duplicates", |rng| {
+            let p = 4usize;
+            let m = 16usize;
+            let seed = rng.next_u64();
+            let machine = BspMachine::new(cray_t3d(p));
+            let run = machine.run(|ctx| {
+                let mut local_rng = SplitMix64::new(seed ^ ctx.pid() as u64);
+                let mut local: Vec<i32> = (0..m).map(|_| local_rng.below(3) as i32).collect();
+                local.sort_unstable();
+                let inp = local.clone();
+                (inp, bitonic_sort(ctx, local, "dup"))
+            });
+            let mut expect: Vec<i32> = run.outputs.iter().flat_map(|(i, _)| i.clone()).collect();
+            expect.sort_unstable();
+            let got: Vec<i32> = run.outputs.into_iter().flat_map(|(_, o)| o).collect();
+            assert_eq!(got, expect);
+        });
+    }
+}

@@ -1,0 +1,320 @@
+//! Broadcast primitives (Lemma 4.1).
+//!
+//! Two implementations, chosen by cost under the machine's `(p, L, g)`:
+//!
+//! * [`broadcast_direct`] — one superstep, the root sends `p−1` copies:
+//!   cost `max{L, g·n·(p−1)}`.  Best when `n(p−1)` is small relative to L.
+//! * [`broadcast_tree`] — the pipelined t-ary tree of Lemma 4.1: the
+//!   message is cut into `⌈n/m⌉` segments pipelined down a tree of depth
+//!   `h = ⌈log_t((t−1)p+1)⌉ − 1`; cost
+//!   `(⌈n/⌈n/h⌉⌉ + h − 1) · max{L, g·t·⌈n/h⌉}`.
+//!
+//! [`broadcast_recs`] picks the cheaper by evaluating the Lemma 4.1
+//! formula over `t ∈ {2..p}` — exactly the "architecture dependent choice
+//! of primitive" the paper highlights in §5.1 (the same BSP program picks
+//! different building blocks for different `(n, p, L, g)` tuples).
+
+use crate::bsp::engine::BspCtx;
+use crate::bsp::msg::{Payload, SampleRec};
+use crate::bsp::params::BspParams;
+
+/// Cost (µs) of the one-superstep direct broadcast of `n` words.
+pub fn direct_cost_us(params: &BspParams, n: u64) -> f64 {
+    params.superstep_cost_us(0.0, n * (params.p as f64 - 1.0).max(0.0) as u64)
+}
+
+/// Cost (µs) of the Lemma 4.1 pipelined t-ary tree broadcast of `n` words.
+pub fn tree_cost_us(params: &BspParams, n: u64, t: u64) -> f64 {
+    let p = params.p as u64;
+    if p <= 1 || n == 0 {
+        return params.l_us;
+    }
+    // depth h = ceil(log_t((t-1)p + 1)) - 1
+    let h = {
+        let target = (t - 1) * p + 1;
+        let mut depth = 0u64;
+        let mut pow = 1u64;
+        while pow < target {
+            pow = pow.saturating_mul(t);
+            depth += 1;
+        }
+        depth.saturating_sub(1).max(1)
+    };
+    let m = n.div_ceil(h); // segment size ⌈n/h⌉
+    let supersteps = n.div_ceil(m) + h - 1;
+    supersteps as f64 * params.superstep_cost_us(0.0, t * m)
+}
+
+/// The `t` minimizing the Lemma 4.1 cost, and that cost.
+pub fn best_tree_t(params: &BspParams, n: u64) -> (u64, f64) {
+    let mut best = (2u64, f64::INFINITY);
+    for t in 2..=(params.p.max(2) as u64) {
+        let c = tree_cost_us(params, n, t);
+        if c < best.1 {
+            best = (t, c);
+        }
+    }
+    best
+}
+
+/// Choose the cheaper broadcast shape for an `n`-word message.
+pub fn plan(params: &BspParams, n: u64) -> BroadcastPlan {
+    let direct = direct_cost_us(params, n);
+    let (t, tree) = best_tree_t(params, n);
+    if tree < direct {
+        BroadcastPlan::Tree { t }
+    } else {
+        BroadcastPlan::Direct
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BroadcastPlan {
+    Direct,
+    Tree { t: u64 },
+}
+
+/// Broadcast tagged records from `root` to all processors; every
+/// processor returns the full message.  SPMD: all processors call this
+/// with the same `expected_len` (the sorts broadcast `p−1` splitters, a
+/// globally known length); only the root's `msg` is consulted.
+pub fn broadcast_recs(
+    ctx: &mut BspCtx,
+    params: &BspParams,
+    root: usize,
+    msg: Vec<SampleRec>,
+    expected_len: usize,
+    label: &str,
+) -> Vec<SampleRec> {
+    let n_words = (expected_len as u64) * SampleRec::WORDS;
+    match plan(params, n_words.max(1)) {
+        BroadcastPlan::Direct => broadcast_direct(ctx, root, msg, label),
+        BroadcastPlan::Tree { t } => {
+            broadcast_tree(ctx, root, msg, t as usize, expected_len, label)
+        }
+    }
+}
+
+/// One-superstep direct broadcast.
+pub fn broadcast_direct(
+    ctx: &mut BspCtx,
+    root: usize,
+    msg: Vec<SampleRec>,
+    label: &str,
+) -> Vec<SampleRec> {
+    let p = ctx.nprocs();
+    if ctx.pid() == root {
+        for dst in 0..p {
+            if dst != root {
+                ctx.send(dst, Payload::Recs(msg.clone()));
+            }
+        }
+    }
+    ctx.sync(label);
+    let inbox = ctx.take_inbox();
+    if ctx.pid() == root {
+        msg
+    } else {
+        inbox
+            .into_iter()
+            .find(|(src, _)| *src == root)
+            .map(|(_, payload)| payload.into_recs())
+            .unwrap_or_default()
+    }
+}
+
+/// Pipelined t-ary tree broadcast (Lemma 4.1).
+///
+/// Processors form an implicit t-ary tree rooted at `root` (root-relative
+/// rank r's children are `t·r + 1 .. t·r + t`).  The message is cut into
+/// `⌈len/m⌉` segments of `m = ⌈len/h⌉` records; in superstep `step` the
+/// node at depth `d` forwards segment `step − d`, so segments pipeline
+/// down in `⌈len/m⌉ + h − 1` supersteps — the Lemma 4.1 schedule.
+///
+/// `expected_len` must be identical on all processors (it determines the
+/// superstep count); only the root's `msg` content matters.
+pub fn broadcast_tree(
+    ctx: &mut BspCtx,
+    root: usize,
+    msg: Vec<SampleRec>,
+    t: usize,
+    expected_len: usize,
+    label: &str,
+) -> Vec<SampleRec> {
+    let p = ctx.nprocs();
+    if p == 1 || expected_len == 0 {
+        return msg;
+    }
+    let t = t.max(2);
+    let rank = |pid: usize| (pid + p - root) % p;
+    let pid_of = |r: usize| (r + root) % p;
+    let my_rank = rank(ctx.pid());
+    let my_depth = depth_of(my_rank, t);
+
+    // Tree depth covering p nodes.
+    let mut h = 0usize;
+    {
+        let mut covered = 1u64;
+        let mut level = 1u64;
+        while covered < p as u64 {
+            level = level.saturating_mul(t as u64);
+            covered += level;
+            h += 1;
+        }
+    }
+    let h = h.max(1);
+    let m = expected_len.div_ceil(h).max(1);
+    let num_segments = expected_len.div_ceil(m);
+    let total_steps = num_segments + h - 1;
+
+    if my_rank == 0 {
+        assert_eq!(msg.len(), expected_len, "root message length mismatch");
+    }
+    let mut received: Vec<Vec<SampleRec>> = vec![Vec::new(); num_segments];
+    if my_rank == 0 {
+        for (seg, chunk) in msg.chunks(m).enumerate() {
+            received[seg] = chunk.to_vec();
+        }
+    }
+
+    for step in 0..total_steps {
+        if step >= my_depth {
+            let seg = step - my_depth;
+            if seg < num_segments && !received[seg].is_empty() {
+                for c in 1..=t {
+                    let child_rank = my_rank * t + c;
+                    if child_rank < p {
+                        ctx.send(pid_of(child_rank), Payload::Recs(received[seg].clone()));
+                    }
+                }
+            }
+        }
+        ctx.sync(label);
+        for (_, payload) in ctx.take_inbox() {
+            // A segment sent by the parent (depth my_depth − 1) during
+            // superstep `step` arrives now; its index is step+1−my_depth.
+            debug_assert!(step + 1 >= my_depth);
+            let seg = step + 1 - my_depth;
+            debug_assert!(seg < num_segments, "segment index out of range");
+            received[seg] = payload.into_recs();
+        }
+    }
+
+    if my_rank == 0 {
+        msg
+    } else {
+        received.into_iter().flatten().collect()
+    }
+}
+
+/// Depth of root-relative rank `r` in the implicit t-ary tree.
+fn depth_of(r: usize, t: usize) -> usize {
+    let mut depth = 0usize;
+    let mut level_first = 0usize; // first rank at this depth
+    let mut level_size = 1usize;
+    loop {
+        if r < level_first + level_size {
+            return depth;
+        }
+        level_first += level_size;
+        level_size *= t;
+        depth += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bsp::engine::BspMachine;
+    use crate::bsp::params::cray_t3d;
+
+    fn recs(range: std::ops::Range<i32>) -> Vec<SampleRec> {
+        range.map(|k| SampleRec::new(k, 0, k as usize)).collect()
+    }
+
+    #[test]
+    fn direct_broadcast_reaches_everyone() {
+        let machine = BspMachine::new(cray_t3d(8));
+        let msg = recs(0..17);
+        let expect = msg.clone();
+        let run = machine.run(|ctx| {
+            let local = if ctx.pid() == 3 { msg.clone() } else { Vec::new() };
+            broadcast_direct(ctx, 3, local, "bcast")
+        });
+        for out in run.outputs {
+            assert_eq!(out, expect);
+        }
+    }
+
+    #[test]
+    fn tree_broadcast_matches_direct_for_various_t() {
+        for p in [2usize, 4, 7, 8, 16] {
+            for t in [2usize, 3, 4] {
+                let machine = BspMachine::new(cray_t3d(p));
+                let msg = recs(0..23);
+                let expect = msg.clone();
+                let run = machine.run(|ctx| {
+                    let local = if ctx.pid() == 0 { msg.clone() } else { Vec::new() };
+                    broadcast_tree(ctx, 0, local, t, 23, "tree")
+                });
+                for (pid, out) in run.outputs.iter().enumerate() {
+                    assert_eq!(out, &expect, "p={p} t={t} pid={pid}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tree_broadcast_nonzero_root() {
+        let machine = BspMachine::new(cray_t3d(8));
+        let msg = recs(0..9);
+        let expect = msg.clone();
+        let run = machine.run(|ctx| {
+            let local = if ctx.pid() == 5 { msg.clone() } else { Vec::new() };
+            broadcast_tree(ctx, 5, local, 2, 9, "tree5")
+        });
+        for out in run.outputs {
+            assert_eq!(out, expect);
+        }
+    }
+
+    #[test]
+    fn auto_plan_broadcast_works() {
+        let params = cray_t3d(16);
+        let machine = BspMachine::new(params);
+        let msg = recs(0..15);
+        let expect = msg.clone();
+        let run = machine.run(|ctx| {
+            let local = if ctx.pid() == 0 { msg.clone() } else { Vec::new() };
+            broadcast_recs(ctx, &params, 0, local, 15, "auto")
+        });
+        for out in run.outputs {
+            assert_eq!(out, expect);
+        }
+    }
+
+    #[test]
+    fn lemma41_cost_formula_sane() {
+        let params = cray_t3d(64);
+        // Small message: direct (one superstep at the L floor) wins.
+        assert_eq!(plan(&params, 8), BroadcastPlan::Direct);
+        // Huge message: the tree amortizes the per-copy g cost.
+        let (t, tree) = best_tree_t(&params, 1 << 22);
+        let direct = direct_cost_us(&params, 1 << 22);
+        assert!(tree < direct, "tree={tree} direct={direct} t={t}");
+    }
+
+    #[test]
+    fn depth_of_tary_tree() {
+        // t=2: ranks 0 | 1,2 | 3..6 | ...
+        assert_eq!(depth_of(0, 2), 0);
+        assert_eq!(depth_of(1, 2), 1);
+        assert_eq!(depth_of(2, 2), 1);
+        assert_eq!(depth_of(3, 2), 2);
+        assert_eq!(depth_of(6, 2), 2);
+        assert_eq!(depth_of(7, 2), 3);
+        // t=3: 0 | 1..3 | 4..12
+        assert_eq!(depth_of(3, 3), 1);
+        assert_eq!(depth_of(4, 3), 2);
+    }
+}

@@ -1,0 +1,11 @@
+//! BSP primitive operations (paper §4): broadcast (Lemma 4.1), parallel
+//! prefix (Lemma 4.2), and the distributed bitonic sort used for parallel
+//! sample sorting and the [BSI] baseline.
+
+pub mod bitonic;
+pub mod broadcast;
+pub mod prefix;
+
+pub use bitonic::bitonic_sort;
+pub use broadcast::{broadcast_direct, broadcast_recs, broadcast_tree};
+pub use prefix::prefix_direct;

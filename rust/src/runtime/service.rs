@@ -1,0 +1,123 @@
+//! XLA offload service: a dedicated thread owning the (non-`Send`) PJRT
+//! client, serving sort requests over a channel.
+//!
+//! The `xla` crate's client and executables hold `Rc` internals, so they
+//! cannot be shared across the BSP processor threads.  Architecturally
+//! this mirrors a real accelerator runtime anyway: the device has one
+//! submission queue and the workers enqueue kernels.  Each BSP processor
+//! sends `(keys, reply)` jobs; the service thread executes the artifact
+//! and replies.
+
+use std::sync::mpsc;
+use std::sync::Mutex;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use super::client::{ArtifactRegistry, Runtime};
+
+struct Job {
+    keys: Vec<i32>,
+    reply: mpsc::Sender<Result<Vec<i32>, String>>,
+}
+
+/// Handle to the service; cloneable across threads via `Arc`.
+pub struct XlaService {
+    tx: Mutex<Option<mpsc::Sender<Job>>>,
+    handle: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl XlaService {
+    /// Spawn the service thread with the given artifact registry.
+    pub fn start(registry: ArtifactRegistry) -> Result<XlaService> {
+        let (tx, rx) = mpsc::channel::<Job>();
+        // Probe the runtime on the service thread; report startup errors
+        // through a handshake channel so `start` fails eagerly.
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
+        let handle = std::thread::Builder::new()
+            .name("xla-service".into())
+            .spawn(move || {
+                let runtime = match Runtime::new(registry) {
+                    Ok(rt) => {
+                        let _ = ready_tx.send(Ok(()));
+                        rt
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(format!("{e:#}")));
+                        return;
+                    }
+                };
+                while let Ok(job) = rx.recv() {
+                    let result = runtime.sort(&job.keys).map_err(|e| format!("{e:#}"));
+                    let _ = job.reply.send(result);
+                }
+            })
+            .map_err(|e| anyhow!("spawn xla-service: {e}"))?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("xla-service died during startup"))?
+            .map_err(|e| anyhow!("xla-service startup: {e}"))?;
+        Ok(XlaService {
+            tx: Mutex::new(Some(tx)),
+            handle: Mutex::new(Some(handle)),
+        })
+    }
+
+    pub fn start_default() -> Result<XlaService> {
+        XlaService::start(ArtifactRegistry::default_location()?)
+    }
+
+    /// Sort keys on the service thread (blocking).
+    pub fn sort(&self, keys: &[i32]) -> Result<Vec<i32>> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        {
+            let guard = self.tx.lock().unwrap();
+            let tx = guard.as_ref().ok_or_else(|| anyhow!("xla-service stopped"))?;
+            tx.send(Job {
+                keys: keys.to_vec(),
+                reply: reply_tx,
+            })
+            .map_err(|_| anyhow!("xla-service channel closed"))?;
+        }
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow!("xla-service dropped the reply"))?
+            .map_err(|e| anyhow!(e))
+    }
+}
+
+impl Drop for XlaService {
+    fn drop(&mut self) {
+        // Close the queue, then join the thread.
+        self.tx.lock().unwrap().take();
+        if let Some(h) = self.handle.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn service_sorts_from_multiple_threads() {
+        let Ok(service) = XlaService::start_default() else {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            return;
+        };
+        let service = std::sync::Arc::new(service);
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let service = std::sync::Arc::clone(&service);
+                s.spawn(move || {
+                    let keys: Vec<i32> = (0..500).map(|i| ((i * 37 + t * 11) % 97) as i32).collect();
+                    let mut expect = keys.clone();
+                    expect.sort_unstable();
+                    let got = service.sort(&keys).unwrap();
+                    assert_eq!(got, expect);
+                });
+            }
+        });
+    }
+}

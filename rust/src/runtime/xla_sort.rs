@@ -1,0 +1,98 @@
+//! The `SeqSorter` backend running the AOT-compiled Pallas bitonic
+//! network through PJRT — the `[.SX]` variants ([DSX]/[RSX]).
+//!
+//! This is the three-layer composition point: the Rust BSP coordinator
+//! (L3) calls into the XLA executable that the JAX graph (L2) and Pallas
+//! kernel (L1) were lowered into at build time.  Because the PJRT client
+//! is not `Send`, the executable lives on the [`XlaService`] thread and
+//! BSP processors submit jobs over its queue.
+
+use std::sync::Arc;
+
+use crate::seq::{SeqSorter, SeqSortKind};
+
+use super::service::XlaService;
+
+/// XLA-backed local sort (shareable across BSP processor threads).
+pub struct XlaSorter {
+    service: Arc<XlaService>,
+}
+
+impl XlaSorter {
+    pub fn new(service: Arc<XlaService>) -> XlaSorter {
+        XlaSorter { service }
+    }
+
+    pub fn from_default_artifacts() -> anyhow::Result<XlaSorter> {
+        Ok(XlaSorter {
+            service: Arc::new(XlaService::start_default()?),
+        })
+    }
+}
+
+impl SeqSorter for XlaSorter {
+    fn sort(&self, keys: &mut Vec<i32>) {
+        match self.service.sort(keys) {
+            Ok(sorted) => *keys = sorted,
+            Err(e) => panic!("XlaSorter failed: {e:#}"),
+        }
+    }
+
+    fn charge(&self, n: usize) -> f64 {
+        SeqSortKind::Xla.charge(n)
+    }
+
+    fn name(&self) -> &'static str {
+        "xla-bitonic"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::{arb_keys, check_cfg, CheckConfig};
+
+    fn sorter() -> Option<XlaSorter> {
+        match XlaSorter::from_default_artifacts() {
+            Ok(s) => Some(s),
+            Err(e) => {
+                eprintln!("skipping XLA tests: {e:#}");
+                None
+            }
+        }
+    }
+
+    #[test]
+    fn xla_sort_matches_std_sort() {
+        let Some(s) = sorter() else { return };
+        let mut keys = vec![5, -1, 7, 7, 0, i32::MAX, i32::MIN, 3];
+        let mut expect = keys.clone();
+        expect.sort_unstable();
+        s.sort(&mut keys);
+        assert_eq!(keys, expect);
+    }
+
+    #[test]
+    fn xla_sort_random_property() {
+        let Some(s) = sorter() else { return };
+        check_cfg(
+            "xla-sort-random",
+            CheckConfig { cases: 6, base_seed: 0x5A },
+            |rng| {
+                let mut keys = arb_keys(rng, 0, 3000, i32::MIN, i32::MAX - 1);
+                let mut expect = keys.clone();
+                expect.sort_unstable();
+                s.sort(&mut keys);
+                assert_eq!(keys, expect);
+            },
+        );
+    }
+
+    #[test]
+    fn xla_sort_empty_input() {
+        let Some(s) = sorter() else { return };
+        let mut empty: Vec<i32> = vec![];
+        s.sort(&mut empty);
+        assert!(empty.is_empty());
+    }
+}

@@ -1,0 +1,123 @@
+//! Sequential substrates (DESIGN.md §4.2): the `SORT_SEQ` backends, the
+//! merge kernels and binary searches the BSP algorithms run per
+//! processor, plus the paper's §1.1 operation-charging policy.
+
+pub mod merge;
+pub mod ops;
+pub mod quicksort;
+pub mod radixsort;
+pub mod search;
+
+pub use merge::{merge2, multiway_merge, multiway_merge_slices};
+pub use quicksort::quicksort;
+pub use radixsort::radixsort;
+
+/// Which sequential sorting backend a variant uses.
+///
+/// The paper studies `[.SQ]` (quicksort) and `[.SR]` (radixsort); `Xla`
+/// is this repo's addition — the AOT-compiled Pallas bitonic network run
+/// through PJRT (runtime::XlaSort), exercised by examples and tests.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SeqSortKind {
+    Quick,
+    Radix,
+    Xla,
+}
+
+impl SeqSortKind {
+    /// One-letter suffix used in variant names ([DSQ], [DSR], [DSX]).
+    pub fn suffix(&self) -> char {
+        match self {
+            SeqSortKind::Quick => 'Q',
+            SeqSortKind::Radix => 'R',
+            SeqSortKind::Xla => 'X',
+        }
+    }
+
+    /// The charge (comparisons) for sorting `n` keys with this backend.
+    pub fn charge(&self, n: usize) -> f64 {
+        match self {
+            SeqSortKind::Quick => ops::sort_charge(n),
+            SeqSortKind::Radix => ops::radix_charge(n),
+            // The oblivious network performs n lg^2 n / 2 compare-
+            // exchanges; on the T3D model we still charge its *work* —
+            // the backend is for the TPU path where the VPU amortizes it.
+            SeqSortKind::Xla => {
+                let lg = crate::util::lg(n as f64);
+                n as f64 * lg * (lg + 1.0) / 4.0
+            }
+        }
+    }
+}
+
+/// A sequential sort backend usable inside a BSP processor.
+pub trait SeqSorter: Sync {
+    /// Sort `keys` ascending in place.
+    fn sort(&self, keys: &mut Vec<i32>);
+    /// Charged operations for sorting `n` keys (analytic, §1.1 policy).
+    fn charge(&self, n: usize) -> f64;
+    fn name(&self) -> &'static str;
+}
+
+/// Quicksort backend ([.SQ] variants).
+pub struct QuickSorter;
+
+impl SeqSorter for QuickSorter {
+    fn sort(&self, keys: &mut Vec<i32>) {
+        quicksort::quicksort(keys);
+    }
+    fn charge(&self, n: usize) -> f64 {
+        ops::sort_charge(n)
+    }
+    fn name(&self) -> &'static str {
+        "quicksort"
+    }
+}
+
+/// Radixsort backend ([.SR] variants).
+pub struct RadixSorter;
+
+impl SeqSorter for RadixSorter {
+    fn sort(&self, keys: &mut Vec<i32>) {
+        radixsort::radixsort(keys);
+    }
+    fn charge(&self, n: usize) -> f64 {
+        ops::radix_charge(n)
+    }
+    fn name(&self) -> &'static str {
+        "radixsort"
+    }
+}
+
+/// Obtain a boxed backend for a kind (Xla requires the runtime and is
+/// constructed in `runtime::xla_sort`).
+pub fn backend(kind: SeqSortKind) -> Box<dyn SeqSorter> {
+    match kind {
+        SeqSortKind::Quick => Box::new(QuickSorter),
+        SeqSortKind::Radix => Box::new(RadixSorter),
+        SeqSortKind::Xla => panic!("XlaSort requires runtime::xla_sort::XlaSorter::new()"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backends_sort_correctly() {
+        for kind in [SeqSortKind::Quick, SeqSortKind::Radix] {
+            let b = backend(kind);
+            let mut keys = vec![5, -3, 9, 0, 5, -3];
+            b.sort(&mut keys);
+            assert_eq!(keys, vec![-3, -3, 0, 5, 5, 9], "{}", b.name());
+            assert!(b.charge(1024) > 0.0);
+        }
+    }
+
+    #[test]
+    fn suffixes() {
+        assert_eq!(SeqSortKind::Quick.suffix(), 'Q');
+        assert_eq!(SeqSortKind::Radix.suffix(), 'R');
+        assert_eq!(SeqSortKind::Xla.suffix(), 'X');
+    }
+}

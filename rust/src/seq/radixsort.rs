@@ -1,0 +1,161 @@
+//! LSD radix sort for 32-bit integer keys (the paper's `SORT_SEQ` integer
+//! variant, used by the [DSR]/[RSR] implementations).
+//!
+//! Four 8-bit passes over a bias-mapped unsigned image of the key
+//! (`key ^ i32::MIN` orders identically to signed order), counting sort
+//! per pass with a ping-pong buffer.  Stable (irrelevant for bare keys but
+//! required by the tagged variant used in tests), linear time; the charge
+//! policy prices it at 15 comparisons-equivalents per key (ops.rs).
+
+/// Sort `a` ascending in place (allocates one scratch buffer).
+pub fn radixsort(a: &mut Vec<i32>) {
+    let n = a.len();
+    if n <= 1 {
+        return;
+    }
+    let mut scratch: Vec<i32> = vec![0; n];
+    let mut src_is_a = true;
+    for pass in 0..4 {
+        let shift = pass * 8;
+        let (src, dst): (&[i32], &mut [i32]) = if src_is_a {
+            (&a[..], &mut scratch[..])
+        } else {
+            (&scratch[..], &mut a[..])
+        };
+        if !counting_pass(src, dst, shift) {
+            // Pass was a no-op permutation (single bucket): data already
+            // placed in dst by the copy inside counting_pass.
+        }
+        src_is_a = !src_is_a;
+    }
+    if !src_is_a {
+        a.copy_from_slice(&scratch);
+    }
+}
+
+/// One stable counting pass on byte `shift/8`; returns false if all keys
+/// share the byte (still copies src→dst to keep the ping-pong invariant).
+fn counting_pass(src: &[i32], dst: &mut [i32], shift: u32) -> bool {
+    let mut counts = [0usize; 256];
+    for &k in src {
+        let b = (biased(k) >> shift) & 0xFF;
+        counts[b as usize] += 1;
+    }
+    let distinct = counts.iter().filter(|&&c| c > 0).count();
+    let mut offsets = [0usize; 256];
+    let mut sum = 0usize;
+    for i in 0..256 {
+        offsets[i] = sum;
+        sum += counts[i];
+    }
+    for &k in src {
+        let b = ((biased(k) >> shift) & 0xFF) as usize;
+        dst[offsets[b]] = k;
+        offsets[b] += 1;
+    }
+    distinct > 1
+}
+
+/// Map a signed key to an unsigned image with identical ordering.
+#[inline]
+fn biased(k: i32) -> u32 {
+    (k as u32) ^ 0x8000_0000
+}
+
+/// Radix sort of `(key, payload)` pairs by key — used by tests asserting
+/// the stability the paper's §5.1.1 duplicate handling relies on.
+pub fn radixsort_pairs(a: &mut Vec<(i32, u32)>) {
+    let n = a.len();
+    if n <= 1 {
+        return;
+    }
+    let mut scratch: Vec<(i32, u32)> = vec![(0, 0); n];
+    let mut src_is_a = true;
+    for pass in 0..4 {
+        let shift = pass * 8;
+        let (src, dst): (&[(i32, u32)], &mut [(i32, u32)]) = if src_is_a {
+            (&a[..], &mut scratch[..])
+        } else {
+            (&scratch[..], &mut a[..])
+        };
+        let mut counts = [0usize; 256];
+        for &(k, _) in src {
+            counts[((biased(k) >> shift) & 0xFF) as usize] += 1;
+        }
+        let mut offsets = [0usize; 256];
+        let mut sum = 0usize;
+        for i in 0..256 {
+            offsets[i] = sum;
+            sum += counts[i];
+        }
+        for &it in src {
+            let b = ((biased(it.0) >> shift) & 0xFF) as usize;
+            dst[offsets[b]] = it;
+            offsets[b] += 1;
+        }
+        src_is_a = !src_is_a;
+    }
+    if !src_is_a {
+        a.copy_from_slice(&scratch);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::{arb_keys, check};
+
+    #[test]
+    fn sorts_random_inputs_property() {
+        check("radixsort-random", |rng| {
+            let mut keys = arb_keys(rng, 0, 3000, i32::MIN, i32::MAX);
+            let mut expect = keys.clone();
+            expect.sort_unstable();
+            radixsort(&mut keys);
+            assert_eq!(keys, expect);
+        });
+    }
+
+    #[test]
+    fn sorts_negative_positive_mix() {
+        let mut a = vec![-1, 1, 0, i32::MIN, i32::MAX, -256, 256, -257, 255];
+        let mut expect = a.clone();
+        expect.sort_unstable();
+        radixsort(&mut a);
+        assert_eq!(a, expect);
+    }
+
+    #[test]
+    fn empty_and_singleton() {
+        let mut e: Vec<i32> = vec![];
+        radixsort(&mut e);
+        assert!(e.is_empty());
+        let mut s = vec![-5];
+        radixsort(&mut s);
+        assert_eq!(s, vec![-5]);
+    }
+
+    #[test]
+    fn duplicate_heavy_property() {
+        check("radixsort-dups", |rng| {
+            let mut keys = arb_keys(rng, 0, 3000, -2, 2);
+            let mut expect = keys.clone();
+            expect.sort_unstable();
+            radixsort(&mut keys);
+            assert_eq!(keys, expect);
+        });
+    }
+
+    #[test]
+    fn pairs_sort_is_stable() {
+        check("radixsort-pairs-stable", |rng| {
+            let keys = arb_keys(rng, 0, 500, -4, 4);
+            let mut pairs: Vec<(i32, u32)> =
+                keys.iter().enumerate().map(|(i, &k)| (k, i as u32)).collect();
+            let mut expect = pairs.clone();
+            expect.sort_by_key(|&(k, i)| (k, i)); // stable == payload order
+            radixsort_pairs(&mut pairs);
+            assert_eq!(pairs, expect);
+        });
+    }
+}

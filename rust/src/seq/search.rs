@@ -1,0 +1,159 @@
+//! Binary search of splitters into locally sorted keys (step 9 of both
+//! algorithms), with the §5.1.1 duplicate tie-break.
+//!
+//! A splitter is a tagged [`SampleRec`]; a local key at index `i` on
+//! processor `pid` carries the *implicit* tag `(pid, i)`.  A local key is
+//! "before" a splitter iff `(key, pid, i) < (s.key, s.proc, s.idx)`
+//! lexicographically — this is what makes duplicate keys split exactly
+//! and deterministically across processors without tagging the data.
+
+use crate::bsp::msg::SampleRec;
+
+/// Number of leading keys of `keys` (sorted ascending, owned by `pid`)
+/// that order strictly before splitter `s` under the tagged comparison.
+///
+/// Equal keys resolve by `(proc, idx)`: all equal keys on processors
+/// `< s.proc` go left; on `s.proc` itself, those with index `< s.idx`.
+pub fn rank_before_splitter(keys: &[i32], pid: usize, s: &SampleRec) -> usize {
+    let pid = pid as u32;
+    // Find the boundary with a single binary search over the compound
+    // order; the compound key of position i is (keys[i], pid, i), which
+    // is nondecreasing in i because keys is sorted.
+    let mut lo = 0usize;
+    let mut hi = keys.len();
+    while lo < hi {
+        let mid = lo + (hi - lo) / 2;
+        let local = (keys[mid], pid, mid as u32);
+        if local < (s.key, s.proc, s.idx) {
+            lo = mid + 1;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
+/// Partition boundaries of `keys` induced by `splitters` (sorted by the
+/// tagged order): returns `splitters.len() + 1` bucket extents as
+/// cut positions `0 = c_0 <= c_1 <= ... <= c_p = keys.len()`.
+pub fn partition_points(keys: &[i32], pid: usize, splitters: &[SampleRec]) -> Vec<usize> {
+    let mut cuts = Vec::with_capacity(splitters.len() + 2);
+    cuts.push(0);
+    for s in splitters {
+        cuts.push(rank_before_splitter(keys, pid, s));
+    }
+    cuts.push(keys.len());
+    // Monotonicity is guaranteed when splitters are sorted; assert in
+    // debug builds to catch mis-sorted splitter sets early.
+    debug_assert!(cuts.windows(2).all(|w| w[0] <= w[1]), "non-monotone cuts");
+    cuts
+}
+
+/// Plain lower bound (first index with `keys[i] >= x`).
+pub fn lower_bound(keys: &[i32], x: i32) -> usize {
+    let mut lo = 0usize;
+    let mut hi = keys.len();
+    while lo < hi {
+        let mid = lo + (hi - lo) / 2;
+        if keys[mid] < x {
+            lo = mid + 1;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
+/// Plain upper bound (first index with `keys[i] > x`).
+pub fn upper_bound(keys: &[i32], x: i32) -> usize {
+    let mut lo = 0usize;
+    let mut hi = keys.len();
+    while lo < hi {
+        let mid = lo + (hi - lo) / 2;
+        if keys[mid] <= x {
+            lo = mid + 1;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::{arb_keys, check};
+
+    #[test]
+    fn bounds_basic() {
+        let keys = [1, 3, 3, 5];
+        assert_eq!(lower_bound(&keys, 3), 1);
+        assert_eq!(upper_bound(&keys, 3), 3);
+        assert_eq!(lower_bound(&keys, 0), 0);
+        assert_eq!(upper_bound(&keys, 9), 4);
+    }
+
+    #[test]
+    fn splitter_rank_tie_breaks_by_proc() {
+        let keys = [7, 7, 7, 7];
+        // Splitter key 7 owned by a *higher* processor: all local 7s on a
+        // lower processor order before it.
+        let s_hi = SampleRec::new(7, 5, 0);
+        assert_eq!(rank_before_splitter(&keys, 2, &s_hi), 4);
+        // Splitter owned by a lower processor: none go left.
+        let s_lo = SampleRec::new(7, 0, 0);
+        assert_eq!(rank_before_splitter(&keys, 2, &s_lo), 0);
+    }
+
+    #[test]
+    fn splitter_rank_tie_breaks_by_index_on_same_proc() {
+        let keys = [7, 7, 7, 7];
+        let s = SampleRec::new(7, 2, 2);
+        // Local keys at indices 0,1 are before (7, proc 2, idx 2).
+        assert_eq!(rank_before_splitter(&keys, 2, &s), 2);
+    }
+
+    #[test]
+    fn partition_points_are_monotone_property() {
+        check("partition-points-monotone", |rng| {
+            let mut keys = arb_keys(rng, 0, 500, -20, 20);
+            keys.sort_unstable();
+            let p = 1 + rng.below(8) as usize;
+            let mut splitters: Vec<SampleRec> = (0..p - 1)
+                .map(|_| {
+                    SampleRec::new(
+                        (rng.below(41) as i32) - 20,
+                        rng.below(8) as usize,
+                        rng.below(64) as usize,
+                    )
+                })
+                .collect();
+            splitters.sort();
+            let cuts = partition_points(&keys, 3, &splitters);
+            assert_eq!(cuts.len(), p + 1);
+            assert!(cuts.windows(2).all(|w| w[0] <= w[1]));
+            assert_eq!(cuts[0], 0);
+            assert_eq!(*cuts.last().unwrap(), keys.len());
+        });
+    }
+
+    #[test]
+    fn rank_matches_linear_scan_property() {
+        check("rank-vs-linear", |rng| {
+            let mut keys = arb_keys(rng, 0, 300, -10, 10);
+            keys.sort_unstable();
+            let pid = rng.below(8) as usize;
+            let s = SampleRec::new(
+                (rng.below(21) as i32) - 10,
+                rng.below(8) as usize,
+                rng.below(512) as usize,
+            );
+            let linear = keys
+                .iter()
+                .enumerate()
+                .take_while(|&(i, &k)| (k, pid as u32, i as u32) < (s.key, s.proc, s.idx))
+                .count();
+            assert_eq!(rank_before_splitter(&keys, pid, &s), linear);
+        });
+    }
+}

@@ -1,0 +1,99 @@
+//! [BSI]: full Batcher bitonic sort of the input (§6.2 item 3).
+//!
+//! Local sort, then `lg p (lg p + 1)/2` merge-split rounds.  The paper
+//! uses it for parallel sample sorting and notes its end-to-end
+//! performance is worse than the sample-based sorts "in all but very
+//! small problem and processor sizes (for such cases, Batcher's
+//! algorithm is faster because of its low overhead)" — the crossover our
+//! ablation bench (benches/ablation.rs) reproduces.
+
+use crate::bsp::engine::BspCtx;
+use crate::primitives::bitonic;
+use crate::seq::{QuickSorter, RadixSorter, SeqSortKind, SeqSorter};
+
+use super::common::{ProcResult, PH2, PH5};
+use super::config::SortConfig;
+
+/// Run the full bitonic sort; every processor ends with its chunk of the
+/// global order.  Requires equal local sizes and `p` a power of two.
+pub fn sort_bsi(ctx: &mut BspCtx, mut local: Vec<i32>, cfg: &SortConfig) -> ProcResult {
+    let sorter: Box<dyn SeqSorter> = match cfg.seq {
+        SeqSortKind::Quick => Box::new(QuickSorter),
+        SeqSortKind::Radix => Box::new(RadixSorter),
+        SeqSortKind::Xla => panic!("use sort_bsi_with for a custom backend"),
+    };
+    sort_bsi_with(ctx, &mut local, cfg, sorter.as_ref())
+}
+
+/// As [`sort_bsi`] with an explicit sequential backend.
+pub fn sort_bsi_with(
+    ctx: &mut BspCtx,
+    local: &mut Vec<i32>,
+    _cfg: &SortConfig,
+    sorter: &dyn SeqSorter,
+) -> ProcResult {
+    ctx.phase(PH2);
+    ctx.charge(sorter.charge(local.len()));
+    let mut keys = std::mem::take(local);
+    sorter.sort(&mut keys);
+
+    ctx.phase(PH5);
+    let n_local = keys.len();
+    let out = bitonic::bitonic_sort(ctx, keys, "bsi");
+
+    ProcResult {
+        received: n_local, // every round exchanges the full run
+        runs: ctx.nprocs(),
+        keys: out,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bsp::engine::BspMachine;
+    use crate::bsp::params::cray_t3d;
+    use crate::gen::{generate_for_proc, Benchmark, ALL_BENCHMARKS};
+
+    #[test]
+    fn bsi_sorts_every_benchmark() {
+        for bench in ALL_BENCHMARKS {
+            let p = 4usize;
+            let n = 1 << 12;
+            let params = cray_t3d(p);
+            let machine = BspMachine::new(params);
+            let cfg = SortConfig::default();
+            let run = machine.run(|ctx| {
+                let local = generate_for_proc(bench, ctx.pid(), p, n / p);
+                let input = local.clone();
+                (input, sort_bsi(ctx, local, &cfg))
+            });
+            let mut expect: Vec<i32> =
+                run.outputs.iter().flat_map(|(i, _)| i.clone()).collect();
+            expect.sort_unstable();
+            let got: Vec<i32> = run.outputs.iter().flat_map(|(_, r)| r.keys.clone()).collect();
+            assert_eq!(got, expect, "{}", bench.tag());
+        }
+    }
+
+    #[test]
+    fn bsi_superstep_count_is_quadratic_in_lgp() {
+        let p = 8usize;
+        let params = cray_t3d(p);
+        let machine = BspMachine::new(params);
+        let run = machine.run(|ctx| {
+            let local: Vec<i32> = (0..32).map(|i| (i * 7 + ctx.pid()) as i32 % 64).collect();
+            let mut sorted = local;
+            sorted.sort_unstable();
+            sort_bsi(ctx, sorted, &SortConfig::default())
+        });
+        // 6 merge-split supersteps for p=8 (+1 final Ph-less sync none).
+        let exchanges = run
+            .ledger
+            .supersteps
+            .iter()
+            .filter(|s| s.label.starts_with("bsi"))
+            .count();
+        assert_eq!(exchanges, bitonic::superstep_count(p));
+    }
+}

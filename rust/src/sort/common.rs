@@ -1,0 +1,247 @@
+//! The pipeline shared by SORT_DET_BSP and SORT_IRAN_BSP after sampling:
+//! parallel (or sequential) sample sort → splitter selection → broadcast
+//! → partition (binary search with §5.1.1 tags) → prefix → one-round key
+//! routing → stable p-way merge.
+//!
+//! Phase labels match Tables 4–7: Ph1 Init, Ph2 SeqSort, Ph3 Sampling,
+//! Ph4 Prefix, Ph5 Routing, Ph6 Merging, Ph7 Termination.
+
+use crate::bsp::engine::BspCtx;
+use crate::bsp::msg::{Payload, SampleRec};
+use crate::bsp::params::BspParams;
+use crate::primitives::{bitonic, broadcast};
+use crate::seq::{ops, search};
+
+use super::config::{DuplicatePolicy, SampleSortMethod, SortConfig};
+
+pub const PH1: &str = "Ph1:Init";
+pub const PH2: &str = "Ph2:SeqSort";
+pub const PH3: &str = "Ph3:Sampling";
+pub const PH4: &str = "Ph4:Prefix";
+pub const PH5: &str = "Ph5:Routing";
+pub const PH6: &str = "Ph6:Merging";
+pub const PH7: &str = "Ph7:Term";
+
+/// Per-processor result of a sorting run.
+#[derive(Clone, Debug)]
+pub struct ProcResult {
+    /// This processor's chunk of the global sorted order.
+    pub keys: Vec<i32>,
+    /// Keys received during routing (the Lemma 5.1 imbalance subject).
+    pub received: usize,
+    /// Number of non-empty runs merged in Ph6.
+    pub runs: usize,
+}
+
+/// Sort the (locally sorted) sample runs and return the `p−1` splitters,
+/// broadcast to every processor.
+///
+/// * `Bitonic` — the paper's parallel sample sort: distributed Batcher
+///   bitonic over the tagged records, then processors `0..p−1` each
+///   donate the last record of their chunk (= the evenly spaced
+///   positions `s, 2s, …, (p−1)s` of the sorted sample) to processor 0,
+///   which broadcasts the splitter set (steps 5–7 / Lemma 4.1).
+/// * `Sequential` — gather the whole sample at processor 0, sort there,
+///   select evenly spaced splitters, broadcast (SORT_RAN_BSP's shape).
+pub fn sample_sort_and_splitters(
+    ctx: &mut BspCtx,
+    params: &BspParams,
+    sample: Vec<SampleRec>,
+    method: SampleSortMethod,
+    label: &str,
+) -> Vec<SampleRec> {
+    let p = ctx.nprocs();
+    if p == 1 {
+        return Vec::new();
+    }
+    match method {
+        SampleSortMethod::Bitonic => {
+            let s = sample.len();
+            let sorted_chunk = bitonic::bitonic_sort(ctx, sample, &format!("{label}:bsi"));
+            debug_assert_eq!(sorted_chunk.len(), s);
+            // Processor i < p−1 holds global positions [i·s, (i+1)·s); the
+            // splitter at 1-indexed position (i+1)·s is its last record.
+            if ctx.pid() < p - 1 {
+                let last = *sorted_chunk.last().expect("nonempty sample chunk");
+                ctx.send(0, Payload::Recs(vec![last]));
+            }
+            ctx.charge(1.0);
+            ctx.sync(&format!("{label}:gather-splitters"));
+            let splitters = if ctx.pid() == 0 {
+                let mut recs: Vec<(usize, SampleRec)> = ctx
+                    .take_inbox()
+                    .into_iter()
+                    .map(|(src, payload)| (src, payload.into_recs()[0]))
+                    .collect();
+                recs.sort_by_key(|(src, _)| *src);
+                recs.into_iter().map(|(_, r)| r).collect()
+            } else {
+                ctx.take_inbox();
+                Vec::new()
+            };
+            broadcast::broadcast_recs(ctx, params, 0, splitters, p - 1, &format!("{label}:bcast"))
+        }
+        SampleSortMethod::Sequential => {
+            ctx.send(0, Payload::Recs(sample));
+            ctx.sync(&format!("{label}:gather-sample"));
+            let splitters = if ctx.pid() == 0 {
+                let mut all: Vec<SampleRec> = ctx
+                    .take_inbox()
+                    .into_iter()
+                    .flat_map(|(_, payload)| payload.into_recs())
+                    .collect();
+                ctx.charge(ops::sort_charge(all.len()));
+                all.sort();
+                // p−1 evenly spaced splitters over p segments.
+                let seg = all.len() / p;
+                (1..p).map(|i| all[i * seg - 1]).collect()
+            } else {
+                ctx.take_inbox();
+                Vec::new()
+            };
+            broadcast::broadcast_recs(ctx, params, 0, splitters, p - 1, &format!("{label}:bcast"))
+        }
+    }
+}
+
+/// Steps 8–13 for the locally *sorted* algorithms (DET and IRAN):
+/// partition the sorted local keys at the splitters (binary search with
+/// tagged tie-break), run the Ph4 prefix over bucket counts, route each
+/// contiguous slice in a single superstep, and stable-merge the received
+/// runs.
+pub fn partition_route_merge(
+    ctx: &mut BspCtx,
+    keys: Vec<i32>,
+    splitters: &[SampleRec],
+    cfg: &SortConfig,
+) -> ProcResult {
+    let p = ctx.nprocs();
+    let pid = ctx.pid();
+    let n_local = keys.len();
+
+    if p == 1 {
+        return ProcResult {
+            received: keys.len(),
+            runs: 1,
+            keys,
+        };
+    }
+
+    // --- Ph4: partition + parallel prefix over bucket counts ---------
+    ctx.phase(PH4);
+    // Binary search of the p−1 splitters into the local sorted keys
+    // (the cheaper direction, as §5.2 notes): (p−1)·⌈lg(n/p)⌉ charges.
+    let effective: Vec<SampleRec> = match cfg.dup {
+        DuplicatePolicy::Tagged => splitters.to_vec(),
+        // Ablation: strip tags so ties resolve by key only.
+        DuplicatePolicy::Off => splitters
+            .iter()
+            .map(|s| SampleRec { key: s.key, proc: 0, idx: 0 })
+            .collect(),
+    };
+    let cuts = search::partition_points(&keys, pid, &effective);
+    ctx.charge((p as f64 - 1.0) * ops::bsearch_charge(n_local.max(2)));
+    let counts: Vec<u64> = cuts.windows(2).map(|w| (w[1] - w[0]) as u64).collect();
+    // p independent prefix operations over the bucket counts: the
+    // offsets are where this processor's slice lands at each receiver —
+    // the information the paper's step 9 computes (and our stability
+    // audit checks); the sender-ordered delivery realizes the placement.
+    let (offsets, totals) = crate::primitives::prefix::prefix_direct(ctx, &counts, "ph4:prefix");
+    debug_assert_eq!(offsets.len(), p);
+    let _expected_recv = totals[pid];
+
+    // --- Ph5: one-round key routing -----------------------------------
+    ctx.phase(PH5);
+    let mut slices: Vec<Payload> = Vec::with_capacity(p);
+    for i in 0..p {
+        slices.push(Payload::Keys(keys[cuts[i]..cuts[i + 1]].to_vec()));
+    }
+    ctx.charge(ops::linear_charge(n_local)); // slice copy-out
+    let inbox = ctx.all_to_all(slices, "ph5:route");
+
+    // --- Ph6: stable multi-way merge ----------------------------------
+    ctx.phase(PH6);
+    let runs: Vec<Vec<i32>> = inbox
+        .into_iter()
+        .map(|(_, payload)| payload.into_keys())
+        .filter(|r| !r.is_empty())
+        .collect();
+    let received: usize = runs.iter().map(|r| r.len()).sum();
+    debug_assert_eq!(received as u64, totals[pid] , "prefix totals must match received keys");
+    ctx.charge(ops::merge_charge(received, runs.len().max(2)));
+    let merged = crate::seq::multiway_merge(&runs);
+
+    // --- Ph7 ----------------------------------------------------------
+    ctx.phase(PH7);
+    ctx.sync("ph7:done");
+
+    ProcResult {
+        keys: merged,
+        received,
+        runs: runs.len(),
+    }
+}
+
+/// Evenly spaced sample of a *sorted* local run (step 4 of SORT_DET_BSP):
+/// `s−1` boundary keys of `s` equal segments plus the local maximum, as
+/// tagged records.  Padding semantics: segment size is
+/// `x = ⌈⌈n/p⌉/s⌉`; positions past the end read the local maximum with
+/// their (virtual) padded index as the tag, keeping tags distinct.
+pub fn regular_sample(keys: &[i32], pid: usize, s: usize) -> Vec<SampleRec> {
+    debug_assert!(s >= 1);
+    let n = keys.len();
+    if n == 0 {
+        return vec![SampleRec::new(i32::MAX, pid, 0); s];
+    }
+    let x = n.div_ceil(s).max(1);
+    let mut out = Vec::with_capacity(s);
+    for j in 1..s {
+        let idx = j * x - 1;
+        if idx < n {
+            out.push(SampleRec::new(keys[idx], pid, idx));
+        } else {
+            // Padded position: key = local max, tag keeps the virtual
+            // index so records stay distinct under the tagged order.
+            out.push(SampleRec::new(keys[n - 1], pid, idx));
+        }
+    }
+    // Append the maximum of the local run (paper step 4).
+    out.push(SampleRec::new(keys[n - 1], pid, s * x - 1));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn regular_sample_even_spacing() {
+        let keys: Vec<i32> = (0..100).collect();
+        let sample = regular_sample(&keys, 2, 10);
+        assert_eq!(sample.len(), 10);
+        // x = 10; boundaries at indices 9, 19, ..., 89; then max.
+        let expect: Vec<i32> = (1..10).map(|j| (j * 10 - 1) as i32).chain([99]).collect();
+        let got: Vec<i32> = sample.iter().map(|r| r.key).collect();
+        assert_eq!(got, expect);
+        assert!(sample.iter().all(|r| r.proc == 2));
+    }
+
+    #[test]
+    fn regular_sample_short_input_pads_with_max() {
+        let keys = vec![5, 9];
+        let sample = regular_sample(&keys, 0, 4);
+        assert_eq!(sample.len(), 4);
+        assert_eq!(sample.last().unwrap().key, 9);
+        // All padded positions carry the max key.
+        assert!(sample.iter().skip(1).all(|r| r.key == 9));
+        // Tags stay strictly increasing (distinctness).
+        assert!(sample.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn regular_sample_is_sorted_under_tag_order() {
+        let keys = vec![3; 64];
+        let sample = regular_sample(&keys, 1, 8);
+        assert!(sample.windows(2).all(|w| w[0] < w[1]));
+    }
+}

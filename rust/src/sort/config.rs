@@ -1,0 +1,128 @@
+//! Algorithm configuration: sequential backend, oversampling, duplicate
+//! policy, and sample-sort method — the knobs §6.1/§6.2 describe.
+
+use crate::seq::SeqSortKind;
+
+/// Transparent duplicate handling (§5.1.1) on or off.
+///
+/// `Off` reproduces the ablation of §6.4 ("Had we disabled the code for
+/// handling duplicate keys..."): splitters are compared by key only, so
+/// duplicate-heavy inputs may imbalance, but the 3–6 % tagging overhead
+/// disappears.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum DuplicatePolicy {
+    #[default]
+    Tagged,
+    Off,
+}
+
+/// How the sample gets sorted in step 5.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum SampleSortMethod {
+    /// Parallel Batcher bitonic sort ([BSI]) — the paper's choice.
+    #[default]
+    Bitonic,
+    /// Ship the sample to processor 0 and sort sequentially
+    /// (SORT_RAN_BSP's shape; also the right choice for tiny samples).
+    Sequential,
+}
+
+/// Oversampling configuration.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Oversampling {
+    /// Deterministic regular oversampling with ω_n = lg lg n (§6.1:
+    /// total sample p²⌈ω⌉).
+    DetDefault,
+    /// Randomized with ω_n² = lg n (§6.1: total sample 2pω² lg n).
+    RanDefault,
+    /// Explicit ω_n override (both algorithms accept it).
+    Omega(f64),
+}
+
+impl Oversampling {
+    /// Resolve ω_n for input size n.
+    pub fn omega(&self, n: usize) -> f64 {
+        let lgn = crate::util::lg(n as f64).max(1.0);
+        match self {
+            Oversampling::DetDefault => lgn.log2().max(1.0), // lg lg n
+            Oversampling::RanDefault => lgn.sqrt().max(1.0), // ω² = lg n
+            Oversampling::Omega(w) => w.max(1.0),
+        }
+    }
+}
+
+/// Full configuration of a sorting run.
+#[derive(Clone, Copy, Debug)]
+pub struct SortConfig {
+    pub seq: SeqSortKind,
+    pub dup: DuplicatePolicy,
+    pub sample_sort: SampleSortMethod,
+    pub oversampling: Option<Oversampling>,
+}
+
+impl Default for SortConfig {
+    fn default() -> Self {
+        SortConfig {
+            seq: SeqSortKind::Quick,
+            dup: DuplicatePolicy::Tagged,
+            sample_sort: SampleSortMethod::Bitonic,
+            oversampling: None,
+        }
+    }
+}
+
+impl SortConfig {
+    pub fn with_seq(mut self, seq: SeqSortKind) -> Self {
+        self.seq = seq;
+        self
+    }
+
+    pub fn with_dup(mut self, dup: DuplicatePolicy) -> Self {
+        self.dup = dup;
+        self
+    }
+
+    pub fn with_sample_sort(mut self, m: SampleSortMethod) -> Self {
+        self.sample_sort = m;
+        self
+    }
+
+    pub fn with_omega(mut self, w: f64) -> Self {
+        self.oversampling = Some(Oversampling::Omega(w));
+        self
+    }
+
+    /// Variant name in the paper's notation: [DSQ], [DSR], [RSQ], [RSR].
+    pub fn variant_name(&self, deterministic: bool) -> String {
+        format!(
+            "[{}S{}]",
+            if deterministic { 'D' } else { 'R' },
+            self.seq.suffix()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn omega_defaults_match_paper() {
+        // n = 2^23 = 8M: lg n = 23, lg lg n ≈ 4.52, sqrt(lg n) ≈ 4.80.
+        let n = 1usize << 23;
+        let det = Oversampling::DetDefault.omega(n);
+        assert!((det - 23.0f64.log2()).abs() < 1e-9);
+        let ran = Oversampling::RanDefault.omega(n);
+        assert!((ran - 23.0f64.sqrt()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn variant_names() {
+        let cfg = SortConfig::default();
+        assert_eq!(cfg.variant_name(true), "[DSQ]");
+        assert_eq!(
+            cfg.with_seq(SeqSortKind::Radix).variant_name(false),
+            "[RSR]"
+        );
+    }
+}

@@ -1,0 +1,227 @@
+//! SORT_DET_BSP (Figure 1): one-optimal deterministic BSP sorting by
+//! *regular oversampling* [22, 27, 28].
+//!
+//! Per processor: local sort (Ph2); form a regular sample of
+//! `s = ⌈ω_n⌉·p` tagged records (Ph3, §5.1.1 tags); parallel bitonic
+//! sample sort and splitter broadcast (steps 5–7); partition + prefix
+//! (Ph4); one-round routing (Ph5); stable p-way merge (Ph6).
+//!
+//! Lemma 5.1 bounds the received keys per processor by
+//! `(1 + 1/⌈ω⌉)·n/p + ⌈ω⌉·p` — the invariant our integration tests
+//! check for every benchmark distribution.
+
+use crate::bsp::engine::BspCtx;
+use crate::bsp::params::BspParams;
+use crate::seq::{SeqSorter, SeqSortKind, QuickSorter, RadixSorter};
+
+use super::common::{self, ProcResult, PH2, PH3};
+use super::config::{Oversampling, SortConfig};
+
+/// ω_n for the deterministic algorithm: the paper's experiments use
+/// `ω_n = lg lg n` (§6.1), overridable via the config.
+pub fn omega_det(cfg: &SortConfig, n_total: usize) -> f64 {
+    cfg.oversampling.unwrap_or(Oversampling::DetDefault).omega(n_total)
+}
+
+/// Lemma 5.1 bound on keys per processor after routing.
+pub fn nmax_bound(n_total: usize, p: usize, omega: f64) -> f64 {
+    let r = omega.ceil().max(1.0);
+    (1.0 + 1.0 / r) * (n_total as f64 / p as f64) + r * p as f64
+}
+
+/// Run SORT_DET_BSP on this processor's share `local` of the input.
+///
+/// SPMD: every processor calls this inside `BspMachine::run`.  `n_total`
+/// is the global input size (known to all, as in the paper).  Returns
+/// this processor's chunk of the global sorted order plus routing stats.
+pub fn sort_det_bsp(
+    ctx: &mut BspCtx,
+    params: &BspParams,
+    mut local: Vec<i32>,
+    n_total: usize,
+    cfg: &SortConfig,
+) -> ProcResult {
+    let sorter: Box<dyn SeqSorter> = match cfg.seq {
+        SeqSortKind::Quick => Box::new(QuickSorter),
+        SeqSortKind::Radix => Box::new(RadixSorter),
+        SeqSortKind::Xla => panic!("use sort_det_bsp_with for a custom backend"),
+    };
+    sort_det_bsp_with(ctx, params, &mut local, n_total, cfg, sorter.as_ref())
+}
+
+/// As [`sort_det_bsp`] but with an explicit sequential backend (used by
+/// the XLA-backed variant and by tests injecting instrumented sorters).
+pub fn sort_det_bsp_with(
+    ctx: &mut BspCtx,
+    params: &BspParams,
+    local: &mut Vec<i32>,
+    n_total: usize,
+    cfg: &SortConfig,
+    sorter: &dyn SeqSorter,
+) -> ProcResult {
+    let p = ctx.nprocs();
+
+    // --- Ph2: local sort ----------------------------------------------
+    ctx.phase(PH2);
+    ctx.charge(sorter.charge(local.len()));
+    let mut keys = std::mem::take(local);
+    sorter.sort(&mut keys);
+
+    // --- Ph3: regular oversampling + parallel sample sort --------------
+    ctx.phase(PH3);
+    let omega = omega_det(cfg, n_total);
+    let r = omega.ceil().max(1.0) as usize;
+    let s = r * p;
+    let sample = common::regular_sample(&keys, ctx.pid(), s);
+    ctx.charge(s as f64); // sample formation is O(s)
+    let splitters =
+        common::sample_sort_and_splitters(ctx, params, sample, cfg.sample_sort, "ph3");
+
+    // --- Ph4..Ph7: shared pipeline --------------------------------------
+    common::partition_route_merge(ctx, keys, &splitters, cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bsp::engine::BspMachine;
+    use crate::bsp::params::cray_t3d;
+    use crate::gen::{generate_for_proc, Benchmark, ALL_BENCHMARKS};
+
+    fn run_det(p: usize, n_total: usize, bench: Benchmark, cfg: SortConfig) -> (Vec<Vec<i32>>, Vec<ProcResult>) {
+        let params = cray_t3d(p);
+        let machine = BspMachine::new(params);
+        let run = machine.run(|ctx| {
+            let local = generate_for_proc(bench, ctx.pid(), p, n_total / p);
+            let input = local.clone();
+            let out = sort_det_bsp(ctx, &params, local, n_total, &cfg);
+            (input, out)
+        });
+        let inputs = run.outputs.iter().map(|(i, _)| i.clone()).collect();
+        let results = run.outputs.into_iter().map(|(_, r)| r).collect();
+        (inputs, results)
+    }
+
+    fn assert_sorted_permutation(inputs: &[Vec<i32>], results: &[ProcResult]) {
+        let mut expect: Vec<i32> = inputs.iter().flatten().copied().collect();
+        expect.sort_unstable();
+        let got: Vec<i32> = results.iter().flat_map(|r| r.keys.clone()).collect();
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn sorts_uniform_various_p() {
+        for p in [1usize, 2, 4, 8] {
+            let (inputs, results) =
+                run_det(p, 1 << 12, Benchmark::Uniform, SortConfig::default());
+            assert_sorted_permutation(&inputs, &results);
+        }
+    }
+
+    #[test]
+    fn sorts_every_benchmark() {
+        for bench in ALL_BENCHMARKS {
+            let (inputs, results) = run_det(4, 1 << 12, bench, SortConfig::default());
+            assert_sorted_permutation(&inputs, &results);
+        }
+    }
+
+    #[test]
+    fn radix_variant_sorts() {
+        let cfg = SortConfig::default().with_seq(SeqSortKind::Radix);
+        let (inputs, results) = run_det(8, 1 << 13, Benchmark::Staggered, cfg);
+        assert_sorted_permutation(&inputs, &results);
+    }
+
+    #[test]
+    fn imbalance_respects_lemma_5_1() {
+        for bench in ALL_BENCHMARKS {
+            let p = 8usize;
+            let n = 1 << 14;
+            let cfg = SortConfig::default();
+            let (_, results) = run_det(p, n, bench, cfg);
+            let omega = omega_det(&cfg, n);
+            let bound = nmax_bound(n, p, omega);
+            for (pid, r) in results.iter().enumerate() {
+                assert!(
+                    (r.received as f64) <= bound + 1.0,
+                    "{} pid={pid}: received {} > bound {bound}",
+                    bench.tag(),
+                    r.received
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn all_equal_keys_stay_balanced() {
+        // The §5.1.1 headline: optimal performance even if all keys are
+        // the same.  Without tags every key would land on one processor.
+        let p = 8usize;
+        let n = 1 << 13;
+        let params = cray_t3d(p);
+        let machine = BspMachine::new(params);
+        let cfg = SortConfig::default();
+        let run = machine.run(|ctx| {
+            let local = vec![7i32; n / p];
+            sort_det_bsp(ctx, &params, local, n, &cfg)
+        });
+        let bound = nmax_bound(n, p, omega_det(&cfg, n));
+        for (pid, r) in run.outputs.iter().enumerate() {
+            assert_eq!(r.keys, vec![7i32; r.keys.len()]);
+            assert!(
+                (r.received as f64) <= bound + 1.0,
+                "pid={pid} received={} bound={bound}",
+                r.received
+            );
+            assert!(r.received > 0, "pid={pid} starved");
+        }
+    }
+
+    #[test]
+    fn duplicate_policy_off_degrades_on_all_equal() {
+        use super::super::config::DuplicatePolicy;
+        let p = 4usize;
+        let n = 1 << 10;
+        let params = cray_t3d(p);
+        let machine = BspMachine::new(params);
+        let cfg = SortConfig::default().with_dup(DuplicatePolicy::Off);
+        let run = machine.run(|ctx| {
+            let local = vec![7i32; n / p];
+            sort_det_bsp(ctx, &params, local, n, &cfg)
+        });
+        // Still sorted overall...
+        let total: usize = run.outputs.iter().map(|r| r.keys.len()).sum();
+        assert_eq!(total, n);
+        // ...but maximally imbalanced: one processor got everything.
+        let max_recv = run.outputs.iter().map(|r| r.received).max().unwrap();
+        assert_eq!(max_recv, n, "without tags all equal keys collapse onto one processor");
+    }
+
+    #[test]
+    fn sequential_sample_sort_also_works() {
+        use super::super::config::SampleSortMethod;
+        let cfg = SortConfig::default().with_sample_sort(SampleSortMethod::Sequential);
+        let (inputs, results) = run_det(4, 1 << 12, Benchmark::Gaussian, cfg);
+        assert_sorted_permutation(&inputs, &results);
+    }
+
+    #[test]
+    fn phase_ledger_contains_paper_phases() {
+        let p = 4;
+        let params = cray_t3d(p);
+        let machine = BspMachine::new(params);
+        let cfg = SortConfig::default();
+        let run = machine.run(|ctx| {
+            let local = generate_for_proc(Benchmark::Uniform, ctx.pid(), p, 1 << 10);
+            sort_det_bsp(ctx, &params, local, 4 << 10, &cfg)
+        });
+        for ph in [PH2, PH3, "Ph4:Prefix", "Ph5:Routing", "Ph6:Merging"] {
+            assert!(
+                run.ledger.phases.contains_key(ph),
+                "missing phase {ph}: {:?}",
+                run.ledger.phases.keys().collect::<Vec<_>>()
+            );
+        }
+    }
+}

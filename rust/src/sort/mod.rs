@@ -1,0 +1,56 @@
+//! The paper's sorting algorithms (§5) and their configuration.
+//!
+//! * [`det`] — SORT_DET_BSP: deterministic regular oversampling (Fig. 1),
+//! * [`det_iterative`] — the multi-round general algorithm of [28] (§5.1),
+//! * [`iran`] — SORT_IRAN_BSP: the improved randomized algorithm (Fig. 3),
+//! * [`ran`] — SORT_RAN_BSP: classic randomized sample-sort (Fig. 2),
+//! * [`bsi`] — full Batcher bitonic sort ([BSI], §6.2 item 3),
+//! * [`common`] — the shared sample-sort/partition/route/merge pipeline
+//!   and the §5.1.1 tagged sampling,
+//! * [`config`] — variant knobs ([DSQ]/[DSR]/[RSQ]/[RSR], duplicate
+//!   policy ablation, ω overrides, sample-sort method).
+
+pub mod bsi;
+pub mod common;
+pub mod det_iterative;
+pub mod config;
+pub mod det;
+pub mod iran;
+pub mod ran;
+
+pub use common::ProcResult;
+pub use config::{DuplicatePolicy, Oversampling, SampleSortMethod, SortConfig};
+
+/// Which top-level algorithm to run (CLI / tables dispatch).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Algorithm {
+    /// SORT_DET_BSP.
+    Det,
+    /// SORT_IRAN_BSP.
+    Iran,
+    /// SORT_RAN_BSP (baseline).
+    Ran,
+    /// Full bitonic sort [BSI] (baseline).
+    Bsi,
+}
+
+impl Algorithm {
+    pub fn parse(s: &str) -> Option<Algorithm> {
+        match s.to_ascii_lowercase().as_str() {
+            "det" | "sort_det_bsp" | "d" => Some(Algorithm::Det),
+            "iran" | "sort_iran_bsp" | "r" => Some(Algorithm::Iran),
+            "ran" | "sort_ran_bsp" => Some(Algorithm::Ran),
+            "bsi" | "bitonic" => Some(Algorithm::Bsi),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algorithm::Det => "SORT_DET_BSP",
+            Algorithm::Iran => "SORT_IRAN_BSP",
+            Algorithm::Ran => "SORT_RAN_BSP",
+            Algorithm::Bsi => "BSI",
+        }
+    }
+}

@@ -1,0 +1,197 @@
+//! SORT_RAN_BSP (Figure 2): the classic randomized sample-sort of [21],
+//! kept as a *design baseline* (the paper implements SORT_IRAN_BSP
+//! instead, §5.2, because of this algorithm's two weaknesses):
+//!
+//! 1. step 9's set formation is an integer sort with a significant
+//!    constant `D` (every key is binary-searched into the splitters and
+//!    copied into its destination bucket);
+//! 2. step 12 local sorting runs on `(1 + 1/ω)·n/p` keys — *after* the
+//!    imbalanced routing — instead of exactly `n/p` before it.
+//!
+//! Pattern: sample → splitters (sequentially, at processor 0) → route →
+//! local sort.  Tags are per-key implicit `(pid, original index)`; sample
+//! records carry them so duplicate-heavy inputs still split evenly.
+
+use crate::bsp::engine::BspCtx;
+use crate::bsp::msg::{Payload, SampleRec};
+use crate::bsp::params::BspParams;
+use crate::primitives::broadcast;
+use crate::seq::{ops, QuickSorter, RadixSorter, SeqSortKind, SeqSorter};
+use crate::util::rng::SplitMix64;
+
+use super::common::{ProcResult, PH3, PH5, PH6, PH7};
+use super::config::SortConfig;
+use super::iran::{omega_ran, sample_share};
+
+/// Run SORT_RAN_BSP on this processor's share of the input.
+pub fn sort_ran_bsp(
+    ctx: &mut BspCtx,
+    params: &BspParams,
+    local: Vec<i32>,
+    n_total: usize,
+    cfg: &SortConfig,
+    seed: u64,
+) -> ProcResult {
+    let p = ctx.nprocs();
+    let pid = ctx.pid();
+    let sorter: Box<dyn SeqSorter> = match cfg.seq {
+        SeqSortKind::Quick => Box::new(QuickSorter),
+        SeqSortKind::Radix => Box::new(RadixSorter),
+        SeqSortKind::Xla => panic!("SORT_RAN_BSP supports Quick/Radix backends"),
+    };
+
+    if p == 1 {
+        let mut keys = local;
+        ctx.phase(PH6);
+        ctx.charge(sorter.charge(keys.len()));
+        sorter.sort(&mut keys);
+        return ProcResult { received: keys.len(), runs: 1, keys };
+    }
+
+    // --- Ph3: random sample, gathered and sorted at processor 0 --------
+    ctx.phase(PH3);
+    let omega = omega_ran(cfg, n_total);
+    let share = sample_share(n_total, p, omega).min(local.len().max(1));
+    let mut rng = SplitMix64::new(seed ^ ((pid as u64) << 20).wrapping_add(0x5A5A));
+    let sample: Vec<SampleRec> = if local.is_empty() {
+        vec![SampleRec::new(i32::MAX, pid, 0)]
+    } else {
+        rng.sample_indices(local.len(), share)
+            .into_iter()
+            .map(|i| SampleRec::new(local[i], pid, i))
+            .collect()
+    };
+    ctx.charge(share as f64);
+    ctx.send(0, Payload::Recs(sample));
+    ctx.sync("ph3:gather-sample");
+    let splitters = if pid == 0 {
+        let mut all: Vec<SampleRec> = ctx
+            .take_inbox()
+            .into_iter()
+            .flat_map(|(_, payload)| payload.into_recs())
+            .collect();
+        ctx.charge(ops::sort_charge(all.len()));
+        all.sort();
+        let seg = (all.len() / p).max(1);
+        (1..p).map(|i| all[(i * seg - 1).min(all.len() - 1)]).collect()
+    } else {
+        ctx.take_inbox();
+        Vec::new()
+    };
+    let splitters = broadcast::broadcast_recs(ctx, params, 0, splitters, p - 1, "ph3:bcast");
+
+    // --- step 9: bucket formation (the costly integer-sort step) -------
+    ctx.phase(PH5);
+    // Each key binary-searches the splitter set: (n/p)(lg p + 1) charges,
+    // plus the D·n/p copy into buckets (D charged as 2: count + copy).
+    let mut buckets: Vec<Vec<i32>> = vec![Vec::new(); p];
+    for (i, &k) in local.iter().enumerate() {
+        let dst = splitter_rank(&splitters, k, pid, i);
+        buckets[dst].push(k);
+    }
+    ctx.charge(local.len() as f64 * (ops::bsearch_charge(p) + 1.0 + 2.0));
+
+    // --- step 11: routing ----------------------------------------------
+    let parts: Vec<Payload> = buckets.into_iter().map(Payload::Keys).collect();
+    let inbox = ctx.all_to_all(parts, "ph5:route");
+
+    // --- step 12: local sort of everything received ---------------------
+    ctx.phase(PH6);
+    let mut keys: Vec<i32> = Vec::new();
+    let mut runs = 0usize;
+    for (_, payload) in inbox {
+        let ks = payload.into_keys();
+        if !ks.is_empty() {
+            runs += 1;
+        }
+        keys.extend_from_slice(&ks);
+    }
+    let received = keys.len();
+    ctx.charge(sorter.charge(received));
+    sorter.sort(&mut keys);
+
+    ctx.phase(PH7);
+    ctx.sync("ph7:done");
+
+    ProcResult { keys, received, runs }
+}
+
+/// Destination bucket of key `k` (owned by `pid` at index `i`) among the
+/// tagged splitters: the first splitter that the tagged key orders
+/// before; ties use the §5.1.1 compound order.
+fn splitter_rank(splitters: &[SampleRec], k: i32, pid: usize, i: usize) -> usize {
+    let me = (k, pid as u32, i as u32);
+    let mut lo = 0usize;
+    let mut hi = splitters.len();
+    while lo < hi {
+        let mid = lo + (hi - lo) / 2;
+        let s = &splitters[mid];
+        if (s.key, s.proc, s.idx) <= me {
+            lo = mid + 1;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bsp::engine::BspMachine;
+    use crate::bsp::params::cray_t3d;
+    use crate::gen::{generate_for_proc, Benchmark, ALL_BENCHMARKS};
+
+    fn run_ran(p: usize, n_total: usize, bench: Benchmark, seed: u64) -> (Vec<Vec<i32>>, Vec<ProcResult>) {
+        let params = cray_t3d(p);
+        let machine = BspMachine::new(params);
+        let cfg = SortConfig::default();
+        let run = machine.run(|ctx| {
+            let local = generate_for_proc(bench, ctx.pid(), p, n_total / p);
+            let input = local.clone();
+            let out = sort_ran_bsp(ctx, &params, local, n_total, &cfg, seed);
+            (input, out)
+        });
+        let inputs = run.outputs.iter().map(|(i, _)| i.clone()).collect();
+        let results = run.outputs.into_iter().map(|(_, r)| r).collect();
+        (inputs, results)
+    }
+
+    #[test]
+    fn sorts_every_benchmark() {
+        for bench in ALL_BENCHMARKS {
+            let (inputs, results) = run_ran(4, 1 << 12, bench, 11);
+            let mut expect: Vec<i32> = inputs.iter().flatten().copied().collect();
+            expect.sort_unstable();
+            let got: Vec<i32> = results.iter().flat_map(|r| r.keys.clone()).collect();
+            assert_eq!(got, expect, "{}", bench.tag());
+        }
+    }
+
+    #[test]
+    fn sorts_p1_and_p2() {
+        for p in [1usize, 2] {
+            let (inputs, results) = run_ran(p, 1 << 10, Benchmark::Uniform, 3);
+            let mut expect: Vec<i32> = inputs.iter().flatten().copied().collect();
+            expect.sort_unstable();
+            let got: Vec<i32> = results.iter().flat_map(|r| r.keys.clone()).collect();
+            assert_eq!(got, expect);
+        }
+    }
+
+    #[test]
+    fn all_equal_keys_balanced_via_tags() {
+        let p = 8usize;
+        let n = 1 << 13;
+        let params = cray_t3d(p);
+        let machine = BspMachine::new(params);
+        let cfg = SortConfig::default();
+        let run = machine.run(|ctx| {
+            let local = vec![1i32; n / p];
+            sort_ran_bsp(ctx, &params, local, n, &cfg, 13)
+        });
+        let max_recv = run.outputs.iter().map(|r| r.received).max().unwrap();
+        // With per-key implicit tags the all-equal input still spreads.
+        assert!(max_recv < n / 2, "max_recv={max_recv}");
+    }
+}

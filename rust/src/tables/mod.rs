@@ -1,0 +1,172 @@
+//! Regeneration harness for the paper's Tables 1–11 (DESIGN.md §5).
+//!
+//! Every table has a `table_N(&TableOpts) -> TableOutput` that runs the
+//! exact algorithm × benchmark × (p, n) grid of the paper, prints rows in
+//! the paper's layout, and reports the *predicted T3D seconds* (the BSP
+//! cost ledger priced with the paper's `(p, L, g)`) as the primary
+//! number — measured host wall-clock is shown alongside as a sanity
+//! column where the layout permits.
+//!
+//! Paper sizes go up to 64M keys on 128 processors; on a small host the
+//! default grid caps n at [`TableOpts::default`]'s `max_n` (override with
+//! `--full` / `--max-n`).  Skipped rows are *printed as skipped*, never
+//! silently dropped.
+
+pub mod runner;
+pub mod t1_t2;
+pub mod t3_t9_t10_t11;
+pub mod t4_t7;
+pub mod t8;
+pub mod validate;
+
+use crate::util::fmt_secs;
+
+pub const MEG: usize = 1024 * 1024; // the paper's 1M = 1024×1024
+
+/// Options shared by all tables.
+#[derive(Clone, Debug)]
+pub struct TableOpts {
+    /// Largest total input size to actually run (larger rows -> skipped).
+    pub max_n: usize,
+    /// Largest processor count to actually run.
+    pub max_p: usize,
+    /// Seed for randomized variants.
+    pub seed: u64,
+    /// Repetitions averaged per cell (paper: ≥ 4).
+    pub reps: usize,
+}
+
+impl Default for TableOpts {
+    fn default() -> Self {
+        TableOpts {
+            max_n: 8 * MEG,
+            max_p: 128,
+            seed: 0x0BEE,
+            reps: 1,
+        }
+    }
+}
+
+impl TableOpts {
+    pub fn full() -> Self {
+        TableOpts {
+            max_n: 64 * MEG,
+            max_p: 128,
+            seed: 0x0BEE,
+            reps: 1,
+        }
+    }
+}
+
+/// A rendered table: a title, column headers and string rows, plus the
+/// raw cell data for tests and EXPERIMENTS.md extraction.
+#[derive(Clone, Debug, Default)]
+pub struct TableOutput {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+    /// (row-key, col-key) -> predicted seconds, for programmatic checks.
+    pub cells: Vec<((String, String), f64)>,
+}
+
+impl TableOutput {
+    pub fn cell(&self, row: &str, col: &str) -> Option<f64> {
+        self.cells
+            .iter()
+            .find(|((r, c), _)| r == row && c == col)
+            .map(|(_, v)| *v)
+    }
+
+    /// Render as an aligned text table.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                if i >= widths.len() {
+                    widths.push(cell.len());
+                } else {
+                    widths[i] = widths[i].max(cell.len());
+                }
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths.get(i).copied().unwrap_or(8)))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format a size as the paper does: "1M", "4M", ... (M = 1024²).
+pub fn fmt_size(n: usize) -> String {
+    if n % MEG == 0 {
+        format!("{}M", n / MEG)
+    } else if n >= 1024 && n % 1024 == 0 {
+        format!("{}K", n / 1024)
+    } else {
+        format!("{n}")
+    }
+}
+
+/// Seconds cell or "-" for skipped rows.
+pub fn cell_secs(v: Option<f64>) -> String {
+    v.map(fmt_secs).unwrap_or_else(|| "-".into())
+}
+
+/// Dispatch by table number (CLI entry).
+pub fn run_table(num: usize, opts: &TableOpts) -> Option<TableOutput> {
+    match num {
+        1 => Some(t1_t2::table1(opts)),
+        2 => Some(t1_t2::table2(opts)),
+        3 => Some(t3_t9_t10_t11::table3(opts)),
+        4 => Some(t4_t7::table(opts, t4_t7::PhaseTable::Rsr)),
+        5 => Some(t4_t7::table(opts, t4_t7::PhaseTable::Rsq)),
+        6 => Some(t4_t7::table(opts, t4_t7::PhaseTable::Dsr)),
+        7 => Some(t4_t7::table(opts, t4_t7::PhaseTable::Dsq)),
+        8 => Some(t8::table8(opts)),
+        9 => Some(t3_t9_t10_t11::table9(opts)),
+        10 => Some(t3_t9_t10_t11::table10(opts)),
+        11 => Some(t3_t9_t10_t11::table11(opts)),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_size_paper_style() {
+        assert_eq!(fmt_size(MEG), "1M");
+        assert_eq!(fmt_size(8 * MEG), "8M");
+        assert_eq!(fmt_size(2048), "2K");
+        assert_eq!(fmt_size(100), "100");
+    }
+
+    #[test]
+    fn render_aligns_columns() {
+        let t = TableOutput {
+            title: "T".into(),
+            header: vec!["a".into(), "bbbb".into()],
+            rows: vec![vec!["xx".into(), "1".into()]],
+            cells: vec![],
+        };
+        let s = t.render();
+        assert!(s.contains("== T =="));
+        assert!(s.lines().count() >= 4);
+    }
+}

@@ -1,0 +1,172 @@
+//! Tables 4–7: per-phase scalability of [RSR]/[RSQ]/[DSR]/[DSQ] on input
+//! [U], sizes 8M and 32M, p ∈ {32, 64, 128}: absolute seconds per phase
+//! and percentage of total, phases Ph1–Ph7.
+
+use crate::bsp::engine::BspMachine;
+use crate::bsp::params::cray_t3d;
+use crate::gen::{generate_for_proc, Benchmark};
+use crate::seq::SeqSortKind;
+use crate::sort::common::{PH1, PH2, PH3, PH4, PH5, PH6, PH7};
+use crate::sort::{det, iran, SortConfig};
+
+use super::{fmt_size, TableOpts, TableOutput, MEG};
+
+/// Which of the four phase tables to produce.
+#[derive(Clone, Copy, Debug)]
+pub enum PhaseTable {
+    Rsr,
+    Rsq,
+    Dsr,
+    Dsq,
+}
+
+impl PhaseTable {
+    fn is_det(&self) -> bool {
+        matches!(self, PhaseTable::Dsr | PhaseTable::Dsq)
+    }
+    fn seq(&self) -> SeqSortKind {
+        match self {
+            PhaseTable::Rsr | PhaseTable::Dsr => SeqSortKind::Radix,
+            PhaseTable::Rsq | PhaseTable::Dsq => SeqSortKind::Quick,
+        }
+    }
+    fn name(&self) -> &'static str {
+        match self {
+            PhaseTable::Rsr => "[RSR]",
+            PhaseTable::Rsq => "[RSQ]",
+            PhaseTable::Dsr => "[DSR]",
+            PhaseTable::Dsq => "[DSQ]",
+        }
+    }
+    fn number(&self) -> usize {
+        match self {
+            PhaseTable::Rsr => 4,
+            PhaseTable::Rsq => 5,
+            PhaseTable::Dsr => 6,
+            PhaseTable::Dsq => 7,
+        }
+    }
+}
+
+pub const PHASES: [&str; 7] = [PH1, PH2, PH3, PH4, PH5, PH6, PH7];
+
+/// Per-phase predicted seconds for one (variant, n, p) cell.
+pub fn phase_breakdown(which: PhaseTable, n: usize, p: usize, opts: &TableOpts) -> Vec<f64> {
+    let params = cray_t3d(p);
+    let machine = BspMachine::new(params);
+    let cfg = SortConfig::default().with_seq(which.seq());
+    let seed = opts.seed;
+    let is_det = which.is_det();
+    let run = machine.run(|ctx| {
+        let local = generate_for_proc(Benchmark::Uniform, ctx.pid(), p, n / p);
+        if is_det {
+            det::sort_det_bsp(ctx, &params, local, n, &cfg)
+        } else {
+            iran::sort_iran_bsp(ctx, &params, local, n, &cfg, seed)
+        }
+    });
+    let by_phase = run.ledger.phase_predicted_secs(&params);
+    PHASES
+        .iter()
+        .map(|ph| by_phase.get(*ph).copied().unwrap_or(0.0))
+        .collect()
+}
+
+pub fn table(opts: &TableOpts, which: PhaseTable) -> TableOutput {
+    // Paper sizes 8M and 32M, clamped to the host budget (distinct where
+    // possible: the smaller size halves when both clamp to the cap).
+    let big = super::t3_t9_t10_t11::effective_n(32 * MEG, opts);
+    let small = super::t3_t9_t10_t11::effective_n(8 * MEG, opts);
+    let sizes = if small == big { [big / 4, big] } else { [small, big] };
+    let procs = [32usize, 64, 128];
+    let mut out = TableOutput {
+        title: format!(
+            "Table {}: scalability of phases of {} on [U] (predicted T3D seconds; % of total)",
+            which.number(),
+            which.name()
+        ),
+        ..Default::default()
+    };
+    out.header = std::iter::once("Phase".to_string())
+        .chain(sizes.iter().flat_map(|&n| {
+            procs.iter().map(move |&p| format!("{} p={p}", fmt_size(n)))
+        }))
+        .collect();
+
+    // Gather per-column breakdowns (or None when over budget).
+    let mut cols: Vec<Option<Vec<f64>>> = Vec::new();
+    for &n in &sizes {
+        for &p in &procs {
+            if n > opts.max_n || p > opts.max_p || n % p != 0 {
+                cols.push(None);
+            } else {
+                cols.push(Some(phase_breakdown(which, n, p, opts)));
+            }
+        }
+    }
+
+    let totals: Vec<Option<f64>> = cols
+        .iter()
+        .map(|c| c.as_ref().map(|v| v.iter().sum::<f64>()))
+        .collect();
+
+    for (pi, ph) in PHASES.iter().enumerate() {
+        let mut row = vec![ph.to_string()];
+        for (c, col) in cols.iter().enumerate() {
+            match col {
+                Some(v) => {
+                    let pct = 100.0 * v[pi] / totals[c].unwrap().max(1e-12);
+                    row.push(format!("{:.3} ({:4.1}%)", v[pi], pct));
+                    out.cells.push(((ph.to_string(), out.header[c + 1].clone()), v[pi]));
+                }
+                None => row.push("-".into()),
+            }
+        }
+        out.rows.push(row);
+    }
+    // Total row.
+    let mut row = vec!["Total".to_string()];
+    for (c, t) in totals.iter().enumerate() {
+        match t {
+            Some(v) => {
+                row.push(format!("{v:.3}"));
+                out.cells.push((("Total".to_string(), out.header[c + 1].clone()), *v));
+            }
+            None => row.push("-".into()),
+        }
+    }
+    out.rows.push(row);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase_breakdown_shape_matches_paper() {
+        // Scaled-down: n = 256K, p = 8.  The paper's shape at 8M/32:
+        // Ph2 (SeqSort) dominates (≈55-65 %), Ph6 (Merging) second
+        // (≈30-35 %), Ph5 (Routing) ≈5-8 %.
+        let opts = TableOpts { max_n: MEG, max_p: 8, seed: 3, reps: 1 };
+        let v = phase_breakdown(PhaseTable::Rsr, MEG, 8, &opts);
+        let total: f64 = v.iter().sum();
+        let pct: Vec<f64> = v.iter().map(|x| 100.0 * x / total).collect();
+        // Ph2 dominates:
+        assert!(pct[1] > 35.0, "Ph2={:.1}% of {pct:?}", pct[1]);
+        // Merging is the second-largest sequential phase:
+        assert!(pct[5] > 15.0, "Ph6={:.1}% of {pct:?}", pct[5]);
+        // Sequential work dominates overall (paper: 85-93 % at 8M/32p;
+        // at this scaled size the L floors and sampling take more):
+        assert!(pct[1] + pct[5] > 60.0, "seq={:.1}%", pct[1] + pct[5]);
+    }
+
+    #[test]
+    fn table_renders_with_skips() {
+        let opts = TableOpts { max_n: MEG, max_p: 8, seed: 3, reps: 1 };
+        let out = table(&opts, PhaseTable::Dsq);
+        assert_eq!(out.rows.len(), PHASES.len() + 1);
+        // All paper columns exceed the tiny budget -> skipped.
+        assert!(out.rows[0][1..].iter().all(|c| c == "-"));
+    }
+}

@@ -1,0 +1,126 @@
+//! Table 8: per-phase scalability comparison of [DSR] (on [U]) vs the
+//! two-round deterministic algorithm of [39] (on [WR]): SeqSort, the
+//! extra routing round "PhR", Routing, Merging.
+
+use crate::bsp::engine::BspMachine;
+use crate::bsp::params::cray_t3d;
+use crate::gen::{generate_for_proc, Benchmark};
+use crate::seq::SeqSortKind;
+use crate::sort::common::{PH2, PH5, PH6};
+use crate::sort::{det, SortConfig};
+
+use super::{TableOpts, TableOutput, MEG};
+
+const PROCS: [usize; 3] = [32, 64, 128];
+const PHASE_ROWS: [(&str, &str); 4] = [
+    ("Ph 2", PH2),
+    ("Ph R", "PhR:Transpose"),
+    ("Ph 5", PH5),
+    ("Ph 6", PH6),
+];
+
+fn breakdown_dsr(n: usize, p: usize, opts: &TableOpts) -> std::collections::BTreeMap<String, f64> {
+    let params = cray_t3d(p);
+    let machine = BspMachine::new(params);
+    let cfg = SortConfig::default().with_seq(SeqSortKind::Radix);
+    let _ = opts;
+    let run = machine.run(|ctx| {
+        let local = generate_for_proc(Benchmark::Uniform, ctx.pid(), p, n / p);
+        det::sort_det_bsp(ctx, &params, local, n, &cfg)
+    });
+    run.ledger.phase_predicted_secs(&params)
+}
+
+fn breakdown_helman(n: usize, p: usize, opts: &TableOpts) -> std::collections::BTreeMap<String, f64> {
+    let params = cray_t3d(p);
+    let machine = BspMachine::new(params);
+    let cfg = SortConfig::default().with_seq(SeqSortKind::Radix);
+    let _ = opts;
+    let run = machine.run(|ctx| {
+        let local = generate_for_proc(Benchmark::WorstRegular, ctx.pid(), p, n / p);
+        crate::baselines::sort_helman_det(ctx, &params, local, &cfg)
+    });
+    run.ledger.phase_predicted_secs(&params)
+}
+
+pub fn table8(opts: &TableOpts) -> TableOutput {
+    let n = super::t3_t9_t10_t11::effective_n(8 * MEG, opts);
+    let mut out = TableOutput {
+        title: "Table 8: phase comparison [DSR] on [U] vs [39] on [WR], 8M keys (predicted T3D seconds)".into(),
+        ..Default::default()
+    };
+    out.header = std::iter::once("Phase".to_string())
+        .chain(PROCS.iter().map(|p| format!("[DSR] p={p}")))
+        .chain(PROCS.iter().map(|p| format!("[39] p={p}")))
+        .collect();
+
+    let dsr: Vec<Option<std::collections::BTreeMap<String, f64>>> = PROCS
+        .iter()
+        .map(|&p| {
+            (n <= opts.max_n && p <= opts.max_p).then(|| breakdown_dsr(n, p, opts))
+        })
+        .collect();
+    let helman: Vec<Option<std::collections::BTreeMap<String, f64>>> = PROCS
+        .iter()
+        .map(|&p| {
+            (n <= opts.max_n && p <= opts.max_p).then(|| breakdown_helman(n, p, opts))
+        })
+        .collect();
+
+    for (row_name, phase_key) in PHASE_ROWS {
+        let mut row = vec![row_name.to_string()];
+        for (cols, tag) in [(&dsr, "[DSR]"), (&helman, "[39]")] {
+            for (i, col) in cols.iter().enumerate() {
+                match col {
+                    Some(map) => {
+                        let v = map.get(phase_key).copied().unwrap_or(0.0);
+                        if v > 0.0 || phase_key != "PhR:Transpose" {
+                            row.push(format!("{v:.3}"));
+                        } else {
+                            row.push("-".into());
+                        }
+                        out.cells.push(((row_name.to_string(), format!("{tag} p={}", PROCS[i])), v));
+                    }
+                    None => row.push("-".into()),
+                }
+            }
+        }
+        out.rows.push(row);
+    }
+
+    // Totals.
+    let mut row = vec!["Total".to_string()];
+    for (cols, tag) in [(&dsr, "[DSR]"), (&helman, "[39]")] {
+        for (i, col) in cols.iter().enumerate() {
+            match col {
+                Some(map) => {
+                    let v: f64 = map.values().sum();
+                    row.push(format!("{v:.3}"));
+                    out.cells.push((("Total".to_string(), format!("{tag} p={}", PROCS[i])), v));
+                }
+                None => row.push("-".into()),
+            }
+        }
+    }
+    out.rows.push(row);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn helman_has_extra_round_dsr_does_not() {
+        // Scaled: n = 512K, p = 8 exercises the structure.
+        let opts = TableOpts { max_n: MEG, max_p: 8, seed: 7, reps: 1 };
+        let d = breakdown_dsr(512 * 1024, 8, &opts);
+        let h = breakdown_helman(512 * 1024, 8, &opts);
+        assert!(!d.contains_key("PhR:Transpose"));
+        assert!(h.get("PhR:Transpose").copied().unwrap_or(0.0) > 0.0);
+        // And [39]'s total exceeds [DSR]'s (two tagged rounds).
+        let dt: f64 = d.values().sum();
+        let ht: f64 = h.values().sum();
+        assert!(ht > dt, "helman={ht} dsr={dt}");
+    }
+}

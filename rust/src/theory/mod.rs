@@ -1,0 +1,195 @@
+//! The paper's analytical performance model (DESIGN.md §4.7).
+//!
+//! Closed-form computation/communication times, π, µ and efficiency from
+//! Proposition 5.1 (SORT_DET_BSP) and Proposition 5.3 (SORT_IRAN_BSP),
+//! evaluated under concrete `(n, p, L, g)` — the §6.4 methodology: "based
+//! on the theoretical performance of each algorithm under the BSP model
+//! and the BSP parameters of a Cray T3D, it is possible to estimate the
+//! actual performance of the implementations".
+
+use crate::bsp::params::BspParams;
+use crate::util::lg;
+
+/// The analytic prediction for one algorithm at one configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct Prediction {
+    /// Computation time in comparisons (basic ops).
+    pub comp_ops: f64,
+    /// Communication time in µs (gh + L terms already priced).
+    pub comm_us: f64,
+    /// π = p·C_A / C_A* (computational efficiency ratio).
+    pub pi: f64,
+    /// µ = p·M_A / C_A* (communication impact ratio).
+    pub mu: f64,
+}
+
+impl Prediction {
+    /// Parallel efficiency 1/(π + µ) (§1.1).
+    pub fn efficiency(&self) -> f64 {
+        1.0 / (self.pi + self.mu)
+    }
+
+    /// Speedup p/(π + µ).
+    pub fn speedup(&self, p: usize) -> f64 {
+        p as f64 * self.efficiency()
+    }
+
+    /// Total predicted seconds on the machine.
+    pub fn total_secs(&self, params: &BspParams) -> f64 {
+        (params.comp_us(self.comp_ops) + self.comm_us) / 1e6
+    }
+}
+
+/// The best sequential comparison sort charge: `n lg n` (§1.1).
+pub fn seq_charge(n: usize) -> f64 {
+    n as f64 * lg(n as f64)
+}
+
+/// Proposition 5.1 — SORT_DET_BSP with ω_n (⌈ω⌉ = r):
+///
+/// computation `(n/p)lg(n/p) + n_max·lg p + O(p + ω p lg²p)`,
+/// communication `g·n_max + L·lg²p/2 + O(L + g·ω p lg²p)`,
+/// `n_max = (1 + 1/⌈ω⌉)n/p + ⌈ω⌉p`.
+pub fn predict_det(n: usize, params: &BspParams, omega: f64) -> Prediction {
+    let p = params.p as f64;
+    let nf = n as f64;
+    let np = nf / p;
+    let r = omega.ceil().max(1.0);
+    let lgp = lg(p).max(1.0);
+    let n_max = (1.0 + 1.0 / r) * np + r * p;
+
+    // Computation: local sort + multiway merge + lower-order terms
+    // (sample formation r·p, bitonic sample sort 2s(lg²p+lgp)/2 with
+    // s = r·p, splitter search p·lg(n/p)).
+    let s = r * p;
+    let comp = np * lg(np)
+        + n_max * lgp
+        + s * (lgp * lgp + lgp)
+        + p * lg(np).max(1.0)
+        + p;
+
+    // Communication: routing g·n_max, bitonic sample sort
+    // (lg²p+lgp)/2 supersteps of (L + g·s), splitter broadcast, prefix.
+    let bitonic_steps = (lgp * lgp + lgp) / 2.0;
+    let comm_us = params.comm_us(n_max as u64)
+        + bitonic_steps * (params.l_us + params.comm_us(s as u64 * 3))
+        + 2.0 * params.l_us // splitter gather + broadcast
+        + 2.0 * params.l_us; // prefix gather + scatter
+
+    let c_seq = seq_charge(n);
+    let pi = p * comp / c_seq;
+    let mu = p * (comm_us * params.comps_per_us) / c_seq;
+    Prediction { comp_ops: comp, comm_us, pi, mu }
+}
+
+/// Proposition 5.3 — SORT_IRAN_BSP with ω_n (s = 2ω²lg n):
+///
+/// computation `(n/p)lg(n/p) + (1+1/ω)(n/p)lg p + 2ω²lg n lg²p + O(...)`,
+/// communication `(1+1/ω)g·n/p + g·ω²lg n·lg²p + L·lg²p/2 + O(...)`.
+pub fn predict_iran(n: usize, params: &BspParams, omega: f64) -> Prediction {
+    let p = params.p as f64;
+    let nf = n as f64;
+    let np = nf / p;
+    let lgn = lg(nf).max(1.0);
+    let lgp = lg(p).max(1.0);
+    let w = omega.max(1.0);
+
+    let s = 2.0 * w * w * lgn; // per-processor oversampling factor (§6.1)
+    let comp = np * lg(np)
+        + (1.0 + 1.0 / w) * np * lgp // multi-way merge of n_max keys
+        + s * lgp * lgp // parallel (Batcher) sample sorting: 2ω²lg n·lg²p
+        + p * lg(np).max(1.0);
+
+    let bitonic_steps = (lgp * lgp + lgp) / 2.0;
+    let comm_us = params.comm_us(((1.0 + 1.0 / w) * np) as u64)
+        + bitonic_steps * (params.l_us + params.comm_us(s as u64 * 3))
+        + 2.0 * params.l_us
+        + 2.0 * params.l_us;
+
+    let c_seq = seq_charge(n);
+    let pi = p * comp / c_seq;
+    let mu = p * (comm_us * params.comps_per_us) / c_seq;
+    Prediction { comp_ops: comp, comm_us, pi, mu }
+}
+
+/// Validity ranges: the conditions of Props 5.1/5.3.
+pub fn det_conditions_hold(n: usize, p: usize, omega: f64) -> bool {
+    // p²ω² ≤ n / lg n and ω = O(lg n).
+    let nf = n as f64;
+    (p * p) as f64 * omega * omega <= nf / lg(nf).max(1.0) && omega <= lg(nf)
+}
+
+pub fn iran_conditions_hold(n: usize, p: usize, omega: f64) -> bool {
+    // 2pω²lg n < n/2 and p² ≤ n/(ω lg n).
+    let nf = n as f64;
+    let lgn = lg(nf).max(1.0);
+    2.0 * p as f64 * omega * omega * lgn < nf / 2.0
+        && (p * p) as f64 <= nf / (omega * lgn)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bsp::params::cray_t3d;
+
+    /// §6.4: for n = 8M, p = 128 the theory predicts ≥ 66 % efficiency
+    /// for [DSQ] (low-order terms ignored).  Our closed form keeps some
+    /// low-order terms, so allow the band 55–80 %.
+    #[test]
+    fn det_efficiency_near_paper_estimate() {
+        let n = 1usize << 23;
+        let params = cray_t3d(128);
+        let omega = lg(n as f64).log2(); // lg lg n
+        let pred = predict_det(n, &params, omega);
+        let eff = pred.efficiency();
+        assert!((0.5..0.85).contains(&eff), "eff={eff}");
+    }
+
+    /// §6.4: the theory gives both algorithms an efficiency bound of
+    /// "at least 66 %" at n = 8M, p = 128.  (The *observed* advantage of
+    /// the randomized variant comes from tighter realized imbalance, not
+    /// from the upper-bound formulas — see tables::validate::predict.)
+    #[test]
+    fn both_predictions_in_paper_band_at_scale() {
+        let n = 1usize << 23;
+        let params = cray_t3d(128);
+        let det = predict_det(n, &params, lg(n as f64).log2());
+        let iran = predict_iran(n, &params, lg(n as f64).sqrt());
+        for (name, eff) in [("det", det.efficiency()), ("iran", iran.efficiency())] {
+            assert!((0.5..0.9).contains(&eff), "{name} eff={eff}");
+        }
+    }
+
+    #[test]
+    fn efficiency_improves_with_fewer_procs() {
+        let n = 1usize << 23;
+        let e16 = predict_det(n, &cray_t3d(16), 4.5).efficiency();
+        let e128 = predict_det(n, &cray_t3d(128), 4.5).efficiency();
+        assert!(e16 > e128, "e16={e16} e128={e128}");
+    }
+
+    #[test]
+    fn pi_exceeds_one_and_shrinks_with_n() {
+        let params = cray_t3d(64);
+        let p1 = predict_det(1 << 20, &params, 4.0);
+        let p2 = predict_det(1 << 26, &params, 4.0);
+        assert!(p1.pi > 1.0 && p2.pi > 1.0);
+        assert!(p2.pi < p1.pi, "π must shrink as n grows (one-optimality)");
+    }
+
+    #[test]
+    fn condition_ranges() {
+        assert!(det_conditions_hold(1 << 23, 16, 4.5));
+        assert!(!det_conditions_hold(1 << 10, 128, 4.5));
+        assert!(iran_conditions_hold(1 << 23, 16, 4.8));
+        assert!(!iran_conditions_hold(1 << 12, 128, 4.8));
+    }
+
+    #[test]
+    fn total_secs_scale_with_n() {
+        let params = cray_t3d(64);
+        let a = predict_det(1 << 20, &params, 4.5).total_secs(&params);
+        let b = predict_det(1 << 23, &params, 4.5).total_secs(&params);
+        assert!(b > 7.0 * a && b < 10.0 * a, "a={a} b={b}");
+    }
+}

@@ -1,0 +1,142 @@
+//! Minimal benchmarking harness (criterion is unavailable offline).
+//!
+//! Provides warm-up + timed iterations with mean / stddev / min reporting
+//! in a stable text format consumed by `cargo bench` targets (which are
+//! declared with `harness = false`).  Supports per-bench configuration and
+//! `BENCH_FILTER` / `BENCH_FAST` environment overrides so CI can shrink
+//! runs.
+
+use std::time::{Duration, Instant};
+
+/// Configuration for a benchmark run.
+#[derive(Clone, Debug)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub measure_iters: usize,
+    /// Cap on total measurement time; iterations stop early past this.
+    pub max_total: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        let fast = std::env::var("BENCH_FAST").is_ok();
+        BenchConfig {
+            warmup_iters: if fast { 1 } else { 2 },
+            measure_iters: if fast { 3 } else { 10 },
+            max_total: Duration::from_secs(if fast { 10 } else { 60 }),
+        }
+    }
+}
+
+/// Result statistics of a benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub stddev: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl BenchStats {
+    pub fn report(&self) {
+        println!(
+            "bench {:<48} iters={:<3} mean={:>12?} min={:>12?} max={:>12?} stddev={:>10?}",
+            self.name, self.iters, self.mean, self.min, self.max, self.stddev
+        );
+    }
+}
+
+/// True if `name` passes the `BENCH_FILTER` substring filter (if any).
+pub fn enabled(name: &str) -> bool {
+    match std::env::var("BENCH_FILTER") {
+        Ok(f) if !f.is_empty() => name.contains(&f),
+        _ => true,
+    }
+}
+
+/// Run `f` under the default configuration, printing stats.
+///
+/// `f` receives the iteration index and must return something observable
+/// (its result is black-boxed to defeat dead-code elimination).
+pub fn bench<T, F: FnMut(usize) -> T>(name: &str, mut f: F) -> Option<BenchStats> {
+    bench_cfg(name, &BenchConfig::default(), &mut f)
+}
+
+/// Run `f` under an explicit configuration.
+pub fn bench_cfg<T, F: FnMut(usize) -> T>(
+    name: &str,
+    cfg: &BenchConfig,
+    f: &mut F,
+) -> Option<BenchStats> {
+    if !enabled(name) {
+        return None;
+    }
+    for i in 0..cfg.warmup_iters {
+        black_box(f(i));
+    }
+    let mut samples: Vec<Duration> = Vec::with_capacity(cfg.measure_iters);
+    let start_all = Instant::now();
+    for i in 0..cfg.measure_iters {
+        let t0 = Instant::now();
+        black_box(f(i));
+        samples.push(t0.elapsed());
+        if start_all.elapsed() > cfg.max_total && samples.len() >= 3 {
+            break;
+        }
+    }
+    let n = samples.len();
+    let total: Duration = samples.iter().sum();
+    let mean = total / n as u32;
+    let var = samples
+        .iter()
+        .map(|s| {
+            let d = s.as_secs_f64() - mean.as_secs_f64();
+            d * d
+        })
+        .sum::<f64>()
+        / n as f64;
+    let stats = BenchStats {
+        name: name.to_string(),
+        iters: n,
+        mean,
+        stddev: Duration::from_secs_f64(var.sqrt()),
+        min: *samples.iter().min().unwrap(),
+        max: *samples.iter().max().unwrap(),
+    };
+    stats.report();
+    Some(stats)
+}
+
+/// Opaque value barrier (stable std equivalent of `test::black_box`).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_stats() {
+        let cfg = BenchConfig {
+            warmup_iters: 1,
+            measure_iters: 4,
+            max_total: Duration::from_secs(5),
+        };
+        let mut f = |i: usize| -> u64 { (0..1000u64).map(|x| x ^ i as u64).sum() };
+        let stats = bench_cfg("selftest", &cfg, &mut f).unwrap();
+        assert_eq!(stats.iters, 4);
+        assert!(stats.min <= stats.mean && stats.mean <= stats.max);
+    }
+
+    #[test]
+    fn filter_skips() {
+        std::env::set_var("BENCH_FILTER", "zzz-no-match");
+        let out = bench("skipped-bench", |_| 1u32);
+        std::env::remove_var("BENCH_FILTER");
+        assert!(out.is_none());
+    }
+}

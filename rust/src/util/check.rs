@@ -1,0 +1,108 @@
+//! Minimal property-based testing runner (proptest is unavailable offline).
+//!
+//! A property takes a [`SplitMix64`] test-case RNG and either passes or
+//! panics.  The runner executes `cases` seeds derived from a base seed; on
+//! failure it re-raises with the failing seed in the panic message so a
+//! case can be replayed with [`replay`].  Used throughout the crate's unit
+//! and integration tests for the paper's invariants (sortedness,
+//! permutation, imbalance bounds, stability).
+
+use super::rng::SplitMix64;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct CheckConfig {
+    pub cases: usize,
+    pub base_seed: u64,
+}
+
+impl Default for CheckConfig {
+    fn default() -> Self {
+        let cases = std::env::var("CHECK_CASES")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(32);
+        CheckConfig {
+            cases,
+            base_seed: 0xB5_B5_B5,
+        }
+    }
+}
+
+/// Run `prop` across `cfg.cases` derived seeds; panic with seed on failure.
+pub fn check_cfg<F: Fn(&mut SplitMix64) + std::panic::RefUnwindSafe>(
+    name: &str,
+    cfg: CheckConfig,
+    prop: F,
+) {
+    for case in 0..cfg.cases {
+        let seed = cfg.base_seed.wrapping_add(0x9E37_79B9u64.wrapping_mul(case as u64 + 1));
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = SplitMix64::new(seed);
+            prop(&mut rng);
+        });
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property `{name}` failed at case {case} (replay seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Run with the default configuration.
+pub fn check<F: Fn(&mut SplitMix64) + std::panic::RefUnwindSafe>(name: &str, prop: F) {
+    check_cfg(name, CheckConfig::default(), prop)
+}
+
+/// Re-run a single failing case by its reported seed.
+pub fn replay<F: Fn(&mut SplitMix64)>(seed: u64, prop: F) {
+    let mut rng = SplitMix64::new(seed);
+    prop(&mut rng);
+}
+
+/// Draw a random key vector of length in `[lo_len, hi_len]`, values in
+/// `[lo, hi]` — the common input shape for sort properties.
+pub fn arb_keys(rng: &mut SplitMix64, lo_len: usize, hi_len: usize, lo: i32, hi: i32) -> Vec<i32> {
+    let len = lo_len + rng.below((hi_len - lo_len + 1) as u64) as usize;
+    (0..len)
+        .map(|_| lo.wrapping_add((rng.below((hi as i64 - lo as i64 + 1) as u64)) as i32))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("tautology", |rng| {
+            let x = rng.next_u64();
+            assert_eq!(x, x);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "replay seed")]
+    fn failing_property_reports_seed() {
+        check_cfg(
+            "always-fails",
+            CheckConfig {
+                cases: 2,
+                base_seed: 1,
+            },
+            |_| panic!("boom"),
+        );
+    }
+
+    #[test]
+    fn arb_keys_respects_bounds() {
+        check("arb-keys-bounds", |rng| {
+            let keys = arb_keys(rng, 1, 100, -50, 50);
+            assert!(!keys.is_empty() && keys.len() <= 100);
+            assert!(keys.iter().all(|&k| (-50..=50).contains(&k)));
+        });
+    }
+}

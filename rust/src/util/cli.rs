@@ -1,0 +1,130 @@
+//! Tiny command-line argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional
+//! arguments, with typed accessors and a usage-error type.  Only what the
+//! `bsp-sort` binary and the examples need.
+
+use std::collections::HashMap;
+use std::fmt;
+
+#[derive(Debug)]
+pub struct CliError(pub String);
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+/// Parsed argument bag.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: HashMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    ///
+    /// `value_opts` lists option names that consume a following value;
+    /// anything else starting with `--` is a boolean flag.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I, value_opts: &[&str]) -> Result<Args, CliError> {
+        let mut args = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if value_opts.contains(&stripped) {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| CliError(format!("--{stripped} requires a value")))?;
+                    args.options.insert(stripped.to_string(), v);
+                } else {
+                    args.flags.push(stripped.to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn from_env(value_opts: &[&str]) -> Result<Args, CliError> {
+        Args::parse(std::env::args().skip(1), value_opts)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_parsed<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, CliError> {
+        match self.options.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError(format!("invalid value for --{name}: {v}"))),
+        }
+    }
+
+    /// Parse a comma-separated list, e.g. `--procs 8,16,32`.
+    pub fn get_list<T: std::str::FromStr>(&self, name: &str, default: &[T]) -> Result<Vec<T>, CliError>
+    where
+        T: Clone,
+    {
+        match self.options.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    s.trim()
+                        .parse()
+                        .map_err(|_| CliError(format!("invalid list item for --{name}: {s}")))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed_args() {
+        let a = Args::parse(sv(&["table", "--n", "8388608", "--full", "--procs=8,16"]), &["n", "procs"]).unwrap();
+        assert_eq!(a.positional, vec!["table"]);
+        assert_eq!(a.get("n"), Some("8388608"));
+        assert!(a.flag("full"));
+        assert_eq!(a.get_list::<u32>("procs", &[]).unwrap(), vec![8, 16]);
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(sv(&["--n"]), &["n"]).is_err());
+    }
+
+    #[test]
+    fn typed_default() {
+        let a = Args::parse(sv(&[]), &[]).unwrap();
+        assert_eq!(a.get_parsed("n", 7usize).unwrap(), 7);
+    }
+
+    #[test]
+    fn bad_typed_value_errors() {
+        let a = Args::parse(sv(&["--n", "xyz"]), &["n"]).unwrap();
+        assert!(a.get_parsed::<usize>("n", 0).is_err());
+    }
+}

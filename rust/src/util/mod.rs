@@ -1,0 +1,67 @@
+//! Shared utilities: PRNGs, the mini bench harness, the mini property
+//! runner, and the CLI parser.  These exist because the offline crate set
+//! ships no `rand`/`criterion`/`proptest`/`clap`; each is a small,
+//! fully-tested substrate (see DESIGN.md §4).
+
+pub mod bench;
+pub mod check;
+pub mod cli;
+pub mod rng;
+
+/// `ceil(log2(n))` for n >= 1 (0 for n <= 1); the paper charges
+/// `ceil(lg n)` comparisons for a binary search over n-1 keys.
+pub fn ceil_log2(n: u64) -> u32 {
+    if n <= 1 {
+        0
+    } else {
+        64 - (n - 1).leading_zeros()
+    }
+}
+
+/// `log2(n)` as f64 (0 for n = 0), used by the analytic charge policy.
+pub fn lg(n: f64) -> f64 {
+    if n <= 1.0 {
+        0.0
+    } else {
+        n.log2()
+    }
+}
+
+/// Format a duration in seconds with three significant decimals, matching
+/// the paper's table style ("0.526", "1.03", "4.09").
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 100.0 {
+        format!("{s:.0}")
+    } else if s >= 10.0 {
+        format!("{s:.1}")
+    } else if s >= 1.0 {
+        format!("{s:.2}")
+    } else {
+        format!("{s:.3}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_log2_values() {
+        assert_eq!(ceil_log2(0), 0);
+        assert_eq!(ceil_log2(1), 0);
+        assert_eq!(ceil_log2(2), 1);
+        assert_eq!(ceil_log2(3), 2);
+        assert_eq!(ceil_log2(4), 2);
+        assert_eq!(ceil_log2(5), 3);
+        assert_eq!(ceil_log2(1 << 20), 20);
+        assert_eq!(ceil_log2((1 << 20) + 1), 21);
+    }
+
+    #[test]
+    fn fmt_secs_matches_paper_style() {
+        assert_eq!(fmt_secs(0.526), "0.526");
+        assert_eq!(fmt_secs(1.034), "1.03");
+        assert_eq!(fmt_secs(4.088), "4.09");
+        assert_eq!(fmt_secs(12.34), "12.3");
+    }
+}

@@ -1,0 +1,197 @@
+//! Pseudo-random number generators for input generation and sampling.
+//!
+//! Two generators:
+//!
+//! * [`BsdRandom`] — a faithful re-implementation of the glibc
+//!   `random()`/`srandom()` additive-feedback generator (TYPE_3, degree 31,
+//!   separation 3).  The paper generates its `[U]` benchmark by "calling a
+//!   pseudo random number generator, the C standard library function
+//!   `random()`", with processor *i* seeded as `21 + 1001*i` (§6.3); using
+//!   the same generator keeps our inputs distribution-faithful.
+//! * [`SplitMix64`] — a fast, well-mixed 64-bit generator used for the
+//!   randomized algorithm's sample selection and for test-case generation
+//!   (not part of the paper's input definition, so fidelity is not
+//!   required there — speed and independence are).
+//!
+//! The offline crate set has no `rand`, so these are first-class
+//! substrates (tested in this module and exercised by every generator).
+
+/// glibc `random()` (TYPE_3: x[i] = x[i-3] + x[i-31], output >> 1).
+///
+/// Matches glibc's output sequence exactly for any 32-bit seed: the
+/// initialization uses the Park–Miller minimal standard generator on the
+/// first 31 words and discards 310 warm-up outputs, as glibc does.
+#[derive(Clone, Debug)]
+pub struct BsdRandom {
+    table: [i32; 31],
+    f: usize, // front pointer index (starts at 3 = separation)
+    r: usize, // rear pointer index
+}
+
+impl BsdRandom {
+    /// Equivalent to `srandom(seed)` followed by no calls yet.
+    pub fn new(seed: u32) -> Self {
+        let seed = if seed == 0 { 1 } else { seed };
+        let mut table = [0i32; 31];
+        table[0] = seed as i32;
+        for i in 1..31 {
+            // 16807 * table[i-1] % 2147483647 without overflow
+            // (Schrage's method, as in glibc).
+            let prev = table[i - 1] as i64;
+            let hi = prev / 127_773;
+            let lo = prev % 127_773;
+            let mut word = 16_807 * lo - 2_836 * hi;
+            if word < 0 {
+                word += 2_147_483_647;
+            }
+            table[i] = word as i32;
+        }
+        let mut rng = BsdRandom { table, f: 3, r: 0 };
+        // glibc discards 10*31 outputs to decorrelate the state.
+        for _ in 0..310 {
+            rng.next_i32();
+        }
+        rng
+    }
+
+    /// Equivalent to `random()`: uniform in `[0, 2^31 - 1]`.
+    pub fn next_i32(&mut self) -> i32 {
+        let sum = self.table[self.f].wrapping_add(self.table[self.r]);
+        self.table[self.f] = sum;
+        self.f = if self.f + 1 >= 31 { 0 } else { self.f + 1 };
+        self.r = if self.r + 1 >= 31 { 0 } else { self.r + 1 };
+        ((sum as u32) >> 1) as i32
+    }
+
+    /// Uniform in `[0, bound)` (bound > 0), by modulo as 1990s C code did.
+    pub fn below(&mut self, bound: i32) -> i32 {
+        debug_assert!(bound > 0);
+        self.next_i32() % bound
+    }
+}
+
+/// SplitMix64: tiny, fast, passes BigCrush; used for sampling and tests.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        SplitMix64 { state: seed }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in `[0, bound)` by Lemire's multiply-shift rejection.
+    pub fn below(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0);
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128) * (bound as u128);
+            let lo = m as u64;
+            if lo >= bound || lo >= (u64::MAX - bound + 1) % bound {
+                return (m >> 64) as u64;
+            }
+        }
+    }
+
+    pub fn next_i32(&mut self) -> i32 {
+        (self.next_u64() >> 32) as i32
+    }
+
+    /// Fisher–Yates sample of `k` distinct indices out of `n` (k <= n),
+    /// in O(k) space via a sparse swap map.
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        use std::collections::HashMap;
+        assert!(k <= n);
+        let mut swaps: HashMap<usize, usize> = HashMap::with_capacity(k * 2);
+        let mut out = Vec::with_capacity(k);
+        for i in 0..k {
+            let j = i + self.below((n - i) as u64) as usize;
+            let vi = *swaps.get(&i).unwrap_or(&i);
+            let vj = *swaps.get(&j).unwrap_or(&j);
+            out.push(vj);
+            swaps.insert(j, vi);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Reference values computed with glibc random() after srandom(1):
+    /// the canonical first three outputs.
+    #[test]
+    fn bsd_random_matches_glibc_seed1() {
+        let mut r = BsdRandom::new(1);
+        let got: Vec<i32> = (0..3).map(|_| r.next_i32()).collect();
+        assert_eq!(got, vec![1_804_289_383, 846_930_886, 1_681_692_777]);
+    }
+
+    #[test]
+    fn bsd_random_paper_seed_is_deterministic() {
+        // seed = 21 + 1001*i for processor i (paper §6.3).
+        let a: Vec<i32> = {
+            let mut r = BsdRandom::new(21);
+            (0..4).map(|_| r.next_i32()).collect()
+        };
+        let b: Vec<i32> = {
+            let mut r = BsdRandom::new(21);
+            (0..4).map(|_| r.next_i32()).collect()
+        };
+        assert_eq!(a, b);
+        assert!(a.iter().all(|&x| x >= 0));
+    }
+
+    #[test]
+    fn bsd_random_seeds_differ() {
+        let mut a = BsdRandom::new(21);
+        let mut b = BsdRandom::new(21 + 1001);
+        assert_ne!(a.next_i32(), b.next_i32());
+    }
+
+    #[test]
+    fn splitmix_below_is_in_range() {
+        let mut r = SplitMix64::new(42);
+        for bound in [1u64, 2, 3, 7, 100, 1 << 40] {
+            for _ in 0..200 {
+                assert!(r.below(bound) < bound);
+            }
+        }
+    }
+
+    #[test]
+    fn sample_indices_distinct_and_in_range() {
+        let mut r = SplitMix64::new(7);
+        for (n, k) in [(10, 10), (100, 7), (5, 0), (1, 1), (1000, 500)] {
+            let s = r.sample_indices(n, k);
+            assert_eq!(s.len(), k);
+            let mut sorted = s.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), k, "indices must be distinct");
+            assert!(s.iter().all(|&i| i < n));
+        }
+    }
+
+    #[test]
+    fn splitmix_distribution_rough_uniformity() {
+        let mut r = SplitMix64::new(9);
+        let mut buckets = [0usize; 16];
+        for _ in 0..16_000 {
+            buckets[r.below(16) as usize] += 1;
+        }
+        for &b in &buckets {
+            assert!((700..1300).contains(&b), "bucket count {b} out of range");
+        }
+    }
+}

@@ -1,0 +1,121 @@
+//! Integration tests of the PJRT runtime path (Layer 1+2 from Layer 3).
+//!
+//! These require `make artifacts`; each test skips with a message when
+//! the artifacts are absent so `cargo test` stays green pre-build.
+
+use std::sync::Arc;
+
+use bsp_sort::bsp::{cray_t3d, BspMachine};
+use bsp_sort::gen::{generate_for_proc, Benchmark};
+use bsp_sort::runtime::{Runtime, XlaSorter};
+use bsp_sort::seq::SeqSorter;
+use bsp_sort::sort::{det, iran, SortConfig};
+
+fn runtime() -> Option<Runtime> {
+    match Runtime::from_default_artifacts() {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("skipping runtime test: {e:#}");
+            None
+        }
+    }
+}
+
+#[test]
+fn pjrt_sort_block_exact_sizes() {
+    let Some(rt) = runtime() else { return };
+    for &size in rt.registry().sizes() {
+        if size > 1 << 16 {
+            break; // keep the test fast; larger sizes covered elsewhere
+        }
+        let keys: Vec<i32> = (0..size as i32).rev().collect();
+        let sorted = rt.sort_block(&keys).unwrap();
+        assert_eq!(sorted, (0..size as i32).collect::<Vec<_>>());
+    }
+}
+
+#[test]
+fn pjrt_sort_partial_block_with_max_keys() {
+    let Some(rt) = runtime() else { return };
+    // i32::MAX keys in the input must survive the sentinel padding.
+    let keys = vec![i32::MAX, 5, i32::MAX, -9, 0];
+    let sorted = rt.sort(&keys).unwrap();
+    assert_eq!(sorted, vec![-9, 0, 5, i32::MAX, i32::MAX]);
+}
+
+#[test]
+fn pjrt_chunked_sort_beyond_max_artifact() {
+    let Some(rt) = runtime() else { return };
+    // Force the chunk+merge path with a synthetic small registry? The
+    // registry always has >= 1024; use 3 chunks of the smallest size by
+    // sorting just above 2× the largest size only if that stays small.
+    // Instead: directly exercise `sort` on max_size + 7 keys.
+    let n = rt.registry().max_size() + 7;
+    if n > (1 << 21) {
+        eprintln!("skipping chunked test: max artifact too large for CI budget");
+        return;
+    }
+    let mut keys: Vec<i32> = (0..n as i64).map(|i| ((i * 2654435761) % 1000003) as i32).collect();
+    let sorted = rt.sort(&keys).unwrap();
+    keys.sort_unstable();
+    assert_eq!(sorted, keys);
+}
+
+#[test]
+fn det_bsp_with_xla_backend_matches_quicksort_backend() {
+    let Ok(sorter) = XlaSorter::from_default_artifacts() else {
+        eprintln!("skipping: artifacts missing");
+        return;
+    };
+    let sorter = Arc::new(sorter);
+    let p = 4;
+    let n = 1 << 12;
+    let params = cray_t3d(p);
+    let machine = BspMachine::new(params);
+    let cfg = SortConfig::default();
+
+    let xla_out: Vec<i32> = {
+        let sorter = Arc::clone(&sorter);
+        let run = machine.run(|ctx| {
+            let mut local = generate_for_proc(Benchmark::Staggered, ctx.pid(), p, n / p);
+            det::sort_det_bsp_with(ctx, &params, &mut local, n, &cfg, sorter.as_ref() as &dyn SeqSorter)
+        });
+        run.outputs.iter().flat_map(|r| r.keys.clone()).collect()
+    };
+    let quick_out: Vec<i32> = {
+        let run = machine.run(|ctx| {
+            let local = generate_for_proc(Benchmark::Staggered, ctx.pid(), p, n / p);
+            det::sort_det_bsp(ctx, &params, local, n, &cfg)
+        });
+        run.outputs.iter().flat_map(|r| r.keys.clone()).collect()
+    };
+    assert_eq!(xla_out, quick_out);
+}
+
+#[test]
+fn iran_bsp_with_xla_backend_sorts() {
+    let Ok(sorter) = XlaSorter::from_default_artifacts() else {
+        eprintln!("skipping: artifacts missing");
+        return;
+    };
+    let sorter = Arc::new(sorter);
+    let p = 4;
+    let n = 1 << 12;
+    let params = cray_t3d(p);
+    let machine = BspMachine::new(params);
+    let cfg = SortConfig::default();
+    let run = machine.run(|ctx| {
+        let mut local = generate_for_proc(Benchmark::DetDup, ctx.pid(), p, n / p);
+        iran::sort_iran_bsp_with(ctx, &params, &mut local, n, &cfg, 5, sorter.as_ref() as &dyn SeqSorter)
+    });
+    let mut last = i32::MIN;
+    let mut total = 0;
+    for r in &run.outputs {
+        for &k in &r.keys {
+            assert!(k >= last);
+            last = k;
+        }
+        total += r.keys.len();
+    }
+    assert_eq!(total, n);
+}
