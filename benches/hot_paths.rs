@@ -65,6 +65,35 @@ fn main() {
         run.outputs.len()
     });
 
+    // --- all-to-all routing: slot matrix vs mutex-mailbox baseline ----------
+    // Fixed total volume (~1M words per round, 4 rounds) routed across
+    // p ∈ {4, 16, 64}: the engine's contention-free single-writer slot
+    // matrix against a reference of the previous design (one Mutex<Vec>
+    // mailbox per destination + sort-by-sender on delivery).  The p = 16
+    // pair is the acceptance comparison for the routing-superstep
+    // overhead reduction.
+    for p in [4usize, 16, 64] {
+        let per_pair = (1 << 20) / (p * p);
+        let rounds = 4;
+        let machine = BspMachine::new(cray_t3d(p));
+        bench(&format!("engine/all_to_all/slot_matrix/p{p}"), |_| {
+            let run = machine.run(|ctx| {
+                let mut got = 0usize;
+                for _ in 0..rounds {
+                    let parts: Vec<Payload> = (0..p)
+                        .map(|_| Payload::Keys(vec![1i32; per_pair]))
+                        .collect();
+                    got += ctx.all_to_all(parts, "bench").len();
+                }
+                got
+            });
+            run.outputs.len()
+        });
+        bench(&format!("engine/all_to_all/mutex_baseline/p{p}"), |_| {
+            mutex_all_to_all(p, per_pair, rounds)
+        });
+    }
+
     // --- end-to-end sorts ------------------------------------------------
     let n2 = 2 << 20;
     let params = cray_t3d(p);
@@ -92,4 +121,40 @@ fn main() {
         }
         Err(e) => eprintln!("skipping xla bench: {e}"),
     }
+}
+
+/// Reference all-to-all with the engine's *previous* mailbox design: one
+/// `Mutex<Vec<(src, payload)>>` per destination, every send taking the
+/// destination's lock, delivery sorting by sender.  Kept here as the
+/// baseline the slot-matrix engine is measured against.
+fn mutex_all_to_all(p: usize, per_pair: usize, rounds: usize) -> usize {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::{Barrier, Mutex};
+
+    let mailboxes: Vec<Mutex<Vec<(usize, Vec<i32>)>>> =
+        (0..p).map(|_| Mutex::new(Vec::new())).collect();
+    let barrier = Barrier::new(p);
+    let total = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for pid in 0..p {
+            let mailboxes = &mailboxes;
+            let barrier = &barrier;
+            let total = &total;
+            scope.spawn(move || {
+                let mut got = 0usize;
+                for _ in 0..rounds {
+                    for dst in 0..p {
+                        mailboxes[dst].lock().unwrap().push((pid, vec![1i32; per_pair]));
+                    }
+                    barrier.wait();
+                    let mut msgs = std::mem::take(&mut *mailboxes[pid].lock().unwrap());
+                    msgs.sort_by_key(|(src, _)| *src);
+                    got += msgs.len();
+                    barrier.wait();
+                }
+                total.fetch_add(got, Ordering::Relaxed);
+            });
+        }
+    });
+    total.into_inner()
 }

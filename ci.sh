@@ -1,0 +1,22 @@
+#!/usr/bin/env bash
+# Tier-1 gate plus hygiene checks.  Usage: ./ci.sh
+#
+# This is what .github/workflows/ci.yml runs; keep it the single source
+# of truth for "does the repo pass".
+set -euo pipefail
+cd "$(dirname "$0")"
+
+echo "== tier-1: cargo build --release =="
+cargo build --release
+
+echo "== tier-1: cargo test -q =="
+cargo test -q
+
+echo "== hygiene: cargo fmt --check =="
+if cargo fmt --version >/dev/null 2>&1; then
+    cargo fmt --all --check
+else
+    echo "rustfmt not installed; skipping format check"
+fi
+
+echo "CI OK"

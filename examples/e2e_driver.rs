@@ -22,7 +22,7 @@ use bsp_sort::runtime::XlaSorter;
 use bsp_sort::seq::{QuickSorter, SeqSorter};
 use bsp_sort::sort::{det, iran, SortConfig};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let p = 8;
     let n = 1 << 20; // 1M keys
     let params = cray_t3d(p);

@@ -9,13 +9,26 @@
 //! on for stability) and reduces the per-processor accounting into the
 //! shared [`Ledger`].
 //!
+//! Hot-path design (this is the substrate every comparison loop and
+//! routing superstep runs through):
+//!
+//! * **Slot-matrix mailboxes** — staging is a p×p single-writer slot
+//!   matrix: slot `(src, dst)` is written only by processor `src` and
+//!   drained only by `dst`, with the sync barriers providing the
+//!   happens-before edges.  `send` takes no lock, and the dst-major
+//!   layout makes sender-ordered delivery a straight row scan instead of
+//!   a take-the-lock-and-sort.
+//! * **Interned phase labels** — phase names are registered once per run
+//!   in a [`PhaseInterner`]; `charge`/`phase` accounting is an array add
+//!   indexed by the interned id: no allocation, no string hashing.
+//!
 //! The engine executes *really* (threads + message passing, so wall-clock
 //! and correctness are genuine) and *predictively* (each superstep is
 //! priced `max{L, x + g·h}` under the configured [`BspParams`], which is
 //! how the paper's Cray T3D numbers are reproduced on different hardware —
 //! DESIGN.md §2).
 
-use std::collections::HashMap;
+use std::cell::UnsafeCell;
 use std::sync::{Barrier, Mutex};
 use std::time::Instant;
 
@@ -26,18 +39,117 @@ use super::params::BspParams;
 /// The default phase label before any `phase()` call.
 pub const PHASE_INIT: &str = "Ph1:Init";
 
+/// p×p single-writer staging slots: slot `(src, dst)` is owned for
+/// writing by processor `src` between superstep boundaries and drained by
+/// `dst` inside `sync`.  Stored dst-major so a receiver's inbox is one
+/// contiguous row scan that is already in sender order — no lock, no
+/// sort.  Drained slot buffers keep their capacity, so repeated
+/// all-to-all rounds reuse their staging storage.
+struct SlotMatrix {
+    p: usize,
+    slots: Vec<UnsafeCell<Vec<Payload>>>,
+}
+
+// SAFETY: access to each slot is partitioned by the engine's two-barrier
+// protocol — outside a sync window a slot is touched only by its writer
+// (thread `src`); between barrier 1 and barrier 2 of `sync` only by its
+// reader (thread `dst`).  The barriers provide the happens-before edges,
+// and `Payload` is `Send`, so handing the vectors across threads is
+// sound.
+unsafe impl Sync for SlotMatrix {}
+
+impl SlotMatrix {
+    fn new(p: usize) -> SlotMatrix {
+        SlotMatrix {
+            p,
+            slots: (0..p * p).map(|_| UnsafeCell::new(Vec::new())).collect(),
+        }
+    }
+
+    /// Stage a payload from `src` to `dst`.
+    ///
+    /// SAFETY: the caller must be the engine thread `src`, outside the
+    /// drain window of a `sync` (the single-writer rule above).
+    unsafe fn push(&self, src: usize, dst: usize, payload: Payload) {
+        (*self.slots[dst * self.p + src].get()).push(payload);
+    }
+
+    /// Move every message addressed to `dst` into `inbox`, in sender
+    /// order.
+    ///
+    /// SAFETY: the caller must be the engine thread `dst`, between the
+    /// two barriers of a `sync`.
+    unsafe fn drain_row(&self, dst: usize, inbox: &mut Vec<(usize, Payload)>) {
+        for src in 0..self.p {
+            let slot = &mut *self.slots[dst * self.p + src].get();
+            for payload in slot.drain(..) {
+                inbox.push((src, payload));
+            }
+        }
+    }
+}
+
+/// Phase labels interned to dense ids, registered once per run, so the
+/// per-charge accounting is an array index instead of a string clone and
+/// hash.  `intern` is called only from [`BspCtx::phase`] (rare); the hot
+/// paths use the returned id.
+struct PhaseInterner {
+    names: Mutex<Vec<String>>,
+}
+
+impl PhaseInterner {
+    fn new() -> PhaseInterner {
+        PhaseInterner {
+            names: Mutex::new(vec![PHASE_INIT.to_string()]),
+        }
+    }
+
+    fn intern(&self, name: &str) -> usize {
+        let mut names = self.names.lock().unwrap();
+        match names.iter().position(|n| n == name) {
+            Some(id) => id,
+            None => {
+                names.push(name.to_string());
+                names.len() - 1
+            }
+        }
+    }
+
+    fn into_names(self) -> Vec<String> {
+        self.names.into_inner().unwrap()
+    }
+}
+
 struct World {
     p: usize,
-    /// Staging mailboxes, indexed by destination processor.
-    mailboxes: Vec<Mutex<Vec<(usize, Payload)>>>,
+    slots: SlotMatrix,
     barrier: Barrier,
+    phases: PhaseInterner,
     ledger: Mutex<LedgerBuilder>,
+    /// First SPMD violation observed (sync label mismatch).  Checked by
+    /// every processor after barrier 2 so all threads fail together
+    /// instead of stranding the others on a barrier (debug builds).
+    spmd_violation: Mutex<Option<String>>,
+}
+
+/// Superstep accounting under construction: like [`SuperstepRecord`] but
+/// with the phase as an interned id; names are resolved once at run end.
+#[derive(Default)]
+struct SuperstepBuild {
+    label: String,
+    phase_id: usize,
+    max_ops: f64,
+    h_words: u64,
+    total_words: u64,
+    wall_us: f64,
+    reporters: usize,
 }
 
 #[derive(Default)]
 struct LedgerBuilder {
-    supersteps: Vec<SuperstepRecord>,
-    phases: HashMap<String, PhaseRecord>,
+    supersteps: Vec<SuperstepBuild>,
+    /// Phase accumulators indexed by interned phase id.
+    phases: Vec<PhaseRecord>,
 }
 
 /// Per-processor handle passed to the SPMD closure.
@@ -49,10 +161,10 @@ pub struct BspCtx<'w> {
     // charges since last sync
     ops: f64,
     sent_words: u64,
-    // phase accounting
-    phase: String,
-    phase_ops: HashMap<String, f64>,
-    phase_wall: HashMap<String, f64>,
+    // phase accounting, indexed by interned phase id
+    phase_id: usize,
+    phase_ops: Vec<f64>,
+    phase_wall: Vec<f64>,
     phase_mark: Instant,
     sync_mark: Instant,
 }
@@ -70,55 +182,87 @@ impl<'w> BspCtx<'w> {
 
     /// Charge `ops` basic operations (comparisons) to this processor in
     /// the current superstep and phase (§1.1 charging policy).
+    ///
+    /// O(1), allocation-free: the phase is an interned id, so this is
+    /// two float adds — it sits inside every comparison loop.
+    #[inline]
     pub fn charge(&mut self, ops: f64) {
         self.ops += ops;
-        *self.phase_ops.entry(self.phase.clone()).or_default() += ops;
+        self.phase_ops[self.phase_id] += ops;
     }
 
     /// Stage a message for `dst`; delivered at the next `sync`.
+    ///
+    /// Contention-free: the `(pid, dst)` slot has a single writer, so no
+    /// lock is taken and no other processor's sends are waited on.
+    #[inline]
     pub fn send(&mut self, dst: usize, payload: Payload) {
         debug_assert!(dst < self.world.p, "send to invalid pid {dst}");
         self.sent_words += payload.words();
-        self.world.mailboxes[dst].lock().unwrap().push((self.pid, payload));
+        // SAFETY: this thread is the unique writer of slot (pid, dst)
+        // until the next sync barrier; see `SlotMatrix`.
+        unsafe { self.world.slots.push(self.pid, dst, payload) };
     }
 
     /// Enter a named phase (Ph1–Ph7 in the tables).  Wall-clock and op
-    /// charges accrue to the active phase.
+    /// charges accrue to the active phase.  The label is interned on
+    /// first sight; subsequent uses of the same label are O(#phases).
     pub fn phase(&mut self, name: &str) {
         let now = Instant::now();
         let elapsed = now.duration_since(self.phase_mark).as_secs_f64() * 1e6;
-        *self.phase_wall.entry(self.phase.clone()).or_default() += elapsed;
+        self.phase_wall[self.phase_id] += elapsed;
         self.phase_mark = now;
-        self.phase = name.to_string();
+        self.phase_id = self.world.phases.intern(name);
+        if self.phase_ops.len() <= self.phase_id {
+            self.phase_ops.resize(self.phase_id + 1, 0.0);
+            self.phase_wall.resize(self.phase_id + 1, 0.0);
+        }
     }
 
     /// Superstep boundary: deliver staged messages, record accounting.
     ///
     /// Every processor must call `sync` the same number of times with the
-    /// same `label` (SPMD discipline, checked in debug builds via the
-    /// reporter count).
+    /// same `label` (SPMD discipline).  In debug builds a label mismatch
+    /// is detected and *all* processors panic together after barrier 2
+    /// (a lone panic would strand the rest on the barrier).
     pub fn sync(&mut self, label: &str) {
         let wall_us = self.sync_mark.elapsed().as_secs_f64() * 1e6;
 
         // Barrier 1: all sends for this superstep are staged.
         self.world.barrier.wait();
 
-        // Take and order this processor's inbox.
-        let mut msgs = std::mem::take(&mut *self.world.mailboxes[self.pid].lock().unwrap());
-        msgs.sort_by_key(|(src, _)| *src);
-        let recv_words: u64 = msgs.iter().map(|(_, p)| p.words()).sum();
-        self.inbox = msgs;
+        // Drain this processor's slot row; the dst-major layout delivers
+        // in sender order by construction — no lock, no sort.
+        self.inbox.clear();
+        // SAFETY: between the two barriers row `pid` is touched only by
+        // this thread; writers stage again only after barrier 2.
+        unsafe { self.world.slots.drain_row(self.pid, &mut self.inbox) };
+        let recv_words: u64 = self.inbox.iter().map(|(_, p)| p.words()).sum();
 
-        // Report into the shared ledger.
+        // Report into the shared ledger.  Once per superstep per
+        // processor — not a hot path; `charge`/`send` stay lock-free.
         {
-            let mut builder = self.world.ledger.lock().unwrap();
+            let mut guard = self.world.ledger.lock().unwrap();
+            let builder = &mut *guard;
             if builder.supersteps.len() <= self.superstep {
                 builder.supersteps.resize_with(self.superstep + 1, Default::default);
+            }
+            if builder.phases.len() <= self.phase_id {
+                builder.phases.resize_with(self.phase_id + 1, Default::default);
             }
             let rec = &mut builder.supersteps[self.superstep];
             if rec.reporters == 0 {
                 rec.label = label.to_string();
-                rec.phase = self.phase.clone();
+                rec.phase_id = self.phase_id;
+            } else if cfg!(debug_assertions) && rec.label != label {
+                let mut poison = self.world.spmd_violation.lock().unwrap();
+                if poison.is_none() {
+                    *poison = Some(format!(
+                        "superstep {}: processor {} reported label {:?}, \
+                         another processor reported {:?}",
+                        self.superstep, self.pid, label, rec.label
+                    ));
+                }
             }
             rec.reporters += 1;
             rec.max_ops = rec.max_ops.max(self.ops);
@@ -128,15 +272,21 @@ impl<'w> BspCtx<'w> {
             // Count this superstep against the active phase (h volume is
             // attributed post-hoc in `BspMachine::run`).
             let first_reporter = rec.reporters == 1;
-            let phase = builder.phases.entry(self.phase.clone()).or_default();
             if first_reporter {
-                phase.supersteps += 1;
+                builder.phases[self.phase_id].supersteps += 1;
             }
         }
 
-        // Barrier 2: nobody stages next-superstep messages into a mailbox
-        // that hasn't been drained yet.
+        // Barrier 2: nobody stages next-superstep messages into a slot
+        // that has not been drained yet.
         self.world.barrier.wait();
+
+        if cfg!(debug_assertions) {
+            let poison = self.world.spmd_violation.lock().unwrap().clone();
+            if let Some(msg) = poison {
+                panic!("SPMD sync label mismatch: {msg}");
+            }
+        }
 
         self.ops = 0.0;
         self.sent_words = 0;
@@ -162,17 +312,17 @@ impl<'w> BspCtx<'w> {
 
     /// Flush end-of-run phase accounting (called by the engine).
     fn finish(&mut self) {
-        let now = Instant::now();
-        let elapsed = now.duration_since(self.phase_mark).as_secs_f64() * 1e6;
-        *self.phase_wall.entry(self.phase.clone()).or_default() += elapsed;
-        let mut builder = self.world.ledger.lock().unwrap();
-        for (name, ops) in &self.phase_ops {
-            let rec = builder.phases.entry(name.clone()).or_default();
-            rec.max_ops = rec.max_ops.max(*ops);
+        let elapsed = self.phase_mark.elapsed().as_secs_f64() * 1e6;
+        self.phase_wall[self.phase_id] += elapsed;
+        let mut guard = self.world.ledger.lock().unwrap();
+        let builder = &mut *guard;
+        if builder.phases.len() < self.phase_ops.len() {
+            builder.phases.resize_with(self.phase_ops.len(), Default::default);
         }
-        for (name, wall) in &self.phase_wall {
-            let rec = builder.phases.entry(name.clone()).or_default();
-            rec.wall_us = rec.wall_us.max(*wall);
+        for (id, (&ops, &wall)) in self.phase_ops.iter().zip(self.phase_wall.iter()).enumerate() {
+            let rec = &mut builder.phases[id];
+            rec.max_ops = rec.max_ops.max(ops);
+            rec.wall_us = rec.wall_us.max(wall);
         }
     }
 }
@@ -204,9 +354,11 @@ impl BspMachine {
         let p = self.params.p;
         let world = World {
             p,
-            mailboxes: (0..p).map(|_| Mutex::new(Vec::new())).collect(),
+            slots: SlotMatrix::new(p),
             barrier: Barrier::new(p),
+            phases: PhaseInterner::new(),
             ledger: Mutex::new(LedgerBuilder::default()),
+            spmd_violation: Mutex::new(None),
         };
         let started = Instant::now();
         let mut outputs: Vec<Option<T>> = (0..p).map(|_| None).collect();
@@ -225,9 +377,9 @@ impl BspMachine {
                         superstep: 0,
                         ops: 0.0,
                         sent_words: 0,
-                        phase: PHASE_INIT.to_string(),
-                        phase_ops: HashMap::new(),
-                        phase_wall: HashMap::new(),
+                        phase_id: 0,
+                        phase_ops: vec![0.0],
+                        phase_wall: vec![0.0],
                         phase_mark: now,
                         sync_mark: now,
                     };
@@ -243,9 +395,29 @@ impl BspMachine {
         });
 
         let builder = world.ledger.into_inner().unwrap();
+        let names = world.phases.into_names();
+        let mut phase_recs = builder.phases;
+        phase_recs.resize_with(names.len(), Default::default);
+        let supersteps: Vec<SuperstepRecord> = builder
+            .supersteps
+            .into_iter()
+            .map(|b| SuperstepRecord {
+                label: b.label,
+                phase: names[b.phase_id].clone(),
+                max_ops: b.max_ops,
+                h_words: b.h_words,
+                total_words: b.total_words,
+                wall_us: b.wall_us,
+                reporters: b.reporters,
+            })
+            .collect();
+        debug_assert!(
+            supersteps.iter().all(|s| s.reporters == p),
+            "SPMD violation: a superstep was not reported by all {p} processors"
+        );
         let mut ledger = Ledger {
-            supersteps: builder.supersteps,
-            phases: builder.phases.into_iter().collect(),
+            supersteps,
+            phases: names.into_iter().zip(phase_recs).collect(),
             wall_us: started.elapsed().as_secs_f64() * 1e6,
         };
         // Attribute superstep h-volumes to phases post-hoc (max over the
@@ -317,6 +489,28 @@ mod tests {
     }
 
     #[test]
+    fn multiple_sends_to_one_dst_keep_order() {
+        // A processor may stage several payloads for the same
+        // destination in one superstep; they must arrive contiguously
+        // and in push order (the helman baseline relies on this).
+        let run = machine(3).run(|ctx| {
+            ctx.send(0, Payload::Keys(vec![ctx.pid() as i32]));
+            ctx.send(0, Payload::U64s(vec![ctx.pid() as u64 + 100]));
+            ctx.sync("pairs");
+            ctx.take_inbox()
+        });
+        let inbox = &run.outputs[0];
+        assert_eq!(inbox.len(), 6);
+        for src in 0..3usize {
+            let (s0, first) = &inbox[2 * src];
+            let (s1, second) = &inbox[2 * src + 1];
+            assert_eq!((*s0, *s1), (src, src));
+            assert!(matches!(first, Payload::Keys(v) if v[0] == src as i32));
+            assert!(matches!(second, Payload::U64s(v) if v[0] == src as u64 + 100));
+        }
+    }
+
+    #[test]
     fn ledger_records_h_relation() {
         let run = machine(4).run(|ctx| {
             // Everyone sends 100 keys to processor 0.
@@ -379,6 +573,21 @@ mod tests {
     }
 
     #[test]
+    fn reentering_a_phase_accumulates_into_one_id() {
+        let run = machine(4).run(|ctx| {
+            ctx.phase("Ph2:SeqSort");
+            ctx.charge(10.0);
+            ctx.phase("Ph4:Prefix");
+            ctx.charge(1.0);
+            ctx.phase("Ph2:SeqSort"); // back again: same interned id
+            ctx.charge(5.0);
+            ctx.sync("s");
+        });
+        assert_eq!(run.ledger.phases["Ph2:SeqSort"].max_ops, 15.0);
+        assert_eq!(run.ledger.phases["Ph4:Prefix"].max_ops, 1.0);
+    }
+
+    #[test]
     fn predicted_cost_uses_machine_params() {
         let machine = BspMachine::new(cray_t3d(16));
         let run = machine.run(|ctx| {
@@ -395,5 +604,50 @@ mod tests {
         let run = machine.run(|ctx| ctx.sync("noop"));
         assert_eq!(run.ledger.predicted_us(&machine.params), 762.0);
         let _ = run;
+    }
+
+    #[test]
+    fn stress_p64_multi_superstep_all_to_all() {
+        // Exercises the slot matrix at p = 64 across several supersteps:
+        // 4096 slots staged and drained per round, with sender order and
+        // exact payload delivery checked at every processor.
+        let p = 64usize;
+        let rounds = 4u64;
+        let run = machine(p).run(|ctx| {
+            let pid = ctx.pid();
+            for round in 0..rounds {
+                let parts: Vec<Payload> = (0..p)
+                    .map(|dst| {
+                        Payload::U64s(vec![round * 1_000_000 + (pid * 1000 + dst) as u64])
+                    })
+                    .collect();
+                let inbox = ctx.all_to_all(parts, "stress");
+                assert_eq!(inbox.len(), p);
+                for (i, (src, payload)) in inbox.into_iter().enumerate() {
+                    assert_eq!(src, i, "inbox must arrive in sender order");
+                    let vals = payload.into_u64s();
+                    assert_eq!(vals, vec![round * 1_000_000 + (src * 1000 + pid) as u64]);
+                }
+            }
+            pid
+        });
+        assert_eq!(run.ledger.supersteps.len(), rounds as usize);
+        for s in &run.ledger.supersteps {
+            assert_eq!(s.reporters, p);
+            assert_eq!(s.label, "stress");
+            assert_eq!(s.total_words, (p * p) as u64);
+            // h = p words in and out at every processor.
+            assert_eq!(s.h_words, p as u64);
+        }
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "BSP processor thread panicked")]
+    fn spmd_label_mismatch_is_detected_in_debug() {
+        machine(2).run(|ctx| {
+            let label = if ctx.pid() == 0 { "left" } else { "right" };
+            ctx.sync(label);
+        });
     }
 }

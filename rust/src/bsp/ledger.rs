@@ -6,6 +6,10 @@
 //! under the machine's parameters.  Phase accounting (Ph1–Ph7 of
 //! Tables 4–7) runs in parallel: compute charges and communication costs
 //! are attributed to the phase active when they occur.
+//!
+//! During a run the engine tracks phases by *interned id* (no strings on
+//! the charge hot path); the name-keyed records below are materialized
+//! once, when `BspMachine::run` finalizes the ledger.
 
 use std::collections::BTreeMap;
 

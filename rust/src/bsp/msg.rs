@@ -33,7 +33,7 @@ impl SampleRec {
 }
 
 /// Payload variants; one enum keeps the engine monomorphic and the hot
-/// key-routing path copy-free (the `Vec` moves through the mailbox).
+/// key-routing path copy-free (the `Vec` moves through the slot matrix).
 #[derive(Clone, Debug)]
 pub enum Payload {
     /// Plain keys — the routing hot path.
@@ -46,11 +46,22 @@ pub enum Payload {
 
 impl Payload {
     /// Communication size in words, per the paper's charging policy.
+    #[inline]
     pub fn words(&self) -> u64 {
         match self {
             Payload::Keys(v) => v.len() as u64,
             Payload::Recs(v) => v.len() as u64 * SampleRec::WORDS,
             Payload::U64s(v) => v.len() as u64,
+        }
+    }
+
+    /// True when the payload carries no items (an empty routing slice).
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        match self {
+            Payload::Keys(v) => v.is_empty(),
+            Payload::Recs(v) => v.is_empty(),
+            Payload::U64s(v) => v.is_empty(),
         }
     }
 
@@ -94,6 +105,14 @@ mod tests {
         assert_eq!(Payload::Keys(vec![1, 2, 3]).words(), 3);
         assert_eq!(Payload::Recs(vec![SampleRec::new(1, 0, 0)]).words(), 3);
         assert_eq!(Payload::U64s(vec![1, 2]).words(), 2);
+    }
+
+    #[test]
+    fn emptiness_per_variant() {
+        assert!(Payload::Keys(vec![]).is_empty());
+        assert!(Payload::Recs(vec![]).is_empty());
+        assert!(Payload::U64s(vec![]).is_empty());
+        assert!(!Payload::Keys(vec![1]).is_empty());
     }
 
     #[test]

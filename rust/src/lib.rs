@@ -17,15 +17,15 @@
 //! * **L1 (python/compile/kernels/bitonic.py)** — the Pallas bitonic
 //!   network kernel, loaded from Rust via PJRT ([`runtime`]).
 //!
-//! Quickstart:
+//! Quickstart (a compiling, running doctest — `cargo test` executes it):
 //!
-//! ```no_run
+//! ```
 //! use bsp_sort::bsp::{cray_t3d, BspMachine};
 //! use bsp_sort::gen::{Benchmark, generate_for_proc};
 //! use bsp_sort::sort::{det::sort_det_bsp, SortConfig};
 //!
 //! let p = 16;
-//! let n_total = 16 << 16;
+//! let n_total = 16 << 12; // scaled down so the doctest stays fast
 //! let params = cray_t3d(p);
 //! let machine = BspMachine::new(params);
 //! let cfg = SortConfig::default();
@@ -33,6 +33,9 @@
 //!     let keys = generate_for_proc(Benchmark::Uniform, ctx.pid(), p, n_total / p);
 //!     sort_det_bsp(ctx, &params, keys, n_total, &cfg)
 //! });
+//! let sorted: Vec<i32> = run.outputs.iter().flat_map(|r| r.keys.clone()).collect();
+//! assert_eq!(sorted.len(), n_total);
+//! assert!(sorted.windows(2).all(|w| w[0] <= w[1]));
 //! println!("predicted T3D time: {:.3}s", run.ledger.predicted_secs(&params));
 //! ```
 

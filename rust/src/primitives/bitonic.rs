@@ -63,6 +63,9 @@ pub fn bitonic_sort<T: BitonicItem>(ctx: &mut BspCtx, mut run: Vec<T>, label: &s
     }
     let pid = ctx.pid();
     let lgp = p.trailing_zeros() as usize;
+    // One scratch buffer reused by every merge-split round; the rounds
+    // previously allocated a fresh output vector each.
+    let mut scratch: Vec<T> = Vec::with_capacity(run.len());
 
     for stage in 0..lgp {
         // Direction bit: ascending iff bit (stage+1) of pid is 0; the
@@ -70,23 +73,26 @@ pub fn bitonic_sort<T: BitonicItem>(ctx: &mut BspCtx, mut run: Vec<T>, label: &s
         let asc = (pid >> (stage + 1)) & 1 == 0;
         for j in (0..=stage).rev() {
             let partner = pid ^ (1 << j);
-            run = merge_split(ctx, run, partner, asc, &format!("{label}:s{stage}j{j}"));
+            merge_split(ctx, &run, &mut scratch, partner, asc, &format!("{label}:s{stage}j{j}"));
+            std::mem::swap(&mut run, &mut scratch);
         }
     }
     run
 }
 
-/// One merge-split with `partner`: exchange runs, merge, keep a half.
+/// One merge-split with `partner`: exchange runs, merge `mine` with the
+/// partner's run into `out` (cleared first), keeping the required half.
 fn merge_split<T: BitonicItem>(
     ctx: &mut BspCtx,
-    mine: Vec<T>,
+    mine: &[T],
+    out: &mut Vec<T>,
     partner: usize,
     asc: bool,
     label: &str,
-) -> Vec<T> {
+) {
     let m = mine.len();
     let keep_low = (ctx.pid() < partner) == asc;
-    ctx.send(partner, T::pack(mine.clone()));
+    ctx.send(partner, T::pack(mine.to_vec()));
     ctx.sync(label);
     let mut inbox = ctx.take_inbox();
     assert_eq!(inbox.len(), 1, "merge-split expects exactly the partner's run");
@@ -96,7 +102,8 @@ fn merge_split<T: BitonicItem>(
     // Linear merge, keeping only the required half (2m comparisons max;
     // charged as a 2-way merge of 2m items).
     ctx.charge(ops::merge_charge(2 * m, 2));
-    let mut out = Vec::with_capacity(m);
+    out.clear();
+    out.reserve(m);
     if keep_low {
         let (mut i, mut j) = (0usize, 0usize);
         while out.len() < m {
@@ -123,7 +130,6 @@ fn merge_split<T: BitonicItem>(
         }
         out.reverse();
     }
-    out
 }
 
 /// Number of supersteps the distributed bitonic sort performs.

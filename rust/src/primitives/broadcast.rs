@@ -115,6 +115,8 @@ pub fn broadcast_direct(
     if ctx.pid() == root {
         msg
     } else {
+        // Select by sender: a caller that staged unrelated sends before
+        // the collective must not hand us the wrong payload.
         inbox
             .into_iter()
             .find(|(src, _)| *src == root)

@@ -54,16 +54,16 @@ pub fn prefix_direct(ctx: &mut BspCtx, values: &[u64], label: &str) -> (Vec<u64>
     let inbox = ctx.take_inbox();
 
     if ctx.pid() == 0 {
-        // Compute per-source exclusive prefixes.
-        let mut rows: Vec<Vec<u64>> = vec![Vec::new(); p];
-        for (src, payload) in inbox {
-            rows[src] = payload.into_u64s();
-        }
+        // Compute per-source exclusive prefixes.  The inbox arrives in
+        // sender order (engine guarantee), one row per processor, so it
+        // is consumed directly — no re-bucketing pass.
+        debug_assert_eq!(inbox.len(), p, "prefix gather expects one row per processor");
         let mut running = vec![0u64; n];
         let mut prefixes: Vec<Vec<u64>> = Vec::with_capacity(p);
-        for row in rows.iter() {
+        for (src, payload) in inbox {
+            debug_assert_eq!(src, prefixes.len(), "inbox must be sender-ordered");
             prefixes.push(running.clone());
-            for (j, v) in row.iter().enumerate() {
+            for (j, v) in payload.into_u64s().into_iter().enumerate() {
                 running[j] += v;
             }
         }

@@ -4,12 +4,17 @@
 //! `PjRtLoadedExecutable`), caching compiled executables by artifact
 //! size.  The Layer-2 graphs are lowered with `return_tuple=True`, so
 //! results unwrap with `to_tuple1` (see /opt/xla-example/README.md).
+//!
+//! The PJRT path is feature-gated: without `--features xla` (which also
+//! requires a vendored `xla` crate) the [`ArtifactRegistry`] still works
+//! but [`Runtime`] construction reports [`RuntimeError::Disabled`], so
+//! every caller falls back the same way it does when artifacts are
+//! missing.  This keeps the default workspace build free of third-party
+//! crates (util/mod.rs).
 
-use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::sync::Mutex;
 
-use anyhow::{anyhow, Context, Result};
+use super::error::{Result, RuntimeError};
 
 /// Locates `local_sort_<n>.hlo.txt` artifacts on disk.
 #[derive(Clone, Debug)]
@@ -24,10 +29,18 @@ impl ArtifactRegistry {
     pub fn scan(dir: impl AsRef<Path>) -> Result<ArtifactRegistry> {
         let dir = dir.as_ref().to_path_buf();
         let mut sizes = Vec::new();
-        let entries = std::fs::read_dir(&dir)
-            .with_context(|| format!("artifact dir {} (run `make artifacts`)", dir.display()))?;
+        let entries = std::fs::read_dir(&dir).map_err(|e| {
+            RuntimeError::Artifacts(format!(
+                "artifact dir {} (run `make artifacts`): {e}",
+                dir.display()
+            ))
+        })?;
         for entry in entries {
-            let name = entry?.file_name();
+            let name = entry
+                .map_err(|e| {
+                    RuntimeError::Artifacts(format!("reading {}: {e}", dir.display()))
+                })?
+                .file_name();
             let name = name.to_string_lossy();
             if let Some(rest) = name.strip_prefix("local_sort_") {
                 if let Some(num) = rest.strip_suffix(".hlo.txt") {
@@ -39,10 +52,10 @@ impl ArtifactRegistry {
         }
         sizes.sort_unstable();
         if sizes.is_empty() {
-            return Err(anyhow!(
+            return Err(RuntimeError::Artifacts(format!(
                 "no local_sort_*.hlo.txt artifacts in {} — run `make artifacts`",
                 dir.display()
-            ));
+            )));
         }
         Ok(ArtifactRegistry { dir, sizes })
     }
@@ -73,19 +86,22 @@ impl ArtifactRegistry {
 }
 
 /// A PJRT CPU client with a compile cache keyed by artifact size.
+#[cfg(feature = "xla")]
 pub struct Runtime {
     client: xla::PjRtClient,
     registry: ArtifactRegistry,
-    cache: Mutex<HashMap<usize, xla::PjRtLoadedExecutable>>,
+    cache: std::sync::Mutex<std::collections::HashMap<usize, xla::PjRtLoadedExecutable>>,
 }
 
+#[cfg(feature = "xla")]
 impl Runtime {
     pub fn new(registry: ArtifactRegistry) -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| RuntimeError::Backend(format!("PJRT cpu client: {e:?}")))?;
         Ok(Runtime {
             client,
             registry,
-            cache: Mutex::new(HashMap::new()),
+            cache: std::sync::Mutex::new(std::collections::HashMap::new()),
         })
     }
 
@@ -102,10 +118,12 @@ impl Runtime {
     /// sentinels, executes, strips the padding.
     pub fn sort_block(&self, keys: &[i32]) -> Result<Vec<i32>> {
         let n = keys.len();
-        let size = self
-            .registry
-            .size_for(n)
-            .ok_or_else(|| anyhow!("no artifact fits {n} keys (max {})", self.registry.max_size()))?;
+        let size = self.registry.size_for(n).ok_or_else(|| {
+            RuntimeError::Artifacts(format!(
+                "no artifact fits {n} keys (max {})",
+                self.registry.max_size()
+            ))
+        })?;
         let mut padded = Vec::with_capacity(size);
         padded.extend_from_slice(keys);
         padded.resize(size, i32::MAX);
@@ -115,13 +133,13 @@ impl Runtime {
             let mut cache = self.cache.lock().unwrap();
             if !cache.contains_key(&size) {
                 let path = self.registry.path_for(size);
-                let proto = xla::HloModuleProto::from_text_file(&path)
-                    .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+                let proto = xla::HloModuleProto::from_text_file(&path).map_err(|e| {
+                    RuntimeError::Backend(format!("parse {}: {e:?}", path.display()))
+                })?;
                 let comp = xla::XlaComputation::from_proto(&proto);
-                let exe = self
-                    .client
-                    .compile(&comp)
-                    .map_err(|e| anyhow!("compile local_sort_{size}: {e:?}"))?;
+                let exe = self.client.compile(&comp).map_err(|e| {
+                    RuntimeError::Backend(format!("compile local_sort_{size}: {e:?}"))
+                })?;
                 cache.insert(size, exe);
             }
         }
@@ -131,15 +149,16 @@ impl Runtime {
         let lit = xla::Literal::vec1(&padded);
         let result = exe
             .execute::<xla::Literal>(&[lit])
-            .map_err(|e| anyhow!("execute local_sort_{size}: {e:?}"))?[0][0]
+            .map_err(|e| RuntimeError::Backend(format!("execute local_sort_{size}: {e:?}")))?
+            [0][0]
             .to_literal_sync()
-            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+            .map_err(|e| RuntimeError::Backend(format!("fetch result: {e:?}")))?;
         // Lowered with return_tuple=True: unwrap the 1-tuple.
         let out = result
             .to_tuple1()
-            .map_err(|e| anyhow!("untuple: {e:?}"))?
+            .map_err(|e| RuntimeError::Backend(format!("untuple: {e:?}")))?
             .to_vec::<i32>()
-            .map_err(|e| anyhow!("to_vec: {e:?}"))?;
+            .map_err(|e| RuntimeError::Backend(format!("to_vec: {e:?}")))?;
         debug_assert_eq!(out.len(), size);
         let mut out = out;
         out.truncate(n);
@@ -158,6 +177,41 @@ impl Runtime {
             .map(|c| self.sort_block(c))
             .collect::<Result<_>>()?;
         Ok(crate::seq::multiway_merge(&runs))
+    }
+}
+
+/// Compiled-out stand-in: construction always reports
+/// [`RuntimeError::Disabled`], so callers take the same skip path they
+/// take when artifacts are missing.
+#[cfg(not(feature = "xla"))]
+pub struct Runtime {
+    registry: ArtifactRegistry,
+}
+
+#[cfg(not(feature = "xla"))]
+impl Runtime {
+    const DISABLED: RuntimeError = RuntimeError::Disabled(
+        "built without the `xla` feature; rebuild with `--features xla` and a vendored xla crate",
+    );
+
+    pub fn new(_registry: ArtifactRegistry) -> Result<Runtime> {
+        Err(Self::DISABLED)
+    }
+
+    pub fn from_default_artifacts() -> Result<Runtime> {
+        Runtime::new(ArtifactRegistry::default_location()?)
+    }
+
+    pub fn registry(&self) -> &ArtifactRegistry {
+        &self.registry
+    }
+
+    pub fn sort_block(&self, _keys: &[i32]) -> Result<Vec<i32>> {
+        Err(Self::DISABLED)
+    }
+
+    pub fn sort(&self, _keys: &[i32]) -> Result<Vec<i32>> {
+        Err(Self::DISABLED)
     }
 }
 
@@ -184,5 +238,17 @@ mod tests {
     #[test]
     fn registry_missing_dir_errors() {
         assert!(ArtifactRegistry::scan("/nonexistent-dir-xyz").is_err());
+    }
+
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn stub_runtime_reports_disabled() {
+        let err = Runtime::new(ArtifactRegistry {
+            dir: PathBuf::from("."),
+            sizes: vec![1024],
+        })
+        .err()
+        .expect("stub must not construct");
+        assert!(matches!(err, RuntimeError::Disabled(_)));
     }
 }

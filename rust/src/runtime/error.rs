@@ -1,0 +1,61 @@
+//! Std-only error type for the runtime layer.
+//!
+//! The workspace ships **zero third-party crates** (see `util/mod.rs`);
+//! this layer previously pulled in `anyhow`, which broke offline builds.
+//! A small enum covers the three failure surfaces the runtime has —
+//! artifact discovery, the XLA/PJRT backend, and the offload service —
+//! plus the compiled-out marker used when the `xla` feature is off.
+
+use std::fmt;
+
+/// Errors from the PJRT runtime layer.
+#[derive(Clone, Debug)]
+pub enum RuntimeError {
+    /// Artifact registry problems (missing directory, no artifacts, no
+    /// artifact large enough for the request).
+    Artifacts(String),
+    /// XLA/PJRT backend failure (client startup, parse, compile,
+    /// execute, transfer).
+    Backend(String),
+    /// Offload service lifecycle failure (spawn, startup, channel).
+    Service(String),
+    /// The crate was built without the `xla` feature: the PJRT path is
+    /// compiled out and only the artifact registry is available.
+    Disabled(&'static str),
+}
+
+impl fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RuntimeError::Artifacts(msg) => write!(f, "artifacts: {msg}"),
+            RuntimeError::Backend(msg) => write!(f, "xla backend: {msg}"),
+            RuntimeError::Service(msg) => write!(f, "xla service: {msg}"),
+            RuntimeError::Disabled(msg) => write!(f, "xla disabled: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+/// Result alias used throughout the runtime layer.
+pub type Result<T> = std::result::Result<T, RuntimeError>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_carries_the_message() {
+        assert!(RuntimeError::Artifacts("missing dir".into())
+            .to_string()
+            .contains("missing dir"));
+        assert!(RuntimeError::Backend("compile".into()).to_string().contains("compile"));
+        assert!(RuntimeError::Service("stopped".into()).to_string().contains("stopped"));
+    }
+
+    #[test]
+    fn boxes_as_std_error() {
+        let e: Box<dyn std::error::Error> = Box::new(RuntimeError::Disabled("feature off"));
+        assert!(e.to_string().contains("feature off"));
+    }
+}

@@ -5,11 +5,18 @@
 //! local-sort to HLO *text* at build time (see python/compile/aot.py for
 //! why text, not serialized protos), and this module compiles + caches
 //! one executable per input size.
+//!
+//! The PJRT path needs the `xla` crate and is compiled only with
+//! `--features xla`; the default, dependency-free build keeps the same
+//! API but reports [`error::RuntimeError::Disabled`], which every caller
+//! treats like missing artifacts (skip + message).
 
 pub mod client;
+pub mod error;
 pub mod service;
 pub mod xla_sort;
 
 pub use client::{ArtifactRegistry, Runtime};
+pub use error::RuntimeError;
 pub use service::XlaService;
 pub use xla_sort::XlaSorter;

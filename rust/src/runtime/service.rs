@@ -12,13 +12,12 @@ use std::sync::mpsc;
 use std::sync::Mutex;
 use std::thread::JoinHandle;
 
-use anyhow::{anyhow, Result};
-
 use super::client::{ArtifactRegistry, Runtime};
+use super::error::{Result, RuntimeError};
 
 struct Job {
     keys: Vec<i32>,
-    reply: mpsc::Sender<Result<Vec<i32>, String>>,
+    reply: mpsc::Sender<std::result::Result<Vec<i32>, String>>,
 }
 
 /// Handle to the service; cloneable across threads via `Arc`.
@@ -33,7 +32,7 @@ impl XlaService {
         let (tx, rx) = mpsc::channel::<Job>();
         // Probe the runtime on the service thread; report startup errors
         // through a handshake channel so `start` fails eagerly.
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
+        let (ready_tx, ready_rx) = mpsc::channel::<std::result::Result<(), String>>();
         let handle = std::thread::Builder::new()
             .name("xla-service".into())
             .spawn(move || {
@@ -43,20 +42,20 @@ impl XlaService {
                         rt
                     }
                     Err(e) => {
-                        let _ = ready_tx.send(Err(format!("{e:#}")));
+                        let _ = ready_tx.send(Err(e.to_string()));
                         return;
                     }
                 };
                 while let Ok(job) = rx.recv() {
-                    let result = runtime.sort(&job.keys).map_err(|e| format!("{e:#}"));
+                    let result = runtime.sort(&job.keys).map_err(|e| e.to_string());
                     let _ = job.reply.send(result);
                 }
             })
-            .map_err(|e| anyhow!("spawn xla-service: {e}"))?;
+            .map_err(|e| RuntimeError::Service(format!("spawn xla-service: {e}")))?;
         ready_rx
             .recv()
-            .map_err(|_| anyhow!("xla-service died during startup"))?
-            .map_err(|e| anyhow!("xla-service startup: {e}"))?;
+            .map_err(|_| RuntimeError::Service("xla-service died during startup".into()))?
+            .map_err(|e| RuntimeError::Service(format!("xla-service startup: {e}")))?;
         Ok(XlaService {
             tx: Mutex::new(Some(tx)),
             handle: Mutex::new(Some(handle)),
@@ -72,17 +71,19 @@ impl XlaService {
         let (reply_tx, reply_rx) = mpsc::channel();
         {
             let guard = self.tx.lock().unwrap();
-            let tx = guard.as_ref().ok_or_else(|| anyhow!("xla-service stopped"))?;
+            let tx = guard
+                .as_ref()
+                .ok_or_else(|| RuntimeError::Service("xla-service stopped".into()))?;
             tx.send(Job {
                 keys: keys.to_vec(),
                 reply: reply_tx,
             })
-            .map_err(|_| anyhow!("xla-service channel closed"))?;
+            .map_err(|_| RuntimeError::Service("xla-service channel closed".into()))?;
         }
         reply_rx
             .recv()
-            .map_err(|_| anyhow!("xla-service dropped the reply"))?
-            .map_err(|e| anyhow!(e))
+            .map_err(|_| RuntimeError::Service("xla-service dropped the reply".into()))?
+            .map_err(RuntimeError::Backend)
     }
 }
 
@@ -103,7 +104,7 @@ mod tests {
     #[test]
     fn service_sorts_from_multiple_threads() {
         let Ok(service) = XlaService::start_default() else {
-            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            eprintln!("skipping: no artifacts (run `make artifacts`) or xla feature off");
             return;
         };
         let service = std::sync::Arc::new(service);
@@ -111,7 +112,8 @@ mod tests {
             for t in 0..4 {
                 let service = std::sync::Arc::clone(&service);
                 s.spawn(move || {
-                    let keys: Vec<i32> = (0..500).map(|i| ((i * 37 + t * 11) % 97) as i32).collect();
+                    let keys: Vec<i32> =
+                        (0..500).map(|i| ((i * 37 + t * 11) % 97) as i32).collect();
                     let mut expect = keys.clone();
                     expect.sort_unstable();
                     let got = service.sort(&keys).unwrap();

@@ -11,6 +11,7 @@ use std::sync::Arc;
 
 use crate::seq::{SeqSorter, SeqSortKind};
 
+use super::error::Result;
 use super::service::XlaService;
 
 /// XLA-backed local sort (shareable across BSP processor threads).
@@ -23,7 +24,7 @@ impl XlaSorter {
         XlaSorter { service }
     }
 
-    pub fn from_default_artifacts() -> anyhow::Result<XlaSorter> {
+    pub fn from_default_artifacts() -> Result<XlaSorter> {
         Ok(XlaSorter {
             service: Arc::new(XlaService::start_default()?),
         })
@@ -34,7 +35,7 @@ impl SeqSorter for XlaSorter {
     fn sort(&self, keys: &mut Vec<i32>) {
         match self.service.sort(keys) {
             Ok(sorted) => *keys = sorted,
-            Err(e) => panic!("XlaSorter failed: {e:#}"),
+            Err(e) => panic!("XlaSorter failed: {e}"),
         }
     }
 
@@ -56,7 +57,7 @@ mod tests {
         match XlaSorter::from_default_artifacts() {
             Ok(s) => Some(s),
             Err(e) => {
-                eprintln!("skipping XLA tests: {e:#}");
+                eprintln!("skipping XLA tests: {e}");
                 None
             }
         }

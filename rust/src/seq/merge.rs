@@ -35,6 +35,19 @@ pub fn multiway_merge(runs: &[Vec<i32>]) -> Vec<i32> {
     multiway_merge_slices(&runs.iter().map(|r| r.as_slice()).collect::<Vec<_>>())
 }
 
+/// Owned q-way merge: consumes the runs, reusing one of their buffers
+/// when no real merging is required (zero or one non-empty run).  The
+/// Ph6 hand-off uses this so a degenerate routing round — everything
+/// from one sender — costs no extra copy at all.
+pub fn multiway_merge_owned(mut runs: Vec<Vec<i32>>) -> Vec<i32> {
+    runs.retain(|r| !r.is_empty());
+    match runs.len() {
+        0 => Vec::new(),
+        1 => runs.pop().unwrap(),
+        _ => multiway_merge(&runs),
+    }
+}
+
 /// Slice-based variant (no ownership needed).
 pub fn multiway_merge_slices(runs: &[&[i32]]) -> Vec<i32> {
     let q = runs.len();
@@ -213,5 +226,15 @@ mod tests {
     fn single_long_run_is_identity() {
         let r: Vec<i32> = (0..1000).collect();
         assert_eq!(multiway_merge(&[r.clone()]), r);
+    }
+
+    #[test]
+    fn owned_merge_matches_borrowed_and_reuses_single_run() {
+        let runs = vec![vec![], vec![1, 4], vec![2, 3], vec![]];
+        assert_eq!(multiway_merge_owned(runs.clone()), multiway_merge(&runs));
+        // Single non-empty run: the buffer comes back as-is.
+        let solo = vec![vec![], vec![7, 8, 9], vec![]];
+        assert_eq!(multiway_merge_owned(solo), vec![7, 8, 9]);
+        assert!(multiway_merge_owned(vec![vec![], vec![]]).is_empty());
     }
 }

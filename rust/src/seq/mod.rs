@@ -8,7 +8,7 @@ pub mod quicksort;
 pub mod radixsort;
 pub mod search;
 
-pub use merge::{merge2, multiway_merge, multiway_merge_slices};
+pub use merge::{merge2, multiway_merge, multiway_merge_owned, multiway_merge_slices};
 pub use quicksort::quicksort;
 pub use radixsort::radixsort;
 

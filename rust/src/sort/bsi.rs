@@ -17,12 +17,12 @@ use super::config::SortConfig;
 /// Run the full bitonic sort; every processor ends with its chunk of the
 /// global order.  Requires equal local sizes and `p` a power of two.
 pub fn sort_bsi(ctx: &mut BspCtx, mut local: Vec<i32>, cfg: &SortConfig) -> ProcResult {
-    let sorter: Box<dyn SeqSorter> = match cfg.seq {
-        SeqSortKind::Quick => Box::new(QuickSorter),
-        SeqSortKind::Radix => Box::new(RadixSorter),
+    let sorter: &dyn SeqSorter = match cfg.seq {
+        SeqSortKind::Quick => &QuickSorter,
+        SeqSortKind::Radix => &RadixSorter,
         SeqSortKind::Xla => panic!("use sort_bsi_with for a custom backend"),
     };
-    sort_bsi_with(ctx, &mut local, cfg, sorter.as_ref())
+    sort_bsi_with(ctx, &mut local, cfg, sorter)
 }
 
 /// As [`sort_bsi`] with an explicit sequential backend.

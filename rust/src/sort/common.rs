@@ -33,6 +33,32 @@ pub struct ProcResult {
     pub runs: usize,
 }
 
+/// `p−1` evenly spaced splitters from the gathered, *sorted* sample.
+///
+/// Uses the rank formula `⌊i·m/p⌋ − 1` (clamped into the sample) rather
+/// than the segment-width shortcut `i·(m/p) − 1`: the shortcut
+/// underflows when the gathered sample is smaller than `p` (`m/p == 0`).
+/// For the regular case `m = s·p` the two agree exactly.  An empty
+/// sample yields maximal sentinel splitters so every key stays in the
+/// low buckets instead of panicking.
+pub fn select_splitters(sorted: &[SampleRec], p: usize) -> Vec<SampleRec> {
+    if p <= 1 {
+        return Vec::new();
+    }
+    let m = sorted.len();
+    if m == 0 {
+        let sentinel = SampleRec {
+            key: i32::MAX,
+            proc: u32::MAX,
+            idx: u32::MAX,
+        };
+        return vec![sentinel; p - 1];
+    }
+    (1..p)
+        .map(|i| sorted[((i * m) / p).saturating_sub(1).min(m - 1)])
+        .collect()
+}
+
 /// Sort the (locally sorted) sample runs and return the `p−1` splitters,
 /// broadcast to every processor.
 ///
@@ -68,13 +94,12 @@ pub fn sample_sort_and_splitters(
             ctx.charge(1.0);
             ctx.sync(&format!("{label}:gather-splitters"));
             let splitters = if ctx.pid() == 0 {
-                let mut recs: Vec<(usize, SampleRec)> = ctx
-                    .take_inbox()
+                // The inbox arrives in sender order (engine guarantee),
+                // so the donated records are already rank-ordered.
+                ctx.take_inbox()
                     .into_iter()
-                    .map(|(src, payload)| (src, payload.into_recs()[0]))
-                    .collect();
-                recs.sort_by_key(|(src, _)| *src);
-                recs.into_iter().map(|(_, r)| r).collect()
+                    .map(|(_, payload)| payload.into_recs()[0])
+                    .collect()
             } else {
                 ctx.take_inbox();
                 Vec::new()
@@ -92,9 +117,7 @@ pub fn sample_sort_and_splitters(
                     .collect();
                 ctx.charge(ops::sort_charge(all.len()));
                 all.sort();
-                // p−1 evenly spaced splitters over p segments.
-                let seg = all.len() / p;
-                (1..p).map(|i| all[i * seg - 1]).collect()
+                select_splitters(&all, p)
             } else {
                 ctx.take_inbox();
                 Vec::new()
@@ -152,24 +175,34 @@ pub fn partition_route_merge(
 
     // --- Ph5: one-round key routing -----------------------------------
     ctx.phase(PH5);
-    let mut slices: Vec<Payload> = Vec::with_capacity(p);
-    for i in 0..p {
-        slices.push(Payload::Keys(keys[cuts[i]..cuts[i + 1]].to_vec()));
+    // Carve the local run into p contiguous slices by splitting off the
+    // tail bucket by bucket: bucket 0 keeps `keys`' own allocation, so
+    // each routed key is copied out at most once (and the payloads then
+    // *move* through the slot matrix — routing is one copy, not two).
+    let mut parts: Vec<Payload> = Vec::with_capacity(p);
+    let mut head = keys;
+    for i in (1..p).rev() {
+        parts.push(Payload::Keys(head.split_off(cuts[i])));
     }
-    ctx.charge(ops::linear_charge(n_local)); // slice copy-out
-    let inbox = ctx.all_to_all(slices, "ph5:route");
+    parts.push(Payload::Keys(head));
+    parts.reverse();
+    ctx.charge(ops::linear_charge(n_local)); // slice carve-out
+    let inbox = ctx.all_to_all(parts, "ph5:route");
 
     // --- Ph6: stable multi-way merge ----------------------------------
     ctx.phase(PH6);
     let runs: Vec<Vec<i32>> = inbox
         .into_iter()
+        .filter(|(_, payload)| !payload.is_empty())
         .map(|(_, payload)| payload.into_keys())
-        .filter(|r| !r.is_empty())
         .collect();
     let received: usize = runs.iter().map(|r| r.len()).sum();
-    debug_assert_eq!(received as u64, totals[pid] , "prefix totals must match received keys");
-    ctx.charge(ops::merge_charge(received, runs.len().max(2)));
-    let merged = crate::seq::multiway_merge(&runs);
+    let n_runs = runs.len();
+    debug_assert_eq!(received as u64, totals[pid], "prefix totals must match received keys");
+    ctx.charge(ops::merge_charge(received, n_runs.max(2)));
+    // Owned merge: a single non-empty run is returned as-is, reusing the
+    // buffer that travelled through the slot matrix.
+    let merged = crate::seq::multiway_merge_owned(runs);
 
     // --- Ph7 ----------------------------------------------------------
     ctx.phase(PH7);
@@ -178,7 +211,7 @@ pub fn partition_route_merge(
     ProcResult {
         keys: merged,
         received,
-        runs: runs.len(),
+        runs: n_runs,
     }
 }
 
@@ -191,7 +224,10 @@ pub fn regular_sample(keys: &[i32], pid: usize, s: usize) -> Vec<SampleRec> {
     debug_assert!(s >= 1);
     let n = keys.len();
     if n == 0 {
-        return vec![SampleRec::new(i32::MAX, pid, 0); s];
+        // Empty local run: pad with the maximal key but keep the virtual
+        // indices distinct — the §5.1.1 tie-break depends on every
+        // sample record having a distinct (proc, idx) tag.
+        return (0..s).map(|j| SampleRec::new(i32::MAX, pid, j)).collect();
     }
     let x = n.div_ceil(s).max(1);
     let mut out = Vec::with_capacity(s);
@@ -213,6 +249,8 @@ pub fn regular_sample(keys: &[i32], pid: usize, s: usize) -> Vec<SampleRec> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::bsp::engine::BspMachine;
+    use crate::bsp::params::cray_t3d;
 
     #[test]
     fn regular_sample_even_spacing() {
@@ -243,5 +281,86 @@ mod tests {
         let keys = vec![3; 64];
         let sample = regular_sample(&keys, 1, 8);
         assert!(sample.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn regular_sample_empty_run_has_distinct_tags() {
+        // Regression: the empty-run path used to emit `s` records all
+        // tagged idx = 0, violating the §5.1.1 tag-distinctness
+        // invariant the duplicate handling depends on.
+        let sample = regular_sample(&[], 3, 8);
+        assert_eq!(sample.len(), 8);
+        assert!(sample.iter().all(|r| r.key == i32::MAX && r.proc == 3));
+        assert!(sample.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn select_splitters_matches_legacy_formula_on_regular_samples() {
+        // m = s·p: the safe rank formula must reproduce i·s − 1 exactly.
+        let p = 8;
+        let s = 5;
+        let recs: Vec<SampleRec> =
+            (0..(s * p) as i32).map(|k| SampleRec::new(k, 0, k as usize)).collect();
+        let splitters = select_splitters(&recs, p);
+        let expect: Vec<i32> = (1..p).map(|i| (i * s - 1) as i32).collect();
+        let got: Vec<i32> = splitters.iter().map(|r| r.key).collect();
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn select_splitters_small_sample_does_not_underflow() {
+        // Regression: `seg = m / p` is 0 when m < p and `i*seg - 1`
+        // underflowed (panic in debug, wrap in release).
+        let recs: Vec<SampleRec> =
+            (0..3i32).map(|k| SampleRec::new(k, 0, k as usize)).collect();
+        for p in [2usize, 4, 8, 64] {
+            let splitters = select_splitters(&recs, p);
+            assert_eq!(splitters.len(), p - 1, "p={p}");
+            assert!(splitters.windows(2).all(|w| w[0] <= w[1]));
+        }
+        assert!(select_splitters(&[], 8).iter().all(|r| r.key == i32::MAX));
+        assert!(select_splitters(&recs, 1).is_empty());
+    }
+
+    #[test]
+    fn sequential_sample_sort_with_tiny_sample_regression() {
+        // End to end: the gathered sample (one record total) is smaller
+        // than p; the old splitter selection underflowed here.
+        let p = 4;
+        let params = cray_t3d(p);
+        let machine = BspMachine::new(params);
+        let run = machine.run(|ctx| {
+            let sample = if ctx.pid() == 0 {
+                vec![SampleRec::new(42, 0, 0)]
+            } else {
+                Vec::new()
+            };
+            sample_sort_and_splitters(ctx, &params, sample, SampleSortMethod::Sequential, "tiny")
+        });
+        for out in run.outputs {
+            assert_eq!(out.len(), p - 1);
+            assert!(out.iter().all(|r| r.key == 42));
+        }
+    }
+
+    #[test]
+    fn det_sequential_sorts_tiny_n_large_p() {
+        // Tiny n with comparatively large p through the full pipeline.
+        use crate::sort::det::sort_det_bsp;
+        let p = 8;
+        let n = 16;
+        let params = cray_t3d(p);
+        let machine = BspMachine::new(params);
+        let cfg = SortConfig::default().with_sample_sort(SampleSortMethod::Sequential);
+        let run = machine.run(|ctx| {
+            let local = vec![(p - ctx.pid()) as i32, ctx.pid() as i32];
+            sort_det_bsp(ctx, &params, local, n, &cfg)
+        });
+        let got: Vec<i32> = run.outputs.iter().flat_map(|r| r.keys.clone()).collect();
+        let mut expect: Vec<i32> = (0..p)
+            .flat_map(|pid| [(p - pid) as i32, pid as i32])
+            .collect();
+        expect.sort_unstable();
+        assert_eq!(got, expect);
     }
 }

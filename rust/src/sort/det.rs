@@ -41,12 +41,14 @@ pub fn sort_det_bsp(
     n_total: usize,
     cfg: &SortConfig,
 ) -> ProcResult {
-    let sorter: Box<dyn SeqSorter> = match cfg.seq {
-        SeqSortKind::Quick => Box::new(QuickSorter),
-        SeqSortKind::Radix => Box::new(RadixSorter),
+    // Static backends need no boxing — keep the per-run setup
+    // allocation-free like the rest of the hot path.
+    let sorter: &dyn SeqSorter = match cfg.seq {
+        SeqSortKind::Quick => &QuickSorter,
+        SeqSortKind::Radix => &RadixSorter,
         SeqSortKind::Xla => panic!("use sort_det_bsp_with for a custom backend"),
     };
-    sort_det_bsp_with(ctx, params, &mut local, n_total, cfg, sorter.as_ref())
+    sort_det_bsp_with(ctx, params, &mut local, n_total, cfg, sorter)
 }
 
 /// As [`sort_det_bsp`] but with an explicit sequential backend (used by

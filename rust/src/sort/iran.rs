@@ -54,12 +54,12 @@ pub fn sort_iran_bsp(
     cfg: &SortConfig,
     seed: u64,
 ) -> ProcResult {
-    let sorter: Box<dyn SeqSorter> = match cfg.seq {
-        SeqSortKind::Quick => Box::new(QuickSorter),
-        SeqSortKind::Radix => Box::new(RadixSorter),
+    let sorter: &dyn SeqSorter = match cfg.seq {
+        SeqSortKind::Quick => &QuickSorter,
+        SeqSortKind::Radix => &RadixSorter,
         SeqSortKind::Xla => panic!("use sort_iran_bsp_with for a custom backend"),
     };
-    sort_iran_bsp_with(ctx, params, &mut local, n_total, cfg, seed, sorter.as_ref())
+    sort_iran_bsp_with(ctx, params, &mut local, n_total, cfg, seed, sorter)
 }
 
 /// As [`sort_iran_bsp`] with an explicit sequential backend.

@@ -34,9 +34,9 @@ pub fn sort_ran_bsp(
 ) -> ProcResult {
     let p = ctx.nprocs();
     let pid = ctx.pid();
-    let sorter: Box<dyn SeqSorter> = match cfg.seq {
-        SeqSortKind::Quick => Box::new(QuickSorter),
-        SeqSortKind::Radix => Box::new(RadixSorter),
+    let sorter: &dyn SeqSorter = match cfg.seq {
+        SeqSortKind::Quick => &QuickSorter,
+        SeqSortKind::Radix => &RadixSorter,
         SeqSortKind::Xla => panic!("SORT_RAN_BSP supports Quick/Radix backends"),
     };
 
