@@ -6,6 +6,10 @@
 //!   * the engine's all-to-all routing superstep,
 //!   * end-to-end SORT_DET_BSP / SORT_IRAN_BSP at 2M keys / 8 procs,
 //!   * XLA local sort via PJRT when artifacts exist.
+//!
+//! `--quick-smoke` (the CI gate: `cargo bench --bench hot_paths --
+//! --quick-smoke`) shrinks every size and iteration count so the whole
+//! file runs in seconds — benchmark code can no longer rot silently.
 
 use bsp_sort::bsp::{cray_t3d, BspMachine, Payload};
 use bsp_sort::gen::{generate_for_proc, Benchmark};
@@ -15,7 +19,13 @@ use bsp_sort::util::bench::bench;
 use bsp_sort::util::rng::SplitMix64;
 
 fn main() {
-    let n = 1 << 20;
+    let smoke = std::env::args().any(|a| a == "--quick-smoke");
+    if smoke {
+        // Reuse the harness's fast profile (1 warm-up, 3 iterations).
+        std::env::set_var("BENCH_FAST", "1");
+        println!("quick-smoke mode: shrunken sizes, BENCH_FAST profile");
+    }
+    let n = if smoke { 1 << 14 } else { 1 << 20 };
 
     // --- sequential sorts ------------------------------------------------
     let base: Vec<i32> = {
@@ -73,7 +83,7 @@ fn main() {
     // pair is the acceptance comparison for the routing-superstep
     // overhead reduction.
     for p in [4usize, 16, 64] {
-        let per_pair = (1 << 20) / (p * p);
+        let per_pair = (if smoke { 1 << 14 } else { 1 << 20 }) / (p * p);
         let rounds = 4;
         let machine = BspMachine::new(cray_t3d(p));
         bench(&format!("engine/all_to_all/slot_matrix/p{p}"), |_| {
@@ -95,7 +105,7 @@ fn main() {
     }
 
     // --- end-to-end sorts ------------------------------------------------
-    let n2 = 2 << 20;
+    let n2 = if smoke { 1 << 15 } else { 2 << 20 };
     let params = cray_t3d(p);
     let cfg = SortConfig::default();
     bench("e2e/sort_det_bsp/2M/p8", |_| {
@@ -116,7 +126,7 @@ fn main() {
     // --- XLA local sort (optional) ------------------------------------------
     match bsp_sort::runtime::Runtime::from_default_artifacts() {
         Ok(rt) => {
-            let keys: Vec<i32> = base[..1 << 16].to_vec();
+            let keys: Vec<i32> = base[..base.len().min(1 << 16)].to_vec();
             bench("xla/local_sort/64K", |_| rt.sort(&keys).unwrap().len());
         }
         Err(e) => eprintln!("skipping xla bench: {e}"),
@@ -131,8 +141,8 @@ fn mutex_all_to_all(p: usize, per_pair: usize, rounds: usize) -> usize {
     use std::sync::atomic::{AtomicUsize, Ordering};
     use std::sync::{Barrier, Mutex};
 
-    let mailboxes: Vec<Mutex<Vec<(usize, Vec<i32>)>>> =
-        (0..p).map(|_| Mutex::new(Vec::new())).collect();
+    type Mailbox = Mutex<Vec<(usize, Vec<i32>)>>;
+    let mailboxes: Vec<Mailbox> = (0..p).map(|_| Mutex::new(Vec::new())).collect();
     let barrier = Barrier::new(p);
     let total = AtomicUsize::new(0);
     std::thread::scope(|scope| {

@@ -1,10 +1,43 @@
 #!/usr/bin/env bash
-# Tier-1 gate plus hygiene checks.  Usage: ./ci.sh
+# Tier-1 gate plus hygiene checks.  Usage: ./ci.sh [--check-xla]
 #
 # This is what .github/workflows/ci.yml runs; keep it the single source
 # of truth for "does the repo pass".
+#
+#   ./ci.sh              build + test + fmt + clippy + bench smoke-run
+#   ./ci.sh --check-xla  verify the `xla` feature wiring (check-only):
+#                        passes when the vendored crate is present, or
+#                        when the only failure is the expected missing
+#                        `xla` crate (the default offline setup).
 set -euo pipefail
 cd "$(dirname "$0")"
+
+if [[ "${1:-}" == "--check-xla" ]]; then
+    echo "== check-only: cargo check --features xla =="
+    log=$(mktemp)
+    if cargo check --features xla 2>"$log"; then
+        echo "xla feature checked clean (vendored xla crate present)"
+    else
+        # Accept the failure only when EVERY error is the expected
+        # missing vendored `xla` crate (or the compile-summary lines it
+        # causes) — any other error means the wiring itself is broken.
+        expected="(can't find crate for .?xla|undeclared crate or module .?xla"
+        expected+="|unresolved import .?xla|could not compile|aborting due to)"
+        if ! grep -q "^error" "$log"; then
+            cat "$log" >&2
+            echo "check failed without compiler errors (?)" >&2
+            exit 1
+        fi
+        if grep "^error" "$log" | grep -vqE "$expected"; then
+            cat "$log" >&2
+            echo "unexpected errors under --features xla (beyond the missing vendored crate)" >&2
+            exit 1
+        fi
+        echo "xla feature wiring OK (vendored xla crate absent — expected offline)"
+    fi
+    rm -f "$log"
+    exit 0
+fi
 
 echo "== tier-1: cargo build --release =="
 cargo build --release
@@ -18,5 +51,15 @@ if cargo fmt --version >/dev/null 2>&1; then
 else
     echo "rustfmt not installed; skipping format check"
 fi
+
+echo "== hygiene: cargo clippy --all-targets -D warnings =="
+if cargo clippy --version >/dev/null 2>&1; then
+    cargo clippy --all-targets -- -D warnings
+else
+    echo "clippy not installed; skipping lint gate"
+fi
+
+echo "== bench smoke-run: hot_paths --quick-smoke =="
+cargo bench --bench hot_paths -- --quick-smoke
 
 echo "CI OK"

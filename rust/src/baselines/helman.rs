@@ -20,8 +20,9 @@
 use crate::bsp::engine::BspCtx;
 use crate::bsp::msg::{Payload, SampleRec};
 use crate::bsp::params::BspParams;
+use crate::key::{Key, RadixKey};
 use crate::primitives::broadcast;
-use crate::seq::{ops, search, QuickSorter, RadixSorter, SeqSortKind, SeqSorter};
+use crate::seq::{ops, search, SeqSorter};
 use crate::util::rng::SplitMix64;
 
 use super::super::sort::common::{ProcResult, PH2, PH3, PH4, PH5, PH6, PH7};
@@ -31,17 +32,9 @@ use super::super::sort::config::SortConfig;
 /// key carries its origin tag, doubling the words on the wire.
 const TAG_WORDS_PER_KEY: usize = 2;
 
-fn backend(cfg: &SortConfig) -> Box<dyn SeqSorter> {
-    match cfg.seq {
-        SeqSortKind::Quick => Box::new(QuickSorter),
-        SeqSortKind::Radix => Box::new(RadixSorter),
-        SeqSortKind::Xla => panic!("baselines support Quick/Radix backends"),
-    }
-}
-
 /// Route `parts[i]` to processor `i`, charging `TAG_WORDS_PER_KEY` words
 /// per key (the tagged-communication model of [39]/[40]).
-fn route_tagged(ctx: &mut BspCtx, parts: Vec<Vec<i32>>, label: &str) -> Vec<Vec<i32>> {
+fn route_tagged<K: Key>(ctx: &mut BspCtx<K>, parts: Vec<Vec<K>>, label: &str) -> Vec<Vec<K>> {
     let p = ctx.nprocs();
     assert_eq!(parts.len(), p);
     for (dst, mut part) in parts.into_iter().enumerate() {
@@ -56,7 +49,7 @@ fn route_tagged(ctx: &mut BspCtx, parts: Vec<Vec<i32>>, label: &str) -> Vec<Vec<
         }
     }
     ctx.sync(label);
-    let mut runs: Vec<Vec<i32>> = vec![Vec::new(); p];
+    let mut runs: Vec<Vec<K>> = vec![Vec::new(); p];
     for (src, payload) in ctx.take_inbox() {
         if let Payload::Keys(ks) = payload {
             runs[src] = ks;
@@ -66,15 +59,15 @@ fn route_tagged(ctx: &mut BspCtx, parts: Vec<Vec<i32>>, label: &str) -> Vec<Vec<
 }
 
 /// The deterministic algorithm of [39] (two communication rounds).
-pub fn sort_helman_det(
-    ctx: &mut BspCtx,
+pub fn sort_helman_det<K: RadixKey>(
+    ctx: &mut BspCtx<K>,
     params: &BspParams,
-    mut local: Vec<i32>,
+    mut local: Vec<K>,
     cfg: &SortConfig,
-) -> ProcResult {
+) -> ProcResult<K> {
     let p = ctx.nprocs();
     let pid = ctx.pid();
-    let sorter = backend(cfg);
+    let sorter: Box<dyn SeqSorter<K>> = crate::seq::backend(cfg.seq);
 
     // Step 1: local sort.
     ctx.phase(PH2);
@@ -91,31 +84,31 @@ pub fn sort_helman_det(
     ctx.phase("PhR:Transpose");
     let n_local = keys.len();
     let block = n_local.div_ceil(p);
-    let parts: Vec<Vec<i32>> = (0..p)
+    let parts: Vec<Vec<K>> = (0..p)
         .map(|i| keys[(i * block).min(n_local)..((i + 1) * block).min(n_local)].to_vec())
         .collect();
     ctx.charge(ops::linear_charge(n_local));
     let round1 = route_tagged(ctx, parts, "helman:round1");
 
     // Step 3: merge the received runs; take a regular sample.
-    let runs1: Vec<Vec<i32>> = round1.into_iter().filter(|r| !r.is_empty()).collect();
+    let runs1: Vec<Vec<K>> = round1.into_iter().filter(|r| !r.is_empty()).collect();
     let total1: usize = runs1.iter().map(|r| r.len()).sum();
     ctx.charge(ops::merge_charge(total1, runs1.len().max(2)));
     let merged1 = crate::seq::multiway_merge(&runs1);
 
     ctx.phase(PH3);
     let step = (merged1.len() / p).max(1);
-    let sample: Vec<SampleRec> = (0..p)
+    let sample: Vec<SampleRec<K>> = (0..p)
         .map(|j| {
             let idx = (j * step).min(merged1.len().saturating_sub(1));
-            SampleRec::new(merged1.get(idx).copied().unwrap_or(i32::MAX), pid, idx)
+            SampleRec::new(merged1.get(idx).copied().unwrap_or(K::max_key()), pid, idx)
         })
         .collect();
     ctx.charge(p as f64);
     ctx.send(0, Payload::Recs(sample));
     ctx.sync("helman:gather-sample");
     let splitters = if pid == 0 {
-        let mut all: Vec<SampleRec> = ctx
+        let mut all: Vec<SampleRec<K>> = ctx
             .take_inbox()
             .into_iter()
             .flat_map(|(_, payload)| payload.into_recs())
@@ -136,12 +129,12 @@ pub fn sort_helman_det(
     ctx.charge((p as f64 - 1.0) * ops::bsearch_charge(merged1.len().max(2)));
 
     ctx.phase(PH5);
-    let parts: Vec<Vec<i32>> = (0..p).map(|i| merged1[cuts[i]..cuts[i + 1]].to_vec()).collect();
+    let parts: Vec<Vec<K>> = (0..p).map(|i| merged1[cuts[i]..cuts[i + 1]].to_vec()).collect();
     ctx.charge(ops::linear_charge(merged1.len()));
     let round2 = route_tagged(ctx, parts, "helman:round2");
 
     ctx.phase(PH6);
-    let runs2: Vec<Vec<i32>> = round2.into_iter().filter(|r| !r.is_empty()).collect();
+    let runs2: Vec<Vec<K>> = round2.into_iter().filter(|r| !r.is_empty()).collect();
     let received: usize = runs2.iter().map(|r| r.len()).sum();
     ctx.charge(ops::merge_charge(received, runs2.len().max(2)));
     let merged = crate::seq::multiway_merge(&runs2);
@@ -154,17 +147,17 @@ pub fn sort_helman_det(
 
 /// The randomized algorithm of [40]: random sample → splitters → one
 /// tagged data round → local sort of the received keys.
-pub fn sort_helman_ran(
-    ctx: &mut BspCtx,
+pub fn sort_helman_ran<K: RadixKey>(
+    ctx: &mut BspCtx<K>,
     params: &BspParams,
-    mut local: Vec<i32>,
+    mut local: Vec<K>,
     n_total: usize,
     cfg: &SortConfig,
     seed: u64,
-) -> ProcResult {
+) -> ProcResult<K> {
     let p = ctx.nprocs();
     let pid = ctx.pid();
-    let sorter = backend(cfg);
+    let sorter: Box<dyn SeqSorter<K>> = crate::seq::backend(cfg.seq);
 
     if p == 1 {
         ctx.phase(PH6);
@@ -178,8 +171,8 @@ pub fn sort_helman_ran(
     let lgn = crate::util::lg(n_total as f64).max(1.0) as usize;
     let share = (p * lgn).min(local.len().max(1));
     let mut rng = SplitMix64::new(seed ^ ((pid as u64) << 16).wrapping_add(0x4040));
-    let sample: Vec<SampleRec> = if local.is_empty() {
-        vec![SampleRec::new(i32::MAX, pid, 0)]
+    let sample: Vec<SampleRec<K>> = if local.is_empty() {
+        vec![SampleRec::new(K::max_key(), pid, 0)]
     } else {
         rng.sample_indices(local.len(), share)
             .into_iter()
@@ -190,7 +183,7 @@ pub fn sort_helman_ran(
     ctx.send(0, Payload::Recs(sample));
     ctx.sync("helmanr:gather");
     let splitters = if pid == 0 {
-        let mut all: Vec<SampleRec> = ctx
+        let mut all: Vec<SampleRec<K>> = ctx
             .take_inbox()
             .into_iter()
             .flat_map(|(_, payload)| payload.into_recs())
@@ -207,7 +200,7 @@ pub fn sort_helman_ran(
 
     // Bucket formation on the unsorted input + one tagged data round.
     ctx.phase(PH5);
-    let mut buckets: Vec<Vec<i32>> = vec![Vec::new(); p];
+    let mut buckets: Vec<Vec<K>> = vec![Vec::new(); p];
     for (i, &k) in local.iter().enumerate() {
         let me = (k, pid as u32, i as u32);
         let mut lo = 0usize;
@@ -228,7 +221,7 @@ pub fn sort_helman_ran(
 
     // Local sort of everything received.
     ctx.phase(PH6);
-    let mut keys: Vec<i32> = Vec::new();
+    let mut keys: Vec<K> = Vec::new();
     let mut nruns = 0usize;
     for r in inbox {
         if !r.is_empty() {

@@ -13,26 +13,23 @@
 use crate::bsp::engine::BspCtx;
 use crate::bsp::msg::{Payload, SampleRec};
 use crate::bsp::params::BspParams;
+use crate::key::RadixKey;
 use crate::primitives::broadcast;
-use crate::seq::{ops, search, QuickSorter, RadixSorter, SeqSortKind, SeqSorter};
+use crate::seq::{ops, search, SeqSorter};
 
 use super::super::sort::common::{ProcResult, PH2, PH3, PH4, PH5, PH6, PH7};
 use super::super::sort::config::SortConfig;
 
 /// Run PSRS on this processor's share of the input.
-pub fn sort_psrs(
-    ctx: &mut BspCtx,
+pub fn sort_psrs<K: RadixKey>(
+    ctx: &mut BspCtx<K>,
     params: &BspParams,
-    mut local: Vec<i32>,
+    mut local: Vec<K>,
     cfg: &SortConfig,
-) -> ProcResult {
+) -> ProcResult<K> {
     let p = ctx.nprocs();
     let pid = ctx.pid();
-    let sorter: Box<dyn SeqSorter> = match cfg.seq {
-        SeqSortKind::Quick => Box::new(QuickSorter),
-        SeqSortKind::Radix => Box::new(RadixSorter),
-        SeqSortKind::Xla => panic!("PSRS supports Quick/Radix backends"),
-    };
+    let sorter: Box<dyn SeqSorter<K>> = crate::seq::backend(cfg.seq);
 
     // Phase 1: local sort.
     ctx.phase(PH2);
@@ -49,19 +46,19 @@ pub fn sort_psrs(
     ctx.phase(PH3);
     let n_local = keys.len();
     let step = (n_local / p).max(1);
-    let sample: Vec<SampleRec> = (0..p)
+    let sample: Vec<SampleRec<K>> = (0..p)
         .map(|j| {
             let idx = (j * step).min(n_local.saturating_sub(1));
             // NO duplicate tags: key-only records (proc/idx zeroed) —
             // this is exactly why PSRS breaks on duplicate-heavy input.
-            SampleRec { key: keys.get(idx).copied().unwrap_or(i32::MAX), proc: 0, idx: 0 }
+            SampleRec { key: keys.get(idx).copied().unwrap_or(K::max_key()), proc: 0, idx: 0 }
         })
         .collect();
     ctx.charge(p as f64);
     ctx.send(0, Payload::Recs(sample));
     ctx.sync("psrs:gather-sample");
     let splitters = if pid == 0 {
-        let mut all: Vec<SampleRec> = ctx
+        let mut all: Vec<SampleRec<K>> = ctx
             .take_inbox()
             .into_iter()
             .flat_map(|(_, payload)| payload.into_recs())
@@ -90,14 +87,14 @@ pub fn sort_psrs(
 
     // Phase 4: route + merge.
     ctx.phase(PH5);
-    let parts: Vec<Payload> = (0..p)
+    let parts: Vec<Payload<K>> = (0..p)
         .map(|i| Payload::Keys(keys[cuts[i]..cuts[i + 1]].to_vec()))
         .collect();
     ctx.charge(ops::linear_charge(n_local));
     let inbox = ctx.all_to_all(parts, "psrs:route");
 
     ctx.phase(PH6);
-    let runs: Vec<Vec<i32>> = inbox
+    let runs: Vec<Vec<K>> = inbox
         .into_iter()
         .map(|(_, payload)| payload.into_keys())
         .filter(|r| !r.is_empty())

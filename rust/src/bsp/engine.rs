@@ -32,6 +32,8 @@ use std::cell::UnsafeCell;
 use std::sync::{Barrier, Mutex};
 use std::time::Instant;
 
+use crate::key::Key;
+
 use super::ledger::{Ledger, PhaseRecord, SuperstepRecord};
 use super::msg::Payload;
 use super::params::BspParams;
@@ -45,21 +47,21 @@ pub const PHASE_INIT: &str = "Ph1:Init";
 /// contiguous row scan that is already in sender order — no lock, no
 /// sort.  Drained slot buffers keep their capacity, so repeated
 /// all-to-all rounds reuse their staging storage.
-struct SlotMatrix {
+struct SlotMatrix<K: Key> {
     p: usize,
-    slots: Vec<UnsafeCell<Vec<Payload>>>,
+    slots: Vec<UnsafeCell<Vec<Payload<K>>>>,
 }
 
 // SAFETY: access to each slot is partitioned by the engine's two-barrier
 // protocol — outside a sync window a slot is touched only by its writer
 // (thread `src`); between barrier 1 and barrier 2 of `sync` only by its
 // reader (thread `dst`).  The barriers provide the happens-before edges,
-// and `Payload` is `Send`, so handing the vectors across threads is
-// sound.
-unsafe impl Sync for SlotMatrix {}
+// and `Payload<K>` is `Send` (`Key` requires `Send`), so handing the
+// vectors across threads is sound.
+unsafe impl<K: Key> Sync for SlotMatrix<K> {}
 
-impl SlotMatrix {
-    fn new(p: usize) -> SlotMatrix {
+impl<K: Key> SlotMatrix<K> {
+    fn new(p: usize) -> SlotMatrix<K> {
         SlotMatrix {
             p,
             slots: (0..p * p).map(|_| UnsafeCell::new(Vec::new())).collect(),
@@ -70,7 +72,7 @@ impl SlotMatrix {
     ///
     /// SAFETY: the caller must be the engine thread `src`, outside the
     /// drain window of a `sync` (the single-writer rule above).
-    unsafe fn push(&self, src: usize, dst: usize, payload: Payload) {
+    unsafe fn push(&self, src: usize, dst: usize, payload: Payload<K>) {
         (*self.slots[dst * self.p + src].get()).push(payload);
     }
 
@@ -79,7 +81,7 @@ impl SlotMatrix {
     ///
     /// SAFETY: the caller must be the engine thread `dst`, between the
     /// two barriers of a `sync`.
-    unsafe fn drain_row(&self, dst: usize, inbox: &mut Vec<(usize, Payload)>) {
+    unsafe fn drain_row(&self, dst: usize, inbox: &mut Vec<(usize, Payload<K>)>) {
         for src in 0..self.p {
             let slot = &mut *self.slots[dst * self.p + src].get();
             for payload in slot.drain(..) {
@@ -120,9 +122,9 @@ impl PhaseInterner {
     }
 }
 
-struct World {
+struct World<K: Key> {
     p: usize,
-    slots: SlotMatrix,
+    slots: SlotMatrix<K>,
     barrier: Barrier,
     phases: PhaseInterner,
     ledger: Mutex<LedgerBuilder>,
@@ -153,10 +155,13 @@ struct LedgerBuilder {
 }
 
 /// Per-processor handle passed to the SPMD closure.
-pub struct BspCtx<'w> {
+///
+/// Generic over the payload key domain `K` (default `i32`, the paper's
+/// experiments): one BSP run moves keys of exactly one domain.
+pub struct BspCtx<'w, K: Key = i32> {
     pid: usize,
-    world: &'w World,
-    inbox: Vec<(usize, Payload)>,
+    world: &'w World<K>,
+    inbox: Vec<(usize, Payload<K>)>,
     superstep: usize,
     // charges since last sync
     ops: f64,
@@ -169,7 +174,7 @@ pub struct BspCtx<'w> {
     sync_mark: Instant,
 }
 
-impl<'w> BspCtx<'w> {
+impl<'w, K: Key> BspCtx<'w, K> {
     /// This processor's identifier in `[0, nprocs)`.
     pub fn pid(&self) -> usize {
         self.pid
@@ -196,7 +201,7 @@ impl<'w> BspCtx<'w> {
     /// Contention-free: the `(pid, dst)` slot has a single writer, so no
     /// lock is taken and no other processor's sends are waited on.
     #[inline]
-    pub fn send(&mut self, dst: usize, payload: Payload) {
+    pub fn send(&mut self, dst: usize, payload: Payload<K>) {
         debug_assert!(dst < self.world.p, "send to invalid pid {dst}");
         self.sent_words += payload.words();
         // SAFETY: this thread is the unique writer of slot (pid, dst)
@@ -295,13 +300,13 @@ impl<'w> BspCtx<'w> {
     }
 
     /// The messages delivered at the last `sync`, ordered by sender id.
-    pub fn take_inbox(&mut self) -> Vec<(usize, Payload)> {
+    pub fn take_inbox(&mut self) -> Vec<(usize, Payload<K>)> {
         std::mem::take(&mut self.inbox)
     }
 
     /// Convenience: exchange one payload with every processor
     /// (all-to-all); returns the received payloads by sender.
-    pub fn all_to_all(&mut self, parts: Vec<Payload>, label: &str) -> Vec<(usize, Payload)> {
+    pub fn all_to_all(&mut self, parts: Vec<Payload<K>>, label: &str) -> Vec<(usize, Payload<K>)> {
         assert_eq!(parts.len(), self.nprocs());
         for (dst, payload) in parts.into_iter().enumerate() {
             self.send(dst, payload);
@@ -344,12 +349,25 @@ impl BspMachine {
         BspMachine { params }
     }
 
-    /// Execute `program` on `p` processors (threads); returns outputs in
+    /// Execute `program` on `p` processors (threads) with the default
+    /// `i32` key domain (the paper's experiments); returns outputs in
     /// pid order plus the superstep/phase ledger.
     pub fn run<T, F>(&self, program: F) -> BspRun<T>
     where
         T: Send,
         F: Fn(&mut BspCtx) -> T + Sync,
+    {
+        self.run_keys::<i32, T, F>(program)
+    }
+
+    /// As [`BspMachine::run`] but with an explicit payload key domain
+    /// `K` — the entry point of the generic sorting stack
+    /// (`machine.run_keys::<u64, _, _>(…)`).
+    pub fn run_keys<K, T, F>(&self, program: F) -> BspRun<T>
+    where
+        K: Key,
+        T: Send,
+        F: Fn(&mut BspCtx<K>) -> T + Sync,
     {
         let p = self.params.p;
         let world = World {
@@ -639,6 +657,19 @@ mod tests {
             // h = p words in and out at every processor.
             assert_eq!(s.h_words, p as u64);
         }
+    }
+
+    #[test]
+    fn run_keys_routes_other_domains() {
+        // The engine is generic over the key domain: a u64 ring exchange
+        // behaves exactly like the i32 one.
+        let run = machine(4).run_keys::<u64, _, _>(|ctx| {
+            let dst = (ctx.pid() + 1) % ctx.nprocs();
+            ctx.send(dst, Payload::Keys(vec![ctx.pid() as u64 + 10]));
+            ctx.sync("ring64");
+            ctx.take_inbox().pop().unwrap().1.into_keys()[0]
+        });
+        assert_eq!(run.outputs, vec![13, 10, 11, 12]);
     }
 
     #[test]

@@ -1,11 +1,19 @@
 //! Message payloads exchanged between BSP processors.
 //!
-//! Word accounting follows the paper: keys and counters are one word
-//! each (the T3D's communication data type is a 64-bit integer, §6);
-//! tagged sample records carry `(key, processor id, array index)` and are
-//! charged **three** words — §6.1: duplicate handling "may triple in the
-//! worst case the sample size as it attaches to each sample key an
-//! integer processor identifier and an integer array index".
+//! Word accounting follows the paper: counters are one word each (the
+//! T3D's communication data type is a 64-bit integer, §6) and a key costs
+//! its domain's fixed wire width ([`Key::WORDS`], one word for every
+//! built-in domain); tagged sample records carry `(key, processor id,
+//! array index)` and are charged `Key::WORDS + 2` words — §6.1: duplicate
+//! handling "may triple in the worst case the sample size as it attaches
+//! to each sample key an integer processor identifier and an integer
+//! array index".
+//!
+//! Both [`SampleRec`] and [`Payload`] default their key domain to `i32`
+//! (the paper's experiments), so monomorphic call sites read exactly as
+//! they did before the stack was generified.
+
+use crate::key::Key;
 
 /// A sample/splitter record: a key augmented with its §5.1.1 tags.
 ///
@@ -13,14 +21,14 @@
 /// rule of the duplicate handling method: equal keys compare by owning
 /// processor, then by position in that processor's local (sorted) array.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
-pub struct SampleRec {
-    pub key: i32,
+pub struct SampleRec<K = i32> {
+    pub key: K,
     pub proc: u32,
     pub idx: u32,
 }
 
-impl SampleRec {
-    pub fn new(key: i32, proc: usize, idx: usize) -> Self {
+impl<K: Key> SampleRec<K> {
+    pub fn new(key: K, proc: usize, idx: usize) -> Self {
         SampleRec {
             key,
             proc: proc as u32,
@@ -28,29 +36,41 @@ impl SampleRec {
         }
     }
 
-    /// The number of communication words a record costs (§6.1).
-    pub const WORDS: u64 = 3;
+    /// The number of communication words a record costs (§6.1): the key
+    /// width plus the two tag words.
+    pub const WORDS: u64 = K::WORDS + 2;
+
+    /// The greatest record of the domain — the padding/empty-run
+    /// sentinel (maximal key, maximal tags).
+    pub fn max_rec() -> Self {
+        SampleRec {
+            key: K::max_key(),
+            proc: u32::MAX,
+            idx: u32::MAX,
+        }
+    }
 }
 
-/// Payload variants; one enum keeps the engine monomorphic and the hot
-/// key-routing path copy-free (the `Vec` moves through the slot matrix).
+/// Payload variants; one enum keeps the engine monomorphic per key
+/// domain and the hot key-routing path copy-free (the `Vec` moves
+/// through the slot matrix).
 #[derive(Clone, Debug)]
-pub enum Payload {
+pub enum Payload<K = i32> {
     /// Plain keys — the routing hot path.
-    Keys(Vec<i32>),
-    /// Tagged sample/splitter records (3 words each).
-    Recs(Vec<SampleRec>),
+    Keys(Vec<K>),
+    /// Tagged sample/splitter records (`Key::WORDS + 2` words each).
+    Recs(Vec<SampleRec<K>>),
     /// Counters/offsets for prefix operations.
     U64s(Vec<u64>),
 }
 
-impl Payload {
+impl<K: Key> Payload<K> {
     /// Communication size in words, per the paper's charging policy.
     #[inline]
     pub fn words(&self) -> u64 {
         match self {
-            Payload::Keys(v) => v.len() as u64,
-            Payload::Recs(v) => v.len() as u64 * SampleRec::WORDS,
+            Payload::Keys(v) => v.len() as u64 * K::WORDS,
+            Payload::Recs(v) => v.len() as u64 * SampleRec::<K>::WORDS,
             Payload::U64s(v) => v.len() as u64,
         }
     }
@@ -65,14 +85,14 @@ impl Payload {
         }
     }
 
-    pub fn into_keys(self) -> Vec<i32> {
+    pub fn into_keys(self) -> Vec<K> {
         match self {
             Payload::Keys(v) => v,
             other => panic!("expected Keys payload, got {other:?}"),
         }
     }
 
-    pub fn into_recs(self) -> Vec<SampleRec> {
+    pub fn into_recs(self) -> Vec<SampleRec<K>> {
         match self {
             Payload::Recs(v) => v,
             other => panic!("expected Recs payload, got {other:?}"),
@@ -85,11 +105,33 @@ impl Payload {
             other => panic!("expected U64s payload, got {other:?}"),
         }
     }
+
+    /// Flatten this payload into the engine's 64-bit wire words — the
+    /// exact sequence [`Payload::words`] prices.  In-process the engine
+    /// moves the typed vectors directly (shared memory needs no
+    /// serialization); a network transport would ship these words, and
+    /// the charging policy is defined against them.
+    pub fn encode_wire(&self) -> Vec<u64> {
+        match self {
+            Payload::Keys(v) => crate::key::encode_all(v),
+            Payload::Recs(v) => {
+                let mut out = Vec::with_capacity(v.len() * SampleRec::<K>::WORDS as usize);
+                for r in v {
+                    r.key.encode(&mut out);
+                    out.push(r.proc as u64);
+                    out.push(r.idx as u64);
+                }
+                out
+            }
+            Payload::U64s(v) => v.clone(),
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::key::{F64, Record};
 
     #[test]
     fn sample_rec_order_is_key_proc_idx() {
@@ -104,20 +146,54 @@ mod tests {
     fn words_charging_policy() {
         assert_eq!(Payload::Keys(vec![1, 2, 3]).words(), 3);
         assert_eq!(Payload::Recs(vec![SampleRec::new(1, 0, 0)]).words(), 3);
-        assert_eq!(Payload::U64s(vec![1, 2]).words(), 2);
+        assert_eq!(Payload::<i32>::U64s(vec![1, 2]).words(), 2);
+    }
+
+    #[test]
+    fn words_charging_policy_other_domains() {
+        // Every built-in domain is one wire word per key, so records stay
+        // at the paper's 3-word charge.
+        assert_eq!(Payload::Keys(vec![1u64, 2]).words(), 2);
+        assert_eq!(Payload::Keys(vec![F64(1.0)]).words(), 1);
+        assert_eq!(
+            Payload::Recs(vec![SampleRec::new(Record { key: 1, payload: 2 }, 0, 0)]).words(),
+            3
+        );
     }
 
     #[test]
     fn emptiness_per_variant() {
-        assert!(Payload::Keys(vec![]).is_empty());
-        assert!(Payload::Recs(vec![]).is_empty());
-        assert!(Payload::U64s(vec![]).is_empty());
+        assert!(Payload::<i32>::Keys(vec![]).is_empty());
+        assert!(Payload::<i32>::Recs(vec![]).is_empty());
+        assert!(Payload::<i32>::U64s(vec![]).is_empty());
         assert!(!Payload::Keys(vec![1]).is_empty());
+    }
+
+    #[test]
+    fn wire_encoding_matches_word_charges() {
+        // `words()` prices exactly the wire sequence `encode_wire`
+        // produces, for every variant and domain width.
+        let pk = Payload::Keys(vec![3i32, -1, 7]);
+        assert_eq!(pk.encode_wire().len() as u64, pk.words());
+        let pr = Payload::Recs(vec![SampleRec::new(Record { key: 9, payload: 4 }, 1, 2)]);
+        assert_eq!(pr.encode_wire().len() as u64, pr.words());
+        let pu = Payload::<i32>::U64s(vec![5, 6]);
+        assert_eq!(pu.encode_wire().len() as u64, pu.words());
+        // And the wire round-trips back into the keys.
+        let keys = vec![F64(1.5), F64(-0.0)];
+        let wire = Payload::Keys(keys.clone()).encode_wire();
+        assert_eq!(crate::key::decode_all::<F64>(&wire), keys);
+    }
+
+    #[test]
+    fn max_rec_dominates() {
+        assert!(SampleRec::new(i32::MAX, usize::MAX, usize::MAX) <= SampleRec::max_rec());
+        assert!(SampleRec::new(41, 7, 7) < SampleRec::max_rec());
     }
 
     #[test]
     #[should_panic(expected = "expected Keys")]
     fn wrong_variant_panics() {
-        Payload::U64s(vec![]).into_keys();
+        Payload::<i32>::U64s(vec![]).into_keys();
     }
 }

@@ -17,7 +17,9 @@
 //! `INT_MAX` below is the paper's "maximum integer value plus one ... in
 //! a 32-bit signed arithmetic data type", i.e. 2³¹.
 
-use crate::util::rng::BsdRandom;
+use crate::key::{F64, Key, Record};
+use crate::runtime::error::RuntimeError;
+use crate::util::rng::{BsdRandom, SplitMix64};
 
 /// `INT_MAX` of the paper: 2³¹ (as i64 to avoid overflow in range math).
 pub const INT_MAX_P1: i64 = 1 << 31;
@@ -79,7 +81,21 @@ impl Benchmark {
             _ => None,
         }
     }
+
+    /// As [`Benchmark::parse`], but an unknown tag surfaces a proper
+    /// [`RuntimeError`] naming the accepted set instead of a silent
+    /// `None` — the CLI's error path.
+    pub fn parse_strict(s: &str) -> Result<Benchmark, RuntimeError> {
+        Benchmark::parse(s).ok_or_else(|| RuntimeError::UnknownBenchmark {
+            given: s.to_string(),
+            valid: VALID_BENCH_TAGS,
+        })
+    }
 }
+
+/// Every tag [`Benchmark::parse`] accepts (brackets optional, case
+/// insensitive).
+pub const VALID_BENCH_TAGS: &[&str] = &["U", "G", "B", "2-G", "4-G", "8-G", "S", "DD", "WR"];
 
 /// The paper's per-processor seed: `21 + 1001·i` (§6.3).
 pub fn paper_seed(pid: usize) -> u32 {
@@ -161,6 +177,90 @@ pub fn generate_for_proc(bench: Benchmark, pid: usize, p: usize, n_local: usize)
 pub fn generate_all(bench: Benchmark, p: usize, n_total: usize) -> Vec<Vec<i32>> {
     let n_local = n_total / p;
     (0..p).map(|pid| generate_for_proc(bench, pid, p, n_local)).collect()
+}
+
+/// A key domain the benchmark generators can target: maps one 31-bit
+/// draw of the paper's distributions (always non-negative) into the
+/// domain.  The draw carries the distribution's *shape*; `aux` supplies
+/// extra entropy for the domain's remaining bits and must only break
+/// ties (`from_draw(a, _) < from_draw(b, _)` whenever `a < b`), so every
+/// distribution property of §6.3 survives the mapping.
+pub trait GenKey: Key {
+    fn from_draw(draw: i32, aux: u64) -> Self;
+}
+
+impl GenKey for i32 {
+    fn from_draw(draw: i32, _aux: u64) -> i32 {
+        draw
+    }
+}
+
+impl GenKey for u64 {
+    /// The draw fills the top 31 bits (below the sign), `aux` the low 33
+    /// — genuinely 64-bit keys with the draw's distribution shape.
+    fn from_draw(draw: i32, aux: u64) -> u64 {
+        ((draw.max(0) as u64) << 33) | (aux & ((1u64 << 33) - 1))
+    }
+}
+
+impl GenKey for F64 {
+    /// Integer part = the draw (exact in an f64), fraction from `aux`.
+    /// The fraction lives in [0, 0.5) so `draw + fraction` can never
+    /// round up into the next integer (for draws near 2³¹ the f64 ulp is
+    /// ~2⁻²², and a fraction arbitrarily close to 1.0 would carry) —
+    /// keeping the strict `from_draw(a, _) < from_draw(b, _)` law for
+    /// `a < b` and `floor() == draw` exactly.
+    fn from_draw(draw: i32, aux: u64) -> F64 {
+        F64(draw as f64 + (aux >> 11) as f64 / (1u64 << 54) as f64)
+    }
+}
+
+impl GenKey for Record {
+    /// The draw is the record key; `aux` becomes satellite payload.
+    fn from_draw(draw: i32, aux: u64) -> Record {
+        Record { key: draw.max(0) as u32, payload: aux as u32 }
+    }
+}
+
+/// Typed variant of [`generate_for_proc`]: the same §6.3 distributions,
+/// mapped into key domain `K` (deterministic per `(bench, pid)` like the
+/// `i32` generators — the aux stream is seeded from the paper seed).
+///
+/// For duplicate-defined benchmarks ([DD], whose *point* is massive key
+/// equality) the aux bits are zeroed: entropy in the domain's low bits
+/// would turn every equal draw into a distinct key and silently destroy
+/// the property §5.1.1 is stressed by.
+pub fn generate_typed_for_proc<K: GenKey>(
+    bench: Benchmark,
+    pid: usize,
+    p: usize,
+    n_local: usize,
+) -> Vec<K> {
+    let mut aux = SplitMix64::new(0x6B65_7973 ^ ((paper_seed(pid) as u64) << 17));
+    let dup_defined = matches!(bench, Benchmark::DetDup);
+    generate_for_proc(bench, pid, p, n_local)
+        .into_iter()
+        .map(|draw| K::from_draw(draw, if dup_defined { 0 } else { aux.next_u64() }))
+        .collect()
+}
+
+/// Heavy-duplicate workload in domain `K`: draws collapse onto at most
+/// `distinct` values *before* mapping and the aux bits are zeroed, so
+/// equal draws become **equal keys** — maximal pressure on the §5.1.1
+/// transparent duplicate handling in any domain (for [`Record`] this
+/// means fully equal records, key and payload).
+pub fn generate_heavy_dup_for_proc<K: GenKey>(
+    bench: Benchmark,
+    pid: usize,
+    p: usize,
+    n_local: usize,
+    distinct: usize,
+) -> Vec<K> {
+    let m = distinct.max(1).min(i32::MAX as usize) as i32;
+    generate_for_proc(bench, pid, p, n_local)
+        .into_iter()
+        .map(|draw| K::from_draw(draw.rem_euclid(m), 0))
+        .collect()
 }
 
 fn uniform_below(rng: &mut BsdRandom, bound: i64) -> i64 {
@@ -356,5 +456,99 @@ mod tests {
         for b in ALL_BENCHMARKS {
             assert_eq!(Benchmark::parse(&b.tag()), Some(b), "{}", b.tag());
         }
+    }
+
+    #[test]
+    fn parse_strict_accepts_every_valid_tag() {
+        for b in ALL_BENCHMARKS {
+            assert_eq!(Benchmark::parse_strict(&b.tag()).unwrap(), b, "{}", b.tag());
+        }
+        for tag in VALID_BENCH_TAGS {
+            assert!(Benchmark::parse_strict(tag).is_ok(), "{tag}");
+        }
+    }
+
+    #[test]
+    fn parse_strict_unknown_tag_lists_valid_tags() {
+        // Regression: the CLI used to surface a silent `None` for
+        // unknown tags; the error must now name the tag and the set.
+        let err = Benchmark::parse_strict("XYZ").unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("XYZ"), "{msg}");
+        for tag in ["U", "2-G", "DD", "WR"] {
+            assert!(msg.contains(tag), "missing {tag} in: {msg}");
+        }
+        assert!(Benchmark::parse_strict("").is_err());
+    }
+
+    #[test]
+    fn typed_generation_is_deterministic_and_shaped() {
+        use crate::key::{F64, Record};
+        for b in ALL_BENCHMARKS {
+            let a: Vec<u64> = generate_typed_for_proc(b, 3, P, 256);
+            let c: Vec<u64> = generate_typed_for_proc(b, 3, P, 256);
+            assert_eq!(a, c, "{}", b.tag());
+            assert_eq!(a.len(), 256);
+        }
+        // The draw rides the top bits: recovering it reproduces the i32
+        // stream, so every §6.3 distribution property carries over.
+        let draws = generate_for_proc(Benchmark::Staggered, 1, P, 128);
+        let typed: Vec<u64> = generate_typed_for_proc(Benchmark::Staggered, 1, P, 128);
+        let recovered: Vec<i32> = typed.iter().map(|&k| (k >> 33) as i32).collect();
+        assert_eq!(recovered, draws);
+        // Records keep the draw as the key field.
+        let recs: Vec<Record> = generate_typed_for_proc(Benchmark::Staggered, 1, P, 128);
+        assert!(recs.iter().zip(&draws).all(|(r, &d)| r.key == d as u32));
+        // f64 keys keep the draw as the integer part.
+        let floats: Vec<F64> = generate_typed_for_proc(Benchmark::Staggered, 1, P, 128);
+        assert!(floats.iter().zip(&draws).all(|(f, &d)| f.0.floor() == d as f64));
+    }
+
+    #[test]
+    fn typed_dd_benchmark_keeps_its_duplicates() {
+        // Regression: aux entropy must not break [DD]'s defining key
+        // equality in wider domains — equal draws stay equal keys.
+        use std::collections::HashSet;
+        let mut all_u: Vec<u64> = Vec::new();
+        let mut all_r: Vec<crate::key::Record> = Vec::new();
+        for pid in 0..P {
+            all_u.extend(generate_typed_for_proc::<u64>(Benchmark::DetDup, pid, P, N_LOCAL));
+            all_r.extend(generate_typed_for_proc::<crate::key::Record>(
+                Benchmark::DetDup,
+                pid,
+                P,
+                N_LOCAL,
+            ));
+        }
+        assert!(all_u.iter().collect::<HashSet<_>>().len() <= 64);
+        assert!(all_r.iter().collect::<HashSet<_>>().len() <= 64);
+    }
+
+    #[test]
+    fn heavy_dup_collapses_to_few_distinct_keys() {
+        use std::collections::HashSet;
+        let mut all: Vec<u64> = Vec::new();
+        for pid in 0..P {
+            all.extend(generate_heavy_dup_for_proc::<u64>(
+                Benchmark::Uniform,
+                pid,
+                P,
+                N_LOCAL,
+                5,
+            ));
+        }
+        let distinct: HashSet<_> = all.iter().collect();
+        assert!(distinct.len() <= 5, "distinct={}", distinct.len());
+        // Equal draws become *equal records* (payload zeroed too).
+        let recs = generate_heavy_dup_for_proc::<crate::key::Record>(
+            Benchmark::Uniform,
+            0,
+            P,
+            N_LOCAL,
+            3,
+        );
+        let distinct_recs: HashSet<_> = recs.iter().collect();
+        assert!(distinct_recs.len() <= 3);
+        assert!(recs.iter().all(|r| r.payload == 0));
     }
 }

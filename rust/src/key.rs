@@ -1,0 +1,339 @@
+//! The key domain abstraction: everything the sorting stack needs from a
+//! key type, plus the built-in domains of the study.
+//!
+//! The paper's experiments are over 32-bit signed integers, but the §5.1.1
+//! duplicate handling and the oversampling analysis are *domain-agnostic*:
+//! nothing in the algorithms depends on what a key is beyond a total order
+//! and a fixed wire width.  [`Key`] captures exactly that contract, so the
+//! same SPMD programs sort `i32` (the default instantiation everywhere),
+//! `u64`, total-ordered `f64` ([`F64`]) and `(u32 key, u32 payload)`
+//! records ([`Record`]).
+//!
+//! Wire format: the engine's communication word is the T3D's 64-bit
+//! integer (§6), so a key encodes into a fixed number of `u64` words
+//! ([`Key::WORDS`], all built-in domains fit one word) and the engine
+//! charges `h` from that width.  [`RadixKey`] additionally provides an
+//! order-preserving unsigned image for the LSD radix backend (`[.SR]`
+//! variants).
+
+use std::cmp::Ordering;
+use std::fmt;
+
+/// A sortable key domain: total order, thread mobility, and a fixed-width
+/// encoding into the engine's 64-bit wire words.
+///
+/// In-process the engine moves payloads as typed vectors (shared memory
+/// needs no serialization); the encoding defines the *wire image* that
+/// `Payload::encode_wire` produces and that the `h`-relation charging
+/// (`Payload::words`, [`Key::WORDS`] words per key) prices.
+///
+/// Laws (checked by the round-trip property tests below):
+/// * `decode(encode(k)) == k` for every key `k`;
+/// * `encode` appends exactly [`Key::WORDS`] words;
+/// * `k <= max_key()` for every key `k` (the padding sentinel used for
+///   empty or short sample runs).
+pub trait Key: Copy + Send + Sync + Ord + fmt::Debug + 'static {
+    /// Fixed wire width of one key, in 64-bit communication words.
+    const WORDS: u64;
+    /// Short domain name for reports and workload labels.
+    const NAME: &'static str;
+
+    /// The greatest value of the domain (sample-padding sentinel).
+    fn max_key() -> Self;
+    /// Append this key's fixed-width wire encoding to `out`.
+    fn encode(self, out: &mut Vec<u64>);
+    /// Decode one key from exactly [`Key::WORDS`] wire words.
+    fn decode(words: &[u64]) -> Self;
+}
+
+/// A key domain with an order-preserving unsigned image, enabling the LSD
+/// radix backend: `a < b` iff `a.radix_image() < b.radix_image()`.
+pub trait RadixKey: Key {
+    /// Number of 8-bit LSD counting passes covering the image.
+    const RADIX_PASSES: u32;
+    /// The order-preserving unsigned image.
+    fn radix_image(self) -> u64;
+}
+
+/// Encode a whole slice into wire words (`keys.len() * K::WORDS` words).
+pub fn encode_all<K: Key>(keys: &[K]) -> Vec<u64> {
+    let mut out = Vec::with_capacity(keys.len() * K::WORDS as usize);
+    for &k in keys {
+        k.encode(&mut out);
+    }
+    out
+}
+
+/// Decode a wire-word buffer back into keys; `words.len()` must be a
+/// multiple of `K::WORDS`.
+pub fn decode_all<K: Key>(words: &[u64]) -> Vec<K> {
+    let stride = K::WORDS as usize;
+    assert_eq!(words.len() % stride.max(1), 0, "truncated wire buffer");
+    words.chunks_exact(stride).map(K::decode).collect()
+}
+
+impl Key for i32 {
+    const WORDS: u64 = 1;
+    const NAME: &'static str = "i32";
+
+    fn max_key() -> i32 {
+        i32::MAX
+    }
+    fn encode(self, out: &mut Vec<u64>) {
+        out.push(self as u32 as u64);
+    }
+    fn decode(words: &[u64]) -> i32 {
+        words[0] as u32 as i32
+    }
+}
+
+impl RadixKey for i32 {
+    const RADIX_PASSES: u32 = 4;
+
+    /// Bias map: flipping the sign bit of the 32-bit image orders the
+    /// unsigned image identically to signed order.
+    fn radix_image(self) -> u64 {
+        ((self as u32) ^ 0x8000_0000) as u64
+    }
+}
+
+impl Key for u64 {
+    const WORDS: u64 = 1;
+    const NAME: &'static str = "u64";
+
+    fn max_key() -> u64 {
+        u64::MAX
+    }
+    fn encode(self, out: &mut Vec<u64>) {
+        out.push(self);
+    }
+    fn decode(words: &[u64]) -> u64 {
+        words[0]
+    }
+}
+
+impl RadixKey for u64 {
+    const RADIX_PASSES: u32 = 8;
+
+    fn radix_image(self) -> u64 {
+        self
+    }
+}
+
+/// `f64` under the IEEE-754 *total order* (`f64::total_cmp`): every bit
+/// pattern — including NaNs and the two zeros — has a well-defined rank,
+/// so the sorting invariants (and the radix image) stay exact.
+///
+/// Order: `-NaN < -∞ < … < -0.0 < +0.0 < … < +∞ < +NaN`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct F64(pub f64);
+
+impl PartialEq for F64 {
+    fn eq(&self, other: &F64) -> bool {
+        self.0.total_cmp(&other.0) == Ordering::Equal
+    }
+}
+
+impl Eq for F64 {}
+
+impl PartialOrd for F64 {
+    fn partial_cmp(&self, other: &F64) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for F64 {
+    fn cmp(&self, other: &F64) -> Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
+impl Key for F64 {
+    const WORDS: u64 = 1;
+    const NAME: &'static str = "f64";
+
+    /// The total-order maximum: the positive NaN with an all-ones
+    /// payload (greater than `+∞` under `total_cmp`).
+    fn max_key() -> F64 {
+        F64(f64::from_bits(0x7FFF_FFFF_FFFF_FFFF))
+    }
+    fn encode(self, out: &mut Vec<u64>) {
+        out.push(self.0.to_bits());
+    }
+    fn decode(words: &[u64]) -> F64 {
+        F64(f64::from_bits(words[0]))
+    }
+}
+
+impl RadixKey for F64 {
+    const RADIX_PASSES: u32 = 8;
+
+    /// The classical total-order bit trick: negative patterns flip all
+    /// bits, non-negative ones flip only the sign — monotone in
+    /// `total_cmp` across the whole bit space.
+    fn radix_image(self) -> u64 {
+        let bits = self.0.to_bits();
+        if bits & (1u64 << 63) != 0 {
+            !bits
+        } else {
+            bits ^ (1u64 << 63)
+        }
+    }
+}
+
+/// A `(u32 key, u32 payload)` record: the satellite-data scenario.  The
+/// total order is lexicographic `(key, payload)` (field order), so
+/// records with equal `key` fields still have well-defined ranks — the
+/// sorting stack needs no awareness that a payload is riding along.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Record {
+    pub key: u32,
+    pub payload: u32,
+}
+
+impl Key for Record {
+    const WORDS: u64 = 1;
+    const NAME: &'static str = "record(u32,u32)";
+
+    fn max_key() -> Record {
+        Record { key: u32::MAX, payload: u32::MAX }
+    }
+    fn encode(self, out: &mut Vec<u64>) {
+        out.push(((self.key as u64) << 32) | self.payload as u64);
+    }
+    fn decode(words: &[u64]) -> Record {
+        Record { key: (words[0] >> 32) as u32, payload: words[0] as u32 }
+    }
+}
+
+impl RadixKey for Record {
+    const RADIX_PASSES: u32 = 8;
+
+    /// The packed encoding is already the lexicographic order image.
+    fn radix_image(self) -> u64 {
+        ((self.key as u64) << 32) | self.payload as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::check;
+    use crate::util::rng::SplitMix64;
+
+    fn roundtrip<K: Key>(k: K) {
+        let mut words = Vec::new();
+        k.encode(&mut words);
+        assert_eq!(words.len() as u64, K::WORDS, "{}: encode width", K::NAME);
+        assert_eq!(K::decode(&words), k, "{}: decode(encode) != id", K::NAME);
+    }
+
+    fn image_matches_order<K: RadixKey>(a: K, b: K) {
+        assert_eq!(
+            a.cmp(&b),
+            a.radix_image().cmp(&b.radix_image()),
+            "{}: radix image order mismatch for {a:?} vs {b:?}",
+            K::NAME
+        );
+    }
+
+    #[test]
+    fn roundtrip_all_domains_property() {
+        check("key-roundtrip", |rng| {
+            roundtrip(rng.next_u64() as i32);
+            roundtrip(rng.next_u64());
+            roundtrip(F64(f64::from_bits(rng.next_u64())));
+            roundtrip(Record {
+                key: rng.next_u64() as u32,
+                payload: rng.next_u64() as u32,
+            });
+        });
+    }
+
+    #[test]
+    fn roundtrip_f64_special_values() {
+        for f in [
+            f64::NAN,
+            -f64::NAN,
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            0.0,
+            -0.0,
+            f64::MIN_POSITIVE,
+            f64::MAX,
+            f64::MIN,
+        ] {
+            roundtrip(F64(f));
+        }
+    }
+
+    #[test]
+    fn f64_total_order_handles_nan_and_signed_zero() {
+        let neg_nan = F64(f64::from_bits(0xFFF8_0000_0000_0001));
+        let pos_nan = F64(f64::NAN);
+        let order = [
+            neg_nan,
+            F64(f64::NEG_INFINITY),
+            F64(-1.5),
+            F64(-0.0),
+            F64(0.0),
+            F64(1.5),
+            F64(f64::INFINITY),
+            pos_nan,
+            F64::max_key(),
+        ];
+        for w in order.windows(2) {
+            assert!(w[0] < w[1], "{:?} must order before {:?}", w[0], w[1]);
+        }
+        // -0.0 and +0.0 are *distinct* under the total order…
+        assert_ne!(F64(-0.0), F64(0.0));
+        // …and a NaN equals itself (same bit pattern), unlike IEEE `==`.
+        assert_eq!(pos_nan, pos_nan);
+    }
+
+    #[test]
+    fn radix_image_is_order_preserving_property() {
+        check("key-radix-image-order", |rng| {
+            image_matches_order(rng.next_u64() as i32, rng.next_u64() as i32);
+            image_matches_order(rng.next_u64(), rng.next_u64());
+            image_matches_order(
+                F64(f64::from_bits(rng.next_u64())),
+                F64(f64::from_bits(rng.next_u64())),
+            );
+            image_matches_order(
+                Record { key: rng.next_u64() as u32, payload: rng.next_u64() as u32 },
+                Record { key: rng.next_u64() as u32, payload: rng.next_u64() as u32 },
+            );
+        });
+    }
+
+    #[test]
+    fn max_key_dominates_property() {
+        check("key-max-dominates", |rng| {
+            assert!(rng.next_u64() as i32 <= i32::max_key());
+            assert!(rng.next_u64() <= u64::max_key());
+            assert!(F64(f64::from_bits(rng.next_u64())) <= F64::max_key());
+            let r = Record { key: rng.next_u64() as u32, payload: rng.next_u64() as u32 };
+            assert!(r <= Record::max_key());
+        });
+    }
+
+    #[test]
+    fn bulk_encode_decode_roundtrip() {
+        let mut rng = SplitMix64::new(0xC0DE);
+        let keys: Vec<Record> = (0..257)
+            .map(|_| Record { key: rng.next_u64() as u32, payload: rng.next_u64() as u32 })
+            .collect();
+        let words = encode_all(&keys);
+        assert_eq!(words.len(), keys.len() * Record::WORDS as usize);
+        assert_eq!(decode_all::<Record>(&words), keys);
+    }
+
+    #[test]
+    fn record_orders_by_key_then_payload() {
+        let a = Record { key: 1, payload: 9 };
+        let b = Record { key: 2, payload: 0 };
+        let c = Record { key: 2, payload: 1 };
+        assert!(a < b && b < c);
+    }
+}

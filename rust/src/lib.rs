@@ -17,11 +17,18 @@
 //! * **L1 (python/compile/kernels/bitonic.py)** — the Pallas bitonic
 //!   network kernel, loaded from Rust via PJRT ([`runtime`]).
 //!
+//! The whole stack is generic over the [`key::Key`] trait (total order +
+//! fixed-width wire encoding), with `i32` as the default instantiation:
+//! the same SPMD programs sort `u64`, total-ordered `f64` ([`key::F64`])
+//! and `(u32 key, u32 payload)` records ([`key::Record`]) through
+//! [`bsp::BspMachine::run_keys`].
+//!
 //! Quickstart (a compiling, running doctest — `cargo test` executes it):
 //!
 //! ```
 //! use bsp_sort::bsp::{cray_t3d, BspMachine};
 //! use bsp_sort::gen::{Benchmark, generate_for_proc};
+//! use bsp_sort::key::Record;
 //! use bsp_sort::sort::{det::sort_det_bsp, SortConfig};
 //!
 //! let p = 16;
@@ -37,11 +44,23 @@
 //! assert_eq!(sorted.len(), n_total);
 //! assert!(sorted.windows(2).all(|w| w[0] <= w[1]));
 //! println!("predicted T3D time: {:.3}s", run.ledger.predicted_secs(&params));
+//!
+//! // The identical program over a different `Key` domain — here
+//! // `(u32 key, u32 payload)` records riding satellite data:
+//! let rec_run = machine.run_keys::<Record, _, _>(|ctx| {
+//!     let recs: Vec<Record> = (0..64)
+//!         .map(|i| Record { key: (64 - i) as u32, payload: ctx.pid() as u32 })
+//!         .collect();
+//!     sort_det_bsp(ctx, &params, recs, 64 * p, &cfg).keys
+//! });
+//! let recs: Vec<Record> = rec_run.outputs.concat();
+//! assert!(recs.windows(2).all(|w| w[0] <= w[1]));
 //! ```
 
 pub mod baselines;
 pub mod bsp;
 pub mod gen;
+pub mod key;
 pub mod metrics;
 pub mod primitives;
 pub mod runtime;

@@ -104,8 +104,10 @@ fn run(cmd: &str, args: &Args) -> Result<(), Box<dyn std::error::Error>> {
                 "psrs" => runner::AlgoVariant::Psrs,
                 other => return Err(format!("unknown --algo {other}").into()),
             };
-            let bench = Benchmark::parse(args.get("bench").unwrap_or("U"))
-                .ok_or("unknown --bench (use U/G/B/2-G/S/DD/WR)")?;
+            // parse_strict: an unknown tag is a RuntimeError that lists
+            // the valid tags (the old path silently dropped to a generic
+            // message on `None`).
+            let bench = Benchmark::parse_strict(args.get("bench").unwrap_or("U"))?;
             let n: usize = args.get_parsed("n", 1 << 20)?;
             let p: usize = args.get_parsed("p", 8)?;
             let seq = match args.get("seq").unwrap_or("quick") {

@@ -14,38 +14,49 @@
 
 use crate::bsp::engine::BspCtx;
 use crate::bsp::msg::{Payload, SampleRec};
+use crate::key::{F64, Key, Record};
 use crate::seq::ops;
 
-/// Items that can ride a [`Payload`] through the merge-split exchange.
-pub trait BitonicItem: Ord + Copy {
-    fn pack(items: Vec<Self>) -> Payload;
-    fn unpack(payload: Payload) -> Vec<Self>;
+/// Items that can ride a [`Payload`] of key domain `K` through the
+/// merge-split exchange: tagged sample records (any domain, via the
+/// blanket impl) and the bare keys of each built-in domain.  A custom
+/// [`Key`] type opts its bare keys into the [BSI] baseline with the same
+/// three-line impl the macro below expands to.
+pub trait BitonicItem<K>: Ord + Copy {
+    fn pack(items: Vec<Self>) -> Payload<K>;
+    fn unpack(payload: Payload<K>) -> Vec<Self>;
     /// Words per item for charge bookkeeping (diagnostics only; the
     /// engine charges from the payload itself).
     fn words() -> u64;
 }
 
-impl BitonicItem for i32 {
-    fn pack(items: Vec<Self>) -> Payload {
-        Payload::Keys(items)
-    }
-    fn unpack(payload: Payload) -> Vec<Self> {
-        payload.into_keys()
-    }
-    fn words() -> u64 {
-        1
-    }
+macro_rules! bitonic_bare_key {
+    ($($t:ty),* $(,)?) => {$(
+        impl BitonicItem<$t> for $t {
+            fn pack(items: Vec<$t>) -> Payload<$t> {
+                Payload::Keys(items)
+            }
+            fn unpack(payload: Payload<$t>) -> Vec<$t> {
+                payload.into_keys()
+            }
+            fn words() -> u64 {
+                <$t as Key>::WORDS
+            }
+        }
+    )*};
 }
 
-impl BitonicItem for SampleRec {
-    fn pack(items: Vec<Self>) -> Payload {
+bitonic_bare_key!(i32, u64, F64, Record);
+
+impl<K: Key> BitonicItem<K> for SampleRec<K> {
+    fn pack(items: Vec<Self>) -> Payload<K> {
         Payload::Recs(items)
     }
-    fn unpack(payload: Payload) -> Vec<Self> {
+    fn unpack(payload: Payload<K>) -> Vec<Self> {
         payload.into_recs()
     }
     fn words() -> u64 {
-        SampleRec::WORDS
+        SampleRec::<K>::WORDS
     }
 }
 
@@ -54,7 +65,11 @@ impl BitonicItem for SampleRec {
 /// On return, processor `k` holds the `k`-th chunk of the global sorted
 /// order (all chunks the same length as the input run).  `label` prefixes
 /// the superstep labels.
-pub fn bitonic_sort<T: BitonicItem>(ctx: &mut BspCtx, mut run: Vec<T>, label: &str) -> Vec<T> {
+pub fn bitonic_sort<K: Key, T: BitonicItem<K>>(
+    ctx: &mut BspCtx<K>,
+    mut run: Vec<T>,
+    label: &str,
+) -> Vec<T> {
     let p = ctx.nprocs();
     assert!(p.is_power_of_two(), "bitonic sort requires p a power of two");
     debug_assert!(run.windows(2).all(|w| w[0] <= w[1]), "input run must be sorted");
@@ -82,8 +97,8 @@ pub fn bitonic_sort<T: BitonicItem>(ctx: &mut BspCtx, mut run: Vec<T>, label: &s
 
 /// One merge-split with `partner`: exchange runs, merge `mine` with the
 /// partner's run into `out` (cleared first), keeping the required half.
-fn merge_split<T: BitonicItem>(
-    ctx: &mut BspCtx,
+fn merge_split<K: Key, T: BitonicItem<K>>(
+    ctx: &mut BspCtx<K>,
     mine: &[T],
     out: &mut Vec<T>,
     partner: usize,
@@ -199,6 +214,23 @@ mod tests {
         assert_eq!(flat, expect);
         // Proc 0's records come first.
         assert!(flat[..8].iter().all(|r| r.proc == 0));
+    }
+
+    #[test]
+    fn sorts_u64_domain() {
+        // Bare keys of a non-default domain ride the generic payload.
+        let machine = BspMachine::new(cray_t3d(4));
+        let run = machine.run_keys::<u64, _, _>(|ctx| {
+            let mut local: Vec<u64> =
+                (0..8u64).map(|i| (i * 37 + ctx.pid() as u64 * 13) % 64).collect();
+            local.sort_unstable();
+            let inp = local.clone();
+            (inp, bitonic_sort(ctx, local, "u64"))
+        });
+        let mut expect: Vec<u64> = run.outputs.iter().flat_map(|(i, _)| i.clone()).collect();
+        expect.sort_unstable();
+        let got: Vec<u64> = run.outputs.into_iter().flat_map(|(_, o)| o).collect();
+        assert_eq!(got, expect);
     }
 
     #[test]

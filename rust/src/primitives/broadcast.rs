@@ -17,6 +17,7 @@
 use crate::bsp::engine::BspCtx;
 use crate::bsp::msg::{Payload, SampleRec};
 use crate::bsp::params::BspParams;
+use crate::key::Key;
 
 /// Cost (µs) of the one-superstep direct broadcast of `n` words.
 pub fn direct_cost_us(params: &BspParams, n: u64) -> f64 {
@@ -78,15 +79,15 @@ pub enum BroadcastPlan {
 /// processor returns the full message.  SPMD: all processors call this
 /// with the same `expected_len` (the sorts broadcast `p−1` splitters, a
 /// globally known length); only the root's `msg` is consulted.
-pub fn broadcast_recs(
-    ctx: &mut BspCtx,
+pub fn broadcast_recs<K: Key>(
+    ctx: &mut BspCtx<K>,
     params: &BspParams,
     root: usize,
-    msg: Vec<SampleRec>,
+    msg: Vec<SampleRec<K>>,
     expected_len: usize,
     label: &str,
-) -> Vec<SampleRec> {
-    let n_words = (expected_len as u64) * SampleRec::WORDS;
+) -> Vec<SampleRec<K>> {
+    let n_words = (expected_len as u64) * SampleRec::<K>::WORDS;
     match plan(params, n_words.max(1)) {
         BroadcastPlan::Direct => broadcast_direct(ctx, root, msg, label),
         BroadcastPlan::Tree { t } => {
@@ -96,12 +97,12 @@ pub fn broadcast_recs(
 }
 
 /// One-superstep direct broadcast.
-pub fn broadcast_direct(
-    ctx: &mut BspCtx,
+pub fn broadcast_direct<K: Key>(
+    ctx: &mut BspCtx<K>,
     root: usize,
-    msg: Vec<SampleRec>,
+    msg: Vec<SampleRec<K>>,
     label: &str,
-) -> Vec<SampleRec> {
+) -> Vec<SampleRec<K>> {
     let p = ctx.nprocs();
     if ctx.pid() == root {
         for dst in 0..p {
@@ -135,14 +136,14 @@ pub fn broadcast_direct(
 ///
 /// `expected_len` must be identical on all processors (it determines the
 /// superstep count); only the root's `msg` content matters.
-pub fn broadcast_tree(
-    ctx: &mut BspCtx,
+pub fn broadcast_tree<K: Key>(
+    ctx: &mut BspCtx<K>,
     root: usize,
-    msg: Vec<SampleRec>,
+    msg: Vec<SampleRec<K>>,
     t: usize,
     expected_len: usize,
     label: &str,
-) -> Vec<SampleRec> {
+) -> Vec<SampleRec<K>> {
     let p = ctx.nprocs();
     if p == 1 || expected_len == 0 {
         return msg;
@@ -172,7 +173,7 @@ pub fn broadcast_tree(
     if my_rank == 0 {
         assert_eq!(msg.len(), expected_len, "root message length mismatch");
     }
-    let mut received: Vec<Vec<SampleRec>> = vec![Vec::new(); num_segments];
+    let mut received: Vec<Vec<SampleRec<K>>> = vec![Vec::new(); num_segments];
     if my_rank == 0 {
         for (seg, chunk) in msg.chunks(m).enumerate() {
             received[seg] = chunk.to_vec();

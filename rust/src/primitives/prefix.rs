@@ -16,6 +16,7 @@
 use crate::bsp::engine::BspCtx;
 use crate::bsp::msg::Payload;
 use crate::bsp::params::BspParams;
+use crate::key::Key;
 
 /// Cost (µs) of the Lemma 4.2 tree prefix of `n` values, parameter `t`.
 pub fn tree_cost_us(params: &BspParams, n: u64, t: u64) -> f64 {
@@ -44,7 +45,11 @@ pub fn direct_cost_us(params: &BspParams, n: u64) -> f64 {
 /// Implementation is the direct two-superstep shape (the sorts call this
 /// with `n = p` counters, where `g·p²` is far below `L` on the T3D; the
 /// tree variant exists for the cost model and larger `n`).
-pub fn prefix_direct(ctx: &mut BspCtx, values: &[u64], label: &str) -> (Vec<u64>, Vec<u64>) {
+pub fn prefix_direct<K: Key>(
+    ctx: &mut BspCtx<K>,
+    values: &[u64],
+    label: &str,
+) -> (Vec<u64>, Vec<u64>) {
     let p = ctx.nprocs();
     let n = values.len();
     // Gather to processor 0.

@@ -1,10 +1,11 @@
-//! Std-only error type for the runtime layer.
+//! Std-only error type for the runtime layer and the CLI surface.
 //!
 //! The workspace ships **zero third-party crates** (see `util/mod.rs`);
 //! this layer previously pulled in `anyhow`, which broke offline builds.
 //! A small enum covers the three failure surfaces the runtime has —
 //! artifact discovery, the XLA/PJRT backend, and the offload service —
-//! plus the compiled-out marker used when the `xla` feature is off.
+//! plus the compiled-out marker used when the `xla` feature is off and
+//! the CLI's unknown-benchmark-tag error (`gen::Benchmark::parse_strict`).
 
 use std::fmt;
 
@@ -22,6 +23,12 @@ pub enum RuntimeError {
     /// The crate was built without the `xla` feature: the PJRT path is
     /// compiled out and only the artifact registry is available.
     Disabled(&'static str),
+    /// An unknown benchmark tag reached a user-facing entry point; the
+    /// message names the offending tag and the accepted set.
+    UnknownBenchmark {
+        given: String,
+        valid: &'static [&'static str],
+    },
 }
 
 impl fmt::Display for RuntimeError {
@@ -31,6 +38,9 @@ impl fmt::Display for RuntimeError {
             RuntimeError::Backend(msg) => write!(f, "xla backend: {msg}"),
             RuntimeError::Service(msg) => write!(f, "xla service: {msg}"),
             RuntimeError::Disabled(msg) => write!(f, "xla disabled: {msg}"),
+            RuntimeError::UnknownBenchmark { given, valid } => {
+                write!(f, "unknown benchmark tag {given:?}; valid tags: {}", valid.join(", "))
+            }
         }
     }
 }
@@ -51,6 +61,16 @@ mod tests {
             .contains("missing dir"));
         assert!(RuntimeError::Backend("compile".into()).to_string().contains("compile"));
         assert!(RuntimeError::Service("stopped".into()).to_string().contains("stopped"));
+    }
+
+    #[test]
+    fn unknown_benchmark_lists_valid_tags() {
+        let e = RuntimeError::UnknownBenchmark {
+            given: "zzz".into(),
+            valid: &["U", "DD"],
+        };
+        let msg = e.to_string();
+        assert!(msg.contains("\"zzz\"") && msg.contains("U, DD"), "{msg}");
     }
 
     #[test]

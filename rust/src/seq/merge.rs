@@ -9,8 +9,10 @@
 //! sequences are equal the one received from processor i appears before
 //! the one received from processor j, i < j").
 
+use crate::key::Key;
+
 /// Stable two-way merge of sorted `a` and `b` (ties favour `a`).
-pub fn merge2(a: &[i32], b: &[i32]) -> Vec<i32> {
+pub fn merge2<T: Copy + Ord>(a: &[T], b: &[T]) -> Vec<T> {
     let mut out = Vec::with_capacity(a.len() + b.len());
     let (mut i, mut j) = (0, 0);
     while i < a.len() && j < b.len() {
@@ -31,7 +33,7 @@ pub fn merge2(a: &[i32], b: &[i32]) -> Vec<i32> {
 ///
 /// Runs are ordered: ties between heads resolve to the lower run index,
 /// making the output stable with respect to run order.
-pub fn multiway_merge(runs: &[Vec<i32>]) -> Vec<i32> {
+pub fn multiway_merge<K: Key>(runs: &[Vec<K>]) -> Vec<K> {
     multiway_merge_slices(&runs.iter().map(|r| r.as_slice()).collect::<Vec<_>>())
 }
 
@@ -39,7 +41,7 @@ pub fn multiway_merge(runs: &[Vec<i32>]) -> Vec<i32> {
 /// when no real merging is required (zero or one non-empty run).  The
 /// Ph6 hand-off uses this so a degenerate routing round — everything
 /// from one sender — costs no extra copy at all.
-pub fn multiway_merge_owned(mut runs: Vec<Vec<i32>>) -> Vec<i32> {
+pub fn multiway_merge_owned<K: Key>(mut runs: Vec<Vec<K>>) -> Vec<K> {
     runs.retain(|r| !r.is_empty());
     match runs.len() {
         0 => Vec::new(),
@@ -49,7 +51,7 @@ pub fn multiway_merge_owned(mut runs: Vec<Vec<i32>>) -> Vec<i32> {
 }
 
 /// Slice-based variant (no ownership needed).
-pub fn multiway_merge_slices(runs: &[&[i32]]) -> Vec<i32> {
+pub fn multiway_merge_slices<K: Key>(runs: &[&[K]]) -> Vec<K> {
     let q = runs.len();
     let total: usize = runs.iter().map(|r| r.len()).sum();
     match q {
@@ -69,46 +71,49 @@ pub fn multiway_merge_slices(runs: &[&[i32]]) -> Vec<i32> {
 
 /// A loser tree over `q` runs with *cached head keys*: each node stores
 /// `(key, run)` so a pop replays one leaf-to-root path with `⌈lg q⌉`
-/// integer comparisons and no indirection through the run slices.
+/// cached-key comparisons and no indirection through the run slices.
 ///
-/// Exhausted runs hold the sentinel `(i32::MAX, u32::MAX)`; a *real*
-/// `i32::MAX` key still wins against the sentinel because ties resolve
-/// to the lower run index — no key value is reserved.
-struct LoserTree<'a> {
-    runs: &'a [&'a [i32]],
+/// Exhausted runs hold the sentinel `(K::max_key(), u32::MAX)`; a *real*
+/// maximal key still wins against the sentinel because ties resolve to
+/// the lower run index — no key value is reserved.
+struct LoserTree<'a, K: Key> {
+    runs: &'a [&'a [K]],
     cursors: Vec<usize>,
     /// Internal nodes `tree[1..k]` store losers; `tree[0]` the champion.
-    tree: Vec<(i32, u32)>,
+    tree: Vec<(K, u32)>,
     k: usize,
     remaining: usize,
 }
 
-const SENTINEL: (i32, u32) = (i32::MAX, u32::MAX);
+#[inline]
+fn sentinel<K: Key>() -> (K, u32) {
+    (K::max_key(), u32::MAX)
+}
 
 #[inline]
-fn beats(a: (i32, u32), b: (i32, u32)) -> bool {
+fn beats<K: Key>(a: (K, u32), b: (K, u32)) -> bool {
     a.0 < b.0 || (a.0 == b.0 && a.1 < b.1)
 }
 
-impl<'a> LoserTree<'a> {
-    fn new(runs: &'a [&'a [i32]]) -> Self {
+impl<'a, K: Key> LoserTree<'a, K> {
+    fn new(runs: &'a [&'a [K]]) -> Self {
         let q = runs.len();
         let k = q.next_power_of_two();
         let remaining = runs.iter().map(|r| r.len()).sum();
         let mut lt = LoserTree {
             runs,
             cursors: vec![0; q],
-            tree: vec![SENTINEL; k],
+            tree: vec![sentinel::<K>(); k],
             k,
             remaining,
         };
         // Bottom-up tournament: winners bubble up, each internal node
         // stores its loser, the champion lands in tree[0].
-        let mut winners = vec![SENTINEL; 2 * k];
+        let mut winners = vec![sentinel::<K>(); 2 * k];
         for (i, slot) in winners[k..k + q].iter_mut().enumerate() {
             *slot = match runs[i].first() {
                 Some(&key) => (key, i as u32),
-                None => SENTINEL,
+                None => sentinel::<K>(),
             };
         }
         for node in (1..k).rev() {
@@ -123,7 +128,7 @@ impl<'a> LoserTree<'a> {
 
     /// Remove and return the smallest head across all runs.
     #[inline]
-    fn pop(&mut self) -> Option<i32> {
+    fn pop(&mut self) -> Option<K> {
         if self.remaining == 0 {
             return None;
         }
@@ -134,7 +139,7 @@ impl<'a> LoserTree<'a> {
         self.cursors[run_idx] += 1;
         let mut winner = match self.runs[run_idx].get(self.cursors[run_idx]) {
             Some(&next) => (next, run),
-            None => SENTINEL,
+            None => sentinel::<K>(),
         };
         // Replay the leaf-to-root path (⌈lg q⌉ cached-key comparisons).
         let mut node = (self.k + run_idx) / 2;

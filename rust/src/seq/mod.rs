@@ -8,6 +8,8 @@ pub mod quicksort;
 pub mod radixsort;
 pub mod search;
 
+use crate::key::{Key, RadixKey};
+
 pub use merge::{merge2, multiway_merge, multiway_merge_owned, multiway_merge_slices};
 pub use quicksort::quicksort;
 pub use radixsort::radixsort;
@@ -50,20 +52,22 @@ impl SeqSortKind {
     }
 }
 
-/// A sequential sort backend usable inside a BSP processor.
-pub trait SeqSorter: Sync {
+/// A sequential sort backend usable inside a BSP processor, generic over
+/// the key domain (default `i32`, so `&dyn SeqSorter` keeps meaning the
+/// paper's integer backends — the XLA sorter implements exactly that).
+pub trait SeqSorter<K: Key = i32>: Sync {
     /// Sort `keys` ascending in place.
-    fn sort(&self, keys: &mut Vec<i32>);
+    fn sort(&self, keys: &mut Vec<K>);
     /// Charged operations for sorting `n` keys (analytic, §1.1 policy).
     fn charge(&self, n: usize) -> f64;
     fn name(&self) -> &'static str;
 }
 
-/// Quicksort backend ([.SQ] variants).
+/// Quicksort backend ([.SQ] variants) — any [`Key`] domain.
 pub struct QuickSorter;
 
-impl SeqSorter for QuickSorter {
-    fn sort(&self, keys: &mut Vec<i32>) {
+impl<K: Key> SeqSorter<K> for QuickSorter {
+    fn sort(&self, keys: &mut Vec<K>) {
         quicksort::quicksort(keys);
     }
     fn charge(&self, n: usize) -> f64 {
@@ -74,15 +78,19 @@ impl SeqSorter for QuickSorter {
     }
 }
 
-/// Radixsort backend ([.SR] variants).
+/// Radixsort backend ([.SR] variants) — domains with a radix image.
 pub struct RadixSorter;
 
-impl SeqSorter for RadixSorter {
-    fn sort(&self, keys: &mut Vec<i32>) {
+impl<K: RadixKey> SeqSorter<K> for RadixSorter {
+    fn sort(&self, keys: &mut Vec<K>) {
         radixsort::radixsort(keys);
     }
     fn charge(&self, n: usize) -> f64 {
-        ops::radix_charge(n)
+        // `radix_charge` calibrates the paper's 4-pass 32-bit sort
+        // (15 ops/key, Table 6); wider domains run `K::RADIX_PASSES`
+        // passes of the same counting kernel, so the charge scales
+        // linearly in the pass count (×1 exactly for `i32`).
+        ops::radix_charge(n) * (K::RADIX_PASSES as f64 / 4.0)
     }
     fn name(&self) -> &'static str {
         "radixsort"
@@ -91,7 +99,7 @@ impl SeqSorter for RadixSorter {
 
 /// Obtain a boxed backend for a kind (Xla requires the runtime and is
 /// constructed in `runtime::xla_sort`).
-pub fn backend(kind: SeqSortKind) -> Box<dyn SeqSorter> {
+pub fn backend<K: RadixKey>(kind: SeqSortKind) -> Box<dyn SeqSorter<K>> {
     match kind {
         SeqSortKind::Quick => Box::new(QuickSorter),
         SeqSortKind::Radix => Box::new(RadixSorter),
@@ -112,6 +120,16 @@ mod tests {
             assert_eq!(keys, vec![-3, -3, 0, 5, 5, 9], "{}", b.name());
             assert!(b.charge(1024) > 0.0);
         }
+    }
+
+    #[test]
+    fn radix_charge_scales_with_pass_count() {
+        // 8-pass domains (u64/f64/records) cost twice the 4-pass i32
+        // calibration; i32 itself stays exactly at the Table 6 rate.
+        let i32_charge = SeqSorter::<i32>::charge(&RadixSorter, 1024);
+        let u64_charge = SeqSorter::<u64>::charge(&RadixSorter, 1024);
+        assert!((i32_charge - ops::radix_charge(1024)).abs() < 1e-9);
+        assert!((u64_charge - 2.0 * i32_charge).abs() < 1e-9);
     }
 
     #[test]

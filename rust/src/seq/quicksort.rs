@@ -3,7 +3,9 @@
 //! Matches the construction of the paper's ANSI C implementation:
 //! median-of-three pivoting [18], explicit small-partition insertion-sort
 //! cutoff, and recursion on the smaller side only (the larger side loops)
-//! so stack depth is `O(lg n)`.  Sorts `i32` keys in place.
+//! so stack depth is `O(lg n)`.  Generic over any `Copy + Ord` key (the
+//! comparison sort needs nothing else from the [`crate::key::Key`]
+//! contract); sorts in place.
 //!
 //! The paper's T3D build sorts 1M keys in ~3 s ≈ 7 comparisons/µs; our
 //! charge policy prices this sort at `n lg n` comparisons (ops.rs).
@@ -11,13 +13,13 @@
 const INSERTION_CUTOFF: usize = 24;
 
 /// Sort `a` ascending, in place.
-pub fn quicksort(a: &mut [i32]) {
+pub fn quicksort<T: Copy + Ord>(a: &mut [T]) {
     if a.len() > 1 {
         quicksort_range(a);
     }
 }
 
-fn quicksort_range(mut a: &mut [i32]) {
+fn quicksort_range<T: Copy + Ord>(mut a: &mut [T]) {
     loop {
         let n = a.len();
         if n <= INSERTION_CUTOFF {
@@ -54,7 +56,7 @@ fn quicksort_range(mut a: &mut [i32]) {
 /// because `median_of_three` guarantees both scan directions hit a
 /// stopper (`a[mid] == pivot`, `a[0] <= pivot <= a[n-1]`) and the swap
 /// re-establishes stoppers on both sides.
-fn hoare_partition(a: &mut [i32], pivot: i32) -> usize {
+fn hoare_partition<T: Copy + Ord>(a: &mut [T], pivot: T) -> usize {
     let n = a.len();
     let ptr = a.as_mut_ptr();
     unsafe {
@@ -81,7 +83,7 @@ fn hoare_partition(a: &mut [i32], pivot: i32) -> usize {
 }
 
 /// Median of first/middle/last (also sorts those three positions).
-fn median_of_three(a: &mut [i32]) -> i32 {
+fn median_of_three<T: Copy + Ord>(a: &mut [T]) -> T {
     let n = a.len();
     let (lo, mid, hi) = (0, n / 2, n - 1);
     if a[mid] < a[lo] {
@@ -97,7 +99,7 @@ fn median_of_three(a: &mut [i32]) -> i32 {
 }
 
 /// Insertion sort for small partitions.
-pub fn insertion_sort(a: &mut [i32]) {
+pub fn insertion_sort<T: Copy + Ord>(a: &mut [T]) {
     for i in 1..a.len() {
         let key = a[i];
         let mut j = i;
@@ -170,6 +172,23 @@ mod tests {
             quicksort(&mut d);
             assert!(is_sorted(&d));
         }
+    }
+
+    #[test]
+    fn sorts_total_ordered_f64_including_nan() {
+        use crate::key::F64;
+        let mut a = vec![
+            F64(1.0),
+            F64(f64::NAN),
+            F64(-0.0),
+            F64(0.0),
+            F64(f64::NEG_INFINITY),
+        ];
+        quicksort(&mut a);
+        assert!(a.windows(2).all(|w| w[0] <= w[1]));
+        assert_eq!(a[0], F64(f64::NEG_INFINITY));
+        assert_eq!(a[1], F64(-0.0));
+        assert_eq!(a[4], F64(f64::NAN));
     }
 
     #[test]

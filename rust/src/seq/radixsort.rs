@@ -1,31 +1,32 @@
-//! LSD radix sort for 32-bit integer keys (the paper's `SORT_SEQ` integer
-//! variant, used by the [DSR]/[RSR] implementations).
+//! LSD radix sort (the paper's `SORT_SEQ` integer variant, used by the
+//! [DSR]/[RSR] implementations), generic over any [`RadixKey`].
 //!
-//! Four 8-bit passes over a bias-mapped unsigned image of the key
-//! (`key ^ i32::MIN` orders identically to signed order), counting sort
-//! per pass with a ping-pong buffer.  Stable (irrelevant for bare keys but
-//! required by the tagged variant used in tests), linear time; the charge
-//! policy prices it at 15 comparisons-equivalents per key (ops.rs).
+//! `K::RADIX_PASSES` 8-bit passes over the key's order-preserving
+//! unsigned image (`radix_image`: the bias map `key ^ i32::MIN` for
+//! `i32`, total-order bits for `f64`, the packed word for records),
+//! counting sort per pass with a ping-pong buffer.  Stable (irrelevant
+//! for bare keys but required by the tagged variant used in tests),
+//! linear time; the charge policy prices it at 15 comparison-equivalents
+//! per key (ops.rs).
+
+use crate::key::RadixKey;
 
 /// Sort `a` ascending in place (allocates one scratch buffer).
-pub fn radixsort(a: &mut Vec<i32>) {
+pub fn radixsort<K: RadixKey>(a: &mut [K]) {
     let n = a.len();
     if n <= 1 {
         return;
     }
-    let mut scratch: Vec<i32> = vec![0; n];
+    let mut scratch: Vec<K> = vec![a[0]; n];
     let mut src_is_a = true;
-    for pass in 0..4 {
+    for pass in 0..K::RADIX_PASSES {
         let shift = pass * 8;
-        let (src, dst): (&[i32], &mut [i32]) = if src_is_a {
+        let (src, dst): (&[K], &mut [K]) = if src_is_a {
             (&a[..], &mut scratch[..])
         } else {
             (&scratch[..], &mut a[..])
         };
-        if !counting_pass(src, dst, shift) {
-            // Pass was a no-op permutation (single bucket): data already
-            // placed in dst by the copy inside counting_pass.
-        }
+        counting_pass(src, dst, shift);
         src_is_a = !src_is_a;
     }
     if !src_is_a {
@@ -33,63 +34,53 @@ pub fn radixsort(a: &mut Vec<i32>) {
     }
 }
 
-/// One stable counting pass on byte `shift/8`; returns false if all keys
-/// share the byte (still copies src→dst to keep the ping-pong invariant).
-fn counting_pass(src: &[i32], dst: &mut [i32], shift: u32) -> bool {
+/// One stable counting pass on byte `shift/8` of the radix image.
+fn counting_pass<K: RadixKey>(src: &[K], dst: &mut [K], shift: u32) {
     let mut counts = [0usize; 256];
     for &k in src {
-        let b = (biased(k) >> shift) & 0xFF;
-        counts[b as usize] += 1;
+        counts[((k.radix_image() >> shift) & 0xFF) as usize] += 1;
     }
-    let distinct = counts.iter().filter(|&&c| c > 0).count();
     let mut offsets = [0usize; 256];
     let mut sum = 0usize;
-    for i in 0..256 {
-        offsets[i] = sum;
-        sum += counts[i];
+    for (offset, &count) in offsets.iter_mut().zip(counts.iter()) {
+        *offset = sum;
+        sum += count;
     }
     for &k in src {
-        let b = ((biased(k) >> shift) & 0xFF) as usize;
+        let b = ((k.radix_image() >> shift) & 0xFF) as usize;
         dst[offsets[b]] = k;
         offsets[b] += 1;
     }
-    distinct > 1
-}
-
-/// Map a signed key to an unsigned image with identical ordering.
-#[inline]
-fn biased(k: i32) -> u32 {
-    (k as u32) ^ 0x8000_0000
 }
 
 /// Radix sort of `(key, payload)` pairs by key — used by tests asserting
 /// the stability the paper's §5.1.1 duplicate handling relies on.
-pub fn radixsort_pairs(a: &mut Vec<(i32, u32)>) {
+pub fn radixsort_pairs<K: RadixKey>(a: &mut [(K, u32)]) {
     let n = a.len();
     if n <= 1 {
         return;
     }
-    let mut scratch: Vec<(i32, u32)> = vec![(0, 0); n];
+    let mut scratch: Vec<(K, u32)> = vec![a[0]; n];
     let mut src_is_a = true;
-    for pass in 0..4 {
+    for pass in 0..K::RADIX_PASSES {
         let shift = pass * 8;
-        let (src, dst): (&[(i32, u32)], &mut [(i32, u32)]) = if src_is_a {
+        let (src, dst): (&[(K, u32)], &mut [(K, u32)]) = if src_is_a {
             (&a[..], &mut scratch[..])
         } else {
             (&scratch[..], &mut a[..])
         };
         let mut counts = [0usize; 256];
         for &(k, _) in src {
-            counts[((biased(k) >> shift) & 0xFF) as usize] += 1;
+            counts[((k.radix_image() >> shift) & 0xFF) as usize] += 1;
         }
         let mut offsets = [0usize; 256];
         let mut sum = 0usize;
-        for i in 0..256 {
-            offsets[i] = sum;
-            sum += counts[i];
+        for (offset, &count) in offsets.iter_mut().zip(counts.iter()) {
+            *offset = sum;
+            sum += count;
         }
         for &it in src {
-            let b = ((biased(it.0) >> shift) & 0xFF) as usize;
+            let b = ((it.0.radix_image() >> shift) & 0xFF) as usize;
             dst[offsets[b]] = it;
             offsets[b] += 1;
         }
@@ -103,6 +94,7 @@ pub fn radixsort_pairs(a: &mut Vec<(i32, u32)>) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::key::{F64, Record};
     use crate::util::check::{arb_keys, check};
 
     #[test]
@@ -144,6 +136,39 @@ mod tests {
             radixsort(&mut keys);
             assert_eq!(keys, expect);
         });
+    }
+
+    #[test]
+    fn sorts_u64_and_f64_domains_property() {
+        check("radixsort-wide-domains", |rng| {
+            let mut u: Vec<u64> = (0..500).map(|_| rng.next_u64()).collect();
+            let mut expect_u = u.clone();
+            expect_u.sort_unstable();
+            radixsort(&mut u);
+            assert_eq!(u, expect_u);
+
+            // Arbitrary bit patterns include NaNs, ±0, subnormals — the
+            // total-order image must sort them all deterministically.
+            let mut f: Vec<F64> = (0..500).map(|_| F64(f64::from_bits(rng.next_u64()))).collect();
+            let mut expect_f = f.clone();
+            expect_f.sort_unstable();
+            radixsort(&mut f);
+            assert_eq!(f, expect_f);
+        });
+    }
+
+    #[test]
+    fn sorts_records_lexicographically() {
+        let mut recs = vec![
+            Record { key: 2, payload: 0 },
+            Record { key: 1, payload: 9 },
+            Record { key: 2, payload: 7 },
+            Record { key: 0, payload: 3 },
+        ];
+        let mut expect = recs.clone();
+        expect.sort_unstable();
+        radixsort(&mut recs);
+        assert_eq!(recs, expect);
     }
 
     #[test]

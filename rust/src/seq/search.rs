@@ -8,13 +8,14 @@
 //! and deterministically across processors without tagging the data.
 
 use crate::bsp::msg::SampleRec;
+use crate::key::Key;
 
 /// Number of leading keys of `keys` (sorted ascending, owned by `pid`)
 /// that order strictly before splitter `s` under the tagged comparison.
 ///
 /// Equal keys resolve by `(proc, idx)`: all equal keys on processors
 /// `< s.proc` go left; on `s.proc` itself, those with index `< s.idx`.
-pub fn rank_before_splitter(keys: &[i32], pid: usize, s: &SampleRec) -> usize {
+pub fn rank_before_splitter<K: Key>(keys: &[K], pid: usize, s: &SampleRec<K>) -> usize {
     let pid = pid as u32;
     // Find the boundary with a single binary search over the compound
     // order; the compound key of position i is (keys[i], pid, i), which
@@ -36,7 +37,7 @@ pub fn rank_before_splitter(keys: &[i32], pid: usize, s: &SampleRec) -> usize {
 /// Partition boundaries of `keys` induced by `splitters` (sorted by the
 /// tagged order): returns `splitters.len() + 1` bucket extents as
 /// cut positions `0 = c_0 <= c_1 <= ... <= c_p = keys.len()`.
-pub fn partition_points(keys: &[i32], pid: usize, splitters: &[SampleRec]) -> Vec<usize> {
+pub fn partition_points<K: Key>(keys: &[K], pid: usize, splitters: &[SampleRec<K>]) -> Vec<usize> {
     let mut cuts = Vec::with_capacity(splitters.len() + 2);
     cuts.push(0);
     for s in splitters {
@@ -50,7 +51,7 @@ pub fn partition_points(keys: &[i32], pid: usize, splitters: &[SampleRec]) -> Ve
 }
 
 /// Plain lower bound (first index with `keys[i] >= x`).
-pub fn lower_bound(keys: &[i32], x: i32) -> usize {
+pub fn lower_bound<T: Copy + Ord>(keys: &[T], x: T) -> usize {
     let mut lo = 0usize;
     let mut hi = keys.len();
     while lo < hi {
@@ -65,7 +66,7 @@ pub fn lower_bound(keys: &[i32], x: i32) -> usize {
 }
 
 /// Plain upper bound (first index with `keys[i] > x`).
-pub fn upper_bound(keys: &[i32], x: i32) -> usize {
+pub fn upper_bound<T: Copy + Ord>(keys: &[T], x: T) -> usize {
     let mut lo = 0usize;
     let mut hi = keys.len();
     while lo < hi {

@@ -8,7 +8,8 @@
 //! ablation bench (benches/ablation.rs) reproduces.
 
 use crate::bsp::engine::BspCtx;
-use crate::primitives::bitonic;
+use crate::key::{Key, RadixKey};
+use crate::primitives::bitonic::{self, BitonicItem};
 use crate::seq::{QuickSorter, RadixSorter, SeqSortKind, SeqSorter};
 
 use super::common::{ProcResult, PH2, PH5};
@@ -16,8 +17,13 @@ use super::config::SortConfig;
 
 /// Run the full bitonic sort; every processor ends with its chunk of the
 /// global order.  Requires equal local sizes and `p` a power of two.
-pub fn sort_bsi(ctx: &mut BspCtx, mut local: Vec<i32>, cfg: &SortConfig) -> ProcResult {
-    let sorter: &dyn SeqSorter = match cfg.seq {
+/// The domain's bare keys must ride the payload (`K: BitonicItem<K>` —
+/// provided for every built-in domain).
+pub fn sort_bsi<K>(ctx: &mut BspCtx<K>, mut local: Vec<K>, cfg: &SortConfig) -> ProcResult<K>
+where
+    K: RadixKey + BitonicItem<K>,
+{
+    let sorter: &dyn SeqSorter<K> = match cfg.seq {
         SeqSortKind::Quick => &QuickSorter,
         SeqSortKind::Radix => &RadixSorter,
         SeqSortKind::Xla => panic!("use sort_bsi_with for a custom backend"),
@@ -26,12 +32,15 @@ pub fn sort_bsi(ctx: &mut BspCtx, mut local: Vec<i32>, cfg: &SortConfig) -> Proc
 }
 
 /// As [`sort_bsi`] with an explicit sequential backend.
-pub fn sort_bsi_with(
-    ctx: &mut BspCtx,
-    local: &mut Vec<i32>,
+pub fn sort_bsi_with<K>(
+    ctx: &mut BspCtx<K>,
+    local: &mut Vec<K>,
     _cfg: &SortConfig,
-    sorter: &dyn SeqSorter,
-) -> ProcResult {
+    sorter: &dyn SeqSorter<K>,
+) -> ProcResult<K>
+where
+    K: Key + BitonicItem<K>,
+{
     ctx.phase(PH2);
     ctx.charge(sorter.charge(local.len()));
     let mut keys = std::mem::take(local);

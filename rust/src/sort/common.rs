@@ -9,6 +9,7 @@
 use crate::bsp::engine::BspCtx;
 use crate::bsp::msg::{Payload, SampleRec};
 use crate::bsp::params::BspParams;
+use crate::key::Key;
 use crate::primitives::{bitonic, broadcast};
 use crate::seq::{ops, search};
 
@@ -22,11 +23,12 @@ pub const PH5: &str = "Ph5:Routing";
 pub const PH6: &str = "Ph6:Merging";
 pub const PH7: &str = "Ph7:Term";
 
-/// Per-processor result of a sorting run.
+/// Per-processor result of a sorting run (key domain defaults to the
+/// paper's `i32`).
 #[derive(Clone, Debug)]
-pub struct ProcResult {
+pub struct ProcResult<K = i32> {
     /// This processor's chunk of the global sorted order.
-    pub keys: Vec<i32>,
+    pub keys: Vec<K>,
     /// Keys received during routing (the Lemma 5.1 imbalance subject).
     pub received: usize,
     /// Number of non-empty runs merged in Ph6.
@@ -41,18 +43,13 @@ pub struct ProcResult {
 /// For the regular case `m = s·p` the two agree exactly.  An empty
 /// sample yields maximal sentinel splitters so every key stays in the
 /// low buckets instead of panicking.
-pub fn select_splitters(sorted: &[SampleRec], p: usize) -> Vec<SampleRec> {
+pub fn select_splitters<K: Key>(sorted: &[SampleRec<K>], p: usize) -> Vec<SampleRec<K>> {
     if p <= 1 {
         return Vec::new();
     }
     let m = sorted.len();
     if m == 0 {
-        let sentinel = SampleRec {
-            key: i32::MAX,
-            proc: u32::MAX,
-            idx: u32::MAX,
-        };
-        return vec![sentinel; p - 1];
+        return vec![SampleRec::max_rec(); p - 1];
     }
     (1..p)
         .map(|i| sorted[((i * m) / p).saturating_sub(1).min(m - 1)])
@@ -69,13 +66,13 @@ pub fn select_splitters(sorted: &[SampleRec], p: usize) -> Vec<SampleRec> {
 ///   which broadcasts the splitter set (steps 5–7 / Lemma 4.1).
 /// * `Sequential` — gather the whole sample at processor 0, sort there,
 ///   select evenly spaced splitters, broadcast (SORT_RAN_BSP's shape).
-pub fn sample_sort_and_splitters(
-    ctx: &mut BspCtx,
+pub fn sample_sort_and_splitters<K: Key>(
+    ctx: &mut BspCtx<K>,
     params: &BspParams,
-    sample: Vec<SampleRec>,
+    sample: Vec<SampleRec<K>>,
     method: SampleSortMethod,
     label: &str,
-) -> Vec<SampleRec> {
+) -> Vec<SampleRec<K>> {
     let p = ctx.nprocs();
     if p == 1 {
         return Vec::new();
@@ -110,7 +107,7 @@ pub fn sample_sort_and_splitters(
             ctx.send(0, Payload::Recs(sample));
             ctx.sync(&format!("{label}:gather-sample"));
             let splitters = if ctx.pid() == 0 {
-                let mut all: Vec<SampleRec> = ctx
+                let mut all: Vec<SampleRec<K>> = ctx
                     .take_inbox()
                     .into_iter()
                     .flat_map(|(_, payload)| payload.into_recs())
@@ -132,12 +129,12 @@ pub fn sample_sort_and_splitters(
 /// tagged tie-break), run the Ph4 prefix over bucket counts, route each
 /// contiguous slice in a single superstep, and stable-merge the received
 /// runs.
-pub fn partition_route_merge(
-    ctx: &mut BspCtx,
-    keys: Vec<i32>,
-    splitters: &[SampleRec],
+pub fn partition_route_merge<K: Key>(
+    ctx: &mut BspCtx<K>,
+    keys: Vec<K>,
+    splitters: &[SampleRec<K>],
     cfg: &SortConfig,
-) -> ProcResult {
+) -> ProcResult<K> {
     let p = ctx.nprocs();
     let pid = ctx.pid();
     let n_local = keys.len();
@@ -154,7 +151,7 @@ pub fn partition_route_merge(
     ctx.phase(PH4);
     // Binary search of the p−1 splitters into the local sorted keys
     // (the cheaper direction, as §5.2 notes): (p−1)·⌈lg(n/p)⌉ charges.
-    let effective: Vec<SampleRec> = match cfg.dup {
+    let effective: Vec<SampleRec<K>> = match cfg.dup {
         DuplicatePolicy::Tagged => splitters.to_vec(),
         // Ablation: strip tags so ties resolve by key only.
         DuplicatePolicy::Off => splitters
@@ -179,7 +176,7 @@ pub fn partition_route_merge(
     // tail bucket by bucket: bucket 0 keeps `keys`' own allocation, so
     // each routed key is copied out at most once (and the payloads then
     // *move* through the slot matrix — routing is one copy, not two).
-    let mut parts: Vec<Payload> = Vec::with_capacity(p);
+    let mut parts: Vec<Payload<K>> = Vec::with_capacity(p);
     let mut head = keys;
     for i in (1..p).rev() {
         parts.push(Payload::Keys(head.split_off(cuts[i])));
@@ -191,7 +188,7 @@ pub fn partition_route_merge(
 
     // --- Ph6: stable multi-way merge ----------------------------------
     ctx.phase(PH6);
-    let runs: Vec<Vec<i32>> = inbox
+    let runs: Vec<Vec<K>> = inbox
         .into_iter()
         .filter(|(_, payload)| !payload.is_empty())
         .map(|(_, payload)| payload.into_keys())
@@ -220,14 +217,14 @@ pub fn partition_route_merge(
 /// tagged records.  Padding semantics: segment size is
 /// `x = ⌈⌈n/p⌉/s⌉`; positions past the end read the local maximum with
 /// their (virtual) padded index as the tag, keeping tags distinct.
-pub fn regular_sample(keys: &[i32], pid: usize, s: usize) -> Vec<SampleRec> {
+pub fn regular_sample<K: Key>(keys: &[K], pid: usize, s: usize) -> Vec<SampleRec<K>> {
     debug_assert!(s >= 1);
     let n = keys.len();
     if n == 0 {
         // Empty local run: pad with the maximal key but keep the virtual
         // indices distinct — the §5.1.1 tie-break depends on every
         // sample record having a distinct (proc, idx) tag.
-        return (0..s).map(|j| SampleRec::new(i32::MAX, pid, j)).collect();
+        return (0..s).map(|j| SampleRec::new(K::max_key(), pid, j)).collect();
     }
     let x = n.div_ceil(s).max(1);
     let mut out = Vec::with_capacity(s);

@@ -12,6 +12,7 @@
 
 use crate::bsp::engine::BspCtx;
 use crate::bsp::params::BspParams;
+use crate::key::{Key, RadixKey};
 use crate::seq::{SeqSorter, SeqSortKind, QuickSorter, RadixSorter};
 
 use super::common::{self, ProcResult, PH2, PH3};
@@ -31,19 +32,22 @@ pub fn nmax_bound(n_total: usize, p: usize, omega: f64) -> f64 {
 
 /// Run SORT_DET_BSP on this processor's share `local` of the input.
 ///
-/// SPMD: every processor calls this inside `BspMachine::run`.  `n_total`
-/// is the global input size (known to all, as in the paper).  Returns
-/// this processor's chunk of the global sorted order plus routing stats.
-pub fn sort_det_bsp(
-    ctx: &mut BspCtx,
+/// SPMD: every processor calls this inside `BspMachine::run` (or
+/// `run_keys` for a non-default key domain).  `n_total` is the global
+/// input size (known to all, as in the paper).  Returns this processor's
+/// chunk of the global sorted order plus routing stats.  `K: RadixKey`
+/// because `cfg.seq` may select the radix backend; a quicksort-only
+/// custom key type goes through [`sort_det_bsp_with`].
+pub fn sort_det_bsp<K: RadixKey>(
+    ctx: &mut BspCtx<K>,
     params: &BspParams,
-    mut local: Vec<i32>,
+    mut local: Vec<K>,
     n_total: usize,
     cfg: &SortConfig,
-) -> ProcResult {
+) -> ProcResult<K> {
     // Static backends need no boxing — keep the per-run setup
     // allocation-free like the rest of the hot path.
-    let sorter: &dyn SeqSorter = match cfg.seq {
+    let sorter: &dyn SeqSorter<K> = match cfg.seq {
         SeqSortKind::Quick => &QuickSorter,
         SeqSortKind::Radix => &RadixSorter,
         SeqSortKind::Xla => panic!("use sort_det_bsp_with for a custom backend"),
@@ -52,15 +56,16 @@ pub fn sort_det_bsp(
 }
 
 /// As [`sort_det_bsp`] but with an explicit sequential backend (used by
-/// the XLA-backed variant and by tests injecting instrumented sorters).
-pub fn sort_det_bsp_with(
-    ctx: &mut BspCtx,
+/// the XLA-backed variant and by tests injecting instrumented sorters);
+/// only the bare [`Key`] contract is required of the domain.
+pub fn sort_det_bsp_with<K: Key>(
+    ctx: &mut BspCtx<K>,
     params: &BspParams,
-    local: &mut Vec<i32>,
+    local: &mut Vec<K>,
     n_total: usize,
     cfg: &SortConfig,
-    sorter: &dyn SeqSorter,
-) -> ProcResult {
+    sorter: &dyn SeqSorter<K>,
+) -> ProcResult<K> {
     let p = ctx.nprocs();
 
     // --- Ph2: local sort ----------------------------------------------

@@ -25,7 +25,8 @@
 use crate::bsp::engine::BspCtx;
 use crate::bsp::msg::{Payload, SampleRec};
 use crate::bsp::params::BspParams;
-use crate::seq::{ops, search, QuickSorter, RadixSorter, SeqSortKind, SeqSorter};
+use crate::key::RadixKey;
+use crate::seq::{ops, search, SeqSorter};
 
 use super::common::{ProcResult, PH2, PH3, PH4, PH5, PH6, PH7};
 use super::config::SortConfig;
@@ -41,23 +42,19 @@ pub fn round1_buckets(p: usize) -> usize {
 
 /// Two-round deterministic sort.  Requires `p` a power of two; falls back
 /// to the one-round algorithm when `p ≤ 2` (a group would be trivial).
-pub fn sort_det_iterative(
-    ctx: &mut BspCtx,
+pub fn sort_det_iterative<K: RadixKey>(
+    ctx: &mut BspCtx<K>,
     params: &BspParams,
-    local: Vec<i32>,
+    local: Vec<K>,
     n_total: usize,
     cfg: &SortConfig,
-) -> ProcResult {
+) -> ProcResult<K> {
     let p = ctx.nprocs();
     if p <= 2 {
         return super::det::sort_det_bsp(ctx, params, local, n_total, cfg);
     }
     assert!(p.is_power_of_two(), "iterative det sort requires p a power of two");
-    let sorter: Box<dyn SeqSorter> = match cfg.seq {
-        SeqSortKind::Quick => Box::new(QuickSorter),
-        SeqSortKind::Radix => Box::new(RadixSorter),
-        SeqSortKind::Xla => panic!("iterative det supports Quick/Radix backends"),
-    };
+    let sorter: Box<dyn SeqSorter<K>> = crate::seq::backend(cfg.seq);
     let pid = ctx.pid();
     let k = round1_buckets(p); // groups / round-1 buckets
     let gsize = p / k;
@@ -87,7 +84,7 @@ pub fn sort_det_iterative(
     }
     ctx.sync("it1:gather-splitters");
     let splitters = if pid == 0 {
-        let mut recs: Vec<(usize, SampleRec)> = ctx
+        let mut recs: Vec<(usize, SampleRec<K>)> = ctx
             .take_inbox()
             .into_iter()
             .map(|(src, payload)| (src, payload.into_recs()[0]))
@@ -112,7 +109,7 @@ pub fn sort_det_iterative(
     }
     ctx.charge(ops::linear_charge(keys.len()));
     ctx.sync("it1:route");
-    let runs: Vec<Vec<i32>> = ctx
+    let runs: Vec<Vec<K>> = ctx
         .take_inbox()
         .into_iter()
         .map(|(_, payload)| payload.into_keys())
@@ -135,7 +132,7 @@ pub fn sort_det_iterative(
     ctx.send(leader, Payload::Recs(sample2));
     ctx.sync("it2:gather-sample");
     let group_splitters = if rank_in_group == 0 {
-        let mut all: Vec<SampleRec> = ctx
+        let mut all: Vec<SampleRec<K>> = ctx
             .take_inbox()
             .into_iter()
             .flat_map(|(_, payload)| payload.into_recs())
@@ -143,7 +140,7 @@ pub fn sort_det_iterative(
         ctx.charge(ops::sort_charge(all.len()));
         all.sort();
         let seg = (all.len() / gsize).max(1);
-        let splitters: Vec<SampleRec> =
+        let splitters: Vec<SampleRec<K>> =
             (1..gsize).map(|i| all[(i * seg - 1).min(all.len() - 1)]).collect();
         for j in 1..gsize {
             ctx.send(leader + j, Payload::Recs(splitters.clone()));
@@ -175,7 +172,7 @@ pub fn sort_det_iterative(
     }
     ctx.charge(ops::linear_charge(keys.len()));
     ctx.sync("it2:route");
-    let runs: Vec<Vec<i32>> = ctx
+    let runs: Vec<Vec<K>> = ctx
         .take_inbox()
         .into_iter()
         .map(|(_, payload)| payload.into_keys())

@@ -16,6 +16,7 @@
 use crate::bsp::engine::BspCtx;
 use crate::bsp::msg::SampleRec;
 use crate::bsp::params::BspParams;
+use crate::key::{Key, RadixKey};
 use crate::seq::{QuickSorter, RadixSorter, SeqSortKind, SeqSorter};
 use crate::util::rng::SplitMix64;
 
@@ -46,15 +47,15 @@ pub fn nmax_bound(n_total: usize, p: usize, omega: f64) -> f64 {
 ///
 /// `seed` decorrelates the random sample across runs (the experiments
 /// average over ≥ 4 runs); the per-processor stream is derived from it.
-pub fn sort_iran_bsp(
-    ctx: &mut BspCtx,
+pub fn sort_iran_bsp<K: RadixKey>(
+    ctx: &mut BspCtx<K>,
     params: &BspParams,
-    mut local: Vec<i32>,
+    mut local: Vec<K>,
     n_total: usize,
     cfg: &SortConfig,
     seed: u64,
-) -> ProcResult {
-    let sorter: &dyn SeqSorter = match cfg.seq {
+) -> ProcResult<K> {
+    let sorter: &dyn SeqSorter<K> = match cfg.seq {
         SeqSortKind::Quick => &QuickSorter,
         SeqSortKind::Radix => &RadixSorter,
         SeqSortKind::Xla => panic!("use sort_iran_bsp_with for a custom backend"),
@@ -63,15 +64,15 @@ pub fn sort_iran_bsp(
 }
 
 /// As [`sort_iran_bsp`] with an explicit sequential backend.
-pub fn sort_iran_bsp_with(
-    ctx: &mut BspCtx,
+pub fn sort_iran_bsp_with<K: Key>(
+    ctx: &mut BspCtx<K>,
     params: &BspParams,
-    local: &mut Vec<i32>,
+    local: &mut Vec<K>,
     n_total: usize,
     cfg: &SortConfig,
     seed: u64,
-    sorter: &dyn SeqSorter,
-) -> ProcResult {
+    sorter: &dyn SeqSorter<K>,
+) -> ProcResult<K> {
     let p = ctx.nprocs();
 
     // --- Ph2: local sort (BEFORE sampling — the IRAN signature) --------
@@ -94,8 +95,8 @@ pub fn sort_iran_bsp_with(
     // Tagged records: (key, pid, sorted-array index) — §5.1.1 tags are
     // *already sorted-order consistent* because keys is sorted and picks
     // ascend, so the sample run is sorted under the tagged order.
-    let sample: Vec<SampleRec> = if picks.is_empty() {
-        vec![SampleRec::new(i32::MAX, ctx.pid(), 0)]
+    let sample: Vec<SampleRec<K>> = if picks.is_empty() {
+        vec![SampleRec::new(K::max_key(), ctx.pid(), 0)]
     } else {
         picks.iter().map(|&i| SampleRec::new(keys[i], ctx.pid(), i)).collect()
     };

@@ -15,6 +15,7 @@
 use crate::bsp::engine::BspCtx;
 use crate::bsp::msg::{Payload, SampleRec};
 use crate::bsp::params::BspParams;
+use crate::key::{Key, RadixKey};
 use crate::primitives::broadcast;
 use crate::seq::{ops, QuickSorter, RadixSorter, SeqSortKind, SeqSorter};
 use crate::util::rng::SplitMix64;
@@ -24,17 +25,17 @@ use super::config::SortConfig;
 use super::iran::{omega_ran, sample_share};
 
 /// Run SORT_RAN_BSP on this processor's share of the input.
-pub fn sort_ran_bsp(
-    ctx: &mut BspCtx,
+pub fn sort_ran_bsp<K: RadixKey>(
+    ctx: &mut BspCtx<K>,
     params: &BspParams,
-    local: Vec<i32>,
+    local: Vec<K>,
     n_total: usize,
     cfg: &SortConfig,
     seed: u64,
-) -> ProcResult {
+) -> ProcResult<K> {
     let p = ctx.nprocs();
     let pid = ctx.pid();
-    let sorter: &dyn SeqSorter = match cfg.seq {
+    let sorter: &dyn SeqSorter<K> = match cfg.seq {
         SeqSortKind::Quick => &QuickSorter,
         SeqSortKind::Radix => &RadixSorter,
         SeqSortKind::Xla => panic!("SORT_RAN_BSP supports Quick/Radix backends"),
@@ -53,8 +54,8 @@ pub fn sort_ran_bsp(
     let omega = omega_ran(cfg, n_total);
     let share = sample_share(n_total, p, omega).min(local.len().max(1));
     let mut rng = SplitMix64::new(seed ^ ((pid as u64) << 20).wrapping_add(0x5A5A));
-    let sample: Vec<SampleRec> = if local.is_empty() {
-        vec![SampleRec::new(i32::MAX, pid, 0)]
+    let sample: Vec<SampleRec<K>> = if local.is_empty() {
+        vec![SampleRec::new(K::max_key(), pid, 0)]
     } else {
         rng.sample_indices(local.len(), share)
             .into_iter()
@@ -65,7 +66,7 @@ pub fn sort_ran_bsp(
     ctx.send(0, Payload::Recs(sample));
     ctx.sync("ph3:gather-sample");
     let splitters = if pid == 0 {
-        let mut all: Vec<SampleRec> = ctx
+        let mut all: Vec<SampleRec<K>> = ctx
             .take_inbox()
             .into_iter()
             .flat_map(|(_, payload)| payload.into_recs())
@@ -84,7 +85,7 @@ pub fn sort_ran_bsp(
     ctx.phase(PH5);
     // Each key binary-searches the splitter set: (n/p)(lg p + 1) charges,
     // plus the D·n/p copy into buckets (D charged as 2: count + copy).
-    let mut buckets: Vec<Vec<i32>> = vec![Vec::new(); p];
+    let mut buckets: Vec<Vec<K>> = vec![Vec::new(); p];
     for (i, &k) in local.iter().enumerate() {
         let dst = splitter_rank(&splitters, k, pid, i);
         buckets[dst].push(k);
@@ -92,12 +93,12 @@ pub fn sort_ran_bsp(
     ctx.charge(local.len() as f64 * (ops::bsearch_charge(p) + 1.0 + 2.0));
 
     // --- step 11: routing ----------------------------------------------
-    let parts: Vec<Payload> = buckets.into_iter().map(Payload::Keys).collect();
+    let parts: Vec<Payload<K>> = buckets.into_iter().map(Payload::Keys).collect();
     let inbox = ctx.all_to_all(parts, "ph5:route");
 
     // --- step 12: local sort of everything received ---------------------
     ctx.phase(PH6);
-    let mut keys: Vec<i32> = Vec::new();
+    let mut keys: Vec<K> = Vec::new();
     let mut runs = 0usize;
     for (_, payload) in inbox {
         let ks = payload.into_keys();
@@ -119,7 +120,7 @@ pub fn sort_ran_bsp(
 /// Destination bucket of key `k` (owned by `pid` at index `i`) among the
 /// tagged splitters: the first splitter that the tagged key orders
 /// before; ties use the §5.1.1 compound order.
-fn splitter_rank(splitters: &[SampleRec], k: i32, pid: usize, i: usize) -> usize {
+fn splitter_rank<K: Key>(splitters: &[SampleRec<K>], k: K, pid: usize, i: usize) -> usize {
     let me = (k, pid as u32, i as u32);
     let mut lo = 0usize;
     let mut hi = splitters.len();
