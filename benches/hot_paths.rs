@@ -12,6 +12,7 @@
 //! file runs in seconds — benchmark code can no longer rot silently.
 
 use bsp_sort::bsp::{cray_t3d, BspMachine, Payload};
+use bsp_sort::experiment::{calibrate_host, ProbePlan};
 use bsp_sort::gen::{generate_for_proc, Benchmark};
 use bsp_sort::seq;
 use bsp_sort::sort::{det, iran, SortConfig};
@@ -122,6 +123,18 @@ fn main() {
         });
         run.outputs.iter().map(|r| r.keys.len()).sum::<usize>()
     });
+
+    // --- experiment (g, L) calibration probes --------------------------------
+    // The probes run before every study; they must stay cheap enough to
+    // re-run per processor count.  Full plan in real benches, the quick
+    // plan under --quick-smoke.
+    let plan = if smoke { ProbePlan::quick() } else { ProbePlan::default_plan() };
+    for p in [4usize, 8] {
+        bench(&format!("experiment/calibrate_host/p{p}"), |_| {
+            let c = calibrate_host(p, &plan);
+            (c.l_us, c.g_us_per_word, c.comps_per_us)
+        });
+    }
 
     // --- XLA local sort (optional) ------------------------------------------
     match bsp_sort::runtime::Runtime::from_default_artifacts() {

@@ -59,7 +59,24 @@ else
     echo "clippy not installed; skipping lint gate"
 fi
 
+echo "== hygiene: cargo doc --no-deps (RUSTDOCFLAGS=-D warnings) =="
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+
 echo "== bench smoke-run: hot_paths --quick-smoke =="
 cargo bench --bench hot_paths -- --quick-smoke
+
+echo "== smoke: experiment --quick writes a schema-valid BENCH json =="
+smokedir=$(mktemp -d)
+# The CLI itself re-reads and schema-validates the JSON it writes, so a
+# zero exit already covers validity; the checks below additionally pin
+# the file name and the schema tag CI consumers rely on.
+cargo run --release --quiet -- experiment --quick --tag smoke --out "$smokedir"
+test -s "$smokedir/BENCH_smoke.json" || {
+    echo "BENCH_smoke.json missing or empty" >&2; exit 1; }
+grep -q '"schema": "bsp-sort/experiment-report/v1"' "$smokedir/BENCH_smoke.json" || {
+    echo "schema tag missing from BENCH_smoke.json" >&2; exit 1; }
+test -s "$smokedir/BENCH_smoke.md" || {
+    echo "BENCH_smoke.md missing or empty" >&2; exit 1; }
+rm -rf "$smokedir"
 
 echo "CI OK"

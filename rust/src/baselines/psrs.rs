@@ -7,8 +7,8 @@
 //! sample is gathered and sorted *sequentially* at processor 0, and no
 //! duplicate tagging exists — the paper notes "the algorithm in [44] as
 //! well as the algorithm in [41] can not handle duplicate keys", and the
-//! [WR] adversary drives its bucket expansion toward the 2·n/p regular
-//! sampling worst case.  Table 11 compares [DSQ] against this.
+//! \[WR\] adversary drives its bucket expansion toward the 2·n/p regular
+//! sampling worst case.  Table 11 compares \[DSQ\] against this.
 
 use crate::bsp::engine::BspCtx;
 use crate::bsp::msg::{Payload, SampleRec};

@@ -19,7 +19,7 @@
 //!   layout makes sender-ordered delivery a straight row scan instead of
 //!   a take-the-lock-and-sort.
 //! * **Interned phase labels** — phase names are registered once per run
-//!   in a [`PhaseInterner`]; `charge`/`phase` accounting is an array add
+//!   in a `PhaseInterner`; `charge`/`phase` accounting is an array add
 //!   indexed by the interned id: no allocation, no string hashing.
 //!
 //! The engine executes *really* (threads + message passing, so wall-clock

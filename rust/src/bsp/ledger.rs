@@ -11,6 +11,8 @@
 //! the charge hot path); the name-keyed records below are materialized
 //! once, when `BspMachine::run` finalizes the ledger.
 
+#![warn(missing_docs)]
+
 use std::collections::BTreeMap;
 
 use super::params::BspParams;
@@ -18,7 +20,9 @@ use super::params::BspParams;
 /// One superstep's accounting, reduced over all processors.
 #[derive(Clone, Debug, Default)]
 pub struct SuperstepRecord {
+    /// The `sync` label (SPMD discipline: identical on every processor).
     pub label: String,
+    /// Name of the phase active at this superstep's `sync`.
     pub phase: String,
     /// max over processors of charged ops (comparisons).
     pub max_ops: f64,
@@ -67,10 +71,40 @@ impl PhaseRecord {
 /// The full ledger of a BSP run.
 #[derive(Clone, Debug, Default)]
 pub struct Ledger {
+    /// Every superstep in execution order.
     pub supersteps: Vec<SuperstepRecord>,
+    /// Per-phase accumulation, keyed by phase name.
     pub phases: BTreeMap<String, PhaseRecord>,
     /// End-to-end wall time of the run (µs), measured by the driver.
     pub wall_us: f64,
+}
+
+/// The report convention for measured-vs-predicted quotients, in one
+/// place: `measured / predicted` when the model prices the denominator,
+/// `NaN` (serialized as `null`) when it prices it at zero.  Used by
+/// [`Ledger::phase_comparison`] and the experiment runner's aggregated
+/// records alike.
+pub fn ratio_or_nan(measured: f64, predicted: f64) -> f64 {
+    if predicted > 0.0 {
+        measured / predicted
+    } else {
+        f64::NAN
+    }
+}
+
+/// One row of the per-phase measured-vs-predicted comparison
+/// ([`Ledger::phase_comparison`]) — the experiment reports' phase table.
+#[derive(Clone, Debug)]
+pub struct PhaseComparison {
+    /// Phase name (Ph1–Ph7 in the sorting pipeline).
+    pub phase: String,
+    /// Predicted seconds under the pricing parameters.
+    pub predicted_secs: f64,
+    /// Measured wall seconds (max over processors).
+    pub wall_secs: f64,
+    /// `wall / predicted`; `NaN` when the model prices the phase at zero
+    /// (e.g. Ph1 before any charge or sync) — serialized as `null`.
+    pub ratio: f64,
 }
 
 impl Ledger {
@@ -134,6 +168,33 @@ impl Ledger {
         self.phases
             .iter()
             .map(|(k, v)| (k.clone(), v.wall_us / 1e6))
+            .collect()
+    }
+
+    /// Per-phase measured-vs-predicted rows under `params`, in phase-name
+    /// order: the union of every phase the model prices
+    /// ([`Ledger::phase_predicted_secs`]) and every phase wall-clock was
+    /// attributed to.  When `params` comes from the host calibration
+    /// (`experiment::calibrate`), `ratio` ≈ 1 is the paper's
+    /// "the BSP model predicts the observed behavior" claim.
+    pub fn phase_comparison(&self, params: &BspParams) -> Vec<PhaseComparison> {
+        let predicted = self.phase_predicted_secs(params);
+        let wall = self.phase_wall_secs();
+        let mut names: Vec<&String> = predicted.keys().chain(wall.keys()).collect();
+        names.sort();
+        names.dedup();
+        names
+            .into_iter()
+            .map(|name| {
+                let p = predicted.get(name).copied().unwrap_or(0.0);
+                let w = wall.get(name).copied().unwrap_or(0.0);
+                PhaseComparison {
+                    phase: name.clone(),
+                    predicted_secs: p,
+                    wall_secs: w,
+                    ratio: ratio_or_nan(w, p),
+                }
+            })
             .collect()
     }
 }
@@ -200,5 +261,29 @@ mod tests {
         );
         // Compute lands in Ph2, communication remainder in Ph5.
         assert!(by_phase["Ph2"] > by_phase["Ph5"] * 0.001);
+    }
+
+    #[test]
+    fn phase_comparison_unions_priced_and_walled_phases() {
+        let params = cray_t3d(16);
+        let mut ledger = Ledger::default();
+        ledger.supersteps.push(mk("a", "Ph5", 0.0, 1000));
+        ledger.phases.insert(
+            "Ph5".into(),
+            PhaseRecord { max_ops: 0.0, h_words: 1000, supersteps: 1, wall_us: 500.0 },
+        );
+        // A wall-only phase the model never priced (no ops, no sync).
+        ledger.phases.insert(
+            "Ph1:Init".into(),
+            PhaseRecord { max_ops: 0.0, h_words: 0, supersteps: 0, wall_us: 3.0 },
+        );
+        let rows = ledger.phase_comparison(&params);
+        assert_eq!(rows.len(), 2);
+        let ph1 = rows.iter().find(|r| r.phase == "Ph1:Init").unwrap();
+        assert!(ph1.ratio.is_nan(), "unpriced phase must carry a NaN ratio");
+        let ph5 = rows.iter().find(|r| r.phase == "Ph5").unwrap();
+        assert!(ph5.predicted_secs > 0.0);
+        let expect = ph5.wall_secs / ph5.predicted_secs;
+        assert!((ph5.ratio - expect).abs() < 1e-12 && ph5.ratio > 0.0);
     }
 }

@@ -15,6 +15,6 @@ pub mod msg;
 pub mod params;
 
 pub use engine::{BspCtx, BspMachine, BspRun};
-pub use ledger::{Ledger, PhaseRecord, SuperstepRecord};
+pub use ledger::{Ledger, PhaseComparison, PhaseRecord, SuperstepRecord};
 pub use msg::{Payload, SampleRec};
 pub use params::{cray_t3d, BspParams};

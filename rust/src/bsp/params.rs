@@ -23,6 +23,25 @@ pub struct BspParams {
 }
 
 impl BspParams {
+    /// Parameters calibrated on the *host* by the experiment subsystem's
+    /// micro-probes (`experiment::calibrate`): `l_us` from the barrier
+    /// probe, `g_us_per_word` from the all-to-all slope fit and
+    /// `comps_per_us` from the sequential-sort probe.  Predictions priced
+    /// under these parameters are in host microseconds, directly
+    /// comparable to measured wall-clock — the paper's measured-vs-
+    /// predicted methodology on whatever machine runs the study.
+    pub fn host(p: usize, l_us: f64, g_us_per_word: f64, comps_per_us: f64) -> BspParams {
+        BspParams { p, l_us, g_us_per_word, comps_per_us }
+    }
+
+    /// Measurement-only placeholder parameters (L = g = 0, rate = 1):
+    /// used by the calibration probes themselves, which need a machine to
+    /// *execute* on before any prices exist.  Never price a prediction
+    /// with these.
+    pub fn unit(p: usize) -> BspParams {
+        BspParams { p, l_us: 0.0, g_us_per_word: 0.0, comps_per_us: 1.0 }
+    }
+
     /// Cost (µs) of one superstep with max compute `x` (comparisons) and
     /// max fan-in/out `h` (words): `max{L, x/rate + g·h}` (§1.1).
     pub fn superstep_cost_us(&self, x_comps: f64, h_words: u64) -> f64 {

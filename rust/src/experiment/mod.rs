@@ -1,0 +1,133 @@
+//! The experiment-study subsystem: one command from sweep spec to the
+//! paper's measured-vs-predicted evidence.
+//!
+//! The source paper is an *experimental study* — its contribution is
+//! tables of measured times, predicted BSP costs, and load-balance /
+//! communication-regularity evidence.  This module makes that claim
+//! executable:
+//!
+//! 1. **Calibrate** ([`calibrate`]): dedicated barrier / all-to-all /
+//!    compute micro-probes measure the host's `(g, L)` and operation
+//!    rate, so predictions are in host microseconds rather than abstract
+//!    T3D units.
+//! 2. **Sweep** ([`spec`], [`run`]): any cross-product of
+//!    {algorithm, benchmark distribution, key domain, n, p} runs with
+//!    warm-up + repetitions; every run is verified (globally sorted,
+//!    size-preserving) before it is reported.
+//! 3. **Report** ([`report`]): per-run min/mean/stddev wall-clock,
+//!    end-to-end and per-phase measured-vs-predicted ratios, and the
+//!    paper's balance metrics (max/avg keys per processor, routed words
+//!    per processor), serialized to a schema-versioned `BENCH_<tag>.json`
+//!    plus a paper-style markdown table.
+//!
+//! The CLI front-end is `bsp-sort experiment` (`--quick` for the
+//! CI-sized preset); `tables::validate::validate_report` checks any
+//! report document against the [`report::SCHEMA`] shape.
+//!
+//! A complete miniature study, end to end:
+//!
+//! ```
+//! use bsp_sort::experiment::{self, ProbePlan, SweepSpec};
+//!
+//! let mut spec = SweepSpec::quick(); // det + ran, [U] + [DD], i32 + u64
+//! spec.ns = vec![2048];              // shrink the preset for the doctest
+//! spec.ps = vec![4];
+//! spec.reps = 1;
+//! spec.warmup = 0;
+//! spec.probes = ProbePlan::quick();
+//!
+//! let report = experiment::run_study(&spec);
+//! assert_eq!(report.runs.len(), spec.configs().len());
+//! let calib = &report.calibrations[0];       // host (g, L), not the T3D's
+//! assert!(calib.g_us_per_word > 0.0 && calib.l_us > 0.0);
+//! let run = &report.runs[0];
+//! assert!(run.predicted_us > 0.0 && run.wall_us.mean > 0.0);
+//! assert!(run.ratio.is_finite() && run.ratio > 0.0);
+//! ```
+
+pub mod calibrate;
+pub mod report;
+pub mod run;
+pub mod spec;
+
+pub use calibrate::{
+    calibrate_host, calibrate_with, fit_line, Calibration, HostProber, ProbePlan, Prober,
+    SyntheticProber,
+};
+pub use report::{StudyReport, SCHEMA};
+pub use run::{
+    avg_predicted_secs, execute, execute_typed, measure_config, measure_typed, Balance,
+    PhaseStat, RunRecord, SingleRun, StudyKey, SuperstepStat,
+};
+pub use spec::{
+    AlgoVariant, KeyDomain, RunConfig, RunSpec, SweepSpec, ALL_ALGOS, ALL_DOMAINS,
+};
+
+/// Execute a sweep: calibrate once per distinct processor count, then
+/// measure every cell of the cross-product, in spec order.
+pub fn run_study(spec: &SweepSpec) -> StudyReport {
+    spec.validate().expect("invalid sweep spec");
+    let mut ps: Vec<usize> = spec.ps.clone();
+    ps.sort_unstable();
+    ps.dedup();
+    let calibrations: Vec<Calibration> =
+        ps.iter().map(|&p| calibrate_host(p, &spec.probes)).collect();
+    let runs = spec
+        .configs()
+        .iter()
+        .map(|cfg| {
+            let calib = calibrations
+                .iter()
+                .find(|c| c.p == cfg.p)
+                .expect("calibration exists for every p in the sweep");
+            measure_config(cfg, spec, calib)
+        })
+        .collect();
+    StudyReport {
+        tag: spec.tag.clone(),
+        created_unix_secs: StudyReport::now_unix_secs(),
+        os: std::env::consts::OS.to_string(),
+        arch: std::env::consts::ARCH.to_string(),
+        calibrations,
+        runs,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::Benchmark;
+
+    #[test]
+    fn run_study_covers_the_cross_product() {
+        let mut spec = SweepSpec::quick();
+        spec.algos = vec![AlgoVariant::Det];
+        spec.benches = vec![Benchmark::Uniform];
+        spec.domains = vec![KeyDomain::I32, KeyDomain::U64];
+        spec.ns = vec![1 << 11];
+        spec.ps = vec![2];
+        spec.reps = 1;
+        spec.warmup = 0;
+        spec.probes = ProbePlan {
+            barrier_reps: 4,
+            a2a_h_words: vec![256, 1024],
+            a2a_rounds: 2,
+            comp_n: 1 << 10,
+        };
+        let report = run_study(&spec);
+        assert_eq!(report.calibrations.len(), 1);
+        assert_eq!(report.runs.len(), 2);
+        let domains: Vec<&str> = report.runs.iter().map(|r| r.domain.as_str()).collect();
+        assert_eq!(domains, vec!["i32", "u64"]);
+        assert!(report.created_unix_secs > 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid sweep spec")]
+    fn run_study_rejects_invalid_specs() {
+        let mut spec = SweepSpec::quick();
+        spec.ns = vec![1000];
+        spec.ps = vec![3];
+        run_study(&spec);
+    }
+}

@@ -1,0 +1,346 @@
+//! Study reports: the versioned `BENCH_<tag>.json` schema and the
+//! paper-style markdown rendering.
+//!
+//! The JSON document is the single source of truth for the report shape
+//! ([`SCHEMA`] names the version); `tables::validate::validate_report`
+//! checks a parsed document against it, and the CLI re-reads and
+//! validates every file it writes before declaring success.
+
+use std::io;
+use std::path::{Path, PathBuf};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use crate::util::fmt_secs;
+use crate::util::json::Json;
+
+use super::calibrate::Calibration;
+use super::run::RunRecord;
+
+/// Schema identifier written into (and required from) every report.
+pub const SCHEMA: &str = "bsp-sort/experiment-report/v1";
+
+/// A complete study: calibrations for every probed `p` plus one
+/// [`RunRecord`] per sweep cell.
+#[derive(Clone, Debug)]
+pub struct StudyReport {
+    /// Sweep tag; outputs land in `BENCH_<tag>.json` / `.md`.
+    pub tag: String,
+    /// Unix seconds when the study finished.
+    pub created_unix_secs: u64,
+    /// `std::env::consts::OS` of the host.
+    pub os: String,
+    /// `std::env::consts::ARCH` of the host.
+    pub arch: String,
+    /// One calibration per distinct processor count in the sweep.
+    pub calibrations: Vec<Calibration>,
+    /// One record per sweep cell, in sweep order.
+    pub runs: Vec<RunRecord>,
+}
+
+fn obj(fields: Vec<(&str, Json)>) -> Json {
+    Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+impl StudyReport {
+    /// Current unix time in seconds (0 if the clock is before the
+    /// epoch, which only happens on a misconfigured host).
+    pub fn now_unix_secs() -> u64 {
+        SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_secs())
+            .unwrap_or(0)
+    }
+
+    /// Serialize to the versioned JSON document.
+    pub fn to_json(&self) -> Json {
+        let calibrations = self
+            .calibrations
+            .iter()
+            .map(|c| {
+                obj(vec![
+                    ("p", Json::num(c.p as f64)),
+                    ("l_us", Json::num(c.l_us)),
+                    ("g_us_per_word", Json::num(c.g_us_per_word)),
+                    ("comps_per_us", Json::num(c.comps_per_us)),
+                    ("fit_intercept_us", Json::num(c.fit_intercept_us)),
+                    ("fit_r2", Json::num(c.fit_r2)),
+                    (
+                        "a2a_points",
+                        Json::Arr(
+                            c.a2a_points
+                                .iter()
+                                .map(|&(h, t)| {
+                                    Json::Arr(vec![Json::num(h as f64), Json::num(t)])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ])
+            })
+            .collect();
+        let runs = self.runs.iter().map(run_to_json).collect();
+        obj(vec![
+            ("schema", Json::str(SCHEMA)),
+            ("tag", Json::str(&self.tag)),
+            ("created_unix_secs", Json::num(self.created_unix_secs as f64)),
+            ("os", Json::str(&self.os)),
+            ("arch", Json::str(&self.arch)),
+            ("calibrations", Json::Arr(calibrations)),
+            ("runs", Json::Arr(runs)),
+        ])
+    }
+
+    /// Render the paper-style markdown companion: the calibration table
+    /// and one measured-vs-predicted row per run.
+    pub fn to_markdown(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("# BSP sorting experiment — `{}`\n\n", self.tag));
+        out.push_str(&format!(
+            "Host: {}/{} · schema `{}`\n\n",
+            self.os, self.arch, SCHEMA
+        ));
+        out.push_str("## Calibrated machine parameters\n\n");
+        out.push_str("| p | L (µs) | g (µs/word) | comps/µs | fit r² |\n");
+        out.push_str("|---:|---:|---:|---:|---:|\n");
+        for c in &self.calibrations {
+            out.push_str(&format!(
+                "| {} | {:.2} | {:.4} | {:.1} | {:.4} |\n",
+                c.p, c.l_us, c.g_us_per_word, c.comps_per_us, c.fit_r2
+            ));
+        }
+        out.push_str("\n## Measured vs predicted (per configuration)\n\n");
+        out.push_str(
+            "| algo | bench | domain | n | p | measured (s) | predicted (s) \
+             | meas/pred | max/avg keys | routed max/avg words |\n",
+        );
+        out.push_str("|---|---|---|---:|---:|---:|---:|---:|---:|---:|\n");
+        for r in &self.runs {
+            out.push_str(&format!(
+                "| {} | {} | {} | {} | {} | {} | {} | {:.2} | {}/{:.0} | {}/{:.0} |\n",
+                r.algo_label,
+                r.bench,
+                r.domain,
+                r.n,
+                r.p,
+                fmt_secs(r.wall_us.mean / 1e6),
+                fmt_secs(r.predicted_us / 1e6),
+                r.ratio,
+                r.balance.recv_max,
+                r.balance.recv_mean,
+                r.balance.routed_words_max,
+                r.balance.routed_words_avg,
+            ));
+        }
+        out.push_str("\n## Per-phase ratios\n\n");
+        for r in &self.runs {
+            out.push_str(&format!(
+                "### {} {} {} n={} p={}\n\n",
+                r.algo_label, r.bench, r.domain, r.n, r.p
+            ));
+            out.push_str("| phase | predicted (µs) | measured (µs) | meas/pred |\n");
+            out.push_str("|---|---:|---:|---:|\n");
+            for ph in &r.phases {
+                let ratio = if ph.ratio.is_finite() {
+                    format!("{:.2}", ph.ratio)
+                } else {
+                    "—".to_string()
+                };
+                out.push_str(&format!(
+                    "| {} | {:.1} | {:.1} | {} |\n",
+                    ph.name, ph.predicted_us, ph.wall_us, ratio
+                ));
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// `BENCH_<tag>` — the stem both output files share.
+    pub fn file_stem(&self) -> String {
+        format!("BENCH_{}", self.tag)
+    }
+
+    /// Write `BENCH_<tag>.json` and `BENCH_<tag>.md` under `dir`;
+    /// returns the two paths.
+    pub fn write_files(&self, dir: &Path) -> io::Result<(PathBuf, PathBuf)> {
+        std::fs::create_dir_all(dir)?;
+        let json_path = dir.join(format!("{}.json", self.file_stem()));
+        let md_path = dir.join(format!("{}.md", self.file_stem()));
+        std::fs::write(&json_path, self.to_json().render())?;
+        std::fs::write(&md_path, self.to_markdown())?;
+        Ok((json_path, md_path))
+    }
+}
+
+fn run_to_json(r: &RunRecord) -> Json {
+    let phases = r
+        .phases
+        .iter()
+        .map(|ph| {
+            obj(vec![
+                ("name", Json::str(&ph.name)),
+                ("predicted_us", Json::num(ph.predicted_us)),
+                ("wall_us", Json::num(ph.wall_us)),
+                ("ratio", Json::num(ph.ratio)), // NaN -> null (unpriced)
+            ])
+        })
+        .collect();
+    let supersteps = r
+        .supersteps
+        .iter()
+        .map(|s| {
+            obj(vec![
+                ("label", Json::str(&s.label)),
+                ("phase", Json::str(&s.phase)),
+                ("max_ops", Json::num(s.max_ops)),
+                ("h_words", Json::num(s.h_words as f64)),
+                ("total_words", Json::num(s.total_words as f64)),
+                ("wall_us", Json::num(s.wall_us)),
+                ("predicted_us", Json::num(s.predicted_us)),
+            ])
+        })
+        .collect();
+    obj(vec![
+        ("algo", Json::str(&r.algo)),
+        ("algo_label", Json::str(&r.algo_label)),
+        ("bench", Json::str(&r.bench)),
+        ("domain", Json::str(&r.domain)),
+        ("n", Json::num(r.n as f64)),
+        ("p", Json::num(r.p as f64)),
+        ("warmup", Json::num(r.warmup as f64)),
+        ("reps", Json::num(r.reps as f64)),
+        (
+            "wall_us",
+            obj(vec![
+                ("n", Json::num(r.wall_us.n as f64)),
+                ("min", Json::num(r.wall_us.min)),
+                ("mean", Json::num(r.wall_us.mean)),
+                ("stddev", Json::num(r.wall_us.stddev)),
+                ("max", Json::num(r.wall_us.max)),
+            ]),
+        ),
+        ("predicted_us", Json::num(r.predicted_us)),
+        ("ratio", Json::num(r.ratio)),
+        ("phases", Json::Arr(phases)),
+        (
+            "balance",
+            obj(vec![
+                ("recv_max", Json::num(r.balance.recv_max as f64)),
+                ("recv_min", Json::num(r.balance.recv_min as f64)),
+                ("recv_mean", Json::num(r.balance.recv_mean)),
+                ("expansion", Json::num(r.balance.expansion)),
+                ("routed_words_total", Json::num(r.balance.routed_words_total)),
+                ("routed_words_max", Json::num(r.balance.routed_words_max as f64)),
+                ("routed_words_avg", Json::num(r.balance.routed_words_avg)),
+            ]),
+        ),
+        ("supersteps", Json::Arr(supersteps)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiment::run::{Balance, PhaseStat, SuperstepStat};
+    use crate::util::bench::SampleStats;
+
+    fn sample_report() -> StudyReport {
+        StudyReport {
+            tag: "unit".into(),
+            created_unix_secs: 1_700_000_000,
+            os: "linux".into(),
+            arch: "x86_64".into(),
+            calibrations: vec![Calibration {
+                p: 4,
+                l_us: 12.0,
+                g_us_per_word: 0.02,
+                comps_per_us: 150.0,
+                a2a_points: vec![(1024, 33.0), (4096, 95.0)],
+                fit_intercept_us: 12.5,
+                fit_r2: 0.998,
+            }],
+            runs: vec![RunRecord {
+                algo: "det".into(),
+                algo_label: "[DSQ]".into(),
+                bench: "[U]".into(),
+                domain: "i32".into(),
+                n: 4096,
+                p: 4,
+                warmup: 1,
+                reps: 2,
+                wall_us: SampleStats { n: 2, min: 900.0, max: 1100.0, mean: 1000.0, stddev: 100.0 },
+                predicted_us: 800.0,
+                ratio: 1.25,
+                phases: vec![
+                    PhaseStat {
+                        name: "Ph2:SeqSort".into(),
+                        predicted_us: 400.0,
+                        wall_us: 500.0,
+                        ratio: 1.25,
+                    },
+                    PhaseStat {
+                        name: "Ph1:Init".into(),
+                        predicted_us: 0.0,
+                        wall_us: 1.0,
+                        ratio: f64::NAN,
+                    },
+                ],
+                balance: Balance {
+                    recv_max: 1100,
+                    recv_min: 950,
+                    recv_mean: 1024.0,
+                    expansion: 0.074,
+                    routed_words_total: 4096.0,
+                    routed_words_max: 1100,
+                    routed_words_avg: 1024.0,
+                },
+                supersteps: vec![SuperstepStat {
+                    label: "ph5:route".into(),
+                    phase: "Ph5:Routing".into(),
+                    max_ops: 10.0,
+                    h_words: 1100,
+                    total_words: 4096,
+                    wall_us: 40.0,
+                    predicted_us: 35.0,
+                }],
+            }],
+        }
+    }
+
+    #[test]
+    fn json_roundtrips_through_parser() {
+        let report = sample_report();
+        let text = report.to_json().render();
+        let doc = Json::parse(&text).unwrap();
+        assert_eq!(doc.get("schema").unwrap().as_str(), Some(SCHEMA));
+        let runs = doc.get("runs").unwrap().as_arr().unwrap();
+        assert_eq!(runs.len(), 1);
+        assert_eq!(runs[0].get("n").unwrap().as_u64(), Some(4096));
+        // The unpriced phase's NaN ratio serializes as null.
+        let phases = runs[0].get("phases").unwrap().as_arr().unwrap();
+        assert!(phases[1].get("ratio").unwrap().is_null());
+        assert_eq!(phases[0].get("ratio").unwrap().as_f64(), Some(1.25));
+    }
+
+    #[test]
+    fn markdown_contains_all_runs_and_calibration() {
+        let md = sample_report().to_markdown();
+        assert!(md.contains("# BSP sorting experiment — `unit`"));
+        assert!(md.contains("| 4 | 12.00 | 0.0200 | 150.0 |"));
+        assert!(md.contains("[DSQ]"));
+        assert!(md.contains("Ph2:SeqSort"));
+        assert!(md.contains("| Ph1:Init | 0.0 | 1.0 | — |"));
+    }
+
+    #[test]
+    fn write_files_creates_both_outputs() {
+        let dir = std::env::temp_dir().join("bsp_sort_report_test");
+        let report = sample_report();
+        let (json_path, md_path) = report.write_files(&dir).unwrap();
+        assert!(json_path.ends_with("BENCH_unit.json"));
+        let text = std::fs::read_to_string(&json_path).unwrap();
+        assert!(Json::parse(&text).is_ok());
+        assert!(std::fs::read_to_string(&md_path).unwrap().contains("experiment"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

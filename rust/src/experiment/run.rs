@@ -1,0 +1,432 @@
+//! Execute sweep cells: the generic verified single-run executor (shared
+//! with the table harness) and the warmup + repetition measurement that
+//! turns one [`RunConfig`] into a [`RunRecord`] of measured-vs-predicted
+//! statistics.
+
+use crate::baselines;
+use crate::bsp::engine::BspMachine;
+use crate::bsp::ledger::{ratio_or_nan, Ledger};
+use crate::gen::{generate_typed_for_proc, GenKey};
+use crate::key::{F64, RadixKey, Record};
+use crate::metrics::{Imbalance, RoutedVolume, RunReport};
+use crate::primitives::bitonic::BitonicItem;
+use crate::sort::common::ProcResult;
+use crate::sort::{bsi, det, iran, ran, SortConfig};
+use crate::util::bench::SampleStats;
+
+use super::calibrate::Calibration;
+use super::spec::{AlgoVariant, KeyDomain, RunConfig, RunSpec, SweepSpec};
+
+/// Everything the full study demands of a key domain: generation
+/// ([`GenKey`]), the radix backend ([`RadixKey`]) and bitonic exchange
+/// ([`BitonicItem`]).  Blanket-implemented — all four built-in domains
+/// qualify automatically.
+pub trait StudyKey: GenKey + RadixKey + BitonicItem<Self> {}
+
+impl<K: GenKey + RadixKey + BitonicItem<K>> StudyKey for K {}
+
+/// The raw outcome of one verified run: per-processor results plus the
+/// superstep/phase cost ledger.
+#[derive(Debug)]
+pub struct SingleRun<K> {
+    /// Per-processor outputs in pid order.
+    pub outputs: Vec<ProcResult<K>>,
+    /// The run's cost ledger.
+    pub ledger: Ledger,
+}
+
+/// Execute a spec over key domain `K` and verify the result (globally
+/// sorted, total size preserved) before returning it — the harness never
+/// reports an unverified number.
+///
+/// Panics on an unsorted output or a size mismatch: that is a
+/// harness-integrity guard, not a user error path.
+pub fn execute_typed<K: StudyKey>(spec: &RunSpec) -> SingleRun<K> {
+    let params = spec.params();
+    let machine = BspMachine::new(params);
+    let cfg = spec.cfg;
+    let (algo, bench, p, n, seed) = (spec.algo, spec.bench, spec.p, spec.n_total, spec.seed);
+    assert!(n % p == 0, "n must divide evenly (paper setup): n={n} p={p}");
+
+    let run = machine.run_keys::<K, _, _>(|ctx| {
+        let local: Vec<K> = generate_typed_for_proc(bench, ctx.pid(), p, n / p);
+        match algo {
+            AlgoVariant::Det => det::sort_det_bsp(ctx, &params, local, n, &cfg),
+            AlgoVariant::Iran => iran::sort_iran_bsp(ctx, &params, local, n, &cfg, seed),
+            AlgoVariant::Ran => ran::sort_ran_bsp(ctx, &params, local, n, &cfg, seed),
+            AlgoVariant::Bsi => bsi::sort_bsi(ctx, local, &cfg),
+            AlgoVariant::HelmanDet => baselines::sort_helman_det(ctx, &params, local, &cfg),
+            AlgoVariant::HelmanRan => {
+                baselines::sort_helman_ran(ctx, &params, local, n, &cfg, seed)
+            }
+            AlgoVariant::Psrs => baselines::sort_psrs(ctx, &params, local, &cfg),
+        }
+    });
+
+    let mut total = 0usize;
+    let mut last: Option<K> = None;
+    for r in &run.outputs {
+        for &k in &r.keys {
+            if let Some(prev) = last {
+                assert!(prev <= k, "harness: output not globally sorted");
+            }
+            last = Some(k);
+        }
+        total += r.keys.len();
+    }
+    assert_eq!(total, n, "harness: output size mismatch");
+
+    SingleRun { outputs: run.outputs, ledger: run.ledger }
+}
+
+/// Execute a spec in the paper's `i32` domain and reduce it to the
+/// table harness's [`RunReport`] (T3D-priced).  This is the single-run
+/// entry every table drives through.
+pub fn execute(spec: &RunSpec) -> RunReport {
+    let single = execute_typed::<i32>(spec);
+    let params = spec.params();
+    RunReport::new(
+        spec.algo.label(&spec.cfg),
+        spec.bench.tag(),
+        spec.n_total,
+        &params,
+        &single.ledger,
+        &single.outputs,
+    )
+}
+
+/// Mean predicted T3D seconds over `reps` runs with distinct seeds —
+/// the per-cell reduction every table uses.
+pub fn avg_predicted_secs(spec: &RunSpec, reps: usize, base_seed: u64) -> f64 {
+    let reps = reps.max(1);
+    let mut total = 0.0;
+    for r in 0..reps {
+        let mut s = *spec;
+        s.seed = base_seed.wrapping_add(r as u64 * 0x9E37);
+        total += execute(&s).predicted_secs;
+    }
+    total / reps as f64
+}
+
+/// One phase row of a [`RunRecord`]: predicted (host-calibrated) µs,
+/// measured µs, and their ratio (`NaN` when the model prices the phase
+/// at zero; serialized as `null`).
+#[derive(Clone, Debug)]
+pub struct PhaseStat {
+    /// Phase name.
+    pub name: String,
+    /// Predicted µs under the host calibration, mean over reps.
+    pub predicted_us: f64,
+    /// Measured wall µs (max over processors), mean over reps.
+    pub wall_us: f64,
+    /// `wall / predicted` (`NaN` if unpriced).
+    pub ratio: f64,
+}
+
+/// Load-balance and communication-regularity metrics of one
+/// configuration — the paper's max/avg keys per processor and routed
+/// words per processor, aggregated over the recorded reps.
+#[derive(Clone, Copy, Debug)]
+pub struct Balance {
+    /// Largest keys-received count of any processor in any rep.
+    pub recv_max: usize,
+    /// Smallest keys-received count of any processor in any rep.
+    pub recv_min: usize,
+    /// Mean keys received per processor (`n / p` when sizes balance).
+    pub recv_mean: f64,
+    /// `recv_max / recv_mean − 1` (the paper keeps this under 15 %).
+    pub expansion: f64,
+    /// Total words routed in Ph5, mean over reps.
+    pub routed_words_total: f64,
+    /// Largest per-processor routed h-relation of any rep.
+    pub routed_words_max: u64,
+    /// Routed words per processor (total / p), mean over reps.
+    pub routed_words_avg: f64,
+}
+
+/// One superstep of the last recorded rep, exported for the report.
+#[derive(Clone, Debug)]
+pub struct SuperstepStat {
+    /// Sync label.
+    pub label: String,
+    /// Phase active at the sync.
+    pub phase: String,
+    /// Max charged ops over processors.
+    pub max_ops: f64,
+    /// Realized h-relation, words.
+    pub h_words: u64,
+    /// Total words sent, all processors.
+    pub total_words: u64,
+    /// Measured wall µs (max over processors).
+    pub wall_us: f64,
+    /// Predicted µs under the host calibration.
+    pub predicted_us: f64,
+}
+
+/// A fully measured sweep cell: wall-clock statistics over the recorded
+/// reps, the host-calibrated prediction, per-phase ratios, balance
+/// metrics and the last rep's superstep trace.
+#[derive(Clone, Debug)]
+pub struct RunRecord {
+    /// Algorithm tag (`det`, `ran`, …).
+    pub algo: String,
+    /// Paper-notation label (\[DSQ\], [RAN-SQ], …).
+    pub algo_label: String,
+    /// Benchmark tag (`[U]`, `[DD]`, …).
+    pub bench: String,
+    /// Key-domain tag (`i32`, `u64`, …).
+    pub domain: String,
+    /// Total keys.
+    pub n: usize,
+    /// Processors.
+    pub p: usize,
+    /// Warm-up runs that preceded the recorded reps.
+    pub warmup: usize,
+    /// Recorded repetitions.
+    pub reps: usize,
+    /// Measured end-to-end wall µs over the reps.
+    pub wall_us: SampleStats,
+    /// Predicted end-to-end µs (host calibration), mean over reps.
+    pub predicted_us: f64,
+    /// `wall_us.mean / predicted_us`.
+    pub ratio: f64,
+    /// Per-phase measured-vs-predicted rows.
+    pub phases: Vec<PhaseStat>,
+    /// Balance and routing-volume metrics.
+    pub balance: Balance,
+    /// Superstep trace of the last recorded rep.
+    pub supersteps: Vec<SuperstepStat>,
+}
+
+/// Measure one sweep cell over a concrete key domain: `warmup`
+/// unrecorded runs, then `reps` recorded runs with distinct seeds,
+/// reduced into a [`RunRecord`] priced under `calib`.
+pub fn measure_typed<K: StudyKey>(
+    cfg: &RunConfig,
+    sweep: &SweepSpec,
+    calib: &Calibration,
+) -> RunRecord {
+    assert_eq!(cfg.p, calib.p, "calibration/config processor mismatch");
+    let sort_cfg = SortConfig::default().with_seq(sweep.seq);
+    let spec = RunSpec::new(cfg.algo, cfg.bench, cfg.p, cfg.n).with_cfg(sort_cfg);
+    let host = calib.params();
+
+    for w in 0..sweep.warmup {
+        let mut s = spec;
+        s.seed = sweep.seed.wrapping_sub(1 + w as u64);
+        let _ = execute_typed::<K>(&s);
+    }
+
+    let reps = sweep.reps.max(1);
+    let mut wall_samples = Vec::with_capacity(reps);
+    let mut predicted_sum = 0.0;
+    // Phase accumulators: (predicted µs sum, wall µs sum) by name.
+    let mut phase_acc: Vec<(String, f64, f64)> = Vec::new();
+    let mut recv_max = 0usize;
+    let mut recv_min = usize::MAX;
+    let mut recv_mean = 0.0f64;
+    let mut routed_total_sum = 0.0f64;
+    let mut routed_max = 0u64;
+    let mut last_ledger: Option<Ledger> = None;
+
+    for r in 0..reps {
+        let mut s = spec;
+        s.seed = sweep.seed.wrapping_add(r as u64);
+        let single = execute_typed::<K>(&s);
+        wall_samples.push(single.ledger.wall_us);
+        predicted_sum += single.ledger.predicted_us(&host);
+        for row in single.ledger.phase_comparison(&host) {
+            match phase_acc.iter().position(|(name, _, _)| *name == row.phase) {
+                Some(i) => {
+                    phase_acc[i].1 += row.predicted_secs * 1e6;
+                    phase_acc[i].2 += row.wall_secs * 1e6;
+                }
+                None => phase_acc.push((
+                    row.phase,
+                    row.predicted_secs * 1e6,
+                    row.wall_secs * 1e6,
+                )),
+            }
+        }
+        let imb = Imbalance::from_results(&single.outputs);
+        recv_max = recv_max.max(imb.max_received);
+        recv_min = recv_min.min(imb.min_received);
+        recv_mean += imb.mean_received / reps as f64;
+        let vol = RoutedVolume::from_ledger(&single.ledger, cfg.p);
+        routed_total_sum += vol.total_words as f64;
+        routed_max = routed_max.max(vol.max_words);
+        last_ledger = Some(single.ledger);
+    }
+
+    let wall_us = SampleStats::from_samples(&wall_samples);
+    let predicted_us = predicted_sum / reps as f64;
+    let phases: Vec<PhaseStat> = phase_acc
+        .into_iter()
+        .map(|(name, pred_sum, wall_sum)| {
+            let predicted = pred_sum / reps as f64;
+            let wall = wall_sum / reps as f64;
+            PhaseStat {
+                name,
+                predicted_us: predicted,
+                wall_us: wall,
+                ratio: ratio_or_nan(wall, predicted),
+            }
+        })
+        .collect();
+    let routed_total = routed_total_sum / reps as f64;
+    let balance = Balance {
+        recv_max,
+        recv_min: if recv_min == usize::MAX { 0 } else { recv_min },
+        recv_mean,
+        expansion: if recv_mean > 0.0 { recv_max as f64 / recv_mean - 1.0 } else { 0.0 },
+        routed_words_total: routed_total,
+        routed_words_max: routed_max,
+        routed_words_avg: routed_total / cfg.p.max(1) as f64,
+    };
+    let ledger = last_ledger.expect("at least one rep ran");
+    let supersteps = ledger
+        .supersteps
+        .iter()
+        .map(|s| SuperstepStat {
+            label: s.label.clone(),
+            phase: s.phase.clone(),
+            max_ops: s.max_ops,
+            h_words: s.h_words,
+            total_words: s.total_words,
+            wall_us: s.wall_us,
+            predicted_us: s.predicted_us(&host),
+        })
+        .collect();
+
+    RunRecord {
+        algo: cfg.algo.tag().to_string(),
+        algo_label: cfg.algo.label(&sort_cfg),
+        bench: cfg.bench.tag(),
+        domain: cfg.domain.tag().to_string(),
+        n: cfg.n,
+        p: cfg.p,
+        warmup: sweep.warmup,
+        reps,
+        wall_us,
+        predicted_us,
+        ratio: ratio_or_nan(wall_us.mean, predicted_us),
+        phases,
+        balance,
+        supersteps,
+    }
+}
+
+/// Measure one sweep cell, dispatching on its key domain.
+pub fn measure_config(cfg: &RunConfig, sweep: &SweepSpec, calib: &Calibration) -> RunRecord {
+    match cfg.domain {
+        KeyDomain::I32 => measure_typed::<i32>(cfg, sweep, calib),
+        KeyDomain::U64 => measure_typed::<u64>(cfg, sweep, calib),
+        KeyDomain::F64T => measure_typed::<F64>(cfg, sweep, calib),
+        KeyDomain::RecordU32 => measure_typed::<Record>(cfg, sweep, calib),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiment::calibrate::{calibrate_with, ProbePlan, SyntheticProber};
+    use crate::gen::Benchmark;
+
+    fn t3d_like_calibration(p: usize) -> Calibration {
+        let mut prober =
+            SyntheticProber { l_us: 130.0, g_us_per_word: 0.21, comps_per_us: 7.0 };
+        calibrate_with(p, &mut prober, &ProbePlan::quick())
+    }
+
+    fn quick_sweep() -> SweepSpec {
+        let mut sweep = SweepSpec::quick();
+        sweep.ns = vec![1 << 12];
+        sweep.ps = vec![4];
+        sweep.warmup = 0;
+        sweep.reps = 2;
+        sweep
+    }
+
+    #[test]
+    fn executes_all_variants_small() {
+        for algo in super::super::spec::ALL_ALGOS {
+            let spec = RunSpec::new(algo, Benchmark::Uniform, 4, 1 << 10);
+            let report = execute(&spec);
+            assert!(report.predicted_secs > 0.0, "{algo:?}");
+            assert!(report.wall_secs > 0.0);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "n must divide evenly")]
+    fn uneven_n_rejected() {
+        execute(&RunSpec::new(AlgoVariant::Det, Benchmark::Uniform, 3, 100));
+    }
+
+    #[test]
+    fn typed_execution_sorts_u64() {
+        let spec = RunSpec::new(AlgoVariant::Ran, Benchmark::DetDup, 4, 1 << 10);
+        let single = execute_typed::<u64>(&spec);
+        let total: usize = single.outputs.iter().map(|r| r.keys.len()).sum();
+        assert_eq!(total, 1 << 10);
+        assert!(!single.ledger.supersteps.is_empty());
+    }
+
+    #[test]
+    fn det_run_phase_ratios_are_finite_and_positive() {
+        // The satellite requirement: in a small det run, every *priced*
+        // phase must carry a finite, positive measured-vs-predicted
+        // ratio.
+        let sweep = quick_sweep();
+        let calib = t3d_like_calibration(4);
+        let cfg = RunConfig {
+            algo: AlgoVariant::Det,
+            bench: Benchmark::Uniform,
+            domain: KeyDomain::I32,
+            n: 1 << 12,
+            p: 4,
+        };
+        let rec = measure_typed::<i32>(&cfg, &sweep, &calib);
+        let priced: Vec<&PhaseStat> =
+            rec.phases.iter().filter(|ph| ph.predicted_us > 0.0).collect();
+        assert!(priced.len() >= 4, "expected several priced phases, got {:?}", rec.phases);
+        for ph in priced {
+            assert!(
+                ph.ratio.is_finite() && ph.ratio > 0.0,
+                "phase {} ratio={} (wall={} pred={})",
+                ph.name,
+                ph.ratio,
+                ph.wall_us,
+                ph.predicted_us
+            );
+        }
+        assert!(rec.ratio.is_finite() && rec.ratio > 0.0);
+        assert!(rec.predicted_us > 0.0 && rec.wall_us.mean > 0.0);
+        assert_eq!(rec.wall_us.n, 2);
+    }
+
+    #[test]
+    fn balance_metrics_track_routing() {
+        let sweep = quick_sweep();
+        let calib = t3d_like_calibration(4);
+        let cfg = RunConfig {
+            algo: AlgoVariant::Det,
+            bench: Benchmark::Uniform,
+            domain: KeyDomain::U64,
+            n: 1 << 12,
+            p: 4,
+        };
+        let rec = measure_config(&cfg, &sweep, &calib);
+        assert_eq!(rec.domain, "u64");
+        assert!(rec.balance.recv_max >= rec.balance.recv_mean as usize);
+        assert!(rec.balance.recv_mean > 0.0);
+        // Routing moves every key exactly once: total routed words equal
+        // n (bare keys on the wire, §5.1.1 transparency).
+        assert!(rec.balance.routed_words_total > 0.0);
+        assert!(rec.balance.routed_words_max > 0);
+        assert!(
+            rec.balance.routed_words_avg <= rec.balance.routed_words_max as f64 + 1e-9
+        );
+        assert!(!rec.supersteps.is_empty());
+    }
+}

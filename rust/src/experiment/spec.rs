@@ -1,0 +1,409 @@
+//! What a sweep runs: algorithm variants, key domains, the single-run
+//! spec, and the cross-product [`SweepSpec`] with its CLI parsing.
+//!
+//! [`AlgoVariant`] and [`RunSpec`] moved here from `tables::runner` (which
+//! re-exports them): the tables are now one consumer of the experiment
+//! runner among several, not the owner of the run vocabulary.
+
+use crate::gen::Benchmark;
+use crate::seq::SeqSortKind;
+use crate::sort::SortConfig;
+use crate::util::cli::{Args, CliError};
+
+use super::calibrate::ProbePlan;
+
+/// Every runnable algorithm variant in the study.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum AlgoVariant {
+    /// SORT_DET_BSP (\[DSQ\]/\[DSR\] by config backend).
+    Det,
+    /// SORT_IRAN_BSP (\[RSQ\]/\[RSR\]).
+    Iran,
+    /// SORT_RAN_BSP (classic sample sort, design baseline).
+    Ran,
+    /// Full bitonic \[BSI\].
+    Bsi,
+    /// Helman–JaJa–Bader deterministic [39].
+    HelmanDet,
+    /// Helman–JaJa–Bader randomized [40].
+    HelmanRan,
+    /// PSRS [61]/[44].
+    Psrs,
+}
+
+/// Every variant, in report order.
+pub const ALL_ALGOS: [AlgoVariant; 7] = [
+    AlgoVariant::Det,
+    AlgoVariant::Iran,
+    AlgoVariant::Ran,
+    AlgoVariant::Bsi,
+    AlgoVariant::HelmanDet,
+    AlgoVariant::HelmanRan,
+    AlgoVariant::Psrs,
+];
+
+impl AlgoVariant {
+    /// Paper-notation label under a configuration (\[DSQ\], \[RSR\], …).
+    pub fn label(&self, cfg: &SortConfig) -> String {
+        match self {
+            AlgoVariant::Det => cfg.variant_name(true),
+            AlgoVariant::Iran => cfg.variant_name(false),
+            AlgoVariant::Ran => format!("[RAN-S{}]", cfg.seq.suffix()),
+            AlgoVariant::Bsi => "[BSI]".into(),
+            AlgoVariant::HelmanDet => "[39]".into(),
+            AlgoVariant::HelmanRan => "[40]".into(),
+            AlgoVariant::Psrs => "[44]".into(),
+        }
+    }
+
+    /// Stable CLI/report tag (`det`, `iran`, `helman-det`, …).
+    pub fn tag(&self) -> &'static str {
+        match self {
+            AlgoVariant::Det => "det",
+            AlgoVariant::Iran => "iran",
+            AlgoVariant::Ran => "ran",
+            AlgoVariant::Bsi => "bsi",
+            AlgoVariant::HelmanDet => "helman-det",
+            AlgoVariant::HelmanRan => "helman-ran",
+            AlgoVariant::Psrs => "psrs",
+        }
+    }
+
+    /// Parse a CLI tag; unknown tags list the accepted set.
+    pub fn parse(s: &str) -> Result<AlgoVariant, CliError> {
+        ALL_ALGOS
+            .iter()
+            .find(|a| a.tag() == s.to_ascii_lowercase())
+            .copied()
+            .ok_or_else(|| {
+                let tags: Vec<&str> = ALL_ALGOS.iter().map(|a| a.tag()).collect();
+                CliError(format!("unknown algorithm '{s}' (expected one of {})", tags.join(", ")))
+            })
+    }
+}
+
+/// The built-in key domains a sweep can run over (`key::Key`
+/// instantiations with generators).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum KeyDomain {
+    /// `i32` — the paper's experiments (default).
+    I32,
+    /// `u64` — full 64-bit communication words.
+    U64,
+    /// Total-ordered `f64` (`key::F64`).
+    F64T,
+    /// `(u32 key, u32 payload)` records (`key::Record`).
+    RecordU32,
+}
+
+/// Every built-in domain, in report order.
+pub const ALL_DOMAINS: [KeyDomain; 4] =
+    [KeyDomain::I32, KeyDomain::U64, KeyDomain::F64T, KeyDomain::RecordU32];
+
+impl KeyDomain {
+    /// Stable CLI/report tag.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            KeyDomain::I32 => "i32",
+            KeyDomain::U64 => "u64",
+            KeyDomain::F64T => "f64",
+            KeyDomain::RecordU32 => "record",
+        }
+    }
+
+    /// Parse a CLI tag; unknown tags list the accepted set.
+    pub fn parse(s: &str) -> Result<KeyDomain, CliError> {
+        ALL_DOMAINS
+            .iter()
+            .find(|d| d.tag() == s.to_ascii_lowercase())
+            .copied()
+            .ok_or_else(|| {
+                let tags: Vec<&str> = ALL_DOMAINS.iter().map(|d| d.tag()).collect();
+                CliError(format!("unknown key domain '{s}' (expected one of {})", tags.join(", ")))
+            })
+    }
+}
+
+/// One experiment: algorithm × benchmark × (p, n) × config.
+#[derive(Clone, Copy, Debug)]
+pub struct RunSpec {
+    /// Which algorithm to run.
+    pub algo: AlgoVariant,
+    /// Input distribution (§6.3).
+    pub bench: Benchmark,
+    /// Processor count.
+    pub p: usize,
+    /// Total keys across all processors (must divide by `p`).
+    pub n_total: usize,
+    /// Variant knobs (sequential backend, duplicate policy, ω).
+    pub cfg: SortConfig,
+    /// Seed for randomized variants.
+    pub seed: u64,
+}
+
+impl RunSpec {
+    /// A spec with the default configuration and seed.
+    pub fn new(algo: AlgoVariant, bench: Benchmark, p: usize, n_total: usize) -> RunSpec {
+        RunSpec {
+            algo,
+            bench,
+            p,
+            n_total,
+            cfg: SortConfig::default(),
+            seed: 0x0BEE,
+        }
+    }
+
+    /// Replace the configuration.
+    pub fn with_cfg(mut self, cfg: SortConfig) -> RunSpec {
+        self.cfg = cfg;
+        self
+    }
+
+    /// The paper's T3D parameters for this spec's `p` (table pricing).
+    pub fn params(&self) -> crate::bsp::params::BspParams {
+        crate::bsp::params::cray_t3d(self.p)
+    }
+}
+
+/// One cell of a sweep's cross-product (a [`RunSpec`] plus the key
+/// domain it runs over).
+#[derive(Clone, Copy, Debug)]
+pub struct RunConfig {
+    /// Which algorithm.
+    pub algo: AlgoVariant,
+    /// Input distribution.
+    pub bench: Benchmark,
+    /// Key domain.
+    pub domain: KeyDomain,
+    /// Total keys.
+    pub n: usize,
+    /// Processor count.
+    pub p: usize,
+}
+
+/// A full sweep: the cross-product of algorithms × benchmarks × key
+/// domains × n × p, with warmup + repetition counts and the calibration
+/// probe plan.  `experiment::run_study` executes it into a `StudyReport`.
+#[derive(Clone, Debug)]
+pub struct SweepSpec {
+    /// Algorithms to run.
+    pub algos: Vec<AlgoVariant>,
+    /// Input distributions.
+    pub benches: Vec<Benchmark>,
+    /// Key domains.
+    pub domains: Vec<KeyDomain>,
+    /// Total input sizes.
+    pub ns: Vec<usize>,
+    /// Processor counts.
+    pub ps: Vec<usize>,
+    /// Sequential backend for all runs.
+    pub seq: SeqSortKind,
+    /// Unrecorded warm-up runs per configuration.
+    pub warmup: usize,
+    /// Recorded repetitions per configuration (distinct seeds).
+    pub reps: usize,
+    /// Base seed; rep `r` runs with `seed + r`.
+    pub seed: u64,
+    /// Report tag: outputs land in `BENCH_<tag>.json` / `.md`.
+    pub tag: String,
+    /// Calibration probe sizes.
+    pub probes: ProbePlan,
+}
+
+impl SweepSpec {
+    /// The CI/acceptance preset: det + ran on `[U]` and `[DD]`, the
+    /// `i32` and `u64` key domains, p ∈ {4, 8}, 16K keys, 1 warmup +
+    /// 2 recorded reps — a complete miniature of the study that finishes
+    /// in seconds.
+    pub fn quick() -> SweepSpec {
+        SweepSpec {
+            algos: vec![AlgoVariant::Det, AlgoVariant::Ran],
+            benches: vec![Benchmark::Uniform, Benchmark::DetDup],
+            domains: vec![KeyDomain::I32, KeyDomain::U64],
+            ns: vec![1 << 14],
+            ps: vec![4, 8],
+            seq: SeqSortKind::Quick,
+            warmup: 1,
+            reps: 2,
+            seed: 0x0BEE,
+            tag: "quick".into(),
+            probes: ProbePlan::quick(),
+        }
+    }
+
+    /// The default full study: both one-optimal algorithms over all
+    /// seven §6.3 distributions at the paper's smaller grid.
+    pub fn default_study() -> SweepSpec {
+        SweepSpec {
+            algos: vec![AlgoVariant::Det, AlgoVariant::Iran],
+            benches: crate::gen::ALL_BENCHMARKS.to_vec(),
+            domains: vec![KeyDomain::I32],
+            ns: vec![1 << 20, 1 << 22],
+            ps: vec![16, 64],
+            seq: SeqSortKind::Quick,
+            warmup: 1,
+            reps: 3,
+            seed: 0x0BEE,
+            tag: "study".into(),
+            probes: ProbePlan::default_plan(),
+        }
+    }
+
+    /// Build a sweep from CLI arguments: `--quick` selects the preset,
+    /// otherwise the full study; list options (`--algos det,ran`,
+    /// `--benches U,DD`, `--domains i32,u64`, `--ns`, `--ps`) and the
+    /// scalar knobs (`--warmup`, `--reps`, `--seed`, `--tag`, `--seq`)
+    /// override either base.
+    pub fn from_args(args: &Args) -> Result<SweepSpec, CliError> {
+        let mut spec = if args.flag("quick") {
+            SweepSpec::quick()
+        } else {
+            SweepSpec::default_study()
+        };
+        if let Some(v) = args.get("algos") {
+            spec.algos = split_list(v).map(AlgoVariant::parse).collect::<Result<_, _>>()?;
+        }
+        if let Some(v) = args.get("benches") {
+            spec.benches = split_list(v)
+                .map(|s| {
+                    Benchmark::parse_strict(s).map_err(|e| CliError(e.to_string()))
+                })
+                .collect::<Result<_, _>>()?;
+        }
+        if let Some(v) = args.get("domains") {
+            spec.domains = split_list(v).map(KeyDomain::parse).collect::<Result<_, _>>()?;
+        }
+        spec.ns = args.get_list("ns", &spec.ns)?;
+        spec.ps = args.get_list("ps", &spec.ps)?;
+        spec.warmup = args.get_parsed("warmup", spec.warmup)?;
+        spec.reps = args.get_parsed("reps", spec.reps)?;
+        spec.seed = args.get_parsed("seed", spec.seed)?;
+        if let Some(t) = args.get("tag") {
+            spec.tag = t.to_string();
+        }
+        if let Some(s) = args.get("seq") {
+            spec.seq = match s {
+                "quick" | "q" => SeqSortKind::Quick,
+                "radix" | "r" => SeqSortKind::Radix,
+                other => return Err(CliError(format!("unknown --seq {other}"))),
+            };
+        }
+        spec.validate().map_err(CliError)?;
+        Ok(spec)
+    }
+
+    /// Structural validation: non-empty axes, divisible sizes, a sane
+    /// tag (it becomes a file name), reps ≥ 1.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.algos.is_empty() || self.benches.is_empty() || self.domains.is_empty() {
+            return Err("sweep axes must be non-empty".into());
+        }
+        if self.ns.is_empty() || self.ps.is_empty() {
+            return Err("--ns and --ps must be non-empty".into());
+        }
+        if self.reps == 0 {
+            return Err("--reps must be at least 1".into());
+        }
+        for &n in &self.ns {
+            for &p in &self.ps {
+                if p == 0 || n % p != 0 {
+                    return Err(format!("n={n} does not divide evenly over p={p}"));
+                }
+            }
+        }
+        if self.tag.is_empty()
+            || !self
+                .tag
+                .chars()
+                .all(|c| c.is_ascii_alphanumeric() || c == '-' || c == '_')
+        {
+            return Err(format!("invalid --tag '{}' (alphanumeric, '-', '_')", self.tag));
+        }
+        Ok(())
+    }
+
+    /// The cross-product, in deterministic (algo, bench, domain, n, p)
+    /// nesting order.
+    pub fn configs(&self) -> Vec<RunConfig> {
+        let mut out = Vec::new();
+        for &algo in &self.algos {
+            for &bench in &self.benches {
+                for &domain in &self.domains {
+                    for &n in &self.ns {
+                        for &p in &self.ps {
+                            out.push(RunConfig { algo, bench, domain, n, p });
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+fn split_list(v: &str) -> impl Iterator<Item = &str> {
+    v.split(',').map(str::trim).filter(|s| !s.is_empty())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn algo_and_domain_tags_roundtrip() {
+        for a in ALL_ALGOS {
+            assert_eq!(AlgoVariant::parse(a.tag()).unwrap(), a);
+        }
+        for d in ALL_DOMAINS {
+            assert_eq!(KeyDomain::parse(d.tag()).unwrap(), d);
+        }
+        assert!(AlgoVariant::parse("nope").is_err());
+        assert!(KeyDomain::parse("i33").is_err());
+    }
+
+    #[test]
+    fn quick_preset_covers_acceptance_grid() {
+        let spec = SweepSpec::quick();
+        spec.validate().unwrap();
+        assert!(spec.algos.contains(&AlgoVariant::Det) && spec.algos.contains(&AlgoVariant::Ran));
+        assert_eq!(spec.ps, vec![4, 8]);
+        assert_eq!(spec.domains.len(), 2);
+        // 2 algos × 2 benches × 2 domains × 1 n × 2 p.
+        assert_eq!(spec.configs().len(), 16);
+    }
+
+    #[test]
+    fn from_args_overrides() {
+        let args = Args::parse(
+            sv(&[
+                "experiment", "--quick", "--algos", "det", "--benches", "U",
+                "--domains", "i32", "--ns", "4096", "--ps", "4", "--reps", "1",
+                "--tag", "t1",
+            ]),
+            &["algos", "benches", "domains", "ns", "ps", "reps", "tag"],
+        )
+        .unwrap();
+        let spec = SweepSpec::from_args(&args).unwrap();
+        assert_eq!(spec.configs().len(), 1);
+        assert_eq!(spec.tag, "t1");
+        assert_eq!(spec.reps, 1);
+    }
+
+    #[test]
+    fn from_args_rejects_uneven_grid_and_bad_tag() {
+        let args = Args::parse(
+            sv(&["experiment", "--quick", "--ns", "1000", "--ps", "3"]),
+            &["ns", "ps"],
+        )
+        .unwrap();
+        assert!(SweepSpec::from_args(&args).is_err());
+        let mut spec = SweepSpec::quick();
+        spec.tag = "../evil".into();
+        assert!(spec.validate().is_err());
+    }
+}

@@ -6,13 +6,13 @@
 //!
 //! | tag    | name                      |
 //! |--------|---------------------------|
-//! | [U]    | Uniform                   |
-//! | [G]    | Gaussian (4-call average) |
-//! | [B]    | Bucket sorted             |
+//! | \[U\]    | Uniform                   |
+//! | \[G\]    | Gaussian (4-call average) |
+//! | \[B\]    | Bucket sorted             |
 //! | [g-G]  | g-Group (g = 2 default)   |
-//! | [S]    | Staggered                 |
-//! | [DD]   | Deterministic duplicates  |
-//! | [WR]   | Worst-case regular [39]   |
+//! | \[S\]    | Staggered                 |
+//! | \[DD\]   | Deterministic duplicates  |
+//! | \[WR\]   | Worst-case regular [39]   |
 //!
 //! `INT_MAX` below is the paper's "maximum integer value plus one ... in
 //! a 32-bit signed arithmetic data type", i.e. 2³¹.
@@ -27,19 +27,19 @@ pub const INT_MAX_P1: i64 = 1 << 31;
 /// The seven benchmark distributions of §6.3.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Benchmark {
-    /// [U] uniform over [0, 2³¹−1].
+    /// \[U\] uniform over [0, 2³¹−1].
     Uniform,
-    /// [G] Gaussian approximation: mean of four `random()` calls.
+    /// \[G\] Gaussian approximation: mean of four `random()` calls.
     Gaussian,
-    /// [B] bucket sorted: p per-proc buckets of n/p² uniform keys each.
+    /// \[B\] bucket sorted: p per-proc buckets of n/p² uniform keys each.
     Bucket,
     /// [g-G] g-group with this g (paper tables use 2-G).
     GGroup(usize),
-    /// [S] staggered.
+    /// \[S\] staggered.
     Staggered,
-    /// [DD] deterministic duplicates.
+    /// \[DD\] deterministic duplicates.
     DetDup,
-    /// [WR] worst-case-regular (the [39] adversary for regular sampling).
+    /// \[WR\] worst-case-regular (the [39] adversary for regular sampling).
     WorstRegular,
 }
 
@@ -226,7 +226,7 @@ impl GenKey for Record {
 /// mapped into key domain `K` (deterministic per `(bench, pid)` like the
 /// `i32` generators — the aux stream is seeded from the paper seed).
 ///
-/// For duplicate-defined benchmarks ([DD], whose *point* is massive key
+/// For duplicate-defined benchmarks (\[DD\], whose *point* is massive key
 /// equality) the aux bits are zeroed: entropy in the domain's low bits
 /// would turn every equal draw into a distinct key and silently destroy
 /// the property §5.1.1 is stressed by.
@@ -272,7 +272,7 @@ fn uniform_below(rng: &mut BsdRandom, bound: i64) -> i64 {
     }
 }
 
-/// [DD] Deterministic duplicates (§6.3 item 6): the keys of the first
+/// \[DD\] Deterministic duplicates (§6.3 item 6): the keys of the first
 /// p/2 processors are all `lg n`, of the next p/4 `lg(n/p)`, and so on;
 /// the last processor repeats the halving pattern *within* its own keys.
 fn det_dup(pid: usize, p: usize, n_local: usize) -> Vec<i32> {
@@ -314,7 +314,7 @@ fn det_dup(pid: usize, p: usize, n_local: usize) -> Vec<i32> {
     }
 }
 
-/// The last processor's [DD] share: n/(p·2^i) keys of value
+/// The last processor's \[DD\] share: n/(p·2^i) keys of value
 /// `lg(n/(p·2^{i-1}))`, halving until exhausted.
 fn intra_dd(n_local: usize, n_total: i64, p: usize) -> Vec<i32> {
     let lg = |x: i64| -> i32 {
@@ -337,7 +337,7 @@ fn intra_dd(n_local: usize, n_total: i64, p: usize) -> Vec<i32> {
     out
 }
 
-/// [WR] Worst-case for regular sampling, following [39]'s construction:
+/// \[WR\] Worst-case for regular sampling, following [39]'s construction:
 /// the globally sorted sequence is dealt to processors cyclically, so
 /// every processor's regular sample is (nearly) the same and the induced
 /// buckets are maximally imbalanced for plain regular sampling (s = p).

@@ -16,6 +16,8 @@
 //! order-preserving unsigned image for the LSD radix backend (`[.SR]`
 //! variants).
 
+#![warn(missing_docs)]
+
 use std::cmp::Ordering;
 use std::fmt;
 
@@ -126,7 +128,10 @@ impl RadixKey for u64 {
 ///
 /// Order: `-NaN < -∞ < … < -0.0 < +0.0 < … < +∞ < +NaN`.
 #[derive(Clone, Copy, Debug, Default)]
-pub struct F64(pub f64);
+pub struct F64(
+    /// The raw IEEE-754 value (every bit pattern is a valid key).
+    pub f64,
+);
 
 impl PartialEq for F64 {
     fn eq(&self, other: &F64) -> bool {
@@ -187,7 +192,9 @@ impl RadixKey for F64 {
 /// sorting stack needs no awareness that a payload is riding along.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct Record {
+    /// The sort key.
     pub key: u32,
+    /// Satellite data riding along (never examined by the sorts).
     pub payload: u32,
 }
 

@@ -23,6 +23,55 @@
 //! and `(u32 key, u32 payload)` records ([`key::Record`]) through
 //! [`bsp::BspMachine::run_keys`].
 //!
+//! ## The BSP cost model
+//!
+//! A BSP machine is the triple `(p, L, g)`: `p` processors, a
+//! synchronization latency `L` (µs), and a communication gap `g` (µs per
+//! 64-bit word).  A program is a sequence of *supersteps* — compute on
+//! local data, stage messages, synchronize — and one superstep costs
+//!
+//! ```text
+//! max { L,  x/rate + g·h }
+//! ```
+//!
+//! where `x` is the maximum basic operations (comparisons, at `rate`
+//! comparisons/µs) charged on any processor and `h` the maximum words
+//! into or out of any processor (the *h-relation*).  Predicted run time
+//! is the sum over supersteps ([`bsp::Ledger::predicted_us`]).
+//!
+//! *Slackness* `n/p` is what makes the one-optimality claims work: for
+//! `n/p` large enough, the `(n/p)·lg(n/p)` local-sort term dominates
+//! both `L·lg²p` synchronization and `g·n_max` routing, so the parallel
+//! efficiency approaches 1 (Props 5.1/5.3, [`theory`]).  The paper's
+//! tables price runs under the Cray T3D's measured parameters
+//! ([`bsp::params::cray_t3d`]); the [`experiment`] subsystem instead
+//! *calibrates* `(g, L, rate)` on the host with micro-probes so
+//! predictions land in host microseconds, directly comparable to
+//! measured wall-clock.
+//!
+//! ## Running the experiment study
+//!
+//! One call sweeps a cross-product of {algorithm, distribution, key
+//! domain, n, p}, calibrates the host, and reports measured-vs-predicted
+//! ratios plus balance metrics (the CLI front-end is
+//! `bsp-sort experiment`):
+//!
+//! ```
+//! use bsp_sort::experiment::{self, ProbePlan, SweepSpec};
+//!
+//! let mut spec = SweepSpec::quick();   // the CI-sized preset…
+//! spec.ns = vec![2048];                // …shrunk further for a doctest
+//! spec.ps = vec![4];
+//! spec.reps = 1;
+//! spec.warmup = 0;
+//! spec.probes = ProbePlan::quick();
+//! let report = experiment::run_study(&spec);
+//! let run = &report.runs[0];
+//! assert!(run.ratio.is_finite() && run.ratio > 0.0);   // measured / predicted
+//! assert!(report.calibrations[0].l_us > 0.0);          // host L, µs
+//! println!("{}", report.to_markdown());
+//! ```
+//!
 //! Quickstart (a compiling, running doctest — `cargo test` executes it):
 //!
 //! ```
@@ -59,6 +108,7 @@
 
 pub mod baselines;
 pub mod bsp;
+pub mod experiment;
 pub mod gen;
 pub mod key;
 pub mod metrics;

@@ -1,19 +1,30 @@
 //! `bsp-sort` — CLI for the BSP sorting study.
 //!
 //! Subcommands:
-//!   table <N>        regenerate paper Table N (1..11)
-//!   all-tables       regenerate every table
-//!   sort             run one sorting configuration and report
-//!   predict          Prop 5.1/5.3 efficiency vs harness prediction
-//!   validate-g       back out g from the routing phase (§6.4)
-//!   ablate-dup       duplicate-handling overhead ablation (§6.1/§6.4)
-//!   selftest         tiny end-to-end sanity run (incl. PJRT if built)
 //!
-//! Common flags: --max-n <keys>, --max-p <procs>, --full, --reps <k>,
-//! --seed <s>; `sort` adds --algo, --bench, --n, --p, --seq, --no-dup.
+//! ```text
+//! table <N>        regenerate paper Table N (1..11)
+//! all-tables       regenerate every table
+//! sort             run one sorting configuration and report
+//! experiment       sweep + (g,L) calibration + measured-vs-predicted
+//!                  report (BENCH_<tag>.json / .md)
+//! predict          Prop 5.1/5.3 efficiency vs harness prediction
+//! validate-g       back out g from the routing phase (§6.4)
+//! ablate-dup       duplicate-handling overhead ablation (§6.1/§6.4)
+//! selftest         tiny end-to-end sanity run (incl. PJRT if built)
+//! ```
+//!
+//! Common flags: `--max-n <keys>`, `--max-p <procs>`, `--full`,
+//! `--reps <k>`, `--seed <s>`; `sort` adds `--algo`, `--bench`, `--n`,
+//! `--p`, `--seq`, `--no-dup`; `experiment` adds `--quick`, `--algos`,
+//! `--benches`, `--domains`, `--ns`, `--ps`, `--warmup`, `--tag`,
+//! `--out`.
+
+use std::path::Path;
 
 use bsp_sort::bsp::engine::BspMachine;
 use bsp_sort::bsp::params::cray_t3d;
+use bsp_sort::experiment::{self, SweepSpec};
 use bsp_sort::gen::Benchmark;
 use bsp_sort::metrics::RunReport;
 use bsp_sort::seq::SeqSortKind;
@@ -21,9 +32,11 @@ use bsp_sort::sort::{DuplicatePolicy, SortConfig};
 use bsp_sort::tables::{self, runner, TableOpts};
 use bsp_sort::util::cli::Args;
 use bsp_sort::util::fmt_secs;
+use bsp_sort::util::json::Json;
 
 const VALUE_OPTS: &[&str] = &[
     "max-n", "max-p", "reps", "seed", "algo", "bench", "n", "p", "seq", "table",
+    "algos", "benches", "domains", "ns", "ps", "warmup", "tag", "out",
 ];
 
 fn main() {
@@ -130,6 +143,9 @@ fn run(cmd: &str, args: &Args) -> Result<(), Box<dyn std::error::Error>> {
             let report = runner::execute(&spec);
             print_report(&report);
         }
+        "experiment" => {
+            run_experiment(args)?;
+        }
         "selftest" => {
             selftest()?;
         }
@@ -157,6 +173,55 @@ fn print_report(r: &RunReport) {
     for (ph, secs) in &r.phase_predicted {
         println!("  {ph:<14} {}", fmt_secs(*secs));
     }
+}
+
+/// The `experiment` subcommand: build the sweep from flags, calibrate,
+/// run, write `BENCH_<tag>.{json,md}`, then re-read and schema-validate
+/// the JSON before declaring success.
+fn run_experiment(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
+    let spec = SweepSpec::from_args(args)?;
+    let out_dir = args.get("out").unwrap_or(".");
+    let configs = spec.configs().len();
+    println!(
+        "experiment '{}': {} configurations × ({} warmup + {} reps), p ∈ {:?}",
+        spec.tag, configs, spec.warmup, spec.reps, spec.ps
+    );
+    let report = experiment::run_study(&spec);
+
+    for c in &report.calibrations {
+        println!(
+            "calibrated p={:<3}  L = {:>8.2} µs   g = {:.4} µs/word   rate = {:.1} comps/µs   (fit r² = {:.4})",
+            c.p, c.l_us, c.g_us_per_word, c.comps_per_us, c.fit_r2
+        );
+    }
+    for r in &report.runs {
+        println!(
+            "{:<10} {:<6} {:<7} n={:<9} p={:<4} measured {:>9} s  predicted {:>9} s  ratio {:>5.2}  max/avg {:>7}/{:.0}",
+            r.algo_label,
+            r.bench,
+            r.domain,
+            r.n,
+            r.p,
+            fmt_secs(r.wall_us.mean / 1e6),
+            fmt_secs(r.predicted_us / 1e6),
+            r.ratio,
+            r.balance.recv_max,
+            r.balance.recv_mean,
+        );
+    }
+
+    let (json_path, md_path) = report.write_files(Path::new(out_dir))?;
+    let text = std::fs::read_to_string(&json_path)?;
+    let doc = Json::parse(&text)?;
+    tables::validate::validate_report(&doc)
+        .map_err(|e| format!("written report failed schema validation: {e}"))?;
+    println!(
+        "wrote {} (schema-valid {}) and {}",
+        json_path.display(),
+        experiment::SCHEMA,
+        md_path.display()
+    );
+    Ok(())
 }
 
 fn selftest() -> Result<(), Box<dyn std::error::Error>> {
@@ -203,10 +268,20 @@ USAGE:
   bsp-sort sort --algo det|iran|ran|bsi|helman-det|helman-ran|psrs
                 --bench U|G|B|2-G|S|DD|WR --n 8388608 --p 64
                 [--seq quick|radix] [--no-dup]
+  bsp-sort experiment [--quick] [--algos det,ran,...] [--benches U,DD,...]
+                      [--domains i32,u64,f64,record] [--ns N1,N2] [--ps P1,P2]
+                      [--warmup W] [--reps R] [--seed S] [--seq quick|radix]
+                      [--tag T] [--out DIR]
   bsp-sort predict | validate-g | ablate-dup
   bsp-sort selftest
 
 Tables report *predicted Cray T3D seconds* from the BSP cost model
 (p, L, g as measured in the paper); host wall-clock is reported by
 `sort`.  Default grid caps n at 8M; --full runs the paper's full 64M.
+
+`experiment` calibrates the host's (g, L) and operation rate from
+micro-probes, runs the sweep cross-product with warmup + repetitions,
+and writes BENCH_<tag>.json (schema bsp-sort/experiment-report/v1,
+validated after writing) plus BENCH_<tag>.md.  --quick is the CI-sized
+preset: det+ran on [U]+[DD], i32+u64, 16K keys, p in {4,8}.
 "#;

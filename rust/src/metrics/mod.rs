@@ -18,7 +18,9 @@ pub struct Imbalance {
 }
 
 impl Imbalance {
-    pub fn from_results(results: &[ProcResult]) -> Imbalance {
+    /// Reduce per-processor results (any key domain — only the received
+    /// counts are read).
+    pub fn from_results<K>(results: &[ProcResult<K>]) -> Imbalance {
         let counts: Vec<usize> = results.iter().map(|r| r.received).collect();
         let max = counts.iter().copied().max().unwrap_or(0);
         let min = counts.iter().copied().min().unwrap_or(0);
@@ -28,6 +30,40 @@ impl Imbalance {
             min_received: min,
             mean_received: mean,
             expansion: if mean > 0.0 { max as f64 / mean - 1.0 } else { 0.0 },
+        }
+    }
+}
+
+/// Words moved in the Ph5 routing supersteps — the paper's
+/// communication-regularity evidence ("routed words per processor" next
+/// to the max/avg key balance of Lemma 5.1).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct RoutedVolume {
+    /// Total words sent across all processors in routing supersteps.
+    pub total_words: u64,
+    /// Largest per-processor h-relation of any routing superstep.
+    pub max_words: u64,
+    /// `total / p` — the perfectly regular per-processor share.
+    pub avg_words: f64,
+}
+
+impl RoutedVolume {
+    /// Scan `ledger` for supersteps whose phase is Ph5 (routing) and
+    /// reduce their volumes.  Algorithms that never enter Ph5 (e.g. the
+    /// bitonic baseline) report zeros.
+    pub fn from_ledger(ledger: &Ledger, p: usize) -> RoutedVolume {
+        let mut total = 0u64;
+        let mut max_words = 0u64;
+        for s in &ledger.supersteps {
+            if s.phase == crate::sort::common::PH5 {
+                total += s.total_words;
+                max_words = max_words.max(s.h_words);
+            }
+        }
+        RoutedVolume {
+            total_words: total,
+            max_words,
+            avg_words: total as f64 / p.max(1) as f64,
         }
     }
 }
@@ -98,8 +134,32 @@ mod tests {
 
     #[test]
     fn imbalance_empty_is_zero() {
-        let imb = Imbalance::from_results(&[]);
+        let imb = Imbalance::from_results::<i32>(&[]);
         assert_eq!(imb.max_received, 0);
         assert_eq!(imb.expansion, 0.0);
+    }
+
+    #[test]
+    fn routed_volume_reduces_ph5_supersteps() {
+        use crate::bsp::ledger::SuperstepRecord;
+        use crate::sort::common::{PH2, PH5};
+        let mut ledger = Ledger::default();
+        let step = |phase: &str, h: u64, total: u64| SuperstepRecord {
+            label: "s".into(),
+            phase: phase.into(),
+            max_ops: 0.0,
+            h_words: h,
+            total_words: total,
+            wall_us: 1.0,
+            reporters: 4,
+        };
+        ledger.supersteps.push(step(PH2, 9, 9)); // not routing: ignored
+        ledger.supersteps.push(step(PH5, 300, 1000));
+        ledger.supersteps.push(step(PH5, 200, 600));
+        let vol = RoutedVolume::from_ledger(&ledger, 4);
+        assert_eq!(vol.total_words, 1600);
+        assert_eq!(vol.max_words, 300);
+        assert!((vol.avg_words - 400.0).abs() < 1e-12);
+        assert_eq!(RoutedVolume::from_ledger(&Ledger::default(), 4), RoutedVolume::default());
     }
 }

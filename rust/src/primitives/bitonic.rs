@@ -3,7 +3,7 @@
 //! Used for (a) the *parallel sample sort* of step 5 in both algorithms
 //! (sorting `p` sorted sample runs of length `s`, cost
 //! `2s(lg²p + lg p)/2` computation and `(lg²p + lg p)(L + g·s)/2`
-//! communication — §5.1 Proposition 5.1), and (b) the full [BSI] sort
+//! communication — §5.1 Proposition 5.1), and (b) the full \[BSI\] sort
 //! baseline of §6.2.
 //!
 //! Each processor holds a locally *sorted ascending* run of equal length;
@@ -20,7 +20,7 @@ use crate::seq::ops;
 /// Items that can ride a [`Payload`] of key domain `K` through the
 /// merge-split exchange: tagged sample records (any domain, via the
 /// blanket impl) and the bare keys of each built-in domain.  A custom
-/// [`Key`] type opts its bare keys into the [BSI] baseline with the same
+/// [`Key`] type opts its bare keys into the \[BSI\] baseline with the same
 /// three-line impl the macro below expands to.
 pub trait BitonicItem<K>: Ord + Copy {
     fn pack(items: Vec<Self>) -> Payload<K>;

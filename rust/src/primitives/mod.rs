@@ -1,6 +1,6 @@
 //! BSP primitive operations (paper §4): broadcast (Lemma 4.1), parallel
 //! prefix (Lemma 4.2), and the distributed bitonic sort used for parallel
-//! sample sorting and the [BSI] baseline.
+//! sample sorting and the \[BSI\] baseline.
 
 pub mod bitonic;
 pub mod broadcast;

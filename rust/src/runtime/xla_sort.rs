@@ -1,5 +1,5 @@
 //! The `SeqSorter` backend running the AOT-compiled Pallas bitonic
-//! network through PJRT — the `[.SX]` variants ([DSX]/[RSX]).
+//! network through PJRT — the `[.SX]` variants (\[DSX\]/\[RSX\]).
 //!
 //! This is the three-layer composition point: the Rust BSP coordinator
 //! (L3) calls into the XLA executable that the JAX graph (L2) and Pallas

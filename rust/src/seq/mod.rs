@@ -27,7 +27,7 @@ pub enum SeqSortKind {
 }
 
 impl SeqSortKind {
-    /// One-letter suffix used in variant names ([DSQ], [DSR], [DSX]).
+    /// One-letter suffix used in variant names (\[DSQ\], \[DSR\], \[DSX\]).
     pub fn suffix(&self) -> char {
         match self {
             SeqSortKind::Quick => 'Q',

@@ -20,8 +20,8 @@ pub fn sort_charge(n: usize) -> f64 {
 
 /// Charge for radix-sorting `n` 32-bit keys.
 ///
-/// Calibration: Table 6 reports [DSR] Ph2 (radixsort of 8M/32 = 256K keys
-/// per processor) at 0.560 s vs [DSQ]'s 0.675 s for quicksort, i.e. radix
+/// Calibration: Table 6 reports \[DSR\] Ph2 (radixsort of 8M/32 = 256K keys
+/// per processor) at 0.560 s vs \[DSQ\]'s 0.675 s for quicksort, i.e. radix
 /// is 0.83× the `n lg n = 18n` quicksort charge at that size → ≈ 15n
 /// comparison-equivalents (DESIGN.md §4.2; 4 passes × counting+permute).
 pub const RADIX_CHARGE_PER_KEY: f64 = 15.0;
@@ -32,7 +32,7 @@ pub fn radix_charge(n: usize) -> f64 {
 
 /// Calibrated constant for multi-way merging: the loser tree performs
 /// `lg q` *comparisons* per key, but the T3D-observed Ph6 times (Tables
-/// 4–7: Ph6/Ph2 = 0.58/0.71/0.86 at p = 32/64/128 for [RSR]) imply
+/// 4–7: Ph6/Ph2 = 0.58/0.71/0.86 at p = 32/64/128 for \[RSR\]) imply
 /// ~1.75 comparison-equivalents per comparison once key movement and
 /// tree updates are priced — consistent across both radix and quicksort
 /// variants (DESIGN.md §4.2 calibration note).

@@ -1,5 +1,5 @@
 //! LSD radix sort (the paper's `SORT_SEQ` integer variant, used by the
-//! [DSR]/[RSR] implementations), generic over any [`RadixKey`].
+//! \[DSR\]/\[RSR\] implementations), generic over any [`RadixKey`].
 //!
 //! `K::RADIX_PASSES` 8-bit passes over the key's order-preserving
 //! unsigned image (`radix_image`: the bias map `key ^ i32::MIN` for

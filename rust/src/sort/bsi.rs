@@ -1,4 +1,4 @@
-//! [BSI]: full Batcher bitonic sort of the input (§6.2 item 3).
+//! \[BSI\]: full Batcher bitonic sort of the input (§6.2 item 3).
 //!
 //! Local sort, then `lg p (lg p + 1)/2` merge-split rounds.  The paper
 //! uses it for parallel sample sorting and notes its end-to-end

@@ -19,7 +19,7 @@ pub enum DuplicatePolicy {
 /// How the sample gets sorted in step 5.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
 pub enum SampleSortMethod {
-    /// Parallel Batcher bitonic sort ([BSI]) — the paper's choice.
+    /// Parallel Batcher bitonic sort (\[BSI\]) — the paper's choice.
     #[default]
     Bitonic,
     /// Ship the sample to processor 0 and sort sequentially
@@ -92,7 +92,7 @@ impl SortConfig {
         self
     }
 
-    /// Variant name in the paper's notation: [DSQ], [DSR], [RSQ], [RSR].
+    /// Variant name in the paper's notation: \[DSQ\], \[DSR\], \[RSQ\], \[RSR\].
     pub fn variant_name(&self, deterministic: bool) -> String {
         format!(
             "[{}S{}]",

@@ -4,10 +4,10 @@
 //! * [`det_iterative`] — the multi-round general algorithm of [28] (§5.1),
 //! * [`iran`] — SORT_IRAN_BSP: the improved randomized algorithm (Fig. 3),
 //! * [`ran`] — SORT_RAN_BSP: classic randomized sample-sort (Fig. 2),
-//! * [`bsi`] — full Batcher bitonic sort ([BSI], §6.2 item 3),
+//! * [`bsi`] — full Batcher bitonic sort (\[BSI\], §6.2 item 3),
 //! * [`common`] — the shared sample-sort/partition/route/merge pipeline
 //!   and the §5.1.1 tagged sampling,
-//! * [`config`] — variant knobs ([DSQ]/[DSR]/[RSQ]/[RSR], duplicate
+//! * [`config`] — variant knobs (\[DSQ\]/\[DSR\]/\[RSQ\]/\[RSR\], duplicate
 //!   policy ablation, ω overrides, sample-sort method).
 
 pub mod bsi;
@@ -30,7 +30,7 @@ pub enum Algorithm {
     Iran,
     /// SORT_RAN_BSP (baseline).
     Ran,
-    /// Full bitonic sort [BSI] (baseline).
+    /// Full bitonic sort \[BSI\] (baseline).
     Bsi,
 }
 

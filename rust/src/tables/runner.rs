@@ -1,154 +1,30 @@
-//! Single-run executor shared by every table: build the machine,
-//! generate the benchmark input, run the requested algorithm variant,
-//! verify the global order (the harness never reports an unverified
-//! number), and produce a [`RunReport`].
+//! Single-run executor shared by every table — now a thin façade over
+//! the experiment subsystem's generic runner.
+//!
+//! [`AlgoVariant`], [`RunSpec`] and the verified executor moved to
+//! [`crate::experiment`] (spec/run): the tables keep their paper grids
+//! and drive every cell through `experiment::run`, so there is exactly
+//! one place that executes, verifies and measures a sorting run.  The
+//! re-exports below keep the historical `tables::runner::*` paths
+//! working for the CLI, benches and tests.
 
-use crate::baselines;
-use crate::bsp::engine::BspMachine;
-use crate::bsp::params::{cray_t3d, BspParams};
-use crate::gen::{generate_for_proc, Benchmark};
-use crate::metrics::RunReport;
-use crate::sort::{bsi, det, iran, ran, SortConfig};
-
-/// Every runnable algorithm variant in the study.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
-pub enum AlgoVariant {
-    /// SORT_DET_BSP ([DSQ]/[DSR] by config backend).
-    Det,
-    /// SORT_IRAN_BSP ([RSQ]/[RSR]).
-    Iran,
-    /// SORT_RAN_BSP (classic sample sort, design baseline).
-    Ran,
-    /// Full bitonic [BSI].
-    Bsi,
-    /// Helman–JaJa–Bader deterministic [39].
-    HelmanDet,
-    /// Helman–JaJa–Bader randomized [40].
-    HelmanRan,
-    /// PSRS [61]/[44].
-    Psrs,
-}
-
-impl AlgoVariant {
-    pub fn label(&self, cfg: &SortConfig) -> String {
-        match self {
-            AlgoVariant::Det => cfg.variant_name(true),
-            AlgoVariant::Iran => cfg.variant_name(false),
-            AlgoVariant::Ran => format!("[RAN-S{}]", cfg.seq.suffix()),
-            AlgoVariant::Bsi => "[BSI]".into(),
-            AlgoVariant::HelmanDet => "[39]".into(),
-            AlgoVariant::HelmanRan => "[40]".into(),
-            AlgoVariant::Psrs => "[44]".into(),
-        }
-    }
-}
-
-/// One experiment: algorithm × benchmark × (p, n) × config.
-#[derive(Clone, Copy, Debug)]
-pub struct RunSpec {
-    pub algo: AlgoVariant,
-    pub bench: Benchmark,
-    pub p: usize,
-    pub n_total: usize,
-    pub cfg: SortConfig,
-    pub seed: u64,
-}
-
-impl RunSpec {
-    pub fn new(algo: AlgoVariant, bench: Benchmark, p: usize, n_total: usize) -> RunSpec {
-        RunSpec {
-            algo,
-            bench,
-            p,
-            n_total,
-            cfg: SortConfig::default(),
-            seed: 0x0BEE,
-        }
-    }
-
-    pub fn with_cfg(mut self, cfg: SortConfig) -> RunSpec {
-        self.cfg = cfg;
-        self
-    }
-
-    pub fn params(&self) -> BspParams {
-        cray_t3d(self.p)
-    }
-}
-
-/// Execute a spec and return the verified report.
-///
-/// Panics if the output is not globally sorted or not a permutation of
-/// the input sizes — a harness-integrity guard, not a user error path.
-pub fn execute(spec: &RunSpec) -> RunReport {
-    let params = spec.params();
-    let machine = BspMachine::new(params);
-    let cfg = spec.cfg;
-    let (algo, bench, p, n, seed) = (spec.algo, spec.bench, spec.p, spec.n_total, spec.seed);
-    assert!(n % p == 0, "n must divide evenly (paper setup): n={n} p={p}");
-
-    let run = machine.run(|ctx| {
-        let local = generate_for_proc(bench, ctx.pid(), p, n / p);
-        match algo {
-            AlgoVariant::Det => det::sort_det_bsp(ctx, &params, local, n, &cfg),
-            AlgoVariant::Iran => iran::sort_iran_bsp(ctx, &params, local, n, &cfg, seed),
-            AlgoVariant::Ran => ran::sort_ran_bsp(ctx, &params, local, n, &cfg, seed),
-            AlgoVariant::Bsi => bsi::sort_bsi(ctx, local, &cfg),
-            AlgoVariant::HelmanDet => baselines::sort_helman_det(ctx, &params, local, &cfg),
-            AlgoVariant::HelmanRan => {
-                baselines::sort_helman_ran(ctx, &params, local, n, &cfg, seed)
-            }
-            AlgoVariant::Psrs => baselines::sort_psrs(ctx, &params, local, &cfg),
-        }
-    });
-
-    // Verification: globally sorted, total size preserved.
-    let mut total = 0usize;
-    let mut last = i32::MIN;
-    for r in &run.outputs {
-        for &k in &r.keys {
-            assert!(k >= last, "harness: output not globally sorted");
-            last = k;
-        }
-        total += r.keys.len();
-    }
-    assert_eq!(total, n, "harness: output size mismatch");
-
-    RunReport::new(
-        spec.algo.label(&cfg),
-        spec.bench.tag(),
-        n,
-        &params,
-        &run.ledger,
-        &run.outputs,
-    )
-}
+pub use crate::experiment::run::{avg_predicted_secs, execute, execute_typed, SingleRun};
+pub use crate::experiment::spec::{AlgoVariant, RunSpec};
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::gen::Benchmark;
 
     #[test]
-    fn executes_all_variants_small() {
-        for algo in [
-            AlgoVariant::Det,
-            AlgoVariant::Iran,
-            AlgoVariant::Ran,
-            AlgoVariant::Bsi,
-            AlgoVariant::HelmanDet,
-            AlgoVariant::HelmanRan,
-            AlgoVariant::Psrs,
-        ] {
-            let spec = RunSpec::new(algo, Benchmark::Uniform, 4, 1 << 10);
-            let report = execute(&spec);
-            assert!(report.predicted_secs > 0.0, "{algo:?}");
-            assert!(report.wall_secs > 0.0);
-        }
-    }
-
-    #[test]
-    #[should_panic(expected = "n must divide evenly")]
-    fn uneven_n_rejected() {
-        execute(&RunSpec::new(AlgoVariant::Det, Benchmark::Uniform, 3, 100));
+    fn facade_paths_still_execute() {
+        // The historical entry point tables/benches/CLI rely on.
+        let spec = RunSpec::new(AlgoVariant::Det, Benchmark::Uniform, 4, 1 << 10);
+        let report = execute(&spec);
+        assert!(report.predicted_secs > 0.0);
+        assert_eq!(report.p, 4);
+        // And the rep-averaged reduction the tables drive through.
+        let avg = avg_predicted_secs(&spec, 2, 7);
+        assert!(avg > 0.0);
     }
 }

@@ -6,7 +6,7 @@ use crate::gen::Benchmark;
 use crate::seq::SeqSortKind;
 use crate::sort::SortConfig;
 
-use super::runner::{execute, AlgoVariant, RunSpec};
+use super::runner::{self, AlgoVariant, RunSpec};
 use super::{cell_secs, fmt_size, TableOpts, TableOutput, MEG};
 
 /// Paper column order for these tables.
@@ -72,16 +72,11 @@ fn variant_letter(algo: AlgoVariant) -> char {
     }
 }
 
-/// Average predicted seconds over `opts.reps` runs (distinct seeds).
+/// Average predicted seconds over `opts.reps` runs (distinct seeds) —
+/// one call into the experiment runner's rep-averaged reduction, the
+/// same code path `bsp-sort experiment` measures through.
 pub fn avg_predicted(spec: &RunSpec, opts: &TableOpts) -> f64 {
-    let reps = opts.reps.max(1);
-    let mut total = 0.0;
-    for r in 0..reps {
-        let mut s = *spec;
-        s.seed = opts.seed.wrapping_add(r as u64 * 0x9E37);
-        total += execute(&s).predicted_secs;
-    }
-    total / reps as f64
+    runner::avg_predicted_secs(spec, opts.reps, opts.seed)
 }
 
 #[cfg(test)]

@@ -1,10 +1,10 @@
 //! Tables 3, 9, 10, 11: scalability and cross-implementation comparisons.
 //!
-//! * Table 3 — [RSR]/[RSQ]/[DSR]/[DSQ] on [U] and [WR], 8M keys,
+//! * Table 3 — \[RSR\]/\[RSQ\]/\[DSR\]/\[DSQ\] on \[U\] and \[WR\], 8M keys,
 //!   p = 8..128, with parallel efficiency at p = 128.
 //! * Table 9 — our four variants vs [39], [40], [41] at 8M.
-//! * Table 10 — scalability of all four variants on [U] for 1M/4M/8M.
-//! * Table 11 — [DSQ] vs the PSRS implementation of [44] at 1M [U].
+//! * Table 10 — scalability of all four variants on \[U\] for 1M/4M/8M.
+//! * Table 11 — \[DSQ\] vs the PSRS implementation of [44] at 1M \[U\].
 
 use crate::gen::Benchmark;
 use crate::seq::SeqSortKind;

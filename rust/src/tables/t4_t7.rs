@@ -1,14 +1,14 @@
-//! Tables 4–7: per-phase scalability of [RSR]/[RSQ]/[DSR]/[DSQ] on input
-//! [U], sizes 8M and 32M, p ∈ {32, 64, 128}: absolute seconds per phase
+//! Tables 4–7: per-phase scalability of \[RSR\]/\[RSQ\]/\[DSR\]/\[DSQ\] on input
+//! \[U\], sizes 8M and 32M, p ∈ {32, 64, 128}: absolute seconds per phase
 //! and percentage of total, phases Ph1–Ph7.
 
-use crate::bsp::engine::BspMachine;
 use crate::bsp::params::cray_t3d;
-use crate::gen::{generate_for_proc, Benchmark};
+use crate::gen::Benchmark;
 use crate::seq::SeqSortKind;
 use crate::sort::common::{PH1, PH2, PH3, PH4, PH5, PH6, PH7};
-use crate::sort::{det, iran, SortConfig};
+use crate::sort::SortConfig;
 
+use super::runner::{self, AlgoVariant, RunSpec};
 use super::{fmt_size, TableOpts, TableOutput, MEG};
 
 /// Which of the four phase tables to produce.
@@ -50,22 +50,17 @@ impl PhaseTable {
 
 pub const PHASES: [&str; 7] = [PH1, PH2, PH3, PH4, PH5, PH6, PH7];
 
-/// Per-phase predicted seconds for one (variant, n, p) cell.
+/// Per-phase predicted seconds for one (variant, n, p) cell — a single
+/// verified run through the experiment runner, its ledger reduced by
+/// phase.
 pub fn phase_breakdown(which: PhaseTable, n: usize, p: usize, opts: &TableOpts) -> Vec<f64> {
     let params = cray_t3d(p);
-    let machine = BspMachine::new(params);
     let cfg = SortConfig::default().with_seq(which.seq());
-    let seed = opts.seed;
-    let is_det = which.is_det();
-    let run = machine.run(|ctx| {
-        let local = generate_for_proc(Benchmark::Uniform, ctx.pid(), p, n / p);
-        if is_det {
-            det::sort_det_bsp(ctx, &params, local, n, &cfg)
-        } else {
-            iran::sort_iran_bsp(ctx, &params, local, n, &cfg, seed)
-        }
-    });
-    let by_phase = run.ledger.phase_predicted_secs(&params);
+    let algo = if which.is_det() { AlgoVariant::Det } else { AlgoVariant::Iran };
+    let mut spec = RunSpec::new(algo, Benchmark::Uniform, p, n).with_cfg(cfg);
+    spec.seed = opts.seed;
+    let single = runner::execute_typed::<i32>(&spec);
+    let by_phase = single.ledger.phase_predicted_secs(&params);
     PHASES
         .iter()
         .map(|ph| by_phase.get(*ph).copied().unwrap_or(0.0))

@@ -1,14 +1,14 @@
-//! Table 8: per-phase scalability comparison of [DSR] (on [U]) vs the
-//! two-round deterministic algorithm of [39] (on [WR]): SeqSort, the
+//! Table 8: per-phase scalability comparison of \[DSR\] (on \[U\]) vs the
+//! two-round deterministic algorithm of [39] (on \[WR\]): SeqSort, the
 //! extra routing round "PhR", Routing, Merging.
 
-use crate::bsp::engine::BspMachine;
 use crate::bsp::params::cray_t3d;
-use crate::gen::{generate_for_proc, Benchmark};
+use crate::gen::Benchmark;
 use crate::seq::SeqSortKind;
 use crate::sort::common::{PH2, PH5, PH6};
-use crate::sort::{det, SortConfig};
+use crate::sort::SortConfig;
 
+use super::runner::{self, AlgoVariant, RunSpec};
 use super::{TableOpts, TableOutput, MEG};
 
 const PROCS: [usize; 3] = [32, 64, 128];
@@ -19,28 +19,29 @@ const PHASE_ROWS: [(&str, &str); 4] = [
     ("Ph 6", PH6),
 ];
 
-fn breakdown_dsr(n: usize, p: usize, opts: &TableOpts) -> std::collections::BTreeMap<String, f64> {
+/// One verified run through the experiment runner, reduced to its
+/// per-phase predicted seconds.
+fn breakdown(
+    algo: AlgoVariant,
+    bench: Benchmark,
+    n: usize,
+    p: usize,
+    opts: &TableOpts,
+) -> std::collections::BTreeMap<String, f64> {
     let params = cray_t3d(p);
-    let machine = BspMachine::new(params);
     let cfg = SortConfig::default().with_seq(SeqSortKind::Radix);
-    let _ = opts;
-    let run = machine.run(|ctx| {
-        let local = generate_for_proc(Benchmark::Uniform, ctx.pid(), p, n / p);
-        det::sort_det_bsp(ctx, &params, local, n, &cfg)
-    });
-    run.ledger.phase_predicted_secs(&params)
+    let mut spec = RunSpec::new(algo, bench, p, n).with_cfg(cfg);
+    spec.seed = opts.seed;
+    let single = runner::execute_typed::<i32>(&spec);
+    single.ledger.phase_predicted_secs(&params)
+}
+
+fn breakdown_dsr(n: usize, p: usize, opts: &TableOpts) -> std::collections::BTreeMap<String, f64> {
+    breakdown(AlgoVariant::Det, Benchmark::Uniform, n, p, opts)
 }
 
 fn breakdown_helman(n: usize, p: usize, opts: &TableOpts) -> std::collections::BTreeMap<String, f64> {
-    let params = cray_t3d(p);
-    let machine = BspMachine::new(params);
-    let cfg = SortConfig::default().with_seq(SeqSortKind::Radix);
-    let _ = opts;
-    let run = machine.run(|ctx| {
-        let local = generate_for_proc(Benchmark::WorstRegular, ctx.pid(), p, n / p);
-        crate::baselines::sort_helman_det(ctx, &params, local, &cfg)
-    });
-    run.ledger.phase_predicted_secs(&params)
+    breakdown(AlgoVariant::HelmanDet, Benchmark::WorstRegular, n, p, opts)
 }
 
 pub fn table8(opts: &TableOpts) -> TableOutput {

@@ -1,18 +1,25 @@
-//! In-text validations of §6.4 (DESIGN.md §5 "§6 text" rows):
+//! In-text validations of §6.4 (DESIGN.md §5 "§6 text" rows) and the
+//! experiment-report schema gate:
 //!
 //! * `validate_g` — back out the effective `g` from the Ph5 routing cost
 //!   (the paper: 0.23–0.32 µs/int across p = 32..128, consistent with
 //!   the measured 0.26/0.28/0.34);
 //! * `predict` — theoretical efficiency from Props 5.1/5.3 next to the
 //!   harness-predicted efficiency (the paper's "at least 66 %" check);
-//! * `ablate_duplicates` — the 3–6 % duplicate-handling overhead.
+//! * `ablate_duplicates` — the 3–6 % duplicate-handling overhead;
+//! * [`validate_report`] — structural validation of a parsed
+//!   `BENCH_<tag>.json` against [`crate::experiment::report::SCHEMA`]
+//!   (the one source of truth for the report/table shape; the CLI
+//!   re-validates every file it writes, CI asserts it on the smoke run).
 
 use crate::bsp::engine::BspMachine;
 use crate::bsp::params::cray_t3d;
+use crate::experiment::report::SCHEMA;
 use crate::gen::{generate_for_proc, Benchmark};
 use crate::sort::common::PH5;
 use crate::sort::{det, iran, DuplicatePolicy, SortConfig};
 use crate::theory;
+use crate::util::json::Json;
 
 use super::{TableOpts, TableOutput, MEG};
 
@@ -125,8 +132,8 @@ pub fn predict(opts: &TableOpts) -> TableOutput {
     out
 }
 
-/// Duplicate-handling ablation: Tagged vs Off on [U] (the paper's 3–6 %)
-/// — and the balance collapse Off causes on [DD].
+/// Duplicate-handling ablation: Tagged vs Off on \[U\] (the paper's 3–6 %)
+/// — and the balance collapse Off causes on \[DD\].
 pub fn ablate_duplicates(opts: &TableOpts) -> TableOutput {
     let mut out = TableOutput {
         title: "Ablation: duplicate handling Tagged vs Off (predicted seconds; max received keys)".into(),
@@ -176,6 +183,165 @@ pub fn ablate_duplicates(opts: &TableOpts) -> TableOutput {
     out
 }
 
+// ---------------------------------------------------------------------
+// Experiment-report schema validation.
+// ---------------------------------------------------------------------
+
+fn field<'a>(ctx: &str, doc: &'a Json, key: &str) -> Result<&'a Json, String> {
+    doc.get(key).ok_or_else(|| format!("{ctx}: missing field '{key}'"))
+}
+
+fn req_str(ctx: &str, doc: &Json, key: &str) -> Result<(), String> {
+    field(ctx, doc, key)?
+        .as_str()
+        .map(|_| ())
+        .ok_or_else(|| format!("{ctx}: '{key}' must be a string"))
+}
+
+fn req_num(ctx: &str, doc: &Json, key: &str) -> Result<f64, String> {
+    field(ctx, doc, key)?
+        .as_f64()
+        .ok_or_else(|| format!("{ctx}: '{key}' must be a finite number"))
+}
+
+fn req_nonneg(ctx: &str, doc: &Json, key: &str) -> Result<f64, String> {
+    let v = req_num(ctx, doc, key)?;
+    if v >= 0.0 {
+        Ok(v)
+    } else {
+        Err(format!("{ctx}: '{key}' must be non-negative (got {v})"))
+    }
+}
+
+fn req_positive(ctx: &str, doc: &Json, key: &str) -> Result<f64, String> {
+    let v = req_num(ctx, doc, key)?;
+    if v > 0.0 {
+        Ok(v)
+    } else {
+        Err(format!("{ctx}: '{key}' must be positive (got {v})"))
+    }
+}
+
+fn req_arr<'a>(ctx: &str, doc: &'a Json, key: &str) -> Result<&'a [Json], String> {
+    field(ctx, doc, key)?
+        .as_arr()
+        .ok_or_else(|| format!("{ctx}: '{key}' must be an array"))
+}
+
+/// Validate a parsed experiment report against the
+/// `bsp-sort/experiment-report/v1` schema: schema tag, non-empty
+/// calibrations with positive (g, L, rate), non-empty runs each carrying
+/// wall-clock statistics, a positive end-to-end measured-vs-predicted
+/// ratio, per-phase rows (ratio positive or `null` for unpriced phases),
+/// balance metrics and a superstep trace.  Returns the first violation.
+pub fn validate_report(doc: &Json) -> Result<(), String> {
+    let schema = field("report", doc, "schema")?
+        .as_str()
+        .ok_or("report: 'schema' must be a string")?;
+    if schema != SCHEMA {
+        return Err(format!("report: schema mismatch (got '{schema}', want '{SCHEMA}')"));
+    }
+    req_str("report", doc, "tag")?;
+    req_nonneg("report", doc, "created_unix_secs")?;
+    req_str("report", doc, "os")?;
+    req_str("report", doc, "arch")?;
+
+    let calibs = req_arr("report", doc, "calibrations")?;
+    if calibs.is_empty() {
+        return Err("report: 'calibrations' must be non-empty".into());
+    }
+    for (i, c) in calibs.iter().enumerate() {
+        let ctx = format!("calibrations[{i}]");
+        req_positive(&ctx, c, "p")?;
+        req_positive(&ctx, c, "l_us")?;
+        req_positive(&ctx, c, "g_us_per_word")?;
+        req_positive(&ctx, c, "comps_per_us")?;
+        req_num(&ctx, c, "fit_r2")?;
+        let pts = req_arr(&ctx, c, "a2a_points")?;
+        if pts.is_empty() {
+            return Err(format!("{ctx}: 'a2a_points' must be non-empty"));
+        }
+    }
+
+    let runs = req_arr("report", doc, "runs")?;
+    if runs.is_empty() {
+        return Err("report: 'runs' must be non-empty".into());
+    }
+    for (i, r) in runs.iter().enumerate() {
+        let ctx = format!("runs[{i}]");
+        for key in ["algo", "algo_label", "bench", "domain"] {
+            req_str(&ctx, r, key)?;
+        }
+        req_positive(&ctx, r, "n")?;
+        req_positive(&ctx, r, "p")?;
+        req_nonneg(&ctx, r, "warmup")?;
+        req_positive(&ctx, r, "reps")?;
+
+        let wall = field(&ctx, r, "wall_us")?;
+        let wctx = format!("{ctx}.wall_us");
+        req_positive(&wctx, wall, "n")?;
+        let min = req_positive(&wctx, wall, "min")?;
+        let mean = req_positive(&wctx, wall, "mean")?;
+        let max = req_positive(&wctx, wall, "max")?;
+        req_nonneg(&wctx, wall, "stddev")?;
+        if !(min <= mean && mean <= max) {
+            return Err(format!("{wctx}: min ≤ mean ≤ max violated ({min}, {mean}, {max})"));
+        }
+
+        req_positive(&ctx, r, "predicted_us")?;
+        req_positive(&ctx, r, "ratio")?;
+
+        let phases = req_arr(&ctx, r, "phases")?;
+        if phases.is_empty() {
+            return Err(format!("{ctx}: 'phases' must be non-empty"));
+        }
+        for (j, ph) in phases.iter().enumerate() {
+            let pctx = format!("{ctx}.phases[{j}]");
+            req_str(&pctx, ph, "name")?;
+            req_nonneg(&pctx, ph, "predicted_us")?;
+            req_nonneg(&pctx, ph, "wall_us")?;
+            let ratio = field(&pctx, ph, "ratio")?;
+            if !ratio.is_null() {
+                let v = ratio
+                    .as_f64()
+                    .ok_or_else(|| format!("{pctx}: 'ratio' must be a number or null"))?;
+                if v <= 0.0 {
+                    return Err(format!("{pctx}: 'ratio' must be positive (got {v})"));
+                }
+            }
+        }
+
+        let bal = field(&ctx, r, "balance")?;
+        let bctx = format!("{ctx}.balance");
+        let recv_max = req_nonneg(&bctx, bal, "recv_max")?;
+        req_nonneg(&bctx, bal, "recv_min")?;
+        let recv_mean = req_nonneg(&bctx, bal, "recv_mean")?;
+        req_num(&bctx, bal, "expansion")?;
+        req_nonneg(&bctx, bal, "routed_words_total")?;
+        req_nonneg(&bctx, bal, "routed_words_max")?;
+        req_nonneg(&bctx, bal, "routed_words_avg")?;
+        if recv_max < recv_mean.floor() {
+            return Err(format!("{bctx}: recv_max {recv_max} below recv_mean {recv_mean}"));
+        }
+
+        let steps = req_arr(&ctx, r, "supersteps")?;
+        if steps.is_empty() {
+            return Err(format!("{ctx}: 'supersteps' must be non-empty"));
+        }
+        for (j, s) in steps.iter().enumerate() {
+            let sctx = format!("{ctx}.supersteps[{j}]");
+            req_str(&sctx, s, "label")?;
+            req_str(&sctx, s, "phase")?;
+            req_nonneg(&sctx, s, "max_ops")?;
+            req_nonneg(&sctx, s, "h_words")?;
+            req_nonneg(&sctx, s, "total_words")?;
+            req_nonneg(&sctx, s, "wall_us")?;
+            req_positive(&sctx, s, "predicted_us")?;
+        }
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -203,5 +369,47 @@ mod tests {
         let tagged: usize = row[5].parse().unwrap();
         let off: usize = row[6].parse().unwrap();
         assert!(off > 2 * tagged, "tagged={tagged} off={off}");
+    }
+
+    #[test]
+    fn tiny_sweep_roundtrips_serialize_parse_validate() {
+        // The regression the schema gate exists for: a real (tiny)
+        // sweep at n = 4096, p = 4 must survive serialize → parse →
+        // validate without the validator and the writer drifting apart.
+        use crate::experiment::{self, AlgoVariant, KeyDomain, ProbePlan, SweepSpec};
+        let mut spec = SweepSpec::quick();
+        spec.algos = vec![AlgoVariant::Det, AlgoVariant::Ran];
+        spec.benches = vec![Benchmark::Uniform];
+        spec.domains = vec![KeyDomain::I32, KeyDomain::U64];
+        spec.ns = vec![4096];
+        spec.ps = vec![4];
+        spec.warmup = 0;
+        spec.reps = 2;
+        spec.tag = "roundtrip".into();
+        spec.probes = ProbePlan {
+            barrier_reps: 4,
+            a2a_h_words: vec![256, 1024],
+            a2a_rounds: 2,
+            comp_n: 1 << 10,
+        };
+        let report = experiment::run_study(&spec);
+        let text = report.to_json().render();
+        let parsed = Json::parse(&text).expect("report must parse back");
+        validate_report(&parsed).expect("report must validate against the schema");
+        let runs = parsed.get("runs").unwrap().as_arr().unwrap();
+        assert_eq!(runs.len(), 4, "det+ran × i32+u64");
+        assert_eq!(runs[0].get("n").unwrap().as_u64(), Some(4096));
+    }
+
+    #[test]
+    fn validate_report_rejects_drift() {
+        // Wrong schema tag.
+        let doc = Json::parse(r#"{"schema": "bsp-sort/experiment-report/v0"}"#).unwrap();
+        let err = validate_report(&doc).unwrap_err();
+        assert!(err.contains("schema mismatch"), "{err}");
+        // Right tag but nothing else.
+        let doc = Json::parse(&format!(r#"{{"schema": "{}"}}"#, SCHEMA)).unwrap();
+        let err = validate_report(&doc).unwrap_err();
+        assert!(err.contains("missing field 'tag'"), "{err}");
     }
 }

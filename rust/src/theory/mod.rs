@@ -133,7 +133,7 @@ mod tests {
     use crate::bsp::params::cray_t3d;
 
     /// §6.4: for n = 8M, p = 128 the theory predicts ≥ 66 % efficiency
-    /// for [DSQ] (low-order terms ignored).  Our closed form keeps some
+    /// for \[DSQ\] (low-order terms ignored).  Our closed form keeps some
     /// low-order terms, so allow the band 55–80 %.
     #[test]
     fn det_efficiency_near_paper_estimate() {

@@ -115,6 +115,38 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Aggregate statistics over raw `f64` samples — the experiment runner's
+/// per-configuration wall-clock summary (min/mean/stddev/max, paper
+/// style: the tables report means, the text quotes the spread).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct SampleStats {
+    /// Number of samples aggregated.
+    pub n: usize,
+    /// Smallest sample.
+    pub min: f64,
+    /// Largest sample.
+    pub max: f64,
+    /// Arithmetic mean.
+    pub mean: f64,
+    /// Population standard deviation (0 for a single sample).
+    pub stddev: f64,
+}
+
+impl SampleStats {
+    /// Reduce raw samples; an empty slice yields the zero stats.
+    pub fn from_samples(samples: &[f64]) -> SampleStats {
+        if samples.is_empty() {
+            return SampleStats::default();
+        }
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n as f64;
+        let min = samples.iter().copied().fold(f64::INFINITY, f64::min);
+        let max = samples.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+        SampleStats { n, min, max, mean, stddev: var.sqrt() }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -130,6 +162,18 @@ mod tests {
         let stats = bench_cfg("selftest", &cfg, &mut f).unwrap();
         assert_eq!(stats.iters, 4);
         assert!(stats.min <= stats.mean && stats.mean <= stats.max);
+    }
+
+    #[test]
+    fn sample_stats_reduce() {
+        let s = SampleStats::from_samples(&[2.0, 4.0, 6.0, 8.0]);
+        assert_eq!(s.n, 4);
+        assert_eq!(s.min, 2.0);
+        assert_eq!(s.max, 8.0);
+        assert!((s.mean - 5.0).abs() < 1e-12);
+        assert!((s.stddev - 5.0f64.sqrt()).abs() < 1e-12);
+        assert_eq!(SampleStats::from_samples(&[]), SampleStats::default());
+        assert_eq!(SampleStats::from_samples(&[3.0]).stddev, 0.0);
     }
 
     #[test]

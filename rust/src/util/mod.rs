@@ -6,6 +6,7 @@
 pub mod bench;
 pub mod check;
 pub mod cli;
+pub mod json;
 pub mod rng;
 
 /// `ceil(log2(n))` for n >= 1 (0 for n <= 1); the paper charges
