@@ -1,16 +1,52 @@
 #!/usr/bin/env bash
-# Tier-1 gate plus hygiene checks.  Usage: ./ci.sh [--check-xla]
+# Tier-1 gate plus hygiene checks.  Usage: ./ci.sh [--check-xla|--check-links]
 #
 # This is what .github/workflows/ci.yml runs; keep it the single source
 # of truth for "does the repo pass".
 #
-#   ./ci.sh              build + test + fmt + clippy + bench smoke-run
-#   ./ci.sh --check-xla  verify the `xla` feature wiring (check-only):
-#                        passes when the vendored crate is present, or
-#                        when the only failure is the expected missing
-#                        `xla` crate (the default offline setup).
+#   ./ci.sh               build + test + fmt + clippy + bench smoke-run
+#   ./ci.sh --check-xla   verify the `xla` feature wiring (check-only):
+#                         passes when the vendored crate is present, or
+#                         when the only failure is the expected missing
+#                         `xla` crate (the default offline setup).
+#   ./ci.sh --check-links intra-repo markdown link check only (also part
+#                         of the default run)
 set -euo pipefail
 cd "$(dirname "$0")"
+
+# Check every [text](target) link in README.md and docs/*.md whose
+# target is a repo-relative path (http/https/mailto and pure #anchors
+# are skipped; a #fragment after a path is ignored).  Keeps the docs
+# from drifting as modules move.
+check_links() {
+    echo "== docs: intra-repo markdown link check (README.md docs/*.md) =="
+    local fail=0 f target resolved
+    for f in README.md docs/*.md; do
+        while IFS= read -r target; do
+            [[ -z "$target" ]] && continue
+            case "$target" in
+                http://*|https://*|mailto:*|'#'*) continue ;;
+            esac
+            target="${target%%#*}"
+            [[ -z "$target" ]] && continue
+            resolved="$(dirname "$f")/$target"
+            if [[ ! -e "$resolved" ]]; then
+                echo "broken link in $f: $target (resolved $resolved)" >&2
+                fail=1
+            fi
+        done < <(grep -oE '\]\([^)]+\)' "$f" | sed -E 's/^\]\(//; s/\)$//')
+    done
+    if [[ "$fail" -ne 0 ]]; then
+        echo "markdown link check failed" >&2
+        exit 1
+    fi
+    echo "markdown links OK"
+}
+
+if [[ "${1:-}" == "--check-links" ]]; then
+    check_links
+    exit 0
+fi
 
 if [[ "${1:-}" == "--check-xla" ]]; then
     echo "== check-only: cargo check --features xla =="
@@ -62,6 +98,8 @@ fi
 echo "== hygiene: cargo doc --no-deps (RUSTDOCFLAGS=-D warnings) =="
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 
+check_links
+
 echo "== bench smoke-run: hot_paths --quick-smoke =="
 cargo bench --bench hot_paths -- --quick-smoke
 
@@ -73,7 +111,7 @@ smokedir=$(mktemp -d)
 cargo run --release --quiet -- experiment --quick --tag smoke --out "$smokedir"
 test -s "$smokedir/BENCH_smoke.json" || {
     echo "BENCH_smoke.json missing or empty" >&2; exit 1; }
-grep -q '"schema": "bsp-sort/experiment-report/v1"' "$smokedir/BENCH_smoke.json" || {
+grep -q '"schema": "bsp-sort/experiment-report/v2"' "$smokedir/BENCH_smoke.json" || {
     echo "schema tag missing from BENCH_smoke.json" >&2; exit 1; }
 test -s "$smokedir/BENCH_smoke.md" || {
     echo "BENCH_smoke.md missing or empty" >&2; exit 1; }

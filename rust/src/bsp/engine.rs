@@ -27,6 +27,12 @@
 //! priced `max{L, x + g·h}` under the configured [`BspParams`], which is
 //! how the paper's Cray T3D numbers are reproduced on different hardware —
 //! DESIGN.md §2).
+//!
+//! Programs are written against the [`BspScope`] trait, implemented by
+//! [`BspCtx`] (the whole machine) and by `bsp::group::GroupCtx` (one
+//! processor group of a partitioned machine): the same superstep
+//! machinery serves whole-machine and group-local synchronization, the
+//! latter over per-group barriers and group-scoped slot-matrix views.
 
 use std::cell::UnsafeCell;
 use std::sync::{Barrier, Mutex};
@@ -89,6 +95,31 @@ impl<K: Key> SlotMatrix<K> {
             }
         }
     }
+
+    /// As [`SlotMatrix::drain_row`] but restricted to the slots written
+    /// by `members` — the group-scoped view of the same p×p matrix used
+    /// by group-local supersteps.  `members` must be sorted ascending, so
+    /// delivery stays in (global) sender order.
+    ///
+    /// SAFETY: the caller must be the engine thread `dst`, between the
+    /// two barriers of a *group* sync whose group is exactly `members`;
+    /// during a group superstep only group members write slots addressed
+    /// to `dst` (the group communication discipline, `bsp::group`), and
+    /// non-member slots are untouched here, so the single-writer
+    /// partition holds slot by slot.
+    unsafe fn drain_row_subset(
+        &self,
+        dst: usize,
+        members: &[usize],
+        inbox: &mut Vec<(usize, Payload<K>)>,
+    ) {
+        for &src in members {
+            let slot = &mut *self.slots[dst * self.p + src].get();
+            for payload in slot.drain(..) {
+                inbox.push((src, payload));
+            }
+        }
+    }
 }
 
 /// Phase labels interned to dense ids, registered once per run, so the
@@ -145,13 +176,49 @@ struct SuperstepBuild {
     total_words: u64,
     wall_us: f64,
     reporters: usize,
+    /// Expected reporters: the whole machine for global supersteps, the
+    /// group size for group-scoped ones.
+    procs: usize,
 }
 
 #[derive(Default)]
 struct LedgerBuilder {
     supersteps: Vec<SuperstepBuild>,
+    /// Group-scoped superstep accumulators, keyed by
+    /// `(communicator id, group-superstep index, group leader pid)`.
+    /// Within one communicator, `(index, leader)` is collision-free
+    /// (disjoint groups have distinct leaders and members of a group
+    /// share the index); the communicator id keeps *sequential*
+    /// communicators — whose per-thread indices may have diverged —
+    /// from merging unrelated groups' records.  Records of one
+    /// `(communicator, index)` pair ran concurrently on disjoint
+    /// groups (one "round").
+    group_steps: std::collections::BTreeMap<(usize, usize, usize), SuperstepBuild>,
     /// Phase accumulators indexed by interned phase id.
     phases: Vec<PhaseRecord>,
+}
+
+/// A group-scoped view for one `sync`: which processors participate,
+/// which barrier gates them, and who the group leader (smallest member)
+/// is.  Constructed by `bsp::group::GroupCtx`; the engine itself stays
+/// agnostic of how the machine was partitioned.
+pub(super) struct GroupScope<'a> {
+    /// Process-unique id of the communicator this group belongs to.
+    pub(super) comm_id: usize,
+    /// Global pids of the group, sorted ascending.
+    pub(super) members: &'a [usize],
+    /// `members[0]` — the ledger key for this group's records.
+    pub(super) leader: usize,
+    /// Barrier sized to the group, owned by the `Communicator`.
+    pub(super) barrier: &'a Barrier,
+    /// The group's superstep counter, owned by the `Communicator` and
+    /// advanced once per group sync by the barrier leader.  Every
+    /// member reads the same value for the same physical superstep (the
+    /// group barrier orders the leader's post-sync increment before any
+    /// member's next-sync read), so records key correctly even when
+    /// sibling groups run different superstep counts and threads are
+    /// later regrouped by another communicator.
+    pub(super) step: &'a std::sync::atomic::AtomicUsize,
 }
 
 /// Per-processor handle passed to the SPMD closure.
@@ -231,17 +298,63 @@ impl<'w, K: Key> BspCtx<'w, K> {
     /// is detected and *all* processors panic together after barrier 2
     /// (a lone panic would strand the rest on the barrier).
     pub fn sync(&mut self, label: &str) {
+        self.sync_scoped(label, None);
+    }
+
+    /// The superstep boundary shared by whole-machine and group-scoped
+    /// syncs: [`BspCtx::sync`] passes `None` (all `p` processors, the
+    /// world barrier, the full slot row); `bsp::group::GroupCtx` passes a
+    /// [`GroupScope`] (group members only, the group's own barrier, the
+    /// member-restricted slot view) so a sub-machine synchronizes without
+    /// involving — or waiting on — its sibling groups.
+    pub(super) fn sync_scoped(&mut self, label: &str, scope: Option<&GroupScope<'_>>) {
         let wall_us = self.sync_mark.elapsed().as_secs_f64() * 1e6;
 
-        // Barrier 1: all sends for this superstep are staged.
-        self.world.barrier.wait();
+        // Fail fast on an already-published SPMD violation *before*
+        // blocking on a barrier: with group scoping, the offending
+        // group panics among itself after its barrier 2, and a sibling
+        // heading into a whole-machine sync would otherwise wait
+        // forever on the dead threads (best-effort — a violation
+        // published after this check is caught at the post-barrier
+        // check of a later sync).
+        if cfg!(debug_assertions) {
+            let poison = self.world.spmd_violation.lock().unwrap().clone();
+            if let Some(msg) = poison {
+                panic!("SPMD sync label mismatch: {msg}");
+            }
+        }
 
-        // Drain this processor's slot row; the dst-major layout delivers
-        // in sender order by construction — no lock, no sort.
+        // Barrier 1: all sends for this superstep are staged.  A group
+        // sync waits only on its own members.
+        let barrier = match scope {
+            Some(s) => s.barrier,
+            None => &self.world.barrier,
+        };
+        barrier.wait();
+
+        // The group's superstep index, read after barrier 1: the leader
+        // of the *previous* group sync incremented it before entering
+        // this sync's barrier, so every member observes the same value
+        // (the barrier supplies the happens-before edge; `Relaxed`
+        // suffices).
+        let group_step = scope
+            .map(|s| s.step.load(std::sync::atomic::Ordering::Relaxed))
+            .unwrap_or(0);
+
+        // Drain this processor's slot row (or its group-scoped slice);
+        // the dst-major layout delivers in sender order by construction —
+        // no lock, no sort.
         self.inbox.clear();
-        // SAFETY: between the two barriers row `pid` is touched only by
-        // this thread; writers stage again only after barrier 2.
-        unsafe { self.world.slots.drain_row(self.pid, &mut self.inbox) };
+        // SAFETY: between the two barriers the drained slots are touched
+        // only by this thread; their writers (all of them group members
+        // under the group communication discipline) stage again only
+        // after barrier 2.
+        match scope {
+            Some(s) => unsafe {
+                self.world.slots.drain_row_subset(self.pid, s.members, &mut self.inbox)
+            },
+            None => unsafe { self.world.slots.drain_row(self.pid, &mut self.inbox) },
+        }
         let recv_words: u64 = self.inbox.iter().map(|(_, p)| p.words()).sum();
 
         // Report into the shared ledger.  Once per superstep per
@@ -249,23 +362,36 @@ impl<'w, K: Key> BspCtx<'w, K> {
         {
             let mut guard = self.world.ledger.lock().unwrap();
             let builder = &mut *guard;
-            if builder.supersteps.len() <= self.superstep {
-                builder.supersteps.resize_with(self.superstep + 1, Default::default);
-            }
             if builder.phases.len() <= self.phase_id {
                 builder.phases.resize_with(self.phase_id + 1, Default::default);
             }
-            let rec = &mut builder.supersteps[self.superstep];
+            let (rec, procs, step) = match scope {
+                Some(s) => (
+                    builder
+                        .group_steps
+                        .entry((s.comm_id, group_step, s.leader))
+                        .or_default(),
+                    s.members.len(),
+                    group_step,
+                ),
+                None => {
+                    if builder.supersteps.len() <= self.superstep {
+                        builder.supersteps.resize_with(self.superstep + 1, Default::default);
+                    }
+                    (&mut builder.supersteps[self.superstep], self.world.p, self.superstep)
+                }
+            };
             if rec.reporters == 0 {
                 rec.label = label.to_string();
                 rec.phase_id = self.phase_id;
+                rec.procs = procs;
             } else if cfg!(debug_assertions) && rec.label != label {
                 let mut poison = self.world.spmd_violation.lock().unwrap();
                 if poison.is_none() {
                     *poison = Some(format!(
                         "superstep {}: processor {} reported label {:?}, \
                          another processor reported {:?}",
-                        self.superstep, self.pid, label, rec.label
+                        step, self.pid, label, rec.label
                     ));
                 }
             }
@@ -283,8 +409,17 @@ impl<'w, K: Key> BspCtx<'w, K> {
         }
 
         // Barrier 2: nobody stages next-superstep messages into a slot
-        // that has not been drained yet.
-        self.world.barrier.wait();
+        // that has not been drained yet.  Exactly one member of a group
+        // sync is the barrier leader; it advances the group's superstep
+        // counter, and the advance happens-before every member's read at
+        // the next sync (they must pass that sync's barrier 1 first,
+        // which the leader also enters only after the increment).
+        let wait = barrier.wait();
+        if let Some(s) = scope {
+            if wait.is_leader() {
+                s.step.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            }
+        }
 
         if cfg!(debug_assertions) {
             let poison = self.world.spmd_violation.lock().unwrap().clone();
@@ -295,7 +430,9 @@ impl<'w, K: Key> BspCtx<'w, K> {
 
         self.ops = 0.0;
         self.sent_words = 0;
-        self.superstep += 1;
+        if scope.is_none() {
+            self.superstep += 1;
+        }
         self.sync_mark = Instant::now();
     }
 
@@ -329,6 +466,78 @@ impl<'w, K: Key> BspCtx<'w, K> {
             rec.max_ops = rec.max_ops.max(ops);
             rec.wall_us = rec.wall_us.max(wall);
         }
+    }
+}
+
+/// A (possibly group-scoped) view of the BSP machine against which SPMD
+/// programs run.
+///
+/// The sorting algorithms and collective primitives are generic over
+/// this trait, so the *same* program text executes against the whole
+/// machine ([`BspCtx`]) or against one processor group of a partitioned
+/// machine (`bsp::group::GroupCtx`) — the mechanism behind the two-level
+/// sorts (`sort::multilevel`): level 2 reuses the one-level algorithms
+/// verbatim, scoped to a sub-machine.
+///
+/// Within a scope, `pid`/`nprocs`/`send` destinations are *scope-local*
+/// ranks in `[0, nprocs)`; `sync` synchronizes exactly the scope's
+/// participants and delivers only messages staged within the scope.
+pub trait BspScope<K: Key> {
+    /// This processor's rank within the scope, in `[0, nprocs)`.
+    fn pid(&self) -> usize;
+    /// Number of processors in the scope.
+    fn nprocs(&self) -> usize;
+    /// Charge `ops` basic operations to the current superstep and phase
+    /// (§1.1 charging policy).
+    fn charge(&mut self, ops: f64);
+    /// Enter a named phase; wall-clock and charges accrue to it.
+    fn phase(&mut self, name: &str);
+    /// Stage a message for scope rank `dst`; delivered at the next
+    /// `sync` of this scope.
+    fn send(&mut self, dst: usize, payload: Payload<K>);
+    /// Superstep boundary of the scope (SPMD discipline: every scope
+    /// participant calls it with the same `label`).
+    fn sync(&mut self, label: &str);
+    /// The messages delivered at the last `sync`, ordered by scope rank
+    /// of the sender.
+    fn take_inbox(&mut self) -> Vec<(usize, Payload<K>)>;
+
+    /// Convenience: exchange one payload with every scope participant
+    /// (all-to-all); returns the received payloads by sender rank.
+    fn all_to_all(&mut self, parts: Vec<Payload<K>>, label: &str) -> Vec<(usize, Payload<K>)> {
+        assert_eq!(parts.len(), self.nprocs());
+        for (dst, payload) in parts.into_iter().enumerate() {
+            self.send(dst, payload);
+        }
+        self.sync(label);
+        self.take_inbox()
+    }
+}
+
+impl<K: Key> BspScope<K> for BspCtx<'_, K> {
+    fn pid(&self) -> usize {
+        BspCtx::pid(self)
+    }
+    fn nprocs(&self) -> usize {
+        BspCtx::nprocs(self)
+    }
+    fn charge(&mut self, ops: f64) {
+        BspCtx::charge(self, ops)
+    }
+    fn phase(&mut self, name: &str) {
+        BspCtx::phase(self, name)
+    }
+    fn send(&mut self, dst: usize, payload: Payload<K>) {
+        BspCtx::send(self, dst, payload)
+    }
+    fn sync(&mut self, label: &str) {
+        BspCtx::sync(self, label)
+    }
+    fn take_inbox(&mut self) -> Vec<(usize, Payload<K>)> {
+        BspCtx::take_inbox(self)
+    }
+    fn all_to_all(&mut self, parts: Vec<Payload<K>>, label: &str) -> Vec<(usize, Payload<K>)> {
+        BspCtx::all_to_all(self, parts, label)
     }
 }
 
@@ -416,7 +625,7 @@ impl BspMachine {
         let names = world.phases.into_names();
         let mut phase_recs = builder.phases;
         phase_recs.resize_with(names.len(), Default::default);
-        let supersteps: Vec<SuperstepRecord> = builder
+        let mut supersteps: Vec<SuperstepRecord> = builder
             .supersteps
             .into_iter()
             .map(|b| SuperstepRecord {
@@ -427,11 +636,38 @@ impl BspMachine {
                 total_words: b.total_words,
                 wall_us: b.wall_us,
                 reporters: b.reporters,
+                procs: b.procs,
+                round: None,
             })
             .collect();
+        // Group-scoped records follow the whole-machine ones.  Distinct
+        // `(communicator, group step)` pairs get dense `round` indices
+        // in key order: siblings of one round (same communicator, same
+        // step, different leaders) are adjacent and priced as
+        // concurrent; steps of different communicators never share a
+        // round, so sequential group phases add instead of max-reducing.
+        let mut round_ids: std::collections::BTreeMap<(usize, usize), usize> =
+            std::collections::BTreeMap::new();
+        for &(comm, step, _leader) in builder.group_steps.keys() {
+            let next = round_ids.len();
+            round_ids.entry((comm, step)).or_insert(next);
+        }
+        for ((comm, step, _leader), b) in builder.group_steps {
+            supersteps.push(SuperstepRecord {
+                label: b.label,
+                phase: names[b.phase_id].clone(),
+                max_ops: b.max_ops,
+                h_words: b.h_words,
+                total_words: b.total_words,
+                wall_us: b.wall_us,
+                reporters: b.reporters,
+                procs: b.procs,
+                round: Some(round_ids[&(comm, step)]),
+            });
+        }
         debug_assert!(
-            supersteps.iter().all(|s| s.reporters == p),
-            "SPMD violation: a superstep was not reported by all {p} processors"
+            supersteps.iter().all(|s| s.reporters == s.procs),
+            "SPMD violation: a superstep was not reported by all its participants"
         );
         let mut ledger = Ledger {
             supersteps,

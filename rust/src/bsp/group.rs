@@ -1,0 +1,434 @@
+//! Processor-group communicators: split the p-processor machine into
+//! disjoint groups that superstep independently.
+//!
+//! A [`Communicator`] partitions `0..p` into groups, each with
+//! group-scoped ranks, its own barrier, and a group-scoped view of the
+//! engine's p×p slot matrix.  [`Communicator::enter`] wraps a
+//! [`BspCtx`] into a [`GroupCtx`] — an implementation of
+//! [`BspScope`] whose `pid`/`nprocs`/`send`/`sync` all operate on the
+//! sub-machine — so the one-level sorting algorithms run *group-locally
+//! without any new threads or data movement machinery* (the mechanism
+//! behind `sort::multilevel`, after "Practical/Robust Massively Parallel
+//! Sorting"'s recursion over processor groups).
+//!
+//! ## The group communication discipline
+//!
+//! Between entering a group scope and the scope's last `sync`, a
+//! processor must communicate only *within its group* (automatic when
+//! all sends go through [`GroupCtx`]: destinations are group ranks).  A
+//! group `sync` waits only on the group's own barrier and drains only
+//! the slots written by group members, which is what makes a stalled or
+//! slow group unable to block its siblings — and what makes cross-group
+//! sends during a group superstep a data race on the slot matrix.
+//! Whole-machine syncs may resume once every group has left its scope
+//! (in SPMD terms: after the group phase, the program returns to
+//! ordinary `ctx.sync` calls).
+//!
+//! Ledger accounting: group supersteps are recorded per
+//! `(communicator id, group superstep, leader)` — the superstep index
+//! comes from a per-group counter owned by the communicator (advanced
+//! by each sync's barrier leader), so records stay correct even when
+//! sibling groups run different superstep counts and the threads are
+//! later regrouped.  Records carry their participant count, are priced
+//! with the group-local effective machine (`BspParams::scaled_to`), and
+//! max-reduce across concurrent sibling groups — see
+//! [`crate::bsp::ledger::SuperstepRecord`].
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Barrier;
+
+use crate::key::Key;
+
+use super::engine::{BspCtx, BspScope, GroupScope};
+use super::msg::Payload;
+
+/// Process-wide communicator id source: every [`Communicator`] gets a
+/// distinct id so the ledger can key group records by
+/// `(communicator, group step, leader)` — a program that uses several
+/// communicators in sequence (even with diverging per-group superstep
+/// counts in between) never merges unrelated groups' records.
+static NEXT_COMM_ID: AtomicUsize = AtomicUsize::new(0);
+
+/// A partition of the `p`-processor machine into disjoint groups.
+///
+/// Construct once (outside `BspMachine::run`, so all threads share it),
+/// then have every processor [`Communicator::enter`] its group inside
+/// the SPMD program.  Groups are static for the communicator's
+/// lifetime; a program may use several communicators in sequence.
+pub struct Communicator {
+    /// Process-unique id (ledger key component for group records).
+    id: usize,
+    /// Global pids per group, each sorted ascending.
+    groups: Vec<Vec<usize>>,
+    /// pid → group index.
+    group_of: Vec<usize>,
+    /// pid → rank within its group.
+    rank_of: Vec<usize>,
+    /// One barrier per group, sized to the group.
+    barriers: Vec<Barrier>,
+    /// One superstep counter per group, owned by the communicator and
+    /// advanced by the barrier leader of each group sync.  Keying ledger
+    /// records off these (instead of any per-thread counter) keeps the
+    /// accounting correct even when sibling groups run different
+    /// numbers of group supersteps and the threads are later regrouped
+    /// by another communicator.
+    steps: Vec<AtomicUsize>,
+}
+
+impl Communicator {
+    /// Split `p` processors into `num_groups` contiguous blocks of
+    /// near-equal size (the first `p % num_groups` groups take one
+    /// extra processor).  Contiguous blocks keep pid order consistent
+    /// with group order, so a sort that routes ascending key ranges to
+    /// ascending groups stays globally sorted in pid order.
+    pub fn split_even(p: usize, num_groups: usize) -> Communicator {
+        assert!(num_groups >= 1, "need at least one group");
+        assert!(num_groups <= p, "cannot split {p} processors into {num_groups} groups");
+        let base = p / num_groups;
+        let extra = p % num_groups;
+        let mut groups = Vec::with_capacity(num_groups);
+        let mut next = 0usize;
+        for gidx in 0..num_groups {
+            let size = base + usize::from(gidx < extra);
+            groups.push((next..next + size).collect());
+            next += size;
+        }
+        Communicator::from_groups(groups)
+    }
+
+    /// Build a communicator from explicit member lists.  The lists must
+    /// be non-empty, sorted ascending, and together form a disjoint
+    /// cover of `0..p` where `p` is the total member count.
+    pub fn from_groups(groups: Vec<Vec<usize>>) -> Communicator {
+        let p: usize = groups.iter().map(|g| g.len()).sum();
+        assert!(p > 0, "communicator must cover at least one processor");
+        let mut group_of = vec![usize::MAX; p];
+        let mut rank_of = vec![usize::MAX; p];
+        for (gidx, members) in groups.iter().enumerate() {
+            assert!(!members.is_empty(), "group {gidx} is empty");
+            assert!(
+                members.windows(2).all(|w| w[0] < w[1]),
+                "group {gidx} members must be sorted ascending and distinct"
+            );
+            for (rank, &pid) in members.iter().enumerate() {
+                assert!(pid < p, "pid {pid} out of range for {p} processors");
+                assert_eq!(
+                    group_of[pid],
+                    usize::MAX,
+                    "pid {pid} appears in more than one group"
+                );
+                group_of[pid] = gidx;
+                rank_of[pid] = rank;
+            }
+        }
+        let barriers = groups.iter().map(|m| Barrier::new(m.len())).collect();
+        let steps = groups.iter().map(|_| AtomicUsize::new(0)).collect();
+        Communicator {
+            id: NEXT_COMM_ID.fetch_add(1, Ordering::Relaxed),
+            groups,
+            group_of,
+            rank_of,
+            barriers,
+            steps,
+        }
+    }
+
+    /// Total processors covered by the partition.
+    pub fn nprocs(&self) -> usize {
+        self.group_of.len()
+    }
+
+    /// Number of groups.
+    pub fn num_groups(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// Global pids of `group`, sorted ascending (rank order).
+    pub fn members(&self, group: usize) -> &[usize] {
+        &self.groups[group]
+    }
+
+    /// Size of `group`.
+    pub fn group_size(&self, group: usize) -> usize {
+        self.groups[group].len()
+    }
+
+    /// The group index of global `pid`.
+    pub fn group_of(&self, pid: usize) -> usize {
+        self.group_of[pid]
+    }
+
+    /// `pid`'s rank within its group.
+    pub fn rank_of(&self, pid: usize) -> usize {
+        self.rank_of[pid]
+    }
+
+    /// Enter this processor's group: wrap `ctx` into a group-scoped
+    /// [`BspScope`].  `phase_prefix` is prepended to every phase label
+    /// entered through the group context (the multi-level sorts pass
+    /// `"L2/"`, so the ledger separates level-2 phases from their
+    /// level-1 namesakes); pass `""` to keep labels unchanged.
+    pub fn enter<'c, 'w, K: Key>(
+        &'c self,
+        ctx: &'c mut BspCtx<'w, K>,
+        phase_prefix: &str,
+    ) -> GroupCtx<'c, 'w, K> {
+        let pid = BspCtx::pid(ctx);
+        assert!(
+            pid < self.nprocs(),
+            "pid {pid} outside the communicator's {} processors",
+            self.nprocs()
+        );
+        GroupCtx {
+            group: self.group_of(pid),
+            rank: self.rank_of(pid),
+            prefix: phase_prefix.to_string(),
+            comm: self,
+            ctx,
+        }
+    }
+}
+
+/// A group-scoped [`BspScope`]: ranks, barriers and message delivery
+/// all restricted to one group of a [`Communicator`].
+///
+/// Obtained from [`Communicator::enter`]; borrows the underlying
+/// [`BspCtx`] mutably, so the global scope is inaccessible (and the
+/// group communication discipline enforceable) until the `GroupCtx` is
+/// dropped.
+pub struct GroupCtx<'c, 'w, K: Key> {
+    comm: &'c Communicator,
+    group: usize,
+    rank: usize,
+    prefix: String,
+    ctx: &'c mut BspCtx<'w, K>,
+}
+
+impl<K: Key> GroupCtx<'_, '_, K> {
+    /// This processor's global pid (its rank is [`BspScope::pid`]).
+    pub fn global_pid(&self) -> usize {
+        BspCtx::pid(self.ctx)
+    }
+
+    /// The index of the group this context is scoped to.
+    pub fn group_index(&self) -> usize {
+        self.group
+    }
+}
+
+impl<K: Key> BspScope<K> for GroupCtx<'_, '_, K> {
+    fn pid(&self) -> usize {
+        self.rank
+    }
+
+    fn nprocs(&self) -> usize {
+        self.comm.group_size(self.group)
+    }
+
+    fn charge(&mut self, ops: f64) {
+        self.ctx.charge(ops);
+    }
+
+    fn phase(&mut self, name: &str) {
+        if self.prefix.is_empty() {
+            self.ctx.phase(name);
+        } else {
+            self.ctx.phase(&format!("{}{}", self.prefix, name));
+        }
+    }
+
+    fn send(&mut self, dst: usize, payload: Payload<K>) {
+        let members = self.comm.members(self.group);
+        debug_assert!(dst < members.len(), "group send to invalid rank {dst}");
+        self.ctx.send(members[dst], payload);
+    }
+
+    fn sync(&mut self, label: &str) {
+        let members = self.comm.members(self.group);
+        let scope = GroupScope {
+            comm_id: self.comm.id,
+            members,
+            leader: members[0],
+            barrier: &self.comm.barriers[self.group],
+            step: &self.comm.steps[self.group],
+        };
+        self.ctx.sync_scoped(label, Some(&scope));
+    }
+
+    fn take_inbox(&mut self) -> Vec<(usize, Payload<K>)> {
+        // A group drain only ever delivers member-written slots, so the
+        // global sender pid always maps to a group rank; ascending pid
+        // order is ascending rank order.
+        self.ctx
+            .take_inbox()
+            .into_iter()
+            .map(|(src, payload)| (self.comm.rank_of(src), payload))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bsp::engine::BspMachine;
+    use crate::bsp::params::cray_t3d;
+
+    fn machine(p: usize) -> BspMachine {
+        BspMachine::new(cray_t3d(p))
+    }
+
+    #[test]
+    fn split_even_p8_into_2x4() {
+        let comm = Communicator::split_even(8, 2);
+        assert_eq!(comm.nprocs(), 8);
+        assert_eq!(comm.num_groups(), 2);
+        assert_eq!(comm.members(0), &[0, 1, 2, 3]);
+        assert_eq!(comm.members(1), &[4, 5, 6, 7]);
+        for pid in 0..8 {
+            assert_eq!(comm.group_of(pid), pid / 4);
+            assert_eq!(comm.rank_of(pid), pid % 4);
+        }
+    }
+
+    #[test]
+    fn split_even_uneven_sizes() {
+        let comm = Communicator::split_even(7, 3);
+        assert_eq!(comm.members(0), &[0, 1, 2]);
+        assert_eq!(comm.members(1), &[3, 4]);
+        assert_eq!(comm.members(2), &[5, 6]);
+    }
+
+    #[test]
+    #[should_panic(expected = "appears in more than one group")]
+    fn overlapping_groups_rejected() {
+        Communicator::from_groups(vec![vec![0, 1], vec![1]]);
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot split")]
+    fn more_groups_than_procs_rejected() {
+        Communicator::split_even(2, 4);
+    }
+
+    #[test]
+    fn group_ranks_and_sizes_inside_a_run() {
+        let comm = Communicator::split_even(8, 2);
+        let run = machine(8).run(|ctx| {
+            let g = comm.enter(ctx, "");
+            (g.global_pid(), g.group_index(), g.pid(), g.nprocs())
+        });
+        for (pid, &(gpid, group, rank, size)) in run.outputs.iter().enumerate() {
+            assert_eq!(gpid, pid);
+            assert_eq!(group, pid / 4);
+            assert_eq!(rank, pid % 4);
+            assert_eq!(size, 4);
+        }
+    }
+
+    #[test]
+    fn group_all_to_all_stays_group_local() {
+        // Each group runs its own all-to-all; nothing leaks across the
+        // group boundary and senders arrive in rank order.
+        let comm = Communicator::split_even(8, 2);
+        let run = machine(8).run(|ctx| {
+            let mut g = comm.enter(ctx, "");
+            let me = g.pid();
+            let group = g.group_index();
+            let parts = (0..g.nprocs())
+                .map(|dst| Payload::Keys(vec![(group * 100 + me * 10 + dst) as i32]))
+                .collect();
+            let inbox = g.all_to_all(parts, "ga2a");
+            inbox
+                .into_iter()
+                .map(|(src, p)| (src, p.into_keys()[0]))
+                .collect::<Vec<_>>()
+        });
+        for (pid, inbox) in run.outputs.iter().enumerate() {
+            let (group, rank) = (pid / 4, pid % 4);
+            assert_eq!(inbox.len(), 4, "pid={pid}");
+            for (i, &(src, val)) in inbox.iter().enumerate() {
+                assert_eq!(src, i, "inbox must be rank-ordered");
+                assert_eq!(val as usize, group * 100 + src * 10 + rank);
+            }
+        }
+    }
+
+    #[test]
+    fn stalled_sibling_does_not_block_group_syncs() {
+        // Group 0 runs several group supersteps while group 1 never
+        // syncs at all (it only computes).  If group syncs touched the
+        // world barrier this would deadlock; instead the run completes
+        // and group 0's exchanges are correct.
+        let comm = Communicator::split_even(8, 2);
+        let run = machine(8).run(|ctx| {
+            let pid = ctx.pid();
+            if pid < 4 {
+                let mut g = comm.enter(ctx, "");
+                let mut sum = 0i32;
+                for round in 0..3 {
+                    let dst = (g.pid() + 1) % g.nprocs();
+                    g.send(dst, Payload::Keys(vec![round as i32 + g.pid() as i32]));
+                    g.sync("ring");
+                    sum += g.take_inbox().pop().unwrap().1.into_keys()[0];
+                }
+                sum
+            } else {
+                // The "stalled" sibling: no syncs, just local work.
+                (0..1000).sum::<i32>() % 7
+            }
+        });
+        for (pid, &out) in run.outputs.iter().enumerate() {
+            if pid < 4 {
+                let prev = (pid + 4 - 1) % 4;
+                let expect: i32 = (0..3).map(|r| r + prev as i32).sum();
+                assert_eq!(out, expect, "pid={pid}");
+            }
+        }
+    }
+
+    #[test]
+    fn group_records_carry_round_and_procs() {
+        let comm = Communicator::split_even(8, 2);
+        let run = machine(8).run(|ctx| {
+            // One global superstep, then two group-scoped ones.
+            ctx.sync("global");
+            let mut g = comm.enter(ctx, "L2/");
+            g.phase("Ph5:Routing");
+            let parts = (0..g.nprocs()).map(|_| Payload::Keys(vec![1i32])).collect();
+            g.all_to_all(parts, "l2:route");
+            g.sync("l2:done");
+        });
+        let global: Vec<_> =
+            run.ledger.supersteps.iter().filter(|s| s.round.is_none()).collect();
+        assert_eq!(global.len(), 1);
+        assert_eq!(global[0].procs, 8);
+        let grouped: Vec<_> =
+            run.ledger.supersteps.iter().filter(|s| s.round.is_some()).collect();
+        // 2 group supersteps × 2 groups.
+        assert_eq!(grouped.len(), 4);
+        assert!(grouped.iter().all(|s| s.procs == 4 && s.reporters == 4));
+        let routes: Vec<_> = grouped.iter().filter(|s| s.label == "l2:route").collect();
+        assert_eq!(routes.len(), 2);
+        for s in &routes {
+            assert_eq!(s.phase, "L2/Ph5:Routing");
+            // Group-local all-to-all of 1 word to each of 4 ranks.
+            assert_eq!(s.h_words, 4);
+            assert_eq!(s.total_words, 16);
+        }
+    }
+
+    #[test]
+    fn phase_prefix_scopes_ledger_phases() {
+        let comm = Communicator::split_even(4, 2);
+        let run = machine(4).run(|ctx| {
+            ctx.phase("Ph2:SeqSort");
+            ctx.charge(10.0);
+            let mut g = comm.enter(ctx, "L2/");
+            g.phase("Ph2:SeqSort");
+            g.charge(5.0);
+            g.sync("l2:s");
+        });
+        assert_eq!(run.ledger.phases["Ph2:SeqSort"].max_ops, 10.0);
+        assert_eq!(run.ledger.phases["L2/Ph2:SeqSort"].max_ops, 5.0);
+    }
+}

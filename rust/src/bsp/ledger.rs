@@ -17,7 +17,8 @@ use std::collections::BTreeMap;
 
 use super::params::BspParams;
 
-/// One superstep's accounting, reduced over all processors.
+/// One superstep's accounting, reduced over all participating
+/// processors.
 #[derive(Clone, Debug, Default)]
 pub struct SuperstepRecord {
     /// The `sync` label (SPMD discipline: identical on every processor).
@@ -34,12 +35,38 @@ pub struct SuperstepRecord {
     pub wall_us: f64,
     /// Processors that reported (for SPMD sanity checking).
     pub reporters: usize,
+    /// Participating processors: the whole machine for global
+    /// supersteps, the group size for group-scoped ones.
+    pub procs: usize,
+    /// `None` for a whole-machine superstep.  `Some(i)` marks a
+    /// group-scoped superstep (`bsp::group`): records of *disjoint*
+    /// groups that share the index `i` executed concurrently, so the
+    /// ledger prices a round as the max over its sibling records, and
+    /// each record is priced with its group-local effective machine
+    /// ([`BspParams::scaled_to`]) rather than the full p.
+    pub round: Option<usize>,
 }
 
 impl SuperstepRecord {
     /// Predicted cost under `params`: `max{L, x + g·h}`, in µs.
+    ///
+    /// Group-scoped records (`round.is_some()`) price against the
+    /// group-local effective machine `params.scaled_to(procs)` — a
+    /// group barrier synchronizes `procs < p` processors, so its
+    /// latency floor is the smaller machine's L, not the full
+    /// machine's.
     pub fn predicted_us(&self, params: &BspParams) -> f64 {
-        params.superstep_cost_us(self.max_ops, self.h_words)
+        self.pricing_params(params).superstep_cost_us(self.max_ops, self.h_words)
+    }
+
+    /// The parameters this record is priced with: `params` itself for
+    /// whole-machine supersteps, the group-scaled view for group ones.
+    pub fn pricing_params(&self, params: &BspParams) -> BspParams {
+        if self.round.is_some() && self.procs > 0 {
+            params.scaled_to(self.procs)
+        } else {
+            *params
+        }
     }
 }
 
@@ -108,9 +135,33 @@ pub struct PhaseComparison {
 }
 
 impl Ledger {
-    /// Total predicted time: sum of superstep costs, in µs.
+    /// The concurrency-aware reduction shared by every total: sum the
+    /// whole-machine records' `cost`, and for group-scoped records sum
+    /// the per-round *max* over siblings — disjoint groups sharing a
+    /// round index ran concurrently, so their costs overlap instead of
+    /// adding (the multi-level sorts' level-2 phases run one sort per
+    /// group in parallel).
+    fn fold_concurrent(&self, cost: impl Fn(&SuperstepRecord) -> f64) -> f64 {
+        let mut total = 0.0;
+        let mut rounds: BTreeMap<usize, f64> = BTreeMap::new();
+        for s in &self.supersteps {
+            let c = cost(s);
+            match s.round {
+                None => total += c,
+                Some(r) => {
+                    let e = rounds.entry(r).or_default();
+                    *e = e.max(c);
+                }
+            }
+        }
+        total + rounds.values().sum::<f64>()
+    }
+
+    /// Total predicted time in µs: superstep costs reduced by
+    /// [`Ledger::fold_concurrent`] (group records priced group-locally
+    /// via [`SuperstepRecord::predicted_us`]).
     pub fn predicted_us(&self, params: &BspParams) -> f64 {
-        self.supersteps.iter().map(|s| s.predicted_us(params)).sum()
+        self.fold_concurrent(|s| s.predicted_us(params))
     }
 
     /// Total predicted time in seconds.
@@ -118,9 +169,10 @@ impl Ledger {
         self.predicted_us(params) / 1e6
     }
 
-    /// Predicted pure-computation time (µs): Σ x / rate.
+    /// Predicted pure-computation time (µs): Σ x / rate, with
+    /// concurrent group rounds max-reduced like [`Ledger::predicted_us`].
     pub fn predicted_comp_us(&self, params: &BspParams) -> f64 {
-        self.supersteps.iter().map(|s| params.comp_us(s.max_ops)).sum()
+        self.fold_concurrent(|s| params.comp_us(s.max_ops))
     }
 
     /// Predicted pure-communication time (µs): Σ max{L, g·h} − comp? No —
@@ -150,9 +202,23 @@ impl Ledger {
     /// syncs; its compute must not leak into the next phase's superstep.
     pub fn phase_predicted_secs(&self, params: &BspParams) -> BTreeMap<String, f64> {
         let mut by_phase: BTreeMap<String, f64> = BTreeMap::new();
+        // Concurrent group-round communication max-reduces per
+        // (round, phase) before it is attributed — two sibling groups
+        // routing at once cost one group's time, priced group-locally
+        // (`SuperstepRecord::predicted_us` applies `scaled_to`).
+        let mut round_comm: BTreeMap<(usize, String), f64> = BTreeMap::new();
         for s in &self.supersteps {
             let comm_us = (s.predicted_us(params) - params.comp_us(s.max_ops)).max(0.0);
-            *by_phase.entry(s.phase.clone()).or_default() += comm_us / 1e6;
+            match s.round {
+                None => *by_phase.entry(s.phase.clone()).or_default() += comm_us / 1e6,
+                Some(r) => {
+                    let e = round_comm.entry((r, s.phase.clone())).or_default();
+                    *e = e.max(comm_us);
+                }
+            }
+        }
+        for ((_, phase), comm_us) in round_comm {
+            *by_phase.entry(phase).or_default() += comm_us / 1e6;
         }
         for (name, rec) in &self.phases {
             if rec.max_ops > 0.0 {
@@ -213,6 +279,16 @@ mod tests {
             total_words: h,
             wall_us: 1.0,
             reporters: 4,
+            procs: 4,
+            round: None,
+        }
+    }
+
+    fn mk_group(round: usize, phase: &str, ops: f64, h: u64, procs: usize) -> SuperstepRecord {
+        SuperstepRecord {
+            round: Some(round),
+            procs,
+            ..mk("group", phase, ops, h)
         }
     }
 
@@ -261,6 +337,47 @@ mod tests {
         );
         // Compute lands in Ph2, communication remainder in Ph5.
         assert!(by_phase["Ph2"] > by_phase["Ph5"] * 0.001);
+    }
+
+    #[test]
+    fn group_rounds_are_priced_concurrently_with_group_local_l() {
+        // Two sibling groups (p = 16 split 2×8) each run one empty
+        // group superstep in the same round: the round costs ONE
+        // group-local L floor — not two, and not the full machine's L.
+        let params = cray_t3d(128); // L = 762 µs
+        let mut ledger = Ledger::default();
+        ledger.supersteps.push(mk_group(0, "L2/Ph4", 0.0, 0, 8));
+        ledger.supersteps.push(mk_group(0, "L2/Ph4", 0.0, 0, 8));
+        let scaled_l = params.scaled_to(8).l_us;
+        assert!(scaled_l < params.l_us, "group L must shrink: {scaled_l}");
+        let t = ledger.predicted_us(&params);
+        assert!((t - scaled_l).abs() < 1e-9, "t={t} scaled_l={scaled_l}");
+        // Distinct rounds add up again (they run one after the other).
+        ledger.supersteps.push(mk_group(1, "L2/Ph5", 0.0, 0, 8));
+        let t2 = ledger.predicted_us(&params);
+        assert!((t2 - 2.0 * scaled_l).abs() < 1e-9, "t2={t2}");
+    }
+
+    #[test]
+    fn group_phase_comm_max_reduces_per_round() {
+        let params = cray_t3d(16);
+        let mut ledger = Ledger::default();
+        // One global routing step plus a concurrent pair of group
+        // routing steps (round 0): the phase table shows the global
+        // comm in Ph5 and only the larger sibling's comm in L2/Ph5.
+        ledger.supersteps.push(mk("route", "Ph5", 0.0, 1_000_000));
+        ledger.supersteps.push(mk_group(0, "L2/Ph5", 0.0, 400_000, 8));
+        ledger.supersteps.push(mk_group(0, "L2/Ph5", 0.0, 500_000, 8));
+        let by_phase = ledger.phase_predicted_secs(&params);
+        let g = params.g_us_per_word;
+        assert!((by_phase["Ph5"] - g * 1_000_000.0 / 1e6).abs() < 1e-9);
+        let scaled = params.scaled_to(8);
+        let expect = scaled.superstep_cost_us(0.0, 500_000) / 1e6;
+        assert!(
+            (by_phase["L2/Ph5"] - expect).abs() < 1e-12,
+            "L2/Ph5={} expect={expect}",
+            by_phase["L2/Ph5"]
+        );
     }
 
     #[test]

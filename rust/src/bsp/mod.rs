@@ -3,18 +3,24 @@
 //! * [`params`] — `(p, L, g)` parameters and Cray T3D presets,
 //! * [`msg`] — message payloads and the §5.1.1 tagged sample record,
 //! * [`ledger`] — superstep/phase cost accounting,
-//! * [`engine`] — the threaded SPMD superstep executor.
+//! * [`engine`] — the threaded SPMD superstep executor and the
+//!   [`BspScope`] contract the algorithms are generic over,
+//! * [`group`] — processor-group communicators: disjoint sub-machines
+//!   with group ranks, group barriers and group-scoped message delivery
+//!   (the substrate of the multi-level sorts).
 //!
 //! The same program runs *really* (threads, genuine data movement) and is
 //! priced *predictively* (`max{L, x + g·h}` per superstep), which is how
 //! the paper's T3D tables are regenerated on non-T3D hardware.
 
 pub mod engine;
+pub mod group;
 pub mod ledger;
 pub mod msg;
 pub mod params;
 
-pub use engine::{BspCtx, BspMachine, BspRun};
+pub use engine::{BspCtx, BspMachine, BspRun, BspScope};
+pub use group::{Communicator, GroupCtx};
 pub use ledger::{Ledger, PhaseComparison, PhaseRecord, SuperstepRecord};
 pub use msg::{Payload, SampleRec};
 pub use params::{cray_t3d, BspParams};

@@ -42,6 +42,30 @@ impl BspParams {
         BspParams { p, l_us: 0.0, g_us_per_word: 0.0, comps_per_us: 1.0 }
     }
 
+    /// The effective machine seen by a processor *group* of `p_eff < p`
+    /// processors (`bsp::group::Communicator`): same communication gap
+    /// `g` and computation rate, but the synchronization latency scales
+    /// down log-linearly in the participant count —
+    /// `L' = L · lg(p_eff)/lg(p)` — matching the roughly `lg p` growth
+    /// of L across the paper's measured T3D points (130→762 µs for
+    /// 16→128 procs).  A barrier over fewer processors is cheaper; a
+    /// group exchange still pays the full per-word gap.  This is the
+    /// pricing rule the ledger applies to group-scoped supersteps
+    /// (`SuperstepRecord::predicted_us`), deliberately conservative: it
+    /// never scales below the two-processor point.
+    pub fn scaled_to(&self, p_eff: usize) -> BspParams {
+        if p_eff >= self.p || self.p <= 2 {
+            return BspParams { p: p_eff.min(self.p).max(1), ..*self };
+        }
+        let num = (p_eff.max(2) as f64).log2();
+        let den = (self.p as f64).log2();
+        BspParams {
+            p: p_eff,
+            l_us: self.l_us * (num / den).min(1.0),
+            ..*self
+        }
+    }
+
     /// Cost (µs) of one superstep with max compute `x` (comparisons) and
     /// max fan-in/out `h` (words): `max{L, x/rate + g·h}` (§1.1).
     pub fn superstep_cost_us(&self, x_comps: f64, h_words: u64) -> f64 {
@@ -173,5 +197,29 @@ mod tests {
     fn comm_cost_is_linear_in_h() {
         let params = cray_t3d(64);
         assert!((params.comm_us(1000) - 280.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn scaled_to_shrinks_l_keeps_g_and_rate() {
+        let params = cray_t3d(128);
+        let group = params.scaled_to(8);
+        assert_eq!(group.p, 8);
+        assert!(group.l_us < params.l_us && group.l_us > 0.0);
+        // L' = 762 · 3/7.
+        assert!((group.l_us - 762.0 * 3.0 / 7.0).abs() < 1e-9, "L'={}", group.l_us);
+        assert_eq!(group.g_us_per_word, params.g_us_per_word);
+        assert_eq!(group.comps_per_us, params.comps_per_us);
+    }
+
+    #[test]
+    fn scaled_to_is_monotone_and_identity_at_full_p() {
+        let params = cray_t3d(64);
+        assert_eq!(params.scaled_to(64), params);
+        let mut last = 0.0;
+        for p_eff in [2usize, 4, 8, 16, 32, 64] {
+            let l = params.scaled_to(p_eff).l_us;
+            assert!(l >= last, "L not monotone at p_eff={p_eff}");
+            last = l;
+        }
     }
 }

@@ -29,7 +29,7 @@
 //! ```
 //! use bsp_sort::experiment::{self, ProbePlan, SweepSpec};
 //!
-//! let mut spec = SweepSpec::quick(); // det + ran, [U] + [DD], i32 + u64
+//! let mut spec = SweepSpec::quick(); // det + ran + det2, [U] + [DD], i32 + u64
 //! spec.ns = vec![2048];              // shrink the preset for the doctest
 //! spec.ps = vec![4];
 //! spec.reps = 1;
@@ -44,6 +44,8 @@
 //! assert!(run.predicted_us > 0.0 && run.wall_us.mean > 0.0);
 //! assert!(run.ratio.is_finite() && run.ratio > 0.0);
 //! ```
+
+#![warn(missing_docs)]
 
 pub mod calibrate;
 pub mod report;

@@ -17,7 +17,7 @@ use super::calibrate::Calibration;
 use super::run::RunRecord;
 
 /// Schema identifier written into (and required from) every report.
-pub const SCHEMA: &str = "bsp-sort/experiment-report/v1";
+pub const SCHEMA: &str = "bsp-sort/experiment-report/v2";
 
 /// A complete study: calibrations for every probed `p` plus one
 /// [`RunRecord`] per sweep cell.
@@ -197,6 +197,13 @@ fn run_to_json(r: &RunRecord) -> Json {
                 ("total_words", Json::num(s.total_words as f64)),
                 ("wall_us", Json::num(s.wall_us)),
                 ("predicted_us", Json::num(s.predicted_us)),
+                ("procs", Json::num(s.procs as f64)),
+                // Group-round index of the multi-level sorts' level-2
+                // supersteps; null for whole-machine supersteps.
+                (
+                    "round",
+                    s.round.map(|r| Json::num(r as f64)).unwrap_or(Json::Null),
+                ),
             ])
         })
         .collect();
@@ -302,6 +309,8 @@ mod tests {
                     total_words: 4096,
                     wall_us: 40.0,
                     predicted_us: 35.0,
+                    procs: 4,
+                    round: None,
                 }],
             }],
         }

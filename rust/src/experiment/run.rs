@@ -5,13 +5,14 @@
 
 use crate::baselines;
 use crate::bsp::engine::BspMachine;
+use crate::bsp::group::Communicator;
 use crate::bsp::ledger::{ratio_or_nan, Ledger};
 use crate::gen::{generate_typed_for_proc, GenKey};
 use crate::key::{F64, RadixKey, Record};
 use crate::metrics::{Imbalance, RoutedVolume, RunReport};
 use crate::primitives::bitonic::BitonicItem;
 use crate::sort::common::ProcResult;
-use crate::sort::{bsi, det, iran, ran, SortConfig};
+use crate::sort::{bsi, det, iran, multilevel, ran, SortConfig};
 use crate::util::bench::SampleStats;
 
 use super::calibrate::Calibration;
@@ -48,6 +49,15 @@ pub fn execute_typed<K: StudyKey>(spec: &RunSpec) -> SingleRun<K> {
     let (algo, bench, p, n, seed) = (spec.algo, spec.bench, spec.p, spec.n_total, spec.seed);
     assert!(n % p == 0, "n must divide evenly (paper setup): n={n} p={p}");
 
+    // The multi-level variants run over a processor-group communicator,
+    // shared by all engine threads; `default_groups` picks the largest
+    // divisor of p not exceeding √p (p = 8 → 2×4).
+    let comm = match algo {
+        AlgoVariant::Det2 | AlgoVariant::Ran2 => {
+            Some(Communicator::split_even(p, multilevel::default_groups(p)))
+        }
+        _ => None,
+    };
     let run = machine.run_keys::<K, _, _>(|ctx| {
         let local: Vec<K> = generate_typed_for_proc(bench, ctx.pid(), p, n / p);
         match algo {
@@ -55,6 +65,23 @@ pub fn execute_typed<K: StudyKey>(spec: &RunSpec) -> SingleRun<K> {
             AlgoVariant::Iran => iran::sort_iran_bsp(ctx, &params, local, n, &cfg, seed),
             AlgoVariant::Ran => ran::sort_ran_bsp(ctx, &params, local, n, &cfg, seed),
             AlgoVariant::Bsi => bsi::sort_bsi(ctx, local, &cfg),
+            AlgoVariant::Det2 => multilevel::sort_multilevel_det(
+                ctx,
+                comm.as_ref().expect("communicator built for det2"),
+                &params,
+                local,
+                n,
+                &cfg,
+            ),
+            AlgoVariant::Ran2 => multilevel::sort_multilevel_ran(
+                ctx,
+                comm.as_ref().expect("communicator built for ran2"),
+                &params,
+                local,
+                n,
+                &cfg,
+                seed,
+            ),
             AlgoVariant::HelmanDet => baselines::sort_helman_det(ctx, &params, local, &cfg),
             AlgoVariant::HelmanRan => {
                 baselines::sort_helman_ran(ctx, &params, local, n, &cfg, seed)
@@ -159,8 +186,15 @@ pub struct SuperstepStat {
     pub total_words: u64,
     /// Measured wall µs (max over processors).
     pub wall_us: f64,
-    /// Predicted µs under the host calibration.
+    /// Predicted µs under the host calibration (group-scoped records
+    /// are priced with the group-local effective machine).
     pub predicted_us: f64,
+    /// Participating processors (the group size for group-scoped
+    /// supersteps of the multi-level sorts, `p` otherwise).
+    pub procs: usize,
+    /// Group-round index for group-scoped supersteps; `None` for
+    /// whole-machine ones.
+    pub round: Option<usize>,
 }
 
 /// A fully measured sweep cell: wall-clock statistics over the recorded
@@ -295,6 +329,8 @@ pub fn measure_typed<K: StudyKey>(
             total_words: s.total_words,
             wall_us: s.wall_us,
             predicted_us: s.predicted_us(&host),
+            procs: s.procs,
+            round: s.round,
         })
         .collect();
 

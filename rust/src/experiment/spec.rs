@@ -23,6 +23,11 @@ pub enum AlgoVariant {
     Ran,
     /// Full bitonic \[BSI\].
     Bsi,
+    /// Two-level deterministic sample sort over processor groups
+    /// (`sort::multilevel`, AMS-style recursion).
+    Det2,
+    /// Two-level randomized sample sort over processor groups.
+    Ran2,
     /// Helman–JaJa–Bader deterministic [39].
     HelmanDet,
     /// Helman–JaJa–Bader randomized [40].
@@ -32,11 +37,13 @@ pub enum AlgoVariant {
 }
 
 /// Every variant, in report order.
-pub const ALL_ALGOS: [AlgoVariant; 7] = [
+pub const ALL_ALGOS: [AlgoVariant; 9] = [
     AlgoVariant::Det,
     AlgoVariant::Iran,
     AlgoVariant::Ran,
     AlgoVariant::Bsi,
+    AlgoVariant::Det2,
+    AlgoVariant::Ran2,
     AlgoVariant::HelmanDet,
     AlgoVariant::HelmanRan,
     AlgoVariant::Psrs,
@@ -50,6 +57,8 @@ impl AlgoVariant {
             AlgoVariant::Iran => cfg.variant_name(false),
             AlgoVariant::Ran => format!("[RAN-S{}]", cfg.seq.suffix()),
             AlgoVariant::Bsi => "[BSI]".into(),
+            AlgoVariant::Det2 => format!("[2L-DS{}]", cfg.seq.suffix()),
+            AlgoVariant::Ran2 => format!("[2L-RAN-S{}]", cfg.seq.suffix()),
             AlgoVariant::HelmanDet => "[39]".into(),
             AlgoVariant::HelmanRan => "[40]".into(),
             AlgoVariant::Psrs => "[44]".into(),
@@ -63,6 +72,8 @@ impl AlgoVariant {
             AlgoVariant::Iran => "iran",
             AlgoVariant::Ran => "ran",
             AlgoVariant::Bsi => "bsi",
+            AlgoVariant::Det2 => "det2",
+            AlgoVariant::Ran2 => "ran2",
             AlgoVariant::HelmanDet => "helman-det",
             AlgoVariant::HelmanRan => "helman-ran",
             AlgoVariant::Psrs => "psrs",
@@ -212,13 +223,14 @@ pub struct SweepSpec {
 }
 
 impl SweepSpec {
-    /// The CI/acceptance preset: det + ran on `[U]` and `[DD]`, the
-    /// `i32` and `u64` key domains, p ∈ {4, 8}, 16K keys, 1 warmup +
-    /// 2 recorded reps — a complete miniature of the study that finishes
-    /// in seconds.
+    /// The CI/acceptance preset: det + ran + the two-level det2 on `[U]`
+    /// and `[DD]`, the `i32` and `u64` key domains, p ∈ {4, 8}, 16K
+    /// keys, 1 warmup + 2 recorded reps — a complete miniature of the
+    /// study (including one multi-level configuration) that finishes in
+    /// seconds.
     pub fn quick() -> SweepSpec {
         SweepSpec {
-            algos: vec![AlgoVariant::Det, AlgoVariant::Ran],
+            algos: vec![AlgoVariant::Det, AlgoVariant::Ran, AlgoVariant::Det2],
             benches: vec![Benchmark::Uniform, Benchmark::DetDup],
             domains: vec![KeyDomain::I32, KeyDomain::U64],
             ns: vec![1 << 14],
@@ -371,10 +383,12 @@ mod tests {
         let spec = SweepSpec::quick();
         spec.validate().unwrap();
         assert!(spec.algos.contains(&AlgoVariant::Det) && spec.algos.contains(&AlgoVariant::Ran));
+        // One multi-level configuration rides the CI smoke.
+        assert!(spec.algos.contains(&AlgoVariant::Det2));
         assert_eq!(spec.ps, vec![4, 8]);
         assert_eq!(spec.domains.len(), 2);
-        // 2 algos × 2 benches × 2 domains × 1 n × 2 p.
-        assert_eq!(spec.configs().len(), 16);
+        // 3 algos × 2 benches × 2 domains × 1 n × 2 p.
+        assert_eq!(spec.configs().len(), 24);
     }
 
     #[test]

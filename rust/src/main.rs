@@ -107,16 +107,9 @@ fn run(cmd: &str, args: &Args) -> Result<(), Box<dyn std::error::Error>> {
         }
         "sort" => {
             let opts = opts_from(args)?;
-            let algo = match args.get("algo").unwrap_or("det") {
-                "det" => runner::AlgoVariant::Det,
-                "iran" => runner::AlgoVariant::Iran,
-                "ran" => runner::AlgoVariant::Ran,
-                "bsi" => runner::AlgoVariant::Bsi,
-                "helman-det" => runner::AlgoVariant::HelmanDet,
-                "helman-ran" => runner::AlgoVariant::HelmanRan,
-                "psrs" => runner::AlgoVariant::Psrs,
-                other => return Err(format!("unknown --algo {other}").into()),
-            };
+            // One parser for every runnable variant (unknown tags list
+            // the accepted set) — the same registry `experiment` sweeps.
+            let algo = runner::AlgoVariant::parse(args.get("algo").unwrap_or("det"))?;
             // parse_strict: an unknown tag is a RuntimeError that lists
             // the valid tags (the old path silently dropped to a generic
             // message on `None`).
@@ -265,7 +258,7 @@ bsp-sort — BSP sorting study (Gerbessiotis & Siniolakis) reproduction
 USAGE:
   bsp-sort table <1..11> [--full] [--max-n K] [--max-p P] [--reps R]
   bsp-sort all-tables [--full]
-  bsp-sort sort --algo det|iran|ran|bsi|helman-det|helman-ran|psrs
+  bsp-sort sort --algo det|iran|ran|bsi|det2|ran2|helman-det|helman-ran|psrs
                 --bench U|G|B|2-G|S|DD|WR --n 8388608 --p 64
                 [--seq quick|radix] [--no-dup]
   bsp-sort experiment [--quick] [--algos det,ran,...] [--benches U,DD,...]
@@ -281,7 +274,11 @@ Tables report *predicted Cray T3D seconds* from the BSP cost model
 
 `experiment` calibrates the host's (g, L) and operation rate from
 micro-probes, runs the sweep cross-product with warmup + repetitions,
-and writes BENCH_<tag>.json (schema bsp-sort/experiment-report/v1,
+and writes BENCH_<tag>.json (schema bsp-sort/experiment-report/v2,
 validated after writing) plus BENCH_<tag>.md.  --quick is the CI-sized
-preset: det+ran on [U]+[DD], i32+u64, 16K keys, p in {4,8}.
+preset: det+ran+det2 on [U]+[DD], i32+u64, 16K keys, p in {4,8}.
+
+det2/ran2 are the two-level sorts: coarse splitters route key ranges to
+processor groups, then the one-level algorithm runs group-locally over
+a communicator (p = 8 splits 2x4) — see docs/ALGORITHMS.md.
 "#;

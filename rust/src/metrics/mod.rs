@@ -48,14 +48,15 @@ pub struct RoutedVolume {
 }
 
 impl RoutedVolume {
-    /// Scan `ledger` for supersteps whose phase is Ph5 (routing) and
-    /// reduce their volumes.  Algorithms that never enter Ph5 (e.g. the
-    /// bitonic baseline) report zeros.
+    /// Scan `ledger` for supersteps whose phase is Ph5 (routing) —
+    /// including the group-scoped `L2/Ph5:Routing` of the multi-level
+    /// sorts — and reduce their volumes.  Algorithms that never enter
+    /// Ph5 (e.g. the bitonic baseline) report zeros.
     pub fn from_ledger(ledger: &Ledger, p: usize) -> RoutedVolume {
         let mut total = 0u64;
         let mut max_words = 0u64;
         for s in &ledger.supersteps {
-            if s.phase == crate::sort::common::PH5 {
+            if s.phase.ends_with(crate::sort::common::PH5) {
                 total += s.total_words;
                 max_words = max_words.max(s.h_words);
             }
@@ -152,6 +153,8 @@ mod tests {
             total_words: total,
             wall_us: 1.0,
             reporters: 4,
+            procs: 4,
+            round: None,
         };
         ledger.supersteps.push(step(PH2, 9, 9)); // not routing: ignored
         ledger.supersteps.push(step(PH5, 300, 1000));

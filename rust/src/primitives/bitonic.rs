@@ -12,7 +12,7 @@
 //! 0-1 principle this block variant inherits the network's correctness.
 //! Requires `p` a power of two (all the paper's configurations are).
 
-use crate::bsp::engine::BspCtx;
+use crate::bsp::engine::BspScope;
 use crate::bsp::msg::{Payload, SampleRec};
 use crate::key::{F64, Key, Record};
 use crate::seq::ops;
@@ -65,8 +65,8 @@ impl<K: Key> BitonicItem<K> for SampleRec<K> {
 /// On return, processor `k` holds the `k`-th chunk of the global sorted
 /// order (all chunks the same length as the input run).  `label` prefixes
 /// the superstep labels.
-pub fn bitonic_sort<K: Key, T: BitonicItem<K>>(
-    ctx: &mut BspCtx<K>,
+pub fn bitonic_sort<K: Key, T: BitonicItem<K>, S: BspScope<K>>(
+    ctx: &mut S,
     mut run: Vec<T>,
     label: &str,
 ) -> Vec<T> {
@@ -97,8 +97,8 @@ pub fn bitonic_sort<K: Key, T: BitonicItem<K>>(
 
 /// One merge-split with `partner`: exchange runs, merge `mine` with the
 /// partner's run into `out` (cleared first), keeping the required half.
-fn merge_split<K: Key, T: BitonicItem<K>>(
-    ctx: &mut BspCtx<K>,
+fn merge_split<K: Key, T: BitonicItem<K>, S: BspScope<K>>(
+    ctx: &mut S,
     mine: &[T],
     out: &mut Vec<T>,
     partner: usize,

@@ -14,7 +14,7 @@
 //! of primitive" the paper highlights in §5.1 (the same BSP program picks
 //! different building blocks for different `(n, p, L, g)` tuples).
 
-use crate::bsp::engine::BspCtx;
+use crate::bsp::engine::BspScope;
 use crate::bsp::msg::{Payload, SampleRec};
 use crate::bsp::params::BspParams;
 use crate::key::Key;
@@ -79,8 +79,8 @@ pub enum BroadcastPlan {
 /// processor returns the full message.  SPMD: all processors call this
 /// with the same `expected_len` (the sorts broadcast `p−1` splitters, a
 /// globally known length); only the root's `msg` is consulted.
-pub fn broadcast_recs<K: Key>(
-    ctx: &mut BspCtx<K>,
+pub fn broadcast_recs<K: Key, S: BspScope<K>>(
+    ctx: &mut S,
     params: &BspParams,
     root: usize,
     msg: Vec<SampleRec<K>>,
@@ -97,8 +97,8 @@ pub fn broadcast_recs<K: Key>(
 }
 
 /// One-superstep direct broadcast.
-pub fn broadcast_direct<K: Key>(
-    ctx: &mut BspCtx<K>,
+pub fn broadcast_direct<K: Key, S: BspScope<K>>(
+    ctx: &mut S,
     root: usize,
     msg: Vec<SampleRec<K>>,
     label: &str,
@@ -136,8 +136,8 @@ pub fn broadcast_direct<K: Key>(
 ///
 /// `expected_len` must be identical on all processors (it determines the
 /// superstep count); only the root's `msg` content matters.
-pub fn broadcast_tree<K: Key>(
-    ctx: &mut BspCtx<K>,
+pub fn broadcast_tree<K: Key, S: BspScope<K>>(
+    ctx: &mut S,
     root: usize,
     msg: Vec<SampleRec<K>>,
     t: usize,

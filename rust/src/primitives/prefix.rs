@@ -13,7 +13,7 @@
 //!   (up-sweep then down-sweep), cost
 //!   `2·(⌈n/⌈n/h⌉⌉ + h − 1)·max{L, g·2t·⌈n/h⌉}` with `h = ⌈log_t p⌉`.
 
-use crate::bsp::engine::BspCtx;
+use crate::bsp::engine::BspScope;
 use crate::bsp::msg::Payload;
 use crate::bsp::params::BspParams;
 use crate::key::Key;
@@ -44,9 +44,10 @@ pub fn direct_cost_us(params: &BspParams, n: u64) -> f64 {
 ///
 /// Implementation is the direct two-superstep shape (the sorts call this
 /// with `n = p` counters, where `g·p²` is far below `L` on the T3D; the
-/// tree variant exists for the cost model and larger `n`).
-pub fn prefix_direct<K: Key>(
-    ctx: &mut BspCtx<K>,
+/// tree variant exists for the cost model and larger `n`).  Generic over
+/// the [`BspScope`], so it runs whole-machine or group-local alike.
+pub fn prefix_direct<K: Key, S: BspScope<K>>(
+    ctx: &mut S,
     values: &[u64],
     label: &str,
 ) -> (Vec<u64>, Vec<u64>) {

@@ -7,7 +7,7 @@
 //! algorithm is faster because of its low overhead)" — the crossover our
 //! ablation bench (benches/ablation.rs) reproduces.
 
-use crate::bsp::engine::BspCtx;
+use crate::bsp::engine::BspScope;
 use crate::key::{Key, RadixKey};
 use crate::primitives::bitonic::{self, BitonicItem};
 use crate::seq::{QuickSorter, RadixSorter, SeqSortKind, SeqSorter};
@@ -19,9 +19,10 @@ use super::config::SortConfig;
 /// global order.  Requires equal local sizes and `p` a power of two.
 /// The domain's bare keys must ride the payload (`K: BitonicItem<K>` —
 /// provided for every built-in domain).
-pub fn sort_bsi<K>(ctx: &mut BspCtx<K>, mut local: Vec<K>, cfg: &SortConfig) -> ProcResult<K>
+pub fn sort_bsi<K, S>(ctx: &mut S, mut local: Vec<K>, cfg: &SortConfig) -> ProcResult<K>
 where
     K: RadixKey + BitonicItem<K>,
+    S: BspScope<K>,
 {
     let sorter: &dyn SeqSorter<K> = match cfg.seq {
         SeqSortKind::Quick => &QuickSorter,
@@ -32,14 +33,15 @@ where
 }
 
 /// As [`sort_bsi`] with an explicit sequential backend.
-pub fn sort_bsi_with<K>(
-    ctx: &mut BspCtx<K>,
+pub fn sort_bsi_with<K, S>(
+    ctx: &mut S,
     local: &mut Vec<K>,
     _cfg: &SortConfig,
     sorter: &dyn SeqSorter<K>,
 ) -> ProcResult<K>
 where
     K: Key + BitonicItem<K>,
+    S: BspScope<K>,
 {
     ctx.phase(PH2);
     ctx.charge(sorter.charge(local.len()));

@@ -6,7 +6,7 @@
 //! Phase labels match Tables 4–7: Ph1 Init, Ph2 SeqSort, Ph3 Sampling,
 //! Ph4 Prefix, Ph5 Routing, Ph6 Merging, Ph7 Termination.
 
-use crate::bsp::engine::BspCtx;
+use crate::bsp::engine::BspScope;
 use crate::bsp::msg::{Payload, SampleRec};
 use crate::bsp::params::BspParams;
 use crate::key::Key;
@@ -15,12 +15,19 @@ use crate::seq::{ops, search};
 
 use super::config::{DuplicatePolicy, SampleSortMethod, SortConfig};
 
+/// Ph1 — initialization (the default phase before any `phase()` call).
 pub const PH1: &str = "Ph1:Init";
+/// Ph2 — sequential local sort.
 pub const PH2: &str = "Ph2:SeqSort";
+/// Ph3 — sample formation, sample sort and splitter broadcast.
 pub const PH3: &str = "Ph3:Sampling";
+/// Ph4 — partition at the splitters + parallel prefix over counts.
 pub const PH4: &str = "Ph4:Prefix";
+/// Ph5 — the one-round key routing (the h-relation the tables price).
 pub const PH5: &str = "Ph5:Routing";
+/// Ph6 — stable multi-way merge of the received runs.
 pub const PH6: &str = "Ph6:Merging";
+/// Ph7 — termination.
 pub const PH7: &str = "Ph7:Term";
 
 /// Per-processor result of a sorting run (key domain defaults to the
@@ -66,8 +73,8 @@ pub fn select_splitters<K: Key>(sorted: &[SampleRec<K>], p: usize) -> Vec<Sample
 ///   which broadcasts the splitter set (steps 5–7 / Lemma 4.1).
 /// * `Sequential` — gather the whole sample at processor 0, sort there,
 ///   select evenly spaced splitters, broadcast (SORT_RAN_BSP's shape).
-pub fn sample_sort_and_splitters<K: Key>(
-    ctx: &mut BspCtx<K>,
+pub fn sample_sort_and_splitters<K: Key, S: BspScope<K>>(
+    ctx: &mut S,
     params: &BspParams,
     sample: Vec<SampleRec<K>>,
     method: SampleSortMethod,
@@ -129,8 +136,8 @@ pub fn sample_sort_and_splitters<K: Key>(
 /// tagged tie-break), run the Ph4 prefix over bucket counts, route each
 /// contiguous slice in a single superstep, and stable-merge the received
 /// runs.
-pub fn partition_route_merge<K: Key>(
-    ctx: &mut BspCtx<K>,
+pub fn partition_route_merge<K: Key, S: BspScope<K>>(
+    ctx: &mut S,
     keys: Vec<K>,
     splitters: &[SampleRec<K>],
     cfg: &SortConfig,
@@ -151,14 +158,7 @@ pub fn partition_route_merge<K: Key>(
     ctx.phase(PH4);
     // Binary search of the p−1 splitters into the local sorted keys
     // (the cheaper direction, as §5.2 notes): (p−1)·⌈lg(n/p)⌉ charges.
-    let effective: Vec<SampleRec<K>> = match cfg.dup {
-        DuplicatePolicy::Tagged => splitters.to_vec(),
-        // Ablation: strip tags so ties resolve by key only.
-        DuplicatePolicy::Off => splitters
-            .iter()
-            .map(|s| SampleRec { key: s.key, proc: 0, idx: 0 })
-            .collect(),
-    };
+    let effective = effective_splitters(splitters, cfg);
     let cuts = search::partition_points(&keys, pid, &effective);
     ctx.charge((p as f64 - 1.0) * ops::bsearch_charge(n_local.max(2)));
     let counts: Vec<u64> = cuts.windows(2).map(|w| (w[1] - w[0]) as u64).collect();
@@ -210,6 +210,45 @@ pub fn partition_route_merge<K: Key>(
         received,
         runs: n_runs,
     }
+}
+
+/// The splitter set actually compared against under the configured
+/// duplicate policy: tagged records verbatim, or — for the §6.4
+/// ablation — tags zeroed so ties resolve by key only.  Shared by the
+/// one-level pipeline and the multi-level sorts' coarse partition.
+pub fn effective_splitters<K: Key>(
+    splitters: &[SampleRec<K>],
+    cfg: &SortConfig,
+) -> Vec<SampleRec<K>> {
+    match cfg.dup {
+        DuplicatePolicy::Tagged => splitters.to_vec(),
+        // Ablation: strip tags so ties resolve by key only.
+        DuplicatePolicy::Off => splitters
+            .iter()
+            .map(|s| SampleRec { key: s.key, proc: 0, idx: 0 })
+            .collect(),
+    }
+}
+
+/// Destination bucket of key `k` (owned by `pid` at index `i`) among the
+/// tagged `splitters`: the first splitter the tagged key orders before;
+/// ties use the §5.1.1 compound `(key, proc, idx)` order.  Used by the
+/// key-wise set formation of SORT_RAN_BSP (step 9) and by the
+/// multi-level sorts' coarse group routing.
+pub fn splitter_rank<K: Key>(splitters: &[SampleRec<K>], k: K, pid: usize, i: usize) -> usize {
+    let me = (k, pid as u32, i as u32);
+    let mut lo = 0usize;
+    let mut hi = splitters.len();
+    while lo < hi {
+        let mid = lo + (hi - lo) / 2;
+        let s = &splitters[mid];
+        if (s.key, s.proc, s.idx) <= me {
+            lo = mid + 1;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
 }
 
 /// Evenly spaced sample of a *sorted* local run (step 4 of SORT_DET_BSP):

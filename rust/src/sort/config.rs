@@ -11,8 +11,10 @@ use crate::seq::SeqSortKind;
 /// disappears.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
 pub enum DuplicatePolicy {
+    /// §5.1.1 tagged splitters (the paper's implementations).
     #[default]
     Tagged,
+    /// Tags stripped — the §6.4 ablation.
     Off,
 }
 
@@ -54,9 +56,13 @@ impl Oversampling {
 /// Full configuration of a sorting run.
 #[derive(Clone, Copy, Debug)]
 pub struct SortConfig {
+    /// Sequential backend for the local sorts (\[.SQ\]/\[.SR\]/\[.SX\]).
     pub seq: SeqSortKind,
+    /// Duplicate handling on (tagged) or off (the §6.4 ablation).
     pub dup: DuplicatePolicy,
+    /// How the sample is sorted in step 5.
     pub sample_sort: SampleSortMethod,
+    /// ω override; `None` uses each algorithm's §6.1 default.
     pub oversampling: Option<Oversampling>,
 }
 
@@ -72,21 +78,25 @@ impl Default for SortConfig {
 }
 
 impl SortConfig {
+    /// Replace the sequential backend.
     pub fn with_seq(mut self, seq: SeqSortKind) -> Self {
         self.seq = seq;
         self
     }
 
+    /// Replace the duplicate policy.
     pub fn with_dup(mut self, dup: DuplicatePolicy) -> Self {
         self.dup = dup;
         self
     }
 
+    /// Replace the sample-sort method.
     pub fn with_sample_sort(mut self, m: SampleSortMethod) -> Self {
         self.sample_sort = m;
         self
     }
 
+    /// Override the oversampling factor ω.
     pub fn with_omega(mut self, w: f64) -> Self {
         self.oversampling = Some(Oversampling::Omega(w));
         self

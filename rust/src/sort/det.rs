@@ -10,7 +10,7 @@
 //! `(1 + 1/⌈ω⌉)·n/p + ⌈ω⌉·p` — the invariant our integration tests
 //! check for every benchmark distribution.
 
-use crate::bsp::engine::BspCtx;
+use crate::bsp::engine::BspScope;
 use crate::bsp::params::BspParams;
 use crate::key::{Key, RadixKey};
 use crate::seq::{SeqSorter, SeqSortKind, QuickSorter, RadixSorter};
@@ -38,8 +38,12 @@ pub fn nmax_bound(n_total: usize, p: usize, omega: f64) -> f64 {
 /// chunk of the global sorted order plus routing stats.  `K: RadixKey`
 /// because `cfg.seq` may select the radix backend; a quicksort-only
 /// custom key type goes through [`sort_det_bsp_with`].
-pub fn sort_det_bsp<K: RadixKey>(
-    ctx: &mut BspCtx<K>,
+///
+/// Generic over the [`BspScope`]: the identical program runs on the
+/// whole machine (`BspCtx`) or group-locally (`bsp::group::GroupCtx`,
+/// which is how `sort::multilevel` reuses it as its level-2 sort).
+pub fn sort_det_bsp<K: RadixKey, S: BspScope<K>>(
+    ctx: &mut S,
     params: &BspParams,
     mut local: Vec<K>,
     n_total: usize,
@@ -58,8 +62,8 @@ pub fn sort_det_bsp<K: RadixKey>(
 /// As [`sort_det_bsp`] but with an explicit sequential backend (used by
 /// the XLA-backed variant and by tests injecting instrumented sorters);
 /// only the bare [`Key`] contract is required of the domain.
-pub fn sort_det_bsp_with<K: Key>(
-    ctx: &mut BspCtx<K>,
+pub fn sort_det_bsp_with<K: Key, S: BspScope<K>>(
+    ctx: &mut S,
     params: &BspParams,
     local: &mut Vec<K>,
     n_total: usize,

@@ -13,7 +13,7 @@
 //! than deterministic regular oversampling, which is why the randomized
 //! variant balances better at p = 128 (Tables 3–7).
 
-use crate::bsp::engine::BspCtx;
+use crate::bsp::engine::BspScope;
 use crate::bsp::msg::SampleRec;
 use crate::bsp::params::BspParams;
 use crate::key::{Key, RadixKey};
@@ -47,8 +47,8 @@ pub fn nmax_bound(n_total: usize, p: usize, omega: f64) -> f64 {
 ///
 /// `seed` decorrelates the random sample across runs (the experiments
 /// average over ≥ 4 runs); the per-processor stream is derived from it.
-pub fn sort_iran_bsp<K: RadixKey>(
-    ctx: &mut BspCtx<K>,
+pub fn sort_iran_bsp<K: RadixKey, S: BspScope<K>>(
+    ctx: &mut S,
     params: &BspParams,
     mut local: Vec<K>,
     n_total: usize,
@@ -64,8 +64,8 @@ pub fn sort_iran_bsp<K: RadixKey>(
 }
 
 /// As [`sort_iran_bsp`] with an explicit sequential backend.
-pub fn sort_iran_bsp_with<K: Key>(
-    ctx: &mut BspCtx<K>,
+pub fn sort_iran_bsp_with<K: Key, S: BspScope<K>>(
+    ctx: &mut S,
     params: &BspParams,
     local: &mut Vec<K>,
     n_total: usize,

@@ -5,10 +5,44 @@
 //! * [`iran`] — SORT_IRAN_BSP: the improved randomized algorithm (Fig. 3),
 //! * [`ran`] — SORT_RAN_BSP: classic randomized sample-sort (Fig. 2),
 //! * [`bsi`] — full Batcher bitonic sort (\[BSI\], §6.2 item 3),
+//! * [`multilevel`] — two-level det/ran sample sorts over processor
+//!   groups (coarse splitters route key ranges to groups; the one-level
+//!   algorithms then run group-locally through a
+//!   [`Communicator`](crate::bsp::group::Communicator)),
 //! * [`common`] — the shared sample-sort/partition/route/merge pipeline
 //!   and the §5.1.1 tagged sampling,
 //! * [`config`] — variant knobs (\[DSQ\]/\[DSR\]/\[RSQ\]/\[RSR\], duplicate
 //!   policy ablation, ω overrides, sample-sort method).
+//!
+//! Every algorithm is generic over the
+//! [`BspScope`](crate::bsp::BspScope), so the same program text runs on
+//! the whole machine or against one processor group of a split machine.
+//! A two-level run through a 2×4 communicator:
+//!
+//! ```
+//! use bsp_sort::bsp::{cray_t3d, BspMachine, Communicator};
+//! use bsp_sort::gen::{generate_for_proc, Benchmark};
+//! use bsp_sort::sort::{multilevel, SortConfig};
+//!
+//! let p = 8;
+//! let n = 1 << 12;
+//! let params = cray_t3d(p);
+//! let machine = BspMachine::new(params);
+//! let comm = Communicator::split_even(p, 2); // two groups of four
+//! let cfg = SortConfig::default();
+//! let run = machine.run(|ctx| {
+//!     let keys = generate_for_proc(Benchmark::Uniform, ctx.pid(), p, n / p);
+//!     multilevel::sort_multilevel_det(ctx, &comm, &params, keys, n, &cfg).keys
+//! });
+//! let sorted: Vec<i32> = run.outputs.concat();
+//! assert_eq!(sorted.len(), n);
+//! assert!(sorted.windows(2).all(|w| w[0] <= w[1]));
+//! // Level-2 phases are group-scoped in the ledger: half the input
+//! // routed per group, priced with the 4-processor sub-machine.
+//! assert!(run.ledger.phases.contains_key("L2/Ph5:Routing"));
+//! ```
+
+#![warn(missing_docs)]
 
 pub mod bsi;
 pub mod common;
@@ -16,6 +50,7 @@ pub mod det_iterative;
 pub mod config;
 pub mod det;
 pub mod iran;
+pub mod multilevel;
 pub mod ran;
 
 pub use common::ProcResult;
@@ -35,6 +70,7 @@ pub enum Algorithm {
 }
 
 impl Algorithm {
+    /// Parse a CLI tag (`det`, `iran`, `ran`, `bsi` and their aliases).
     pub fn parse(s: &str) -> Option<Algorithm> {
         match s.to_ascii_lowercase().as_str() {
             "det" | "sort_det_bsp" | "d" => Some(Algorithm::Det),
@@ -45,6 +81,7 @@ impl Algorithm {
         }
     }
 
+    /// The paper's name for the algorithm.
     pub fn name(&self) -> &'static str {
         match self {
             Algorithm::Det => "SORT_DET_BSP",

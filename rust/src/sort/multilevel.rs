@@ -1,0 +1,446 @@
+//! Two-level (multi-level) BSP sample sorting over processor groups.
+//!
+//! The paper's one-level sorts route one full h-relation across all `p`
+//! processors: every superstep of Ph5 is a whole-machine exchange priced
+//! `g·n_max` under the full machine's `(L, g)`.  Following the k-way
+//! recursion of "Practical Massively Parallel Sorting" (AMS) and
+//! "Robust Massively Parallel Sorting" (Axtmann & Sanders), the
+//! two-level variants here:
+//!
+//! 1. **Level 1** — select `k − 1` *coarse* splitters (regular sample of
+//!    the locally sorted run for the deterministic variant, random
+//!    sample for the randomized one; §5.1.1 tagged either way, so
+//!    duplicate-heavy inputs split across groups exactly), partition,
+//!    and route each key range to one of `k` disjoint processor groups
+//!    — a single whole-machine superstep moving each key once;
+//! 2. **Level 2** — every group runs the *unmodified one-level
+//!    algorithm* ([`super::det::sort_det_bsp`] /
+//!    [`super::ran::sort_ran_bsp`]) against its
+//!    [`GroupCtx`](crate::bsp::group::GroupCtx): group-scoped ranks,
+//!    group-local barriers, group-local exchanges over `p/k` processors.
+//!
+//! Every level-2 superstep therefore realizes a *group-local*
+//! h-relation — `n/k` total words instead of `n`, synchronized over
+//! `p/k` processors — which the ledger prices with the group-scaled
+//! machine and max-reduces across concurrently running sibling groups
+//! (`bsp::ledger`).  Phases of level 2 appear under the `L2/` prefix
+//! (`L2/Ph2:SeqSort`, `L2/Ph5:Routing`, …) next to the level-1 phases
+//! with the paper's plain names.
+//!
+//! Concatenating the groups in order yields the global sorted order in
+//! pid order because [`Communicator::split_even`] assigns contiguous
+//! ascending pid blocks to ascending coarse key ranges.
+
+use crate::bsp::engine::{BspCtx, BspScope};
+use crate::bsp::group::Communicator;
+use crate::bsp::msg::{Payload, SampleRec};
+use crate::bsp::params::BspParams;
+use crate::key::RadixKey;
+use crate::primitives::{broadcast, prefix};
+use crate::seq::{ops, search, QuickSorter, RadixSorter, SeqSortKind, SeqSorter};
+use crate::util::rng::SplitMix64;
+
+use super::common::{self, ProcResult, PH1, PH2, PH3, PH4, PH5};
+use super::config::SortConfig;
+use super::det::omega_det;
+use super::iran::{omega_ran, sample_share};
+
+/// The phase-label prefix under which level-2 (group-local) phases are
+/// recorded in the ledger.
+pub const LEVEL2_PREFIX: &str = "L2/";
+
+/// Default group count for a `p`-processor machine: the largest divisor
+/// of `p` not exceeding `√p` (so groups are at least as wide as they are
+/// many, keeping the level-2 sub-machines the larger factor).  `1` for
+/// `p < 4` — a two-level split needs at least two groups of two.
+///
+/// For the power-of-two configurations of the paper this is the
+/// power-of-two `√p̃`: p = 4 → 2×2, p = 8 → 2×4, p = 16 → 4×4,
+/// p = 64 → 8×8.
+pub fn default_groups(p: usize) -> usize {
+    let mut k = 1usize;
+    let mut c = 2usize;
+    while c * c <= p {
+        if p % c == 0 {
+            k = c;
+        }
+        c += 1;
+    }
+    k
+}
+
+/// Two-level deterministic sample sort (regular oversampling at both
+/// levels).
+///
+/// SPMD over the *whole* machine: every processor calls this inside
+/// `BspMachine::run` with the shared `comm` (constructed outside the
+/// run, e.g. [`Communicator::split_even`]`(p, `[`default_groups`]`(p))`).
+/// With a single group this degrades to the one-level algorithm.
+pub fn sort_multilevel_det<K: RadixKey>(
+    ctx: &mut BspCtx<K>,
+    comm: &Communicator,
+    params: &BspParams,
+    mut local: Vec<K>,
+    n_total: usize,
+    cfg: &SortConfig,
+) -> ProcResult<K> {
+    let k = comm.num_groups();
+    if k <= 1 {
+        return super::det::sort_det_bsp(ctx, params, local, n_total, cfg);
+    }
+    assert_eq!(
+        comm.nprocs(),
+        ctx.nprocs(),
+        "communicator must cover the whole machine"
+    );
+    let pid = ctx.pid();
+    let sorter: &dyn SeqSorter<K> = match cfg.seq {
+        SeqSortKind::Quick => &QuickSorter,
+        SeqSortKind::Radix => &RadixSorter,
+        SeqSortKind::Xla => panic!("the multi-level sorts support the Quick/Radix backends"),
+    };
+
+    // --- Ph2: local sort (once; level 2 receives sorted runs) ---------
+    ctx.phase(PH2);
+    ctx.charge(sorter.charge(local.len()));
+    let mut keys = std::mem::take(&mut local);
+    sorter.sort(&mut keys);
+
+    // --- Ph3 (level 1): coarse regular sample → k−1 group splitters ---
+    // The sample targets k buckets, so it is ⌈ω⌉·k records per
+    // processor — a factor p/k smaller than the one-level sample; tiny,
+    // so the sequential gather-sort-broadcast shape is the right
+    // primitive (the paper's §5.1 point about choosing primitives per
+    // (n, p, L, g)).
+    ctx.phase(PH3);
+    let r = omega_det(cfg, n_total).ceil().max(1.0) as usize;
+    let s = r * k;
+    let sample = common::regular_sample(&keys, pid, s);
+    ctx.charge(s as f64);
+    ctx.send(0, Payload::Recs(sample));
+    ctx.sync("l1:gather-sample");
+    let coarse = if pid == 0 {
+        let mut all: Vec<SampleRec<K>> = ctx
+            .take_inbox()
+            .into_iter()
+            .flat_map(|(_, payload)| payload.into_recs())
+            .collect();
+        ctx.charge(ops::sort_charge(all.len()));
+        all.sort();
+        common::select_splitters(&all, k)
+    } else {
+        ctx.take_inbox();
+        Vec::new()
+    };
+    let coarse = broadcast::broadcast_recs(ctx, params, 0, coarse, k - 1, "l1:bcast");
+
+    // --- Ph4 (level 1): partition the sorted run at the coarse cuts ---
+    ctx.phase(PH4);
+    let effective = common::effective_splitters(&coarse, cfg);
+    let cuts = search::partition_points(&keys, pid, &effective);
+    ctx.charge((k as f64 - 1.0) * ops::bsearch_charge(keys.len().max(2)));
+
+    // --- Ph5 (level 1): one superstep routes each range to its group --
+    // Bucket j is a contiguous slice of the sorted run; it goes to ONE
+    // member of group j (rotating by sender pid so every member is fed),
+    // and level 2's own routing rebalances within the group.
+    ctx.phase(PH5);
+    let n_local = keys.len();
+    let mut parts: Vec<Vec<K>> = Vec::with_capacity(k);
+    let mut head = keys;
+    for j in (1..k).rev() {
+        parts.push(head.split_off(cuts[j]));
+    }
+    parts.push(head);
+    parts.reverse();
+    ctx.charge(ops::linear_charge(n_local));
+    for (j, bucket) in parts.into_iter().enumerate() {
+        let members = comm.members(j);
+        ctx.send(members[pid % members.len()], Payload::Keys(bucket));
+    }
+    ctx.sync("l1:route");
+    // Concatenate the received ranges without merging: the level-2
+    // algorithm's own Ph2 local sort is about to run regardless (it is
+    // the unmodified one-level sort), so a level-1 multiway merge would
+    // be pure duplicated work — and a duplicated n·lg n charge that
+    // would skew the measured-vs-predicted phase ratios.
+    let mut received_keys: Vec<K> = Vec::new();
+    for (_, payload) in ctx.take_inbox() {
+        received_keys.extend_from_slice(&payload.into_keys());
+    }
+    let received = received_keys.len();
+    ctx.charge(ops::linear_charge(received));
+
+    // --- Level 2: the one-level algorithm, group-locally --------------
+    let group_params = params.scaled_to(comm.group_size(comm.group_of(pid)));
+    let mut g = comm.enter(ctx, LEVEL2_PREFIX);
+    g.phase(PH1);
+    let (_, totals) = prefix::prefix_direct(&mut g, &[received as u64], "l2:count");
+    let group_n = totals[0] as usize;
+    super::det::sort_det_bsp(&mut g, &group_params, received_keys, group_n, cfg)
+}
+
+/// Two-level randomized sample sort (coarse random splitters, then the
+/// classic one-level SORT_RAN_BSP group-locally).
+///
+/// Same SPMD contract as [`sort_multilevel_det`]; `seed` decorrelates
+/// the random samples across runs and (internally) across groups.
+pub fn sort_multilevel_ran<K: RadixKey>(
+    ctx: &mut BspCtx<K>,
+    comm: &Communicator,
+    params: &BspParams,
+    local: Vec<K>,
+    n_total: usize,
+    cfg: &SortConfig,
+    seed: u64,
+) -> ProcResult<K> {
+    let k = comm.num_groups();
+    if k <= 1 {
+        return super::ran::sort_ran_bsp(ctx, params, local, n_total, cfg, seed);
+    }
+    assert_eq!(
+        comm.nprocs(),
+        ctx.nprocs(),
+        "communicator must cover the whole machine"
+    );
+    let pid = ctx.pid();
+
+    // --- Ph3 (level 1): random coarse sample, sorted at processor 0 ---
+    ctx.phase(PH3);
+    let omega = omega_ran(cfg, n_total);
+    let share = sample_share(n_total, k, omega).min(local.len().max(1));
+    let mut rng = SplitMix64::new(seed ^ ((pid as u64) << 18).wrapping_add(0x2D2D));
+    let sample: Vec<SampleRec<K>> = if local.is_empty() {
+        vec![SampleRec::new(K::max_key(), pid, 0)]
+    } else {
+        rng.sample_indices(local.len(), share)
+            .into_iter()
+            .map(|i| SampleRec::new(local[i], pid, i))
+            .collect()
+    };
+    ctx.charge(share as f64);
+    ctx.send(0, Payload::Recs(sample));
+    ctx.sync("l1:gather-sample");
+    let coarse = if pid == 0 {
+        let mut all: Vec<SampleRec<K>> = ctx
+            .take_inbox()
+            .into_iter()
+            .flat_map(|(_, payload)| payload.into_recs())
+            .collect();
+        ctx.charge(ops::sort_charge(all.len()));
+        all.sort();
+        common::select_splitters(&all, k)
+    } else {
+        ctx.take_inbox();
+        Vec::new()
+    };
+    let coarse = broadcast::broadcast_recs(ctx, params, 0, coarse, k - 1, "l1:bcast");
+
+    // --- Ph5 (level 1): key-wise set formation + one routing superstep
+    // (the SORT_RAN_BSP step-9 shape, but over k buckets, so the binary
+    // search is lg k instead of lg p per key).
+    ctx.phase(PH5);
+    let effective = common::effective_splitters(&coarse, cfg);
+    let mut buckets: Vec<Vec<K>> = vec![Vec::new(); k];
+    for (i, &key) in local.iter().enumerate() {
+        buckets[common::splitter_rank(&effective, key, pid, i)].push(key);
+    }
+    ctx.charge(local.len() as f64 * (ops::bsearch_charge(k) + 1.0 + 2.0));
+    for (j, bucket) in buckets.into_iter().enumerate() {
+        let members = comm.members(j);
+        ctx.send(members[pid % members.len()], Payload::Keys(bucket));
+    }
+    ctx.sync("l1:route");
+    let mut received_keys: Vec<K> = Vec::new();
+    for (_, payload) in ctx.take_inbox() {
+        received_keys.extend_from_slice(&payload.into_keys());
+    }
+    let received = received_keys.len();
+    ctx.charge(ops::linear_charge(received));
+
+    // --- Level 2: the one-level algorithm, group-locally --------------
+    let group = comm.group_of(pid);
+    let group_params = params.scaled_to(comm.group_size(group));
+    let mut g = comm.enter(ctx, LEVEL2_PREFIX);
+    g.phase(PH1);
+    let (_, totals) = prefix::prefix_direct(&mut g, &[received as u64], "l2:count");
+    let group_n = totals[0] as usize;
+    let group_seed = seed.wrapping_add((group as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    super::ran::sort_ran_bsp(&mut g, &group_params, received_keys, group_n, cfg, group_seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bsp::engine::BspMachine;
+    use crate::bsp::params::cray_t3d;
+    use crate::gen::{generate_for_proc, Benchmark, ALL_BENCHMARKS};
+
+    fn run_multilevel(
+        det: bool,
+        p: usize,
+        groups: usize,
+        n: usize,
+        bench: Benchmark,
+        cfg: SortConfig,
+    ) -> (Vec<Vec<i32>>, Vec<ProcResult>, crate::bsp::Ledger) {
+        let params = cray_t3d(p);
+        let machine = BspMachine::new(params);
+        let comm = Communicator::split_even(p, groups);
+        let run = machine.run(|ctx| {
+            let local = generate_for_proc(bench, ctx.pid(), p, n / p);
+            let input = local.clone();
+            let out = if det {
+                sort_multilevel_det(ctx, &comm, &params, local, n, &cfg)
+            } else {
+                sort_multilevel_ran(ctx, &comm, &params, local, n, &cfg, 0x2E11)
+            };
+            (input, out)
+        });
+        let inputs = run.outputs.iter().map(|(i, _)| i.clone()).collect();
+        let results = run.outputs.into_iter().map(|(_, r)| r).collect();
+        (inputs, results, run.ledger)
+    }
+
+    fn assert_sorted_permutation(inputs: &[Vec<i32>], results: &[ProcResult], label: &str) {
+        let mut expect: Vec<i32> = inputs.iter().flatten().copied().collect();
+        expect.sort_unstable();
+        let got: Vec<i32> = results.iter().flat_map(|r| r.keys.clone()).collect();
+        assert_eq!(got, expect, "{label}");
+    }
+
+    #[test]
+    fn default_groups_divides_and_caps_at_sqrt() {
+        assert_eq!(default_groups(1), 1);
+        assert_eq!(default_groups(2), 1);
+        assert_eq!(default_groups(4), 2);
+        assert_eq!(default_groups(8), 2);
+        assert_eq!(default_groups(16), 4);
+        assert_eq!(default_groups(64), 8);
+        assert_eq!(default_groups(12), 3);
+        for p in 1..=64usize {
+            let k = default_groups(p);
+            assert!(p % k == 0 && k * k <= p, "p={p} k={k}");
+        }
+    }
+
+    #[test]
+    fn det2_sorts_every_benchmark_p8() {
+        for bench in ALL_BENCHMARKS {
+            let (inputs, results, _) =
+                run_multilevel(true, 8, 2, 1 << 12, bench, SortConfig::default());
+            assert_sorted_permutation(&inputs, &results, &bench.tag());
+        }
+    }
+
+    #[test]
+    fn ran2_sorts_every_benchmark_p8() {
+        for bench in ALL_BENCHMARKS {
+            let (inputs, results, _) =
+                run_multilevel(false, 8, 2, 1 << 12, bench, SortConfig::default());
+            assert_sorted_permutation(&inputs, &results, &bench.tag());
+        }
+    }
+
+    #[test]
+    fn det2_various_splits() {
+        for (p, groups) in [(4usize, 2usize), (8, 2), (8, 4), (16, 4)] {
+            let (inputs, results, _) = run_multilevel(
+                true,
+                p,
+                groups,
+                1 << 12,
+                Benchmark::Staggered,
+                SortConfig::default(),
+            );
+            assert_sorted_permutation(&inputs, &results, &format!("p={p} k={groups}"));
+        }
+    }
+
+    #[test]
+    fn single_group_degrades_to_one_level() {
+        let (inputs, results, ledger) =
+            run_multilevel(true, 4, 1, 1 << 10, Benchmark::Uniform, SortConfig::default());
+        assert_sorted_permutation(&inputs, &results, "k=1");
+        // No group-scoped records: the one-level algorithm ran.
+        assert!(ledger.supersteps.iter().all(|s| s.round.is_none()));
+    }
+
+    #[test]
+    fn radix_backend_sorts() {
+        let cfg = SortConfig::default().with_seq(SeqSortKind::Radix);
+        let (inputs, results, _) = run_multilevel(true, 8, 2, 1 << 12, Benchmark::DetDup, cfg);
+        assert_sorted_permutation(&inputs, &results, "det2 radix");
+        let (inputs, results, _) = run_multilevel(false, 8, 2, 1 << 12, Benchmark::DetDup, cfg);
+        assert_sorted_permutation(&inputs, &results, "ran2 radix");
+    }
+
+    #[test]
+    fn all_equal_keys_split_across_groups_via_tags() {
+        // §5.1.1 transparency through the coarse level: tagged coarse
+        // splitters cut the all-equal input between the groups instead
+        // of collapsing it onto one.
+        let p = 8usize;
+        let n = 1 << 12;
+        let params = cray_t3d(p);
+        let machine = BspMachine::new(params);
+        let comm = Communicator::split_even(p, 2);
+        let cfg = SortConfig::default();
+        let run = machine.run(|ctx| {
+            let local = vec![7i32; n / p];
+            sort_multilevel_det(ctx, &comm, &params, local, n, &cfg)
+        });
+        let total: usize = run.outputs.iter().map(|r| r.keys.len()).sum();
+        assert_eq!(total, n);
+        for (pid, r) in run.outputs.iter().enumerate() {
+            assert!(r.keys.iter().all(|&k| k == 7));
+            assert!(r.received > 0, "pid={pid} starved");
+        }
+        // Both groups hold a comparable share (no group-level collapse).
+        let g0: usize = run.outputs[..4].iter().map(|r| r.keys.len()).sum();
+        let g1: usize = run.outputs[4..].iter().map(|r| r.keys.len()).sum();
+        assert!(g0 > n / 4 && g1 > n / 4, "g0={g0} g1={g1}");
+    }
+
+    #[test]
+    fn level2_phases_and_group_records_present() {
+        let (_, _, ledger) =
+            run_multilevel(true, 8, 2, 1 << 12, Benchmark::Uniform, SortConfig::default());
+        for ph in ["Ph2:SeqSort", "Ph5:Routing", "L2/Ph2:SeqSort", "L2/Ph5:Routing"] {
+            assert!(
+                ledger.phases.contains_key(ph),
+                "missing phase {ph}: {:?}",
+                ledger.phases.keys().collect::<Vec<_>>()
+            );
+        }
+        // The level-1 route is a whole-machine superstep; level-2 routes
+        // are group records over 4 processors each, moving half the
+        // input per group.
+        let l1: Vec<_> = ledger
+            .supersteps
+            .iter()
+            .filter(|s| s.label == "l1:route")
+            .collect();
+        assert_eq!(l1.len(), 1);
+        assert_eq!(l1[0].procs, 8);
+        assert_eq!(l1[0].total_words, 1 << 12);
+        let l2: Vec<_> = ledger
+            .supersteps
+            .iter()
+            .filter(|s| s.label == "ph5:route" && s.round.is_some())
+            .collect();
+        assert_eq!(l2.len(), 2, "one level-2 route per group");
+        for s in &l2 {
+            assert_eq!(s.procs, 4);
+            assert_eq!(s.phase, "L2/Ph5:Routing");
+            assert!(
+                s.total_words < l1[0].total_words,
+                "level-2 routing must be group-local: {} vs {}",
+                s.total_words,
+                l1[0].total_words
+            );
+        }
+        let l2_total: u64 = l2.iter().map(|s| s.total_words).sum();
+        assert_eq!(l2_total, 1 << 12, "level 2 moves every key exactly once overall");
+    }
+}

@@ -12,21 +12,24 @@
 //! local sort.  Tags are per-key implicit `(pid, original index)`; sample
 //! records carry them so duplicate-heavy inputs still split evenly.
 
-use crate::bsp::engine::BspCtx;
+use crate::bsp::engine::BspScope;
 use crate::bsp::msg::{Payload, SampleRec};
 use crate::bsp::params::BspParams;
-use crate::key::{Key, RadixKey};
+use crate::key::RadixKey;
 use crate::primitives::broadcast;
 use crate::seq::{ops, QuickSorter, RadixSorter, SeqSortKind, SeqSorter};
 use crate::util::rng::SplitMix64;
 
-use super::common::{ProcResult, PH3, PH5, PH6, PH7};
+use super::common::{splitter_rank, ProcResult, PH3, PH5, PH6, PH7};
 use super::config::SortConfig;
 use super::iran::{omega_ran, sample_share};
 
 /// Run SORT_RAN_BSP on this processor's share of the input.
-pub fn sort_ran_bsp<K: RadixKey>(
-    ctx: &mut BspCtx<K>,
+///
+/// Generic over the [`BspScope`], so the same program runs on the whole
+/// machine or group-locally inside a multi-level sort.
+pub fn sort_ran_bsp<K: RadixKey, S: BspScope<K>>(
+    ctx: &mut S,
     params: &BspParams,
     local: Vec<K>,
     n_total: usize,
@@ -115,25 +118,6 @@ pub fn sort_ran_bsp<K: RadixKey>(
     ctx.sync("ph7:done");
 
     ProcResult { keys, received, runs }
-}
-
-/// Destination bucket of key `k` (owned by `pid` at index `i`) among the
-/// tagged splitters: the first splitter that the tagged key orders
-/// before; ties use the §5.1.1 compound order.
-fn splitter_rank<K: Key>(splitters: &[SampleRec<K>], k: K, pid: usize, i: usize) -> usize {
-    let me = (k, pid as u32, i as u32);
-    let mut lo = 0usize;
-    let mut hi = splitters.len();
-    while lo < hi {
-        let mid = lo + (hi - lo) / 2;
-        let s = &splitters[mid];
-        if (s.key, s.proc, s.idx) <= me {
-            lo = mid + 1;
-        } else {
-            hi = mid;
-        }
-    }
-    lo
 }
 
 #[cfg(test)]

@@ -229,7 +229,7 @@ fn req_arr<'a>(ctx: &str, doc: &'a Json, key: &str) -> Result<&'a [Json], String
 }
 
 /// Validate a parsed experiment report against the
-/// `bsp-sort/experiment-report/v1` schema: schema tag, non-empty
+/// `bsp-sort/experiment-report/v2` schema: schema tag, non-empty
 /// calibrations with positive (g, L, rate), non-empty runs each carrying
 /// wall-clock statistics, a positive end-to-end measured-vs-predicted
 /// ratio, per-phase rows (ratio positive or `null` for unpriced phases),
@@ -337,6 +337,13 @@ pub fn validate_report(doc: &Json) -> Result<(), String> {
             req_nonneg(&sctx, s, "total_words")?;
             req_nonneg(&sctx, s, "wall_us")?;
             req_positive(&sctx, s, "predicted_us")?;
+            req_positive(&sctx, s, "procs")?;
+            // Group-round index of group-scoped supersteps (multi-level
+            // sorts); null for whole-machine ones.
+            let round = field(&sctx, s, "round")?;
+            if !round.is_null() && round.as_f64().is_none() {
+                return Err(format!("{sctx}: 'round' must be a number or null"));
+            }
         }
     }
     Ok(())
@@ -378,7 +385,9 @@ mod tests {
         // validate without the validator and the writer drifting apart.
         use crate::experiment::{self, AlgoVariant, KeyDomain, ProbePlan, SweepSpec};
         let mut spec = SweepSpec::quick();
-        spec.algos = vec![AlgoVariant::Det, AlgoVariant::Ran];
+        // det2 exercises the group-scoped superstep fields (procs,
+        // non-null round) through the serializer and the validator.
+        spec.algos = vec![AlgoVariant::Det, AlgoVariant::Det2];
         spec.benches = vec![Benchmark::Uniform];
         spec.domains = vec![KeyDomain::I32, KeyDomain::U64];
         spec.ns = vec![4096];
@@ -397,8 +406,19 @@ mod tests {
         let parsed = Json::parse(&text).expect("report must parse back");
         validate_report(&parsed).expect("report must validate against the schema");
         let runs = parsed.get("runs").unwrap().as_arr().unwrap();
-        assert_eq!(runs.len(), 4, "det+ran × i32+u64");
+        assert_eq!(runs.len(), 4, "det+det2 × i32+u64");
         assert_eq!(runs[0].get("n").unwrap().as_u64(), Some(4096));
+        // The det2 runs carry group-scoped supersteps: procs below the
+        // machine p with a non-null round.
+        let det2 = runs
+            .iter()
+            .find(|r| r.get("algo").unwrap().as_str() == Some("det2"))
+            .expect("det2 run present");
+        let steps = det2.get("supersteps").unwrap().as_arr().unwrap();
+        assert!(steps.iter().any(|s| {
+            s.get("procs").unwrap().as_u64() == Some(2)
+                && !s.get("round").unwrap().is_null()
+        }));
     }
 
     #[test]

@@ -112,6 +112,64 @@ pub fn predict_iran(n: usize, params: &BspParams, omega: f64) -> Prediction {
     Prediction { comp_ops: comp, comm_us, pi, mu }
 }
 
+/// Two-level composition of Proposition 5.1 for the k-group multi-level
+/// deterministic sort (`sort::multilevel`):
+///
+/// * **level 1** pays one local sort `(n/p)lg(n/p)`, a coarse sample of
+///   `r·k` per processor sorted sequentially at processor 0
+///   (`r·k·p·lg(r·k·p)`), the `(k−1)`-way partition, a linear
+///   concatenation of the received ranges (the implementation
+///   deliberately does *not* merge at level 1 — level 2's own local
+///   sort subsumes it), and one whole-machine routing superstep of
+///   `~n/p` words per processor plus the gather/broadcast L floors;
+/// * **level 2** is the one-level prediction on the `(p/k)`-processor
+///   group machine with `n/k` keys, priced under the group-scaled
+///   parameters ([`BspParams::scaled_to`]) — smaller effective L, and
+///   `lg²(p/k)` instead of `lg²p` synchronization-bound supersteps.
+///
+/// The trade the recursion makes explicit: one extra `g·n/p` routing
+/// pass buys synchronization and sample-sort terms that scale with the
+/// group size instead of the machine size.
+pub fn predict_det_multilevel(
+    n: usize,
+    params: &BspParams,
+    omega: f64,
+    k: usize,
+) -> Prediction {
+    let k = k.max(1);
+    if k == 1 || params.p < 2 * k {
+        return predict_det(n, params, omega);
+    }
+    let p = params.p as f64;
+    let nf = n as f64;
+    let np = nf / p;
+    let r = omega.ceil().max(1.0);
+    let kf = k as f64;
+
+    // Level-1 computation (per processor).  The received ranges are
+    // concatenated, not merged (matching `sort_multilevel_det`): a
+    // linear np term, since level 2 re-sorts regardless.
+    let s1 = r * kf * p; // gathered coarse sample at processor 0
+    let comp1 = np * lg(np)
+        + s1 * lg(s1).max(1.0)
+        + (kf - 1.0) * lg(np).max(1.0)
+        + np; // concatenation of received ranges
+    // Level-1 communication: one whole-machine route of ~n/p words per
+    // processor plus the coarse gather + broadcast floors.
+    let comm1_us = params.comm_us(np as u64) + 2.0 * params.l_us;
+
+    // Level 2: the one-level algorithm, group-locally.
+    let sub = params.scaled_to(params.p / k);
+    let lvl2 = predict_det(n / k, &sub, omega);
+
+    let comp = comp1 + lvl2.comp_ops;
+    let comm_us = comm1_us + lvl2.comm_us;
+    let c_seq = seq_charge(n);
+    let pi = p * comp / c_seq;
+    let mu = p * (comm_us * params.comps_per_us) / c_seq;
+    Prediction { comp_ops: comp, comm_us, pi, mu }
+}
+
 /// Validity ranges: the conditions of Props 5.1/5.3.
 pub fn det_conditions_hold(n: usize, p: usize, omega: f64) -> bool {
     // p²ω² ≤ n / lg n and ω = O(lg n).
@@ -175,6 +233,29 @@ mod tests {
         let p2 = predict_det(1 << 26, &params, 4.0);
         assert!(p1.pi > 1.0 && p2.pi > 1.0);
         assert!(p2.pi < p1.pi, "π must shrink as n grows (one-optimality)");
+    }
+
+    #[test]
+    fn multilevel_cuts_communication_at_scale() {
+        // At n = 8M, p = 128 the two-level recursion (8×16) trades one
+        // extra g·n/p routing pass for group-local synchronization and
+        // sample-sort terms — a net communication win.
+        let n = 1usize << 23;
+        let params = cray_t3d(128);
+        let omega = lg(n as f64).log2();
+        let one = predict_det(n, &params, omega);
+        let two = predict_det_multilevel(n, &params, omega, 8);
+        assert!(
+            two.comm_us < one.comm_us,
+            "two-level comm {} must beat one-level {}",
+            two.comm_us,
+            one.comm_us
+        );
+        assert!(two.efficiency() > 0.0 && two.efficiency() < 1.0);
+        // k = 1 degrades to the one-level prediction exactly.
+        let k1 = predict_det_multilevel(n, &params, omega, 1);
+        assert_eq!(k1.comm_us, one.comm_us);
+        assert_eq!(k1.comp_ops, one.comp_ops);
     }
 
     #[test]

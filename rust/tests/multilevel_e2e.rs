@@ -1,0 +1,221 @@
+//! End-to-end runs of the two-level sorts over every built-in key
+//! domain at p = 8 (2 groups × 4 processors).
+//!
+//! For each domain, the multi-level det and ran variants must produce a
+//! globally sorted permutation of the input; §5.1.1 duplicate handling
+//! must stay transparent through *both* levels (heavy-duplicate inputs
+//! balance, routed data remains bare keys); and the ledger must record
+//! the level-2 exchanges as *group-local*: group-sized participant
+//! counts, strictly fewer routed words per superstep than the one-level
+//! equivalent on the same input, and half the input per group overall.
+
+use bsp_sort::bsp::{cray_t3d, BspMachine, Communicator, Ledger};
+use bsp_sort::gen::{generate_heavy_dup_for_proc, generate_typed_for_proc, Benchmark, GenKey};
+use bsp_sort::key::{F64, Key, RadixKey, Record};
+use bsp_sort::seq::SeqSortKind;
+use bsp_sort::sort::common::ProcResult;
+use bsp_sort::sort::{det, multilevel, SortConfig};
+
+const P: usize = 8;
+const GROUPS: usize = 2;
+const N: usize = 1 << 12;
+
+fn assert_sorted_permutation<K: Key>(inputs: &[Vec<K>], outputs: &[Vec<K>], label: &str) {
+    let mut expect: Vec<K> = inputs.iter().flatten().copied().collect();
+    expect.sort_unstable();
+    let got: Vec<K> = outputs.iter().flatten().copied().collect();
+    assert!(got.windows(2).all(|w| w[0] <= w[1]), "{label}: not globally sorted");
+    assert_eq!(got, expect, "{label}: not a permutation of the input");
+}
+
+fn run_two_level<K: GenKey + RadixKey>(
+    det_variant: bool,
+    bench: Benchmark,
+    seq: SeqSortKind,
+    gen_dup: bool,
+) -> (Vec<Vec<K>>, Vec<ProcResult<K>>, Ledger) {
+    let params = cray_t3d(P);
+    let machine = BspMachine::new(params);
+    let comm = Communicator::split_even(P, GROUPS);
+    let cfg = SortConfig::default().with_seq(seq);
+    let run = machine.run_keys::<K, _, _>(|ctx| {
+        let local: Vec<K> = if gen_dup {
+            generate_heavy_dup_for_proc(bench, ctx.pid(), P, N / P, 5)
+        } else {
+            generate_typed_for_proc(bench, ctx.pid(), P, N / P)
+        };
+        let input = local.clone();
+        let out = if det_variant {
+            multilevel::sort_multilevel_det(ctx, &comm, &params, local, N, &cfg)
+        } else {
+            multilevel::sort_multilevel_ran(ctx, &comm, &params, local, N, &cfg, 0xA2E5)
+        };
+        (input, out)
+    });
+    let inputs = run.outputs.iter().map(|(i, _)| i.clone()).collect();
+    let results = run.outputs.into_iter().map(|(_, r)| r).collect();
+    (inputs, results, run.ledger)
+}
+
+/// det2 + ran2 over one domain and benchmark, both sequential backends.
+fn run_domain<K: GenKey + RadixKey>(bench: Benchmark) {
+    for seq in [SeqSortKind::Quick, SeqSortKind::Radix] {
+        let (inputs, results, _) = run_two_level::<K>(true, bench, seq, false);
+        let outputs: Vec<Vec<K>> = results.iter().map(|r| r.keys.clone()).collect();
+        assert_sorted_permutation(
+            &inputs,
+            &outputs,
+            &format!("det2 {} {seq:?} {}", K::NAME, bench.tag()),
+        );
+
+        let (inputs, results, _) = run_two_level::<K>(false, bench, seq, false);
+        let outputs: Vec<Vec<K>> = results.iter().map(|r| r.keys.clone()).collect();
+        assert_sorted_permutation(
+            &inputs,
+            &outputs,
+            &format!("ran2 {} {seq:?} {}", K::NAME, bench.tag()),
+        );
+    }
+}
+
+/// Heavy-duplicate transparency through both levels, plus the ledger's
+/// group-locality evidence for the level-2 exchange phases.
+fn duplicate_transparency_and_group_locality<K: GenKey + RadixKey>() {
+    let (inputs, results, ledger) =
+        run_two_level::<K>(true, Benchmark::Uniform, SeqSortKind::Quick, true);
+    let outputs: Vec<Vec<K>> = results.iter().map(|r| r.keys.clone()).collect();
+    assert_sorted_permutation(&inputs, &outputs, &format!("det2 dup {}", K::NAME));
+    for (pid, r) in results.iter().enumerate() {
+        assert!(r.received > 0, "{} det2 pid={pid} starved", K::NAME);
+    }
+
+    // Level-1 routing is one whole-machine superstep moving every key
+    // once, bare keys only (no per-key tagging on the wire).
+    let l1: Vec<_> = ledger.supersteps.iter().filter(|s| s.label == "l1:route").collect();
+    assert_eq!(l1.len(), 1, "{}", K::NAME);
+    assert!(l1[0].round.is_none());
+    assert_eq!(l1[0].procs, P);
+    assert_eq!(l1[0].total_words, N as u64 * K::WORDS, "{}: level-1 tagged keys?", K::NAME);
+
+    // Level-2 routing: one group record per group, group-sized procs,
+    // each moving strictly less than the whole-machine route — and both
+    // together moving every key exactly once (bare keys again).
+    let l2: Vec<_> = ledger
+        .supersteps
+        .iter()
+        .filter(|s| s.label == "ph5:route" && s.round.is_some())
+        .collect();
+    assert_eq!(l2.len(), GROUPS, "{}", K::NAME);
+    for s in &l2 {
+        assert_eq!(s.procs, P / GROUPS, "{}", K::NAME);
+        assert_eq!(s.phase, "L2/Ph5:Routing");
+        assert!(
+            s.total_words < l1[0].total_words,
+            "{}: level-2 route {} words must be under the one-level {}",
+            K::NAME,
+            s.total_words,
+            l1[0].total_words
+        );
+        // h is bounded by what one group member can hold: the group's
+        // whole share is an upper bound.
+        assert!(s.h_words <= (N / GROUPS) as u64 * K::WORDS + P as u64);
+    }
+    let l2_total: u64 = l2.iter().map(|s| s.total_words).sum();
+    assert_eq!(l2_total, N as u64 * K::WORDS, "{}: level-2 tagged keys?", K::NAME);
+}
+
+#[test]
+fn det2_ran2_sort_i32_domain() {
+    run_domain::<i32>(Benchmark::Staggered);
+}
+
+#[test]
+fn det2_ran2_sort_u64_domain() {
+    run_domain::<u64>(Benchmark::Uniform);
+}
+
+#[test]
+fn det2_ran2_sort_f64_domain() {
+    run_domain::<F64>(Benchmark::Gaussian);
+}
+
+#[test]
+fn det2_ran2_sort_record_domain() {
+    run_domain::<Record>(Benchmark::Bucket);
+}
+
+#[test]
+fn duplicate_transparency_i32() {
+    duplicate_transparency_and_group_locality::<i32>();
+}
+
+#[test]
+fn duplicate_transparency_u64() {
+    duplicate_transparency_and_group_locality::<u64>();
+}
+
+#[test]
+fn duplicate_transparency_f64() {
+    duplicate_transparency_and_group_locality::<F64>();
+}
+
+#[test]
+fn duplicate_transparency_record() {
+    duplicate_transparency_and_group_locality::<Record>();
+}
+
+#[test]
+fn two_level_routes_fewer_words_per_superstep_than_one_level() {
+    // The acceptance comparison: on the SAME input, the one-level det
+    // sort's routing superstep moves all n words at once; every routing
+    // superstep of the two-level run (level 1 aside, which is priced at
+    // the same n but is the only whole-machine exchange) stays at the
+    // group-local share.  The ledger's phase comparison prices L2
+    // phases with the group-local machine.
+    let params = cray_t3d(P);
+    let machine = BspMachine::new(params);
+    let cfg = SortConfig::default();
+
+    let one = machine.run(|ctx| {
+        let local = generate_typed_for_proc::<i32>(Benchmark::Uniform, ctx.pid(), P, N / P);
+        det::sort_det_bsp(ctx, &params, local, N, &cfg)
+    });
+    let one_route = one
+        .ledger
+        .supersteps
+        .iter()
+        .find(|s| s.label == "ph5:route")
+        .expect("one-level route present");
+    assert_eq!(one_route.total_words, N as u64);
+
+    let comm = Communicator::split_even(P, GROUPS);
+    let two = machine.run(|ctx| {
+        let local = generate_typed_for_proc::<i32>(Benchmark::Uniform, ctx.pid(), P, N / P);
+        multilevel::sort_multilevel_det(ctx, &comm, &params, local, N, &cfg)
+    });
+    for s in two
+        .ledger
+        .supersteps
+        .iter()
+        .filter(|s| s.label == "ph5:route" && s.round.is_some())
+    {
+        assert!(
+            s.total_words < one_route.total_words,
+            "level-2 superstep words {} must be strictly under one-level {}",
+            s.total_words,
+            one_route.total_words
+        );
+    }
+
+    // Phase pricing: the L2 routing phase exists and is priced with the
+    // group-local machine — its per-round cost never exceeds what the
+    // full machine would charge for the same exchange.
+    let rows = two.ledger.phase_comparison(&params);
+    let l2_route = rows
+        .iter()
+        .find(|r| r.phase == "L2/Ph5:Routing")
+        .expect("L2 routing phase priced");
+    assert!(l2_route.predicted_secs > 0.0);
+    let l1_route = rows.iter().find(|r| r.phase == "Ph5:Routing").expect("L1 routing phase");
+    assert!(l1_route.predicted_secs > 0.0);
+}
