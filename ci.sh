@@ -1,5 +1,6 @@
 #!/usr/bin/env bash
-# Tier-1 gate plus hygiene checks.  Usage: ./ci.sh [--check-xla|--check-links]
+# Tier-1 gate plus hygiene checks.
+# Usage: ./ci.sh [--check-xla|--check-links|--conformance]
 #
 # This is what .github/workflows/ci.yml runs; keep it the single source
 # of truth for "does the repo pass".
@@ -11,6 +12,14 @@
 #                         `xla` crate (the default offline setup).
 #   ./ci.sh --check-links intra-repo markdown link check only (also part
 #                         of the default run)
+#   ./ci.sh --conformance release-mode run of the simulator-backend
+#                         conformance suite (seeded property tests at
+#                         p up to 1024 + backend equivalence).  The same
+#                         suite also runs (debug) inside `cargo test`;
+#                         this mode is the fast, large-p-focused CI job
+#                         — single-threaded virtual processors, so its
+#                         runtime does not depend on the host's core
+#                         count.
 set -euo pipefail
 cd "$(dirname "$0")"
 
@@ -45,6 +54,12 @@ check_links() {
 
 if [[ "${1:-}" == "--check-links" ]]; then
     check_links
+    exit 0
+fi
+
+if [[ "${1:-}" == "--conformance" ]]; then
+    echo "== conformance: simulator-backend property suite (release) =="
+    cargo test --release --test conformance -- --nocapture
     exit 0
 fi
 
@@ -111,7 +126,7 @@ smokedir=$(mktemp -d)
 cargo run --release --quiet -- experiment --quick --tag smoke --out "$smokedir"
 test -s "$smokedir/BENCH_smoke.json" || {
     echo "BENCH_smoke.json missing or empty" >&2; exit 1; }
-grep -q '"schema": "bsp-sort/experiment-report/v2"' "$smokedir/BENCH_smoke.json" || {
+grep -q '"schema": "bsp-sort/experiment-report/v3"' "$smokedir/BENCH_smoke.json" || {
     echo "schema tag missing from BENCH_smoke.json" >&2; exit 1; }
 test -s "$smokedir/BENCH_smoke.md" || {
     echo "BENCH_smoke.md missing or empty" >&2; exit 1; }

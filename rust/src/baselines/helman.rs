@@ -17,7 +17,7 @@
 //! **[40] randomized** — one sample round + one data round, but again
 //! with per-key tags doubling the routed words.
 
-use crate::bsp::engine::BspCtx;
+use crate::bsp::engine::BspScope;
 use crate::bsp::msg::{Payload, SampleRec};
 use crate::bsp::params::BspParams;
 use crate::key::{Key, RadixKey};
@@ -33,8 +33,10 @@ use super::super::sort::config::SortConfig;
 const TAG_WORDS_PER_KEY: usize = 2;
 
 /// Route `parts[i]` to processor `i`, charging `TAG_WORDS_PER_KEY` words
-/// per key (the tagged-communication model of [39]/[40]).
-fn route_tagged<K: Key>(ctx: &mut BspCtx<K>, parts: Vec<Vec<K>>, label: &str) -> Vec<Vec<K>> {
+/// per key (the tagged-communication model of [39]/[40]).  Generic over
+/// the [`BspScope`], like the sorts themselves, so the baselines run on
+/// the threaded engine and the deterministic simulator alike.
+fn route_tagged<K: Key, S: BspScope<K>>(ctx: &mut S, parts: Vec<Vec<K>>, label: &str) -> Vec<Vec<K>> {
     let p = ctx.nprocs();
     assert_eq!(parts.len(), p);
     for (dst, mut part) in parts.into_iter().enumerate() {
@@ -59,8 +61,8 @@ fn route_tagged<K: Key>(ctx: &mut BspCtx<K>, parts: Vec<Vec<K>>, label: &str) ->
 }
 
 /// The deterministic algorithm of [39] (two communication rounds).
-pub fn sort_helman_det<K: RadixKey>(
-    ctx: &mut BspCtx<K>,
+pub fn sort_helman_det<K: RadixKey, S: BspScope<K>>(
+    ctx: &mut S,
     params: &BspParams,
     mut local: Vec<K>,
     cfg: &SortConfig,
@@ -147,8 +149,8 @@ pub fn sort_helman_det<K: RadixKey>(
 
 /// The randomized algorithm of [40]: random sample → splitters → one
 /// tagged data round → local sort of the received keys.
-pub fn sort_helman_ran<K: RadixKey>(
-    ctx: &mut BspCtx<K>,
+pub fn sort_helman_ran<K: RadixKey, S: BspScope<K>>(
+    ctx: &mut S,
     params: &BspParams,
     mut local: Vec<K>,
     n_total: usize,

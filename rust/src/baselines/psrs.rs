@@ -10,7 +10,7 @@
 //! \[WR\] adversary drives its bucket expansion toward the 2·n/p regular
 //! sampling worst case.  Table 11 compares \[DSQ\] against this.
 
-use crate::bsp::engine::BspCtx;
+use crate::bsp::engine::BspScope;
 use crate::bsp::msg::{Payload, SampleRec};
 use crate::bsp::params::BspParams;
 use crate::key::RadixKey;
@@ -20,9 +20,10 @@ use crate::seq::{ops, search, SeqSorter};
 use super::super::sort::common::{ProcResult, PH2, PH3, PH4, PH5, PH6, PH7};
 use super::super::sort::config::SortConfig;
 
-/// Run PSRS on this processor's share of the input.
-pub fn sort_psrs<K: RadixKey>(
-    ctx: &mut BspCtx<K>,
+/// Run PSRS on this processor's share of the input.  Generic over the
+/// [`BspScope`], so it runs on either execution backend.
+pub fn sort_psrs<K: RadixKey, S: BspScope<K>>(
+    ctx: &mut S,
     params: &BspParams,
     mut local: Vec<K>,
     cfg: &SortConfig,

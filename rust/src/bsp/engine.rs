@@ -125,19 +125,20 @@ impl<K: Key> SlotMatrix<K> {
 /// Phase labels interned to dense ids, registered once per run, so the
 /// per-charge accounting is an array index instead of a string clone and
 /// hash.  `intern` is called only from [`BspCtx::phase`] (rare); the hot
-/// paths use the returned id.
-struct PhaseInterner {
+/// paths use the returned id.  Shared with the deterministic simulator
+/// backend (`bsp::sim`), which runs the same accounting single-threaded.
+pub(super) struct PhaseInterner {
     names: Mutex<Vec<String>>,
 }
 
 impl PhaseInterner {
-    fn new() -> PhaseInterner {
+    pub(super) fn new() -> PhaseInterner {
         PhaseInterner {
             names: Mutex::new(vec![PHASE_INIT.to_string()]),
         }
     }
 
-    fn intern(&self, name: &str) -> usize {
+    pub(super) fn intern(&self, name: &str) -> usize {
         let mut names = self.names.lock().unwrap();
         match names.iter().position(|n| n == name) {
             Some(id) => id,
@@ -148,7 +149,7 @@ impl PhaseInterner {
         }
     }
 
-    fn into_names(self) -> Vec<String> {
+    pub(super) fn into_names(self) -> Vec<String> {
         self.names.into_inner().unwrap()
     }
 }
@@ -167,23 +168,25 @@ struct World<K: Key> {
 
 /// Superstep accounting under construction: like [`SuperstepRecord`] but
 /// with the phase as an interned id; names are resolved once at run end.
+/// `pub(super)` so the simulator backend (`bsp::sim`) builds the *same*
+/// records through the *same* finalization ([`finalize_ledger`]).
 #[derive(Default)]
-struct SuperstepBuild {
-    label: String,
-    phase_id: usize,
-    max_ops: f64,
-    h_words: u64,
-    total_words: u64,
-    wall_us: f64,
-    reporters: usize,
+pub(super) struct SuperstepBuild {
+    pub(super) label: String,
+    pub(super) phase_id: usize,
+    pub(super) max_ops: f64,
+    pub(super) h_words: u64,
+    pub(super) total_words: u64,
+    pub(super) wall_us: f64,
+    pub(super) reporters: usize,
     /// Expected reporters: the whole machine for global supersteps, the
     /// group size for group-scoped ones.
-    procs: usize,
+    pub(super) procs: usize,
 }
 
 #[derive(Default)]
-struct LedgerBuilder {
-    supersteps: Vec<SuperstepBuild>,
+pub(super) struct LedgerBuilder {
+    pub(super) supersteps: Vec<SuperstepBuild>,
     /// Group-scoped superstep accumulators, keyed by
     /// `(communicator id, group-superstep index, group leader pid)`.
     /// Within one communicator, `(index, leader)` is collision-free
@@ -193,9 +196,9 @@ struct LedgerBuilder {
     /// from merging unrelated groups' records.  Records of one
     /// `(communicator, index)` pair ran concurrently on disjoint
     /// groups (one "round").
-    group_steps: std::collections::BTreeMap<(usize, usize, usize), SuperstepBuild>,
+    pub(super) group_steps: std::collections::BTreeMap<(usize, usize, usize), SuperstepBuild>,
     /// Phase accumulators indexed by interned phase id.
-    phases: Vec<PhaseRecord>,
+    pub(super) phases: Vec<PhaseRecord>,
 }
 
 /// A group-scoped view for one `sync`: which processors participate,
@@ -623,69 +626,84 @@ impl BspMachine {
 
         let builder = world.ledger.into_inner().unwrap();
         let names = world.phases.into_names();
-        let mut phase_recs = builder.phases;
-        phase_recs.resize_with(names.len(), Default::default);
-        let mut supersteps: Vec<SuperstepRecord> = builder
-            .supersteps
-            .into_iter()
-            .map(|b| SuperstepRecord {
-                label: b.label,
-                phase: names[b.phase_id].clone(),
-                max_ops: b.max_ops,
-                h_words: b.h_words,
-                total_words: b.total_words,
-                wall_us: b.wall_us,
-                reporters: b.reporters,
-                procs: b.procs,
-                round: None,
-            })
-            .collect();
-        // Group-scoped records follow the whole-machine ones.  Distinct
-        // `(communicator, group step)` pairs get dense `round` indices
-        // in key order: siblings of one round (same communicator, same
-        // step, different leaders) are adjacent and priced as
-        // concurrent; steps of different communicators never share a
-        // round, so sequential group phases add instead of max-reducing.
-        let mut round_ids: std::collections::BTreeMap<(usize, usize), usize> =
-            std::collections::BTreeMap::new();
-        for &(comm, step, _leader) in builder.group_steps.keys() {
-            let next = round_ids.len();
-            round_ids.entry((comm, step)).or_insert(next);
-        }
-        for ((comm, step, _leader), b) in builder.group_steps {
-            supersteps.push(SuperstepRecord {
-                label: b.label,
-                phase: names[b.phase_id].clone(),
-                max_ops: b.max_ops,
-                h_words: b.h_words,
-                total_words: b.total_words,
-                wall_us: b.wall_us,
-                reporters: b.reporters,
-                procs: b.procs,
-                round: Some(round_ids[&(comm, step)]),
-            });
-        }
-        debug_assert!(
-            supersteps.iter().all(|s| s.reporters == s.procs),
-            "SPMD violation: a superstep was not reported by all its participants"
-        );
-        let mut ledger = Ledger {
-            supersteps,
-            phases: names.into_iter().zip(phase_recs).collect(),
-            wall_us: started.elapsed().as_secs_f64() * 1e6,
-        };
-        // Attribute superstep h-volumes to phases post-hoc (max over the
-        // per-superstep h of each phase is less meaningful than the sum).
-        for s in &ledger.supersteps {
-            if let Some(phase) = ledger.phases.get_mut(&s.phase) {
-                phase.h_words += s.h_words;
-            }
-        }
+        let ledger = finalize_ledger(builder, names, started.elapsed().as_secs_f64() * 1e6);
         BspRun {
             outputs: outputs.into_iter().map(|o| o.unwrap()).collect(),
             ledger,
         }
     }
+}
+
+/// Materialize a finished [`LedgerBuilder`] into the public [`Ledger`]:
+/// resolve interned phase names, assign dense `round` indices to
+/// group-scoped records, and attribute superstep h-volumes to phases.
+///
+/// Shared by both execution backends — the threaded engine
+/// ([`BspMachine::run_keys`]) and the deterministic simulator
+/// (`bsp::sim::SimMachine`) — so predicted-vs-charged accounting is
+/// identical regardless of whether the records were reported by `p`
+/// concurrently-running threads or by one thread stepping `p` virtual
+/// processors.
+pub(super) fn finalize_ledger(builder: LedgerBuilder, names: Vec<String>, wall_us: f64) -> Ledger {
+    let mut phase_recs = builder.phases;
+    phase_recs.resize_with(names.len(), Default::default);
+    let mut supersteps: Vec<SuperstepRecord> = builder
+        .supersteps
+        .into_iter()
+        .map(|b| SuperstepRecord {
+            label: b.label,
+            phase: names[b.phase_id].clone(),
+            max_ops: b.max_ops,
+            h_words: b.h_words,
+            total_words: b.total_words,
+            wall_us: b.wall_us,
+            reporters: b.reporters,
+            procs: b.procs,
+            round: None,
+        })
+        .collect();
+    // Group-scoped records follow the whole-machine ones.  Distinct
+    // `(communicator, group step)` pairs get dense `round` indices
+    // in key order: siblings of one round (same communicator, same
+    // step, different leaders) are adjacent and priced as
+    // concurrent; steps of different communicators never share a
+    // round, so sequential group phases add instead of max-reducing.
+    let mut round_ids: std::collections::BTreeMap<(usize, usize), usize> =
+        std::collections::BTreeMap::new();
+    for &(comm, step, _leader) in builder.group_steps.keys() {
+        let next = round_ids.len();
+        round_ids.entry((comm, step)).or_insert(next);
+    }
+    for ((comm, step, _leader), b) in builder.group_steps {
+        supersteps.push(SuperstepRecord {
+            label: b.label,
+            phase: names[b.phase_id].clone(),
+            max_ops: b.max_ops,
+            h_words: b.h_words,
+            total_words: b.total_words,
+            wall_us: b.wall_us,
+            reporters: b.reporters,
+            procs: b.procs,
+            round: Some(round_ids[&(comm, step)]),
+        });
+    }
+    debug_assert!(
+        supersteps.iter().all(|s| s.reporters == s.procs),
+        "SPMD violation: a superstep was not reported by all its participants"
+    );
+    let mut ledger = Ledger {
+        supersteps,
+        phases: names.into_iter().zip(phase_recs).collect(),
+        wall_us,
+    };
+    // Attribute superstep h-volumes to phases post-hoc (max over the
+    // per-superstep h of each phase is less meaningful than the sum).
+    for s in &ledger.supersteps {
+        if let Some(phase) = ledger.phases.get_mut(&s.phase) {
+            phase.h_words += s.h_words;
+        }
+    }
+    ledger
 }
 
 #[cfg(test)]

@@ -42,46 +42,43 @@ use crate::key::Key;
 use super::engine::{BspCtx, BspScope, GroupScope};
 use super::msg::Payload;
 
-/// Process-wide communicator id source: every [`Communicator`] gets a
-/// distinct id so the ledger can key group records by
-/// `(communicator, group step, leader)` — a program that uses several
-/// communicators in sequence (even with diverging per-group superstep
-/// counts in between) never merges unrelated groups' records.
+/// Process-wide communicator id source: every [`Communicator`] (and
+/// every `bsp::sim::SimCommunicator`) gets a distinct id so the ledger
+/// can key group records by `(communicator, group step, leader)` — a
+/// program that uses several communicators in sequence (even with
+/// diverging per-group superstep counts in between) never merges
+/// unrelated groups' records.
 static NEXT_COMM_ID: AtomicUsize = AtomicUsize::new(0);
 
-/// A partition of the `p`-processor machine into disjoint groups.
+/// Draw a fresh process-unique communicator id (shared counter with the
+/// simulator backend's communicators).
+pub(super) fn next_comm_id() -> usize {
+    NEXT_COMM_ID.fetch_add(1, Ordering::Relaxed)
+}
+
+/// The backend-independent part of a communicator: a validated partition
+/// of `0..p` into disjoint, ascending member lists, with pid → group and
+/// pid → rank indices.
 ///
-/// Construct once (outside `BspMachine::run`, so all threads share it),
-/// then have every processor [`Communicator::enter`] its group inside
-/// the SPMD program.  Groups are static for the communicator's
-/// lifetime; a program may use several communicators in sequence.
-pub struct Communicator {
-    /// Process-unique id (ledger key component for group records).
-    id: usize,
+/// [`Communicator`] (threaded engine) adds per-group barriers and
+/// superstep counters on top; `bsp::sim::SimCommunicator` (deterministic
+/// simulator) needs only the partition itself.
+pub struct GroupMap {
     /// Global pids per group, each sorted ascending.
     groups: Vec<Vec<usize>>,
     /// pid → group index.
     group_of: Vec<usize>,
     /// pid → rank within its group.
     rank_of: Vec<usize>,
-    /// One barrier per group, sized to the group.
-    barriers: Vec<Barrier>,
-    /// One superstep counter per group, owned by the communicator and
-    /// advanced by the barrier leader of each group sync.  Keying ledger
-    /// records off these (instead of any per-thread counter) keeps the
-    /// accounting correct even when sibling groups run different
-    /// numbers of group supersteps and the threads are later regrouped
-    /// by another communicator.
-    steps: Vec<AtomicUsize>,
 }
 
-impl Communicator {
+impl GroupMap {
     /// Split `p` processors into `num_groups` contiguous blocks of
     /// near-equal size (the first `p % num_groups` groups take one
     /// extra processor).  Contiguous blocks keep pid order consistent
     /// with group order, so a sort that routes ascending key ranges to
     /// ascending groups stays globally sorted in pid order.
-    pub fn split_even(p: usize, num_groups: usize) -> Communicator {
+    pub fn split_even(p: usize, num_groups: usize) -> GroupMap {
         assert!(num_groups >= 1, "need at least one group");
         assert!(num_groups <= p, "cannot split {p} processors into {num_groups} groups");
         let base = p / num_groups;
@@ -93,13 +90,13 @@ impl Communicator {
             groups.push((next..next + size).collect());
             next += size;
         }
-        Communicator::from_groups(groups)
+        GroupMap::from_groups(groups)
     }
 
-    /// Build a communicator from explicit member lists.  The lists must
-    /// be non-empty, sorted ascending, and together form a disjoint
-    /// cover of `0..p` where `p` is the total member count.
-    pub fn from_groups(groups: Vec<Vec<usize>>) -> Communicator {
+    /// Build a partition from explicit member lists.  The lists must be
+    /// non-empty, sorted ascending, and together form a disjoint cover
+    /// of `0..p` where `p` is the total member count.
+    pub fn from_groups(groups: Vec<Vec<usize>>) -> GroupMap {
         let p: usize = groups.iter().map(|g| g.len()).sum();
         assert!(p > 0, "communicator must cover at least one processor");
         let mut group_of = vec![usize::MAX; p];
@@ -121,16 +118,7 @@ impl Communicator {
                 rank_of[pid] = rank;
             }
         }
-        let barriers = groups.iter().map(|m| Barrier::new(m.len())).collect();
-        let steps = groups.iter().map(|_| AtomicUsize::new(0)).collect();
-        Communicator {
-            id: NEXT_COMM_ID.fetch_add(1, Ordering::Relaxed),
-            groups,
-            group_of,
-            rank_of,
-            barriers,
-            steps,
-        }
+        GroupMap { groups, group_of, rank_of }
     }
 
     /// Total processors covered by the partition.
@@ -161,6 +149,165 @@ impl Communicator {
     /// `pid`'s rank within its group.
     pub fn rank_of(&self, pid: usize) -> usize {
         self.rank_of[pid]
+    }
+}
+
+/// The partition interface the multi-level sorts are generic over: any
+/// backend's communicator exposes its [`GroupMap`], and the accessors
+/// below are provided from it.  Implemented by [`Communicator`]
+/// (threaded engine) and `bsp::sim::SimCommunicator` (deterministic
+/// simulator), so `sort::multilevel` runs unmodified on either backend.
+pub trait GroupPartition {
+    /// Build the contiguous near-even partition (see
+    /// [`GroupMap::split_even`]) as this backend's communicator.
+    fn split_even(p: usize, num_groups: usize) -> Self
+    where
+        Self: Sized;
+
+    /// The underlying partition.
+    fn map(&self) -> &GroupMap;
+
+    /// Total processors covered by the partition.
+    fn nprocs(&self) -> usize {
+        self.map().nprocs()
+    }
+
+    /// Number of groups.
+    fn num_groups(&self) -> usize {
+        self.map().num_groups()
+    }
+
+    /// Global pids of `group`, sorted ascending (rank order).
+    fn members(&self, group: usize) -> &[usize] {
+        self.map().members(group)
+    }
+
+    /// Size of `group`.
+    fn group_size(&self, group: usize) -> usize {
+        self.map().group_size(group)
+    }
+
+    /// The group index of global `pid`.
+    fn group_of(&self, pid: usize) -> usize {
+        self.map().group_of(pid)
+    }
+
+    /// `pid`'s rank within its group.
+    fn rank_of(&self, pid: usize) -> usize {
+        self.map().rank_of(pid)
+    }
+}
+
+/// A [`BspScope`] that can be narrowed to one processor group of a
+/// partitioned machine — the capability the two-level sorts
+/// (`sort::multilevel`) require of their execution scope.
+///
+/// `Comm` ties a scope to its backend's communicator type
+/// ([`Communicator`] for the threaded [`BspCtx`],
+/// `bsp::sim::SimCommunicator` for the simulator's `SimCtx`), so the
+/// same generic program text runs on either backend while each backend
+/// supplies its own group synchronization machinery.
+pub trait GroupedScope<K: Key>: BspScope<K> {
+    /// The backend's communicator type.
+    type Comm: GroupPartition;
+    /// The group-scoped scope produced by [`GroupedScope::enter_group`].
+    type Group<'a>: BspScope<K>
+    where
+        Self: 'a;
+
+    /// Enter this processor's group of `comm`: every subsequent
+    /// `pid`/`nprocs`/`send`/`sync` through the returned scope is
+    /// group-local.  `phase_prefix` is prepended to phase labels entered
+    /// through the group scope (`""` keeps them unchanged).
+    fn enter_group<'a>(&'a mut self, comm: &'a Self::Comm, phase_prefix: &str)
+        -> Self::Group<'a>;
+}
+
+/// A partition of the `p`-processor machine into disjoint groups, with
+/// the threaded engine's synchronization resources (one [`Barrier`] and
+/// one superstep counter per group).
+///
+/// Construct once (outside `BspMachine::run`, so all threads share it),
+/// then have every processor [`Communicator::enter`] its group inside
+/// the SPMD program.  Groups are static for the communicator's
+/// lifetime; a program may use several communicators in sequence.
+pub struct Communicator {
+    /// Process-unique id (ledger key component for group records).
+    id: usize,
+    /// The backend-independent partition.
+    map: GroupMap,
+    /// One barrier per group, sized to the group.
+    barriers: Vec<Barrier>,
+    /// One superstep counter per group, owned by the communicator and
+    /// advanced by the barrier leader of each group sync.  Keying ledger
+    /// records off these (instead of any per-thread counter) keeps the
+    /// accounting correct even when sibling groups run different
+    /// numbers of group supersteps and the threads are later regrouped
+    /// by another communicator.
+    steps: Vec<AtomicUsize>,
+}
+
+impl GroupPartition for Communicator {
+    fn split_even(p: usize, num_groups: usize) -> Communicator {
+        Communicator::from_map(GroupMap::split_even(p, num_groups))
+    }
+
+    fn map(&self) -> &GroupMap {
+        &self.map
+    }
+}
+
+impl Communicator {
+    /// Split `p` processors into `num_groups` contiguous near-even
+    /// blocks ([`GroupMap::split_even`]).
+    pub fn split_even(p: usize, num_groups: usize) -> Communicator {
+        Communicator::from_map(GroupMap::split_even(p, num_groups))
+    }
+
+    /// Build a communicator from explicit member lists
+    /// ([`GroupMap::from_groups`] validation applies).
+    pub fn from_groups(groups: Vec<Vec<usize>>) -> Communicator {
+        Communicator::from_map(GroupMap::from_groups(groups))
+    }
+
+    /// Wrap a validated partition with this engine's per-group barriers
+    /// and superstep counters.
+    pub fn from_map(map: GroupMap) -> Communicator {
+        let barriers = (0..map.num_groups())
+            .map(|g| Barrier::new(map.group_size(g)))
+            .collect();
+        let steps = (0..map.num_groups()).map(|_| AtomicUsize::new(0)).collect();
+        Communicator { id: next_comm_id(), map, barriers, steps }
+    }
+
+    /// Total processors covered by the partition.
+    pub fn nprocs(&self) -> usize {
+        self.map.nprocs()
+    }
+
+    /// Number of groups.
+    pub fn num_groups(&self) -> usize {
+        self.map.num_groups()
+    }
+
+    /// Global pids of `group`, sorted ascending (rank order).
+    pub fn members(&self, group: usize) -> &[usize] {
+        self.map.members(group)
+    }
+
+    /// Size of `group`.
+    pub fn group_size(&self, group: usize) -> usize {
+        self.map.group_size(group)
+    }
+
+    /// The group index of global `pid`.
+    pub fn group_of(&self, pid: usize) -> usize {
+        self.map.group_of(pid)
+    }
+
+    /// `pid`'s rank within its group.
+    pub fn rank_of(&self, pid: usize) -> usize {
+        self.map.rank_of(pid)
     }
 
     /// Enter this processor's group: wrap `ctx` into a group-scoped
@@ -264,6 +411,22 @@ impl<K: Key> BspScope<K> for GroupCtx<'_, '_, K> {
             .into_iter()
             .map(|(src, payload)| (self.comm.rank_of(src), payload))
             .collect()
+    }
+}
+
+impl<'w, K: Key> GroupedScope<K> for BspCtx<'w, K> {
+    type Comm = Communicator;
+    type Group<'a>
+        = GroupCtx<'a, 'w, K>
+    where
+        Self: 'a;
+
+    fn enter_group<'a>(
+        &'a mut self,
+        comm: &'a Communicator,
+        phase_prefix: &str,
+    ) -> GroupCtx<'a, 'w, K> {
+        comm.enter(self, phase_prefix)
     }
 }
 

@@ -137,19 +137,34 @@ pub struct PhaseComparison {
 impl Ledger {
     /// The concurrency-aware reduction shared by every total: sum the
     /// whole-machine records' `cost`, and for group-scoped records sum
-    /// the per-round *max* over siblings — disjoint groups sharing a
-    /// round index ran concurrently, so their costs overlap instead of
-    /// adding (the multi-level sorts' level-2 phases run one sort per
-    /// group in parallel).
+    /// the per-`(round, phase)` *max* over siblings — disjoint groups
+    /// sharing a round index ran concurrently, so their costs overlap
+    /// instead of adding (the multi-level sorts' level-2 phases run one
+    /// sort per group in parallel).
+    ///
+    /// The reduction keys on `(round, phase)` rather than the round
+    /// alone, for two reasons.  Siblings of one round that are in the
+    /// *same* phase genuinely overlap and max-reduce.  Siblings in
+    /// *different* phases (uneven group sizes drift apart: a smaller
+    /// group can already be routing while its sibling still sample-sorts
+    /// at the same group-superstep index) are conservatively added —
+    /// which aligns the totals with [`Ledger::phase_predicted_secs`],
+    /// whose per-`(round, phase)` communication attribution cannot
+    /// overlap across phases.  The old round-only keying silently
+    /// assumed every round's siblings share a phase — an assumption a
+    /// single-threaded backend (`bsp::sim`), which reports every record
+    /// from one thread under virtual round indices, makes easy to
+    /// violate and to regression-test (see
+    /// `mixed_phase_rounds_price_consistently_from_one_thread`).
     fn fold_concurrent(&self, cost: impl Fn(&SuperstepRecord) -> f64) -> f64 {
         let mut total = 0.0;
-        let mut rounds: BTreeMap<usize, f64> = BTreeMap::new();
+        let mut rounds: BTreeMap<(usize, &str), f64> = BTreeMap::new();
         for s in &self.supersteps {
             let c = cost(s);
             match s.round {
                 None => total += c,
                 Some(r) => {
-                    let e = rounds.entry(r).or_default();
+                    let e = rounds.entry((r, s.phase.as_str())).or_default();
                     *e = e.max(c);
                 }
             }
@@ -378,6 +393,55 @@ mod tests {
             "L2/Ph5={} expect={expect}",
             by_phase["L2/Ph5"]
         );
+    }
+
+    #[test]
+    fn mixed_phase_rounds_price_consistently_from_one_thread() {
+        // Regression for the single-thread (simulator) record shape:
+        // every record arrives from one thread carrying *virtual* round
+        // indices, interleaved with whole-machine records rather than
+        // appended after them, and one round's siblings sit in
+        // different phases (uneven groups drift apart).  The old
+        // round-only max-reduction priced that round as one maximum,
+        // while the phase table attributed both phases — the totals and
+        // the phase breakdown disagreed.
+        let params = cray_t3d(16);
+        let mut ledger = Ledger::default();
+        // Interleaved arrival order: global, sibling A, global, sibling B.
+        ledger.supersteps.push(mk("g1", "Ph4", 0.0, 0));
+        ledger.supersteps.push(mk_group(0, "L2/Ph4", 0.0, 200_000, 8));
+        ledger.supersteps.push(mk("g2", "Ph4", 0.0, 0));
+        ledger.supersteps.push(mk_group(0, "L2/Ph5", 0.0, 300_000, 8));
+        let scaled = params.scaled_to(8);
+        let expect_round = scaled.superstep_cost_us(0.0, 200_000)
+            + scaled.superstep_cost_us(0.0, 300_000);
+        let expect_total = 2.0 * params.l_us + expect_round;
+        let t = ledger.predicted_us(&params);
+        assert!(
+            (t - expect_total).abs() < 1e-9,
+            "mixed-phase siblings must add, not max-reduce: t={t} expect={expect_total}"
+        );
+        // The phase table attributes each sibling's communication to its
+        // own phase, and the two views agree on the total.
+        let by_phase = ledger.phase_predicted_secs(&params);
+        let table_total: f64 = by_phase.values().sum::<f64>() * 1e6;
+        assert!(
+            (table_total - expect_total).abs() < 1e-9,
+            "phase table {table_total} vs total {expect_total}"
+        );
+        assert!(by_phase["L2/Ph4"] > 0.0 && by_phase["L2/Ph5"] > 0.0);
+        // Same-phase siblings still overlap (max-reduce), regardless of
+        // where they sit in the record stream.
+        ledger.supersteps.insert(1, mk_group(0, "L2/Ph4", 0.0, 150_000, 8));
+        let t2 = ledger.predicted_us(&params);
+        assert!(
+            (t2 - expect_total).abs() < 1e-9,
+            "a smaller same-phase sibling must be absorbed by the max: t2={t2}"
+        );
+        // And phase_comparison stays well-formed on this shape.
+        for row in ledger.phase_comparison(&params) {
+            assert!(row.predicted_secs >= 0.0 && row.wall_secs >= 0.0);
+        }
     }
 
     #[test]

@@ -7,7 +7,11 @@
 //!   [`BspScope`] contract the algorithms are generic over,
 //! * [`group`] — processor-group communicators: disjoint sub-machines
 //!   with group ranks, group barriers and group-scoped message delivery
-//!   (the substrate of the multi-level sorts).
+//!   (the substrate of the multi-level sorts),
+//! * [`sim`] — the deterministic single-process simulator backend:
+//!   the same SPMD programs on virtual processors with virtual time,
+//!   bit-for-bit reproducible at any `p` (the conformance suite's
+//!   substrate at `p` up to 1024).
 //!
 //! The same program runs *really* (threads, genuine data movement) and is
 //! priced *predictively* (`max{L, x + g·h}` per superstep), which is how
@@ -18,9 +22,47 @@ pub mod group;
 pub mod ledger;
 pub mod msg;
 pub mod params;
+pub mod sim;
 
 pub use engine::{BspCtx, BspMachine, BspRun, BspScope};
-pub use group::{Communicator, GroupCtx};
+pub use group::{Communicator, GroupCtx, GroupMap, GroupPartition, GroupedScope};
 pub use ledger::{Ledger, PhaseComparison, PhaseRecord, SuperstepRecord};
 pub use msg::{Payload, SampleRec};
 pub use params::{cray_t3d, BspParams};
+pub use sim::{SimCommunicator, SimCtx, SimGroupCtx, SimMachine, SkewSpec};
+
+/// Which execution backend runs an SPMD program: the threaded engine
+/// (real threads, measured wall-clock) or the deterministic simulator
+/// (one process, virtual processors, virtual time — reproducible at any
+/// `p`).  Threaded through `sort::config`, `experiment::spec`/`run` and
+/// the CLI's `--backend` flag.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Backend {
+    /// `bsp::engine::BspMachine` — `p` OS threads, genuine contention.
+    #[default]
+    Threaded,
+    /// `bsp::sim::SimMachine` — deterministic single-process simulator.
+    Sim,
+}
+
+/// Every backend, in report order.
+pub const ALL_BACKENDS: [Backend; 2] = [Backend::Threaded, Backend::Sim];
+
+impl Backend {
+    /// Stable CLI/report tag (`threaded`, `sim`).
+    pub fn tag(&self) -> &'static str {
+        match self {
+            Backend::Threaded => "threaded",
+            Backend::Sim => "sim",
+        }
+    }
+
+    /// Parse a CLI/report tag; `None` for unknown tags.
+    pub fn parse(s: &str) -> Option<Backend> {
+        match s.to_ascii_lowercase().as_str() {
+            "threaded" | "engine" | "thread" => Some(Backend::Threaded),
+            "sim" | "simulator" | "simulated" => Some(Backend::Sim),
+            _ => None,
+        }
+    }
+}

@@ -1,0 +1,1293 @@
+//! Deterministic single-process BSP simulator backend ([`SimMachine`]).
+//!
+//! The threaded engine (`bsp::engine`) executes SPMD programs *really*:
+//! `p` OS threads, barriers, genuine contention.  That is the right
+//! default for measurement, but it caps the testable `p` at what the
+//! host can schedule and makes failures timing-dependent.  The simulator
+//! runs the *same* SPMD programs against the same [`BspScope`] contract
+//! with **virtual processors driven one at a time**: each virtual
+//! processor is advanced to its next `sync` boundary, then the scheduler
+//! delivers the staged mailboxes in sender-rank order and advances the
+//! superstep.  There are no barriers and no concurrency anywhere in the
+//! schedule — exactly one virtual processor is ever runnable, handed the
+//! baton in ascending pid order — so a run is **bit-for-bit
+//! deterministic** given its seeds, at any `p` (the conformance suite
+//! drives every sort variant to `p = 1024`).
+//!
+//! Mechanically, each virtual processor's program frame lives on a
+//! parked carrier thread that is used purely as a coroutine stack: a
+//! carrier runs only while it holds the baton, parks at every `sync`,
+//! and the commit of a superstep (performed by its last arriver) wakes
+//! the lowest-pid participant next.  The OS never gets to make a
+//! scheduling decision that is observable by the program.
+//!
+//! **Time is virtual.**  `charge` advances a per-processor virtual clock
+//! at the machine's calibrated rate, a superstep boundary advances every
+//! participant to `max(arrival clocks) + max{L, g·h}`, and all
+//! `wall_us` fields of the resulting [`Ledger`](crate::bsp::Ledger) are virtual
+//! microseconds — deterministic, replayable, and still shaped like a
+//! real execution.  Charged-op and word accounting is byte-identical to
+//! the threaded engine: the simulator fills the same ledger builder and
+//! runs the same finalization (`bsp::engine::finalize_ledger`), which
+//! the backend-equivalence test in `tests/conformance.rs` pins.
+//!
+//! **Fault/skew injection.**  [`SimMachine::with_skew`] installs seeded
+//! per-processor virtual-time multipliers: processor `i` computes
+//! `skew_i ∈ [1, 1 + max_skew]` times slower than the machine rate.
+//! Charges (and therefore predictions) are untouched — only the virtual
+//! wall clock stretches — so the ledger's measured-vs-predicted ratios
+//! and per-phase imbalance can be exercised under controlled,
+//! reproducible skew.
+//!
+//! Group story: [`SimCommunicator`] is the simulator's communicator —
+//! the same validated [`GroupMap`] partition as the threaded
+//! [`Communicator`](crate::bsp::group::Communicator), minus the barriers
+//! (the scheduler itself synchronizes a group when all members arrive).
+//! `SimCtx` implements [`GroupedScope`], so the two-level sorts
+//! (`sort::multilevel`) run unmodified.
+
+#![warn(missing_docs)]
+
+use std::collections::BTreeMap;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::{Condvar, Mutex, MutexGuard};
+
+use crate::key::Key;
+use crate::util::rng::SplitMix64;
+
+use super::engine::{finalize_ledger, BspRun, BspScope, LedgerBuilder, PhaseInterner};
+use super::group::{next_comm_id, GroupMap, GroupPartition, GroupedScope};
+use super::msg::Payload;
+use super::params::BspParams;
+
+/// Panic payload used by virtual processors halted because a *sibling*
+/// panicked first; the machine re-raises the original cause instead.
+const SECONDARY_HALT: &str = "SimMachine: halted after a sibling virtual processor panicked";
+
+/// Seeded per-processor virtual-time skew: processor `i` runs its
+/// compute `m_i ∈ [1, 1 + max_skew]` times slower than the machine
+/// rate, with `m_i` drawn deterministically from `seed`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SkewSpec {
+    /// Seed of the multiplier stream (one draw per processor).
+    pub seed: u64,
+    /// Upper bound of the extra slowdown; `0.0` disables skew.
+    pub max_skew: f64,
+}
+
+/// The deterministic simulator machine: same parameters and run API as
+/// `BspMachine`, single-threaded semantics, virtual time.
+pub struct SimMachine {
+    /// The machine parameters: `p` virtual processors, and the
+    /// `(L, g, rate)` used both for pricing and for the virtual clock.
+    pub params: BspParams,
+    skew: Option<SkewSpec>,
+}
+
+impl SimMachine {
+    /// A simulator for the given machine parameters, no skew.
+    pub fn new(params: BspParams) -> SimMachine {
+        SimMachine { params, skew: None }
+    }
+
+    /// Install seeded per-processor virtual-time multipliers.
+    pub fn with_skew(mut self, skew: SkewSpec) -> SimMachine {
+        self.skew = Some(skew);
+        self
+    }
+
+    /// The per-processor virtual-time multipliers this machine runs
+    /// with (all `1.0` without [`SimMachine::with_skew`]).
+    pub fn skew_multipliers(&self) -> Vec<f64> {
+        let p = self.params.p;
+        match self.skew {
+            None => vec![1.0; p],
+            Some(s) => (0..p)
+                .map(|pid| {
+                    let mut rng = SplitMix64::new(
+                        s.seed ^ (pid as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                    );
+                    let u01 = (rng.next_u64() >> 11) as f64 / (1u64 << 53) as f64;
+                    1.0 + s.max_skew.max(0.0) * u01
+                })
+                .collect(),
+        }
+    }
+
+    /// Execute `program` on `p` *virtual* processors with the default
+    /// `i32` key domain; returns outputs in pid order plus the
+    /// superstep/phase ledger (wall fields in virtual µs).
+    pub fn run<T, F>(&self, program: F) -> BspRun<T>
+    where
+        T: Send,
+        F: Fn(&mut SimCtx) -> T + Sync,
+    {
+        self.run_keys::<i32, T, F>(program)
+    }
+
+    /// As [`SimMachine::run`] with an explicit payload key domain `K` —
+    /// the simulator twin of `BspMachine::run_keys`.
+    pub fn run_keys<K, T, F>(&self, program: F) -> BspRun<T>
+    where
+        K: Key,
+        T: Send,
+        F: Fn(&mut SimCtx<K>) -> T + Sync,
+    {
+        let p = self.params.p;
+        assert!(p >= 1, "a machine needs at least one processor");
+        let world = SimWorld::<K> {
+            p,
+            params: self.params,
+            skew: self.skew_multipliers(),
+            phases: PhaseInterner::new(),
+            parked: (0..p).map(|_| ParkSlot::new()).collect(),
+            state: Mutex::new(SimState::new(p)),
+        };
+        let mut outputs: Vec<Option<T>> = (0..p).map(|_| None).collect();
+        let mut panics: Vec<Box<dyn std::any::Any + Send>> = Vec::new();
+
+        std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(p);
+            for pid in 0..p {
+                let world_ref = &world;
+                let program_ref = &program;
+                handles.push(scope.spawn(move || carrier(world_ref, program_ref, pid)));
+            }
+            // Hand the first baton to virtual processor 0; everything
+            // after this is the deterministic cooperative schedule.
+            world.parked[0].wake();
+            for (pid, h) in handles.into_iter().enumerate() {
+                match h.join() {
+                    Ok(out) => outputs[pid] = Some(out),
+                    Err(e) => panics.push(e),
+                }
+            }
+        });
+
+        if !panics.is_empty() {
+            // Re-raise the original cause, not a secondary halt.
+            let primary = panics
+                .iter()
+                .position(|e| e.downcast_ref::<&'static str>() != Some(&SECONDARY_HALT))
+                .unwrap_or(0);
+            resume_unwind(panics.swap_remove(primary));
+        }
+
+        let st = world.state.into_inner().unwrap_or_else(|e| e.into_inner());
+        let names = world.phases.into_names();
+        let ledger = finalize_ledger(st.builder, names, st.final_vt);
+        BspRun {
+            outputs: outputs.into_iter().map(|o| o.unwrap()).collect(),
+            ledger,
+        }
+    }
+}
+
+/// One virtual processor's carrier-thread body: wait for the first
+/// baton, run the program to completion, hand the baton on.
+fn carrier<K, T, F>(world: &SimWorld<K>, program: &F, pid: usize) -> T
+where
+    K: Key,
+    T: Send,
+    F: Fn(&mut SimCtx<K>) -> T + Sync,
+{
+    world.parked[pid].wait();
+    let result = catch_unwind(AssertUnwindSafe(|| {
+        check_poison(world);
+        let p = world.p;
+        let mut ctx = SimCtx {
+            pid,
+            world,
+            staged: (0..p).map(|_| Vec::new()).collect(),
+            staged_dsts: Vec::new(),
+            sent_words: 0,
+            inbox: Vec::new(),
+            superstep: 0,
+            ops: 0.0,
+            vt_us: 0.0,
+            sync_vt: 0.0,
+            phase_id: 0,
+            phase_ops: vec![0.0],
+            phase_vt: vec![0.0],
+            phase_mark_vt: 0.0,
+        };
+        let out = program(&mut ctx);
+        ctx.finish();
+        out
+    }));
+    match result {
+        Ok(out) => {
+            retire(world, pid);
+            out
+        }
+        Err(e) => {
+            // Poison the machine so parked siblings halt instead of
+            // waiting forever, then re-raise the original panic.
+            poison_and_wake(
+                world,
+                format!("virtual processor {pid} panicked; see its panic message"),
+            );
+            resume_unwind(e);
+        }
+    }
+}
+
+/// Mark `pid` finished and pass the baton to the lowest runnable
+/// processor; detect the structural SPMD violation where unfinished
+/// processors remain but none can ever run again.
+fn retire<K: Key>(world: &SimWorld<K>, pid: usize) {
+    let mut st = world.lock_state();
+    st.proc[pid] = ProcState::Finished;
+    match next_runnable(&st) {
+        Some(q) => {
+            drop(st);
+            world.parked[q].wake();
+        }
+        None => {
+            if !st.proc.iter().all(|s| *s == ProcState::Finished) {
+                let diag = describe_stall(&st, world.p);
+                st.poison.get_or_insert(diag.clone());
+                drop(st);
+                wake_all(world);
+                panic!("SPMD structural violation: {diag}");
+            }
+        }
+    }
+}
+
+fn next_runnable<K: Key>(st: &SimState<K>) -> Option<usize> {
+    st.proc.iter().position(|s| *s == ProcState::Runnable)
+}
+
+fn check_poison<K: Key>(world: &SimWorld<K>) {
+    let st = world.lock_state();
+    if st.poison.is_some() {
+        drop(st);
+        std::panic::panic_any(SECONDARY_HALT);
+    }
+}
+
+fn poison_and_wake<K: Key>(world: &SimWorld<K>, msg: String) {
+    {
+        let mut st = world.lock_state();
+        st.poison.get_or_insert(msg);
+    }
+    wake_all(world);
+}
+
+fn wake_all<K: Key>(world: &SimWorld<K>) {
+    for slot in &world.parked {
+        slot.wake();
+    }
+}
+
+fn describe_stall<K: Key>(st: &SimState<K>, p: usize) -> String {
+    let mut parts: Vec<String> = Vec::new();
+    for (key, pend) in &st.pending {
+        let arrived: Vec<usize> = pend.arrivals.iter().map(|a| a.pid).collect();
+        let missing: Vec<usize> = pend
+            .members
+            .iter()
+            .copied()
+            .filter(|m| !arrived.contains(m))
+            .collect();
+        parts.push(format!(
+            "sync {:?} (scope {key:?}) is waiting for processors {missing:?}",
+            pend.label
+        ));
+    }
+    if parts.is_empty() {
+        parts.push(format!(
+            "processors {:?} neither finished nor reached a sync",
+            (0..p).filter(|&q| st.proc[q] != ProcState::Finished).collect::<Vec<_>>()
+        ));
+    }
+    parts.join("; ")
+}
+
+/// A targeted wakeup slot: the baton.  `wake` never loses a wakeup even
+/// when it lands before the matching `wait`.
+struct ParkSlot {
+    go: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl ParkSlot {
+    fn new() -> ParkSlot {
+        ParkSlot { go: Mutex::new(false), cv: Condvar::new() }
+    }
+
+    fn wake(&self) {
+        let mut go = self.go.lock().unwrap_or_else(|e| e.into_inner());
+        *go = true;
+        self.cv.notify_one();
+    }
+
+    fn wait(&self) {
+        let mut go = self.go.lock().unwrap_or_else(|e| e.into_inner());
+        while !*go {
+            go = self.cv.wait(go).unwrap_or_else(|e| e.into_inner());
+        }
+        *go = false;
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum ProcState {
+    /// May run when handed the baton (includes the current holder).
+    Runnable,
+    /// Parked at an incomplete sync.
+    Blocked,
+    /// Program returned.
+    Finished,
+}
+
+/// Scope identity of a pending sync.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+enum ScopeKey {
+    /// Whole-machine superstep.
+    World,
+    /// One group of a [`SimCommunicator`].
+    Group { comm: usize, gidx: usize },
+}
+
+struct Arrival {
+    pid: usize,
+    ops: f64,
+    sent_words: u64,
+    wall_us: f64,
+    vt: f64,
+}
+
+struct Pending {
+    members: Vec<usize>,
+    leader: usize,
+    label: String,
+    phase_id: usize,
+    /// Global superstep index (world scope) or group superstep index
+    /// (group scope) — the ledger key, read once at first arrival.
+    superstep: usize,
+    arrivals: Vec<Arrival>,
+}
+
+struct Delivery<K: Key> {
+    inbox: Vec<(usize, Payload<K>)>,
+    vt: f64,
+}
+
+struct SimState<K: Key> {
+    proc: Vec<ProcState>,
+    /// Staged payloads, `outbox[src][dst]`, moved in at each sender's
+    /// sync arrival and drained at commit in src-ascending order — the
+    /// simulator twin of the engine's slot matrix.
+    outbox: Vec<Vec<Vec<Payload<K>>>>,
+    /// Per-sender list of destinations whose `outbox[src][dst]` is
+    /// currently non-empty.  Commit iterates these instead of all
+    /// `members²` slot pairs, so an empty superstep at p = 1024 costs
+    /// O(p), not O(p²) drains of empty vectors.
+    pending_dsts: Vec<Vec<usize>>,
+    /// Syncs awaiting arrivals, by scope.
+    pending: BTreeMap<ScopeKey, Pending>,
+    /// Per-processor inbox + clock to pick up when resuming from a
+    /// committed sync.
+    delivery: Vec<Option<Delivery<K>>>,
+    /// The same accounting structure the threaded engine fills.
+    builder: LedgerBuilder,
+    /// Per-`(communicator, group)` superstep counters, advanced at each
+    /// group commit (the simulator twin of the threaded communicator's
+    /// leader-advanced counters).
+    group_steps: BTreeMap<(usize, usize), usize>,
+    /// First failure; parked processors halt on it instead of waiting.
+    poison: Option<String>,
+    /// Max final virtual clock over processors — the run's wall time.
+    final_vt: f64,
+}
+
+impl<K: Key> SimState<K> {
+    fn new(p: usize) -> SimState<K> {
+        SimState {
+            proc: vec![ProcState::Runnable; p],
+            outbox: (0..p).map(|_| (0..p).map(|_| Vec::new()).collect()).collect(),
+            pending_dsts: (0..p).map(|_| Vec::new()).collect(),
+            pending: BTreeMap::new(),
+            delivery: (0..p).map(|_| None).collect(),
+            builder: LedgerBuilder::default(),
+            group_steps: BTreeMap::new(),
+            poison: None,
+            final_vt: 0.0,
+        }
+    }
+}
+
+struct SimWorld<K: Key> {
+    p: usize,
+    params: BspParams,
+    skew: Vec<f64>,
+    phases: PhaseInterner,
+    parked: Vec<ParkSlot>,
+    state: Mutex<SimState<K>>,
+}
+
+impl<K: Key> SimWorld<K> {
+    /// Lock the shared state, shrugging off mutex poisoning: the
+    /// simulator's own `poison` flag governs failure propagation, and a
+    /// panicking carrier must not wedge its siblings behind a
+    /// `PoisonError`.
+    fn lock_state(&self) -> MutexGuard<'_, SimState<K>> {
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+/// Group-scope descriptor passed from [`SimGroupCtx::sync`] into the
+/// shared sync path.
+struct SimGroupScope<'a> {
+    comm_id: usize,
+    gidx: usize,
+    members: &'a [usize],
+    leader: usize,
+}
+
+/// Per-virtual-processor handle passed to the SPMD closure — the
+/// simulator twin of `BspCtx`, implementing the same [`BspScope`]
+/// contract (and [`GroupedScope`] via [`SimCommunicator`]).
+pub struct SimCtx<'w, K: Key = i32> {
+    pid: usize,
+    world: &'w SimWorld<K>,
+    /// Locally staged payloads by destination pid; moved into the shared
+    /// outbox at the next sync (so `send` takes no lock at all).
+    staged: Vec<Vec<Payload<K>>>,
+    /// Destinations with non-empty `staged` entries, in first-send
+    /// order — the sync arrival walks only these instead of all `p`.
+    staged_dsts: Vec<usize>,
+    sent_words: u64,
+    inbox: Vec<(usize, Payload<K>)>,
+    superstep: usize,
+    ops: f64,
+    /// This processor's virtual clock, µs.
+    vt_us: f64,
+    /// Virtual clock at the end of the last sync.
+    sync_vt: f64,
+    phase_id: usize,
+    phase_ops: Vec<f64>,
+    phase_vt: Vec<f64>,
+    phase_mark_vt: f64,
+}
+
+impl<'w, K: Key> SimCtx<'w, K> {
+    /// This virtual processor's identifier in `[0, nprocs)`.
+    pub fn pid(&self) -> usize {
+        self.pid
+    }
+
+    /// Number of virtual processors.
+    pub fn nprocs(&self) -> usize {
+        self.world.p
+    }
+
+    /// This processor's current virtual clock, µs (deterministic).
+    pub fn virtual_now_us(&self) -> f64 {
+        self.vt_us
+    }
+
+    /// Charge `ops` basic operations; advances the virtual clock by
+    /// `ops / rate · skew_pid` µs.
+    #[inline]
+    pub fn charge(&mut self, ops: f64) {
+        self.ops += ops;
+        self.phase_ops[self.phase_id] += ops;
+        self.vt_us += ops / self.world.params.comps_per_us * self.world.skew[self.pid];
+    }
+
+    /// Stage a message for `dst`; delivered at the next `sync`.
+    #[inline]
+    pub fn send(&mut self, dst: usize, payload: Payload<K>) {
+        debug_assert!(dst < self.world.p, "send to invalid pid {dst}");
+        self.sent_words += payload.words();
+        if self.staged[dst].is_empty() {
+            self.staged_dsts.push(dst);
+        }
+        self.staged[dst].push(payload);
+    }
+
+    /// Enter a named phase; virtual wall-clock and op charges accrue to
+    /// the active phase exactly as on the threaded engine.
+    pub fn phase(&mut self, name: &str) {
+        let elapsed = self.vt_us - self.phase_mark_vt;
+        self.phase_vt[self.phase_id] += elapsed;
+        self.phase_mark_vt = self.vt_us;
+        self.phase_id = self.world.phases.intern(name);
+        if self.phase_ops.len() <= self.phase_id {
+            self.phase_ops.resize(self.phase_id + 1, 0.0);
+            self.phase_vt.resize(self.phase_id + 1, 0.0);
+        }
+    }
+
+    /// Superstep boundary: park this virtual processor until every
+    /// participant arrives, then pick up the sender-ordered inbox.
+    pub fn sync(&mut self, label: &str) {
+        self.sync_scoped(label, None);
+    }
+
+    /// The messages delivered at the last `sync`, ordered by sender id.
+    pub fn take_inbox(&mut self) -> Vec<(usize, Payload<K>)> {
+        std::mem::take(&mut self.inbox)
+    }
+
+    /// Convenience: exchange one payload with every processor.
+    pub fn all_to_all(&mut self, parts: Vec<Payload<K>>, label: &str) -> Vec<(usize, Payload<K>)> {
+        assert_eq!(parts.len(), self.nprocs());
+        for (dst, payload) in parts.into_iter().enumerate() {
+            self.send(dst, payload);
+        }
+        self.sync(label);
+        self.take_inbox()
+    }
+
+    /// Shared whole-machine / group-scoped sync path.
+    fn sync_scoped(&mut self, label: &str, scope: Option<&SimGroupScope<'_>>) {
+        let p = self.world.p;
+        let arrival = Arrival {
+            pid: self.pid,
+            ops: self.ops,
+            sent_words: self.sent_words,
+            wall_us: self.vt_us - self.sync_vt,
+            vt: self.vt_us,
+        };
+
+        let mut st = self.world.lock_state();
+        // Move locally staged payloads into the shared outbox (append
+        // keeps the local buffers' capacity for the next superstep);
+        // only destinations actually sent to are touched.
+        {
+            let SimState { outbox, pending_dsts, .. } = &mut *st;
+            for &dst in &self.staged_dsts {
+                let staged = &mut self.staged[dst];
+                if !staged.is_empty() {
+                    let slot = &mut outbox[self.pid][dst];
+                    if slot.is_empty() {
+                        pending_dsts[self.pid].push(dst);
+                    }
+                    slot.append(staged);
+                }
+            }
+        }
+        self.staged_dsts.clear();
+
+        let key = match scope {
+            None => ScopeKey::World,
+            Some(s) => ScopeKey::Group { comm: s.comm_id, gidx: s.gidx },
+        };
+        let scope_ids = scope.map(|s| (s.comm_id, s.gidx));
+        let mismatch: Option<String> = {
+            // Split-borrow the state so the group-step counters can seed
+            // a fresh pending entry.
+            let SimState { pending, group_steps, .. } = &mut *st;
+            let pend = pending.entry(key).or_insert_with(|| Pending {
+                members: match scope {
+                    None => (0..p).collect(),
+                    Some(s) => s.members.to_vec(),
+                },
+                leader: match scope {
+                    None => 0,
+                    Some(s) => s.leader,
+                },
+                label: label.to_string(),
+                phase_id: self.phase_id,
+                superstep: match scope_ids {
+                    None => self.superstep,
+                    Some(ids) => group_steps.get(&ids).copied().unwrap_or(0),
+                },
+                arrivals: Vec::new(),
+            });
+            debug_assert!(
+                pend.members.contains(&self.pid),
+                "processor {} synced a scope it is not a member of",
+                self.pid
+            );
+            if pend.label != label {
+                Some(format!(
+                    "superstep {}: processor {} reported label {:?}, \
+                     another processor reported {:?}",
+                    pend.superstep, self.pid, label, pend.label
+                ))
+            } else {
+                pend.arrivals.push(arrival);
+                None
+            }
+        };
+        if let Some(msg) = mismatch {
+            let full = format!("SPMD sync label mismatch: {msg}");
+            st.poison.get_or_insert(full.clone());
+            drop(st);
+            wake_all(self.world);
+            panic!("{full}");
+        }
+
+        let complete =
+            st.pending[&key].arrivals.len() == st.pending[&key].members.len();
+        if complete {
+            let pend = st.pending.remove(&key).expect("pending sync present");
+            commit(self.world, &mut st, scope_ids, pend);
+        } else {
+            st.proc[self.pid] = ProcState::Blocked;
+        }
+
+        match next_runnable(&st) {
+            Some(q) if q == self.pid => {
+                let d = st.delivery[self.pid].take().expect("delivery for resumed processor");
+                drop(st);
+                self.absorb(d, scope.is_none());
+            }
+            Some(q) => {
+                drop(st);
+                self.world.parked[q].wake();
+                self.world.parked[self.pid].wait();
+                let mut st = self.world.lock_state();
+                if st.poison.is_some() {
+                    drop(st);
+                    std::panic::panic_any(SECONDARY_HALT);
+                }
+                let d = st.delivery[self.pid].take().expect("delivery for resumed processor");
+                drop(st);
+                self.absorb(d, scope.is_none());
+            }
+            None => {
+                let diag = describe_stall(&st, p);
+                st.poison.get_or_insert(diag.clone());
+                drop(st);
+                wake_all(self.world);
+                panic!("SPMD structural violation: {diag}");
+            }
+        }
+    }
+
+    /// Pick up a committed sync's delivery: inbox, advanced clock, and
+    /// per-superstep counter resets.
+    fn absorb(&mut self, d: Delivery<K>, whole_machine: bool) {
+        self.inbox = d.inbox;
+        self.vt_us = d.vt;
+        self.sync_vt = d.vt;
+        self.ops = 0.0;
+        self.sent_words = 0;
+        if whole_machine {
+            self.superstep += 1;
+        }
+    }
+
+    /// Flush end-of-run phase accounting into the shared builder
+    /// (virtual-time twin of the engine's per-thread `finish`).
+    fn finish(&mut self) {
+        let elapsed = self.vt_us - self.phase_mark_vt;
+        self.phase_vt[self.phase_id] += elapsed;
+        self.phase_mark_vt = self.vt_us;
+        let mut st = self.world.lock_state();
+        st.final_vt = st.final_vt.max(self.vt_us);
+        let builder = &mut st.builder;
+        if builder.phases.len() < self.phase_ops.len() {
+            builder.phases.resize_with(self.phase_ops.len(), Default::default);
+        }
+        for (id, (&ops, &vt)) in self.phase_ops.iter().zip(self.phase_vt.iter()).enumerate() {
+            let rec = &mut builder.phases[id];
+            rec.max_ops = rec.max_ops.max(ops);
+            rec.wall_us = rec.wall_us.max(vt);
+        }
+    }
+}
+
+/// Commit one superstep: assemble every member's inbox in sender order,
+/// reduce the ledger record, advance all participants' virtual clocks
+/// to `max(arrivals) + max{L_scope, g·h}`, and mark them runnable.
+fn commit<K: Key>(
+    world: &SimWorld<K>,
+    st: &mut SimState<K>,
+    scope: Option<(usize, usize)>,
+    pend: Pending,
+) {
+    let mut max_ops = 0.0f64;
+    let mut total_words = 0u64;
+    let mut wall_max = 0.0f64;
+    let mut vt_max = 0.0f64;
+    for a in &pend.arrivals {
+        max_ops = max_ops.max(a.ops);
+        total_words += a.sent_words;
+        wall_max = wall_max.max(a.wall_us);
+        vt_max = vt_max.max(a.vt);
+    }
+
+    // Per-member inbox assembly, walking only the non-empty sender
+    // slots (`pending_dsts`) in member-ascending sender order, so the
+    // per-destination inboxes come out sender-ordered and an empty
+    // superstep at p = 1024 costs O(p) rather than O(p²) empty drains.
+    let m = pend.members.len();
+    let mut sent = vec![0u64; m];
+    for a in &pend.arrivals {
+        if let Ok(i) = pend.members.binary_search(&a.pid) {
+            sent[i] = a.sent_words;
+        }
+    }
+    let mut inbox_for: Vec<Vec<(usize, Payload<K>)>> = (0..m).map(|_| Vec::new()).collect();
+    {
+        let SimState { outbox, pending_dsts, .. } = &mut *st;
+        for &src in &pend.members {
+            let dsts = std::mem::take(&mut pending_dsts[src]);
+            for dst in dsts {
+                match pend.members.binary_search(&dst) {
+                    Ok(i) => {
+                        for payload in outbox[src][dst].drain(..) {
+                            inbox_for[i].push((src, payload));
+                        }
+                    }
+                    // A slot addressed outside this scope (only possible
+                    // when the group communication discipline is
+                    // violated): leave it staged, and keep tracking it.
+                    Err(_) => pending_dsts[src].push(dst),
+                }
+            }
+        }
+    }
+
+    // The h-relation: max over members of max(sent, received) words —
+    // identical to the threaded engine.
+    let mut h_words = 0u64;
+    for (i, inbox) in inbox_for.iter().enumerate() {
+        let recv: u64 = inbox.iter().map(|(_, p)| p.words()).sum();
+        h_words = h_words.max(sent[i].max(recv));
+    }
+
+    // Virtual clock advance: every member resumes at the superstep's
+    // end, `max(arrival clocks) + max{L_scope, g·h}` — the group-local
+    // effective machine prices a group barrier, like the ledger does.
+    let pricing = match scope {
+        None => world.params,
+        Some(_) => world.params.scaled_to(pend.members.len()),
+    };
+    let comm_us = (pricing.g_us_per_word * h_words as f64).max(pricing.l_us.max(0.0));
+    let end_vt = vt_max + comm_us;
+    for (&dst, inbox) in pend.members.iter().zip(inbox_for) {
+        st.delivery[dst] = Some(Delivery { inbox, vt: end_vt });
+        st.proc[dst] = ProcState::Runnable;
+    }
+
+    // Ledger record — the same builder slots the threaded engine fills.
+    let builder = &mut st.builder;
+    if builder.phases.len() <= pend.phase_id {
+        builder.phases.resize_with(pend.phase_id + 1, Default::default);
+    }
+    let rec = match scope {
+        None => {
+            if builder.supersteps.len() <= pend.superstep {
+                builder.supersteps.resize_with(pend.superstep + 1, Default::default);
+            }
+            &mut builder.supersteps[pend.superstep]
+        }
+        Some((comm, _gidx)) => builder
+            .group_steps
+            .entry((comm, pend.superstep, pend.leader))
+            .or_default(),
+    };
+    rec.label = pend.label.clone();
+    rec.phase_id = pend.phase_id;
+    rec.procs = pend.members.len();
+    rec.reporters = pend.arrivals.len();
+    rec.max_ops = max_ops;
+    rec.h_words = h_words;
+    rec.total_words = total_words;
+    rec.wall_us = wall_max;
+    builder.phases[pend.phase_id].supersteps += 1;
+
+    // Advance the group's superstep counter (the simulator twin of the
+    // threaded communicator's leader-advanced counter).
+    if let Some(ids) = scope {
+        *st.group_steps.entry(ids).or_insert(0) += 1;
+    }
+}
+
+impl<K: Key> BspScope<K> for SimCtx<'_, K> {
+    fn pid(&self) -> usize {
+        SimCtx::pid(self)
+    }
+    fn nprocs(&self) -> usize {
+        SimCtx::nprocs(self)
+    }
+    fn charge(&mut self, ops: f64) {
+        SimCtx::charge(self, ops)
+    }
+    fn phase(&mut self, name: &str) {
+        SimCtx::phase(self, name)
+    }
+    fn send(&mut self, dst: usize, payload: Payload<K>) {
+        SimCtx::send(self, dst, payload)
+    }
+    fn sync(&mut self, label: &str) {
+        SimCtx::sync(self, label)
+    }
+    fn take_inbox(&mut self) -> Vec<(usize, Payload<K>)> {
+        SimCtx::take_inbox(self)
+    }
+    fn all_to_all(&mut self, parts: Vec<Payload<K>>, label: &str) -> Vec<(usize, Payload<K>)> {
+        SimCtx::all_to_all(self, parts, label)
+    }
+}
+
+/// The simulator's communicator: the same validated partition as the
+/// threaded `Communicator`, with no barriers — the scheduler itself
+/// synchronizes a group when all members arrive at its sync.
+pub struct SimCommunicator {
+    id: usize,
+    map: GroupMap,
+}
+
+impl SimCommunicator {
+    /// Split `p` virtual processors into contiguous near-even groups
+    /// ([`GroupMap::split_even`]).
+    pub fn split_even(p: usize, num_groups: usize) -> SimCommunicator {
+        SimCommunicator::from_map(GroupMap::split_even(p, num_groups))
+    }
+
+    /// Build from explicit member lists ([`GroupMap::from_groups`]
+    /// validation applies).
+    pub fn from_groups(groups: Vec<Vec<usize>>) -> SimCommunicator {
+        SimCommunicator::from_map(GroupMap::from_groups(groups))
+    }
+
+    /// Wrap a validated partition.
+    pub fn from_map(map: GroupMap) -> SimCommunicator {
+        SimCommunicator { id: next_comm_id(), map }
+    }
+
+    /// Enter this processor's group: wrap `ctx` into a group-scoped
+    /// [`BspScope`].  `phase_prefix` is prepended to phase labels
+    /// entered through the group context (`sort::multilevel` passes
+    /// `"L2/"`); pass `""` to keep labels unchanged.
+    pub fn enter<'c, 'w, K: Key>(
+        &'c self,
+        ctx: &'c mut SimCtx<'w, K>,
+        phase_prefix: &str,
+    ) -> SimGroupCtx<'c, 'w, K> {
+        let pid = SimCtx::pid(ctx);
+        assert!(
+            pid < self.map.nprocs(),
+            "pid {pid} outside the communicator's {} processors",
+            self.map.nprocs()
+        );
+        SimGroupCtx {
+            group: self.map.group_of(pid),
+            rank: self.map.rank_of(pid),
+            prefix: phase_prefix.to_string(),
+            comm: self,
+            ctx,
+        }
+    }
+}
+
+impl GroupPartition for SimCommunicator {
+    fn split_even(p: usize, num_groups: usize) -> SimCommunicator {
+        SimCommunicator::split_even(p, num_groups)
+    }
+
+    fn map(&self) -> &GroupMap {
+        &self.map
+    }
+}
+
+/// A group-scoped [`BspScope`] over the simulator — the twin of the
+/// threaded `GroupCtx`: ranks, phase prefixes and message delivery all
+/// restricted to one group of a [`SimCommunicator`].
+pub struct SimGroupCtx<'c, 'w, K: Key> {
+    comm: &'c SimCommunicator,
+    group: usize,
+    rank: usize,
+    prefix: String,
+    ctx: &'c mut SimCtx<'w, K>,
+}
+
+impl<K: Key> SimGroupCtx<'_, '_, K> {
+    /// This processor's global pid (its rank is [`BspScope::pid`]).
+    pub fn global_pid(&self) -> usize {
+        SimCtx::pid(self.ctx)
+    }
+
+    /// The index of the group this context is scoped to.
+    pub fn group_index(&self) -> usize {
+        self.group
+    }
+}
+
+impl<K: Key> BspScope<K> for SimGroupCtx<'_, '_, K> {
+    fn pid(&self) -> usize {
+        self.rank
+    }
+
+    fn nprocs(&self) -> usize {
+        self.comm.map.group_size(self.group)
+    }
+
+    fn charge(&mut self, ops: f64) {
+        self.ctx.charge(ops);
+    }
+
+    fn phase(&mut self, name: &str) {
+        if self.prefix.is_empty() {
+            self.ctx.phase(name);
+        } else {
+            self.ctx.phase(&format!("{}{}", self.prefix, name));
+        }
+    }
+
+    fn send(&mut self, dst: usize, payload: Payload<K>) {
+        let members = self.comm.map.members(self.group);
+        debug_assert!(dst < members.len(), "group send to invalid rank {dst}");
+        self.ctx.send(members[dst], payload);
+    }
+
+    fn sync(&mut self, label: &str) {
+        let members = self.comm.map.members(self.group);
+        let scope = SimGroupScope {
+            comm_id: self.comm.id,
+            gidx: self.group,
+            members,
+            leader: members[0],
+        };
+        self.ctx.sync_scoped(label, Some(&scope));
+    }
+
+    fn take_inbox(&mut self) -> Vec<(usize, Payload<K>)> {
+        // Group commits only deliver member-written payloads, so the
+        // global sender pid always maps to a group rank.
+        self.ctx
+            .take_inbox()
+            .into_iter()
+            .map(|(src, payload)| (self.comm.map.rank_of(src), payload))
+            .collect()
+    }
+}
+
+impl<'w, K: Key> GroupedScope<K> for SimCtx<'w, K> {
+    type Comm = SimCommunicator;
+    type Group<'a>
+        = SimGroupCtx<'a, 'w, K>
+    where
+        Self: 'a;
+
+    fn enter_group<'a>(
+        &'a mut self,
+        comm: &'a SimCommunicator,
+        phase_prefix: &str,
+    ) -> SimGroupCtx<'a, 'w, K> {
+        comm.enter(self, phase_prefix)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bsp::params::cray_t3d;
+
+    fn machine(p: usize) -> SimMachine {
+        SimMachine::new(cray_t3d(p))
+    }
+
+    #[test]
+    fn pid_and_nprocs() {
+        let run = machine(4).run(|ctx| (ctx.pid(), ctx.nprocs()));
+        assert_eq!(run.outputs, vec![(0, 4), (1, 4), (2, 4), (3, 4)]);
+    }
+
+    #[test]
+    fn single_processor_machine_runs() {
+        let run = machine(1).run(|ctx| {
+            ctx.send(0, Payload::Keys(vec![7i32]));
+            ctx.sync("self");
+            ctx.take_inbox().pop().unwrap().1.into_keys()[0]
+        });
+        assert_eq!(run.outputs, vec![7]);
+    }
+
+    #[test]
+    fn ring_exchange_delivers_in_sender_order() {
+        let run = machine(8).run(|ctx| {
+            let p = ctx.nprocs();
+            let dst = (ctx.pid() + 1) % p;
+            ctx.send(dst, Payload::Keys(vec![ctx.pid() as i32]));
+            ctx.sync("ring");
+            let inbox = ctx.take_inbox();
+            assert_eq!(inbox.len(), 1);
+            let (src, payload) = &inbox[0];
+            (*src, payload.clone().into_keys()[0])
+        });
+        for (pid, (src, val)) in run.outputs.iter().enumerate() {
+            let expect = (pid + 8 - 1) % 8;
+            assert_eq!(*src, expect);
+            assert_eq!(*val, expect as i32);
+        }
+    }
+
+    #[test]
+    fn all_to_all_is_complete_and_ordered() {
+        let run = machine(5).run(|ctx| {
+            let parts = (0..5)
+                .map(|dst| Payload::Keys(vec![(ctx.pid() * 10 + dst) as i32]))
+                .collect();
+            let recv = ctx.all_to_all(parts, "a2a");
+            recv.into_iter()
+                .map(|(src, p)| (src, p.into_keys()[0]))
+                .collect::<Vec<_>>()
+        });
+        for (pid, inbox) in run.outputs.iter().enumerate() {
+            assert_eq!(inbox.len(), 5);
+            for (i, (src, val)) in inbox.iter().enumerate() {
+                assert_eq!(*src, i, "inbox must be sorted by sender");
+                assert_eq!(*val as usize, i * 10 + pid);
+            }
+        }
+    }
+
+    #[test]
+    fn multiple_sends_to_one_dst_keep_order() {
+        let run = machine(3).run(|ctx| {
+            ctx.send(0, Payload::Keys(vec![ctx.pid() as i32]));
+            ctx.send(0, Payload::U64s(vec![ctx.pid() as u64 + 100]));
+            ctx.sync("pairs");
+            ctx.take_inbox()
+        });
+        let inbox = &run.outputs[0];
+        assert_eq!(inbox.len(), 6);
+        for src in 0..3usize {
+            let (s0, first) = &inbox[2 * src];
+            let (s1, second) = &inbox[2 * src + 1];
+            assert_eq!((*s0, *s1), (src, src));
+            assert!(matches!(first, Payload::Keys(v) if v[0] == src as i32));
+            assert!(matches!(second, Payload::U64s(v) if v[0] == src as u64 + 100));
+        }
+    }
+
+    #[test]
+    fn ledger_records_match_engine_semantics() {
+        let run = machine(4).run(|ctx| {
+            ctx.send(0, Payload::Keys(vec![1; 100]));
+            ctx.sync("fan-in");
+            ctx.take_inbox().len()
+        });
+        assert_eq!(run.ledger.supersteps.len(), 1);
+        let s = &run.ledger.supersteps[0];
+        assert_eq!(s.h_words, 400);
+        assert_eq!(s.total_words, 400);
+        assert_eq!(s.reporters, 4);
+        assert_eq!(s.procs, 4);
+    }
+
+    #[test]
+    fn charges_are_max_reduced_and_phases_attributed() {
+        let run = machine(4).run(|ctx| {
+            ctx.phase("Ph2:SeqSort");
+            ctx.charge((ctx.pid() as f64 + 1.0) * 1000.0);
+            ctx.sync("compute");
+        });
+        assert_eq!(run.ledger.supersteps[0].max_ops, 4000.0);
+        assert_eq!(run.ledger.phases["Ph2:SeqSort"].max_ops, 4000.0);
+    }
+
+    #[test]
+    fn predicted_cost_uses_machine_params() {
+        let m = SimMachine::new(cray_t3d(16));
+        let run = m.run(|ctx| {
+            ctx.charge(7_000.0);
+            ctx.sync("c");
+        });
+        let us = run.ledger.predicted_us(&m.params);
+        assert!((us - 1000.0).abs() < 1e-9, "us={us}");
+    }
+
+    #[test]
+    fn empty_superstep_floors_at_l_in_virtual_time_too() {
+        let m = SimMachine::new(cray_t3d(128));
+        let run = m.run(|ctx| ctx.sync("noop"));
+        assert_eq!(run.ledger.predicted_us(&m.params), 762.0);
+        // The virtual clock paid the barrier latency as well.
+        assert!((run.ledger.wall_us - 762.0).abs() < 1e-9, "{}", run.ledger.wall_us);
+    }
+
+    #[test]
+    fn runs_are_bit_for_bit_deterministic() {
+        let once = || {
+            machine(8).run(|ctx| {
+                let p = ctx.nprocs();
+                let mut acc: u64 = ctx.pid() as u64;
+                for round in 0..4u64 {
+                    let parts = (0..p)
+                        .map(|dst| Payload::U64s(vec![acc + round + dst as u64]))
+                        .collect();
+                    let inbox = ctx.all_to_all(parts, "mix");
+                    acc = inbox.into_iter().map(|(_, pl)| pl.into_u64s()[0]).sum();
+                    ctx.charge(acc as f64 % 97.0);
+                }
+                acc
+            })
+        };
+        let a = once();
+        let b = once();
+        assert_eq!(a.outputs, b.outputs);
+        assert_eq!(a.ledger.wall_us, b.ledger.wall_us);
+        assert_eq!(a.ledger.supersteps.len(), b.ledger.supersteps.len());
+        for (x, y) in a.ledger.supersteps.iter().zip(&b.ledger.supersteps) {
+            assert_eq!(x.max_ops, y.max_ops);
+            assert_eq!(x.h_words, y.h_words);
+            assert_eq!(x.wall_us, y.wall_us, "virtual wall must be deterministic");
+        }
+    }
+
+    #[test]
+    fn skew_stretches_virtual_wall_but_not_charges() {
+        let program = |ctx: &mut SimCtx| {
+            ctx.charge(7_000.0);
+            ctx.sync("c");
+        };
+        let plain = SimMachine::new(cray_t3d(16)).run(program);
+        let skewed = SimMachine::new(cray_t3d(16))
+            .with_skew(SkewSpec { seed: 0xBAD5EED, max_skew: 1.0 })
+            .run(program);
+        assert_eq!(
+            plain.ledger.supersteps[0].max_ops,
+            skewed.ledger.supersteps[0].max_ops,
+            "skew must not alter charges"
+        );
+        assert!(
+            skewed.ledger.wall_us > plain.ledger.wall_us,
+            "skewed {} vs plain {}",
+            skewed.ledger.wall_us,
+            plain.ledger.wall_us
+        );
+        // Multipliers are a pure function of the seed.
+        let m1 = SimMachine::new(cray_t3d(16))
+            .with_skew(SkewSpec { seed: 42, max_skew: 0.5 })
+            .skew_multipliers();
+        let m2 = SimMachine::new(cray_t3d(16))
+            .with_skew(SkewSpec { seed: 42, max_skew: 0.5 })
+            .skew_multipliers();
+        assert_eq!(m1, m2);
+        assert!(m1.iter().all(|&m| (1.0..=1.5).contains(&m)));
+        assert!(m1.iter().any(|&m| m > 1.0));
+    }
+
+    #[test]
+    fn group_all_to_all_stays_group_local_with_group_records() {
+        let comm = SimCommunicator::split_even(8, 2);
+        let run = machine(8).run(|ctx| {
+            ctx.sync("global");
+            let mut g = comm.enter(ctx, "L2/");
+            g.phase("Ph5:Routing");
+            let me = g.pid();
+            let group = g.group_index();
+            let parts = (0..g.nprocs())
+                .map(|dst| Payload::Keys(vec![(group * 100 + me * 10 + dst) as i32]))
+                .collect();
+            let inbox = g.all_to_all(parts, "l2:route");
+            g.sync("l2:done");
+            inbox
+                .into_iter()
+                .map(|(src, p)| (src, p.into_keys()[0]))
+                .collect::<Vec<_>>()
+        });
+        for (pid, inbox) in run.outputs.iter().enumerate() {
+            let (group, rank) = (pid / 4, pid % 4);
+            assert_eq!(inbox.len(), 4, "pid={pid}");
+            for (i, &(src, val)) in inbox.iter().enumerate() {
+                assert_eq!(src, i, "inbox must be rank-ordered");
+                assert_eq!(val as usize, group * 100 + src * 10 + rank);
+            }
+        }
+        let global: Vec<_> =
+            run.ledger.supersteps.iter().filter(|s| s.round.is_none()).collect();
+        assert_eq!(global.len(), 1);
+        assert_eq!(global[0].procs, 8);
+        let grouped: Vec<_> =
+            run.ledger.supersteps.iter().filter(|s| s.round.is_some()).collect();
+        assert_eq!(grouped.len(), 4, "2 group supersteps x 2 groups");
+        assert!(grouped.iter().all(|s| s.procs == 4 && s.reporters == 4));
+        let routes: Vec<_> = grouped.iter().filter(|s| s.label == "l2:route").collect();
+        assert_eq!(routes.len(), 2);
+        for s in &routes {
+            assert_eq!(s.phase, "L2/Ph5:Routing");
+            assert_eq!(s.h_words, 4);
+            assert_eq!(s.total_words, 16);
+        }
+    }
+
+    #[test]
+    fn stalled_sibling_group_does_not_block_group_syncs() {
+        // Group 0 supersteps on its own while group 1 only computes —
+        // group syncs must not involve non-members.
+        let comm = SimCommunicator::split_even(8, 2);
+        let run = machine(8).run(|ctx| {
+            let pid = ctx.pid();
+            if pid < 4 {
+                let mut g = comm.enter(ctx, "");
+                let mut sum = 0i32;
+                for round in 0..3 {
+                    let dst = (g.pid() + 1) % g.nprocs();
+                    g.send(dst, Payload::Keys(vec![round as i32 + g.pid() as i32]));
+                    g.sync("ring");
+                    sum += g.take_inbox().pop().unwrap().1.into_keys()[0];
+                }
+                sum
+            } else {
+                (0..1000).sum::<i32>() % 7
+            }
+        });
+        for (pid, &out) in run.outputs.iter().enumerate() {
+            if pid < 4 {
+                let prev = (pid + 4 - 1) % 4;
+                let expect: i32 = (0..3).map(|r| r + prev as i32).sum();
+                assert_eq!(out, expect, "pid={pid}");
+            }
+        }
+    }
+
+    #[test]
+    fn large_p_smoke_p256() {
+        // The point of the simulator: p far beyond sensible thread
+        // counts, still exact and deterministic.
+        let p = 256usize;
+        let run = machine(p).run(|ctx| {
+            let dst = (ctx.pid() + 1) % p;
+            ctx.send(dst, Payload::U64s(vec![ctx.pid() as u64]));
+            ctx.sync("big-ring");
+            ctx.take_inbox().pop().unwrap().1.into_u64s()[0]
+        });
+        for (pid, &got) in run.outputs.iter().enumerate() {
+            assert_eq!(got as usize, (pid + p - 1) % p);
+        }
+        assert_eq!(run.ledger.supersteps[0].reporters, p);
+    }
+
+    #[test]
+    #[should_panic(expected = "SPMD sync label mismatch")]
+    fn spmd_label_mismatch_is_detected() {
+        machine(2).run(|ctx| {
+            let label = if ctx.pid() == 0 { "left" } else { "right" };
+            ctx.sync(label);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "SPMD structural violation")]
+    fn missing_sync_participant_is_detected() {
+        machine(2).run(|ctx| {
+            if ctx.pid() == 0 {
+                ctx.sync("lonely");
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "deliberate test panic")]
+    fn program_panic_propagates_as_the_primary_cause() {
+        machine(4).run(|ctx| {
+            ctx.sync("s1");
+            if ctx.pid() == 2 {
+                panic!("deliberate test panic");
+            }
+            ctx.sync("s2");
+        });
+    }
+}

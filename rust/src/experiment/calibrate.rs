@@ -82,6 +82,12 @@ pub struct Calibration {
     pub fit_intercept_us: f64,
     /// Coefficient of determination of the t(h) fit (1 = perfect line).
     pub fit_r2: f64,
+    /// Which execution backend's cells this calibration prices:
+    /// `"threaded"` (host micro-probes) or `"sim"` (synthetic model
+    /// parameters, [`Calibration::from_params`]).  Report consumers
+    /// join runs to calibrations by `(p, backend)` — a mixed-backend
+    /// sweep can legitimately carry both kinds at the same `p`.
+    pub backend: String,
 }
 
 impl Calibration {
@@ -89,6 +95,27 @@ impl Calibration {
     /// in host microseconds, comparable to measured wall-clock.
     pub fn params(&self) -> BspParams {
         BspParams::host(self.p, self.l_us, self.g_us_per_word, self.comps_per_us)
+    }
+
+    /// A *synthetic* calibration carrying exactly `params` — no probes
+    /// run.  Used for simulator-backend sweep cells (`backend = sim`),
+    /// whose virtual clock is driven by the model machine itself: host
+    /// micro-probes would be meaningless there, and pricing under the
+    /// model parameters keeps sim reports fully deterministic.  The fit
+    /// diagnostics are the exact-model values (`r² = 1`, intercept = L)
+    /// and the `a2a_points` are two points on the exact `L + g·h` line.
+    pub fn from_params(params: &BspParams) -> Calibration {
+        let line = |h: u64| params.l_us + params.g_us_per_word * h as f64;
+        Calibration {
+            p: params.p,
+            l_us: params.l_us,
+            g_us_per_word: params.g_us_per_word,
+            comps_per_us: params.comps_per_us,
+            a2a_points: vec![(1 << 10, line(1 << 10)), (1 << 14, line(1 << 14))],
+            fit_intercept_us: params.l_us,
+            fit_r2: 1.0,
+            backend: crate::bsp::Backend::Sim.tag().to_string(),
+        }
     }
 }
 
@@ -244,6 +271,7 @@ pub fn calibrate_with<P: Prober>(p: usize, prober: &mut P, plan: &ProbePlan) -> 
         a2a_points,
         fit_intercept_us: intercept,
         fit_r2: r2,
+        backend: crate::bsp::Backend::Threaded.tag().to_string(),
     }
 }
 

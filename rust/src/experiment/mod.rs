@@ -32,6 +32,7 @@
 //! let mut spec = SweepSpec::quick(); // det + ran + det2, [U] + [DD], i32 + u64
 //! spec.ns = vec![2048];              // shrink the preset for the doctest
 //! spec.ps = vec![4];
+//! spec.extras.clear();               // drop the preset's sim @ p=256 cell too
 //! spec.reps = 1;
 //! spec.warmup = 0;
 //! spec.probes = ProbePlan::quick();
@@ -65,26 +66,52 @@ pub use spec::{
     AlgoVariant, KeyDomain, RunConfig, RunSpec, SweepSpec, ALL_ALGOS, ALL_DOMAINS,
 };
 
-/// Execute a sweep: calibrate once per distinct processor count, then
-/// measure every cell of the cross-product, in spec order.
+/// Execute a sweep: host-calibrate once per distinct processor count of
+/// the *threaded* cells, price *sim* cells under synthetic model
+/// calibrations (the simulator's virtual clock is driven by the model
+/// machine — host micro-probes would be meaningless and would break the
+/// sim cells' determinism), then measure every cell in spec order.
 pub fn run_study(spec: &SweepSpec) -> StudyReport {
+    use crate::bsp::{cray_t3d, Backend};
+
     spec.validate().expect("invalid sweep spec");
-    let mut ps: Vec<usize> = spec.ps.clone();
-    ps.sort_unstable();
-    ps.dedup();
-    let calibrations: Vec<Calibration> =
-        ps.iter().map(|&p| calibrate_host(p, &spec.probes)).collect();
-    let runs = spec
-        .configs()
+    let configs = spec.configs();
+    let distinct_ps = |backend: Backend| -> Vec<usize> {
+        let mut ps: Vec<usize> =
+            configs.iter().filter(|c| c.backend == backend).map(|c| c.p).collect();
+        ps.sort_unstable();
+        ps.dedup();
+        ps
+    };
+    let host_calibs: Vec<Calibration> = distinct_ps(Backend::Threaded)
+        .into_iter()
+        .map(|p| calibrate_host(p, &spec.probes))
+        .collect();
+    let sim_calibs: Vec<Calibration> = distinct_ps(Backend::Sim)
+        .into_iter()
+        .map(|p| Calibration::from_params(&cray_t3d(p)))
+        .collect();
+    let runs = configs
         .iter()
         .map(|cfg| {
-            let calib = calibrations
+            let pool = match cfg.backend {
+                Backend::Threaded => &host_calibs,
+                Backend::Sim => &sim_calibs,
+            };
+            let calib = pool
                 .iter()
                 .find(|c| c.p == cfg.p)
-                .expect("calibration exists for every p in the sweep");
+                .expect("calibration exists for every cell in the sweep");
             measure_config(cfg, spec, calib)
         })
         .collect();
+    // The report lists every calibration actually used for pricing:
+    // host points for the threaded cells, synthetic model points for
+    // the sim cells.  Both can appear at the same `p` in a
+    // mixed-backend sweep; each entry's `backend` field says which runs
+    // it priced, so consumers join by `(p, backend)`.
+    let mut calibrations = host_calibs;
+    calibrations.extend(sim_calibs);
     StudyReport {
         tag: spec.tag.clone(),
         created_unix_secs: StudyReport::now_unix_secs(),
@@ -108,6 +135,7 @@ mod tests {
         spec.domains = vec![KeyDomain::I32, KeyDomain::U64];
         spec.ns = vec![1 << 11];
         spec.ps = vec![2];
+        spec.extras.clear();
         spec.reps = 1;
         spec.warmup = 0;
         spec.probes = ProbePlan {
@@ -122,6 +150,31 @@ mod tests {
         let domains: Vec<&str> = report.runs.iter().map(|r| r.domain.as_str()).collect();
         assert_eq!(domains, vec!["i32", "u64"]);
         assert!(report.created_unix_secs > 0);
+    }
+
+    #[test]
+    fn sim_only_sweeps_carry_synthetic_model_calibrations() {
+        use crate::bsp::Backend;
+        let mut spec = SweepSpec::quick();
+        spec.algos = vec![AlgoVariant::Det];
+        spec.benches = vec![Benchmark::Uniform];
+        spec.domains = vec![KeyDomain::I32];
+        spec.ns = vec![1 << 11];
+        spec.ps = vec![8];
+        spec.backends = vec![Backend::Sim];
+        spec.extras.clear();
+        spec.reps = 1;
+        spec.warmup = 0;
+        let report = run_study(&spec);
+        assert_eq!(report.runs.len(), 1);
+        assert_eq!(report.runs[0].backend, "sim");
+        // No threaded cells, yet the report still carries its pricing
+        // parameters: the synthetic model calibration for p = 8,
+        // tagged with the backend it prices.
+        assert_eq!(report.calibrations.len(), 1);
+        assert_eq!(report.calibrations[0].p, 8);
+        assert_eq!(report.calibrations[0].fit_r2, 1.0);
+        assert_eq!(report.calibrations[0].backend, "sim");
     }
 
     #[test]

@@ -17,7 +17,8 @@ use super::calibrate::Calibration;
 use super::run::RunRecord;
 
 /// Schema identifier written into (and required from) every report.
-pub const SCHEMA: &str = "bsp-sort/experiment-report/v2";
+/// v3 added the per-run `backend` field (`threaded` | `sim`).
+pub const SCHEMA: &str = "bsp-sort/experiment-report/v3";
 
 /// A complete study: calibrations for every probed `p` plus one
 /// [`RunRecord`] per sweep cell.
@@ -59,6 +60,9 @@ impl StudyReport {
             .map(|c| {
                 obj(vec![
                     ("p", Json::num(c.p as f64)),
+                    // Which backend's runs this calibration prices;
+                    // consumers join runs↔calibrations by (p, backend).
+                    ("backend", Json::str(&c.backend)),
                     ("l_us", Json::num(c.l_us)),
                     ("g_us_per_word", Json::num(c.g_us_per_word)),
                     ("comps_per_us", Json::num(c.comps_per_us)),
@@ -100,26 +104,27 @@ impl StudyReport {
             self.os, self.arch, SCHEMA
         ));
         out.push_str("## Calibrated machine parameters\n\n");
-        out.push_str("| p | L (µs) | g (µs/word) | comps/µs | fit r² |\n");
-        out.push_str("|---:|---:|---:|---:|---:|\n");
+        out.push_str("| p | L (µs) | g (µs/word) | comps/µs | fit r² | backend |\n");
+        out.push_str("|---:|---:|---:|---:|---:|---|\n");
         for c in &self.calibrations {
             out.push_str(&format!(
-                "| {} | {:.2} | {:.4} | {:.1} | {:.4} |\n",
-                c.p, c.l_us, c.g_us_per_word, c.comps_per_us, c.fit_r2
+                "| {} | {:.2} | {:.4} | {:.1} | {:.4} | {} |\n",
+                c.p, c.l_us, c.g_us_per_word, c.comps_per_us, c.fit_r2, c.backend
             ));
         }
         out.push_str("\n## Measured vs predicted (per configuration)\n\n");
         out.push_str(
-            "| algo | bench | domain | n | p | measured (s) | predicted (s) \
+            "| algo | bench | domain | backend | n | p | measured (s) | predicted (s) \
              | meas/pred | max/avg keys | routed max/avg words |\n",
         );
-        out.push_str("|---|---|---|---:|---:|---:|---:|---:|---:|---:|\n");
+        out.push_str("|---|---|---|---|---:|---:|---:|---:|---:|---:|---:|\n");
         for r in &self.runs {
             out.push_str(&format!(
-                "| {} | {} | {} | {} | {} | {} | {} | {:.2} | {}/{:.0} | {}/{:.0} |\n",
+                "| {} | {} | {} | {} | {} | {} | {} | {} | {:.2} | {}/{:.0} | {}/{:.0} |\n",
                 r.algo_label,
                 r.bench,
                 r.domain,
+                r.backend,
                 r.n,
                 r.p,
                 fmt_secs(r.wall_us.mean / 1e6),
@@ -212,6 +217,8 @@ fn run_to_json(r: &RunRecord) -> Json {
         ("algo_label", Json::str(&r.algo_label)),
         ("bench", Json::str(&r.bench)),
         ("domain", Json::str(&r.domain)),
+        // Execution backend; `sim` wall statistics are virtual µs.
+        ("backend", Json::str(&r.backend)),
         ("n", Json::num(r.n as f64)),
         ("p", Json::num(r.p as f64)),
         ("warmup", Json::num(r.warmup as f64)),
@@ -265,12 +272,14 @@ mod tests {
                 a2a_points: vec![(1024, 33.0), (4096, 95.0)],
                 fit_intercept_us: 12.5,
                 fit_r2: 0.998,
+                backend: "threaded".into(),
             }],
             runs: vec![RunRecord {
                 algo: "det".into(),
                 algo_label: "[DSQ]".into(),
                 bench: "[U]".into(),
                 domain: "i32".into(),
+                backend: "threaded".into(),
                 n: 4096,
                 p: 4,
                 warmup: 1,
@@ -325,6 +334,7 @@ mod tests {
         let runs = doc.get("runs").unwrap().as_arr().unwrap();
         assert_eq!(runs.len(), 1);
         assert_eq!(runs[0].get("n").unwrap().as_u64(), Some(4096));
+        assert_eq!(runs[0].get("backend").unwrap().as_str(), Some("threaded"));
         // The unpriced phase's NaN ratio serializes as null.
         let phases = runs[0].get("phases").unwrap().as_arr().unwrap();
         assert!(phases[1].get("ratio").unwrap().is_null());

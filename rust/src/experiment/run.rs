@@ -5,8 +5,10 @@
 
 use crate::baselines;
 use crate::bsp::engine::BspMachine;
-use crate::bsp::group::Communicator;
+use crate::bsp::group::{Communicator, GroupedScope};
 use crate::bsp::ledger::{ratio_or_nan, Ledger};
+use crate::bsp::sim::{SimCommunicator, SimMachine};
+use crate::bsp::Backend;
 use crate::gen::{generate_typed_for_proc, GenKey};
 use crate::key::{F64, RadixKey, Record};
 use crate::metrics::{Imbalance, RoutedVolume, RunReport};
@@ -36,59 +38,82 @@ pub struct SingleRun<K> {
     pub ledger: Ledger,
 }
 
-/// Execute a spec over key domain `K` and verify the result (globally
-/// sorted, total size preserved) before returning it — the harness never
-/// reports an unverified number.
+/// One sweep cell's SPMD body, generic over the execution scope: the
+/// *same* program text runs on the threaded engine (`BspCtx`) and the
+/// deterministic simulator (`SimCtx`), each paired with its own
+/// communicator type through [`GroupedScope`].
+fn run_cell<K, S>(ctx: &mut S, comm: Option<&S::Comm>, spec: &RunSpec) -> ProcResult<K>
+where
+    K: StudyKey,
+    S: GroupedScope<K>,
+{
+    let params = spec.params();
+    let cfg = spec.cfg;
+    let (algo, bench, p, n, seed) = (spec.algo, spec.bench, spec.p, spec.n_total, spec.seed);
+    let local: Vec<K> = generate_typed_for_proc(bench, ctx.pid(), p, n / p);
+    match algo {
+        AlgoVariant::Det => det::sort_det_bsp(ctx, &params, local, n, &cfg),
+        AlgoVariant::Iran => iran::sort_iran_bsp(ctx, &params, local, n, &cfg, seed),
+        AlgoVariant::Ran => ran::sort_ran_bsp(ctx, &params, local, n, &cfg, seed),
+        AlgoVariant::Bsi => bsi::sort_bsi(ctx, local, &cfg),
+        AlgoVariant::Det2 => multilevel::sort_multilevel_det(
+            ctx,
+            comm.expect("communicator built for det2"),
+            &params,
+            local,
+            n,
+            &cfg,
+        ),
+        AlgoVariant::Ran2 => multilevel::sort_multilevel_ran(
+            ctx,
+            comm.expect("communicator built for ran2"),
+            &params,
+            local,
+            n,
+            &cfg,
+            seed,
+        ),
+        AlgoVariant::HelmanDet => baselines::sort_helman_det(ctx, &params, local, &cfg),
+        AlgoVariant::HelmanRan => baselines::sort_helman_ran(ctx, &params, local, n, &cfg, seed),
+        AlgoVariant::Psrs => baselines::sort_psrs(ctx, &params, local, &cfg),
+    }
+}
+
+/// Does this variant need a processor-group communicator?
+fn needs_comm(algo: AlgoVariant) -> bool {
+    matches!(algo, AlgoVariant::Det2 | AlgoVariant::Ran2)
+}
+
+/// Execute a spec over key domain `K` on the spec's backend and verify
+/// the result (globally sorted, total size preserved) before returning
+/// it — the harness never reports an unverified number.
 ///
 /// Panics on an unsorted output or a size mismatch: that is a
 /// harness-integrity guard, not a user error path.
 pub fn execute_typed<K: StudyKey>(spec: &RunSpec) -> SingleRun<K> {
     let params = spec.params();
-    let machine = BspMachine::new(params);
-    let cfg = spec.cfg;
-    let (algo, bench, p, n, seed) = (spec.algo, spec.bench, spec.p, spec.n_total, spec.seed);
+    let (p, n) = (spec.p, spec.n_total);
     assert!(n % p == 0, "n must divide evenly (paper setup): n={n} p={p}");
 
     // The multi-level variants run over a processor-group communicator,
-    // shared by all engine threads; `default_groups` picks the largest
-    // divisor of p not exceeding √p (p = 8 → 2×4).
-    let comm = match algo {
-        AlgoVariant::Det2 | AlgoVariant::Ran2 => {
-            Some(Communicator::split_even(p, multilevel::default_groups(p)))
+    // shared by all (real or virtual) processors; `default_groups` picks
+    // the largest divisor of p not exceeding √p (p = 8 → 2×4).  Each
+    // backend builds its own communicator flavor over the same
+    // partition.
+    let run = match spec.backend {
+        Backend::Threaded => {
+            let machine = BspMachine::new(params);
+            let comm = needs_comm(spec.algo)
+                .then(|| Communicator::split_even(p, multilevel::default_groups(p)));
+            machine.run_keys::<K, _, _>(|ctx| run_cell(ctx, comm.as_ref(), spec))
         }
-        _ => None,
+        Backend::Sim => {
+            let machine = SimMachine::new(params);
+            let comm = needs_comm(spec.algo)
+                .then(|| SimCommunicator::split_even(p, multilevel::default_groups(p)));
+            machine.run_keys::<K, _, _>(|ctx| run_cell(ctx, comm.as_ref(), spec))
+        }
     };
-    let run = machine.run_keys::<K, _, _>(|ctx| {
-        let local: Vec<K> = generate_typed_for_proc(bench, ctx.pid(), p, n / p);
-        match algo {
-            AlgoVariant::Det => det::sort_det_bsp(ctx, &params, local, n, &cfg),
-            AlgoVariant::Iran => iran::sort_iran_bsp(ctx, &params, local, n, &cfg, seed),
-            AlgoVariant::Ran => ran::sort_ran_bsp(ctx, &params, local, n, &cfg, seed),
-            AlgoVariant::Bsi => bsi::sort_bsi(ctx, local, &cfg),
-            AlgoVariant::Det2 => multilevel::sort_multilevel_det(
-                ctx,
-                comm.as_ref().expect("communicator built for det2"),
-                &params,
-                local,
-                n,
-                &cfg,
-            ),
-            AlgoVariant::Ran2 => multilevel::sort_multilevel_ran(
-                ctx,
-                comm.as_ref().expect("communicator built for ran2"),
-                &params,
-                local,
-                n,
-                &cfg,
-                seed,
-            ),
-            AlgoVariant::HelmanDet => baselines::sort_helman_det(ctx, &params, local, &cfg),
-            AlgoVariant::HelmanRan => {
-                baselines::sort_helman_ran(ctx, &params, local, n, &cfg, seed)
-            }
-            AlgoVariant::Psrs => baselines::sort_psrs(ctx, &params, local, &cfg),
-        }
-    });
 
     let mut total = 0usize;
     let mut last: Option<K> = None;
@@ -210,6 +235,9 @@ pub struct RunRecord {
     pub bench: String,
     /// Key-domain tag (`i32`, `u64`, …).
     pub domain: String,
+    /// Execution-backend tag (`threaded`, `sim`).  For `sim` cells the
+    /// wall statistics are deterministic *virtual* microseconds.
+    pub backend: String,
     /// Total keys.
     pub n: usize,
     /// Processors.
@@ -242,13 +270,21 @@ pub fn measure_typed<K: StudyKey>(
 ) -> RunRecord {
     assert_eq!(cfg.p, calib.p, "calibration/config processor mismatch");
     let sort_cfg = SortConfig::default().with_seq(sweep.seq);
-    let spec = RunSpec::new(cfg.algo, cfg.bench, cfg.p, cfg.n).with_cfg(sort_cfg);
+    let spec = RunSpec::new(cfg.algo, cfg.bench, cfg.p, cfg.n)
+        .with_cfg(sort_cfg)
+        .with_backend(cfg.backend);
     let host = calib.params();
 
-    for w in 0..sweep.warmup {
-        let mut s = spec;
-        s.seed = sweep.seed.wrapping_sub(1 + w as u64);
-        let _ = execute_typed::<K>(&s);
+    // Warmup exists to heat caches and thread pools for the threaded
+    // backend; simulator cells are bit-for-bit deterministic, so warming
+    // them would only re-run the sweep's most expensive cells for
+    // byte-identical results.
+    if cfg.backend == Backend::Threaded {
+        for w in 0..sweep.warmup {
+            let mut s = spec;
+            s.seed = sweep.seed.wrapping_sub(1 + w as u64);
+            let _ = execute_typed::<K>(&s);
+        }
     }
 
     let reps = sweep.reps.max(1);
@@ -339,9 +375,11 @@ pub fn measure_typed<K: StudyKey>(
         algo_label: cfg.algo.label(&sort_cfg),
         bench: cfg.bench.tag(),
         domain: cfg.domain.tag().to_string(),
+        backend: cfg.backend.tag().to_string(),
         n: cfg.n,
         p: cfg.p,
-        warmup: sweep.warmup,
+        // Sim cells skip warmup (deterministic; nothing to warm).
+        warmup: if cfg.backend == Backend::Threaded { sweep.warmup } else { 0 },
         reps,
         wall_us,
         predicted_us,
@@ -409,6 +447,52 @@ mod tests {
     }
 
     #[test]
+    fn sim_backend_executes_all_variants_and_is_deterministic() {
+        // Every variant runs on the simulator through the same
+        // execute_typed entry, and two executions of the same spec are
+        // identical down to the virtual wall clock.
+        for algo in super::super::spec::ALL_ALGOS {
+            let spec = RunSpec::new(algo, Benchmark::Uniform, 8, 1 << 10)
+                .with_backend(Backend::Sim);
+            let a = execute_typed::<i32>(&spec);
+            let b = execute_typed::<i32>(&spec);
+            let ka: Vec<i32> = a.outputs.iter().flat_map(|r| r.keys.clone()).collect();
+            let kb: Vec<i32> = b.outputs.iter().flat_map(|r| r.keys.clone()).collect();
+            assert_eq!(ka, kb, "{algo:?} outputs must replay identically");
+            assert_eq!(
+                a.ledger.wall_us, b.ledger.wall_us,
+                "{algo:?} virtual wall must replay identically"
+            );
+            assert!(a.ledger.wall_us > 0.0);
+        }
+    }
+
+    #[test]
+    fn sim_cell_measures_with_synthetic_calibration() {
+        let sweep = quick_sweep();
+        // Simulator cells price under the model machine itself.
+        let calib = Calibration::from_params(&crate::bsp::params::cray_t3d(64));
+        let cfg = RunConfig {
+            algo: AlgoVariant::Det,
+            bench: Benchmark::Uniform,
+            domain: KeyDomain::I32,
+            n: 1 << 12,
+            p: 64,
+            backend: Backend::Sim,
+        };
+        let rec = measure_typed::<i32>(&cfg, &sweep, &calib);
+        assert_eq!(rec.backend, "sim");
+        assert_eq!(rec.p, 64);
+        assert!(rec.wall_us.mean > 0.0 && rec.predicted_us > 0.0);
+        assert!(rec.ratio.is_finite() && rec.ratio > 0.0);
+        // Deterministic virtual time: re-measuring reproduces the wall
+        // statistics exactly.
+        let rec2 = measure_typed::<i32>(&cfg, &sweep, &calib);
+        assert_eq!(rec.wall_us.mean, rec2.wall_us.mean);
+        assert_eq!(rec.wall_us.stddev, rec2.wall_us.stddev);
+    }
+
+    #[test]
     fn det_run_phase_ratios_are_finite_and_positive() {
         // The satellite requirement: in a small det run, every *priced*
         // phase must carry a finite, positive measured-vs-predicted
@@ -421,6 +505,7 @@ mod tests {
             domain: KeyDomain::I32,
             n: 1 << 12,
             p: 4,
+            backend: Backend::Threaded,
         };
         let rec = measure_typed::<i32>(&cfg, &sweep, &calib);
         let priced: Vec<&PhaseStat> =
@@ -451,6 +536,7 @@ mod tests {
             domain: KeyDomain::U64,
             n: 1 << 12,
             p: 4,
+            backend: Backend::Threaded,
         };
         let rec = measure_config(&cfg, &sweep, &calib);
         assert_eq!(rec.domain, "u64");

@@ -5,6 +5,7 @@
 //! re-exports them): the tables are now one consumer of the experiment
 //! runner among several, not the owner of the run vocabulary.
 
+use crate::bsp::Backend;
 use crate::gen::Benchmark;
 use crate::seq::SeqSortKind;
 use crate::sort::SortConfig;
@@ -135,7 +136,7 @@ impl KeyDomain {
     }
 }
 
-/// One experiment: algorithm × benchmark × (p, n) × config.
+/// One experiment: algorithm × benchmark × (p, n) × config × backend.
 #[derive(Clone, Copy, Debug)]
 pub struct RunSpec {
     /// Which algorithm to run.
@@ -150,10 +151,13 @@ pub struct RunSpec {
     pub cfg: SortConfig,
     /// Seed for randomized variants.
     pub seed: u64,
+    /// Execution backend: threaded engine (default) or the
+    /// deterministic simulator (`p` beyond host threads, seeded replay).
+    pub backend: Backend,
 }
 
 impl RunSpec {
-    /// A spec with the default configuration and seed.
+    /// A spec with the default configuration, seed and backend.
     pub fn new(algo: AlgoVariant, bench: Benchmark, p: usize, n_total: usize) -> RunSpec {
         RunSpec {
             algo,
@@ -162,12 +166,19 @@ impl RunSpec {
             n_total,
             cfg: SortConfig::default(),
             seed: 0x0BEE,
+            backend: Backend::Threaded,
         }
     }
 
     /// Replace the configuration.
     pub fn with_cfg(mut self, cfg: SortConfig) -> RunSpec {
         self.cfg = cfg;
+        self
+    }
+
+    /// Replace the execution backend.
+    pub fn with_backend(mut self, backend: Backend) -> RunSpec {
+        self.backend = backend;
         self
     }
 
@@ -191,6 +202,8 @@ pub struct RunConfig {
     pub n: usize,
     /// Processor count.
     pub p: usize,
+    /// Execution backend for this cell.
+    pub backend: Backend,
 }
 
 /// A full sweep: the cross-product of algorithms × benchmarks × key
@@ -208,6 +221,16 @@ pub struct SweepSpec {
     pub ns: Vec<usize>,
     /// Processor counts.
     pub ps: Vec<usize>,
+    /// Execution backends to cross with the grid (`[Threaded]` by
+    /// default; `--backends sim` runs the whole sweep on the
+    /// deterministic simulator, where `p ∈ {64, 256, 1024}` is fair
+    /// game because virtual processors cost no OS threads' worth of
+    /// contention).
+    pub backends: Vec<Backend>,
+    /// Extra cells appended verbatim after the cross-product — the
+    /// `--quick` preset uses one to ride a sim-backend `det @ p = 256`
+    /// configuration along with its threaded grid.
+    pub extras: Vec<RunConfig>,
     /// Sequential backend for all runs.
     pub seq: SeqSortKind,
     /// Unrecorded warm-up runs per configuration.
@@ -227,7 +250,9 @@ impl SweepSpec {
     /// and `[DD]`, the `i32` and `u64` key domains, p ∈ {4, 8}, 16K
     /// keys, 1 warmup + 2 recorded reps — a complete miniature of the
     /// study (including one multi-level configuration) that finishes in
-    /// seconds.
+    /// seconds.  One extra cell rides the deterministic simulator at
+    /// `det @ p = 256` so every CI smoke also exercises the sim backend
+    /// far beyond sensible thread counts.
     pub fn quick() -> SweepSpec {
         SweepSpec {
             algos: vec![AlgoVariant::Det, AlgoVariant::Ran, AlgoVariant::Det2],
@@ -235,6 +260,15 @@ impl SweepSpec {
             domains: vec![KeyDomain::I32, KeyDomain::U64],
             ns: vec![1 << 14],
             ps: vec![4, 8],
+            backends: vec![Backend::Threaded],
+            extras: vec![RunConfig {
+                algo: AlgoVariant::Det,
+                bench: Benchmark::Uniform,
+                domain: KeyDomain::I32,
+                n: 1 << 14,
+                p: 256,
+                backend: Backend::Sim,
+            }],
             seq: SeqSortKind::Quick,
             warmup: 1,
             reps: 2,
@@ -253,6 +287,8 @@ impl SweepSpec {
             domains: vec![KeyDomain::I32],
             ns: vec![1 << 20, 1 << 22],
             ps: vec![16, 64],
+            backends: vec![Backend::Threaded],
+            extras: Vec::new(),
             seq: SeqSortKind::Quick,
             warmup: 1,
             reps: 3,
@@ -286,6 +322,25 @@ impl SweepSpec {
         if let Some(v) = args.get("domains") {
             spec.domains = split_list(v).map(KeyDomain::parse).collect::<Result<_, _>>()?;
         }
+        if let Some(v) = args.get("backends") {
+            spec.backends = split_list(v)
+                .map(|s| {
+                    Backend::parse(s).ok_or_else(|| {
+                        CliError(format!(
+                            "unknown backend '{s}' (expected one of threaded, sim)"
+                        ))
+                    })
+                })
+                .collect::<Result<_, _>>()?;
+        }
+        // Any explicit grid override replaces the preset's extra cells:
+        // the user asked for exactly this cross-product.
+        if ["algos", "benches", "domains", "backends", "ns", "ps"]
+            .iter()
+            .any(|k| args.get(k).is_some())
+        {
+            spec.extras.clear();
+        }
         spec.ns = args.get_list("ns", &spec.ns)?;
         spec.ps = args.get_list("ps", &spec.ps)?;
         spec.warmup = args.get_parsed("warmup", spec.warmup)?;
@@ -314,6 +369,9 @@ impl SweepSpec {
         if self.ns.is_empty() || self.ps.is_empty() {
             return Err("--ns and --ps must be non-empty".into());
         }
+        if self.backends.is_empty() {
+            return Err("--backends must be non-empty".into());
+        }
         if self.reps == 0 {
             return Err("--reps must be at least 1".into());
         }
@@ -322,6 +380,14 @@ impl SweepSpec {
                 if p == 0 || n % p != 0 {
                     return Err(format!("n={n} does not divide evenly over p={p}"));
                 }
+            }
+        }
+        for extra in &self.extras {
+            if extra.p == 0 || extra.n % extra.p != 0 {
+                return Err(format!(
+                    "extra cell n={} does not divide evenly over p={}",
+                    extra.n, extra.p
+                ));
             }
         }
         if self.tag.is_empty()
@@ -335,8 +401,9 @@ impl SweepSpec {
         Ok(())
     }
 
-    /// The cross-product, in deterministic (algo, bench, domain, n, p)
-    /// nesting order.
+    /// The cross-product, in deterministic
+    /// (algo, bench, domain, n, p, backend) nesting order, followed by
+    /// the [`SweepSpec::extras`] cells verbatim.
     pub fn configs(&self) -> Vec<RunConfig> {
         let mut out = Vec::new();
         for &algo in &self.algos {
@@ -344,12 +411,15 @@ impl SweepSpec {
                 for &domain in &self.domains {
                     for &n in &self.ns {
                         for &p in &self.ps {
-                            out.push(RunConfig { algo, bench, domain, n, p });
+                            for &backend in &self.backends {
+                                out.push(RunConfig { algo, bench, domain, n, p, backend });
+                            }
                         }
                     }
                 }
             }
         }
+        out.extend(self.extras.iter().copied());
         out
     }
 }
@@ -387,8 +457,35 @@ mod tests {
         assert!(spec.algos.contains(&AlgoVariant::Det2));
         assert_eq!(spec.ps, vec![4, 8]);
         assert_eq!(spec.domains.len(), 2);
-        // 3 algos × 2 benches × 2 domains × 1 n × 2 p.
-        assert_eq!(spec.configs().len(), 24);
+        // 3 algos × 2 benches × 2 domains × 1 n × 2 p × 1 backend, plus
+        // the sim-backend det @ p=256 extra cell.
+        assert_eq!(spec.configs().len(), 25);
+        let last = *spec.configs().last().unwrap();
+        assert_eq!(last.backend, Backend::Sim);
+        assert_eq!(last.p, 256);
+        assert_eq!(last.algo, AlgoVariant::Det);
+    }
+
+    #[test]
+    fn backends_axis_crosses_and_overrides_clear_extras() {
+        let args = Args::parse(
+            sv(&["experiment", "--quick", "--backends", "threaded,sim"]),
+            &["backends"],
+        )
+        .unwrap();
+        let spec = SweepSpec::from_args(&args).unwrap();
+        // 24 base cells × 2 backends; the preset's extra is dropped
+        // because the grid was explicitly overridden.
+        assert_eq!(spec.configs().len(), 48);
+        assert!(spec.configs().iter().any(|c| c.backend == Backend::Sim));
+        assert!(spec.configs().iter().any(|c| c.backend == Backend::Threaded));
+
+        let args = Args::parse(
+            sv(&["experiment", "--quick", "--backends", "warp-drive"]),
+            &["backends"],
+        )
+        .unwrap();
+        assert!(SweepSpec::from_args(&args).is_err());
     }
 
     #[test]

@@ -62,6 +62,7 @@
 //! let mut spec = SweepSpec::quick();   // the CI-sized preset…
 //! spec.ns = vec![2048];                // …shrunk further for a doctest
 //! spec.ps = vec![4];
+//! spec.extras.clear();                 // …and without its sim @ p=256 cell
 //! spec.reps = 1;
 //! spec.warmup = 0;
 //! spec.probes = ProbePlan::quick();

@@ -24,6 +24,7 @@ use std::path::Path;
 
 use bsp_sort::bsp::engine::BspMachine;
 use bsp_sort::bsp::params::cray_t3d;
+use bsp_sort::bsp::Backend;
 use bsp_sort::experiment::{self, SweepSpec};
 use bsp_sort::gen::Benchmark;
 use bsp_sort::metrics::RunReport;
@@ -37,6 +38,7 @@ use bsp_sort::util::json::Json;
 const VALUE_OPTS: &[&str] = &[
     "max-n", "max-p", "reps", "seed", "algo", "bench", "n", "p", "seq", "table",
     "algos", "benches", "domains", "ns", "ps", "warmup", "tag", "out",
+    "backend", "backends",
 ];
 
 fn main() {
@@ -125,6 +127,13 @@ fn run(cmd: &str, args: &Args) -> Result<(), Box<dyn std::error::Error>> {
             if args.flag("no-dup") {
                 cfg = cfg.with_dup(DuplicatePolicy::Off);
             }
+            // --backend sim runs the same program on the deterministic
+            // simulator: virtual processors (p beyond host threads),
+            // virtual time, seeded replay.
+            let backend_tag = args.get("backend").unwrap_or("threaded");
+            let backend = Backend::parse(backend_tag).ok_or_else(|| {
+                format!("unknown --backend '{backend_tag}' (expected threaded or sim)")
+            })?;
             let spec = runner::RunSpec {
                 algo,
                 bench,
@@ -132,6 +141,7 @@ fn run(cmd: &str, args: &Args) -> Result<(), Box<dyn std::error::Error>> {
                 n_total: n,
                 cfg,
                 seed: opts.seed,
+                backend,
             };
             let report = runner::execute(&spec);
             print_report(&report);
@@ -260,9 +270,10 @@ USAGE:
   bsp-sort all-tables [--full]
   bsp-sort sort --algo det|iran|ran|bsi|det2|ran2|helman-det|helman-ran|psrs
                 --bench U|G|B|2-G|S|DD|WR --n 8388608 --p 64
-                [--seq quick|radix] [--no-dup]
+                [--seq quick|radix] [--no-dup] [--backend threaded|sim]
   bsp-sort experiment [--quick] [--algos det,ran,...] [--benches U,DD,...]
                       [--domains i32,u64,f64,record] [--ns N1,N2] [--ps P1,P2]
+                      [--backends threaded,sim]
                       [--warmup W] [--reps R] [--seed S] [--seq quick|radix]
                       [--tag T] [--out DIR]
   bsp-sort predict | validate-g | ablate-dup
@@ -274,9 +285,16 @@ Tables report *predicted Cray T3D seconds* from the BSP cost model
 
 `experiment` calibrates the host's (g, L) and operation rate from
 micro-probes, runs the sweep cross-product with warmup + repetitions,
-and writes BENCH_<tag>.json (schema bsp-sort/experiment-report/v2,
+and writes BENCH_<tag>.json (schema bsp-sort/experiment-report/v3,
 validated after writing) plus BENCH_<tag>.md.  --quick is the CI-sized
-preset: det+ran+det2 on [U]+[DD], i32+u64, 16K keys, p in {4,8}.
+preset: det+ran+det2 on [U]+[DD], i32+u64, 16K keys, p in {4,8}, plus
+one sim-backend cell (det @ p=256).
+
+--backend sim (sort) / --backends sim (experiment) runs on the
+deterministic simulator: the identical SPMD programs on single-process
+virtual processors with virtual time — bit-for-bit replayable, p up to
+1024 and beyond.  Sim cells are priced under the model machine itself
+(no host calibration), so their reports are fully deterministic.
 
 det2/ran2 are the two-level sorts: coarse splitters route key ranges to
 processor groups, then the one-level algorithm runs group-locally over

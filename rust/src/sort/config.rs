@@ -1,7 +1,15 @@
 //! Algorithm configuration: sequential backend, oversampling, duplicate
 //! policy, and sample-sort method — the knobs §6.1/§6.2 describe.
+//!
+//! The *execution* backend selector ([`Backend`]: threaded engine vs
+//! deterministic simulator) is re-exported here; it rides
+//! `experiment::spec::RunSpec`/`RunConfig` (and the CLI's `--backend`)
+//! rather than [`SortConfig`], because the sorting algorithms themselves
+//! are backend-agnostic — they only see a `BspScope`.
 
 use crate::seq::SeqSortKind;
+
+pub use crate::bsp::Backend;
 
 /// Transparent duplicate handling (§5.1.1) on or off.
 ///

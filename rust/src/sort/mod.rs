@@ -54,7 +54,7 @@ pub mod multilevel;
 pub mod ran;
 
 pub use common::ProcResult;
-pub use config::{DuplicatePolicy, Oversampling, SampleSortMethod, SortConfig};
+pub use config::{Backend, DuplicatePolicy, Oversampling, SampleSortMethod, SortConfig};
 
 /// Which top-level algorithm to run (CLI / tables dispatch).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]

@@ -31,8 +31,8 @@
 //! pid order because [`Communicator::split_even`] assigns contiguous
 //! ascending pid blocks to ascending coarse key ranges.
 
-use crate::bsp::engine::{BspCtx, BspScope};
-use crate::bsp::group::Communicator;
+use crate::bsp::engine::BspScope;
+use crate::bsp::group::{GroupPartition, GroupedScope};
 use crate::bsp::msg::{Payload, SampleRec};
 use crate::bsp::params::BspParams;
 use crate::key::RadixKey;
@@ -73,12 +73,18 @@ pub fn default_groups(p: usize) -> usize {
 /// levels).
 ///
 /// SPMD over the *whole* machine: every processor calls this inside
-/// `BspMachine::run` with the shared `comm` (constructed outside the
-/// run, e.g. [`Communicator::split_even`]`(p, `[`default_groups`]`(p))`).
-/// With a single group this degrades to the one-level algorithm.
-pub fn sort_multilevel_det<K: RadixKey>(
-    ctx: &mut BspCtx<K>,
-    comm: &Communicator,
+/// `BspMachine::run` (or `SimMachine::run`) with the shared `comm` —
+/// the scope's backend-matched communicator, constructed outside the
+/// run, e.g.
+/// [`Communicator::split_even`](crate::bsp::group::Communicator::split_even)`(p, `[`default_groups`]`(p))`
+/// for the threaded engine or
+/// [`SimCommunicator::split_even`](crate::bsp::sim::SimCommunicator::split_even)
+/// for the simulator.  Generic over [`GroupedScope`], so the identical
+/// program text runs on either backend.  With a single group this
+/// degrades to the one-level algorithm.
+pub fn sort_multilevel_det<K: RadixKey, S: GroupedScope<K>>(
+    ctx: &mut S,
+    comm: &S::Comm,
     params: &BspParams,
     mut local: Vec<K>,
     n_total: usize,
@@ -173,7 +179,7 @@ pub fn sort_multilevel_det<K: RadixKey>(
 
     // --- Level 2: the one-level algorithm, group-locally --------------
     let group_params = params.scaled_to(comm.group_size(comm.group_of(pid)));
-    let mut g = comm.enter(ctx, LEVEL2_PREFIX);
+    let mut g = ctx.enter_group(comm, LEVEL2_PREFIX);
     g.phase(PH1);
     let (_, totals) = prefix::prefix_direct(&mut g, &[received as u64], "l2:count");
     let group_n = totals[0] as usize;
@@ -183,11 +189,12 @@ pub fn sort_multilevel_det<K: RadixKey>(
 /// Two-level randomized sample sort (coarse random splitters, then the
 /// classic one-level SORT_RAN_BSP group-locally).
 ///
-/// Same SPMD contract as [`sort_multilevel_det`]; `seed` decorrelates
-/// the random samples across runs and (internally) across groups.
-pub fn sort_multilevel_ran<K: RadixKey>(
-    ctx: &mut BspCtx<K>,
-    comm: &Communicator,
+/// Same SPMD contract (and backend genericity) as
+/// [`sort_multilevel_det`]; `seed` decorrelates the random samples
+/// across runs and (internally) across groups.
+pub fn sort_multilevel_ran<K: RadixKey, S: GroupedScope<K>>(
+    ctx: &mut S,
+    comm: &S::Comm,
     params: &BspParams,
     local: Vec<K>,
     n_total: usize,
@@ -261,7 +268,7 @@ pub fn sort_multilevel_ran<K: RadixKey>(
     // --- Level 2: the one-level algorithm, group-locally --------------
     let group = comm.group_of(pid);
     let group_params = params.scaled_to(comm.group_size(group));
-    let mut g = comm.enter(ctx, LEVEL2_PREFIX);
+    let mut g = ctx.enter_group(comm, LEVEL2_PREFIX);
     g.phase(PH1);
     let (_, totals) = prefix::prefix_direct(&mut g, &[received as u64], "l2:count");
     let group_n = totals[0] as usize;
@@ -273,6 +280,7 @@ pub fn sort_multilevel_ran<K: RadixKey>(
 mod tests {
     use super::*;
     use crate::bsp::engine::BspMachine;
+    use crate::bsp::group::Communicator;
     use crate::bsp::params::cray_t3d;
     use crate::gen::{generate_for_proc, Benchmark, ALL_BENCHMARKS};
 

@@ -229,11 +229,13 @@ fn req_arr<'a>(ctx: &str, doc: &'a Json, key: &str) -> Result<&'a [Json], String
 }
 
 /// Validate a parsed experiment report against the
-/// `bsp-sort/experiment-report/v2` schema: schema tag, non-empty
+/// `bsp-sort/experiment-report/v3` schema: schema tag, non-empty
 /// calibrations with positive (g, L, rate), non-empty runs each carrying
-/// wall-clock statistics, a positive end-to-end measured-vs-predicted
-/// ratio, per-phase rows (ratio positive or `null` for unpriced phases),
-/// balance metrics and a superstep trace.  Returns the first violation.
+/// an execution-backend tag (`threaded` | `sim`), wall-clock statistics
+/// (virtual µs for `sim` runs), a positive end-to-end
+/// measured-vs-predicted ratio, per-phase rows (ratio positive or
+/// `null` for unpriced phases), balance metrics and a superstep trace.
+/// Returns the first violation.
 pub fn validate_report(doc: &Json) -> Result<(), String> {
     let schema = field("report", doc, "schema")?
         .as_str()
@@ -253,6 +255,17 @@ pub fn validate_report(doc: &Json) -> Result<(), String> {
     for (i, c) in calibs.iter().enumerate() {
         let ctx = format!("calibrations[{i}]");
         req_positive(&ctx, c, "p")?;
+        // v3: each calibration names the backend it prices (threaded =
+        // host probes, sim = synthetic model parameters); consumers
+        // join runs↔calibrations by (p, backend).
+        let backend = field(&ctx, c, "backend")?
+            .as_str()
+            .ok_or_else(|| format!("{ctx}: 'backend' must be a string"))?;
+        if crate::bsp::Backend::parse(backend).is_none() {
+            return Err(format!(
+                "{ctx}: unknown backend '{backend}' (expected 'threaded' or 'sim')"
+            ));
+        }
         req_positive(&ctx, c, "l_us")?;
         req_positive(&ctx, c, "g_us_per_word")?;
         req_positive(&ctx, c, "comps_per_us")?;
@@ -271,6 +284,15 @@ pub fn validate_report(doc: &Json) -> Result<(), String> {
         let ctx = format!("runs[{i}]");
         for key in ["algo", "algo_label", "bench", "domain"] {
             req_str(&ctx, r, key)?;
+        }
+        // v3: every run names its execution backend.
+        let backend = field(&ctx, r, "backend")?
+            .as_str()
+            .ok_or_else(|| format!("{ctx}: 'backend' must be a string"))?;
+        if crate::bsp::Backend::parse(backend).is_none() {
+            return Err(format!(
+                "{ctx}: unknown backend '{backend}' (expected 'threaded' or 'sim')"
+            ));
         }
         req_positive(&ctx, r, "n")?;
         req_positive(&ctx, r, "p")?;
@@ -383,7 +405,8 @@ mod tests {
         // The regression the schema gate exists for: a real (tiny)
         // sweep at n = 4096, p = 4 must survive serialize → parse →
         // validate without the validator and the writer drifting apart.
-        use crate::experiment::{self, AlgoVariant, KeyDomain, ProbePlan, SweepSpec};
+        use crate::bsp::Backend;
+        use crate::experiment::{self, AlgoVariant, KeyDomain, ProbePlan, RunConfig, SweepSpec};
         let mut spec = SweepSpec::quick();
         // det2 exercises the group-scoped superstep fields (procs,
         // non-null round) through the serializer and the validator.
@@ -392,6 +415,16 @@ mod tests {
         spec.domains = vec![KeyDomain::I32, KeyDomain::U64];
         spec.ns = vec![4096];
         spec.ps = vec![4];
+        // A small sim-backend extra exercises the v3 backend field (and
+        // the synthetic model calibration) through the round-trip.
+        spec.extras = vec![RunConfig {
+            algo: AlgoVariant::Det,
+            bench: Benchmark::Uniform,
+            domain: KeyDomain::I32,
+            n: 4096,
+            p: 16,
+            backend: Backend::Sim,
+        }];
         spec.warmup = 0;
         spec.reps = 2;
         spec.tag = "roundtrip".into();
@@ -406,8 +439,9 @@ mod tests {
         let parsed = Json::parse(&text).expect("report must parse back");
         validate_report(&parsed).expect("report must validate against the schema");
         let runs = parsed.get("runs").unwrap().as_arr().unwrap();
-        assert_eq!(runs.len(), 4, "det+det2 × i32+u64");
+        assert_eq!(runs.len(), 5, "det+det2 × i32+u64, plus the sim extra");
         assert_eq!(runs[0].get("n").unwrap().as_u64(), Some(4096));
+        assert_eq!(runs[0].get("backend").unwrap().as_str(), Some("threaded"));
         // The det2 runs carry group-scoped supersteps: procs below the
         // machine p with a non-null round.
         let det2 = runs
@@ -419,6 +453,55 @@ mod tests {
             s.get("procs").unwrap().as_u64() == Some(2)
                 && !s.get("round").unwrap().is_null()
         }));
+        // The sim extra survives the round-trip with its backend tag
+        // and deterministic (virtual) wall statistics.
+        let sim = runs
+            .iter()
+            .find(|r| r.get("backend").unwrap().as_str() == Some("sim"))
+            .expect("sim run present");
+        assert_eq!(sim.get("p").unwrap().as_u64(), Some(16));
+        assert_eq!(sim.get("algo").unwrap().as_str(), Some("det"));
+        // And its pricing parameters are present, joinable by
+        // (p, backend): a synthetic model calibration at p = 16 next to
+        // the host calibration at p = 4.
+        let calibs = parsed.get("calibrations").unwrap().as_arr().unwrap();
+        assert!(calibs.iter().any(|c| {
+            c.get("p").unwrap().as_u64() == Some(16)
+                && c.get("backend").unwrap().as_str() == Some("sim")
+        }));
+        assert!(calibs.iter().any(|c| {
+            c.get("p").unwrap().as_u64() == Some(4)
+                && c.get("backend").unwrap().as_str() == Some("threaded")
+        }));
+    }
+
+    #[test]
+    fn validate_report_rejects_unknown_backend() {
+        // Take a valid single-run shell and corrupt only the backend.
+        let doc = Json::parse(&format!(
+            r#"{{"schema": "{SCHEMA}", "tag": "t", "created_unix_secs": 1,
+                 "os": "linux", "arch": "x86_64",
+                 "calibrations": [{{"p": 4, "backend": "threaded", "l_us": 1.0,
+                   "g_us_per_word": 0.1, "comps_per_us": 10.0,
+                   "fit_intercept_us": 1.0, "fit_r2": 1.0,
+                   "a2a_points": [[64, 7.4]]}}],
+                 "runs": [{{"algo": "det", "algo_label": "[DSQ]", "bench": "[U]",
+                   "domain": "i32", "backend": "carrier-pigeon"}}]}}"#
+        ))
+        .unwrap();
+        let err = validate_report(&doc).unwrap_err();
+        assert!(err.contains("unknown backend"), "{err}");
+        assert!(err.contains("carrier-pigeon"), "{err}");
+        // The same gate covers calibrations.
+        let doc = Json::parse(&format!(
+            r#"{{"schema": "{SCHEMA}", "tag": "t", "created_unix_secs": 1,
+                 "os": "linux", "arch": "x86_64",
+                 "calibrations": [{{"p": 4, "backend": "abacus", "l_us": 1.0}}],
+                 "runs": []}}"#
+        ))
+        .unwrap();
+        let err = validate_report(&doc).unwrap_err();
+        assert!(err.contains("calibrations[0]") && err.contains("abacus"), "{err}");
     }
 
     #[test]

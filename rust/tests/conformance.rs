@@ -1,0 +1,398 @@
+//! Property-based conformance suite on the deterministic simulator
+//! backend (`bsp::sim::SimMachine`).
+//!
+//! The paper's claims are statements about *any* BSP machine: the output
+//! is the sorted permutation of the input, duplicate handling is
+//! transparent (§5.1.1), and the routed sets are balanced — Lemma 5.1
+//! bounds the keys received by any processor by `(1 + ε)·n/p` plus an
+//! additive oversampling term, with `ε = 1/⌈ω⌉` from the configured
+//! oversampling ratio.  The threaded engine can only check this up to
+//! the host's thread budget; the simulator checks it at `p` up to 1024,
+//! seeded and bit-for-bit replayable.
+//!
+//! ~200 seeded cases: every algorithm variant and baseline ×
+//! benchmark distributions × all four key domains × `p ∈ {4 .. 1024}`.
+//! Each case asserts:
+//!
+//! 1. **sortedness + size** (inside `execute_typed`, the harness gate),
+//! 2. **permutation** — order-independent multiset hash of the output
+//!    equals the regenerated input's,
+//! 3. **balance** — `received ≤ bound(algo, n, p, ω)`: the exact
+//!    Lemma 5.1 bound for SORT_DET_BSP, the exact `n/p` for \[BSI\], a
+//!    slackened high-probability envelope for the randomized and
+//!    two-level variants (no bound for the [39]/[40]/[44] baselines —
+//!    [44] deliberately cannot handle duplicates),
+//! 4. duplicate **transparency** — the `[DD]` cases run the same
+//!    balance bound under massive key equality.
+//!
+//! On failure the panic message carries the case label and replay seed.
+//!
+//! The suite ends with the backend-equivalence test: the same program +
+//! seed on `BspMachine` (p = 8) and `SimMachine` (p = 8) must produce
+//! identical sorted output and identical per-phase/per-superstep
+//! *charged* accounting (ops, words, superstep structure) — wall-clock
+//! is real µs on one and virtual µs on the other, and is exactly the
+//! field the comparison skips.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use bsp_sort::bsp::{Backend, Ledger};
+use bsp_sort::experiment::{execute_typed, AlgoVariant, RunSpec, StudyKey, ALL_ALGOS};
+use bsp_sort::gen::{generate_typed_for_proc, Benchmark};
+use bsp_sort::key::{Key, Record, F64};
+use bsp_sort::sort::{det, iran, SampleSortMethod, SortConfig};
+
+/// One SplitMix64 step (the crate's own RNG), used as a scrambler for
+/// key words and case seeds.
+fn mix(z: u64) -> u64 {
+    bsp_sort::util::rng::SplitMix64::new(z).next_u64()
+}
+
+/// Order-independent multiset fingerprint over a key stream: element
+/// hashes combined with commutative reductions (sum, xor, sum of
+/// squares) plus the count — a collision needs equal counts *and* three
+/// simultaneous 64-bit coincidences.
+fn multiset_hash<K: Key>(keys: impl Iterator<Item = K>) -> (u64, u64, u64, usize) {
+    let (mut sum, mut xor, mut sq, mut count) = (0u64, 0u64, 0u64, 0usize);
+    let mut words: Vec<u64> = Vec::with_capacity(2);
+    for k in keys {
+        words.clear();
+        k.encode(&mut words);
+        let mut h = 0x6B73_6F72_7462_7370u64;
+        for &w in &words {
+            h = mix(h ^ w);
+        }
+        sum = sum.wrapping_add(h);
+        xor ^= h;
+        sq = sq.wrapping_add(h.wrapping_mul(h));
+        count += 1;
+    }
+    (sum, xor, sq, count)
+}
+
+/// The per-algorithm balance bound on keys received by any processor,
+/// or `None` for baselines without a paper guarantee ([44]/PSRS is the
+/// documented counter-example: it cannot handle duplicates at all).
+fn balance_bound(algo: AlgoVariant, n: usize, p: usize, cfg: &SortConfig) -> Option<f64> {
+    let npp = n as f64 / p as f64;
+    match algo {
+        // Lemma 5.1, deterministic guarantee: (1 + 1/⌈ω⌉)·n/p + ⌈ω⌉·p.
+        AlgoVariant::Det => Some(det::nmax_bound(n, p, det::omega_det(cfg, n))),
+        // Claim 5.1 high-probability bound (1 + 1/ω)·n/p, slackened
+        // (×1.5 + ω·p + 64) so fixed seeds at small n/p stay robust.
+        AlgoVariant::Iran | AlgoVariant::Ran => {
+            let w = iran::omega_ran(cfg, n);
+            Some(1.5 * iran::nmax_bound(n, p, w) + w * p as f64 + 64.0)
+        }
+        // Bitonic merge-split preserves local sizes exactly.
+        AlgoVariant::Bsi => Some(npp),
+        // Two levels compose two oversampling slacks; a generous
+        // envelope still catches any duplicate-collapse (which would
+        // put Θ(n) keys on one processor).
+        AlgoVariant::Det2 | AlgoVariant::Ran2 => {
+            let r = det::omega_det(cfg, n).ceil().max(1.0);
+            Some(3.0 * npp + 4.0 * r * p as f64 + 256.0)
+        }
+        AlgoVariant::HelmanDet | AlgoVariant::HelmanRan | AlgoVariant::Psrs => None,
+    }
+}
+
+/// The configuration a case runs with.  Large-`p` cases use sequential
+/// sample sorting and ω = 1: the p²·⌈ω⌉ sample is intrinsic to the
+/// algorithms, and ω = 1 keeps it (and the suite's runtime) at its
+/// minimum while Lemma 5.1 still holds exactly (with ε = 1).
+fn case_cfg(p: usize) -> SortConfig {
+    if p >= 256 {
+        SortConfig::default()
+            .with_sample_sort(SampleSortMethod::Sequential)
+            .with_omega(1.0)
+    } else {
+        SortConfig::default()
+    }
+}
+
+/// Run one seeded case on the simulator backend and check every
+/// conformance property.  Panics carry the case label + replay seed.
+fn check_case<K: StudyKey>(algo: AlgoVariant, bench: Benchmark, n: usize, p: usize, seed: u64) {
+    let cfg = case_cfg(p);
+    let label = format!(
+        "algo={} bench={} domain={} n={n} p={p} backend=sim replay-seed={seed:#x}",
+        algo.tag(),
+        bench.tag(),
+        K::NAME,
+    );
+    let mut spec = RunSpec::new(algo, bench, p, n).with_cfg(cfg).with_backend(Backend::Sim);
+    spec.seed = seed;
+
+    let single = match catch_unwind(AssertUnwindSafe(|| execute_typed::<K>(&spec))) {
+        Ok(s) => s,
+        Err(e) => {
+            let msg = e
+                .downcast_ref::<String>()
+                .map(String::as_str)
+                .or_else(|| e.downcast_ref::<&str>().copied())
+                .unwrap_or("non-string panic payload");
+            panic!("[conformance] {label}: execution failed: {msg}");
+        }
+    };
+
+    // Permutation: multiset fingerprint of output == regenerated input.
+    let out_hash = multiset_hash(single.outputs.iter().flat_map(|r| r.keys.iter().copied()));
+    let in_hash = multiset_hash(
+        (0..p).flat_map(|pid| generate_typed_for_proc::<K>(bench, pid, p, n / p).into_iter()),
+    );
+    assert_eq!(
+        in_hash, out_hash,
+        "[conformance] {label}: output is not a permutation of the input"
+    );
+
+    // Balance / duplicate transparency: Lemma 5.1-style received bound.
+    if let Some(bound) = balance_bound(algo, n, p, &cfg) {
+        for (pid, r) in single.outputs.iter().enumerate() {
+            assert!(
+                (r.received as f64) <= bound + 1.0,
+                "[conformance] {label} pid={pid}: received {} keys > balance bound {bound:.1}",
+                r.received
+            );
+        }
+    }
+}
+
+/// Derive a distinct, fixed replay seed per case index.
+fn case_seed(tier: u64, idx: u64) -> u64 {
+    mix(0xC0F0_0000 ^ (tier << 32) ^ idx)
+}
+
+fn sweep_tier<K: StudyKey>(
+    tier: u64,
+    algos: &[AlgoVariant],
+    benches: &[Benchmark],
+    n: usize,
+    p: usize,
+) {
+    let mut idx = 0u64;
+    for &algo in algos {
+        for &bench in benches {
+            check_case::<K>(algo, bench, n, p, case_seed(tier, idx));
+            idx += 1;
+        }
+    }
+}
+
+// --------------------------------------------------------------------
+// Tier A: p = 4 — every algorithm × {U, DD, S} × every key domain
+// (108 cases).
+// --------------------------------------------------------------------
+
+const TIER_A_BENCHES: [Benchmark; 3] =
+    [Benchmark::Uniform, Benchmark::DetDup, Benchmark::Staggered];
+
+#[test]
+fn conformance_p4_i32_all_algos() {
+    sweep_tier::<i32>(1, &ALL_ALGOS, &TIER_A_BENCHES, 1 << 12, 4);
+}
+
+#[test]
+fn conformance_p4_u64_all_algos() {
+    sweep_tier::<u64>(2, &ALL_ALGOS, &TIER_A_BENCHES, 1 << 12, 4);
+}
+
+#[test]
+fn conformance_p4_f64_all_algos() {
+    sweep_tier::<F64>(3, &ALL_ALGOS, &TIER_A_BENCHES, 1 << 12, 4);
+}
+
+#[test]
+fn conformance_p4_record_all_algos() {
+    sweep_tier::<Record>(4, &ALL_ALGOS, &TIER_A_BENCHES, 1 << 12, 4);
+}
+
+// --------------------------------------------------------------------
+// Tier B: p = 64 — every algorithm × {U, WR} on i32 (18 cases); [WR]
+// is the regular-sampling adversary of [39].
+// --------------------------------------------------------------------
+
+#[test]
+fn conformance_p64_i32_uniform_and_adversarial() {
+    sweep_tier::<i32>(
+        5,
+        &ALL_ALGOS,
+        &[Benchmark::Uniform, Benchmark::WorstRegular],
+        1 << 14,
+        64,
+    );
+}
+
+// --------------------------------------------------------------------
+// Tier C: p = 256 — every algorithm × {U (i32 + u64), DD (i32)}
+// (27 cases).
+// --------------------------------------------------------------------
+
+#[test]
+fn conformance_p256_uniform_i32() {
+    sweep_tier::<i32>(6, &ALL_ALGOS, &[Benchmark::Uniform], 1 << 16, 256);
+}
+
+#[test]
+fn conformance_p256_uniform_u64() {
+    sweep_tier::<u64>(7, &ALL_ALGOS, &[Benchmark::Uniform], 1 << 16, 256);
+}
+
+#[test]
+fn conformance_p256_duplicates_i32() {
+    sweep_tier::<i32>(8, &ALL_ALGOS, &[Benchmark::DetDup], 1 << 16, 256);
+}
+
+// --------------------------------------------------------------------
+// Tier D: p = 1024 — the acceptance grid: all six sort variants + both
+// baseline families, for every key domain (36 cases), plus duplicate
+// transparency at p = 1024 (7 cases).
+// --------------------------------------------------------------------
+
+const P1024_N: usize = 1 << 14; // 16 keys per virtual processor
+
+#[test]
+fn conformance_p1024_i32_all_algos() {
+    sweep_tier::<i32>(9, &ALL_ALGOS, &[Benchmark::Uniform], P1024_N, 1024);
+}
+
+#[test]
+fn conformance_p1024_u64_all_algos() {
+    sweep_tier::<u64>(10, &ALL_ALGOS, &[Benchmark::Uniform], P1024_N, 1024);
+}
+
+#[test]
+fn conformance_p1024_f64_all_algos() {
+    sweep_tier::<F64>(11, &ALL_ALGOS, &[Benchmark::Uniform], P1024_N, 1024);
+}
+
+#[test]
+fn conformance_p1024_record_all_algos() {
+    sweep_tier::<Record>(12, &ALL_ALGOS, &[Benchmark::Uniform], P1024_N, 1024);
+}
+
+#[test]
+fn conformance_p1024_duplicate_transparency() {
+    // Massive key equality at p = 1024: the tagged algorithms stay
+    // within their balance bounds; the tagging baselines ([39]/[40])
+    // must still sort correctly (no bound is asserted for them).
+    sweep_tier::<i32>(
+        13,
+        &[
+            AlgoVariant::Det,
+            AlgoVariant::Iran,
+            AlgoVariant::Ran,
+            AlgoVariant::Det2,
+            AlgoVariant::Ran2,
+            AlgoVariant::HelmanDet,
+            AlgoVariant::HelmanRan,
+        ],
+        &[Benchmark::DetDup],
+        P1024_N,
+        1024,
+    );
+}
+
+// --------------------------------------------------------------------
+// Backend equivalence: threaded engine vs simulator at p = 8.
+// --------------------------------------------------------------------
+
+/// Charged-accounting equality between two ledgers: identical superstep
+/// structure (labels, phases, procs, rounds) and identical charged
+/// numbers (ops, h, total words), identical per-phase charge maxima —
+/// wall-clock fields (real µs vs virtual µs) are exactly what may
+/// differ between the backends, and are skipped.
+fn assert_charged_equivalence(thr: &Ledger, sim: &Ledger, label: &str) {
+    assert_eq!(
+        thr.supersteps.len(),
+        sim.supersteps.len(),
+        "{label}: superstep count differs"
+    );
+    for (i, (a, b)) in thr.supersteps.iter().zip(&sim.supersteps).enumerate() {
+        assert_eq!(a.label, b.label, "{label} superstep {i}: label");
+        assert_eq!(a.phase, b.phase, "{label} superstep {i}: phase");
+        assert_eq!(a.max_ops, b.max_ops, "{label} superstep {i} ({}): max_ops", a.label);
+        assert_eq!(a.h_words, b.h_words, "{label} superstep {i} ({}): h_words", a.label);
+        assert_eq!(
+            a.total_words, b.total_words,
+            "{label} superstep {i} ({}): total_words",
+            a.label
+        );
+        assert_eq!(a.procs, b.procs, "{label} superstep {i}: procs");
+        assert_eq!(a.reporters, b.reporters, "{label} superstep {i}: reporters");
+        assert_eq!(a.round, b.round, "{label} superstep {i}: round");
+    }
+    let thr_phases: Vec<&String> = thr.phases.keys().collect();
+    let sim_phases: Vec<&String> = sim.phases.keys().collect();
+    assert_eq!(thr_phases, sim_phases, "{label}: phase sets differ");
+    for (name, a) in &thr.phases {
+        let b = &sim.phases[name];
+        assert_eq!(a.max_ops, b.max_ops, "{label} phase {name}: charged ops");
+        assert_eq!(a.h_words, b.h_words, "{label} phase {name}: h words");
+        assert_eq!(a.supersteps, b.supersteps, "{label} phase {name}: superstep count");
+    }
+}
+
+#[test]
+fn backend_equivalence_identical_output_and_charges_p8() {
+    // Same program + same seed on both backends: identical sorted
+    // output, identical charged op counts per phase and per superstep.
+    let (p, n, seed) = (8usize, 1 << 12, 0x5EED_CAFEu64);
+    for algo in ALL_ALGOS {
+        let mut spec = RunSpec::new(algo, Benchmark::Staggered, p, n);
+        spec.seed = seed;
+        let threaded = execute_typed::<i32>(&spec.with_backend(Backend::Threaded));
+        let sim = execute_typed::<i32>(&spec.with_backend(Backend::Sim));
+        let label = format!("equivalence algo={}", algo.tag());
+
+        let thr_keys: Vec<i32> =
+            threaded.outputs.iter().flat_map(|r| r.keys.iter().copied()).collect();
+        let sim_keys: Vec<i32> =
+            sim.outputs.iter().flat_map(|r| r.keys.iter().copied()).collect();
+        assert_eq!(thr_keys, sim_keys, "{label}: outputs differ");
+        for (pid, (a, b)) in threaded.outputs.iter().zip(&sim.outputs).enumerate() {
+            assert_eq!(a.received, b.received, "{label} pid={pid}: received");
+            assert_eq!(a.keys.len(), b.keys.len(), "{label} pid={pid}: chunk size");
+        }
+
+        assert_charged_equivalence(&threaded.ledger, &sim.ledger, &label);
+    }
+}
+
+#[test]
+fn backend_equivalence_heavy_duplicates_p8() {
+    // The §5.1.1 pressure case: both backends agree under massive key
+    // equality too (tag streams and all).
+    let (p, n, seed) = (8usize, 1 << 12, 0x00D0_D0D0u64);
+    for algo in [AlgoVariant::Det, AlgoVariant::Ran, AlgoVariant::Det2] {
+        let mut spec = RunSpec::new(algo, Benchmark::DetDup, p, n);
+        spec.seed = seed;
+        let threaded = execute_typed::<u64>(&spec.with_backend(Backend::Threaded));
+        let sim = execute_typed::<u64>(&spec.with_backend(Backend::Sim));
+        let label = format!("dup-equivalence algo={}", algo.tag());
+        let thr_keys: Vec<u64> =
+            threaded.outputs.iter().flat_map(|r| r.keys.iter().copied()).collect();
+        let sim_keys: Vec<u64> =
+            sim.outputs.iter().flat_map(|r| r.keys.iter().copied()).collect();
+        assert_eq!(thr_keys, sim_keys, "{label}: outputs differ");
+        assert_charged_equivalence(&threaded.ledger, &sim.ledger, &label);
+    }
+}
+
+#[test]
+fn sim_replay_is_bit_for_bit_across_runs() {
+    // The replay guarantee the failure messages rely on: running the
+    // same spec twice gives identical outputs AND identical virtual
+    // wall times (not just identical charges).
+    let mut spec = RunSpec::new(AlgoVariant::Iran, Benchmark::Gaussian, 64, 1 << 13)
+        .with_backend(Backend::Sim);
+    spec.seed = 0x1234_5678;
+    let a = execute_typed::<i32>(&spec);
+    let b = execute_typed::<i32>(&spec);
+    assert_eq!(a.ledger.wall_us, b.ledger.wall_us);
+    assert_eq!(a.ledger.supersteps.len(), b.ledger.supersteps.len());
+    for (x, y) in a.ledger.supersteps.iter().zip(&b.ledger.supersteps) {
+        assert_eq!(x.wall_us, y.wall_us, "virtual wall must replay exactly");
+        assert_eq!(x.max_ops, y.max_ops);
+    }
+}
