@@ -1,6 +1,6 @@
 #!/usr/bin/env bash
 # Tier-1 gate plus hygiene checks.
-# Usage: ./ci.sh [--check-xla|--check-links|--conformance]
+# Usage: ./ci.sh [--check-xla|--check-links|--conformance|--planner-smoke]
 #
 # This is what .github/workflows/ci.yml runs; keep it the single source
 # of truth for "does the repo pass".
@@ -14,12 +14,16 @@
 #                         of the default run)
 #   ./ci.sh --conformance release-mode run of the simulator-backend
 #                         conformance suite (seeded property tests at
-#                         p up to 1024 + backend equivalence).  The same
-#                         suite also runs (debug) inside `cargo test`;
-#                         this mode is the fast, large-p-focused CI job
-#                         — single-threaded virtual processors, so its
-#                         runtime does not depend on the host's core
-#                         count.
+#                         p up to 4096 + backend equivalence), plus the
+#                         topology-planner smoke and acceptance tests.
+#                         The same suite also runs (debug) inside
+#                         `cargo test`; this mode is the fast,
+#                         large-p-focused CI job — single-threaded
+#                         virtual processors, so its runtime does not
+#                         depend on the host's core count.
+#   ./ci.sh --planner-smoke
+#                         just the planner smoke tests: flat at small
+#                         p/cheap L, deeper topology under punishing L.
 set -euo pipefail
 cd "$(dirname "$0")"
 
@@ -57,9 +61,22 @@ if [[ "${1:-}" == "--check-links" ]]; then
     exit 0
 fi
 
+planner_smoke() {
+    echo "== planner smoke: flat at cheap L, deep under punishing L =="
+    cargo test --release --lib planner_smoke -- --nocapture
+}
+
+if [[ "${1:-}" == "--planner-smoke" ]]; then
+    planner_smoke
+    exit 0
+fi
+
 if [[ "${1:-}" == "--conformance" ]]; then
     echo "== conformance: simulator-backend property suite (release) =="
     cargo test --release --test conformance -- --nocapture
+    planner_smoke
+    echo "== planner acceptance: chosen topology within 10% of exhaustive minimum =="
+    cargo test --release --test planner_acceptance -- --nocapture
     exit 0
 fi
 
@@ -126,7 +143,7 @@ smokedir=$(mktemp -d)
 cargo run --release --quiet -- experiment --quick --tag smoke --out "$smokedir"
 test -s "$smokedir/BENCH_smoke.json" || {
     echo "BENCH_smoke.json missing or empty" >&2; exit 1; }
-grep -q '"schema": "bsp-sort/experiment-report/v3"' "$smokedir/BENCH_smoke.json" || {
+grep -q '"schema": "bsp-sort/experiment-report/v4"' "$smokedir/BENCH_smoke.json" || {
     echo "schema tag missing from BENCH_smoke.json" >&2; exit 1; }
 test -s "$smokedir/BENCH_smoke.md" || {
     echo "BENCH_smoke.md missing or empty" >&2; exit 1; }

@@ -150,6 +150,137 @@ impl GroupMap {
     pub fn rank_of(&self, pid: usize) -> usize {
         self.rank_of[pid]
     }
+
+    /// Refine the partition: split every group into `factor` contiguous
+    /// near-even sub-groups (the first `len % factor` sub-groups take
+    /// one extra member).  Sub-groups keep their parent's member order,
+    /// and the sub-groups of group `c` occupy the index range
+    /// `c*factor .. (c+1)*factor` of the refined map — the alignment the
+    /// multi-level sorts rely on to route ascending key ranges to
+    /// ascending sub-groups.
+    pub fn refine(&self, factor: usize) -> GroupMap {
+        assert!(factor >= 1, "refinement factor must be at least 1");
+        let mut groups = Vec::with_capacity(self.num_groups() * factor);
+        for (gidx, members) in self.groups.iter().enumerate() {
+            assert!(
+                factor <= members.len(),
+                "cannot refine group {gidx} of {} processors into {factor} sub-groups",
+                members.len()
+            );
+            let base = members.len() / factor;
+            let extra = members.len() % factor;
+            let mut next = 0usize;
+            for sub in 0..factor {
+                let size = base + usize::from(sub < extra);
+                groups.push(members[next..next + size].to_vec());
+                next += size;
+            }
+        }
+        GroupMap::from_groups(groups)
+    }
+}
+
+/// Maximum depth of a [`Topology`]: with every factor ≥ 2 this covers
+/// machines up to 2^16 processors, and it keeps the type `Copy` (it
+/// rides `experiment::RunSpec`, which is copied freely).
+pub const MAX_TOPOLOGY_DEPTH: usize = 16;
+
+/// A processor-group topology tree `p = k1 × k2 × … × kd`, flattened to
+/// its factor vector.
+///
+/// Depth 1 (`[p]`) is the one-level sort on the whole machine; depth `d`
+/// splits the machine into `k1` groups, each group into `k2` sub-groups,
+/// and so on, with the leaf sort running on `kd`-processor machines.
+/// [`Topology::communicators`] materializes the `d − 1` routing levels
+/// as a refinement chain of backend communicators over *global* pids
+/// (level `ℓ` refines level `ℓ − 1`), which is what lets the recursive
+/// sorts enter each level from the root scope without nested borrows.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Topology {
+    len: u8,
+    factors: [u16; MAX_TOPOLOGY_DEPTH],
+}
+
+impl Topology {
+    /// Build a topology from its factor vector (`[8, 4, 4]` reads "split
+    /// into 8 groups, each into 4, leaf machines of 4").
+    pub fn new(factors: &[usize]) -> Topology {
+        assert!(
+            !factors.is_empty() && factors.len() <= MAX_TOPOLOGY_DEPTH,
+            "topology depth must be 1..={MAX_TOPOLOGY_DEPTH}, got {}",
+            factors.len()
+        );
+        let mut packed = [0u16; MAX_TOPOLOGY_DEPTH];
+        for (i, &k) in factors.iter().enumerate() {
+            assert!(k >= 1, "topology factor {i} must be at least 1");
+            assert!(k <= u16::MAX as usize, "topology factor {k} too large");
+            packed[i] = k as u16;
+        }
+        Topology { len: factors.len() as u8, factors: packed }
+    }
+
+    /// The depth-1 topology: the one-level sort across all `p`
+    /// processors.
+    pub fn flat(p: usize) -> Topology {
+        Topology::new(&[p])
+    }
+
+    /// The depth-2 topology `[k, p/k]` the two-level sorts use (`k` must
+    /// divide `p`).
+    pub fn two_level(p: usize, k: usize) -> Topology {
+        assert!(k >= 1 && p % k == 0, "{k} groups must divide p={p}");
+        Topology::new(&[k, p / k])
+    }
+
+    /// Number of levels `d` (1 = one-level sort).
+    pub fn depth(&self) -> usize {
+        self.len as usize
+    }
+
+    /// The factor `k_{level+1}` (0-indexed).
+    pub fn factor(&self, level: usize) -> usize {
+        assert!(level < self.depth());
+        self.factors[level] as usize
+    }
+
+    /// The factor vector as a plain slice-backed `Vec`.
+    pub fn dims(&self) -> Vec<usize> {
+        (0..self.depth()).map(|i| self.factor(i)).collect()
+    }
+
+    /// Total processors `k1·k2·…·kd`.
+    pub fn nprocs(&self) -> usize {
+        (0..self.depth()).map(|i| self.factor(i)).product()
+    }
+
+    /// Render as `"8x4x4"` (the CLI / report notation).
+    pub fn label(&self) -> String {
+        self.dims().iter().map(|k| k.to_string()).collect::<Vec<_>>().join("x")
+    }
+
+    /// Materialize the `d − 1` routing-level communicators as a
+    /// refinement chain over global pids: `comms[0]` splits the machine
+    /// into `k1` groups, `comms[ℓ]` refines `comms[ℓ−1]` by `k_{ℓ+1}`.
+    /// The leaf machines are the cells of the *last* communicator.
+    pub fn communicators<C: GroupPartition>(&self) -> Vec<C> {
+        let d = self.depth();
+        if d <= 1 {
+            return Vec::new();
+        }
+        let mut maps: Vec<GroupMap> = Vec::with_capacity(d - 1);
+        maps.push(GroupMap::split_even(self.nprocs(), self.factor(0)));
+        for level in 1..d - 1 {
+            let refined = maps[level - 1].refine(self.factor(level));
+            maps.push(refined);
+        }
+        maps.into_iter().map(C::from_map).collect()
+    }
+}
+
+impl std::fmt::Display for Topology {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.label())
+    }
 }
 
 /// The partition interface the multi-level sorts are generic over: any
@@ -161,6 +292,12 @@ pub trait GroupPartition {
     /// Build the contiguous near-even partition (see
     /// [`GroupMap::split_even`]) as this backend's communicator.
     fn split_even(p: usize, num_groups: usize) -> Self
+    where
+        Self: Sized;
+
+    /// Wrap a validated partition as this backend's communicator (the
+    /// hook [`Topology::communicators`] builds refinement chains with).
+    fn from_map(map: GroupMap) -> Self
     where
         Self: Sized;
 
@@ -250,6 +387,10 @@ pub struct Communicator {
 impl GroupPartition for Communicator {
     fn split_even(p: usize, num_groups: usize) -> Communicator {
         Communicator::from_map(GroupMap::split_even(p, num_groups))
+    }
+
+    fn from_map(map: GroupMap) -> Communicator {
+        Communicator::from_map(map)
     }
 
     fn map(&self) -> &GroupMap {
@@ -471,6 +612,58 @@ mod tests {
     #[should_panic(expected = "cannot split")]
     fn more_groups_than_procs_rejected() {
         Communicator::split_even(2, 4);
+    }
+
+    #[test]
+    fn refine_splits_every_group_contiguously() {
+        let coarse = GroupMap::split_even(16, 2);
+        let fine = coarse.refine(4);
+        assert_eq!(fine.num_groups(), 8);
+        // Sub-groups of cell c occupy indices c*4..(c+1)*4, in order.
+        for (g, start) in [(0, 0), (3, 6), (4, 8), (7, 14)] {
+            assert_eq!(fine.members(g), &[start, start + 1]);
+        }
+        // Refinement respects the parent partition.
+        for pid in 0..16 {
+            assert_eq!(fine.group_of(pid) / 4, coarse.group_of(pid));
+        }
+    }
+
+    #[test]
+    fn refine_uneven_groups() {
+        let coarse = GroupMap::split_even(10, 2);
+        let fine = coarse.refine(3);
+        assert_eq!(fine.members(0), &[0, 1]);
+        assert_eq!(fine.members(1), &[2, 3]);
+        assert_eq!(fine.members(2), &[4]);
+        assert_eq!(fine.members(3), &[5, 6]);
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot refine")]
+    fn refine_beyond_group_size_rejected() {
+        GroupMap::split_even(4, 2).refine(3);
+    }
+
+    #[test]
+    fn topology_roundtrips_and_builds_refinement_chain() {
+        let t = Topology::new(&[8, 4, 4]);
+        assert_eq!(t.depth(), 3);
+        assert_eq!(t.nprocs(), 128);
+        assert_eq!(t.label(), "8x4x4");
+        assert_eq!(t.dims(), vec![8, 4, 4]);
+        let comms: Vec<Communicator> = t.communicators();
+        assert_eq!(comms.len(), 2);
+        assert_eq!(comms[0].num_groups(), 8);
+        assert_eq!(comms[1].num_groups(), 32);
+        for pid in 0..128 {
+            // Each level-1 cell sits wholly inside its level-0 cell.
+            assert_eq!(comms[1].group_of(pid) / 4, comms[0].group_of(pid));
+            // Leaf machines (cells of the last communicator) have 4 procs.
+            assert_eq!(comms[1].group_size(comms[1].group_of(pid)), 4);
+        }
+        assert!(Topology::flat(64).communicators::<Communicator>().is_empty());
+        assert_eq!(Topology::two_level(8, 2), Topology::new(&[2, 4]));
     }
 
     #[test]

@@ -25,7 +25,9 @@ pub mod params;
 pub mod sim;
 
 pub use engine::{BspCtx, BspMachine, BspRun, BspScope};
-pub use group::{Communicator, GroupCtx, GroupMap, GroupPartition, GroupedScope};
+pub use group::{
+    Communicator, GroupCtx, GroupMap, GroupPartition, GroupedScope, Topology, MAX_TOPOLOGY_DEPTH,
+};
 pub use ledger::{Ledger, PhaseComparison, PhaseRecord, SuperstepRecord};
 pub use msg::{Payload, SampleRec};
 pub use params::{cray_t3d, BspParams};

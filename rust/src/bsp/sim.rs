@@ -885,6 +885,10 @@ impl GroupPartition for SimCommunicator {
         SimCommunicator::split_even(p, num_groups)
     }
 
+    fn from_map(map: GroupMap) -> SimCommunicator {
+        SimCommunicator::from_map(map)
+    }
+
     fn map(&self) -> &GroupMap {
         &self.map
     }

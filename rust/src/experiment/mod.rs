@@ -59,11 +59,12 @@ pub use calibrate::{
 };
 pub use report::{StudyReport, SCHEMA};
 pub use run::{
-    avg_predicted_secs, execute, execute_typed, measure_config, measure_typed, Balance,
-    PhaseStat, RunRecord, SingleRun, StudyKey, SuperstepStat,
+    avg_predicted_secs, execute, execute_typed, measure_config, measure_typed,
+    resolved_deep_topology, Balance, PhaseStat, RunRecord, SingleRun, StudyKey, SuperstepStat,
 };
 pub use spec::{
-    AlgoVariant, KeyDomain, RunConfig, RunSpec, SweepSpec, ALL_ALGOS, ALL_DOMAINS,
+    AlgoVariant, KeyDomain, RunConfig, RunSpec, SweepSpec, TopologyChoice, ALL_ALGOS,
+    ALL_DOMAINS,
 };
 
 /// Execute a sweep: host-calibrate once per distinct processor count of

@@ -17,8 +17,10 @@ use super::calibrate::Calibration;
 use super::run::RunRecord;
 
 /// Schema identifier written into (and required from) every report.
-/// v3 added the per-run `backend` field (`threaded` | `sim`).
-pub const SCHEMA: &str = "bsp-sort/experiment-report/v3";
+/// v3 added the per-run `backend` field (`threaded` | `sim`); v4 added
+/// the per-run `topology` field (the shape label of a multi-level
+/// run's topology tree, e.g. `"8x4x4"`; `null` for one-level variants).
+pub const SCHEMA: &str = "bsp-sort/experiment-report/v4";
 
 /// A complete study: calibrations for every probed `p` plus one
 /// [`RunRecord`] per sweep cell.
@@ -219,6 +221,12 @@ fn run_to_json(r: &RunRecord) -> Json {
         ("domain", Json::str(&r.domain)),
         // Execution backend; `sim` wall statistics are virtual µs.
         ("backend", Json::str(&r.backend)),
+        // Topology tree of the multi-level variants ("2x4", "8x4x4");
+        // null for the one-level algorithms.
+        (
+            "topology",
+            r.topology.as_deref().map(Json::str).unwrap_or(Json::Null),
+        ),
         ("n", Json::num(r.n as f64)),
         ("p", Json::num(r.p as f64)),
         ("warmup", Json::num(r.warmup as f64)),
@@ -280,6 +288,7 @@ mod tests {
                 bench: "[U]".into(),
                 domain: "i32".into(),
                 backend: "threaded".into(),
+                topology: None,
                 n: 4096,
                 p: 4,
                 warmup: 1,

@@ -5,20 +5,20 @@
 
 use crate::baselines;
 use crate::bsp::engine::BspMachine;
-use crate::bsp::group::{Communicator, GroupedScope};
+use crate::bsp::group::{Communicator, GroupPartition, GroupedScope};
 use crate::bsp::ledger::{ratio_or_nan, Ledger};
 use crate::bsp::sim::{SimCommunicator, SimMachine};
-use crate::bsp::Backend;
+use crate::bsp::{Backend, Topology};
 use crate::gen::{generate_typed_for_proc, GenKey};
 use crate::key::{F64, RadixKey, Record};
 use crate::metrics::{Imbalance, RoutedVolume, RunReport};
 use crate::primitives::bitonic::BitonicItem;
 use crate::sort::common::ProcResult;
-use crate::sort::{bsi, det, iran, multilevel, ran, SortConfig};
+use crate::sort::{bsi, det, iran, multilevel, plan, ran, SortConfig};
 use crate::util::bench::SampleStats;
 
 use super::calibrate::Calibration;
-use super::spec::{AlgoVariant, KeyDomain, RunConfig, RunSpec, SweepSpec};
+use super::spec::{AlgoVariant, KeyDomain, RunConfig, RunSpec, SweepSpec, TopologyChoice};
 
 /// Everything the full study demands of a key domain: generation
 /// ([`GenKey`]), the radix backend ([`RadixKey`]) and bitonic exchange
@@ -42,7 +42,7 @@ pub struct SingleRun<K> {
 /// *same* program text runs on the threaded engine (`BspCtx`) and the
 /// deterministic simulator (`SimCtx`), each paired with its own
 /// communicator type through [`GroupedScope`].
-fn run_cell<K, S>(ctx: &mut S, comm: Option<&S::Comm>, spec: &RunSpec) -> ProcResult<K>
+fn run_cell<K, S>(ctx: &mut S, comms: &[S::Comm], spec: &RunSpec) -> ProcResult<K>
 where
     K: StudyKey,
     S: GroupedScope<K>,
@@ -58,7 +58,7 @@ where
         AlgoVariant::Bsi => bsi::sort_bsi(ctx, local, &cfg),
         AlgoVariant::Det2 => multilevel::sort_multilevel_det(
             ctx,
-            comm.expect("communicator built for det2"),
+            comms.first().expect("communicator built for det2"),
             &params,
             local,
             n,
@@ -66,22 +66,62 @@ where
         ),
         AlgoVariant::Ran2 => multilevel::sort_multilevel_ran(
             ctx,
-            comm.expect("communicator built for ran2"),
+            comms.first().expect("communicator built for ran2"),
             &params,
             local,
             n,
             &cfg,
             seed,
         ),
+        AlgoVariant::DetK => multilevel::sort_deep_det(ctx, comms, &params, local, n, &cfg),
+        AlgoVariant::RanK => {
+            multilevel::sort_deep_ran(ctx, comms, &params, local, n, &cfg, seed)
+        }
         AlgoVariant::HelmanDet => baselines::sort_helman_det(ctx, &params, local, &cfg),
         AlgoVariant::HelmanRan => baselines::sort_helman_ran(ctx, &params, local, n, &cfg, seed),
         AlgoVariant::Psrs => baselines::sort_psrs(ctx, &params, local, &cfg),
     }
 }
 
-/// Does this variant need a processor-group communicator?
-fn needs_comm(algo: AlgoVariant) -> bool {
-    matches!(algo, AlgoVariant::Det2 | AlgoVariant::Ran2)
+/// The topology tree a det-k/ran-k spec runs over: the pinned
+/// `spec.topology` when set, otherwise the cost-model planner under the
+/// spec's T3D parameters (the sweep harness resolves its topology axis
+/// *before* this point by pinning, so the planner here only serves
+/// direct [`RunSpec`] entries — tables and the CLI).
+pub fn resolved_deep_topology(spec: &RunSpec) -> Topology {
+    spec.topology.unwrap_or_else(|| {
+        let params = spec.params();
+        match spec.algo {
+            AlgoVariant::RanK => {
+                plan::plan_ran(spec.n_total, &params, iran::omega_ran(&spec.cfg, spec.n_total))
+                    .topology
+            }
+            _ => plan::plan_det(spec.n_total, &params, det::omega_det(&spec.cfg, spec.n_total))
+                .topology,
+        }
+    })
+}
+
+/// Build the communicator chain a spec's variant runs over (empty for
+/// the one-level variants).  The two-level variants get exactly one
+/// communicator — `default_groups(p)` groups, or the first factor of a
+/// pinned topology; the depth-k variants get the full refinement chain
+/// of their resolved topology.
+fn build_comms<C: GroupPartition>(spec: &RunSpec) -> Vec<C> {
+    match spec.algo {
+        AlgoVariant::Det2 | AlgoVariant::Ran2 => {
+            let k = match spec.topology {
+                Some(t) if t.depth() > 1 => t.factor(0),
+                Some(_) => 1,
+                None => multilevel::default_groups(spec.p),
+            };
+            vec![C::split_even(spec.p, k)]
+        }
+        AlgoVariant::DetK | AlgoVariant::RanK => {
+            resolved_deep_topology(spec).communicators::<C>()
+        }
+        _ => Vec::new(),
+    }
 }
 
 /// Execute a spec over key domain `K` on the spec's backend and verify
@@ -95,23 +135,22 @@ pub fn execute_typed<K: StudyKey>(spec: &RunSpec) -> SingleRun<K> {
     let (p, n) = (spec.p, spec.n_total);
     assert!(n % p == 0, "n must divide evenly (paper setup): n={n} p={p}");
 
-    // The multi-level variants run over a processor-group communicator,
-    // shared by all (real or virtual) processors; `default_groups` picks
-    // the largest divisor of p not exceeding √p (p = 8 → 2×4).  Each
-    // backend builds its own communicator flavor over the same
-    // partition.
+    // The multi-level variants run over a chain of processor-group
+    // communicators shared by all (real or virtual) processors: one
+    // level for det2/ran2 (`default_groups` picks the largest divisor
+    // of p not exceeding √p; p = 8 → 2×4), the resolved topology's full
+    // refinement chain for det-k/ran-k.  Each backend builds its own
+    // communicator flavor over the same partitions.
     let run = match spec.backend {
         Backend::Threaded => {
             let machine = BspMachine::new(params);
-            let comm = needs_comm(spec.algo)
-                .then(|| Communicator::split_even(p, multilevel::default_groups(p)));
-            machine.run_keys::<K, _, _>(|ctx| run_cell(ctx, comm.as_ref(), spec))
+            let comms = build_comms::<Communicator>(spec);
+            machine.run_keys::<K, _, _>(|ctx| run_cell(ctx, &comms, spec))
         }
         Backend::Sim => {
             let machine = SimMachine::new(params);
-            let comm = needs_comm(spec.algo)
-                .then(|| SimCommunicator::split_even(p, multilevel::default_groups(p)));
-            machine.run_keys::<K, _, _>(|ctx| run_cell(ctx, comm.as_ref(), spec))
+            let comms = build_comms::<SimCommunicator>(spec);
+            machine.run_keys::<K, _, _>(|ctx| run_cell(ctx, &comms, spec))
         }
     };
 
@@ -238,6 +277,9 @@ pub struct RunRecord {
     /// Execution-backend tag (`threaded`, `sim`).  For `sim` cells the
     /// wall statistics are deterministic *virtual* microseconds.
     pub backend: String,
+    /// The topology tree the cell ran over (`"2x4"`, `"8x4x4"`, …) —
+    /// `Some` for the multi-level variants, `None` otherwise.
+    pub topology: Option<String>,
     /// Total keys.
     pub n: usize,
     /// Processors.
@@ -270,10 +312,38 @@ pub fn measure_typed<K: StudyKey>(
 ) -> RunRecord {
     assert_eq!(cfg.p, calib.p, "calibration/config processor mismatch");
     let sort_cfg = SortConfig::default().with_seq(sweep.seq);
-    let spec = RunSpec::new(cfg.algo, cfg.bench, cfg.p, cfg.n)
+    let host = calib.params();
+
+    // Resolve the cell's topology choice up front so every warmup and
+    // rep runs the same tree: `default` pins the depth-2 heuristic,
+    // `auto` asks the planner under the *calibrated* machine (this is
+    // where the topology axis meets the cost model), fixed shapes pass
+    // through (validated against `p` by `SweepSpec::validate`).
+    let planned = match cfg.topology {
+        TopologyChoice::Default => match cfg.algo {
+            AlgoVariant::DetK | AlgoVariant::RanK => {
+                Some(multilevel::default_topology(cfg.p))
+            }
+            _ => None,
+        },
+        TopologyChoice::Auto => match cfg.algo {
+            AlgoVariant::RanK => {
+                Some(plan::plan_ran(cfg.n, &host, iran::omega_ran(&sort_cfg, cfg.n)).topology)
+            }
+            _ => Some(plan::plan_det(cfg.n, &host, det::omega_det(&sort_cfg, cfg.n)).topology),
+        },
+        TopologyChoice::Fixed(t) => Some(t),
+    };
+    let mut spec = RunSpec::new(cfg.algo, cfg.bench, cfg.p, cfg.n)
         .with_cfg(sort_cfg)
         .with_backend(cfg.backend);
-    let host = calib.params();
+    spec.topology = planned;
+    let topology = match cfg.algo {
+        AlgoVariant::Det2 | AlgoVariant::Ran2 | AlgoVariant::DetK | AlgoVariant::RanK => {
+            Some(planned.unwrap_or_else(|| multilevel::default_topology(cfg.p)).label())
+        }
+        _ => None,
+    };
 
     // Warmup exists to heat caches and thread pools for the threaded
     // backend; simulator cells are bit-for-bit deterministic, so warming
@@ -376,6 +446,7 @@ pub fn measure_typed<K: StudyKey>(
         bench: cfg.bench.tag(),
         domain: cfg.domain.tag().to_string(),
         backend: cfg.backend.tag().to_string(),
+        topology,
         n: cfg.n,
         p: cfg.p,
         // Sim cells skip warmup (deterministic; nothing to warm).
@@ -479,6 +550,7 @@ mod tests {
             n: 1 << 12,
             p: 64,
             backend: Backend::Sim,
+            topology: TopologyChoice::Default,
         };
         let rec = measure_typed::<i32>(&cfg, &sweep, &calib);
         assert_eq!(rec.backend, "sim");
@@ -490,6 +562,37 @@ mod tests {
         let rec2 = measure_typed::<i32>(&cfg, &sweep, &calib);
         assert_eq!(rec.wall_us.mean, rec2.wall_us.mean);
         assert_eq!(rec.wall_us.stddev, rec2.wall_us.stddev);
+    }
+
+    #[test]
+    fn detk_cell_resolves_and_records_its_topology() {
+        let mut sweep = quick_sweep();
+        sweep.reps = 1;
+        let calib = Calibration::from_params(&crate::bsp::params::cray_t3d(64));
+        let cfg = RunConfig {
+            algo: AlgoVariant::DetK,
+            bench: Benchmark::Uniform,
+            domain: KeyDomain::I32,
+            n: 1 << 12,
+            p: 64,
+            backend: Backend::Sim,
+            topology: TopologyChoice::Auto,
+        };
+        let rec = measure_typed::<i32>(&cfg, &sweep, &calib);
+        let label = rec.topology.expect("depth-k cells record their topology");
+        let t = plan::parse_topology(&label, 64).expect("recorded label is a valid shape");
+        assert_eq!(t.nprocs(), 64);
+
+        // Fixed shapes are honored verbatim and replayed exactly.
+        let cfg =
+            RunConfig { topology: TopologyChoice::Fixed(Topology::new(&[4, 4, 4])), ..cfg };
+        let rec = measure_typed::<i32>(&cfg, &sweep, &calib);
+        assert_eq!(rec.topology.as_deref(), Some("4x4x4"));
+        assert!(rec.wall_us.mean > 0.0 && rec.predicted_us > 0.0);
+
+        // One-level variants carry no topology.
+        let cfg = RunConfig { algo: AlgoVariant::Det, topology: TopologyChoice::Default, ..cfg };
+        assert_eq!(measure_typed::<i32>(&cfg, &sweep, &calib).topology, None);
     }
 
     #[test]
@@ -506,6 +609,7 @@ mod tests {
             n: 1 << 12,
             p: 4,
             backend: Backend::Threaded,
+            topology: TopologyChoice::Default,
         };
         let rec = measure_typed::<i32>(&cfg, &sweep, &calib);
         let priced: Vec<&PhaseStat> =
@@ -537,6 +641,7 @@ mod tests {
             n: 1 << 12,
             p: 4,
             backend: Backend::Threaded,
+            topology: TopologyChoice::Default,
         };
         let rec = measure_config(&cfg, &sweep, &calib);
         assert_eq!(rec.domain, "u64");

@@ -5,7 +5,7 @@
 //! re-exports them): the tables are now one consumer of the experiment
 //! runner among several, not the owner of the run vocabulary.
 
-use crate::bsp::Backend;
+use crate::bsp::{Backend, Topology, MAX_TOPOLOGY_DEPTH};
 use crate::gen::Benchmark;
 use crate::seq::SeqSortKind;
 use crate::sort::SortConfig;
@@ -29,6 +29,12 @@ pub enum AlgoVariant {
     Det2,
     /// Two-level randomized sample sort over processor groups.
     Ran2,
+    /// Depth-k deterministic sample sort over a topology tree
+    /// (`sort::multilevel::sort_deep_det`; the topology comes from the
+    /// sweep's topology axis, the planner, or `default_topology`).
+    DetK,
+    /// Depth-k randomized sample sort over a topology tree.
+    RanK,
     /// Helman–JaJa–Bader deterministic [39].
     HelmanDet,
     /// Helman–JaJa–Bader randomized [40].
@@ -38,13 +44,15 @@ pub enum AlgoVariant {
 }
 
 /// Every variant, in report order.
-pub const ALL_ALGOS: [AlgoVariant; 9] = [
+pub const ALL_ALGOS: [AlgoVariant; 11] = [
     AlgoVariant::Det,
     AlgoVariant::Iran,
     AlgoVariant::Ran,
     AlgoVariant::Bsi,
     AlgoVariant::Det2,
     AlgoVariant::Ran2,
+    AlgoVariant::DetK,
+    AlgoVariant::RanK,
     AlgoVariant::HelmanDet,
     AlgoVariant::HelmanRan,
     AlgoVariant::Psrs,
@@ -60,6 +68,8 @@ impl AlgoVariant {
             AlgoVariant::Bsi => "[BSI]".into(),
             AlgoVariant::Det2 => format!("[2L-DS{}]", cfg.seq.suffix()),
             AlgoVariant::Ran2 => format!("[2L-RAN-S{}]", cfg.seq.suffix()),
+            AlgoVariant::DetK => format!("[KL-DS{}]", cfg.seq.suffix()),
+            AlgoVariant::RanK => format!("[KL-RAN-S{}]", cfg.seq.suffix()),
             AlgoVariant::HelmanDet => "[39]".into(),
             AlgoVariant::HelmanRan => "[40]".into(),
             AlgoVariant::Psrs => "[44]".into(),
@@ -75,6 +85,8 @@ impl AlgoVariant {
             AlgoVariant::Bsi => "bsi",
             AlgoVariant::Det2 => "det2",
             AlgoVariant::Ran2 => "ran2",
+            AlgoVariant::DetK => "det-k",
+            AlgoVariant::RanK => "ran-k",
             AlgoVariant::HelmanDet => "helman-det",
             AlgoVariant::HelmanRan => "helman-ran",
             AlgoVariant::Psrs => "psrs",
@@ -136,6 +148,64 @@ impl KeyDomain {
     }
 }
 
+/// How a depth-k run picks its topology tree (the sweep's topology
+/// axis; ignored by every variant except [`AlgoVariant::DetK`] /
+/// [`AlgoVariant::RanK`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TopologyChoice {
+    /// `sort::multilevel::default_topology(p)` — the depth-2 heuristic.
+    Default,
+    /// Ask the planner (`sort::plan`) under the run's calibrated
+    /// parameters, per cell.
+    Auto,
+    /// A user-pinned shape; [`SweepSpec::validate`] checks its product
+    /// against every `p` on the grid.
+    Fixed(Topology),
+}
+
+impl TopologyChoice {
+    /// Stable CLI/report tag (`default`, `auto`, or the shape label).
+    pub fn label(&self) -> String {
+        match self {
+            TopologyChoice::Default => "default".into(),
+            TopologyChoice::Auto => "auto".into(),
+            TopologyChoice::Fixed(t) => t.label(),
+        }
+    }
+
+    /// Parse a CLI tag: `default`, `auto`, or a shape like `8x4x4`
+    /// (structurally validated; the product is checked against the
+    /// grid's `p` values by [`SweepSpec::validate`]).
+    pub fn parse(s: &str) -> Result<TopologyChoice, CliError> {
+        match s.to_ascii_lowercase().as_str() {
+            "default" => Ok(TopologyChoice::Default),
+            "auto" | "plan" => Ok(TopologyChoice::Auto),
+            other => {
+                let err = || {
+                    CliError(format!(
+                        "unknown topology '{s}' (expected default, auto, or a \
+                         shape like 8x4x4 whose factors multiply to p)"
+                    ))
+                };
+                let mut factors = Vec::new();
+                for part in other.split('x') {
+                    match part.trim().parse::<usize>() {
+                        Ok(k) if k >= 1 => factors.push(k),
+                        _ => return Err(err()),
+                    }
+                }
+                if factors.is_empty()
+                    || factors.len() > MAX_TOPOLOGY_DEPTH
+                    || (factors.len() > 1 && factors.iter().any(|&k| k < 2))
+                {
+                    return Err(err());
+                }
+                Ok(TopologyChoice::Fixed(Topology::new(&factors)))
+            }
+        }
+    }
+}
+
 /// One experiment: algorithm × benchmark × (p, n) × config × backend.
 #[derive(Clone, Copy, Debug)]
 pub struct RunSpec {
@@ -154,6 +224,9 @@ pub struct RunSpec {
     /// Execution backend: threaded engine (default) or the
     /// deterministic simulator (`p` beyond host threads, seeded replay).
     pub backend: Backend,
+    /// Pinned topology tree for the multi-level variants (`None` =
+    /// `default_topology(p)` for det2/ran2, planner for det-k/ran-k).
+    pub topology: Option<Topology>,
 }
 
 impl RunSpec {
@@ -167,6 +240,7 @@ impl RunSpec {
             cfg: SortConfig::default(),
             seed: 0x0BEE,
             backend: Backend::Threaded,
+            topology: None,
         }
     }
 
@@ -179,6 +253,12 @@ impl RunSpec {
     /// Replace the execution backend.
     pub fn with_backend(mut self, backend: Backend) -> RunSpec {
         self.backend = backend;
+        self
+    }
+
+    /// Pin the multi-level topology tree.
+    pub fn with_topology(mut self, topology: Topology) -> RunSpec {
+        self.topology = Some(topology);
         self
     }
 
@@ -204,6 +284,8 @@ pub struct RunConfig {
     pub p: usize,
     /// Execution backend for this cell.
     pub backend: Backend,
+    /// Topology choice for this cell (only the depth-k variants read it).
+    pub topology: TopologyChoice,
 }
 
 /// A full sweep: the cross-product of algorithms × benchmarks × key
@@ -227,6 +309,10 @@ pub struct SweepSpec {
     /// game because virtual processors cost no OS threads' worth of
     /// contention).
     pub backends: Vec<Backend>,
+    /// Topology choices crossed with the grid for the depth-k variants
+    /// (`[Default]` by default; other variants always get one cell with
+    /// [`TopologyChoice::Default`], so this axis never multiplies them).
+    pub topologies: Vec<TopologyChoice>,
     /// Extra cells appended verbatim after the cross-product — the
     /// `--quick` preset uses one to ride a sim-backend `det @ p = 256`
     /// configuration along with its threaded grid.
@@ -261,6 +347,7 @@ impl SweepSpec {
             ns: vec![1 << 14],
             ps: vec![4, 8],
             backends: vec![Backend::Threaded],
+            topologies: vec![TopologyChoice::Default],
             extras: vec![RunConfig {
                 algo: AlgoVariant::Det,
                 bench: Benchmark::Uniform,
@@ -268,6 +355,7 @@ impl SweepSpec {
                 n: 1 << 14,
                 p: 256,
                 backend: Backend::Sim,
+                topology: TopologyChoice::Default,
             }],
             seq: SeqSortKind::Quick,
             warmup: 1,
@@ -288,6 +376,7 @@ impl SweepSpec {
             ns: vec![1 << 20, 1 << 22],
             ps: vec![16, 64],
             backends: vec![Backend::Threaded],
+            topologies: vec![TopologyChoice::Default],
             extras: Vec::new(),
             seq: SeqSortKind::Quick,
             warmup: 1,
@@ -333,9 +422,13 @@ impl SweepSpec {
                 })
                 .collect::<Result<_, _>>()?;
         }
+        if let Some(v) = args.get("topologies") {
+            spec.topologies =
+                split_list(v).map(TopologyChoice::parse).collect::<Result<_, _>>()?;
+        }
         // Any explicit grid override replaces the preset's extra cells:
         // the user asked for exactly this cross-product.
-        if ["algos", "benches", "domains", "backends", "ns", "ps"]
+        if ["algos", "benches", "domains", "backends", "topologies", "ns", "ps"]
             .iter()
             .any(|k| args.get(k).is_some())
         {
@@ -372,6 +465,22 @@ impl SweepSpec {
         if self.backends.is_empty() {
             return Err("--backends must be non-empty".into());
         }
+        if self.topologies.is_empty() {
+            return Err("--topologies must be non-empty".into());
+        }
+        for choice in &self.topologies {
+            if let TopologyChoice::Fixed(t) = choice {
+                for &p in &self.ps {
+                    if t.nprocs() != p {
+                        return Err(format!(
+                            "topology {} has {} processors, but the grid runs p={p}",
+                            t.label(),
+                            t.nprocs()
+                        ));
+                    }
+                }
+            }
+        }
         if self.reps == 0 {
             return Err("--reps must be at least 1".into());
         }
@@ -402,17 +511,35 @@ impl SweepSpec {
     }
 
     /// The cross-product, in deterministic
-    /// (algo, bench, domain, n, p, backend) nesting order, followed by
-    /// the [`SweepSpec::extras`] cells verbatim.
+    /// (algo, bench, domain, n, p, backend, topology) nesting order,
+    /// followed by the [`SweepSpec::extras`] cells verbatim.  The
+    /// topology axis only multiplies the depth-k variants; every other
+    /// algorithm gets exactly one cell with [`TopologyChoice::Default`].
     pub fn configs(&self) -> Vec<RunConfig> {
         let mut out = Vec::new();
         for &algo in &self.algos {
+            let topologies: &[TopologyChoice] =
+                if matches!(algo, AlgoVariant::DetK | AlgoVariant::RanK) {
+                    &self.topologies
+                } else {
+                    &[TopologyChoice::Default]
+                };
             for &bench in &self.benches {
                 for &domain in &self.domains {
                     for &n in &self.ns {
                         for &p in &self.ps {
                             for &backend in &self.backends {
-                                out.push(RunConfig { algo, bench, domain, n, p, backend });
+                                for &topology in topologies {
+                                    out.push(RunConfig {
+                                        algo,
+                                        bench,
+                                        domain,
+                                        n,
+                                        p,
+                                        backend,
+                                        topology,
+                                    });
+                                }
                             }
                         }
                     }
@@ -486,6 +613,44 @@ mod tests {
         )
         .unwrap();
         assert!(SweepSpec::from_args(&args).is_err());
+    }
+
+    #[test]
+    fn topology_axis_multiplies_only_depth_k_variants() {
+        let mut spec = SweepSpec::quick();
+        spec.algos = vec![AlgoVariant::Det, AlgoVariant::DetK];
+        spec.topologies = vec![
+            TopologyChoice::Default,
+            TopologyChoice::Auto,
+            TopologyChoice::Fixed(Topology::new(&[2, 4])),
+        ];
+        spec.ps = vec![8];
+        spec.extras.clear();
+        spec.validate().unwrap();
+        // det: 2 benches × 2 domains × 1 topology; det-k: same grid × 3.
+        assert_eq!(spec.configs().len(), 4 + 12);
+        assert!(spec
+            .configs()
+            .iter()
+            .all(|c| c.algo == AlgoVariant::DetK || c.topology == TopologyChoice::Default));
+
+        // A fixed shape must match every p on the grid.
+        spec.ps = vec![8, 4];
+        let err = spec.validate().unwrap_err();
+        assert!(err.contains("2x4"), "{err}");
+    }
+
+    #[test]
+    fn topology_choice_parses_and_rejects() {
+        assert_eq!(TopologyChoice::parse("default").unwrap(), TopologyChoice::Default);
+        assert_eq!(TopologyChoice::parse("auto").unwrap(), TopologyChoice::Auto);
+        assert_eq!(
+            TopologyChoice::parse("8x4x4").unwrap(),
+            TopologyChoice::Fixed(Topology::new(&[8, 4, 4]))
+        );
+        assert!(TopologyChoice::parse("8x0x4").is_err());
+        assert!(TopologyChoice::parse("1x8").is_err());
+        assert!(TopologyChoice::parse("deep").is_err());
     }
 
     #[test]

@@ -16,9 +16,10 @@
 //!
 //! Common flags: `--max-n <keys>`, `--max-p <procs>`, `--full`,
 //! `--reps <k>`, `--seed <s>`; `sort` adds `--algo`, `--bench`, `--n`,
-//! `--p`, `--seq`, `--no-dup`; `experiment` adds `--quick`, `--algos`,
-//! `--benches`, `--domains`, `--ns`, `--ps`, `--warmup`, `--tag`,
-//! `--out`.
+//! `--p`, `--seq`, `--no-dup`, and the multi-level topology flags
+//! `--groups`, `--topology`, `--levels auto`; `experiment` adds
+//! `--quick`, `--algos`, `--benches`, `--domains`, `--ns`, `--ps`,
+//! `--topologies`, `--warmup`, `--tag`, `--out`.
 
 use std::path::Path;
 
@@ -29,7 +30,7 @@ use bsp_sort::experiment::{self, SweepSpec};
 use bsp_sort::gen::Benchmark;
 use bsp_sort::metrics::RunReport;
 use bsp_sort::seq::SeqSortKind;
-use bsp_sort::sort::{DuplicatePolicy, SortConfig};
+use bsp_sort::sort::{plan, DuplicatePolicy, SortConfig};
 use bsp_sort::tables::{self, runner, TableOpts};
 use bsp_sort::util::cli::Args;
 use bsp_sort::util::fmt_secs;
@@ -38,7 +39,7 @@ use bsp_sort::util::json::Json;
 const VALUE_OPTS: &[&str] = &[
     "max-n", "max-p", "reps", "seed", "algo", "bench", "n", "p", "seq", "table",
     "algos", "benches", "domains", "ns", "ps", "warmup", "tag", "out",
-    "backend", "backends",
+    "backend", "backends", "groups", "topology", "levels", "topologies",
 ];
 
 fn main() {
@@ -134,6 +135,41 @@ fn run(cmd: &str, args: &Args) -> Result<(), Box<dyn std::error::Error>> {
             let backend = Backend::parse(backend_tag).ok_or_else(|| {
                 format!("unknown --backend '{backend_tag}' (expected threaded or sim)")
             })?;
+            // Topology selection for the multi-level variants: --groups
+            // pins a depth-2 split, --topology a full divisor tree
+            // (strictly validated against p, invalid shapes list the
+            // valid ones), --levels auto defers to the cost-model
+            // planner.  At most one of the three.
+            if ["groups", "topology", "levels"]
+                .iter()
+                .filter(|k| args.get(k).is_some())
+                .count()
+                > 1
+            {
+                return Err("use at most one of --groups, --topology, --levels".into());
+            }
+            let mut topology = None;
+            if let Some(v) = args.get("groups") {
+                let k: usize = v
+                    .parse()
+                    .map_err(|_| format!("--groups '{v}' is not an integer"))?;
+                topology = Some(plan::parse_groups(k, p)?);
+            }
+            if let Some(v) = args.get("topology") {
+                topology = Some(plan::parse_topology(v, p)?);
+            }
+            if let Some(v) = args.get("levels") {
+                match v {
+                    // None = the planner resolves it (det-k/ran-k).
+                    "auto" | "plan" => topology = None,
+                    other => {
+                        return Err(format!(
+                            "unknown --levels '{other}' (expected auto)"
+                        )
+                        .into())
+                    }
+                }
+            }
             let spec = runner::RunSpec {
                 algo,
                 bench,
@@ -142,7 +178,23 @@ fn run(cmd: &str, args: &Args) -> Result<(), Box<dyn std::error::Error>> {
                 cfg,
                 seed: opts.seed,
                 backend,
+                topology,
             };
+            match algo {
+                runner::AlgoVariant::DetK | runner::AlgoVariant::RanK => {
+                    println!(
+                        "topology        : {}",
+                        experiment::resolved_deep_topology(&spec).label()
+                    );
+                }
+                runner::AlgoVariant::Det2 | runner::AlgoVariant::Ran2 => {
+                    let shape = spec
+                        .topology
+                        .unwrap_or_else(|| bsp_sort::sort::multilevel::default_topology(p));
+                    println!("topology        : {}", shape.label());
+                }
+                _ => {}
+            }
             let report = runner::execute(&spec);
             print_report(&report);
         }
@@ -268,12 +320,15 @@ bsp-sort — BSP sorting study (Gerbessiotis & Siniolakis) reproduction
 USAGE:
   bsp-sort table <1..11> [--full] [--max-n K] [--max-p P] [--reps R]
   bsp-sort all-tables [--full]
-  bsp-sort sort --algo det|iran|ran|bsi|det2|ran2|helman-det|helman-ran|psrs
+  bsp-sort sort --algo det|iran|ran|bsi|det2|ran2|det-k|ran-k|
+                       helman-det|helman-ran|psrs
                 --bench U|G|B|2-G|S|DD|WR --n 8388608 --p 64
                 [--seq quick|radix] [--no-dup] [--backend threaded|sim]
+                [--groups K | --topology K1xK2x... | --levels auto]
   bsp-sort experiment [--quick] [--algos det,ran,...] [--benches U,DD,...]
                       [--domains i32,u64,f64,record] [--ns N1,N2] [--ps P1,P2]
                       [--backends threaded,sim]
+                      [--topologies default,auto,8x4x4]
                       [--warmup W] [--reps R] [--seed S] [--seq quick|radix]
                       [--tag T] [--out DIR]
   bsp-sort predict | validate-g | ablate-dup
@@ -285,7 +340,7 @@ Tables report *predicted Cray T3D seconds* from the BSP cost model
 
 `experiment` calibrates the host's (g, L) and operation rate from
 micro-probes, runs the sweep cross-product with warmup + repetitions,
-and writes BENCH_<tag>.json (schema bsp-sort/experiment-report/v3,
+and writes BENCH_<tag>.json (schema bsp-sort/experiment-report/v4,
 validated after writing) plus BENCH_<tag>.md.  --quick is the CI-sized
 preset: det+ran+det2 on [U]+[DD], i32+u64, 16K keys, p in {4,8}, plus
 one sim-backend cell (det @ p=256).
@@ -298,5 +353,9 @@ virtual processors with virtual time — bit-for-bit replayable, p up to
 
 det2/ran2 are the two-level sorts: coarse splitters route key ranges to
 processor groups, then the one-level algorithm runs group-locally over
-a communicator (p = 8 splits 2x4) — see docs/ALGORITHMS.md.
+a communicator (p = 8 splits 2x4).  det-k/ran-k generalize them to any
+divisor tree p = k1 x k2 x ... x kd: pin the shape with --topology (or
+--groups for depth 2), or let the cost-model planner choose it from the
+calibrated (p, g, L) with --levels auto / --topologies auto — see
+docs/ALGORITHMS.md and sort/plan.rs.
 "#;

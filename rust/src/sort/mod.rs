@@ -5,10 +5,15 @@
 //! * [`iran`] — SORT_IRAN_BSP: the improved randomized algorithm (Fig. 3),
 //! * [`ran`] — SORT_RAN_BSP: classic randomized sample-sort (Fig. 2),
 //! * [`bsi`] — full Batcher bitonic sort (\[BSI\], §6.2 item 3),
-//! * [`multilevel`] — two-level det/ran sample sorts over processor
-//!   groups (coarse splitters route key ranges to groups; the one-level
-//!   algorithms then run group-locally through a
-//!   [`Communicator`](crate::bsp::group::Communicator)),
+//! * [`multilevel`] — depth-k det/ran sample sorts over nested
+//!   processor groups (coarse splitters route key ranges down a
+//!   topology tree `p = k1 × … × kd`; the one-level algorithms then run
+//!   inside the leaf machines through a
+//!   [`Communicator`](crate::bsp::group::Communicator) refinement
+//!   chain; det2/ran2 are the depth-2 special case),
+//! * [`plan`] — the cost-model-driven topology planner: enumerate
+//!   divisor trees of `p`, price each with the per-level closed forms,
+//!   return the argmin for a calibrated `(p, g, L)`,
 //! * [`common`] — the shared sample-sort/partition/route/merge pipeline
 //!   and the §5.1.1 tagged sampling,
 //! * [`config`] — variant knobs (\[DSQ\]/\[DSR\]/\[RSQ\]/\[RSR\], duplicate
@@ -51,6 +56,7 @@ pub mod config;
 pub mod det;
 pub mod iran;
 pub mod multilevel;
+pub mod plan;
 pub mod ran;
 
 pub use common::ProcResult;

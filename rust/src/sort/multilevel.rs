@@ -1,38 +1,55 @@
-//! Two-level (multi-level) BSP sample sorting over processor groups.
+//! Depth-k (multi-level) BSP sample sorting over nested processor
+//! groups.
 //!
 //! The paper's one-level sorts route one full h-relation across all `p`
 //! processors: every superstep of Ph5 is a whole-machine exchange priced
 //! `g·n_max` under the full machine's `(L, g)`.  Following the k-way
 //! recursion of "Practical Massively Parallel Sorting" (AMS) and
 //! "Robust Massively Parallel Sorting" (Axtmann & Sanders), the
-//! two-level variants here:
+//! multi-level variants here run over a topology tree
+//! `p = k1 × k2 × … × kd` ([`Topology`]):
 //!
-//! 1. **Level 1** — select `k − 1` *coarse* splitters (regular sample of
-//!    the locally sorted run for the deterministic variant, random
-//!    sample for the randomized one; §5.1.1 tagged either way, so
-//!    duplicate-heavy inputs split across groups exactly), partition,
-//!    and route each key range to one of `k` disjoint processor groups
-//!    — a single whole-machine superstep moving each key once;
-//! 2. **Level 2** — every group runs the *unmodified one-level
-//!    algorithm* ([`super::det::sort_det_bsp`] /
-//!    [`super::ran::sort_ran_bsp`]) against its
-//!    [`GroupCtx`](crate::bsp::group::GroupCtx): group-scoped ranks,
-//!    group-local barriers, group-local exchanges over `p/k` processors.
+//! 1. **Routing level ℓ** (one per interior tree level) — select
+//!    `k_ℓ − 1` *coarse* splitters (regular sample of the locally sorted
+//!    run for the deterministic variant, random sample for the
+//!    randomized one; §5.1.1 tagged either way, so duplicate-heavy
+//!    inputs split across groups exactly), partition, and route each key
+//!    range to one of `k_ℓ` disjoint sub-groups of the current cell — a
+//!    single cell-wide superstep moving each key once;
+//! 2. **Leaf level** — every `kd`-processor leaf machine runs the
+//!    *unmodified one-level algorithm* ([`super::det::sort_det_bsp`] /
+//!    [`super::ran::sort_ran_bsp`]) against its group scope:
+//!    group-scoped ranks, group-local barriers, group-local exchanges.
 //!
-//! Every level-2 superstep therefore realizes a *group-local*
-//! h-relation — `n/k` total words instead of `n`, synchronized over
-//! `p/k` processors — which the ledger prices with the group-scaled
-//! machine and max-reduces across concurrently running sibling groups
-//! (`bsp::ledger`).  Phases of level 2 appear under the `L2/` prefix
-//! (`L2/Ph2:SeqSort`, `L2/Ph5:Routing`, …) next to the level-1 phases
-//! with the paper's plain names.
+//! The levels are materialized as a *refinement chain* of communicators
+//! over global pids ([`Topology::communicators`]): level ℓ's partition
+//! refines level ℓ−1's, and the recursion is a loop that re-enters each
+//! successive communicator from the root scope — no nested scopes, so
+//! sibling cells never share barriers and a slow cell cannot stall its
+//! cousins.  Each deeper superstep realizes a *cell-local* h-relation —
+//! `n/(k1…kℓ)` total words, synchronized over `p/(k1…kℓ)` processors —
+//! which the ledger prices with the cell-scaled machine and max-reduces
+//! across concurrently running sibling cells (`bsp::ledger`).  Phases of
+//! level ℓ ≥ 2 appear under the `L<level>/` prefix (`L2/Ph5:Routing`,
+//! `L3/Ph2:SeqSort`, …) next to the level-1 phases with the paper's
+//! plain names.
 //!
-//! Concatenating the groups in order yields the global sorted order in
-//! pid order because [`Communicator::split_even`] assigns contiguous
-//! ascending pid blocks to ascending coarse key ranges.
+//! [`sort_multilevel_det`]/[`sort_multilevel_ran`] are the historical
+//! depth-2 entry points — thin wrappers over the same level loop, so
+//! det2/ran2 are exactly the depth-2 special case.
+//!
+//! Concatenating the leaf machines in order yields the global sorted
+//! order in pid order because [`GroupMap::split_even`]/[`GroupMap::refine`]
+//! assign contiguous ascending pid blocks to ascending coarse key
+//! ranges at every level.
+//!
+//! [`Topology`]: crate::bsp::group::Topology
+//! [`Topology::communicators`]: crate::bsp::group::Topology::communicators
+//! [`GroupMap::split_even`]: crate::bsp::group::GroupMap::split_even
+//! [`GroupMap::refine`]: crate::bsp::group::GroupMap::refine
 
 use crate::bsp::engine::BspScope;
-use crate::bsp::group::{GroupPartition, GroupedScope};
+use crate::bsp::group::{GroupPartition, GroupedScope, Topology};
 use crate::bsp::msg::{Payload, SampleRec};
 use crate::bsp::params::BspParams;
 use crate::key::RadixKey;
@@ -46,8 +63,14 @@ use super::det::omega_det;
 use super::iran::{omega_ran, sample_share};
 
 /// The phase-label prefix under which level-2 (group-local) phases are
-/// recorded in the ledger.
+/// recorded in the ledger — [`level_prefix`]`(2)`.
 pub const LEVEL2_PREFIX: &str = "L2/";
+
+/// The phase-label prefix for (1-based) `level` ≥ 2: `"L<level>/"`.
+/// Level 1 phases carry the paper's plain names (no prefix).
+pub fn level_prefix(level: usize) -> String {
+    format!("L{level}/")
+}
 
 /// Default group count for a `p`-processor machine: the largest divisor
 /// of `p` not exceeding `√p` (so groups are at least as wide as they are
@@ -69,88 +92,130 @@ pub fn default_groups(p: usize) -> usize {
     k
 }
 
-/// Two-level deterministic sample sort (regular oversampling at both
-/// levels).
+/// The historical default topology: `[k, p/k]` with `k =`
+/// [`default_groups`]`(p)`, degrading to the flat (one-level) topology
+/// when no two-level split exists.
+pub fn default_topology(p: usize) -> Topology {
+    let k = default_groups(p);
+    if k <= 1 {
+        Topology::flat(p)
+    } else {
+        Topology::two_level(p, k)
+    }
+}
+
+/// Every communicator must cover the whole machine, and each level must
+/// refine the previous one (every child cell wholly inside one parent
+/// cell) — the invariant that keeps deeper-level sends cell-local.
+fn validate_levels<C: GroupPartition>(nprocs: usize, comms: &[&C]) {
+    for c in comms {
+        assert_eq!(c.nprocs(), nprocs, "communicator must cover the whole machine");
+    }
+    for w in comms.windows(2) {
+        let (parent, child) = (w[0], w[1]);
+        for g in 0..child.num_groups() {
+            let members = child.members(g);
+            let cell = parent.group_of(members[0]);
+            assert!(
+                members.iter().all(|&pid| parent.group_of(pid) == cell),
+                "child group {g} straddles parent cells — levels must form a refinement chain"
+            );
+        }
+    }
+}
+
+/// Destination of each of this processor's buckets at one routing
+/// level, in the rank space of the scope the level runs in.
 ///
-/// SPMD over the *whole* machine: every processor calls this inside
-/// `BspMachine::run` (or `SimMachine::run`) with the shared `comm` —
-/// the scope's backend-matched communicator, constructed outside the
-/// run, e.g.
-/// [`Communicator::split_even`](crate::bsp::group::Communicator::split_even)`(p, `[`default_groups`]`(p))`
-/// for the threaded engine or
-/// [`SimCommunicator::split_even`](crate::bsp::sim::SimCommunicator::split_even)
-/// for the simulator.  Generic over [`GroupedScope`], so the identical
-/// program text runs on either backend.  With a single group this
-/// degrades to the one-level algorithm.
-pub fn sort_multilevel_det<K: RadixKey, S: GroupedScope<K>>(
-    ctx: &mut S,
-    comm: &S::Comm,
+/// With no parent (level 1, whole machine) bucket `j` goes to one
+/// member of `child` group `j`, rotated by sender pid so every member
+/// is fed — global pids, matching the root scope.  With a parent, the
+/// buckets are `child`'s sub-groups of this processor's parent cell,
+/// rotated by the sender's parent rank, expressed as parent ranks —
+/// the rank space of the entered group scope.
+fn bucket_dsts<C: GroupPartition>(parent: Option<&C>, child: &C, gpid: usize) -> Vec<usize> {
+    match parent {
+        None => (0..child.num_groups())
+            .map(|j| {
+                let members = child.members(j);
+                members[gpid % members.len()]
+            })
+            .collect(),
+        Some(par) => {
+            let cell = par.group_of(gpid);
+            let rank = par.rank_of(gpid);
+            let mut dsts = Vec::new();
+            for j in 0..child.num_groups() {
+                let members = child.members(j);
+                if par.group_of(members[0]) == cell {
+                    dsts.push(par.rank_of(members[rank % members.len()]));
+                }
+            }
+            dsts
+        }
+    }
+}
+
+/// One deterministic routing level inside `scope`: regular-sample the
+/// locally sorted `keys`, gather + select `k − 1` coarse tagged
+/// splitters at scope rank 0, broadcast, partition the sorted run at
+/// the cuts, and route bucket `j` to `dsts[j]`.  Returns the received
+/// ranges concatenated (unsorted — the next level re-sorts regardless).
+///
+/// `level` is 1-based and names the sync labels (`l<level>:*`).
+#[allow(clippy::too_many_arguments)]
+fn det_route_level<K: RadixKey, B: BspScope<K>>(
+    scope: &mut B,
     params: &BspParams,
-    mut local: Vec<K>,
+    keys: Vec<K>,
     n_total: usize,
     cfg: &SortConfig,
-) -> ProcResult<K> {
-    let k = comm.num_groups();
-    if k <= 1 {
-        return super::det::sort_det_bsp(ctx, params, local, n_total, cfg);
-    }
-    assert_eq!(
-        comm.nprocs(),
-        ctx.nprocs(),
-        "communicator must cover the whole machine"
-    );
-    let pid = ctx.pid();
-    let sorter: &dyn SeqSorter<K> = match cfg.seq {
-        SeqSortKind::Quick => &QuickSorter,
-        SeqSortKind::Radix => &RadixSorter,
-        SeqSortKind::Xla => panic!("the multi-level sorts support the Quick/Radix backends"),
-    };
+    dsts: &[usize],
+    level: usize,
+) -> Vec<K> {
+    let k = dsts.len();
+    let pid = scope.pid();
 
-    // --- Ph2: local sort (once; level 2 receives sorted runs) ---------
-    ctx.phase(PH2);
-    ctx.charge(sorter.charge(local.len()));
-    let mut keys = std::mem::take(&mut local);
-    sorter.sort(&mut keys);
-
-    // --- Ph3 (level 1): coarse regular sample → k−1 group splitters ---
+    // --- Ph3: coarse regular sample → k−1 group splitters -------------
     // The sample targets k buckets, so it is ⌈ω⌉·k records per
-    // processor — a factor p/k smaller than the one-level sample; tiny,
-    // so the sequential gather-sort-broadcast shape is the right
+    // processor — a factor cell_p/k smaller than the one-level sample;
+    // tiny, so the sequential gather-sort-broadcast shape is the right
     // primitive (the paper's §5.1 point about choosing primitives per
     // (n, p, L, g)).
-    ctx.phase(PH3);
+    scope.phase(PH3);
     let r = omega_det(cfg, n_total).ceil().max(1.0) as usize;
     let s = r * k;
     let sample = common::regular_sample(&keys, pid, s);
-    ctx.charge(s as f64);
-    ctx.send(0, Payload::Recs(sample));
-    ctx.sync("l1:gather-sample");
+    scope.charge(s as f64);
+    scope.send(0, Payload::Recs(sample));
+    scope.sync(&format!("l{level}:gather-sample"));
     let coarse = if pid == 0 {
-        let mut all: Vec<SampleRec<K>> = ctx
+        let mut all: Vec<SampleRec<K>> = scope
             .take_inbox()
             .into_iter()
             .flat_map(|(_, payload)| payload.into_recs())
             .collect();
-        ctx.charge(ops::sort_charge(all.len()));
+        scope.charge(ops::sort_charge(all.len()));
         all.sort();
         common::select_splitters(&all, k)
     } else {
-        ctx.take_inbox();
+        scope.take_inbox();
         Vec::new()
     };
-    let coarse = broadcast::broadcast_recs(ctx, params, 0, coarse, k - 1, "l1:bcast");
+    let coarse =
+        broadcast::broadcast_recs(scope, params, 0, coarse, k - 1, &format!("l{level}:bcast"));
 
-    // --- Ph4 (level 1): partition the sorted run at the coarse cuts ---
-    ctx.phase(PH4);
+    // --- Ph4: partition the sorted run at the coarse cuts -------------
+    scope.phase(PH4);
     let effective = common::effective_splitters(&coarse, cfg);
     let cuts = search::partition_points(&keys, pid, &effective);
-    ctx.charge((k as f64 - 1.0) * ops::bsearch_charge(keys.len().max(2)));
+    scope.charge((k as f64 - 1.0) * ops::bsearch_charge(keys.len().max(2)));
 
-    // --- Ph5 (level 1): one superstep routes each range to its group --
+    // --- Ph5: one superstep routes each range to its sub-group --------
     // Bucket j is a contiguous slice of the sorted run; it goes to ONE
-    // member of group j (rotating by sender pid so every member is fed),
-    // and level 2's own routing rebalances within the group.
-    ctx.phase(PH5);
+    // member of sub-group j (rotating by sender rank so every member is
+    // fed), and the next level's own routing rebalances within it.
+    scope.phase(PH5);
     let n_local = keys.len();
     let mut parts: Vec<Vec<K>> = Vec::with_capacity(k);
     let mut head = keys;
@@ -159,39 +224,237 @@ pub fn sort_multilevel_det<K: RadixKey, S: GroupedScope<K>>(
     }
     parts.push(head);
     parts.reverse();
-    ctx.charge(ops::linear_charge(n_local));
+    scope.charge(ops::linear_charge(n_local));
     for (j, bucket) in parts.into_iter().enumerate() {
-        let members = comm.members(j);
-        ctx.send(members[pid % members.len()], Payload::Keys(bucket));
+        scope.send(dsts[j], Payload::Keys(bucket));
     }
-    ctx.sync("l1:route");
-    // Concatenate the received ranges without merging: the level-2
-    // algorithm's own Ph2 local sort is about to run regardless (it is
-    // the unmodified one-level sort), so a level-1 multiway merge would
-    // be pure duplicated work — and a duplicated n·lg n charge that
-    // would skew the measured-vs-predicted phase ratios.
+    scope.sync(&format!("l{level}:route"));
+    // Concatenate the received ranges without merging: the next level's
+    // local sort is about to run regardless, so a multiway merge here
+    // would be pure duplicated work — and a duplicated n·lg n charge
+    // that would skew the measured-vs-predicted phase ratios.
     let mut received_keys: Vec<K> = Vec::new();
-    for (_, payload) in ctx.take_inbox() {
+    for (_, payload) in scope.take_inbox() {
         received_keys.extend_from_slice(&payload.into_keys());
     }
-    let received = received_keys.len();
-    ctx.charge(ops::linear_charge(received));
-
-    // --- Level 2: the one-level algorithm, group-locally --------------
-    let group_params = params.scaled_to(comm.group_size(comm.group_of(pid)));
-    let mut g = ctx.enter_group(comm, LEVEL2_PREFIX);
-    g.phase(PH1);
-    let (_, totals) = prefix::prefix_direct(&mut g, &[received as u64], "l2:count");
-    let group_n = totals[0] as usize;
-    super::det::sort_det_bsp(&mut g, &group_params, received_keys, group_n, cfg)
+    scope.charge(ops::linear_charge(received_keys.len()));
+    received_keys
 }
 
-/// Two-level randomized sample sort (coarse random splitters, then the
-/// classic one-level SORT_RAN_BSP group-locally).
+/// One randomized routing level inside `scope`: random sample of the
+/// (unsorted) `local` keys, coarse tagged splitters at scope rank 0,
+/// key-wise set formation (the SORT_RAN_BSP step-9 shape, but over `k`
+/// buckets, so the binary search is `lg k` per key), one routing
+/// superstep.  Returns the received keys, concatenated.
+#[allow(clippy::too_many_arguments)]
+fn ran_route_level<K: RadixKey, B: BspScope<K>>(
+    scope: &mut B,
+    params: &BspParams,
+    local: Vec<K>,
+    n_total: usize,
+    cfg: &SortConfig,
+    dsts: &[usize],
+    level: usize,
+    level_seed: u64,
+) -> Vec<K> {
+    let k = dsts.len();
+    let pid = scope.pid();
+
+    // --- Ph3: random coarse sample, sorted at scope rank 0 ------------
+    scope.phase(PH3);
+    let omega = omega_ran(cfg, n_total);
+    let share = sample_share(n_total, k, omega).min(local.len().max(1));
+    let mut rng = SplitMix64::new(level_seed ^ ((pid as u64) << 18).wrapping_add(0x2D2D));
+    let sample: Vec<SampleRec<K>> = if local.is_empty() {
+        vec![SampleRec::new(K::max_key(), pid, 0)]
+    } else {
+        rng.sample_indices(local.len(), share)
+            .into_iter()
+            .map(|i| SampleRec::new(local[i], pid, i))
+            .collect()
+    };
+    scope.charge(share as f64);
+    scope.send(0, Payload::Recs(sample));
+    scope.sync(&format!("l{level}:gather-sample"));
+    let coarse = if pid == 0 {
+        let mut all: Vec<SampleRec<K>> = scope
+            .take_inbox()
+            .into_iter()
+            .flat_map(|(_, payload)| payload.into_recs())
+            .collect();
+        scope.charge(ops::sort_charge(all.len()));
+        all.sort();
+        common::select_splitters(&all, k)
+    } else {
+        scope.take_inbox();
+        Vec::new()
+    };
+    let coarse =
+        broadcast::broadcast_recs(scope, params, 0, coarse, k - 1, &format!("l{level}:bcast"));
+
+    // --- Ph5: key-wise set formation + one routing superstep ----------
+    scope.phase(PH5);
+    let effective = common::effective_splitters(&coarse, cfg);
+    let mut buckets: Vec<Vec<K>> = vec![Vec::new(); k];
+    for (i, &key) in local.iter().enumerate() {
+        buckets[common::splitter_rank(&effective, key, pid, i)].push(key);
+    }
+    scope.charge(local.len() as f64 * (ops::bsearch_charge(k) + 1.0 + 2.0));
+    for (j, bucket) in buckets.into_iter().enumerate() {
+        scope.send(dsts[j], Payload::Keys(bucket));
+    }
+    scope.sync(&format!("l{level}:route"));
+    let mut received_keys: Vec<K> = Vec::new();
+    for (_, payload) in scope.take_inbox() {
+        received_keys.extend_from_slice(&payload.into_keys());
+    }
+    scope.charge(ops::linear_charge(received_keys.len()));
+    received_keys
+}
+
+/// Depth-k deterministic sample sort (regular oversampling at every
+/// level) over a refinement chain of communicators — typically
+/// [`Topology::communicators`].
 ///
-/// Same SPMD contract (and backend genericity) as
-/// [`sort_multilevel_det`]; `seed` decorrelates the random samples
-/// across runs and (internally) across groups.
+/// SPMD over the *whole* machine: every processor calls this inside
+/// `BspMachine::run` (or `SimMachine::run`) with the shared `comms`
+/// slice, constructed outside the run.  `comms[ℓ]` must cover the whole
+/// machine and refine `comms[ℓ−1]`; communicators with a single group
+/// are skipped, and with none left this degrades to the one-level
+/// algorithm.  Generic over [`GroupedScope`], so the identical program
+/// text runs on either backend.
+pub fn sort_deep_det<K: RadixKey, S: GroupedScope<K>>(
+    ctx: &mut S,
+    comms: &[S::Comm],
+    params: &BspParams,
+    mut local: Vec<K>,
+    n_total: usize,
+    cfg: &SortConfig,
+) -> ProcResult<K> {
+    let comms: Vec<&S::Comm> = comms.iter().filter(|c| c.num_groups() > 1).collect();
+    if comms.is_empty() {
+        return super::det::sort_det_bsp(ctx, params, local, n_total, cfg);
+    }
+    validate_levels(ctx.nprocs(), &comms);
+    let gpid = ctx.pid();
+    let sorter: &dyn SeqSorter<K> = match cfg.seq {
+        SeqSortKind::Quick => &QuickSorter,
+        SeqSortKind::Radix => &RadixSorter,
+        SeqSortKind::Xla => panic!("the multi-level sorts support the Quick/Radix backends"),
+    };
+
+    // --- Ph2: local sort (deeper levels re-sort their received
+    // concatenations inside their own cell scope) ----------------------
+    ctx.phase(PH2);
+    ctx.charge(sorter.charge(local.len()));
+    let mut keys = std::mem::take(&mut local);
+    sorter.sort(&mut keys);
+
+    let depth = comms.len() + 1;
+    for level in 0..comms.len() {
+        let dsts = bucket_dsts(level.checked_sub(1).map(|i| comms[i]), comms[level], gpid);
+        if level == 0 {
+            keys = det_route_level(ctx, params, keys, n_total, cfg, &dsts, 1);
+        } else {
+            let parent = comms[level - 1];
+            let cell_params = params.scaled_to(parent.group_size(parent.group_of(gpid)));
+            let mut g = ctx.enter_group(parent, &level_prefix(level + 1));
+            // The received ranges arrive as an unsorted concatenation;
+            // regular sampling needs a sorted run, so each deeper level
+            // pays its own local sort (inside the cell scope, so the
+            // charge lands in the prefixed phase).
+            g.phase(PH2);
+            g.charge(sorter.charge(keys.len()));
+            sorter.sort(&mut keys);
+            keys = det_route_level(&mut g, &cell_params, keys, n_total, cfg, &dsts, level + 1);
+        }
+    }
+
+    // --- Leaf: the one-level algorithm, inside the finest cells -------
+    let leaf = *comms.last().unwrap();
+    let leaf_params = params.scaled_to(leaf.group_size(leaf.group_of(gpid)));
+    let received = keys.len();
+    let mut g = ctx.enter_group(leaf, &level_prefix(depth));
+    g.phase(PH1);
+    let (_, totals) =
+        prefix::prefix_direct(&mut g, &[received as u64], &format!("l{depth}:count"));
+    let group_n = totals[0] as usize;
+    super::det::sort_det_bsp(&mut g, &leaf_params, keys, group_n, cfg)
+}
+
+/// Depth-k randomized sample sort (coarse random splitters at every
+/// routing level, then the classic one-level SORT_RAN_BSP inside the
+/// leaf machines).
+///
+/// Same SPMD contract (and backend genericity) as [`sort_deep_det`];
+/// `seed` decorrelates the random samples across runs, and internally
+/// across levels and cells (each routing level folds its cell index
+/// into the seed chain).
+pub fn sort_deep_ran<K: RadixKey, S: GroupedScope<K>>(
+    ctx: &mut S,
+    comms: &[S::Comm],
+    params: &BspParams,
+    local: Vec<K>,
+    n_total: usize,
+    cfg: &SortConfig,
+    seed: u64,
+) -> ProcResult<K> {
+    let comms: Vec<&S::Comm> = comms.iter().filter(|c| c.num_groups() > 1).collect();
+    if comms.is_empty() {
+        return super::ran::sort_ran_bsp(ctx, params, local, n_total, cfg, seed);
+    }
+    validate_levels(ctx.nprocs(), &comms);
+    let gpid = ctx.pid();
+
+    let depth = comms.len() + 1;
+    let mut keys = local;
+    let mut level_seed = seed;
+    for level in 0..comms.len() {
+        let dsts = bucket_dsts(level.checked_sub(1).map(|i| comms[i]), comms[level], gpid);
+        if level == 0 {
+            keys = ran_route_level(ctx, params, keys, n_total, cfg, &dsts, 1, level_seed);
+        } else {
+            let parent = comms[level - 1];
+            let cell_params = params.scaled_to(parent.group_size(parent.group_of(gpid)));
+            let mut g = ctx.enter_group(parent, &level_prefix(level + 1));
+            keys =
+                ran_route_level(&mut g, &cell_params, keys, n_total, cfg, &dsts, level + 1, level_seed);
+        }
+        // Decorrelate the next level's sampling across sibling cells.
+        level_seed = level_seed
+            .wrapping_add((comms[level].group_of(gpid) as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    }
+
+    // --- Leaf: the one-level algorithm, inside the finest cells -------
+    let leaf = *comms.last().unwrap();
+    let leaf_params = params.scaled_to(leaf.group_size(leaf.group_of(gpid)));
+    let received = keys.len();
+    let mut g = ctx.enter_group(leaf, &level_prefix(depth));
+    g.phase(PH1);
+    let (_, totals) =
+        prefix::prefix_direct(&mut g, &[received as u64], &format!("l{depth}:count"));
+    let group_n = totals[0] as usize;
+    super::ran::sort_ran_bsp(&mut g, &leaf_params, keys, group_n, cfg, level_seed)
+}
+
+/// Two-level deterministic sample sort — the depth-2 special case of
+/// [`sort_deep_det`], kept as the historical det2 entry point.  With a
+/// single group this degrades to the one-level algorithm.
+pub fn sort_multilevel_det<K: RadixKey, S: GroupedScope<K>>(
+    ctx: &mut S,
+    comm: &S::Comm,
+    params: &BspParams,
+    local: Vec<K>,
+    n_total: usize,
+    cfg: &SortConfig,
+) -> ProcResult<K> {
+    sort_deep_det(ctx, std::slice::from_ref(comm), params, local, n_total, cfg)
+}
+
+/// Two-level randomized sample sort — the depth-2 special case of
+/// [`sort_deep_ran`], kept as the historical ran2 entry point.  `seed`
+/// decorrelates the random samples across runs and (internally) across
+/// groups.
 pub fn sort_multilevel_ran<K: RadixKey, S: GroupedScope<K>>(
     ctx: &mut S,
     comm: &S::Comm,
@@ -201,79 +464,7 @@ pub fn sort_multilevel_ran<K: RadixKey, S: GroupedScope<K>>(
     cfg: &SortConfig,
     seed: u64,
 ) -> ProcResult<K> {
-    let k = comm.num_groups();
-    if k <= 1 {
-        return super::ran::sort_ran_bsp(ctx, params, local, n_total, cfg, seed);
-    }
-    assert_eq!(
-        comm.nprocs(),
-        ctx.nprocs(),
-        "communicator must cover the whole machine"
-    );
-    let pid = ctx.pid();
-
-    // --- Ph3 (level 1): random coarse sample, sorted at processor 0 ---
-    ctx.phase(PH3);
-    let omega = omega_ran(cfg, n_total);
-    let share = sample_share(n_total, k, omega).min(local.len().max(1));
-    let mut rng = SplitMix64::new(seed ^ ((pid as u64) << 18).wrapping_add(0x2D2D));
-    let sample: Vec<SampleRec<K>> = if local.is_empty() {
-        vec![SampleRec::new(K::max_key(), pid, 0)]
-    } else {
-        rng.sample_indices(local.len(), share)
-            .into_iter()
-            .map(|i| SampleRec::new(local[i], pid, i))
-            .collect()
-    };
-    ctx.charge(share as f64);
-    ctx.send(0, Payload::Recs(sample));
-    ctx.sync("l1:gather-sample");
-    let coarse = if pid == 0 {
-        let mut all: Vec<SampleRec<K>> = ctx
-            .take_inbox()
-            .into_iter()
-            .flat_map(|(_, payload)| payload.into_recs())
-            .collect();
-        ctx.charge(ops::sort_charge(all.len()));
-        all.sort();
-        common::select_splitters(&all, k)
-    } else {
-        ctx.take_inbox();
-        Vec::new()
-    };
-    let coarse = broadcast::broadcast_recs(ctx, params, 0, coarse, k - 1, "l1:bcast");
-
-    // --- Ph5 (level 1): key-wise set formation + one routing superstep
-    // (the SORT_RAN_BSP step-9 shape, but over k buckets, so the binary
-    // search is lg k instead of lg p per key).
-    ctx.phase(PH5);
-    let effective = common::effective_splitters(&coarse, cfg);
-    let mut buckets: Vec<Vec<K>> = vec![Vec::new(); k];
-    for (i, &key) in local.iter().enumerate() {
-        buckets[common::splitter_rank(&effective, key, pid, i)].push(key);
-    }
-    ctx.charge(local.len() as f64 * (ops::bsearch_charge(k) + 1.0 + 2.0));
-    for (j, bucket) in buckets.into_iter().enumerate() {
-        let members = comm.members(j);
-        ctx.send(members[pid % members.len()], Payload::Keys(bucket));
-    }
-    ctx.sync("l1:route");
-    let mut received_keys: Vec<K> = Vec::new();
-    for (_, payload) in ctx.take_inbox() {
-        received_keys.extend_from_slice(&payload.into_keys());
-    }
-    let received = received_keys.len();
-    ctx.charge(ops::linear_charge(received));
-
-    // --- Level 2: the one-level algorithm, group-locally --------------
-    let group = comm.group_of(pid);
-    let group_params = params.scaled_to(comm.group_size(group));
-    let mut g = ctx.enter_group(comm, LEVEL2_PREFIX);
-    g.phase(PH1);
-    let (_, totals) = prefix::prefix_direct(&mut g, &[received as u64], "l2:count");
-    let group_n = totals[0] as usize;
-    let group_seed = seed.wrapping_add((group as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
-    super::ran::sort_ran_bsp(&mut g, &group_params, received_keys, group_n, cfg, group_seed)
+    sort_deep_ran(ctx, std::slice::from_ref(comm), params, local, n_total, cfg, seed)
 }
 
 #[cfg(test)]
@@ -310,6 +501,33 @@ mod tests {
         (inputs, results, run.ledger)
     }
 
+    fn run_deep(
+        det: bool,
+        dims: &[usize],
+        n: usize,
+        bench: Benchmark,
+        cfg: SortConfig,
+    ) -> (Vec<Vec<i32>>, Vec<ProcResult>, crate::bsp::Ledger) {
+        let t = Topology::new(dims);
+        let p = t.nprocs();
+        let params = cray_t3d(p);
+        let machine = BspMachine::new(params);
+        let comms: Vec<Communicator> = t.communicators();
+        let run = machine.run(|ctx| {
+            let local = generate_for_proc(bench, ctx.pid(), p, n / p);
+            let input = local.clone();
+            let out = if det {
+                sort_deep_det(ctx, &comms, &params, local, n, &cfg)
+            } else {
+                sort_deep_ran(ctx, &comms, &params, local, n, &cfg, 0x3E11)
+            };
+            (input, out)
+        });
+        let inputs = run.outputs.iter().map(|(i, _)| i.clone()).collect();
+        let results = run.outputs.into_iter().map(|(_, r)| r).collect();
+        (inputs, results, run.ledger)
+    }
+
     fn assert_sorted_permutation(inputs: &[Vec<i32>], results: &[ProcResult], label: &str) {
         let mut expect: Vec<i32> = inputs.iter().flatten().copied().collect();
         expect.sort_unstable();
@@ -330,6 +548,13 @@ mod tests {
             let k = default_groups(p);
             assert!(p % k == 0 && k * k <= p, "p={p} k={k}");
         }
+    }
+
+    #[test]
+    fn default_topology_two_level_or_flat() {
+        assert_eq!(default_topology(2), Topology::flat(2));
+        assert_eq!(default_topology(8), Topology::new(&[2, 4]));
+        assert_eq!(default_topology(64), Topology::new(&[8, 8]));
     }
 
     #[test]
@@ -366,11 +591,43 @@ mod tests {
     }
 
     #[test]
+    fn depth3_sorts_every_benchmark_p8() {
+        for bench in ALL_BENCHMARKS {
+            let (inputs, results, _) =
+                run_deep(true, &[2, 2, 2], 1 << 12, bench, SortConfig::default());
+            assert_sorted_permutation(&inputs, &results, &format!("det3 {}", bench.tag()));
+            let (inputs, results, _) =
+                run_deep(false, &[2, 2, 2], 1 << 12, bench, SortConfig::default());
+            assert_sorted_permutation(&inputs, &results, &format!("ran3 {}", bench.tag()));
+        }
+    }
+
+    #[test]
+    fn depth4_uneven_topology_sorts() {
+        // 16 = 2 × 2 × 2 × 2: three routing levels, leaf machines of 2.
+        let (inputs, results, _) =
+            run_deep(true, &[2, 2, 2, 2], 1 << 12, Benchmark::Staggered, SortConfig::default());
+        assert_sorted_permutation(&inputs, &results, "det 2x2x2x2");
+        // Non-uniform factors: 12 = 3 × 2 × 2.
+        let (inputs, results, _) =
+            run_deep(false, &[3, 2, 2], 12 << 7, Benchmark::Gaussian, SortConfig::default());
+        assert_sorted_permutation(&inputs, &results, "ran 3x2x2");
+    }
+
+    #[test]
     fn single_group_degrades_to_one_level() {
         let (inputs, results, ledger) =
             run_multilevel(true, 4, 1, 1 << 10, Benchmark::Uniform, SortConfig::default());
         assert_sorted_permutation(&inputs, &results, "k=1");
         // No group-scoped records: the one-level algorithm ran.
+        assert!(ledger.supersteps.iter().all(|s| s.round.is_none()));
+    }
+
+    #[test]
+    fn flat_topology_degrades_to_one_level() {
+        let (inputs, results, ledger) =
+            run_deep(true, &[4], 1 << 10, Benchmark::Uniform, SortConfig::default());
+        assert_sorted_permutation(&inputs, &results, "flat");
         assert!(ledger.supersteps.iter().all(|s| s.round.is_none()));
     }
 
@@ -450,5 +707,82 @@ mod tests {
         }
         let l2_total: u64 = l2.iter().map(|s| s.total_words).sum();
         assert_eq!(l2_total, 1 << 12, "level 2 moves every key exactly once overall");
+    }
+
+    #[test]
+    fn depth3_phases_and_cell_records_present() {
+        // 2x2x2 on p=8: level-1 routing is whole-machine, level-2
+        // routing is cell-scoped over 4 procs under L2/, the leaf runs
+        // under L3/ over 2 procs.
+        let (_, _, ledger) =
+            run_deep(true, &[2, 2, 2], 1 << 12, Benchmark::Uniform, SortConfig::default());
+        for ph in
+            ["Ph2:SeqSort", "Ph5:Routing", "L2/Ph2:SeqSort", "L2/Ph5:Routing", "L3/Ph5:Routing"]
+        {
+            assert!(
+                ledger.phases.contains_key(ph),
+                "missing phase {ph}: {:?}",
+                ledger.phases.keys().collect::<Vec<_>>()
+            );
+        }
+        let l1: Vec<_> =
+            ledger.supersteps.iter().filter(|s| s.label == "l1:route").collect();
+        assert_eq!(l1.len(), 1);
+        assert_eq!(l1[0].procs, 8);
+        assert_eq!(l1[0].total_words, 1 << 12);
+        // Level-2 routes: one per level-1 cell, over 4 procs each,
+        // together moving every key exactly once.
+        let l2: Vec<_> = ledger
+            .supersteps
+            .iter()
+            .filter(|s| s.label == "l2:route" && s.round.is_some())
+            .collect();
+        assert_eq!(l2.len(), 2, "one level-2 route per cell");
+        for s in &l2 {
+            assert_eq!(s.procs, 4);
+            assert_eq!(s.phase, "L2/Ph5:Routing");
+        }
+        let l2_total: u64 = l2.iter().map(|s| s.total_words).sum();
+        assert_eq!(l2_total, 1 << 12);
+        // Leaf routes: one per leaf machine, over 2 procs each.
+        let l3: Vec<_> = ledger
+            .supersteps
+            .iter()
+            .filter(|s| s.label == "ph5:route" && s.round.is_some())
+            .collect();
+        assert_eq!(l3.len(), 4, "one leaf route per leaf machine");
+        for s in &l3 {
+            assert_eq!(s.procs, 2);
+            assert_eq!(s.phase, "L3/Ph5:Routing");
+        }
+        let l3_total: u64 = l3.iter().map(|s| s.total_words).sum();
+        assert_eq!(l3_total, 1 << 12);
+    }
+
+    #[test]
+    fn deep_wrapper_depth2_matches_two_level_entry_point() {
+        // sort_multilevel_det IS the depth-2 case of the level loop:
+        // same outputs and same charged ledger through either entry.
+        let p = 8usize;
+        let n = 1 << 12;
+        let params = cray_t3d(p);
+        let cfg = SortConfig::default();
+        let via_wrapper = {
+            let machine = BspMachine::new(params);
+            let comm = Communicator::split_even(p, 2);
+            machine.run(|ctx| {
+                let local = generate_for_proc(Benchmark::Uniform, ctx.pid(), p, n / p);
+                sort_multilevel_det(ctx, &comm, &params, local, n, &cfg).keys
+            })
+        };
+        let via_deep = {
+            let machine = BspMachine::new(params);
+            let comms: Vec<Communicator> = Topology::new(&[2, 4]).communicators();
+            machine.run(|ctx| {
+                let local = generate_for_proc(Benchmark::Uniform, ctx.pid(), p, n / p);
+                sort_deep_det(ctx, &comms, &params, local, n, &cfg).keys
+            })
+        };
+        assert_eq!(via_wrapper.outputs, via_deep.outputs);
     }
 }

@@ -1,0 +1,267 @@
+//! Cost-model-driven topology planning: choose the recursion depth and
+//! group shape of the multi-level sorts from the machine parameters.
+//!
+//! The paper's closed forms exist precisely so algorithm shape can be
+//! tuned to `(n, p, g, L)`; "Practical/Robust Massively Parallel
+//! Sorting" (AMS) turn that into a recipe — pick the number of
+//! recursion levels from the machine size and the relative cost of a
+//! superstep.  This module is that recipe under the BSP model:
+//! enumerate every divisor-tree topology `p = k1 × k2 × … × kd`
+//! ([`enumerate_topologies`]), price each with the per-level closed
+//! forms ([`crate::theory::predict_det_topology`] /
+//! [`crate::theory::predict_ran_topology`]) under the calibrated
+//! `(p, g, L)`, and return the argmin ([`plan_det`] / [`plan_ran`]).
+//!
+//! Intuition for the trade: an extra level pays one more `g·n/p`
+//! routing pass and a coarse splitter round, and buys sample-sort and
+//! synchronization terms that scale with the *cell* size instead of the
+//! machine size.  Cheap-L machines at small `p` therefore plan flat;
+//! high-L machines at large `p` plan deep — `ci.sh --planner-smoke`
+//! asserts exactly that.
+
+use crate::bsp::group::{Topology, MAX_TOPOLOGY_DEPTH};
+use crate::bsp::params::BspParams;
+use crate::theory::{self, MultilevelPrediction};
+
+/// A planner decision: the chosen topology and the closed-form
+/// prediction that won.  `predicted.effective` always equals the chosen
+/// topology's factor vector — the planner never selects a shape whose
+/// levels would degrade (those price identically to a shallower shape,
+/// which the enumeration also contains and which wins the `<` tie-break
+/// by coming first).
+#[derive(Clone, Debug)]
+pub struct Plan {
+    /// The argmin topology.
+    pub topology: Topology,
+    /// Its closed-form prediction (total cost = `prediction.total_secs`).
+    pub predicted: MultilevelPrediction,
+    /// Predicted seconds under the planning parameters (the comparison
+    /// key).
+    pub predicted_secs: f64,
+}
+
+/// Every divisor-tree topology of `p`: the flat `[p]` plus all ordered
+/// factorizations into factors ≥ 2 (depth-first, shallow shapes first
+/// within a prefix).  For `p = 2^m` this is `2^(m−1)` shapes (2048 at
+/// p = 4096) — cheap to price exhaustively with closed forms.
+pub fn enumerate_topologies(p: usize) -> Vec<Topology> {
+    fn rec(rem: usize, prefix: &mut Vec<usize>, out: &mut Vec<Topology>) {
+        // Close here: `rem` becomes the leaf machine size.
+        prefix.push(rem);
+        out.push(Topology::new(prefix));
+        prefix.pop();
+        if prefix.len() + 2 > MAX_TOPOLOGY_DEPTH {
+            return;
+        }
+        // Or split off one more routing level (factor < rem so the
+        // remainder shrinks; factor ≥ 2 so the level is non-degenerate).
+        for k in 2..rem {
+            if rem % k == 0 {
+                prefix.push(k);
+                rec(rem / k, prefix, out);
+                prefix.pop();
+            }
+        }
+    }
+    assert!(p >= 1, "need at least one processor");
+    let mut out = Vec::new();
+    rec(p, &mut Vec::new(), &mut out);
+    out
+}
+
+fn argmin_plan(
+    params: &BspParams,
+    mut price: impl FnMut(&[usize]) -> MultilevelPrediction,
+) -> Plan {
+    let mut best: Option<Plan> = None;
+    for topology in enumerate_topologies(params.p) {
+        let predicted = price(&topology.dims());
+        let predicted_secs = predicted.prediction.total_secs(params);
+        // Strict `<`: ties keep the earliest (shallowest-first) shape,
+        // so the planner is deterministic and never picks needless depth.
+        let better = match &best {
+            None => true,
+            Some(b) => predicted_secs < b.predicted_secs,
+        };
+        if better {
+            best = Some(Plan { topology, predicted, predicted_secs });
+        }
+    }
+    best.expect("enumerate_topologies returns at least the flat topology")
+}
+
+/// Plan the deterministic multi-level sort: the divisor-tree topology
+/// minimizing [`theory::predict_det_topology`] under `params` for an
+/// `n`-key input with oversampling `omega`.
+pub fn plan_det(n: usize, params: &BspParams, omega: f64) -> Plan {
+    argmin_plan(params, |dims| theory::predict_det_topology(n, params, omega, dims))
+}
+
+/// Plan the randomized multi-level sort: the argmin of
+/// [`theory::predict_ran_topology`].
+pub fn plan_ran(n: usize, params: &BspParams, omega: f64) -> Plan {
+    argmin_plan(params, |dims| theory::predict_ran_topology(n, params, omega, dims))
+}
+
+/// Strictly parse a `--topology` value (`"8x4x4"`) against machine size
+/// `p`: every factor must be an integer ≥ 2 (or the single factor `p`
+/// itself) and the factors must multiply to exactly `p`.  The error
+/// lists valid shapes, mirroring the CLI's `UnknownBenchmark` style.
+pub fn parse_topology(s: &str, p: usize) -> Result<Topology, String> {
+    let err = |msg: &str| {
+        Err(format!(
+            "invalid topology {s:?} for p={p}: {msg}; valid topologies: {}",
+            valid_topology_hint(p)
+        ))
+    };
+    let mut factors = Vec::new();
+    for part in s.split('x') {
+        match part.trim().parse::<usize>() {
+            Ok(k) if k >= 1 => factors.push(k),
+            _ => return err(&format!("{part:?} is not a positive integer")),
+        }
+    }
+    if factors.is_empty() || factors.len() > MAX_TOPOLOGY_DEPTH {
+        return err(&format!("depth must be 1..={MAX_TOPOLOGY_DEPTH}"));
+    }
+    if factors.len() > 1 && factors.iter().any(|&k| k < 2) {
+        return err("every factor of a multi-level shape must be at least 2");
+    }
+    let product: usize = factors.iter().product();
+    if product != p {
+        return err(&format!("factors multiply to {product}, not p"));
+    }
+    Ok(Topology::new(&factors))
+}
+
+/// Strictly parse a `--groups` value: `k` must divide `p` (yielding the
+/// depth-2 topology `[k, p/k]`, or flat for `k = 1`).  The error lists
+/// the divisors of `p`, mirroring `UnknownBenchmark`.
+pub fn parse_groups(k: usize, p: usize) -> Result<Topology, String> {
+    if k >= 1 && k <= p && p % k == 0 {
+        if k == 1 {
+            Ok(Topology::flat(p))
+        } else {
+            Ok(Topology::two_level(p, k))
+        }
+    } else {
+        let divisors: Vec<String> =
+            (1..=p).filter(|d| p % d == 0).map(|d| d.to_string()).collect();
+        Err(format!(
+            "invalid group count {k} for p={p}; valid group counts: {}",
+            divisors.join(", ")
+        ))
+    }
+}
+
+/// A short human list of valid shapes for `p`: all of them when few,
+/// otherwise the flat and depth-2 shapes with an ellipsis.
+fn valid_topology_hint(p: usize) -> String {
+    let all = enumerate_topologies(p);
+    if all.len() <= 12 {
+        all.iter().map(Topology::label).collect::<Vec<_>>().join(", ")
+    } else {
+        let two_level: Vec<String> = all
+            .iter()
+            .filter(|t| t.depth() <= 2)
+            .map(Topology::label)
+            .collect();
+        format!("{}, … ({} deeper shapes)", two_level.join(", "), all.len() - two_level.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bsp::params::cray_t3d;
+
+    #[test]
+    fn enumerates_all_divisor_trees() {
+        let labels = |p: usize| -> Vec<String> {
+            enumerate_topologies(p).iter().map(Topology::label).collect()
+        };
+        assert_eq!(labels(1), vec!["1"]);
+        assert_eq!(labels(4), vec!["4", "2x2"]);
+        assert_eq!(labels(8), vec!["8", "2x4", "2x2x2", "4x2"]);
+        assert_eq!(labels(12).len(), 8); // 12, 2x6, 2x2x3, 2x3x2, 3x4, 3x2x2, 4x3, 6x2
+        // 2^m has 2^(m−1) ordered factorizations.
+        assert_eq!(labels(64).len(), 32);
+        assert_eq!(labels(4096).len(), 2048);
+        for t in enumerate_topologies(4096) {
+            assert_eq!(t.nprocs(), 4096, "{}", t.label());
+        }
+    }
+
+    #[test]
+    fn parse_topology_accepts_valid_shapes() {
+        assert_eq!(parse_topology("8x4x4", 128).unwrap().dims(), vec![8, 4, 4]);
+        assert_eq!(parse_topology("64", 64).unwrap(), Topology::flat(64));
+        assert_eq!(parse_topology("2x4", 8).unwrap(), Topology::two_level(8, 2));
+    }
+
+    #[test]
+    fn parse_topology_rejects_and_lists_valid() {
+        let e = parse_topology("8x3", 64).unwrap_err();
+        assert!(e.contains("multiply to 24"), "{e}");
+        assert!(e.contains("valid topologies"), "{e}");
+        assert!(e.contains("2x32"), "{e}");
+        let e = parse_topology("4xfour", 16).unwrap_err();
+        assert!(e.contains("not a positive integer"), "{e}");
+        let e = parse_topology("1x16", 16).unwrap_err();
+        assert!(e.contains("at least 2"), "{e}");
+    }
+
+    #[test]
+    fn parse_groups_rejects_non_divisors() {
+        assert_eq!(parse_groups(4, 16).unwrap(), Topology::two_level(16, 4));
+        assert_eq!(parse_groups(1, 16).unwrap(), Topology::flat(16));
+        let e = parse_groups(3, 16).unwrap_err();
+        assert!(e.contains("valid group counts: 1, 2, 4, 8, 16"), "{e}");
+    }
+
+    #[test]
+    fn planner_never_reports_a_degraded_topology() {
+        // The winning plan's effective vector equals its factor vector:
+        // a shape with degradable levels prices identically to the
+        // shallower shape that enumerates first, so it can never win.
+        for p in [4usize, 8, 64, 256] {
+            let params = cray_t3d(p);
+            for plan in [plan_det(1 << 20, &params, 4.0), plan_ran(1 << 20, &params, 4.5)] {
+                assert_eq!(
+                    plan.predicted.effective,
+                    plan.topology.dims(),
+                    "p={p} chose {}",
+                    plan.topology.label()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn planner_smoke_small_p_cheap_l_picks_flat() {
+        // Small machine, negligible synchronization cost: no routing
+        // level can pay for itself, the planner must stay one-level.
+        let params = BspParams { p: 8, l_us: 1.0, g_us_per_word: 0.1, comps_per_us: 10.0 };
+        let plan = plan_det(1 << 20, &params, 4.0);
+        assert_eq!(plan.topology, Topology::flat(8), "chose {}", plan.topology.label());
+    }
+
+    #[test]
+    fn planner_smoke_high_l_picks_deeper_topology() {
+        // Large machine with a punishing L: the one-level bitonic
+        // sample sort pays L·lg²p; recursion over smaller cells must
+        // win, and the chosen shape must be a real (priced) one.
+        let params =
+            BspParams { p: 1024, l_us: 200_000.0, g_us_per_word: 0.5, comps_per_us: 10.0 };
+        let plan = plan_det(1 << 22, &params, 4.0);
+        assert!(
+            plan.topology.depth() >= 2,
+            "expected a multi-level plan under high L, got {}",
+            plan.topology.label()
+        );
+        assert_eq!(plan.predicted.effective, plan.topology.dims());
+        // And the flat shape is strictly worse under these parameters.
+        let flat = theory::predict_det_topology(1 << 22, &params, 4.0, &[1024]);
+        assert!(plan.predicted_secs < flat.prediction.total_secs(&params));
+    }
+}

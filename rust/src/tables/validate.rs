@@ -229,13 +229,14 @@ fn req_arr<'a>(ctx: &str, doc: &'a Json, key: &str) -> Result<&'a [Json], String
 }
 
 /// Validate a parsed experiment report against the
-/// `bsp-sort/experiment-report/v3` schema: schema tag, non-empty
+/// `bsp-sort/experiment-report/v4` schema: schema tag, non-empty
 /// calibrations with positive (g, L, rate), non-empty runs each carrying
-/// an execution-backend tag (`threaded` | `sim`), wall-clock statistics
-/// (virtual µs for `sim` runs), a positive end-to-end
-/// measured-vs-predicted ratio, per-phase rows (ratio positive or
-/// `null` for unpriced phases), balance metrics and a superstep trace.
-/// Returns the first violation.
+/// an execution-backend tag (`threaded` | `sim`) and a topology label
+/// (`"2x4"`, `"8x4x4"`, … for multi-level runs; `null` otherwise),
+/// wall-clock statistics (virtual µs for `sim` runs), a positive
+/// end-to-end measured-vs-predicted ratio, per-phase rows (ratio
+/// positive or `null` for unpriced phases), balance metrics and a
+/// superstep trace.  Returns the first violation.
 pub fn validate_report(doc: &Json) -> Result<(), String> {
     let schema = field("report", doc, "schema")?
         .as_str()
@@ -293,6 +294,17 @@ pub fn validate_report(doc: &Json) -> Result<(), String> {
             return Err(format!(
                 "{ctx}: unknown backend '{backend}' (expected 'threaded' or 'sim')"
             ));
+        }
+        // v4: multi-level runs carry their topology tree as a shape
+        // label whose factors multiply to p; one-level runs carry null.
+        let topology = field(&ctx, r, "topology")?;
+        if !topology.is_null() {
+            let label = topology
+                .as_str()
+                .ok_or_else(|| format!("{ctx}: 'topology' must be a string or null"))?;
+            let p = req_positive(&ctx, r, "p")? as usize;
+            crate::sort::plan::parse_topology(label, p)
+                .map_err(|e| format!("{ctx}: {e}"))?;
         }
         req_positive(&ctx, r, "n")?;
         req_positive(&ctx, r, "p")?;
@@ -406,11 +418,14 @@ mod tests {
         // sweep at n = 4096, p = 4 must survive serialize → parse →
         // validate without the validator and the writer drifting apart.
         use crate::bsp::Backend;
-        use crate::experiment::{self, AlgoVariant, KeyDomain, ProbePlan, RunConfig, SweepSpec};
+        use crate::experiment::{
+            self, AlgoVariant, KeyDomain, ProbePlan, RunConfig, SweepSpec, TopologyChoice,
+        };
         let mut spec = SweepSpec::quick();
         // det2 exercises the group-scoped superstep fields (procs,
-        // non-null round) through the serializer and the validator.
-        spec.algos = vec![AlgoVariant::Det, AlgoVariant::Det2];
+        // non-null round); det-k exercises the v4 topology field
+        // through the serializer and the validator.
+        spec.algos = vec![AlgoVariant::Det, AlgoVariant::Det2, AlgoVariant::DetK];
         spec.benches = vec![Benchmark::Uniform];
         spec.domains = vec![KeyDomain::I32, KeyDomain::U64];
         spec.ns = vec![4096];
@@ -424,6 +439,7 @@ mod tests {
             n: 4096,
             p: 16,
             backend: Backend::Sim,
+            topology: TopologyChoice::Default,
         }];
         spec.warmup = 0;
         spec.reps = 2;
@@ -439,9 +455,17 @@ mod tests {
         let parsed = Json::parse(&text).expect("report must parse back");
         validate_report(&parsed).expect("report must validate against the schema");
         let runs = parsed.get("runs").unwrap().as_arr().unwrap();
-        assert_eq!(runs.len(), 5, "det+det2 × i32+u64, plus the sim extra");
+        assert_eq!(runs.len(), 7, "det+det2+det-k × i32+u64, plus the sim extra");
         assert_eq!(runs[0].get("n").unwrap().as_u64(), Some(4096));
         assert_eq!(runs[0].get("backend").unwrap().as_str(), Some("threaded"));
+        // v4: one-level runs carry a null topology, multi-level runs a
+        // shape label that parses against their p.
+        assert!(runs[0].get("topology").unwrap().is_null());
+        let detk = runs
+            .iter()
+            .find(|r| r.get("algo").unwrap().as_str() == Some("det-k"))
+            .expect("det-k run present");
+        assert_eq!(detk.get("topology").unwrap().as_str(), Some("2x2"));
         // The det2 runs carry group-scoped supersteps: procs below the
         // machine p with a non-null round.
         let det2 = runs

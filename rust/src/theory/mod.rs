@@ -112,62 +112,163 @@ pub fn predict_iran(n: usize, params: &BspParams, omega: f64) -> Prediction {
     Prediction { comp_ops: comp, comm_us, pi, mu }
 }
 
-/// Two-level composition of Proposition 5.1 for the k-group multi-level
-/// deterministic sort (`sort::multilevel`):
+/// A multi-level prediction plus the topology that was *actually*
+/// priced.
 ///
-/// * **level 1** pays one local sort `(n/p)lg(n/p)`, a coarse sample of
-///   `r·k` per processor sorted sequentially at processor 0
-///   (`r·k·p·lg(r·k·p)`), the `(k−1)`-way partition, a linear
-///   concatenation of the received ranges (the implementation
-///   deliberately does *not* merge at level 1 — level 2's own local
-///   sort subsumes it), and one whole-machine routing superstep of
-///   `~n/p` words per processor plus the gather/broadcast L floors;
-/// * **level 2** is the one-level prediction on the `(p/k)`-processor
-///   group machine with `n/k` keys, priced under the group-scaled
-///   parameters ([`BspParams::scaled_to`]) — smaller effective L, and
-///   `lg²(p/k)` instead of `lg²p` synchronization-bound supersteps.
+/// The per-level closed forms drop degenerate routing levels (factor
+/// `k ≤ 1`, or a cell too small to split into `k` groups of ≥ 2); the
+/// `effective` vector records what remains, so planners and report
+/// tables can never describe a topology that wasn't priced.  The last
+/// entry is always the leaf machine size; `effective == [p]` means the
+/// whole request degraded to the one-level prediction.
+#[derive(Clone, Debug)]
+pub struct MultilevelPrediction {
+    /// The combined closed-form prediction over all priced levels.
+    pub prediction: Prediction,
+    /// The factor vector actually priced (routing factors then leaf
+    /// machine size).
+    pub effective: Vec<usize>,
+}
+
+/// Shared per-routing-level + leaf composition for the multi-level
+/// closed forms.  `factors` is the topology vector `[k1, …, kd]` (the
+/// last entry is the leaf machine size; see
+/// [`crate::bsp::group::Topology`]).  Routing level ℓ runs across the
+/// current cell of `cell_p` processors under [`BspParams::scaled_to`]`
+/// (cell_p)`; `route` prices one such level's computation given
+/// `(np, k, cell_p)`.  The leaf is priced by `leaf`.
+fn predict_topology_with(
+    n: usize,
+    params: &BspParams,
+    factors: &[usize],
+    route: impl Fn(f64, f64, f64) -> f64,
+    leaf: impl Fn(usize, &BspParams) -> Prediction,
+) -> MultilevelPrediction {
+    let p = params.p as f64;
+    let nf = n as f64;
+    let np = nf / p;
+
+    let mut effective: Vec<usize> = Vec::new();
+    let mut cell_p = params.p;
+    let mut n_leaf = n;
+    let mut comp = 0.0f64;
+    let mut comm_us = 0.0f64;
+    // All entries but the last are routing levels; the last factor is
+    // the leaf size, which is re-derived from the surviving cell width
+    // (so a dropped level widens the leaf instead of orphaning keys).
+    for &k in &factors[..factors.len().saturating_sub(1)] {
+        if k <= 1 || cell_p < 2 * k {
+            // Degenerate level: not priced, not recorded.
+            continue;
+        }
+        let kf = k as f64;
+        comp += route(np, kf, cell_p as f64);
+        // One cell-wide route of ~n/p words per processor plus the
+        // coarse gather + broadcast floors, under the cell-scaled L.
+        let cell_params = params.scaled_to(cell_p);
+        comm_us += cell_params.comm_us(np as u64) + 2.0 * cell_params.l_us;
+        effective.push(k);
+        cell_p /= k;
+        n_leaf /= k;
+    }
+
+    // Leaf: the one-level algorithm inside the finest surviving cells.
+    let lvl = leaf(n_leaf, &params.scaled_to(cell_p));
+    effective.push(cell_p);
+    comp += lvl.comp_ops;
+    comm_us += lvl.comm_us;
+
+    let c_seq = seq_charge(n);
+    let pi = p * comp / c_seq;
+    let mu = p * (comm_us * params.comps_per_us) / c_seq;
+    MultilevelPrediction {
+        prediction: Prediction { comp_ops: comp, comm_us, pi, mu },
+        effective,
+    }
+}
+
+/// Arbitrary-depth composition of Proposition 5.1 for the deterministic
+/// multi-level sort (`sort::multilevel::sort_deep_det`) over the
+/// topology vector `factors = [k1, …, kd]`:
 ///
-/// The trade the recursion makes explicit: one extra `g·n/p` routing
+/// * **each routing level ℓ** pays one local sort `(n/p)lg(n/p)` (the
+///   received ranges of the previous level arrive concatenated, not
+///   merged), a coarse sample of `r·k_ℓ` per processor sorted
+///   sequentially at the cell leader (`s_ℓ lg s_ℓ` with
+///   `s_ℓ = r·k_ℓ·cell_p`), the `(k_ℓ−1)`-way partition, a linear
+///   concatenation term, and one cell-wide routing superstep of `~n/p`
+///   words per processor plus the gather/broadcast L floors — all under
+///   the cell-scaled parameters ([`BspParams::scaled_to`]);
+/// * **the leaf** is the one-level prediction on the `kd`-processor
+///   machine with `n/(k1…k_{d−1})` keys — smaller effective L, and
+///   `lg²(kd)` instead of `lg²p` synchronization-bound supersteps.
+///
+/// The trade the recursion makes explicit: each extra `g·n/p` routing
 /// pass buys synchronization and sample-sort terms that scale with the
-/// group size instead of the machine size.
+/// cell size instead of the machine size.  Degenerate levels are
+/// dropped and the priced topology is returned in
+/// [`MultilevelPrediction::effective`].
+pub fn predict_det_topology(
+    n: usize,
+    params: &BspParams,
+    omega: f64,
+    factors: &[usize],
+) -> MultilevelPrediction {
+    let r = omega.ceil().max(1.0);
+    predict_topology_with(
+        n,
+        params,
+        factors,
+        |np, kf, cell_p| {
+            let s = r * kf * cell_p; // gathered coarse sample at the cell leader
+            np * lg(np) + s * lg(s).max(1.0) + (kf - 1.0) * lg(np).max(1.0) + np
+        },
+        |n_leaf, leaf_params| predict_det(n_leaf, leaf_params, omega),
+    )
+}
+
+/// The randomized twin of [`predict_det_topology`]
+/// (`sort::multilevel::sort_deep_ran`): each routing level randomly
+/// samples `share = 2ω²lg n` keys per processor (no local sort — the
+/// randomized variant routes unsorted keys), sorts the gathered sample
+/// at the cell leader, then pays the per-key set formation
+/// `(n/p)(lg k_ℓ + 3)`; the leaf is [`predict_iran`], the closest
+/// closed form to the leaf's SORT_RAN_BSP.
+pub fn predict_ran_topology(
+    n: usize,
+    params: &BspParams,
+    omega: f64,
+    factors: &[usize],
+) -> MultilevelPrediction {
+    let w = omega.max(1.0);
+    let share = 2.0 * w * w * lg(n as f64).max(1.0);
+    predict_topology_with(
+        n,
+        params,
+        factors,
+        |np, kf, cell_p| {
+            let s = share * cell_p; // gathered sample at the cell leader
+            share + s * lg(s).max(1.0) + np * (lg(kf).max(1.0) + 3.0) + np
+        },
+        |n_leaf, leaf_params| predict_iran(n_leaf, leaf_params, omega),
+    )
+}
+
+/// Two-level composition of Proposition 5.1 for the k-group multi-level
+/// deterministic sort — [`predict_det_topology`] over `[k, p/k]`, kept
+/// as the historical det2 pricing entry point.
+///
+/// When `k ≤ 1` or `p < 2k` the level degrades and the one-level
+/// prediction is returned, with the degradation *observable*:
+/// [`MultilevelPrediction::effective`] is `[p]` instead of `[k, p/k]`.
 pub fn predict_det_multilevel(
     n: usize,
     params: &BspParams,
     omega: f64,
     k: usize,
-) -> Prediction {
+) -> MultilevelPrediction {
     let k = k.max(1);
-    if k == 1 || params.p < 2 * k {
-        return predict_det(n, params, omega);
-    }
-    let p = params.p as f64;
-    let nf = n as f64;
-    let np = nf / p;
-    let r = omega.ceil().max(1.0);
-    let kf = k as f64;
-
-    // Level-1 computation (per processor).  The received ranges are
-    // concatenated, not merged (matching `sort_multilevel_det`): a
-    // linear np term, since level 2 re-sorts regardless.
-    let s1 = r * kf * p; // gathered coarse sample at processor 0
-    let comp1 = np * lg(np)
-        + s1 * lg(s1).max(1.0)
-        + (kf - 1.0) * lg(np).max(1.0)
-        + np; // concatenation of received ranges
-    // Level-1 communication: one whole-machine route of ~n/p words per
-    // processor plus the coarse gather + broadcast floors.
-    let comm1_us = params.comm_us(np as u64) + 2.0 * params.l_us;
-
-    // Level 2: the one-level algorithm, group-locally.
-    let sub = params.scaled_to(params.p / k);
-    let lvl2 = predict_det(n / k, &sub, omega);
-
-    let comp = comp1 + lvl2.comp_ops;
-    let comm_us = comm1_us + lvl2.comm_us;
-    let c_seq = seq_charge(n);
-    let pi = p * comp / c_seq;
-    let mu = p * (comm_us * params.comps_per_us) / c_seq;
-    Prediction { comp_ops: comp, comm_us, pi, mu }
+    predict_det_topology(n, params, omega, &[k, params.p.div_ceil(k)])
 }
 
 /// Validity ranges: the conditions of Props 5.1/5.3.
@@ -245,17 +346,63 @@ mod tests {
         let omega = lg(n as f64).log2();
         let one = predict_det(n, &params, omega);
         let two = predict_det_multilevel(n, &params, omega, 8);
+        assert_eq!(two.effective, vec![8, 16]);
         assert!(
-            two.comm_us < one.comm_us,
+            two.prediction.comm_us < one.comm_us,
             "two-level comm {} must beat one-level {}",
-            two.comm_us,
+            two.prediction.comm_us,
             one.comm_us
         );
-        assert!(two.efficiency() > 0.0 && two.efficiency() < 1.0);
+        let eff = two.prediction.efficiency();
+        assert!(eff > 0.0 && eff < 1.0);
         // k = 1 degrades to the one-level prediction exactly.
         let k1 = predict_det_multilevel(n, &params, omega, 1);
-        assert_eq!(k1.comm_us, one.comm_us);
-        assert_eq!(k1.comp_ops, one.comp_ops);
+        assert_eq!(k1.prediction.comm_us, one.comm_us);
+        assert_eq!(k1.prediction.comp_ops, one.comp_ops);
+        assert_eq!(k1.effective, vec![128]);
+    }
+
+    /// Regression for the silent `p < 2k` fallback: the one-level
+    /// prediction is still returned, but the degradation is observable
+    /// through `effective` — a caller can no longer describe the run as
+    /// "k groups" when no grouping was priced.
+    #[test]
+    fn degraded_multilevel_records_effective_topology() {
+        let n = 1usize << 20;
+        let params = cray_t3d(16);
+        let omega = 4.0;
+        let one = predict_det(n, &params, omega);
+        // k = 12 needs p ≥ 24; at p = 16 the level must degrade.
+        let deg = predict_det_multilevel(n, &params, omega, 12);
+        assert_eq!(deg.prediction.comm_us, one.comm_us);
+        assert_eq!(deg.prediction.comp_ops, one.comp_ops);
+        assert_eq!(deg.effective, vec![16], "degraded topology must be observable");
+        // A healthy k stays fully priced and observable.
+        let ok = predict_det_multilevel(n, &params, omega, 4);
+        assert_eq!(ok.effective, vec![4, 4]);
+        assert!(ok.prediction.comp_ops != one.comp_ops);
+    }
+
+    #[test]
+    fn topology_predictions_drop_degenerate_levels() {
+        let n = 1usize << 23;
+        let params = cray_t3d(64);
+        let omega = lg(n as f64).log2();
+        // [1, 8, 8]: the k=1 level prices nothing; effective is [8, 8].
+        let d = predict_det_topology(n, &params, omega, &[1, 8, 8]);
+        assert_eq!(d.effective, vec![8, 8]);
+        let clean = predict_det_topology(n, &params, omega, &[8, 8]);
+        assert_eq!(d.prediction.comp_ops, clean.prediction.comp_ops);
+        assert_eq!(d.prediction.comm_us, clean.prediction.comm_us);
+        // Depth 3 prices three levels and keeps a sane efficiency.
+        let d3 = predict_det_topology(n, &params, omega, &[4, 4, 4]);
+        assert_eq!(d3.effective, vec![4, 4, 4]);
+        let eff = d3.prediction.efficiency();
+        assert!(eff > 0.0 && eff < 1.0, "eff={eff}");
+        // The randomized twin prices the same shapes.
+        let r3 = predict_ran_topology(n, &params, lg(n as f64).sqrt(), &[4, 4, 4]);
+        assert_eq!(r3.effective, vec![4, 4, 4]);
+        assert!(r3.prediction.comm_us > 0.0 && r3.prediction.comp_ops > 0.0);
     }
 
     #[test]

@@ -7,12 +7,14 @@
 //! bounds the keys received by any processor by `(1 + ε)·n/p` plus an
 //! additive oversampling term, with `ε = 1/⌈ω⌉` from the configured
 //! oversampling ratio.  The threaded engine can only check this up to
-//! the host's thread budget; the simulator checks it at `p` up to 1024,
+//! the host's thread budget; the simulator checks it at `p` up to 4096,
 //! seeded and bit-for-bit replayable.
 //!
-//! ~200 seeded cases: every algorithm variant and baseline ×
-//! benchmark distributions × all four key domains × `p ∈ {4 .. 1024}`.
-//! Each case asserts:
+//! ~290 seeded cases: every algorithm variant and baseline ×
+//! benchmark distributions × all four key domains × `p ∈ {4 .. 1024}`,
+//! plus a depth-3 tier pinning `4×4×4` / `8×8×8` / `16×16×16` topology
+//! trees for det-k/ran-k at `p ∈ {64, 512, 4096}` over all four
+//! domains.  Each case asserts:
 //!
 //! 1. **sortedness + size** (inside `execute_typed`, the harness gate),
 //! 2. **permutation** — order-independent multiset hash of the output
@@ -36,8 +38,10 @@
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 
-use bsp_sort::bsp::{Backend, Ledger};
-use bsp_sort::experiment::{execute_typed, AlgoVariant, RunSpec, StudyKey, ALL_ALGOS};
+use bsp_sort::bsp::{Backend, Ledger, Topology};
+use bsp_sort::experiment::{
+    execute_typed, resolved_deep_topology, AlgoVariant, RunSpec, StudyKey, ALL_ALGOS,
+};
 use bsp_sort::gen::{generate_typed_for_proc, Benchmark};
 use bsp_sort::key::{Key, Record, F64};
 use bsp_sort::sort::{det, iran, SampleSortMethod, SortConfig};
@@ -73,7 +77,13 @@ fn multiset_hash<K: Key>(keys: impl Iterator<Item = K>) -> (u64, u64, u64, usize
 /// The per-algorithm balance bound on keys received by any processor,
 /// or `None` for baselines without a paper guarantee ([44]/PSRS is the
 /// documented counter-example: it cannot handle duplicates at all).
-fn balance_bound(algo: AlgoVariant, n: usize, p: usize, cfg: &SortConfig) -> Option<f64> {
+fn balance_bound(
+    algo: AlgoVariant,
+    n: usize,
+    p: usize,
+    cfg: &SortConfig,
+    topology: Option<Topology>,
+) -> Option<f64> {
     let npp = n as f64 / p as f64;
     match algo {
         // Lemma 5.1, deterministic guarantee: (1 + 1/⌈ω⌉)·n/p + ⌈ω⌉·p.
@@ -92,6 +102,19 @@ fn balance_bound(algo: AlgoVariant, n: usize, p: usize, cfg: &SortConfig) -> Opt
         AlgoVariant::Det2 | AlgoVariant::Ran2 => {
             let r = det::omega_det(cfg, n).ceil().max(1.0);
             Some(3.0 * npp + 4.0 * r * p as f64 + 256.0)
+        }
+        // Depth-k: every routing level compounds one oversampling slack
+        // (factor ≤ 2 at ω = 1), so the envelope scales with the actual
+        // recursion depth — still far below the Θ(n) collapse a
+        // duplicate-tagging bug would cause (2^d·n/p ≪ n for p ≫ 2^d).
+        AlgoVariant::DetK | AlgoVariant::RanK => {
+            let t = topology.unwrap_or_else(|| {
+                let spec = RunSpec::new(algo, Benchmark::Uniform, p, n).with_cfg(*cfg);
+                resolved_deep_topology(&spec)
+            });
+            let d = t.depth().max(1) as f64;
+            let r = det::omega_det(cfg, n).ceil().max(1.0);
+            Some(npp * 2.0f64.powf(d) + 4.0 * r * p as f64 * d + 512.0 * d)
         }
         AlgoVariant::HelmanDet | AlgoVariant::HelmanRan | AlgoVariant::Psrs => None,
     }
@@ -113,15 +136,26 @@ fn case_cfg(p: usize) -> SortConfig {
 
 /// Run one seeded case on the simulator backend and check every
 /// conformance property.  Panics carry the case label + replay seed.
-fn check_case<K: StudyKey>(algo: AlgoVariant, bench: Benchmark, n: usize, p: usize, seed: u64) {
+/// A pinned `topology` (depth-k variants only) is part of the label, so
+/// failures replay against the exact tree that was exercised.
+fn check_case<K: StudyKey>(
+    algo: AlgoVariant,
+    bench: Benchmark,
+    n: usize,
+    p: usize,
+    topology: Option<Topology>,
+    seed: u64,
+) {
     let cfg = case_cfg(p);
+    let topo_label = topology.map(|t| format!(" topology={}", t.label())).unwrap_or_default();
     let label = format!(
-        "algo={} bench={} domain={} n={n} p={p} backend=sim replay-seed={seed:#x}",
+        "algo={} bench={} domain={} n={n} p={p}{topo_label} backend=sim replay-seed={seed:#x}",
         algo.tag(),
         bench.tag(),
         K::NAME,
     );
     let mut spec = RunSpec::new(algo, bench, p, n).with_cfg(cfg).with_backend(Backend::Sim);
+    spec.topology = topology;
     spec.seed = seed;
 
     let single = match catch_unwind(AssertUnwindSafe(|| execute_typed::<K>(&spec))) {
@@ -147,7 +181,7 @@ fn check_case<K: StudyKey>(algo: AlgoVariant, bench: Benchmark, n: usize, p: usi
     );
 
     // Balance / duplicate transparency: Lemma 5.1-style received bound.
-    if let Some(bound) = balance_bound(algo, n, p, &cfg) {
+    if let Some(bound) = balance_bound(algo, n, p, &cfg, topology) {
         for (pid, r) in single.outputs.iter().enumerate() {
             assert!(
                 (r.received as f64) <= bound + 1.0,
@@ -173,7 +207,7 @@ fn sweep_tier<K: StudyKey>(
     let mut idx = 0u64;
     for &algo in algos {
         for &bench in benches {
-            check_case::<K>(algo, bench, n, p, case_seed(tier, idx));
+            check_case::<K>(algo, bench, n, p, None, case_seed(tier, idx));
             idx += 1;
         }
     }
@@ -181,7 +215,7 @@ fn sweep_tier<K: StudyKey>(
 
 // --------------------------------------------------------------------
 // Tier A: p = 4 — every algorithm × {U, DD, S} × every key domain
-// (108 cases).
+// (132 cases).
 // --------------------------------------------------------------------
 
 const TIER_A_BENCHES: [Benchmark; 3] =
@@ -208,7 +242,7 @@ fn conformance_p4_record_all_algos() {
 }
 
 // --------------------------------------------------------------------
-// Tier B: p = 64 — every algorithm × {U, WR} on i32 (18 cases); [WR]
+// Tier B: p = 64 — every algorithm × {U, WR} on i32 (22 cases); [WR]
 // is the regular-sampling adversary of [39].
 // --------------------------------------------------------------------
 
@@ -225,7 +259,7 @@ fn conformance_p64_i32_uniform_and_adversarial() {
 
 // --------------------------------------------------------------------
 // Tier C: p = 256 — every algorithm × {U (i32 + u64), DD (i32)}
-// (27 cases).
+// (33 cases).
 // --------------------------------------------------------------------
 
 #[test]
@@ -244,9 +278,9 @@ fn conformance_p256_duplicates_i32() {
 }
 
 // --------------------------------------------------------------------
-// Tier D: p = 1024 — the acceptance grid: all six sort variants + both
-// baseline families, for every key domain (36 cases), plus duplicate
-// transparency at p = 1024 (7 cases).
+// Tier D: p = 1024 — the acceptance grid: all eight sort variants +
+// both baseline families, for every key domain (44 cases), plus
+// duplicate transparency at p = 1024 (9 cases).
 // --------------------------------------------------------------------
 
 const P1024_N: usize = 1 << 14; // 16 keys per virtual processor
@@ -286,11 +320,96 @@ fn conformance_p1024_duplicate_transparency() {
             AlgoVariant::Ran2,
             AlgoVariant::HelmanDet,
             AlgoVariant::HelmanRan,
+            AlgoVariant::DetK,
+            AlgoVariant::RanK,
         ],
         &[Benchmark::DetDup],
         P1024_N,
         1024,
     );
+}
+
+// --------------------------------------------------------------------
+// Depth-3 tier: det-k / ran-k with pinned three-level topology trees on
+// the simulator — `4×4×4` at p = 64, `8×8×8` at p = 512, `16×16×16` at
+// p = 4096 — over all four key domains × {U, DD} (48 cases).  Exercises
+// the recursion one level past the paper's two-level experiments while
+// asserting the same four properties, with the balance envelope scaled
+// to depth 3.
+// --------------------------------------------------------------------
+
+const DEPTH3_BENCHES: [Benchmark; 2] = [Benchmark::Uniform, Benchmark::DetDup];
+
+fn sweep_depth3<K: StudyKey>(tier: u64, n: usize, p: usize, dims: &[usize]) {
+    let topology = Topology::new(dims);
+    assert_eq!(topology.nprocs(), p, "depth-3 tier dims must multiply to p");
+    let mut idx = 0u64;
+    for &algo in &[AlgoVariant::DetK, AlgoVariant::RanK] {
+        for &bench in &DEPTH3_BENCHES {
+            check_case::<K>(algo, bench, n, p, Some(topology), case_seed(tier, idx));
+            idx += 1;
+        }
+    }
+}
+
+#[test]
+fn conformance_depth3_p64_i32() {
+    sweep_depth3::<i32>(14, 1 << 13, 64, &[4, 4, 4]);
+}
+
+#[test]
+fn conformance_depth3_p64_u64() {
+    sweep_depth3::<u64>(15, 1 << 13, 64, &[4, 4, 4]);
+}
+
+#[test]
+fn conformance_depth3_p64_f64() {
+    sweep_depth3::<F64>(16, 1 << 13, 64, &[4, 4, 4]);
+}
+
+#[test]
+fn conformance_depth3_p64_record() {
+    sweep_depth3::<Record>(17, 1 << 13, 64, &[4, 4, 4]);
+}
+
+#[test]
+fn conformance_depth3_p512_i32() {
+    sweep_depth3::<i32>(18, 1 << 14, 512, &[8, 8, 8]);
+}
+
+#[test]
+fn conformance_depth3_p512_u64() {
+    sweep_depth3::<u64>(19, 1 << 14, 512, &[8, 8, 8]);
+}
+
+#[test]
+fn conformance_depth3_p512_f64() {
+    sweep_depth3::<F64>(20, 1 << 14, 512, &[8, 8, 8]);
+}
+
+#[test]
+fn conformance_depth3_p512_record() {
+    sweep_depth3::<Record>(21, 1 << 14, 512, &[8, 8, 8]);
+}
+
+#[test]
+fn conformance_depth3_p4096_i32() {
+    sweep_depth3::<i32>(22, 1 << 16, 4096, &[16, 16, 16]);
+}
+
+#[test]
+fn conformance_depth3_p4096_u64() {
+    sweep_depth3::<u64>(23, 1 << 16, 4096, &[16, 16, 16]);
+}
+
+#[test]
+fn conformance_depth3_p4096_f64() {
+    sweep_depth3::<F64>(24, 1 << 16, 4096, &[16, 16, 16]);
+}
+
+#[test]
+fn conformance_depth3_p4096_record() {
+    sweep_depth3::<Record>(25, 1 << 16, 4096, &[16, 16, 16]);
 }
 
 // --------------------------------------------------------------------

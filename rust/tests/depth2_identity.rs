@@ -1,0 +1,147 @@
+//! Depth-2 bit-identity: the depth-k recursion reproduces the two-level
+//! sorts exactly.
+//!
+//! `det2` / `ran2` predate the depth-k rewrite; their entry points
+//! (`sort_multilevel_det` / `sort_multilevel_ran`) are now thin wrappers
+//! over the recursive `sort_deep_*` with a single-communicator slice.
+//! The acceptance bar for the refactor is that nothing observable moved:
+//! at `p = 8`, `det2`/`ran2` and `det-k`/`ran-k` pinned to the matching
+//! two-level topology `[k, p/k]` must produce
+//!
+//! * identical per-processor outputs (keys and received counts),
+//! * identical charged ledgers — superstep labels, phases, ops, words,
+//!   rounds — on both backends, and
+//! * identical *virtual wall-clock* on the simulator (real wall-clock on
+//!   the threaded engine is the one field allowed to differ).
+//!
+//! A second set of cases pins the topology explicitly on `det2`/`ran2`
+//! themselves and checks it matches their default (`default_groups(p)`)
+//! path, so the `--topology` plumbing cannot drift from the default.
+
+use bsp_sort::bsp::{Backend, Ledger, Topology};
+use bsp_sort::experiment::{execute_typed, AlgoVariant, RunSpec, SingleRun, StudyKey};
+use bsp_sort::gen::Benchmark;
+use bsp_sort::sort::multilevel;
+
+const P: usize = 8;
+const N: usize = 1 << 12;
+const SEED: u64 = 0xD2D2_0006;
+
+/// Full ledger equality on the charged side; `compare_wall` additionally
+/// requires exact (virtual) wall-clock equality — valid only when both
+/// runs came from the simulator.
+fn assert_identical_ledgers(a: &Ledger, b: &Ledger, label: &str, compare_wall: bool) {
+    assert_eq!(a.supersteps.len(), b.supersteps.len(), "{label}: superstep count");
+    for (i, (x, y)) in a.supersteps.iter().zip(&b.supersteps).enumerate() {
+        assert_eq!(x.label, y.label, "{label} superstep {i}: label");
+        assert_eq!(x.phase, y.phase, "{label} superstep {i}: phase");
+        assert_eq!(x.max_ops, y.max_ops, "{label} superstep {i} ({}): max_ops", x.label);
+        assert_eq!(x.h_words, y.h_words, "{label} superstep {i} ({}): h_words", x.label);
+        assert_eq!(
+            x.total_words, y.total_words,
+            "{label} superstep {i} ({}): total_words",
+            x.label
+        );
+        assert_eq!(x.procs, y.procs, "{label} superstep {i}: procs");
+        assert_eq!(x.reporters, y.reporters, "{label} superstep {i}: reporters");
+        assert_eq!(x.round, y.round, "{label} superstep {i}: round");
+        if compare_wall {
+            assert_eq!(x.wall_us, y.wall_us, "{label} superstep {i} ({}): wall", x.label);
+        }
+    }
+    let a_phases: Vec<&String> = a.phases.keys().collect();
+    let b_phases: Vec<&String> = b.phases.keys().collect();
+    assert_eq!(a_phases, b_phases, "{label}: phase sets");
+    for (name, x) in &a.phases {
+        let y = &b.phases[name];
+        assert_eq!(x.max_ops, y.max_ops, "{label} phase {name}: max_ops");
+        assert_eq!(x.h_words, y.h_words, "{label} phase {name}: h_words");
+        assert_eq!(x.supersteps, y.supersteps, "{label} phase {name}: supersteps");
+        if compare_wall {
+            assert_eq!(x.wall_us, y.wall_us, "{label} phase {name}: wall");
+        }
+    }
+    if compare_wall {
+        assert_eq!(a.wall_us, b.wall_us, "{label}: total virtual wall");
+    }
+}
+
+fn assert_identical_runs<K: StudyKey>(
+    a: &SingleRun<K>,
+    b: &SingleRun<K>,
+    label: &str,
+    compare_wall: bool,
+) {
+    assert_eq!(a.outputs.len(), b.outputs.len(), "{label}: output chunk count");
+    for (pid, (x, y)) in a.outputs.iter().zip(&b.outputs).enumerate() {
+        assert_eq!(x.keys, y.keys, "{label} pid={pid}: output keys");
+        assert_eq!(x.received, y.received, "{label} pid={pid}: received");
+    }
+    assert_identical_ledgers(&a.ledger, &b.ledger, label, compare_wall);
+}
+
+fn run<K: StudyKey>(
+    algo: AlgoVariant,
+    bench: Benchmark,
+    backend: Backend,
+    topology: Option<Topology>,
+) -> SingleRun<K> {
+    let mut spec = RunSpec::new(algo, bench, P, N).with_backend(backend);
+    spec.topology = topology;
+    spec.seed = SEED;
+    execute_typed::<K>(&spec)
+}
+
+/// The two-level topology `[k, p/k]` matching `det2`/`ran2`'s default
+/// grouping at `p`.
+fn matching_two_level(p: usize) -> Topology {
+    Topology::two_level(p, multilevel::default_groups(p))
+}
+
+#[test]
+fn detk_reproduces_det2_bit_for_bit() {
+    let t = matching_two_level(P);
+    for bench in [Benchmark::Uniform, Benchmark::DetDup, Benchmark::Staggered] {
+        for (backend, compare_wall) in [(Backend::Sim, true), (Backend::Threaded, false)] {
+            let det2 = run::<i32>(AlgoVariant::Det2, bench, backend, None);
+            let detk = run::<i32>(AlgoVariant::DetK, bench, backend, Some(t));
+            let label = format!(
+                "det2 vs det-k[{}] bench={} backend={backend:?}",
+                t.label(),
+                bench.tag(),
+            );
+            assert_identical_runs(&det2, &detk, &label, compare_wall);
+        }
+    }
+}
+
+#[test]
+fn rank_reproduces_ran2_bit_for_bit() {
+    let t = matching_two_level(P);
+    for bench in [Benchmark::Uniform, Benchmark::DetDup] {
+        for (backend, compare_wall) in [(Backend::Sim, true), (Backend::Threaded, false)] {
+            let ran2 = run::<u64>(AlgoVariant::Ran2, bench, backend, None);
+            let rank = run::<u64>(AlgoVariant::RanK, bench, backend, Some(t));
+            let label = format!(
+                "ran2 vs ran-k[{}] bench={} backend={backend:?}",
+                t.label(),
+                bench.tag(),
+            );
+            assert_identical_runs(&ran2, &rank, &label, compare_wall);
+        }
+    }
+}
+
+#[test]
+fn pinned_two_level_topology_matches_the_default_grouping() {
+    // `--topology 2x4` on det2/ran2 must be the same machine as their
+    // default `default_groups(8) = 2` split — pinning is a no-op when
+    // it names the default shape.
+    let t = matching_two_level(P);
+    for algo in [AlgoVariant::Det2, AlgoVariant::Ran2] {
+        let default = run::<i32>(algo, Benchmark::Uniform, Backend::Sim, None);
+        let pinned = run::<i32>(algo, Benchmark::Uniform, Backend::Sim, Some(t));
+        let label = format!("{} default vs pinned {}", algo.tag(), t.label());
+        assert_identical_runs(&default, &pinned, &label, true);
+    }
+}
