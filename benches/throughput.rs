@@ -1,0 +1,287 @@
+//! `cargo bench --bench throughput` — jobs/sec under concurrent load:
+//! the persistent engine pool against per-job machine spin-up.
+//!
+//! Grid: n ∈ {10⁴, 10⁵, 10⁶} × {1, 4, 16, 64} concurrent submitters,
+//! SORT_DET_BSP on uniform i32 keys at p = 8.  Each submitter is a
+//! thread in a submit-join loop, so concurrency comes from the number
+//! of submitters — exactly the serving model the `Sorter` façade
+//! exposes.  The pool side reuses parked lanes and slot-matrix scratch
+//! and batches small jobs into shared supersteps; the spin-up side pays
+//! thread creation and buffer allocation per job (the pre-service
+//! `BspMachine::run` one-shot path).
+//!
+//! Flags:
+//!   --quick-smoke       tiny grid, runs in seconds (the CI gate)
+//!   --json <path>       write the results as a throughput-baseline JSON
+//!   --compare <path>    validate a committed baseline: schema check,
+//!                       pool-speedup floor on the acceptance cell, and
+//!                       a >15% jobs/sec regression gate when the
+//!                       baseline was recorded on this host (refresh
+//!                       with ./ci.sh --bench-baseline)
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use bsp_sort::bsp::{cray_t3d, BspMachine, Engine, EngineConfig};
+use bsp_sort::gen::{generate_for_proc, Benchmark};
+use bsp_sort::sort::{det, SortConfig};
+use bsp_sort::util::json::Json;
+
+const P: usize = 8;
+const SCHEMA: &str = "bsp-sort/throughput-baseline/v1";
+/// The acceptance cell: pool vs spin-up at n = 10⁴, 16 submitters.
+const ACCEPT_N: usize = 10_000;
+const ACCEPT_SUBMITTERS: usize = 16;
+
+struct Cell {
+    n: usize,
+    submitters: usize,
+    jobs: usize,
+    pool_jobs_per_sec: f64,
+    spinup_jobs_per_sec: f64,
+}
+
+impl Cell {
+    fn speedup(&self) -> f64 {
+        self.pool_jobs_per_sec / self.spinup_jobs_per_sec
+    }
+}
+
+fn fingerprint() -> String {
+    format!("{}/{}/{}cpu", std::env::consts::OS, std::env::consts::ARCH, threads())
+}
+
+fn threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// One pool-side cell: `submitters` threads, each submitting
+/// `jobs_each` blocking jobs to the shared persistent engine.
+fn pool_cell(engine: &Arc<Engine>, n: usize, submitters: usize, jobs_each: usize) -> f64 {
+    let start = Instant::now();
+    std::thread::scope(|s| {
+        for _ in 0..submitters {
+            let engine = Arc::clone(engine);
+            s.spawn(move || {
+                let params = *engine.params();
+                let cfg = SortConfig::default();
+                for _ in 0..jobs_each {
+                    let handle = engine
+                        .submit_program_blocking::<i32, _, _>(n, move |ctx| {
+                            let local =
+                                generate_for_proc(Benchmark::Uniform, ctx.pid(), P, n / P);
+                            det::sort_det_bsp(ctx, &params, local, n, &cfg)
+                        })
+                        .expect("blocking submission is admitted");
+                    let run = handle.join().expect("pool job completes");
+                    assert_eq!(run.outputs.iter().map(|r| r.keys.len()).sum::<usize>(), n);
+                }
+            });
+        }
+    });
+    (submitters * jobs_each) as f64 / start.elapsed().as_secs_f64()
+}
+
+/// One spin-up-side cell: the same workload, but every job constructs a
+/// fresh `BspMachine` (new threads, new mailboxes) like pre-service
+/// callers did.
+fn spinup_cell(n: usize, submitters: usize, jobs_each: usize) -> f64 {
+    let params = cray_t3d(P);
+    let cfg = SortConfig::default();
+    let start = Instant::now();
+    std::thread::scope(|s| {
+        for _ in 0..submitters {
+            s.spawn(move || {
+                for _ in 0..jobs_each {
+                    let machine = BspMachine::new(params);
+                    let run = machine.run(|ctx| {
+                        let local = generate_for_proc(Benchmark::Uniform, ctx.pid(), P, n / P);
+                        det::sort_det_bsp(ctx, &params, local, n, &cfg)
+                    });
+                    assert_eq!(run.outputs.iter().map(|r| r.keys.len()).sum::<usize>(), n);
+                }
+            });
+        }
+    });
+    (submitters * jobs_each) as f64 / start.elapsed().as_secs_f64()
+}
+
+fn to_json(cells: &[Cell]) -> Json {
+    let obj = |fields: Vec<(&str, Json)>| {
+        Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    };
+    obj(vec![
+        ("schema", Json::str(SCHEMA)),
+        (
+            "host",
+            obj(vec![
+                ("fingerprint", Json::str(fingerprint())),
+                ("threads", Json::num(threads() as f64)),
+            ]),
+        ),
+        ("p", Json::num(P as f64)),
+        ("algo", Json::str("det")),
+        ("bench", Json::str("uniform")),
+        (
+            "cells",
+            Json::Arr(
+                cells
+                    .iter()
+                    .map(|c| {
+                        obj(vec![
+                            ("n", Json::num(c.n as f64)),
+                            ("submitters", Json::num(c.submitters as f64)),
+                            ("jobs", Json::num(c.jobs as f64)),
+                            ("pool_jobs_per_sec", Json::num(c.pool_jobs_per_sec)),
+                            ("spinup_jobs_per_sec", Json::num(c.spinup_jobs_per_sec)),
+                            ("pool_speedup", Json::num(c.speedup())),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Baseline gate.  Always: schema tag + structural validity + a pool
+/// speedup floor on the acceptance cell of *this* run.  Additionally,
+/// when the baseline's host fingerprint matches this host: fail on a
+/// >15% pool jobs/sec regression in any cell present in both runs.
+fn compare(path: &str, cells: &[Cell], smoke: bool) -> Result<(), String> {
+    let text =
+        std::fs::read_to_string(path).map_err(|e| format!("cannot read baseline {path}: {e}"))?;
+    let doc = Json::parse(&text).map_err(|e| format!("baseline {path}: {e}"))?;
+    if doc.get("schema").and_then(Json::as_str) != Some(SCHEMA) {
+        return Err(format!("baseline {path}: schema tag is not {SCHEMA:?}"));
+    }
+    let base_cells = doc
+        .get("cells")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| format!("baseline {path}: missing cells array"))?;
+    for c in base_cells {
+        for key in ["n", "submitters", "pool_jobs_per_sec", "spinup_jobs_per_sec"] {
+            if c.get(key).and_then(Json::as_f64).is_none() {
+                return Err(format!("baseline {path}: cell lacks numeric {key:?}"));
+            }
+        }
+    }
+
+    // The acceptance criterion is 1.5× on full-size runs; the smoke
+    // grid's cells are small enough that scheduling noise matters, so
+    // CI enforces a softer floor there (the full bench enforces 1.5×).
+    let floor = if smoke { 1.1 } else { 1.5 };
+    if let Some(c) = cells.iter().find(|c| c.n == ACCEPT_N && c.submitters == ACCEPT_SUBMITTERS) {
+        if c.speedup() < floor {
+            return Err(format!(
+                "pool speedup {:.2}x below the {floor:.1}x floor at n={ACCEPT_N}/{ACCEPT_SUBMITTERS} submitters",
+                c.speedup()
+            ));
+        }
+        println!(
+            "acceptance cell n={ACCEPT_N} submitters={ACCEPT_SUBMITTERS}: pool {:.2}x spin-up (floor {floor:.1}x)",
+            c.speedup()
+        );
+    }
+
+    let base_fp = doc
+        .get("host")
+        .and_then(|h| h.get("fingerprint"))
+        .and_then(Json::as_str)
+        .unwrap_or("<missing>");
+    if base_fp != fingerprint() {
+        println!(
+            "baseline host {:?} differs from this host {:?}: schema-only validation \
+             (refresh the numbers with ./ci.sh --bench-baseline)",
+            base_fp,
+            fingerprint()
+        );
+        return Ok(());
+    }
+    for bc in base_cells {
+        let (bn, bs) = (
+            bc.get("n").and_then(Json::as_u64).unwrap_or(0) as usize,
+            bc.get("submitters").and_then(Json::as_u64).unwrap_or(0) as usize,
+        );
+        let Some(fresh) = cells.iter().find(|c| c.n == bn && c.submitters == bs) else {
+            continue;
+        };
+        let base = bc.get("pool_jobs_per_sec").and_then(Json::as_f64).unwrap_or(0.0);
+        if base > 0.0 && fresh.pool_jobs_per_sec < 0.85 * base {
+            return Err(format!(
+                "pool throughput regression at n={bn}/{bs} submitters: \
+                 {:.1} jobs/sec vs baseline {base:.1} (>15% below)",
+                fresh.pool_jobs_per_sec
+            ));
+        }
+    }
+    println!("baseline comparison OK (host match, no cell regressed >15%)");
+    Ok(())
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--quick-smoke");
+    let opt = |name: &str| {
+        args.iter()
+            .position(|a| a == name)
+            .and_then(|i| args.get(i + 1))
+            .cloned()
+    };
+    let json_out = opt("--json");
+    let baseline = opt("--compare");
+
+    let (ns, subs): (Vec<usize>, Vec<usize>) = if smoke {
+        println!("quick-smoke mode: shrunken grid");
+        (vec![10_000], vec![1, ACCEPT_SUBMITTERS])
+    } else {
+        (vec![10_000, 100_000, 1_000_000], vec![1, 4, 16, 64])
+    };
+
+    // One persistent engine across every cell — the whole point of the
+    // service: lanes stay parked and scratch stays warm between jobs.
+    let engine = Arc::new(Engine::new(EngineConfig::new(cray_t3d(P)).with_crews(4)));
+    pool_cell(&engine, ns[0], 2, 2); // warm the lanes and scratch pool
+    spinup_cell(ns[0], 2, 1);
+
+    let mut cells = Vec::new();
+    for &n in &ns {
+        for &submitters in &subs {
+            // Scale the per-submitter job count down as n grows so no
+            // cell dominates the wall-clock budget.
+            let jobs_each = if smoke { 4 } else { (400_000 / n).clamp(1, 16) };
+            let jobs = submitters * jobs_each;
+            let pool = pool_cell(&engine, n, submitters, jobs_each);
+            let spin = spinup_cell(n, submitters, jobs_each);
+            println!(
+                "throughput n={n} submitters={submitters} jobs={jobs}: \
+                 pool {pool:.1} jobs/sec, spin-up {spin:.1} jobs/sec ({:.2}x)",
+                pool / spin
+            );
+            cells.push(Cell {
+                n,
+                submitters,
+                jobs,
+                pool_jobs_per_sec: pool,
+                spinup_jobs_per_sec: spin,
+            });
+        }
+    }
+    let stats = engine.stats();
+    println!(
+        "engine totals: {} jobs completed, {} batched into {} shared supersteps, {} scratch reuses",
+        stats.completed, stats.batched_jobs, stats.shared_batches, stats.scratch_reuses
+    );
+    engine.shutdown();
+
+    if let Some(path) = &json_out {
+        std::fs::write(path, to_json(&cells).render())
+            .unwrap_or_else(|e| panic!("cannot write {path}: {e}"));
+        println!("wrote {path}");
+    }
+    if let Some(path) = &baseline {
+        if let Err(msg) = compare(path, &cells, smoke) {
+            eprintln!("throughput gate failed: {msg}");
+            std::process::exit(1);
+        }
+    }
+}

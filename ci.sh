@@ -1,6 +1,6 @@
 #!/usr/bin/env bash
 # Tier-1 gate plus hygiene checks.
-# Usage: ./ci.sh [--check-xla|--check-links|--conformance|--planner-smoke]
+# Usage: ./ci.sh [--check-xla|--check-links|--conformance|--planner-smoke|--bench-baseline]
 #
 # This is what .github/workflows/ci.yml runs; keep it the single source
 # of truth for "does the repo pass".
@@ -24,6 +24,11 @@
 #   ./ci.sh --planner-smoke
 #                         just the planner smoke tests: flat at small
 #                         p/cheap L, deeper topology under punishing L.
+#   ./ci.sh --bench-baseline
+#                         run the full throughput grid (engine pool vs
+#                         per-job spin-up) and rewrite BENCH_baseline.json
+#                         with this host's numbers + fingerprint, arming
+#                         the >15% regression gate in the default run.
 set -euo pipefail
 cd "$(dirname "$0")"
 
@@ -77,6 +82,15 @@ if [[ "${1:-}" == "--conformance" ]]; then
     planner_smoke
     echo "== planner acceptance: chosen topology within 10% of exhaustive minimum =="
     cargo test --release --test planner_acceptance -- --nocapture
+    exit 0
+fi
+
+if [[ "${1:-}" == "--bench-baseline" ]]; then
+    echo "== throughput: full grid, rewriting BENCH_baseline.json =="
+    # cargo runs bench binaries with the package dir as cwd; hand it an
+    # absolute path so the baseline lands at the repo root.
+    cargo bench --bench throughput -- --json "$(pwd)/BENCH_baseline.json"
+    echo "BENCH_baseline.json refreshed for this host; commit it to arm the regression gate"
     exit 0
 fi
 
@@ -134,6 +148,13 @@ check_links
 
 echo "== bench smoke-run: hot_paths --quick-smoke =="
 cargo bench --bench hot_paths -- --quick-smoke
+
+echo "== bench smoke-run: throughput --quick-smoke + baseline gate =="
+# Schema-validates BENCH_baseline.json, enforces the pool-speedup floor
+# on the acceptance cell (n=1e4, 16 submitters), and — when the
+# committed baseline carries this host's fingerprint — fails on a >15%
+# pool jobs/sec regression in any shared cell.
+cargo bench --bench throughput -- --quick-smoke --compare "$(pwd)/BENCH_baseline.json"
 
 echo "== smoke: experiment --quick writes a schema-valid BENCH json =="
 smokedir=$(mktemp -d)

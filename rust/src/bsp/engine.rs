@@ -35,7 +35,7 @@
 //! latter over per-group barriers and group-scoped slot-matrix views.
 
 use std::cell::UnsafeCell;
-use std::sync::{Barrier, Mutex};
+use std::sync::{Arc, Barrier, Condvar, Mutex};
 use std::time::Instant;
 
 use crate::key::Key;
@@ -67,11 +67,32 @@ struct SlotMatrix<K: Key> {
 unsafe impl<K: Key> Sync for SlotMatrix<K> {}
 
 impl<K: Key> SlotMatrix<K> {
-    fn new(p: usize) -> SlotMatrix<K> {
+    /// Build a matrix over `p * p` fresh (or recycled) slot buffers: the
+    /// engine pool hands back the buffers of a finished job so the next
+    /// job of the same key domain starts with warmed allocations.  Each
+    /// buffer is cleared; its capacity survives.
+    fn from_buffers(p: usize, mut bufs: Vec<Vec<Payload<K>>>) -> SlotMatrix<K> {
+        bufs.resize_with(p * p, Vec::new);
         SlotMatrix {
             p,
-            slots: (0..p * p).map(|_| UnsafeCell::new(Vec::new())).collect(),
+            slots: bufs
+                .into_iter()
+                .map(|mut b| {
+                    b.clear();
+                    UnsafeCell::new(b)
+                })
+                .collect(),
         }
+    }
+
+    /// Take the slot buffers back out (capacity preserved) so the engine
+    /// pool can recycle them into the next job's matrix.
+    ///
+    /// SAFETY: every processor of the run must have finished — the
+    /// caller must hold a happens-before edge from each processor's last
+    /// slot access (the pool's `remaining` counter provides it).
+    unsafe fn take_buffers(&self) -> Vec<Vec<Payload<K>>> {
+        self.slots.iter().map(|s| std::mem::take(&mut *s.get())).collect()
     }
 
     /// Stage a payload from `src` to `dst`.
@@ -152,18 +173,146 @@ impl PhaseInterner {
     pub(super) fn into_names(self) -> Vec<String> {
         self.names.into_inner().unwrap()
     }
+
+    /// Drain the interned names through a shared reference — the engine
+    /// pool finalizes a job's ledger while other handles to the job's
+    /// world are still alive.  Leaves the interner empty; call exactly
+    /// once, at end of run.
+    pub(super) fn take_names(&self) -> Vec<String> {
+        std::mem::take(&mut *self.names.lock().unwrap())
+    }
 }
 
-struct World<K: Key> {
-    p: usize,
+/// A reusable barrier whose participant count can *shrink* while other
+/// threads wait: when a job of a shared-superstep batch finishes, each
+/// of its processors [`SharedBarrier::leave`]s, and the remaining jobs
+/// keep synchronizing among themselves.  `std::sync::Barrier` fixes its
+/// count at construction, which is why the engine pool's batching
+/// (`bsp::service`) needs its own.
+///
+/// Correctness invariant (generation lockstep): every active participant
+/// arrives exactly once per generation, and `leave` is called exactly
+/// once per departing participant, strictly after its final arrival has
+/// been released.  Under that discipline a generation is released
+/// exactly when all currently-active participants have arrived.
+pub(super) struct SharedBarrier {
+    state: Mutex<BarrierState>,
+    cond: Condvar,
+}
+
+struct BarrierState {
+    participants: usize,
+    arrived: usize,
+    generation: u64,
+}
+
+impl SharedBarrier {
+    pub(super) fn new(participants: usize) -> SharedBarrier {
+        SharedBarrier {
+            state: Mutex::new(BarrierState {
+                participants,
+                arrived: 0,
+                generation: 0,
+            }),
+            cond: Condvar::new(),
+        }
+    }
+
+    /// Block until every active participant has arrived.  Returns `true`
+    /// on exactly one arriving thread per generation (the leader).
+    pub(super) fn wait(&self) -> bool {
+        let mut st = self.state.lock().unwrap();
+        st.arrived += 1;
+        if st.arrived >= st.participants {
+            st.arrived = 0;
+            st.generation = st.generation.wrapping_add(1);
+            self.cond.notify_all();
+            true
+        } else {
+            let gen = st.generation;
+            while st.generation == gen {
+                st = self.cond.wait(st).unwrap();
+            }
+            false
+        }
+    }
+
+    /// Permanently remove one participant (a processor whose job is
+    /// done).  If the departure leaves every remaining participant
+    /// already arrived, the pending generation is released on its
+    /// behalf.
+    pub(super) fn leave(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.participants -= 1;
+        if st.participants > 0 && st.arrived >= st.participants {
+            st.arrived = 0;
+            st.generation = st.generation.wrapping_add(1);
+            self.cond.notify_all();
+        }
+    }
+}
+
+/// The shared state of one BSP run: mailboxes, world barrier, phase
+/// interner, ledger.  `pub(super)` so the engine pool (`bsp::service`)
+/// can build one `World` per job — over a possibly *shared* barrier
+/// (batched jobs synchronize their supersteps together) and recycled
+/// slot buffers — and finalize its ledger through a shared reference.
+pub(super) struct World<K: Key> {
+    pub(super) p: usize,
     slots: SlotMatrix<K>,
-    barrier: Barrier,
+    /// The world barrier both `sync` barriers of a whole-machine
+    /// superstep go through.  `Arc` because a shared-superstep batch
+    /// hands the *same* barrier to several jobs' worlds; a processor
+    /// that finishes its job `leave`s so the rest keep going.
+    pub(super) barrier: Arc<SharedBarrier>,
     phases: PhaseInterner,
     ledger: Mutex<LedgerBuilder>,
     /// First SPMD violation observed (sync label mismatch).  Checked by
     /// every processor after barrier 2 so all threads fail together
     /// instead of stranding the others on a barrier (debug builds).
     spmd_violation: Mutex<Option<String>>,
+}
+
+impl<K: Key> World<K> {
+    pub(super) fn new(p: usize, barrier: Arc<SharedBarrier>) -> World<K> {
+        World::with_scratch(p, barrier, Vec::new())
+    }
+
+    /// As [`World::new`] but recycling `scratch` as slot-matrix storage
+    /// (buffers are cleared; their capacity survives across jobs).
+    pub(super) fn with_scratch(
+        p: usize,
+        barrier: Arc<SharedBarrier>,
+        scratch: Vec<Vec<Payload<K>>>,
+    ) -> World<K> {
+        World {
+            p,
+            slots: SlotMatrix::from_buffers(p, scratch),
+            barrier,
+            phases: PhaseInterner::new(),
+            ledger: Mutex::new(LedgerBuilder::default()),
+            spmd_violation: Mutex::new(None),
+        }
+    }
+
+    /// Materialize the run's [`Ledger`] (resolving interned phase names
+    /// through the shared [`finalize_ledger`]) once every processor has
+    /// finished.  Drains the builder; call exactly once per run.
+    pub(super) fn finalize(&self, wall_us: f64) -> Ledger {
+        let builder = std::mem::take(&mut *self.ledger.lock().unwrap());
+        let names = self.phases.take_names();
+        finalize_ledger(builder, names, wall_us)
+    }
+
+    /// Reclaim the slot-matrix buffers for the engine pool's scratch
+    /// store.
+    ///
+    /// SAFETY: every processor of the run must have finished, with a
+    /// happens-before edge to the caller (see
+    /// [`SlotMatrix::take_buffers`]).
+    pub(super) unsafe fn reclaim_buffers(&self) -> Vec<Vec<Payload<K>>> {
+        self.slots.take_buffers()
+    }
 }
 
 /// Superstep accounting under construction: like [`SuperstepRecord`] but
@@ -328,12 +477,16 @@ impl<'w, K: Key> BspCtx<'w, K> {
         }
 
         // Barrier 1: all sends for this superstep are staged.  A group
-        // sync waits only on its own members.
-        let barrier = match scope {
-            Some(s) => s.barrier,
-            None => &self.world.barrier,
-        };
-        barrier.wait();
+        // sync waits only on its own members; a whole-machine sync goes
+        // through the world's (possibly batch-shared) barrier.
+        match scope {
+            Some(s) => {
+                s.barrier.wait();
+            }
+            None => {
+                self.world.barrier.wait();
+            }
+        }
 
         // The group's superstep index, read after barrier 1: the leader
         // of the *previous* group sync incremented it before entering
@@ -417,10 +570,14 @@ impl<'w, K: Key> BspCtx<'w, K> {
         // counter, and the advance happens-before every member's read at
         // the next sync (they must pass that sync's barrier 1 first,
         // which the leader also enters only after the increment).
-        let wait = barrier.wait();
-        if let Some(s) = scope {
-            if wait.is_leader() {
-                s.step.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        match scope {
+            Some(s) => {
+                if s.barrier.wait().is_leader() {
+                    s.step.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                }
+            }
+            None => {
+                self.world.barrier.wait();
             }
         }
 
@@ -569,12 +726,21 @@ impl BspMachine {
         T: Send,
         F: Fn(&mut BspCtx) -> T + Sync,
     {
+        #[allow(deprecated)]
         self.run_keys::<i32, T, F>(program)
     }
 
     /// As [`BspMachine::run`] but with an explicit payload key domain
-    /// `K` — the entry point of the generic sorting stack
+    /// `K` — historically the entry point of the generic sorting stack
     /// (`machine.run_keys::<u64, _, _>(…)`).
+    ///
+    /// Deprecated: this spins up `p` threads for one sort and tears them
+    /// down again.  Route through the persistent engine pool instead
+    /// ([`crate::sorter::Sorter`], or `Engine::submit` directly), which
+    /// parks its worker team between jobs and recycles mailbox storage.
+    /// The wrapper stays — with bit-identical outputs and charged
+    /// ledger — for the paper-reproduction scripts and existing tests.
+    #[deprecated(note = "use Engine::submit")]
     pub fn run_keys<K, T, F>(&self, program: F) -> BspRun<T>
     where
         K: Key,
@@ -582,14 +748,7 @@ impl BspMachine {
         F: Fn(&mut BspCtx<K>) -> T + Sync,
     {
         let p = self.params.p;
-        let world = World {
-            p,
-            slots: SlotMatrix::new(p),
-            barrier: Barrier::new(p),
-            phases: PhaseInterner::new(),
-            ledger: Mutex::new(LedgerBuilder::default()),
-            spmd_violation: Mutex::new(None),
-        };
+        let world: World<K> = World::new(p, Arc::new(SharedBarrier::new(p)));
         let started = Instant::now();
         let mut outputs: Vec<Option<T>> = (0..p).map(|_| None).collect();
 
@@ -598,25 +757,8 @@ impl BspMachine {
             for pid in 0..p {
                 let world_ref = &world;
                 let program_ref = &program;
-                handles.push(scope.spawn(move || {
-                    let now = Instant::now();
-                    let mut ctx = BspCtx {
-                        pid,
-                        world: world_ref,
-                        inbox: Vec::new(),
-                        superstep: 0,
-                        ops: 0.0,
-                        sent_words: 0,
-                        phase_id: 0,
-                        phase_ops: vec![0.0],
-                        phase_wall: vec![0.0],
-                        phase_mark: now,
-                        sync_mark: now,
-                    };
-                    let out = program_ref(&mut ctx);
-                    ctx.finish();
-                    (pid, out)
-                }));
+                handles
+                    .push(scope.spawn(move || (pid, run_proc_body(world_ref, pid, program_ref))));
             }
             for h in handles {
                 let (pid, out) = h.join().expect("BSP processor thread panicked");
@@ -624,14 +766,42 @@ impl BspMachine {
             }
         });
 
-        let builder = world.ledger.into_inner().unwrap();
-        let names = world.phases.into_names();
-        let ledger = finalize_ledger(builder, names, started.elapsed().as_secs_f64() * 1e6);
+        let ledger = world.finalize(started.elapsed().as_secs_f64() * 1e6);
         BspRun {
             outputs: outputs.into_iter().map(|o| o.unwrap()).collect(),
             ledger,
         }
     }
+}
+
+/// The body every BSP processor runs: build the per-processor context,
+/// execute the SPMD `program`, flush end-of-run phase accounting,
+/// return the processor's output.  Shared by the one-shot
+/// [`BspMachine`] path and the persistent engine pool (`bsp::service`)
+/// so both charge identically — the pool adds job bookkeeping (barrier
+/// departure, completion counting) *around* this body, never inside it.
+pub(super) fn run_proc_body<K, T, F>(world: &World<K>, pid: usize, program: &F) -> T
+where
+    K: Key,
+    F: Fn(&mut BspCtx<K>) -> T,
+{
+    let now = Instant::now();
+    let mut ctx = BspCtx {
+        pid,
+        world,
+        inbox: Vec::new(),
+        superstep: 0,
+        ops: 0.0,
+        sent_words: 0,
+        phase_id: 0,
+        phase_ops: vec![0.0],
+        phase_wall: vec![0.0],
+        phase_mark: now,
+        sync_mark: now,
+    };
+    let out = program(&mut ctx);
+    ctx.finish();
+    out
 }
 
 /// Materialize a finished [`LedgerBuilder`] into the public [`Ledger`]:
@@ -914,6 +1084,7 @@ mod tests {
     }
 
     #[test]
+    #[allow(deprecated)]
     fn run_keys_routes_other_domains() {
         // The engine is generic over the key domain: a u64 ring exchange
         // behaves exactly like the i32 one.
@@ -924,6 +1095,30 @@ mod tests {
             ctx.take_inbox().pop().unwrap().1.into_keys()[0]
         });
         assert_eq!(run.outputs, vec![13, 10, 11, 12]);
+    }
+
+    #[test]
+    fn shared_barrier_shrinks_as_participants_leave() {
+        // Two "jobs" of two threads each share one barrier (the batched
+        // shared-superstep shape): the short job syncs once and leaves,
+        // the long one keeps syncing among its own survivors.  A buggy
+        // `leave` strands the long job on an unreachable generation,
+        // which the test harness surfaces as a hang.
+        let barrier = Arc::new(SharedBarrier::new(4));
+        let mut handles = Vec::new();
+        for t in 0..4usize {
+            let b = Arc::clone(&barrier);
+            handles.push(std::thread::spawn(move || {
+                let rounds = if t < 2 { 1 } else { 3 };
+                for _ in 0..rounds {
+                    b.wait();
+                }
+                b.leave();
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
     }
 
     #[test]

@@ -11,7 +11,11 @@
 //! * [`sim`] — the deterministic single-process simulator backend:
 //!   the same SPMD programs on virtual processors with virtual time,
 //!   bit-for-bit reproducible at any `p` (the conformance suite's
-//!   substrate at `p` up to 1024).
+//!   substrate at `p` up to 1024),
+//! * [`service`] — the persistent engine pool: parked worker crews, a
+//!   bounded job queue with admission control, FIFO dispatch with
+//!   shared-superstep batching of small jobs, and recycled slot-matrix
+//!   scratch (the substrate of the crate-level `Sorter` façade).
 //!
 //! The same program runs *really* (threads, genuine data movement) and is
 //! priced *predictively* (`max{L, x + g·h}` per superstep), which is how
@@ -22,9 +26,11 @@ pub mod group;
 pub mod ledger;
 pub mod msg;
 pub mod params;
+pub mod service;
 pub mod sim;
 
 pub use engine::{BspCtx, BspMachine, BspRun, BspScope};
+pub use service::{Engine, EngineConfig, EngineStats, JobHandle};
 pub use group::{
     Communicator, GroupCtx, GroupMap, GroupPartition, GroupedScope, Topology, MAX_TOPOLOGY_DEPTH,
 };

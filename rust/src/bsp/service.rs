@@ -1,0 +1,999 @@
+//! Sort-as-a-service: the persistent engine pool behind the unified
+//! [`crate::sorter::Sorter`] façade.
+//!
+//! The one-shot path (`BspMachine::run_keys`, now deprecated) spins up
+//! `p` OS threads per sort and tears them down again — fine for one
+//! experiment run, hostile to the ROADMAP's serving scenario.  An
+//! [`Engine`] instead keeps a persistent SPMD worker team: `crews` crews
+//! of `p` parked lanes each, woken per job, with the p×p slot-matrix
+//! buffers of finished jobs recycled into the next job of the same key
+//! domain (the scratch pool).
+//!
+//! Job lifecycle (ARCHITECTURE.md, "Engine pool & job lifecycle"):
+//!
+//! 1. **Queue** — `submit` pushes a type-erased job onto a bounded FIFO.
+//! 2. **Admission** — beyond `queue_depth` pending jobs a submission is
+//!    rejected with [`RuntimeError::QueueFull`] (the error carries the
+//!    depth); `submit_program_blocking` instead waits for room.
+//! 3. **Batch** — the dispatcher peels consecutive *small* jobs
+//!    (`n_hint ≤ batch_max_n`, at most `max_batch`) off the queue front
+//!    and gives each its own crew but one **shared** barrier sized to
+//!    the whole batch, so the tenants' supersteps run in lockstep and
+//!    one barrier release serves them all.
+//! 4. **Run** — every lane executes the same `run_proc_body` as the
+//!    one-shot path.  Charges are data-dependent, never
+//!    timing-dependent, so a job's charged ledger is identical pooled
+//!    or solo (only `wall_us` differs) — conformance-tested.
+//! 5. **Finalize** — the last lane to finish a job materializes its
+//!    [`Ledger`](super::ledger::Ledger) through the same
+//!    `finalize_ledger` path as the one-shot engine, recycles the slot
+//!    buffers, and fulfills the [`JobHandle`].
+//!
+//! There is **no scheduler thread**: dispatch runs under the scheduler
+//! mutex from whoever has work to give away — a submitter, or the lane
+//! that just completed a job and freed its crew.
+//!
+//! Known limitation: a panic inside a *flat* job is recovered (the dead
+//! processor leaves the run barrier, peers finish or die, the handle
+//! reports [`RuntimeError::JobPanicked`]).  A panic inside a job that
+//! synchronizes over `Communicator` *group* barriers (`std::sync`
+//! barriers with a fixed count) can strand its crew mid-group-sync; the
+//! pool does not try to recover those, matching the one-shot engine,
+//! which aborts the process in that case.
+
+use std::any::{Any, TypeId};
+use std::collections::{HashMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::key::Key;
+use crate::runtime::RuntimeError;
+
+use super::engine::{run_proc_body, BspCtx, BspRun, SharedBarrier, World};
+use super::msg::Payload;
+use super::params::BspParams;
+
+/// Tuning knobs of one [`Engine`].
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    /// BSP machine parameters; `params.p` is the lane count per crew,
+    /// and every SPMD job submitted to this engine runs on exactly `p`
+    /// processors.
+    pub params: BspParams,
+    /// Worker crews — jobs that can run concurrently.
+    pub crews: usize,
+    /// Admission bound: maximum *queued* (not yet dispatched) jobs
+    /// before `submit` rejects with [`RuntimeError::QueueFull`].
+    pub queue_depth: usize,
+    /// Jobs with `n_hint` at most this are "small" and eligible for
+    /// shared-superstep batching.
+    pub batch_max_n: usize,
+    /// Maximum small jobs dispatched as one shared-barrier batch (also
+    /// bounded by the free crews at dispatch time).
+    pub max_batch: usize,
+}
+
+impl EngineConfig {
+    /// Defaults sized for the serving scenario: two crews, queue depth
+    /// 64, batches of up to 4 jobs of n ≤ 32768.
+    pub fn new(params: BspParams) -> EngineConfig {
+        EngineConfig {
+            params,
+            crews: 2,
+            queue_depth: 64,
+            batch_max_n: 32_768,
+            max_batch: 4,
+        }
+    }
+
+    pub fn with_crews(mut self, crews: usize) -> EngineConfig {
+        self.crews = crews.max(1);
+        self
+    }
+
+    pub fn with_queue_depth(mut self, depth: usize) -> EngineConfig {
+        self.queue_depth = depth.max(1);
+        self
+    }
+
+    pub fn with_batching(mut self, batch_max_n: usize, max_batch: usize) -> EngineConfig {
+        self.batch_max_n = batch_max_n;
+        self.max_batch = max_batch.max(1);
+        self
+    }
+}
+
+/// Cumulative scheduling counters — observability for the service layer
+/// and the throughput bench.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EngineStats {
+    /// Jobs whose handle has been fulfilled (success or panic).
+    pub completed: usize,
+    /// Dispatches that grouped at least two jobs over one shared
+    /// barrier.
+    pub shared_batches: usize,
+    /// Jobs that ran as part of a shared batch.
+    pub batched_jobs: usize,
+    /// Jobs whose slot matrix was built from recycled buffers.
+    pub scratch_reuses: usize,
+}
+
+/// One queued unit of work, type-erased over key domain and output type
+/// so the scheduler holds mixed jobs in one FIFO.
+trait TeamJob: Send + Sync {
+    /// Processors this job occupies (the engine's `p` for SPMD jobs,
+    /// 1 for closure jobs).
+    fn procs(&self) -> usize;
+    /// Problem-size hint driving the batching policy.
+    fn n_hint(&self) -> usize;
+    /// Attach the (possibly batch-shared) run barrier and build the
+    /// job's world from pool scratch.  Called once, before any lane is
+    /// woken.
+    fn prepare(&self, barrier: Arc<SharedBarrier>, scratch: &ScratchPool);
+    /// Run processor `proc`; returns `true` iff this call completed the
+    /// job (last processor to finish).
+    fn run_proc(&self, proc: usize) -> bool;
+    /// Finalize after the last processor: ledger, outputs, scratch
+    /// return, handle fulfillment.  Called exactly once, by the lane
+    /// whose `run_proc` returned `true`.
+    fn finish(&self, scratch: &ScratchPool);
+    /// Abort a job that will never run (engine shut down while it was
+    /// queued): fail its handle.
+    fn fail(&self, err: RuntimeError);
+}
+
+/// A shelf of recycled slot-buffer sets for one `(key domain, p)` pair.
+type Shelf = Vec<Box<dyn Any + Send>>;
+
+/// Recycled slot-matrix buffers, keyed by key domain and `p`.  The
+/// `TypeId` key is sound because `Key: 'static`; the value stored under
+/// `(TypeId::of::<K>(), p)` is always a `Vec<Vec<Payload<K>>>`.
+struct ScratchPool {
+    shelves: Mutex<HashMap<(TypeId, usize), Shelf>>,
+    /// Max recycled buffer sets kept per shelf (≈ crews: more can never
+    /// be in flight at once).
+    cap: usize,
+    reuses: AtomicUsize,
+}
+
+impl ScratchPool {
+    fn new(cap: usize) -> ScratchPool {
+        ScratchPool {
+            shelves: Mutex::new(HashMap::new()),
+            cap,
+            reuses: AtomicUsize::new(0),
+        }
+    }
+
+    fn take<K: Key>(&self, p: usize) -> Vec<Vec<Payload<K>>> {
+        let recycled = self
+            .shelves
+            .lock()
+            .unwrap()
+            .get_mut(&(TypeId::of::<K>(), p))
+            .and_then(|shelf| shelf.pop());
+        match recycled {
+            Some(boxed) => {
+                self.reuses.fetch_add(1, Ordering::Relaxed);
+                *boxed
+                    .downcast::<Vec<Vec<Payload<K>>>>()
+                    .expect("scratch shelf holds a foreign type")
+            }
+            None => Vec::new(),
+        }
+    }
+
+    fn put<K: Key>(&self, p: usize, bufs: Vec<Vec<Payload<K>>>) {
+        let mut shelves = self.shelves.lock().unwrap();
+        let shelf = shelves.entry((TypeId::of::<K>(), p)).or_default();
+        if shelf.len() < self.cap {
+            shelf.push(Box::new(bufs));
+        }
+    }
+}
+
+/// Best-effort extraction of a panic payload's message.
+fn panic_message(payload: &(dyn Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&'static str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Completion slot shared between a running job and its [`JobHandle`].
+struct HandleShared<R> {
+    slot: Mutex<Option<Result<R, RuntimeError>>>,
+    done: Condvar,
+}
+
+impl<R> HandleShared<R> {
+    fn new() -> Arc<HandleShared<R>> {
+        Arc::new(HandleShared {
+            slot: Mutex::new(None),
+            done: Condvar::new(),
+        })
+    }
+
+    fn fulfill(&self, result: Result<R, RuntimeError>) {
+        let mut slot = self.slot.lock().unwrap();
+        debug_assert!(slot.is_none(), "job fulfilled twice");
+        *slot = Some(result);
+        self.done.notify_all();
+    }
+
+    fn join(&self) -> Result<R, RuntimeError> {
+        let mut slot = self.slot.lock().unwrap();
+        loop {
+            if let Some(result) = slot.take() {
+                return result;
+            }
+            slot = self.done.wait(slot).unwrap();
+        }
+    }
+
+    fn is_done(&self) -> bool {
+        self.slot.lock().unwrap().is_some()
+    }
+}
+
+/// Handle to a submitted job: `join` for the [`BspRun`] — outputs in
+/// pid order plus the job's own charged [`Ledger`](super::ledger::Ledger),
+/// exactly as the one-shot path returns them.
+pub struct JobHandle<T> {
+    shared: Arc<HandleShared<BspRun<T>>>,
+}
+
+impl<T> JobHandle<T> {
+    /// Block until the job completes; returns its outputs and per-job
+    /// ledger, or the structured [`RuntimeError`] that ended it.
+    pub fn join(self) -> Result<BspRun<T>, RuntimeError> {
+        self.shared.join()
+    }
+
+    /// True once the job has completed (either way): `join` will not
+    /// block.
+    pub fn is_done(&self) -> bool {
+        self.shared.is_done()
+    }
+}
+
+impl<T> std::fmt::Debug for JobHandle<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("JobHandle").field("done", &self.is_done()).finish()
+    }
+}
+
+/// The concrete job behind the erased [`TeamJob`]: an SPMD program over
+/// key domain `K` producing one `T` per processor.
+struct SpmdJob<K: Key, T, F> {
+    p: usize,
+    n_hint: usize,
+    program: F,
+    /// Built at `prepare`; read by every lane.  `OnceLock` provides the
+    /// happens-before edge from the preparing thread to the lanes.
+    world: OnceLock<World<K>>,
+    started: OnceLock<Instant>,
+    outputs: Mutex<Vec<Option<T>>>,
+    /// Panic payload of the first processor that died.
+    poison: Mutex<Option<String>>,
+    /// Processors still running; the lane that takes it to zero
+    /// finalizes.  `AcqRel` so the finalizer observes every lane's
+    /// writes (outputs, slot buffers).
+    remaining: AtomicUsize,
+    handle: Arc<HandleShared<BspRun<T>>>,
+}
+
+impl<K, T, F> TeamJob for SpmdJob<K, T, F>
+where
+    K: Key,
+    T: Send + 'static,
+    F: Fn(&mut BspCtx<K>) -> T + Send + Sync + 'static,
+{
+    fn procs(&self) -> usize {
+        self.p
+    }
+
+    fn n_hint(&self) -> usize {
+        self.n_hint
+    }
+
+    fn prepare(&self, barrier: Arc<SharedBarrier>, scratch: &ScratchPool) {
+        let world = World::with_scratch(self.p, barrier, scratch.take::<K>(self.p));
+        if self.world.set(world).is_err() {
+            panic!("job prepared twice");
+        }
+        let _ = self.started.set(Instant::now());
+    }
+
+    fn run_proc(&self, proc: usize) -> bool {
+        let world = self.world.get().expect("job run before prepare");
+        let result = catch_unwind(AssertUnwindSafe(|| run_proc_body(world, proc, &self.program)));
+        // This processor will never arrive at the run barrier again —
+        // finished or dead, let batch peers stop waiting for it.
+        world.barrier.leave();
+        match result {
+            Ok(out) => self.outputs.lock().unwrap()[proc] = Some(out),
+            Err(payload) => {
+                let mut poison = self.poison.lock().unwrap();
+                if poison.is_none() {
+                    *poison = Some(panic_message(payload.as_ref()));
+                }
+            }
+        }
+        self.remaining.fetch_sub(1, Ordering::AcqRel) == 1
+    }
+
+    fn finish(&self, scratch: &ScratchPool) {
+        let world = self.world.get().expect("job finished before prepare");
+        let poison = self.poison.lock().unwrap().take();
+        let result = match poison {
+            Some(msg) => Err(RuntimeError::JobPanicked(msg)),
+            None => {
+                let wall_us = self
+                    .started
+                    .get()
+                    .map(|s| s.elapsed().as_secs_f64() * 1e6)
+                    .unwrap_or(0.0);
+                let ledger = world.finalize(wall_us);
+                let outputs = self
+                    .outputs
+                    .lock()
+                    .unwrap()
+                    .iter_mut()
+                    .map(|slot| slot.take().expect("processor finished without output"))
+                    .collect();
+                Ok(BspRun { outputs, ledger })
+            }
+        };
+        // SAFETY: `remaining` hit zero with AcqRel ordering — every
+        // processor of this job is done with the slot matrix.
+        scratch.put(self.p, unsafe { world.reclaim_buffers() });
+        self.handle.fulfill(result);
+    }
+
+    fn fail(&self, err: RuntimeError) {
+        self.handle.fulfill(Err(err));
+    }
+}
+
+/// A one-lane closure job: how the `Sorter` runs simulator-backend
+/// sorts (whose virtual `p` can far exceed any crew's lane count)
+/// through the same queue / admission / handle machinery.  Never
+/// batched (`n_hint = usize::MAX`), so its unused run barrier involves
+/// nobody else.
+struct ClosureJob<T, G> {
+    task: Mutex<Option<G>>,
+    result: Mutex<Option<Result<BspRun<T>, RuntimeError>>>,
+    handle: Arc<HandleShared<BspRun<T>>>,
+}
+
+impl<T, G> TeamJob for ClosureJob<T, G>
+where
+    T: Send + 'static,
+    G: FnOnce() -> BspRun<T> + Send + 'static,
+{
+    fn procs(&self) -> usize {
+        1
+    }
+
+    fn n_hint(&self) -> usize {
+        usize::MAX
+    }
+
+    fn prepare(&self, _barrier: Arc<SharedBarrier>, _scratch: &ScratchPool) {}
+
+    fn run_proc(&self, proc: usize) -> bool {
+        debug_assert_eq!(proc, 0, "closure jobs run on one lane");
+        let task = self.task.lock().unwrap().take().expect("closure job run twice");
+        let result = catch_unwind(AssertUnwindSafe(task))
+            .map_err(|payload| RuntimeError::JobPanicked(panic_message(payload.as_ref())));
+        *self.result.lock().unwrap() = Some(result);
+        true
+    }
+
+    fn finish(&self, _scratch: &ScratchPool) {
+        let result = self
+            .result
+            .lock()
+            .unwrap()
+            .take()
+            .expect("closure job finished before running");
+        self.handle.fulfill(result);
+    }
+
+    fn fail(&self, err: RuntimeError) {
+        self.handle.fulfill(Err(err));
+    }
+}
+
+struct LaneOrder {
+    job: Arc<dyn TeamJob>,
+    proc: usize,
+}
+
+/// A parked worker lane: a mailbox holding at most one order, and the
+/// condvar its thread sleeps on.
+struct Lane {
+    order: Mutex<Option<LaneOrder>>,
+    ready: Condvar,
+}
+
+struct SchedState {
+    queue: VecDeque<Arc<dyn TeamJob>>,
+    /// Crews with no job assigned (indices into `0..crews`).
+    free_crews: Vec<usize>,
+    shutdown: bool,
+    /// Test hook: suspend dispatch so jobs pile up in the queue.
+    hold: bool,
+    completed: usize,
+    shared_batches: usize,
+    batched_jobs: usize,
+}
+
+struct EngineInner {
+    cfg: EngineConfig,
+    sched: Mutex<SchedState>,
+    /// Signaled when the queue loses an element — room for blocked
+    /// submitters.
+    space: Condvar,
+    lanes: Vec<Lane>,
+    scratch: ScratchPool,
+    /// Read by idle lanes to exit; published before the per-lane
+    /// mutex-held wakeup in `shutdown`.
+    stop: AtomicBool,
+}
+
+impl EngineInner {
+    fn enqueue(&self, job: Arc<dyn TeamJob>, block: bool) -> Result<(), RuntimeError> {
+        let mut sched = self.sched.lock().unwrap();
+        loop {
+            if sched.shutdown {
+                return Err(RuntimeError::EngineShutdown);
+            }
+            if sched.queue.len() < self.cfg.queue_depth {
+                break;
+            }
+            if !block {
+                return Err(RuntimeError::QueueFull {
+                    depth: self.cfg.queue_depth,
+                });
+            }
+            sched = self.space.wait(sched).unwrap();
+        }
+        sched.queue.push_back(job);
+        self.dispatch_locked(&mut sched);
+        Ok(())
+    }
+
+    /// Hand queued jobs to free crews: FIFO, with consecutive small
+    /// jobs at the queue front grouped into one shared-barrier batch
+    /// (one crew each).  Runs under the scheduler lock, invoked by a
+    /// submitter or by the lane that just freed a crew — there is no
+    /// scheduler thread to context-switch through.
+    fn dispatch_locked(&self, sched: &mut SchedState) {
+        if sched.shutdown {
+            while let Some(job) = sched.queue.pop_front() {
+                job.fail(RuntimeError::EngineShutdown);
+            }
+            self.space.notify_all();
+            return;
+        }
+        if sched.hold {
+            return;
+        }
+        let p = self.cfg.params.p;
+        while !sched.queue.is_empty() && !sched.free_crews.is_empty() {
+            let mut take = 1;
+            if sched.queue[0].n_hint() <= self.cfg.batch_max_n {
+                let cap = self.cfg.max_batch.min(sched.free_crews.len()).min(sched.queue.len());
+                while take < cap && sched.queue[take].n_hint() <= self.cfg.batch_max_n {
+                    take += 1;
+                }
+            }
+            if take > 1 {
+                sched.shared_batches += 1;
+                sched.batched_jobs += take;
+            }
+            let jobs: Vec<Arc<dyn TeamJob>> = sched.queue.drain(..take).collect();
+            let participants: usize = jobs.iter().map(|j| j.procs()).sum();
+            let barrier = Arc::new(SharedBarrier::new(participants));
+            for job in jobs {
+                job.prepare(Arc::clone(&barrier), &self.scratch);
+                let crew = sched.free_crews.pop().expect("batch sized to free crews");
+                let procs = job.procs();
+                assert!(procs <= p, "job wider than a crew");
+                for proc in 0..procs {
+                    let lane = &self.lanes[crew * p + proc];
+                    *lane.order.lock().unwrap() = Some(LaneOrder {
+                        job: Arc::clone(&job),
+                        proc,
+                    });
+                    lane.ready.notify_one();
+                }
+            }
+        }
+        // The queue shrank — wake any submitter blocked on admission.
+        self.space.notify_all();
+    }
+}
+
+fn lane_main(inner: Arc<EngineInner>, lane_idx: usize) {
+    let p = inner.cfg.params.p;
+    loop {
+        let order = {
+            let lane = &inner.lanes[lane_idx];
+            let mut slot = lane.order.lock().unwrap();
+            loop {
+                if let Some(order) = slot.take() {
+                    break order;
+                }
+                if inner.stop.load(Ordering::Acquire) {
+                    return;
+                }
+                slot = lane.ready.wait(slot).unwrap();
+            }
+        };
+        let last = order.job.run_proc(order.proc);
+        if last {
+            order.job.finish(&inner.scratch);
+            let mut sched = inner.sched.lock().unwrap();
+            sched.completed += 1;
+            sched.free_crews.push(lane_idx / p);
+            inner.dispatch_locked(&mut sched);
+        }
+    }
+}
+
+/// A persistent sort engine: `crews × p` parked worker lanes fed by a
+/// bounded FIFO job queue.  Submissions return a [`JobHandle`]
+/// immediately; `join` blocks for the result.  The `Sorter` façade
+/// (`crate::sorter`) keeps one global engine per machine width and
+/// routes [`crate::sorter::SortJob`]s here — `Engine::submit` itself is
+/// defined there, next to the job builder.
+pub struct Engine {
+    inner: Arc<EngineInner>,
+    /// Lane threads, joined at `shutdown`.
+    threads: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl Engine {
+    pub fn new(cfg: EngineConfig) -> Engine {
+        assert!(cfg.params.p >= 1, "engine needs at least one processor per crew");
+        let mut cfg = cfg;
+        cfg.crews = cfg.crews.max(1);
+        cfg.max_batch = cfg.max_batch.max(1);
+        cfg.queue_depth = cfg.queue_depth.max(1);
+        let p = cfg.params.p;
+        let crews = cfg.crews;
+        let inner = Arc::new(EngineInner {
+            sched: Mutex::new(SchedState {
+                queue: VecDeque::new(),
+                free_crews: (0..crews).rev().collect(),
+                shutdown: false,
+                hold: false,
+                completed: 0,
+                shared_batches: 0,
+                batched_jobs: 0,
+            }),
+            space: Condvar::new(),
+            lanes: (0..crews * p)
+                .map(|_| Lane {
+                    order: Mutex::new(None),
+                    ready: Condvar::new(),
+                })
+                .collect(),
+            scratch: ScratchPool::new(crews.max(2)),
+            stop: AtomicBool::new(false),
+            cfg,
+        });
+        let mut threads = Vec::with_capacity(crews * p);
+        for idx in 0..crews * p {
+            let inner = Arc::clone(&inner);
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("bsp-lane-{}-{}", idx / p, idx % p))
+                    .spawn(move || lane_main(inner, idx))
+                    .expect("spawn engine lane"),
+            );
+        }
+        Engine {
+            inner,
+            threads: Mutex::new(threads),
+        }
+    }
+
+    /// The engine's machine parameters (`params.p` = processors per
+    /// job).
+    pub fn params(&self) -> &BspParams {
+        &self.inner.cfg.params
+    }
+
+    /// Worker crews (jobs that can run concurrently).
+    pub fn crews(&self) -> usize {
+        self.inner.cfg.crews
+    }
+
+    /// Jobs currently queued (admitted, not yet dispatched).
+    pub fn queued(&self) -> usize {
+        self.inner.sched.lock().unwrap().queue.len()
+    }
+
+    /// Cumulative scheduling counters.
+    pub fn stats(&self) -> EngineStats {
+        let sched = self.inner.sched.lock().unwrap();
+        EngineStats {
+            completed: sched.completed,
+            shared_batches: sched.shared_batches,
+            batched_jobs: sched.batched_jobs,
+            scratch_reuses: self.inner.scratch.reuses.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Submit an SPMD program over key domain `K`.  Returns immediately
+    /// with a [`JobHandle`]; rejects with [`RuntimeError::QueueFull`]
+    /// when the queue is at its admission bound.  `n_hint` is the job's
+    /// total problem size — the small-job batching policy keys on it.
+    pub fn submit_program<K, T, F>(
+        &self,
+        n_hint: usize,
+        program: F,
+    ) -> Result<JobHandle<T>, RuntimeError>
+    where
+        K: Key,
+        T: Send + 'static,
+        F: Fn(&mut BspCtx<K>) -> T + Send + Sync + 'static,
+    {
+        self.enqueue_spmd(n_hint, program, false)
+    }
+
+    /// As [`Engine::submit_program`] but waits for queue room instead
+    /// of rejecting (still fails on shutdown).
+    pub fn submit_program_blocking<K, T, F>(
+        &self,
+        n_hint: usize,
+        program: F,
+    ) -> Result<JobHandle<T>, RuntimeError>
+    where
+        K: Key,
+        T: Send + 'static,
+        F: Fn(&mut BspCtx<K>) -> T + Send + Sync + 'static,
+    {
+        self.enqueue_spmd(n_hint, program, true)
+    }
+
+    fn enqueue_spmd<K, T, F>(
+        &self,
+        n_hint: usize,
+        program: F,
+        block: bool,
+    ) -> Result<JobHandle<T>, RuntimeError>
+    where
+        K: Key,
+        T: Send + 'static,
+        F: Fn(&mut BspCtx<K>) -> T + Send + Sync + 'static,
+    {
+        let p = self.inner.cfg.params.p;
+        let handle = HandleShared::new();
+        let job = Arc::new(SpmdJob {
+            p,
+            n_hint,
+            program,
+            world: OnceLock::new(),
+            started: OnceLock::new(),
+            outputs: Mutex::new((0..p).map(|_| None).collect()),
+            poison: Mutex::new(None),
+            remaining: AtomicUsize::new(p),
+            handle: Arc::clone(&handle),
+        });
+        self.inner.enqueue(job, block)?;
+        Ok(JobHandle { shared: handle })
+    }
+
+    /// Run a one-lane closure through the same queue / admission /
+    /// handle machinery (the simulator-backend path of the `Sorter`).
+    /// The closure must produce a finished [`BspRun`].
+    pub fn submit_task<T, G>(&self, task: G, block: bool) -> Result<JobHandle<T>, RuntimeError>
+    where
+        T: Send + 'static,
+        G: FnOnce() -> BspRun<T> + Send + 'static,
+    {
+        let handle = HandleShared::new();
+        let job = Arc::new(ClosureJob {
+            task: Mutex::new(Some(task)),
+            result: Mutex::new(None),
+            handle: Arc::clone(&handle),
+        });
+        self.inner.enqueue(job, block)?;
+        Ok(JobHandle { shared: handle })
+    }
+
+    /// Drain and stop: running jobs complete, queued jobs fail with
+    /// [`RuntimeError::EngineShutdown`], lane threads park out and are
+    /// joined.  Subsequent submissions are rejected.  Idempotent.
+    pub fn shutdown(&self) {
+        {
+            let mut sched = self.inner.sched.lock().unwrap();
+            sched.shutdown = true;
+            while let Some(job) = sched.queue.pop_front() {
+                job.fail(RuntimeError::EngineShutdown);
+            }
+        }
+        // Unblock admission waiters (they observe `shutdown`) …
+        self.inner.space.notify_all();
+        // … and parked lanes.  `stop` is published before each
+        // mutex-held wakeup, so a lane either sees it under its mailbox
+        // lock or is already waiting and receives the notify.
+        self.inner.stop.store(true, Ordering::Release);
+        for lane in &self.inner.lanes {
+            let _guard = lane.order.lock().unwrap();
+            lane.ready.notify_all();
+        }
+        let threads = std::mem::take(&mut *self.threads.lock().unwrap());
+        for t in threads {
+            let _ = t.join();
+        }
+    }
+
+    /// Test hook: suspend dispatch so submissions pile up in the queue.
+    #[cfg(test)]
+    fn hold(&self) {
+        self.inner.sched.lock().unwrap().hold = true;
+    }
+
+    /// Test hook: resume dispatch after [`Engine::hold`].
+    #[cfg(test)]
+    fn release(&self) {
+        let mut sched = self.inner.sched.lock().unwrap();
+        sched.hold = false;
+        self.inner.dispatch_locked(&mut sched);
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bsp::params::cray_t3d;
+    use crate::bsp::BspMachine;
+
+    fn engine(p: usize, crews: usize) -> Engine {
+        Engine::new(EngineConfig::new(cray_t3d(p)).with_crews(crews))
+    }
+
+    #[test]
+    fn submit_runs_an_spmd_program() {
+        let eng = engine(4, 1);
+        let handle = eng
+            .submit_program::<i32, _, _>(1 << 20, |ctx| {
+                ctx.charge(10.0);
+                ctx.sync("only");
+                ctx.pid() * 2
+            })
+            .unwrap();
+        let run = handle.join().unwrap();
+        assert_eq!(run.outputs, vec![0, 2, 4, 6]);
+        assert_eq!(run.ledger.supersteps.len(), 1);
+        assert_eq!(run.ledger.supersteps[0].reporters, 4);
+        eng.shutdown();
+    }
+
+    #[test]
+    fn jobs_run_fifo_on_a_persistent_team() {
+        let eng = engine(2, 1);
+        let handles: Vec<_> = (0..8)
+            .map(|i| {
+                eng.submit_program::<i32, _, _>(usize::MAX, move |ctx| ctx.pid() + 10 * i)
+                    .unwrap()
+            })
+            .collect();
+        for (i, h) in handles.into_iter().enumerate() {
+            let run = h.join().unwrap();
+            assert_eq!(run.outputs, vec![10 * i, 10 * i + 1]);
+        }
+        assert_eq!(eng.stats().completed, 8);
+        eng.shutdown();
+    }
+
+    #[test]
+    fn messages_flow_between_lanes_of_a_crew() {
+        let eng = engine(4, 2);
+        let run = eng
+            .submit_program::<u64, _, _>(usize::MAX, |ctx| {
+                let p = ctx.nprocs();
+                let dst = (ctx.pid() + 1) % p;
+                ctx.send(dst, Payload::Keys(vec![ctx.pid() as u64 + 7]));
+                ctx.sync("ring");
+                ctx.take_inbox().pop().unwrap().1.into_keys()[0]
+            })
+            .unwrap()
+            .join()
+            .unwrap();
+        assert_eq!(run.outputs, vec![10, 7, 8, 9]);
+        eng.shutdown();
+    }
+
+    #[test]
+    fn held_small_jobs_dispatch_as_one_shared_batch() {
+        // Three small jobs with *different* superstep counts share one
+        // barrier (exercises SharedBarrier::leave): held back so they
+        // queue up, then released onto three free crews at once.
+        let eng =
+            Engine::new(EngineConfig::new(cray_t3d(2)).with_crews(3).with_batching(1 << 10, 3));
+        eng.hold();
+        let handles: Vec<_> = (0..3)
+            .map(|i| {
+                eng.submit_program::<i32, _, _>(64, move |ctx| {
+                    for _ in 0..=i {
+                        ctx.sync("step");
+                    }
+                    ctx.pid()
+                })
+                .unwrap()
+            })
+            .collect();
+        eng.release();
+        for (i, h) in handles.into_iter().enumerate() {
+            let run = h.join().unwrap();
+            assert_eq!(run.outputs, vec![0, 1]);
+            assert_eq!(run.ledger.supersteps.len(), i + 1, "per-job ledgers stay separate");
+        }
+        let stats = eng.stats();
+        assert_eq!(stats.shared_batches, 1);
+        assert_eq!(stats.batched_jobs, 3);
+        eng.shutdown();
+    }
+
+    #[test]
+    fn large_jobs_are_never_batched() {
+        let eng =
+            Engine::new(EngineConfig::new(cray_t3d(2)).with_crews(2).with_batching(1 << 10, 4));
+        eng.hold();
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                eng.submit_program::<i32, _, _>(1 << 20, |ctx| {
+                    ctx.sync("solo");
+                    ctx.pid()
+                })
+                .unwrap()
+            })
+            .collect();
+        eng.release();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let stats = eng.stats();
+        assert_eq!(stats.shared_batches, 0);
+        assert_eq!(stats.batched_jobs, 0);
+        eng.shutdown();
+    }
+
+    #[test]
+    fn admission_rejects_beyond_queue_depth_with_the_depth_in_the_error() {
+        let eng = Engine::new(EngineConfig::new(cray_t3d(2)).with_crews(1).with_queue_depth(2));
+        eng.hold();
+        for _ in 0..2 {
+            eng.submit_program::<i32, _, _>(usize::MAX, |ctx| ctx.pid()).unwrap();
+        }
+        let err = eng
+            .submit_program::<i32, _, _>(usize::MAX, |ctx| ctx.pid())
+            .unwrap_err();
+        match &err {
+            RuntimeError::QueueFull { depth } => assert_eq!(*depth, 2),
+            other => panic!("expected QueueFull, got {other:?}"),
+        }
+        assert!(err.to_string().contains('2'), "{err}");
+        eng.release();
+        eng.shutdown();
+    }
+
+    #[test]
+    fn shutdown_fails_queued_jobs_and_rejects_new_ones() {
+        let eng = Engine::new(EngineConfig::new(cray_t3d(2)).with_crews(1).with_queue_depth(8));
+        eng.hold();
+        let h = eng.submit_program::<i32, _, _>(usize::MAX, |ctx| ctx.pid()).unwrap();
+        eng.shutdown();
+        assert!(matches!(h.join(), Err(RuntimeError::EngineShutdown)));
+        let err = eng
+            .submit_program::<i32, _, _>(usize::MAX, |ctx| ctx.pid())
+            .unwrap_err();
+        assert!(matches!(err, RuntimeError::EngineShutdown));
+    }
+
+    #[test]
+    fn job_panic_is_reported_and_the_team_survives() {
+        let eng = engine(2, 1);
+        let h = eng
+            .submit_program::<i32, _, _>(usize::MAX, |ctx| -> usize {
+                panic!("kaboom {}", ctx.pid());
+            })
+            .unwrap();
+        match h.join() {
+            Err(RuntimeError::JobPanicked(msg)) => assert!(msg.contains("kaboom"), "{msg}"),
+            other => panic!("expected JobPanicked, got {other:?}"),
+        }
+        let run = eng
+            .submit_program::<i32, _, _>(usize::MAX, |ctx| ctx.pid())
+            .unwrap()
+            .join()
+            .unwrap();
+        assert_eq!(run.outputs, vec![0, 1]);
+        eng.shutdown();
+    }
+
+    #[test]
+    fn blocking_submit_waits_for_room() {
+        let eng = Arc::new(
+            Engine::new(EngineConfig::new(cray_t3d(2)).with_crews(1).with_queue_depth(1)),
+        );
+        eng.hold();
+        eng.submit_program::<i32, _, _>(usize::MAX, |ctx| ctx.pid()).unwrap();
+        let eng2 = Arc::clone(&eng);
+        let submitter = std::thread::spawn(move || {
+            eng2.submit_program_blocking::<i32, _, _>(usize::MAX, |ctx| ctx.pid())
+                .unwrap()
+                .join()
+                .unwrap()
+        });
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        eng.release();
+        let run = submitter.join().unwrap();
+        assert_eq!(run.outputs, vec![0, 1]);
+        eng.shutdown();
+    }
+
+    #[test]
+    fn slot_buffers_are_recycled_across_jobs() {
+        let eng = engine(2, 1);
+        for _ in 0..3 {
+            eng.submit_program::<i32, _, _>(usize::MAX, |ctx| {
+                ctx.send((ctx.pid() + 1) % 2, Payload::Keys(vec![1, 2, 3]));
+                ctx.sync("x");
+                ctx.take_inbox().len()
+            })
+            .unwrap()
+            .join()
+            .unwrap();
+        }
+        assert!(
+            eng.stats().scratch_reuses >= 2,
+            "later jobs should reuse the first job's slot buffers"
+        );
+        eng.shutdown();
+    }
+
+    #[test]
+    fn closure_jobs_share_the_queue() {
+        let eng = engine(2, 1);
+        let h = eng
+            .submit_task(|| BspMachine::new(cray_t3d(2)).run(|ctx| ctx.pid()), true)
+            .unwrap();
+        let run = h.join().unwrap();
+        assert_eq!(run.outputs, vec![0, 1]);
+        eng.shutdown();
+    }
+
+    #[test]
+    fn handles_report_completion() {
+        let eng = engine(2, 1);
+        let h = eng.submit_program::<i32, _, _>(usize::MAX, |ctx| ctx.pid()).unwrap();
+        let run = loop {
+            if h.is_done() {
+                break h.join().unwrap();
+            }
+            std::thread::yield_now();
+        };
+        assert_eq!(run.outputs.len(), 2);
+        eng.shutdown();
+    }
+}

@@ -4,10 +4,8 @@
 //! statistics.
 
 use crate::baselines;
-use crate::bsp::engine::BspMachine;
-use crate::bsp::group::{Communicator, GroupPartition, GroupedScope};
+use crate::bsp::group::{GroupPartition, GroupedScope};
 use crate::bsp::ledger::{ratio_or_nan, Ledger};
-use crate::bsp::sim::{SimCommunicator, SimMachine};
 use crate::bsp::{Backend, Topology};
 use crate::gen::{generate_typed_for_proc, GenKey};
 use crate::key::{F64, RadixKey, Record};
@@ -42,7 +40,7 @@ pub struct SingleRun<K> {
 /// *same* program text runs on the threaded engine (`BspCtx`) and the
 /// deterministic simulator (`SimCtx`), each paired with its own
 /// communicator type through [`GroupedScope`].
-fn run_cell<K, S>(ctx: &mut S, comms: &[S::Comm], spec: &RunSpec) -> ProcResult<K>
+pub(crate) fn run_cell<K, S>(ctx: &mut S, comms: &[S::Comm], spec: &RunSpec) -> ProcResult<K>
 where
     K: StudyKey,
     S: GroupedScope<K>,
@@ -107,7 +105,7 @@ pub fn resolved_deep_topology(spec: &RunSpec) -> Topology {
 /// communicator — `default_groups(p)` groups, or the first factor of a
 /// pinned topology; the depth-k variants get the full refinement chain
 /// of their resolved topology.
-fn build_comms<C: GroupPartition>(spec: &RunSpec) -> Vec<C> {
+pub(crate) fn build_comms<C: GroupPartition>(spec: &RunSpec) -> Vec<C> {
     match spec.algo {
         AlgoVariant::Det2 | AlgoVariant::Ran2 => {
             let k = match spec.topology {
@@ -131,28 +129,19 @@ fn build_comms<C: GroupPartition>(spec: &RunSpec) -> Vec<C> {
 /// Panics on an unsorted output or a size mismatch: that is a
 /// harness-integrity guard, not a user error path.
 pub fn execute_typed<K: StudyKey>(spec: &RunSpec) -> SingleRun<K> {
-    let params = spec.params();
     let (p, n) = (spec.p, spec.n_total);
     assert!(n % p == 0, "n must divide evenly (paper setup): n={n} p={p}");
 
-    // The multi-level variants run over a chain of processor-group
-    // communicators shared by all (real or virtual) processors: one
-    // level for det2/ran2 (`default_groups` picks the largest divisor
-    // of p not exceeding √p; p = 8 → 2×4), the resolved topology's full
-    // refinement chain for det-k/ran-k.  Each backend builds its own
-    // communicator flavor over the same partitions.
-    let run = match spec.backend {
-        Backend::Threaded => {
-            let machine = BspMachine::new(params);
-            let comms = build_comms::<Communicator>(spec);
-            machine.run_keys::<K, _, _>(|ctx| run_cell(ctx, &comms, spec))
-        }
-        Backend::Sim => {
-            let machine = SimMachine::new(params);
-            let comms = build_comms::<SimCommunicator>(spec);
-            machine.run_keys::<K, _, _>(|ctx| run_cell(ctx, &comms, spec))
-        }
-    };
+    // Both backends route through the persistent engine pool
+    // (`sorter::Sorter::global()`): threaded specs run as SPMD jobs on
+    // the pool's engine for this `p` (parked worker crews, recycled
+    // slot-matrix scratch), simulator specs as closure jobs on its task
+    // engine.  Charges are data-dependent, not timing-dependent, so the
+    // pooled ledger is identical to the old spin-up-per-run path — the
+    // conformance suite's charged-equivalence checks gate this.
+    let run = crate::sorter::Sorter::global()
+        .run_spec::<K>(spec)
+        .unwrap_or_else(|e| panic!("BSP processor thread panicked: {e}"));
 
     let mut total = 0usize;
     let mut last: Option<K> = None;

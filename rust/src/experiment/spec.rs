@@ -5,7 +5,7 @@
 //! re-exports them): the tables are now one consumer of the experiment
 //! runner among several, not the owner of the run vocabulary.
 
-use crate::bsp::{Backend, Topology, MAX_TOPOLOGY_DEPTH};
+use crate::bsp::{Backend, BspParams, Topology, MAX_TOPOLOGY_DEPTH};
 use crate::gen::Benchmark;
 use crate::seq::SeqSortKind;
 use crate::sort::SortConfig;
@@ -227,6 +227,11 @@ pub struct RunSpec {
     /// Pinned topology tree for the multi-level variants (`None` =
     /// `default_topology(p)` for det2/ran2, planner for det-k/ran-k).
     pub topology: Option<Topology>,
+    /// Machine parameters to price and plan under (`None` = the paper's
+    /// T3D preset for `p`, `crate::bsp::params::cray_t3d`).  Set via
+    /// [`RunSpec::with_params`] — the `sorter::SortJob` builder uses it
+    /// so a service tenant can submit jobs planned for its own machine.
+    pub params_override: Option<BspParams>,
 }
 
 impl RunSpec {
@@ -241,6 +246,7 @@ impl RunSpec {
             seed: 0x0BEE,
             backend: Backend::Threaded,
             topology: None,
+            params_override: None,
         }
     }
 
@@ -262,9 +268,24 @@ impl RunSpec {
         self
     }
 
-    /// The paper's T3D parameters for this spec's `p` (table pricing).
-    pub fn params(&self) -> crate::bsp::params::BspParams {
-        crate::bsp::params::cray_t3d(self.p)
+    /// Replace the seed for the randomized variants.
+    pub fn with_seed(mut self, seed: u64) -> RunSpec {
+        self.seed = seed;
+        self
+    }
+
+    /// Price and plan under explicit machine parameters instead of the
+    /// paper's T3D preset (`params.p` should equal the spec's `p`).
+    pub fn with_params(mut self, params: BspParams) -> RunSpec {
+        self.params_override = Some(params);
+        self
+    }
+
+    /// The machine parameters this spec prices and plans under: the
+    /// override if one was set, else the paper's T3D parameters for the
+    /// spec's `p` (table pricing).
+    pub fn params(&self) -> BspParams {
+        self.params_override.unwrap_or_else(|| crate::bsp::params::cray_t3d(self.p))
     }
 }
 
@@ -651,6 +672,16 @@ mod tests {
         assert!(TopologyChoice::parse("8x0x4").is_err());
         assert!(TopologyChoice::parse("1x8").is_err());
         assert!(TopologyChoice::parse("deep").is_err());
+    }
+
+    #[test]
+    fn params_override_reprices_a_spec() {
+        let spec = RunSpec::new(AlgoVariant::Det, Benchmark::Uniform, 4, 1 << 10);
+        assert_eq!(spec.params(), crate::bsp::params::cray_t3d(4));
+        let host = BspParams::host(4, 5.0, 0.01, 100.0);
+        let spec = spec.with_params(host).with_seed(7);
+        assert_eq!(spec.params(), host);
+        assert_eq!(spec.seed, 7);
     }
 
     #[test]

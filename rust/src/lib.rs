@@ -10,8 +10,10 @@
 //! Three layers (DESIGN.md §3):
 //!
 //! * **L3 (this crate)** — the BSP substrate, primitives, the sorting
-//!   algorithms, baselines, generators, theory model, and the table
-//!   harness regenerating the paper's Tables 1–11;
+//!   algorithms, baselines, generators, theory model, the table
+//!   harness regenerating the paper's Tables 1–11, and the
+//!   sort-as-a-service façade ([`sorter`]) over a persistent engine
+//!   pool;
 //! * **L2 (python/compile/model.py)** — the JAX local-sort graph, AOT
 //!   lowered to `artifacts/*.hlo.txt`;
 //! * **L1 (python/compile/kernels/bitonic.py)** — the Pallas bitonic
@@ -20,8 +22,8 @@
 //! The whole stack is generic over the [`key::Key`] trait (total order +
 //! fixed-width wire encoding), with `i32` as the default instantiation:
 //! the same SPMD programs sort `u64`, total-ordered `f64` ([`key::F64`])
-//! and `(u32 key, u32 payload)` records ([`key::Record`]) through
-//! [`bsp::BspMachine::run_keys`].
+//! and `(u32 key, u32 payload)` records ([`key::Record`]), selected per
+//! job through the [`sorter::SortJob`] builder.
 //!
 //! ## The BSP cost model
 //!
@@ -76,36 +78,35 @@
 //! Quickstart (a compiling, running doctest — `cargo test` executes it):
 //!
 //! ```
-//! use bsp_sort::bsp::{cray_t3d, BspMachine};
-//! use bsp_sort::gen::{Benchmark, generate_for_proc};
-//! use bsp_sort::key::Record;
-//! use bsp_sort::sort::{det::sort_det_bsp, SortConfig};
+//! use bsp_sort::prelude::*;
 //!
-//! let p = 16;
-//! let n_total = 16 << 12; // scaled down so the doctest stays fast
-//! let params = cray_t3d(p);
-//! let machine = BspMachine::new(params);
-//! let cfg = SortConfig::default();
-//! let run = machine.run(|ctx| {
-//!     let keys = generate_for_proc(Benchmark::Uniform, ctx.pid(), p, n_total / p);
-//!     sort_det_bsp(ctx, &params, keys, n_total, &cfg)
-//! });
-//! let sorted: Vec<i32> = run.outputs.iter().flat_map(|r| r.keys.clone()).collect();
-//! assert_eq!(sorted.len(), n_total);
-//! assert!(sorted.windows(2).all(|w| w[0] <= w[1]));
-//! println!("predicted T3D time: {:.3}s", run.ledger.predicted_secs(&params));
+//! // One-shot: submit-and-join on the process-wide engine pool.  The
+//! // pool keeps worker threads parked between jobs, so repeat sorts
+//! // skip thread spin-up and reuse slot-matrix scratch.
+//! let run = Sorter::global()
+//!     .run(SortJob::new(AlgoVariant::Det, 1 << 12).procs(4))
+//!     .expect("pool admits the job");
+//! assert!(run.outputs.is_globally_sorted());
+//! assert_eq!(run.outputs.total_keys(), 1 << 12);
+//! println!("predicted T3D time: {:.3}s", run.ledger.predicted_secs(&cray_t3d(4)));
 //!
-//! // The identical program over a different `Key` domain — here
-//! // `(u32 key, u32 payload)` records riding satellite data:
-//! let rec_run = machine.run_keys::<Record, _, _>(|ctx| {
-//!     let recs: Vec<Record> = (0..64)
-//!         .map(|i| Record { key: (64 - i) as u32, payload: ctx.pid() as u32 })
-//!         .collect();
-//!     sort_det_bsp(ctx, &params, recs, 64 * p, &cfg).keys
-//! });
-//! let recs: Vec<Record> = rec_run.outputs.concat();
-//! assert!(recs.windows(2).all(|w| w[0] <= w[1]));
+//! // Asynchronous submission: a different key domain, a randomized
+//! // variant and the deterministic simulator backend at a virtual `p`
+//! // far beyond host threads — one façade, one builder.
+//! let job = SortJob::new(AlgoVariant::Ran, 1 << 12)
+//!     .domain(KeyDomain::RecordU32)
+//!     .procs(64)
+//!     .backend(Backend::Sim)
+//!     .seed(7);
+//! let handle = Sorter::global().submit(job).expect("queue has room");
+//! let run = handle.join().expect("job completes");
+//! assert_eq!(run.outputs.domain(), KeyDomain::RecordU32);
+//! assert!(run.outputs.is_globally_sorted());
 //! ```
+//!
+//! Direct SPMD programming against the substrate (custom supersteps,
+//! raw message staging) remains available through [`bsp::BspMachine`];
+//! sorting workloads should prefer the service surface above.
 
 pub mod baselines;
 pub mod bsp;
@@ -117,6 +118,21 @@ pub mod primitives;
 pub mod runtime;
 pub mod seq;
 pub mod sort;
+pub mod sorter;
 pub mod tables;
 pub mod theory;
 pub mod util;
+
+/// One-import surface of the service API: `use bsp_sort::prelude::*;`
+/// brings in the [`sorter::Sorter`] façade, the [`sorter::SortJob`]
+/// builder and every vocabulary type a job mentions — no deep module
+/// paths required.
+pub mod prelude {
+    pub use crate::bsp::service::{Engine, EngineConfig, EngineStats, JobHandle};
+    pub use crate::bsp::{cray_t3d, Backend, BspParams, Ledger};
+    pub use crate::experiment::spec::{AlgoVariant, KeyDomain, TopologyChoice};
+    pub use crate::gen::Benchmark;
+    pub use crate::runtime::RuntimeError;
+    pub use crate::sort::SortConfig;
+    pub use crate::sorter::{DomainOutputs, SortHandle, SortJob, SortRun, Sorter};
+}

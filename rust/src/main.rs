@@ -16,19 +16,20 @@
 //!
 //! Common flags: `--max-n <keys>`, `--max-p <procs>`, `--full`,
 //! `--reps <k>`, `--seed <s>`; `sort` adds `--algo`, `--bench`, `--n`,
-//! `--p`, `--seq`, `--no-dup`, and the multi-level topology flags
+//! `--p`, `--domain`, `--jobs`, `--seq`, `--no-dup`, and the
+//! multi-level topology flags
 //! `--groups`, `--topology`, `--levels auto`; `experiment` adds
 //! `--quick`, `--algos`, `--benches`, `--domains`, `--ns`, `--ps`,
 //! `--topologies`, `--warmup`, `--tag`, `--out`.
 
 use std::path::Path;
 
-use bsp_sort::bsp::engine::BspMachine;
 use bsp_sort::bsp::params::cray_t3d;
 use bsp_sort::bsp::Backend;
 use bsp_sort::experiment::{self, SweepSpec};
 use bsp_sort::gen::Benchmark;
 use bsp_sort::metrics::RunReport;
+use bsp_sort::prelude::{KeyDomain, SortJob, SortRun, Sorter, TopologyChoice};
 use bsp_sort::seq::SeqSortKind;
 use bsp_sort::sort::{plan, DuplicatePolicy, SortConfig};
 use bsp_sort::tables::{self, runner, TableOpts};
@@ -40,6 +41,7 @@ const VALUE_OPTS: &[&str] = &[
     "max-n", "max-p", "reps", "seed", "algo", "bench", "n", "p", "seq", "table",
     "algos", "benches", "domains", "ns", "ps", "warmup", "tag", "out",
     "backend", "backends", "groups", "topology", "levels", "topologies",
+    "domain", "jobs",
 ];
 
 fn main() {
@@ -117,8 +119,12 @@ fn run(cmd: &str, args: &Args) -> Result<(), Box<dyn std::error::Error>> {
             // the valid tags (the old path silently dropped to a generic
             // message on `None`).
             let bench = Benchmark::parse_strict(args.get("bench").unwrap_or("U"))?;
+            let domain = KeyDomain::parse(args.get("domain").unwrap_or("i32"))?;
             let n: usize = args.get_parsed("n", 1 << 20)?;
             let p: usize = args.get_parsed("p", 8)?;
+            // --jobs N submits N seed-varied copies to the engine pool
+            // concurrently (service mode) and reports throughput.
+            let jobs: usize = args.get_parsed("jobs", 1)?;
             let seq = match args.get("seq").unwrap_or("quick") {
                 "quick" | "q" => SeqSortKind::Quick,
                 "radix" | "r" => SeqSortKind::Radix,
@@ -139,7 +145,8 @@ fn run(cmd: &str, args: &Args) -> Result<(), Box<dyn std::error::Error>> {
             // pins a depth-2 split, --topology a full divisor tree
             // (strictly validated against p, invalid shapes list the
             // valid ones), --levels auto defers to the cost-model
-            // planner.  At most one of the three.
+            // planner.  At most one of the three; with none, the
+            // planner resolves the depth-k variants (as before).
             if ["groups", "topology", "levels"]
                 .iter()
                 .filter(|k| args.get(k).is_some())
@@ -148,20 +155,19 @@ fn run(cmd: &str, args: &Args) -> Result<(), Box<dyn std::error::Error>> {
             {
                 return Err("use at most one of --groups, --topology, --levels".into());
             }
-            let mut topology = None;
+            let mut choice = TopologyChoice::Auto;
             if let Some(v) = args.get("groups") {
                 let k: usize = v
                     .parse()
                     .map_err(|_| format!("--groups '{v}' is not an integer"))?;
-                topology = Some(plan::parse_groups(k, p)?);
+                choice = TopologyChoice::Fixed(plan::parse_groups(k, p)?);
             }
             if let Some(v) = args.get("topology") {
-                topology = Some(plan::parse_topology(v, p)?);
+                choice = TopologyChoice::Fixed(plan::parse_topology(v, p)?);
             }
             if let Some(v) = args.get("levels") {
                 match v {
-                    // None = the planner resolves it (det-k/ran-k).
-                    "auto" | "plan" => topology = None,
+                    "auto" | "plan" => choice = TopologyChoice::Auto,
                     other => {
                         return Err(format!(
                             "unknown --levels '{other}' (expected auto)"
@@ -170,33 +176,68 @@ fn run(cmd: &str, args: &Args) -> Result<(), Box<dyn std::error::Error>> {
                     }
                 }
             }
-            let spec = runner::RunSpec {
-                algo,
-                bench,
-                p,
-                n_total: n,
-                cfg,
-                seed: opts.seed,
-                backend,
-                topology,
-            };
+
+            // Everything below routes through the sort service: one
+            // SortJob builder, the persistent engine pool behind it.
+            let job = SortJob::new(algo, n)
+                .bench(bench)
+                .domain(domain)
+                .procs(p)
+                .config(cfg)
+                .seed(opts.seed)
+                .backend(backend)
+                .topology(choice);
             match algo {
                 runner::AlgoVariant::DetK | runner::AlgoVariant::RanK => {
-                    println!(
-                        "topology        : {}",
-                        experiment::resolved_deep_topology(&spec).label()
-                    );
+                    if let Some(t) = job.planned_topology() {
+                        println!("topology        : {}", t.label());
+                    }
                 }
                 runner::AlgoVariant::Det2 | runner::AlgoVariant::Ran2 => {
-                    let shape = spec
-                        .topology
+                    let shape = job
+                        .planned_topology()
                         .unwrap_or_else(|| bsp_sort::sort::multilevel::default_topology(p));
                     println!("topology        : {}", shape.label());
                 }
                 _ => {}
             }
-            let report = runner::execute(&spec);
-            print_report(&report);
+
+            if jobs > 1 {
+                // Service mode: submit every job up front (admission
+                // control applies — a full queue is a structured
+                // RuntimeError printed by the one error path), then
+                // join and report batch throughput.
+                let started = std::time::Instant::now();
+                let handles: Vec<_> = (0..jobs)
+                    .map(|i| Sorter::global().submit(job.seed(opts.seed.wrapping_add(i as u64))))
+                    .collect::<Result<_, _>>()?;
+                let runs: Vec<SortRun> =
+                    handles.into_iter().map(|h| h.join()).collect::<Result<_, _>>()?;
+                let secs = started.elapsed().as_secs_f64();
+                println!(
+                    "{} jobs completed in {} s ({:.1} jobs/sec)",
+                    jobs,
+                    fmt_secs(secs),
+                    jobs as f64 / secs.max(1e-9)
+                );
+                print_sort_run(&runs[0], p);
+            } else if domain == KeyDomain::I32 {
+                // The paper's domain keeps the full measured-vs-
+                // predicted report (the runner routes through the same
+                // engine pool).
+                let mut spec = runner::RunSpec::new(algo, bench, p, n)
+                    .with_cfg(cfg)
+                    .with_backend(backend)
+                    .with_seed(opts.seed);
+                if let Some(t) = job.planned_topology() {
+                    spec = spec.with_topology(t);
+                }
+                let report = runner::execute(&spec);
+                print_report(&report);
+            } else {
+                let run = Sorter::global().run(job)?;
+                print_sort_run(&run, p);
+            }
         }
         "experiment" => {
             run_experiment(args)?;
@@ -228,6 +269,21 @@ fn print_report(r: &RunReport) {
     for (ph, secs) in &r.phase_predicted {
         println!("  {ph:<14} {}", fmt_secs(*secs));
     }
+}
+
+/// Compact per-job summary for service-mode and non-`i32` sorts (the
+/// full measured-vs-predicted report is `i32`-domain only).
+fn print_sort_run(run: &SortRun, p: usize) {
+    let params = cray_t3d(p);
+    println!("domain          : {}", run.outputs.domain().tag());
+    println!(
+        "keys            : {} across {} procs (globally sorted: {})",
+        run.outputs.total_keys(),
+        run.outputs.procs(),
+        run.outputs.is_globally_sorted()
+    );
+    println!("predicted T3D   : {} s", fmt_secs(run.ledger.predicted_secs(&params)));
+    println!("measured (host) : {} s", fmt_secs(run.ledger.wall_us / 1e6));
 }
 
 /// The `experiment` subcommand: build the sweep from flags, calibrate,
@@ -280,26 +336,31 @@ fn run_experiment(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
 }
 
 fn selftest() -> Result<(), Box<dyn std::error::Error>> {
-    // 1. Engine + DET sort.
+    // 1. Engine pool + DET sort through the service façade.
     let p = 4;
     let n = 1 << 14;
-    let params = cray_t3d(p);
-    let machine = BspMachine::new(params);
-    let cfg = SortConfig::default();
-    let run = machine.run(|ctx| {
-        let local =
-            bsp_sort::gen::generate_for_proc(Benchmark::Uniform, ctx.pid(), p, n / p);
-        bsp_sort::sort::det::sort_det_bsp(ctx, &params, local, n, &cfg)
-    });
-    let total: usize = run.outputs.iter().map(|r| r.keys.len()).sum();
-    assert_eq!(total, n);
+    let run = Sorter::global().run(SortJob::new(runner::AlgoVariant::Det, n).procs(p))?;
+    assert_eq!(run.outputs.total_keys(), n);
+    assert!(run.outputs.is_globally_sorted());
     println!(
-        "engine + SORT_DET_BSP         ok ({} keys, {} supersteps)",
+        "engine pool + SORT_DET_BSP    ok ({} keys, {} supersteps)",
         n,
         run.ledger.supersteps.len()
     );
 
-    // 2. PJRT runtime (skipped gracefully when artifacts are absent).
+    // 2. Concurrent submissions share the persistent worker team.
+    let handles: Vec<_> = (0..4)
+        .map(|s| {
+            Sorter::global()
+                .submit(SortJob::new(runner::AlgoVariant::Ran, 1 << 12).procs(p).seed(s))
+        })
+        .collect::<Result<_, _>>()?;
+    for h in handles {
+        assert!(h.join()?.outputs.is_globally_sorted());
+    }
+    println!("concurrent job submission     ok (4 async jobs, p = {p})");
+
+    // 3. PJRT runtime (skipped gracefully when artifacts are absent).
     match bsp_sort::runtime::Runtime::from_default_artifacts() {
         Ok(rt) => {
             let mut keys: Vec<i32> = (0..4096).rev().collect();
@@ -323,6 +384,7 @@ USAGE:
   bsp-sort sort --algo det|iran|ran|bsi|det2|ran2|det-k|ran-k|
                        helman-det|helman-ran|psrs
                 --bench U|G|B|2-G|S|DD|WR --n 8388608 --p 64
+                [--domain i32|u64|f64|record] [--jobs N]
                 [--seq quick|radix] [--no-dup] [--backend threaded|sim]
                 [--groups K | --topology K1xK2x... | --levels auto]
   bsp-sort experiment [--quick] [--algos det,ran,...] [--benches U,DD,...]
@@ -337,6 +399,13 @@ USAGE:
 Tables report *predicted Cray T3D seconds* from the BSP cost model
 (p, L, g as measured in the paper); host wall-clock is reported by
 `sort`.  Default grid caps n at 8M; --full runs the paper's full 64M.
+
+Every sort is served by a persistent engine pool (sorter::Sorter):
+worker threads stay parked between jobs and slot-matrix scratch is
+reused, so repeat sorts skip thread spin-up.  `sort --jobs N` submits
+N seed-varied copies concurrently through the pool's bounded queue
+(admission control rejects beyond the queue depth with a structured
+error) and reports jobs/sec; `--domain` picks the key domain per job.
 
 `experiment` calibrates the host's (g, L) and operation rate from
 micro-probes, runs the sweep cross-product with warmup + repetitions,

@@ -217,6 +217,7 @@ mod tests {
     }
 
     #[test]
+    #[allow(deprecated)]
     fn sorts_u64_domain() {
         // Bare keys of a non-default domain ride the generic payload.
         let machine = BspMachine::new(cray_t3d(4));

@@ -2,10 +2,14 @@
 //!
 //! The workspace ships **zero third-party crates** (see `util/mod.rs`);
 //! this layer previously pulled in `anyhow`, which broke offline builds.
-//! A small enum covers the three failure surfaces the runtime has —
-//! artifact discovery, the XLA/PJRT backend, and the offload service —
-//! plus the compiled-out marker used when the `xla` feature is off and
-//! the CLI's unknown-benchmark-tag error (`gen::Benchmark::parse_strict`).
+//! A small enum covers the failure surfaces the runtime has — artifact
+//! discovery, the XLA/PJRT backend, the offload service, and the sort
+//! engine pool (`bsp::service`: admission control, shutdown, job
+//! panics, job validation) — plus the compiled-out marker used when the
+//! `xla` feature is off and the CLI's unknown-benchmark-tag error
+//! (`gen::Benchmark::parse_strict`).  Every variant is structured (no
+//! pre-rendered strings where the caller may need the pieces), and the
+//! CLI prints all of them through this one `Display` path.
 
 use std::fmt;
 
@@ -29,6 +33,18 @@ pub enum RuntimeError {
         given: String,
         valid: &'static [&'static str],
     },
+    /// Admission control of the sort engine pool rejected a submission:
+    /// the bounded job queue was already at its configured depth.
+    QueueFull { depth: usize },
+    /// A job was submitted to — or still queued on — an engine that has
+    /// been shut down.
+    EngineShutdown,
+    /// An SPMD processor of the job panicked; the message is the panic
+    /// payload of the first processor that died.
+    JobPanicked(String),
+    /// A [`SortJob`](crate::sorter::SortJob) failed validation before it
+    /// was queued (e.g. `n` not divisible by `p`).
+    InvalidJob(String),
 }
 
 impl fmt::Display for RuntimeError {
@@ -41,6 +57,16 @@ impl fmt::Display for RuntimeError {
             RuntimeError::UnknownBenchmark { given, valid } => {
                 write!(f, "unknown benchmark tag {given:?}; valid tags: {}", valid.join(", "))
             }
+            RuntimeError::QueueFull { depth } => {
+                write!(
+                    f,
+                    "engine queue full: admission control rejected the job \
+                     (queue depth {depth} reached)"
+                )
+            }
+            RuntimeError::EngineShutdown => write!(f, "engine is shut down"),
+            RuntimeError::JobPanicked(msg) => write!(f, "sort job panicked: {msg}"),
+            RuntimeError::InvalidJob(msg) => write!(f, "invalid sort job: {msg}"),
         }
     }
 }
@@ -77,5 +103,29 @@ mod tests {
     fn boxes_as_std_error() {
         let e: Box<dyn std::error::Error> = Box::new(RuntimeError::Disabled("feature off"));
         assert!(e.to_string().contains("feature off"));
+    }
+
+    #[test]
+    fn queue_full_surfaces_the_depth() {
+        // Regression: the admission-control error must tell the caller
+        // *which* depth bound rejected them, not just "full".
+        let msg = RuntimeError::QueueFull { depth: 17 }.to_string();
+        assert!(msg.contains("17"), "{msg}");
+        assert!(msg.contains("queue"), "{msg}");
+    }
+
+    #[test]
+    fn engine_errors_are_structured_not_stringly() {
+        // The service layer matches on variants; keep them patterns, not
+        // pre-rendered strings.
+        match (RuntimeError::QueueFull { depth: 4 }) {
+            RuntimeError::QueueFull { depth } => assert_eq!(depth, 4),
+            _ => unreachable!(),
+        }
+        assert!(RuntimeError::EngineShutdown.to_string().contains("shut down"));
+        assert!(RuntimeError::JobPanicked("boom".into()).to_string().contains("boom"));
+        assert!(RuntimeError::InvalidJob("n % p != 0".into())
+            .to_string()
+            .contains("n % p != 0"));
     }
 }

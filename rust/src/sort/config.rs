@@ -1,11 +1,16 @@
 //! Algorithm configuration: sequential backend, oversampling, duplicate
 //! policy, and sample-sort method — the knobs §6.1/§6.2 describe.
 //!
-//! The *execution* backend selector ([`Backend`]: threaded engine vs
-//! deterministic simulator) is re-exported here; it rides
-//! `experiment::spec::RunSpec`/`RunConfig` (and the CLI's `--backend`)
-//! rather than [`SortConfig`], because the sorting algorithms themselves
-//! are backend-agnostic — they only see a `BspScope`.
+//! The *execution* backend selector ([`Backend`]: threaded engine pool
+//! vs deterministic simulator) is re-exported here; it rides
+//! `experiment::spec::RunSpec`/`RunConfig`, the `sorter::SortJob`
+//! builder (and the CLI's `--backend`) rather than [`SortConfig`],
+//! because the sorting algorithms themselves are backend-agnostic —
+//! they only see a `BspScope`.
+//!
+//! [`SortConfig`] is likewise one *field* of a [`crate::sorter::SortJob`]
+//! (`SortJob::config`): the job says what to sort and where, the config
+//! says how the chosen variant behaves.
 
 use crate::seq::SeqSortKind;
 

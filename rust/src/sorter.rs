@@ -1,0 +1,630 @@
+//! Sort-as-a-service: the unified [`SortJob`] builder and the [`Sorter`]
+//! façade over the persistent engine pool (`bsp::service`).
+//!
+//! Callers used to reach three different entry points with overlapping
+//! knobs — `BspMachine::run_keys`, `SimMachine`, and the experiment
+//! runner.  This module is the single front door: describe *what* to
+//! sort with a [`SortJob`] (key domain, algorithm variant, input
+//! distribution, `n`, `p`, backend, optional machine parameters and
+//! topology choice), and the service resolves *how* — which engine, how
+//! many crews, which topology tree (the cost-model planner behind
+//! [`TopologyChoice::Auto`]) — in the spirit of Axtmann–Sanders:
+//! machine-parameter-driven configuration belongs to the system, not
+//! the caller.
+//!
+//! Two submission styles:
+//!
+//! * [`Sorter::run`] — submit-and-join, blocking politely if the queue
+//!   is momentarily full (the one-shot path);
+//! * [`Sorter::submit`] — asynchronous, returning a [`SortHandle`]
+//!   immediately; admission control rejects with
+//!   [`RuntimeError::QueueFull`] beyond the configured depth.
+//!
+//! [`Sorter::global`] keeps one process-wide pool: engines are created
+//! per processor count on first use and parked between jobs, so repeat
+//! submissions skip thread spin-up and reuse slot-matrix scratch.  The
+//! experiment runner (`experiment::run::execute_typed`) routes through
+//! the same pool, so every table, sweep and CLI sort is served — not
+//! spun up.  Jobs on a specific self-managed [`Engine`] go through
+//! [`Engine::submit`].
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::bsp::group::Communicator;
+use crate::bsp::params::{cray_t3d, BspParams};
+use crate::bsp::service::{Engine, EngineConfig, EngineStats, JobHandle};
+use crate::bsp::sim::{SimCommunicator, SimMachine};
+use crate::bsp::{Backend, BspCtx, BspRun, Ledger, Topology};
+use crate::experiment::run::{build_comms, run_cell, StudyKey};
+use crate::experiment::spec::{AlgoVariant, KeyDomain, RunSpec, TopologyChoice};
+use crate::gen::Benchmark;
+use crate::key::{Record, F64};
+use crate::runtime::RuntimeError;
+use crate::sort::common::ProcResult;
+use crate::sort::{det, iran, multilevel, plan, SortConfig};
+
+/// One sort request: everything the service needs to run and price a
+/// sort, behind a builder.  Defaults match the experiment runner's
+/// ([`AlgoVariant`] and `n` are the two mandatory choices): uniform
+/// `i32` keys, `p = 8`, threaded backend, default config and seed.
+#[derive(Clone, Copy, Debug)]
+pub struct SortJob {
+    algo: AlgoVariant,
+    bench: Benchmark,
+    domain: KeyDomain,
+    n_total: usize,
+    p: usize,
+    cfg: SortConfig,
+    seed: u64,
+    backend: Backend,
+    topology: TopologyChoice,
+    params: Option<BspParams>,
+}
+
+impl SortJob {
+    /// A job sorting `n_total` keys with `algo` under the defaults.
+    pub fn new(algo: AlgoVariant, n_total: usize) -> SortJob {
+        SortJob {
+            algo,
+            bench: Benchmark::Uniform,
+            domain: KeyDomain::I32,
+            n_total,
+            p: 8,
+            cfg: SortConfig::default(),
+            seed: 0x0BEE,
+            backend: Backend::Threaded,
+            topology: TopologyChoice::Default,
+            params: None,
+        }
+    }
+
+    /// Key domain to sort (`i32` by default).
+    pub fn domain(mut self, domain: KeyDomain) -> SortJob {
+        self.domain = domain;
+        self
+    }
+
+    /// Input distribution (§6.3 benchmark; uniform by default).
+    pub fn bench(mut self, bench: Benchmark) -> SortJob {
+        self.bench = bench;
+        self
+    }
+
+    /// Processor count (`n_total` must divide evenly by it).
+    pub fn procs(mut self, p: usize) -> SortJob {
+        self.p = p;
+        self
+    }
+
+    /// Variant knobs: sequential backend, duplicate policy, ω.
+    pub fn config(mut self, cfg: SortConfig) -> SortJob {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Seed for the randomized variants.
+    pub fn seed(mut self, seed: u64) -> SortJob {
+        self.seed = seed;
+        self
+    }
+
+    /// Execution backend: threaded engine pool or the deterministic
+    /// simulator (closure jobs on the pool's task engine).
+    pub fn backend(mut self, backend: Backend) -> SortJob {
+        self.backend = backend;
+        self
+    }
+
+    /// Topology choice for the depth-k variants: the depth-2 heuristic
+    /// (default), the cost-model planner ([`TopologyChoice::Auto`]), or
+    /// a pinned shape.
+    pub fn topology(mut self, choice: TopologyChoice) -> SortJob {
+        self.topology = choice;
+        self
+    }
+
+    /// Plan and price under explicit machine parameters instead of the
+    /// paper's T3D preset for `p` (tenants submit jobs shaped for
+    /// *their* machine; `params.p` must equal the job's `p`).
+    pub fn params(mut self, params: BspParams) -> SortJob {
+        self.params = Some(params);
+        self
+    }
+
+    /// Admission-time validation — every failure is a structured
+    /// [`RuntimeError::InvalidJob`], never a panic inside the pool.
+    fn validate(&self) -> Result<(), RuntimeError> {
+        if self.p == 0 {
+            return Err(RuntimeError::InvalidJob("p must be at least 1".into()));
+        }
+        if self.n_total == 0 || self.n_total % self.p != 0 {
+            return Err(RuntimeError::InvalidJob(format!(
+                "n must be a positive multiple of p (paper setup): n={} p={}",
+                self.n_total, self.p
+            )));
+        }
+        if let TopologyChoice::Fixed(t) = self.topology {
+            if t.nprocs() != self.p {
+                return Err(RuntimeError::InvalidJob(format!(
+                    "topology {} has {} processors, but the job runs p={}",
+                    t.label(),
+                    t.nprocs(),
+                    self.p
+                )));
+            }
+        }
+        if let Some(params) = self.params {
+            if params.p != self.p {
+                return Err(RuntimeError::InvalidJob(format!(
+                    "machine parameters are for p={}, but the job runs p={}",
+                    params.p, self.p
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// The machine parameters this job plans under.
+    fn machine_params(&self) -> BspParams {
+        self.params.unwrap_or_else(|| cray_t3d(self.p))
+    }
+
+    /// The topology tree this job will run over, resolved the way the
+    /// sweep harness resolves its topology axis: fixed shapes pin
+    /// verbatim; for the depth-k variants, `Default` pins the depth-2
+    /// heuristic and `Auto` asks the cost-model planner under the job's
+    /// machine parameters; other variants carry no pin (`None` — their
+    /// communicators don't read one unless fixed explicitly).
+    pub fn planned_topology(&self) -> Option<Topology> {
+        let deep = matches!(self.algo, AlgoVariant::DetK | AlgoVariant::RanK);
+        match self.topology {
+            TopologyChoice::Fixed(t) => Some(t),
+            TopologyChoice::Default if deep => Some(multilevel::default_topology(self.p)),
+            TopologyChoice::Auto if deep => {
+                let params = self.machine_params();
+                let n = self.n_total;
+                Some(match self.algo {
+                    AlgoVariant::RanK => {
+                        plan::plan_ran(n, &params, iran::omega_ran(&self.cfg, n)).topology
+                    }
+                    _ => plan::plan_det(n, &params, det::omega_det(&self.cfg, n)).topology,
+                })
+            }
+            _ => None,
+        }
+    }
+
+    /// Lower the job to the experiment runner's [`RunSpec`] vocabulary
+    /// (the SPMD cell body is shared with sweeps and tables).
+    fn to_spec(&self) -> RunSpec {
+        let mut spec = RunSpec::new(self.algo, self.bench, self.p, self.n_total)
+            .with_cfg(self.cfg)
+            .with_backend(self.backend)
+            .with_seed(self.seed);
+        if let Some(params) = self.params {
+            spec = spec.with_params(params);
+        }
+        if let Some(t) = self.planned_topology() {
+            spec = spec.with_topology(t);
+        }
+        spec
+    }
+}
+
+/// Per-processor outputs of a completed job, tagged by key domain.
+#[derive(Debug)]
+pub enum DomainOutputs {
+    /// `i32` keys (the paper's experiments).
+    I32(Vec<ProcResult<i32>>),
+    /// `u64` keys.
+    U64(Vec<ProcResult<u64>>),
+    /// Total-ordered `f64` keys.
+    F64T(Vec<ProcResult<F64>>),
+    /// `(u32 key, u32 payload)` records.
+    RecordU32(Vec<ProcResult<Record>>),
+}
+
+fn globally_sorted<K: crate::key::Key>(outs: &[ProcResult<K>]) -> bool {
+    let mut last: Option<K> = None;
+    for r in outs {
+        for &k in &r.keys {
+            if let Some(prev) = last {
+                if prev > k {
+                    return false;
+                }
+            }
+            last = Some(k);
+        }
+    }
+    true
+}
+
+impl DomainOutputs {
+    /// Which key domain the job ran over.
+    pub fn domain(&self) -> KeyDomain {
+        match self {
+            DomainOutputs::I32(_) => KeyDomain::I32,
+            DomainOutputs::U64(_) => KeyDomain::U64,
+            DomainOutputs::F64T(_) => KeyDomain::F64T,
+            DomainOutputs::RecordU32(_) => KeyDomain::RecordU32,
+        }
+    }
+
+    /// Number of processors that reported output.
+    pub fn procs(&self) -> usize {
+        match self {
+            DomainOutputs::I32(o) => o.len(),
+            DomainOutputs::U64(o) => o.len(),
+            DomainOutputs::F64T(o) => o.len(),
+            DomainOutputs::RecordU32(o) => o.len(),
+        }
+    }
+
+    /// Total keys across all processors.
+    pub fn total_keys(&self) -> usize {
+        match self {
+            DomainOutputs::I32(o) => o.iter().map(|r| r.keys.len()).sum(),
+            DomainOutputs::U64(o) => o.iter().map(|r| r.keys.len()).sum(),
+            DomainOutputs::F64T(o) => o.iter().map(|r| r.keys.len()).sum(),
+            DomainOutputs::RecordU32(o) => o.iter().map(|r| r.keys.len()).sum(),
+        }
+    }
+
+    /// True when the concatenation over processors (in pid order) is
+    /// non-decreasing.
+    pub fn is_globally_sorted(&self) -> bool {
+        match self {
+            DomainOutputs::I32(o) => globally_sorted(o),
+            DomainOutputs::U64(o) => globally_sorted(o),
+            DomainOutputs::F64T(o) => globally_sorted(o),
+            DomainOutputs::RecordU32(o) => globally_sorted(o),
+        }
+    }
+}
+
+/// A completed sort: domain-tagged per-processor outputs plus the job's
+/// own cost [`Ledger`] (per-job accounting survives pooling — charges
+/// are data-dependent, so the ledger matches a one-shot run of the same
+/// spec bit for bit, modulo wall-clock).
+#[derive(Debug)]
+pub struct SortRun {
+    /// Per-processor outputs in pid order.
+    pub outputs: DomainOutputs,
+    /// The job's superstep/phase cost ledger.
+    pub ledger: Ledger,
+}
+
+/// Handle to an in-flight [`SortJob`] — the domain-erased counterpart
+/// of [`JobHandle`].
+#[derive(Debug)]
+pub enum SortHandle {
+    /// Handle for an `i32` job.
+    I32(JobHandle<ProcResult<i32>>),
+    /// Handle for a `u64` job.
+    U64(JobHandle<ProcResult<u64>>),
+    /// Handle for an `F64` job.
+    F64T(JobHandle<ProcResult<F64>>),
+    /// Handle for a record job.
+    RecordU32(JobHandle<ProcResult<Record>>),
+}
+
+impl SortHandle {
+    /// Block until the job completes; its outputs and per-job ledger,
+    /// or the structured [`RuntimeError`] that ended it.
+    pub fn join(self) -> Result<SortRun, RuntimeError> {
+        fn pack<K>(run: BspRun<ProcResult<K>>, wrap: fn(Vec<ProcResult<K>>) -> DomainOutputs) -> SortRun {
+            SortRun { outputs: wrap(run.outputs), ledger: run.ledger }
+        }
+        match self {
+            SortHandle::I32(h) => h.join().map(|r| pack(r, DomainOutputs::I32)),
+            SortHandle::U64(h) => h.join().map(|r| pack(r, DomainOutputs::U64)),
+            SortHandle::F64T(h) => h.join().map(|r| pack(r, DomainOutputs::F64T)),
+            SortHandle::RecordU32(h) => h.join().map(|r| pack(r, DomainOutputs::RecordU32)),
+        }
+    }
+
+    /// True once the job has completed: `join` will not block.
+    pub fn is_done(&self) -> bool {
+        match self {
+            SortHandle::I32(h) => h.is_done(),
+            SortHandle::U64(h) => h.is_done(),
+            SortHandle::F64T(h) => h.is_done(),
+            SortHandle::RecordU32(h) => h.is_done(),
+        }
+    }
+}
+
+/// Submit one lowered spec to a specific engine: threaded specs as SPMD
+/// jobs (the cell body shared with the experiment runner), simulator
+/// specs as closure jobs running the whole `SimMachine` on one lane.
+fn submit_spec_on<K: StudyKey>(
+    engine: &Engine,
+    spec: RunSpec,
+    block: bool,
+) -> Result<JobHandle<ProcResult<K>>, RuntimeError> {
+    match spec.backend {
+        Backend::Threaded => {
+            let comms = build_comms::<Communicator>(&spec);
+            let program = move |ctx: &mut BspCtx<K>| run_cell(ctx, &comms, &spec);
+            if block {
+                engine.submit_program_blocking::<K, _, _>(spec.n_total, program)
+            } else {
+                engine.submit_program::<K, _, _>(spec.n_total, program)
+            }
+        }
+        Backend::Sim => engine.submit_task(
+            move || {
+                let machine = SimMachine::new(spec.params());
+                let comms = build_comms::<SimCommunicator>(&spec);
+                machine.run_keys::<K, _, _>(|ctx| run_cell(ctx, &comms, &spec))
+            },
+            block,
+        ),
+    }
+}
+
+/// Dispatch a validated job to its key domain's typed submission.
+fn submit_domain(
+    engine: &Engine,
+    domain: KeyDomain,
+    spec: RunSpec,
+    block: bool,
+) -> Result<SortHandle, RuntimeError> {
+    Ok(match domain {
+        KeyDomain::I32 => SortHandle::I32(submit_spec_on::<i32>(engine, spec, block)?),
+        KeyDomain::U64 => SortHandle::U64(submit_spec_on::<u64>(engine, spec, block)?),
+        KeyDomain::F64T => SortHandle::F64T(submit_spec_on::<F64>(engine, spec, block)?),
+        KeyDomain::RecordU32 => {
+            SortHandle::RecordU32(submit_spec_on::<Record>(engine, spec, block)?)
+        }
+    })
+}
+
+impl Engine {
+    /// Submit a [`SortJob`] to *this* engine (asynchronous admission:
+    /// beyond the queue depth the job is rejected with
+    /// [`RuntimeError::QueueFull`]).  Threaded jobs must match the
+    /// engine's processor count; the [`Sorter`] façade picks a matching
+    /// engine automatically.
+    pub fn submit(&self, job: SortJob) -> Result<SortHandle, RuntimeError> {
+        job.validate()?;
+        if job.backend == Backend::Threaded && job.p != self.params().p {
+            return Err(RuntimeError::InvalidJob(format!(
+                "job wants p={} but this engine runs p={} (use Sorter for \
+                 automatic engine selection)",
+                job.p,
+                self.params().p
+            )));
+        }
+        submit_domain(self, job.domain, job.to_spec(), false)
+    }
+}
+
+/// The service façade: a pool of persistent [`Engine`]s keyed by
+/// processor count (created on first use, threads parked between jobs)
+/// plus one task engine for simulator jobs.  Cheap to share —
+/// [`Sorter::global`] is the process-wide instance everything routes
+/// through; separate instances give tests and tenants isolated pools.
+pub struct Sorter {
+    engines: Mutex<HashMap<usize, Arc<Engine>>>,
+    tasks: OnceLock<Arc<Engine>>,
+}
+
+impl Sorter {
+    /// An empty pool; engines materialize per `p` on first submission.
+    pub fn new() -> Sorter {
+        Sorter { engines: Mutex::new(HashMap::new()), tasks: OnceLock::new() }
+    }
+
+    /// The process-wide pool (the experiment runner, tables and CLI all
+    /// route through it).  Its engines live until process exit.
+    pub fn global() -> &'static Sorter {
+        static GLOBAL: OnceLock<Sorter> = OnceLock::new();
+        GLOBAL.get_or_init(Sorter::new)
+    }
+
+    /// The pool's engine for `p`-processor jobs.  Crew policy: about 32
+    /// worker threads per engine (`32/p`, clamped to 1..=4 crews), so
+    /// small-`p` engines serve several tenants concurrently while
+    /// large-`p` engines don't oversubscribe the host.
+    fn engine_for(&self, p: usize) -> Arc<Engine> {
+        let mut engines = self.engines.lock().unwrap();
+        Arc::clone(engines.entry(p).or_insert_with(|| {
+            let crews = (32 / p.max(1)).clamp(1, 4);
+            Arc::new(Engine::new(EngineConfig::new(cray_t3d(p)).with_crews(crews)))
+        }))
+    }
+
+    /// The single-lane-per-crew engine that runs simulator jobs (each
+    /// `SimMachine` occupies one lane regardless of its virtual `p`).
+    fn task_engine(&self) -> Arc<Engine> {
+        Arc::clone(self.tasks.get_or_init(|| {
+            let crews = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+            Arc::new(Engine::new(EngineConfig::new(cray_t3d(1)).with_crews(crews.max(4))))
+        }))
+    }
+
+    /// Submit asynchronously; [`RuntimeError::QueueFull`] beyond the
+    /// target engine's queue depth, [`RuntimeError::InvalidJob`] on a
+    /// malformed job.
+    pub fn submit(&self, job: SortJob) -> Result<SortHandle, RuntimeError> {
+        job.validate()?;
+        let engine = match job.backend {
+            Backend::Threaded => self.engine_for(job.p),
+            Backend::Sim => self.task_engine(),
+        };
+        submit_domain(&engine, job.domain, job.to_spec(), false)
+    }
+
+    /// Submit-and-join (the one-shot path): waits for queue room
+    /// instead of rejecting, then blocks until the job completes.
+    pub fn run(&self, job: SortJob) -> Result<SortRun, RuntimeError> {
+        job.validate()?;
+        let engine = match job.backend {
+            Backend::Threaded => self.engine_for(job.p),
+            Backend::Sim => self.task_engine(),
+        };
+        submit_domain(&engine, job.domain, job.to_spec(), true)?.join()
+    }
+
+    /// Typed submit-and-join used by the experiment runner
+    /// (`execute_typed`): same pool, same engines, but the key domain
+    /// is a compile-time parameter rather than a [`KeyDomain`] tag.
+    pub(crate) fn run_spec<K: StudyKey>(
+        &self,
+        spec: &RunSpec,
+    ) -> Result<BspRun<ProcResult<K>>, RuntimeError> {
+        let engine = match spec.backend {
+            Backend::Threaded => self.engine_for(spec.p),
+            Backend::Sim => self.task_engine(),
+        };
+        submit_spec_on::<K>(&engine, *spec, true)?.join()
+    }
+
+    /// Scheduling counters of the `p`-processor engine (`None` until a
+    /// first job materializes it).
+    pub fn engine_stats(&self, p: usize) -> Option<EngineStats> {
+        self.engines.lock().unwrap().get(&p).map(|e| e.stats())
+    }
+
+    /// Shut down every engine in the pool: queued jobs fail with
+    /// [`RuntimeError::EngineShutdown`], worker threads exit.  The
+    /// global pool is never shut down; call this on owned pools.
+    pub fn shutdown(&self) {
+        for engine in self.engines.lock().unwrap().values() {
+            engine.shutdown();
+        }
+        if let Some(tasks) = self.tasks.get() {
+            tasks.shutdown();
+        }
+    }
+}
+
+impl Default for Sorter {
+    fn default() -> Sorter {
+        Sorter::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_validation_is_structured() {
+        // Uneven n.
+        let err = Sorter::global().submit(SortJob::new(AlgoVariant::Det, 1000).procs(3));
+        match err {
+            Err(RuntimeError::InvalidJob(msg)) => {
+                assert!(msg.contains("n=1000") && msg.contains("p=3"), "{msg}");
+            }
+            other => panic!("expected InvalidJob, got {other:?}"),
+        }
+        // Zero processors.
+        assert!(matches!(
+            Sorter::global().submit(SortJob::new(AlgoVariant::Det, 1024).procs(0)),
+            Err(RuntimeError::InvalidJob(_))
+        ));
+        // Pinned topology with the wrong processor product.
+        let job = SortJob::new(AlgoVariant::DetK, 1024)
+            .procs(4)
+            .topology(TopologyChoice::Fixed(Topology::new(&[2, 4])));
+        assert!(matches!(Sorter::global().submit(job), Err(RuntimeError::InvalidJob(_))));
+        // Machine parameters for a different width.
+        let job = SortJob::new(AlgoVariant::Det, 1024).procs(4).params(cray_t3d(8));
+        assert!(matches!(Sorter::global().submit(job), Err(RuntimeError::InvalidJob(_))));
+    }
+
+    #[test]
+    fn run_sorts_every_domain_through_the_pool() {
+        for domain in crate::experiment::spec::ALL_DOMAINS {
+            let job = SortJob::new(AlgoVariant::Det, 2048).procs(4).domain(domain);
+            let run = Sorter::global().run(job).expect("pool admits a blocking job");
+            assert_eq!(run.outputs.domain(), domain);
+            assert_eq!(run.outputs.procs(), 4);
+            assert_eq!(run.outputs.total_keys(), 2048);
+            assert!(run.outputs.is_globally_sorted(), "{domain:?} output unsorted");
+            assert!(run.ledger.wall_us >= 0.0);
+        }
+    }
+
+    #[test]
+    fn submit_is_asynchronous_and_joinable() {
+        let job = SortJob::new(AlgoVariant::Ran, 2048).procs(4).seed(42);
+        let handle = Sorter::global().submit(job).expect("queue has room");
+        let run = handle.join().expect("job completes");
+        assert!(run.outputs.is_globally_sorted());
+        assert_eq!(run.outputs.total_keys(), 2048);
+    }
+
+    #[test]
+    fn sim_jobs_ride_the_task_engine() {
+        // Virtual p far beyond sensible thread counts: one lane, one
+        // SimMachine, same façade.
+        let job = SortJob::new(AlgoVariant::Det, 1 << 12)
+            .procs(64)
+            .backend(Backend::Sim)
+            .domain(KeyDomain::U64);
+        let run = Sorter::global().run(job).expect("task engine admits");
+        assert_eq!(run.outputs.procs(), 64);
+        assert!(run.outputs.is_globally_sorted());
+    }
+
+    #[test]
+    fn auto_topology_plans_a_deep_sort() {
+        let job = SortJob::new(AlgoVariant::DetK, 1 << 12)
+            .procs(8)
+            .topology(TopologyChoice::Auto);
+        let run = Sorter::global().run(job).expect("planned job runs");
+        assert!(run.outputs.is_globally_sorted());
+        assert_eq!(run.outputs.total_keys(), 1 << 12);
+    }
+
+    #[test]
+    fn engine_submit_checks_the_width() {
+        let engine = Engine::new(EngineConfig::new(cray_t3d(4)));
+        let err = engine.submit(SortJob::new(AlgoVariant::Det, 1024).procs(8));
+        match err {
+            Err(RuntimeError::InvalidJob(msg)) => {
+                assert!(msg.contains("p=8") && msg.contains("p=4"), "{msg}");
+            }
+            other => panic!("expected InvalidJob, got {other:?}"),
+        }
+        let run = engine
+            .submit(SortJob::new(AlgoVariant::Det, 1024).procs(4))
+            .expect("matching width admits")
+            .join()
+            .expect("job completes");
+        assert!(run.outputs.is_globally_sorted());
+        engine.shutdown();
+    }
+
+    #[test]
+    fn the_global_pool_reuses_engines_across_jobs() {
+        let before = Sorter::global().engine_stats(4).map(|s| s.completed).unwrap_or(0);
+        for seed in 0..3 {
+            let job = SortJob::new(AlgoVariant::Iran, 2048).procs(4).seed(seed);
+            assert!(Sorter::global().run(job).is_ok());
+        }
+        let after = Sorter::global()
+            .engine_stats(4)
+            .expect("engine for p=4 exists")
+            .completed;
+        assert!(after >= before + 3, "before={before} after={after}");
+    }
+
+    #[test]
+    fn owned_pools_shut_down_cleanly() {
+        let pool = Sorter::new();
+        let run = pool
+            .run(SortJob::new(AlgoVariant::Det, 1024).procs(4))
+            .expect("fresh pool serves a job");
+        assert!(run.outputs.is_globally_sorted());
+        pool.shutdown();
+        assert!(matches!(
+            pool.run(SortJob::new(AlgoVariant::Det, 1024).procs(4)),
+            Err(RuntimeError::EngineShutdown)
+        ));
+    }
+}

@@ -63,6 +63,31 @@ pub fn replay<F: Fn(&mut SplitMix64)>(seed: u64, prop: F) {
     prop(&mut rng);
 }
 
+/// Order-independent multiset fingerprint over a key stream: element
+/// hashes combined with commutative reductions (sum, xor, sum of
+/// squares) plus the count — a collision needs equal counts *and* three
+/// simultaneous 64-bit coincidences.  Two streams with equal signatures
+/// are (for testing purposes) permutations of each other, so a sorted
+/// output can be checked against its input without materialising either
+/// side in one vector.
+pub fn multiset_sig<K: crate::key::Key>(keys: impl Iterator<Item = K>) -> (u64, u64, u64, usize) {
+    let (mut sum, mut xor, mut sq, mut count) = (0u64, 0u64, 0u64, 0usize);
+    let mut words: Vec<u64> = Vec::with_capacity(2);
+    for k in keys {
+        words.clear();
+        k.encode(&mut words);
+        let mut h = 0x6B73_6F72_7462_7370u64;
+        for &w in &words {
+            h = SplitMix64::new(h ^ w).next_u64();
+        }
+        sum = sum.wrapping_add(h);
+        xor ^= h;
+        sq = sq.wrapping_add(h.wrapping_mul(h));
+        count += 1;
+    }
+    (sum, xor, sq, count)
+}
+
 /// Draw a random key vector of length in `[lo_len, hi_len]`, values in
 /// `[lo, hi]` — the common input shape for sort properties.
 pub fn arb_keys(rng: &mut SplitMix64, lo_len: usize, hi_len: usize, lo: i32, hi: i32) -> Vec<i32> {
@@ -95,6 +120,15 @@ mod tests {
             },
             |_| panic!("boom"),
         );
+    }
+
+    #[test]
+    fn multiset_sig_is_order_independent_and_count_sensitive() {
+        let a = multiset_sig([3i32, 1, 4, 1, 5].into_iter());
+        let b = multiset_sig([1i32, 1, 3, 4, 5].into_iter());
+        assert_eq!(a, b, "permutations must fingerprint identically");
+        let c = multiset_sig([1i32, 3, 4, 5].into_iter());
+        assert_ne!(a, c, "dropping a duplicate must change the signature");
     }
 
     #[test]

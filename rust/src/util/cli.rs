@@ -18,6 +18,16 @@ impl fmt::Display for CliError {
 
 impl std::error::Error for CliError {}
 
+/// Runtime failures (engine-pool admission control, shutdown, job
+/// panics, job validation, backend errors) surface on the CLI through
+/// the same `error: <Display>` path as usage errors — one rendering,
+/// no stringly re-wrapping at call sites.
+impl From<crate::runtime::RuntimeError> for CliError {
+    fn from(e: crate::runtime::RuntimeError) -> CliError {
+        CliError(e.to_string())
+    }
+}
+
 /// Parsed argument bag.
 #[derive(Debug, Default, Clone)]
 pub struct Args {
@@ -126,5 +136,14 @@ mod tests {
     fn bad_typed_value_errors() {
         let a = Args::parse(sv(&["--n", "xyz"]), &["n"]).unwrap();
         assert!(a.get_parsed::<usize>("n", 0).is_err());
+    }
+
+    #[test]
+    fn runtime_errors_convert_through_the_display_path() {
+        // A rejected job's CLI rendering carries the queue depth (the
+        // admission-control regression contract).
+        let e = CliError::from(crate::runtime::RuntimeError::QueueFull { depth: 12 });
+        assert!(e.to_string().contains("12"), "{e}");
+        assert!(e.to_string().contains("queue"), "{e}");
     }
 }

@@ -43,35 +43,14 @@ use bsp_sort::experiment::{
     execute_typed, resolved_deep_topology, AlgoVariant, RunSpec, StudyKey, ALL_ALGOS,
 };
 use bsp_sort::gen::{generate_typed_for_proc, Benchmark};
-use bsp_sort::key::{Key, Record, F64};
+use bsp_sort::key::{Record, F64};
 use bsp_sort::sort::{det, iran, SampleSortMethod, SortConfig};
+use bsp_sort::util::check::multiset_sig;
 
 /// One SplitMix64 step (the crate's own RNG), used as a scrambler for
-/// key words and case seeds.
+/// case seeds.
 fn mix(z: u64) -> u64 {
     bsp_sort::util::rng::SplitMix64::new(z).next_u64()
-}
-
-/// Order-independent multiset fingerprint over a key stream: element
-/// hashes combined with commutative reductions (sum, xor, sum of
-/// squares) plus the count — a collision needs equal counts *and* three
-/// simultaneous 64-bit coincidences.
-fn multiset_hash<K: Key>(keys: impl Iterator<Item = K>) -> (u64, u64, u64, usize) {
-    let (mut sum, mut xor, mut sq, mut count) = (0u64, 0u64, 0u64, 0usize);
-    let mut words: Vec<u64> = Vec::with_capacity(2);
-    for k in keys {
-        words.clear();
-        k.encode(&mut words);
-        let mut h = 0x6B73_6F72_7462_7370u64;
-        for &w in &words {
-            h = mix(h ^ w);
-        }
-        sum = sum.wrapping_add(h);
-        xor ^= h;
-        sq = sq.wrapping_add(h.wrapping_mul(h));
-        count += 1;
-    }
-    (sum, xor, sq, count)
 }
 
 /// The per-algorithm balance bound on keys received by any processor,
@@ -171,8 +150,8 @@ fn check_case<K: StudyKey>(
     };
 
     // Permutation: multiset fingerprint of output == regenerated input.
-    let out_hash = multiset_hash(single.outputs.iter().flat_map(|r| r.keys.iter().copied()));
-    let in_hash = multiset_hash(
+    let out_hash = multiset_sig(single.outputs.iter().flat_map(|r| r.keys.iter().copied()));
+    let in_hash = multiset_sig(
         (0..p).flat_map(|pid| generate_typed_for_proc::<K>(bench, pid, p, n / p).into_iter()),
     );
     assert_eq!(

@@ -28,6 +28,7 @@ fn assert_sorted_permutation<K: Key>(inputs: &[Vec<K>], outputs: &[Vec<K>], labe
     assert_eq!(got, expect, "{label}: not a permutation of the input");
 }
 
+#[allow(deprecated)]
 fn run_two_level<K: GenKey + RadixKey>(
     det_variant: bool,
     bench: Benchmark,

@@ -1,0 +1,254 @@
+//! End-to-end exercise of the sort-as-a-service surface.
+//!
+//! The contract under test: many seeded jobs — mixed key domains,
+//! algorithm variants and backends — submitted to the process-wide pool
+//! *simultaneously* each come back globally sorted and as a permutation
+//! of their generated input (order-independent multiset signature); the
+//! pooled path charges a ledger identical to the deprecated one-shot
+//! `run_keys` wrapper (wall-clock excluded — that is the field pooling
+//! is allowed to change); admission control rejects over-depth
+//! submissions with the configured queue depth in the error; shutdown
+//! fails queued jobs without wedging running ones; and a panicking job
+//! poisons only itself, not the engine.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use bsp_sort::bsp::{cray_t3d, BspCtx, BspMachine, Engine, EngineConfig, Ledger};
+use bsp_sort::gen::{generate_typed_for_proc, Benchmark, GenKey};
+use bsp_sort::key::{Key, Record, F64};
+use bsp_sort::prelude::{
+    AlgoVariant, Backend, DomainOutputs, KeyDomain, RuntimeError, SortJob, SortRun, Sorter,
+};
+use bsp_sort::sort::common::ProcResult;
+use bsp_sort::sort::{det, ran, SortConfig};
+use bsp_sort::util::check::multiset_sig;
+
+fn out_sig<K: Key>(rs: &[ProcResult<K>]) -> (u64, u64, u64, usize) {
+    multiset_sig(rs.iter().flat_map(|r| r.keys.iter().copied()))
+}
+
+/// The signature of the input a pooled job generated internally: the
+/// generators are deterministic in `(bench, pid, p, n)`, so the input
+/// multiset is reproducible without ever shipping it out of the job.
+fn in_sig<K: GenKey>(bench: Benchmark, p: usize, n: usize) -> (u64, u64, u64, usize) {
+    multiset_sig((0..p).flat_map(|pid| generate_typed_for_proc::<K>(bench, pid, p, n / p)))
+}
+
+fn assert_permutation(run: &SortRun, bench: Benchmark, n: usize, label: &str) {
+    assert!(run.outputs.is_globally_sorted(), "{label}: not globally sorted");
+    assert_eq!(run.outputs.total_keys(), n, "{label}: key count drifted");
+    let p = run.outputs.procs();
+    let ok = match &run.outputs {
+        DomainOutputs::I32(rs) => out_sig(rs) == in_sig::<i32>(bench, p, n),
+        DomainOutputs::U64(rs) => out_sig(rs) == in_sig::<u64>(bench, p, n),
+        DomainOutputs::F64T(rs) => out_sig(rs) == in_sig::<F64>(bench, p, n),
+        DomainOutputs::RecordU32(rs) => out_sig(rs) == in_sig::<Record>(bench, p, n),
+    };
+    assert!(ok, "{label}: output is not a permutation of the generated input");
+}
+
+#[test]
+fn concurrent_mixed_jobs_all_sort_and_permute() {
+    // One submission wave: every handle is taken before any join, so
+    // the pool holds all of these in flight at once — threaded jobs on
+    // the p=4 engine (batched where small), simulator jobs on the task
+    // engine at virtual widths beyond it.
+    let n = 1 << 11;
+    let cases: Vec<(AlgoVariant, KeyDomain, Benchmark, Backend, usize)> = vec![
+        (AlgoVariant::Det, KeyDomain::I32, Benchmark::Staggered, Backend::Threaded, 4),
+        (AlgoVariant::Ran, KeyDomain::U64, Benchmark::Uniform, Backend::Threaded, 4),
+        (AlgoVariant::Iran, KeyDomain::F64T, Benchmark::Gaussian, Backend::Threaded, 4),
+        (AlgoVariant::Det2, KeyDomain::RecordU32, Benchmark::Bucket, Backend::Threaded, 4),
+        (AlgoVariant::Bsi, KeyDomain::I32, Benchmark::DetDup, Backend::Threaded, 4),
+        (AlgoVariant::DetK, KeyDomain::I32, Benchmark::Uniform, Backend::Sim, 16),
+        (AlgoVariant::RanK, KeyDomain::U64, Benchmark::Staggered, Backend::Sim, 16),
+        (AlgoVariant::Ran, KeyDomain::RecordU32, Benchmark::DetDup, Backend::Sim, 64),
+        (AlgoVariant::Det, KeyDomain::F64T, Benchmark::WorstRegular, Backend::Sim, 64),
+        (AlgoVariant::Psrs, KeyDomain::I32, Benchmark::Uniform, Backend::Threaded, 4),
+    ];
+
+    let handles: Vec<_> = cases
+        .iter()
+        .enumerate()
+        .map(|(i, &(algo, domain, bench, backend, p))| {
+            let job = SortJob::new(algo, n)
+                .domain(domain)
+                .bench(bench)
+                .procs(p)
+                .backend(backend)
+                .seed(0xE2E0 + i as u64);
+            Sorter::global().submit(job).expect("pool admits the wave")
+        })
+        .collect();
+
+    for (handle, &(algo, domain, bench, backend, p)) in handles.into_iter().zip(&cases) {
+        let label = format!(
+            "algo={} domain={} bench={} backend={} p={p}",
+            algo.tag(),
+            domain.tag(),
+            bench.tag(),
+            backend.tag()
+        );
+        let run = handle.join().unwrap_or_else(|e| panic!("{label}: {e}"));
+        assert_eq!(run.outputs.domain(), domain, "{label}: domain drifted");
+        assert_permutation(&run, bench, n, &label);
+    }
+}
+
+/// Charged-accounting equality, wall-clock skipped (mirrors the
+/// conformance suite's backend-equivalence check).
+fn assert_charged_eq(pooled: &Ledger, oneshot: &Ledger, label: &str) {
+    assert_eq!(
+        pooled.supersteps.len(),
+        oneshot.supersteps.len(),
+        "{label}: superstep count differs"
+    );
+    for (i, (a, b)) in pooled.supersteps.iter().zip(&oneshot.supersteps).enumerate() {
+        assert_eq!(a.label, b.label, "{label} superstep {i}: label");
+        assert_eq!(a.phase, b.phase, "{label} superstep {i}: phase");
+        assert_eq!(a.max_ops, b.max_ops, "{label} superstep {i} ({}): max_ops", a.label);
+        assert_eq!(a.h_words, b.h_words, "{label} superstep {i} ({}): h_words", a.label);
+        assert_eq!(a.total_words, b.total_words, "{label} superstep {i}: total_words");
+        assert_eq!(a.procs, b.procs, "{label} superstep {i}: procs");
+        assert_eq!(a.round, b.round, "{label} superstep {i}: round");
+    }
+    let pp: Vec<&String> = pooled.phases.keys().collect();
+    let op: Vec<&String> = oneshot.phases.keys().collect();
+    assert_eq!(pp, op, "{label}: phase sets differ");
+    for (name, a) in &pooled.phases {
+        let b = &oneshot.phases[name];
+        assert_eq!(a.max_ops, b.max_ops, "{label} phase {name}: charged ops");
+        assert_eq!(a.h_words, b.h_words, "{label} phase {name}: h words");
+        assert_eq!(a.supersteps, b.supersteps, "{label} phase {name}: superstep count");
+    }
+}
+
+#[test]
+#[allow(deprecated)] // the one-shot side *is* the deprecated wrapper under test
+fn pooled_ledger_is_charged_identically_to_one_shot_run_keys() {
+    // Same algorithm, input and seed through both submission styles:
+    // the persistent pool (slot-matrix reuse, possibly batched) and a
+    // fresh `BspMachine::run_keys` spin-up.  Charges are data-dependent,
+    // so everything but wall-clock must match bit for bit.
+    let (p, n, seed) = (4usize, 1 << 12, 0xFEED_F00Du64);
+    let params = cray_t3d(p);
+    let cfg = SortConfig::default();
+    for algo in [AlgoVariant::Det, AlgoVariant::Ran] {
+        let label = format!("pool-vs-oneshot algo={}", algo.tag());
+        let pooled = Sorter::global()
+            .run(
+                SortJob::new(algo, n)
+                    .procs(p)
+                    .bench(Benchmark::Staggered)
+                    .seed(seed),
+            )
+            .unwrap_or_else(|e| panic!("{label}: {e}"));
+
+        let machine = BspMachine::new(params);
+        let oneshot = machine.run_keys::<i32, _, _>(|ctx| {
+            let local: Vec<i32> =
+                generate_typed_for_proc(Benchmark::Staggered, ctx.pid(), p, n / p);
+            match algo {
+                AlgoVariant::Det => det::sort_det_bsp(ctx, &params, local, n, &cfg),
+                _ => ran::sort_ran_bsp(ctx, &params, local, n, &cfg, seed),
+            }
+        });
+
+        let pooled_rs = match &pooled.outputs {
+            DomainOutputs::I32(rs) => rs,
+            other => panic!("{label}: unexpected domain {:?}", other.domain()),
+        };
+        for (pid, (a, b)) in pooled_rs.iter().zip(&oneshot.outputs).enumerate() {
+            assert_eq!(a.keys, b.keys, "{label} pid={pid}: outputs differ");
+            assert_eq!(a.received, b.received, "{label} pid={pid}: received differs");
+        }
+        assert_charged_eq(&pooled.ledger, &oneshot.ledger, &label);
+    }
+}
+
+/// A program that parks its crew until the gate opens — the lever for
+/// filling the queue deterministically from outside the crate.
+fn blocker(gate: &Arc<AtomicBool>) -> impl Fn(&mut BspCtx<i32>) -> usize + Send + Sync + 'static {
+    let gate = Arc::clone(gate);
+    move |ctx: &mut BspCtx<i32>| {
+        while !gate.load(Ordering::Acquire) {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        ctx.pid()
+    }
+}
+
+#[test]
+fn admission_control_rejects_with_the_configured_depth() {
+    let engine = Engine::new(EngineConfig::new(cray_t3d(2)).with_crews(1).with_queue_depth(2));
+    let gate = Arc::new(AtomicBool::new(false));
+
+    // The blocker is dispatched to the only crew at submit time, so the
+    // next two submissions are queued and the third is over depth.
+    let running = engine.submit_program::<i32, _, _>(1, blocker(&gate)).unwrap();
+    let q1 = engine.submit_program::<i32, _, _>(1, |ctx| ctx.pid()).unwrap();
+    let q2 = engine.submit_program::<i32, _, _>(1, |ctx| ctx.pid()).unwrap();
+    assert_eq!(engine.queued(), 2);
+    match engine.submit_program::<i32, _, _>(1, |ctx| ctx.pid()) {
+        Err(RuntimeError::QueueFull { depth }) => assert_eq!(depth, 2),
+        other => panic!("expected QueueFull {{ depth: 2 }}, got {other:?}"),
+    }
+
+    gate.store(true, Ordering::Release);
+    for h in [running, q1, q2] {
+        let run = h.join().expect("admitted jobs complete after the gate opens");
+        assert_eq!(run.outputs, vec![0, 1]);
+    }
+    assert!(engine.stats().completed >= 3);
+    engine.shutdown();
+}
+
+#[test]
+fn shutdown_fails_queued_jobs_and_finishes_running_ones() {
+    let engine = Engine::new(EngineConfig::new(cray_t3d(2)).with_crews(1).with_queue_depth(8));
+    let gate = Arc::new(AtomicBool::new(false));
+    let running = engine.submit_program::<i32, _, _>(1, blocker(&gate)).unwrap();
+    let pending = engine.submit_program::<i32, _, _>(1, |ctx| ctx.pid()).unwrap();
+    assert_eq!(engine.queued(), 1);
+
+    // `shutdown` fail-drains the queue synchronously before joining
+    // lanes; the gate opens only once the drain is observable, so the
+    // pending job can never sneak onto the crew first.
+    std::thread::scope(|s| {
+        s.spawn(|| engine.shutdown());
+        while engine.queued() > 0 {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        gate.store(true, Ordering::Release);
+    });
+
+    assert!(running.join().is_ok(), "running job must complete through shutdown");
+    match pending.join() {
+        Err(RuntimeError::EngineShutdown) => {}
+        other => panic!("expected EngineShutdown for the queued job, got {other:?}"),
+    }
+}
+
+#[test]
+fn a_panicking_job_fails_alone_and_the_engine_keeps_serving() {
+    let engine = Engine::new(EngineConfig::new(cray_t3d(2)).with_crews(1));
+    let bad = engine
+        .submit_program::<i32, _, _>(1, |ctx| {
+            if ctx.pid() == 1 {
+                panic!("deliberate test panic");
+            }
+            ctx.pid()
+        })
+        .unwrap();
+    match bad.join() {
+        Err(RuntimeError::JobPanicked(msg)) => {
+            assert!(msg.contains("deliberate"), "panic payload lost: {msg}")
+        }
+        other => panic!("expected JobPanicked, got {other:?}"),
+    }
+
+    let good = engine.submit_program::<i32, _, _>(1, |ctx| ctx.pid() * 10).unwrap();
+    assert_eq!(good.join().expect("engine survives a job panic").outputs, vec![0, 10]);
+    engine.shutdown();
+}
