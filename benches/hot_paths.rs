@@ -10,17 +10,202 @@
 //! `--quick-smoke` (the CI gate: `cargo bench --bench hot_paths --
 //! --quick-smoke`) shrinks every size and iteration count so the whole
 //! file runs in seconds — benchmark code can no longer rot silently.
+//!
+//! The local-sort engine grid (n ∈ {10⁴, 10⁵, 10⁶} × four key domains ×
+//! {quicksort, lsd-radix, ips}) additionally supports:
+//!   --json <path>       write the grid as a hotpaths-baseline JSON
+//!   --compare <path>    validate a committed baseline: schema check
+//!                       always; IPS-vs-radix acceptance floor at
+//!                       n = 10⁶ on u64 when that cell ran; a >15%
+//!                       keys/sec regression gate when the baseline was
+//!                       recorded on this host (refresh with
+//!                       ./ci.sh --bench-baseline)
 
 use bsp_sort::bsp::{cray_t3d, BspMachine, Payload};
 use bsp_sort::experiment::{calibrate_host, ProbePlan};
-use bsp_sort::gen::{generate_for_proc, Benchmark};
+use bsp_sort::gen::{generate_for_proc, generate_typed_for_proc, Benchmark, GenKey};
+use bsp_sort::key::{RadixKey, F64, Record};
 use bsp_sort::seq;
-use bsp_sort::sort::{det, iran, SortConfig};
+use bsp_sort::sort::{det, iran, LocalSortEngine, SortConfig, ALL_ENGINES};
 use bsp_sort::util::bench::bench;
+use bsp_sort::util::json::Json;
 use bsp_sort::util::rng::SplitMix64;
 
+const LOCALSORT_SCHEMA: &str = "bsp-sort/hotpaths-baseline/v1";
+/// The acceptance cell (ROADMAP 5b / PR 8): IPS must be no slower than
+/// LSD radix at n = 10⁶ on the widest fixed-width domain.
+const ACCEPT_N: usize = 1_000_000;
+const ACCEPT_DOMAIN: &str = "u64";
+
+/// One measured cell of the local-sort engine grid.
+struct GridCell {
+    n: usize,
+    domain: &'static str,
+    engine: LocalSortEngine,
+    keys_per_sec: f64,
+}
+
+fn fingerprint() -> String {
+    format!("{}/{}/{}cpu", std::env::consts::OS, std::env::consts::ARCH, threads())
+}
+
+fn threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Measure every engine on one (domain, n) input; inputs are uniform
+/// keys from the study generator so engines face identical data.
+fn grid_domain<K: GenKey + RadixKey>(n: usize, cells: &mut Vec<GridCell>) {
+    let base: Vec<K> = generate_typed_for_proc(Benchmark::Uniform, 0, 1, n);
+    for engine in ALL_ENGINES {
+        let sorter = seq::backend::<K>(engine.seq_kind());
+        let name = format!("localsort/{}/{}/n{n}", engine.tag(), K::NAME);
+        let Some(stats) = bench(&name, |_| {
+            let mut keys = base.clone();
+            sorter.sort(&mut keys);
+            keys.len()
+        }) else {
+            continue; // filtered out by BENCH_FILTER
+        };
+        cells.push(GridCell {
+            n,
+            domain: K::NAME,
+            engine,
+            keys_per_sec: n as f64 / stats.mean.as_secs_f64().max(1e-12),
+        });
+    }
+}
+
+fn grid_to_json(cells: &[GridCell]) -> Json {
+    let obj = |fields: Vec<(&str, Json)>| {
+        Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    };
+    obj(vec![
+        ("schema", Json::str(LOCALSORT_SCHEMA)),
+        (
+            "host",
+            obj(vec![
+                ("fingerprint", Json::str(fingerprint())),
+                ("threads", Json::num(threads() as f64)),
+            ]),
+        ),
+        ("bench", Json::str("uniform")),
+        (
+            "cells",
+            Json::Arr(
+                cells
+                    .iter()
+                    .map(|c| {
+                        obj(vec![
+                            ("n", Json::num(c.n as f64)),
+                            ("domain", Json::str(c.domain)),
+                            ("engine", Json::str(c.engine.tag())),
+                            ("keys_per_sec", Json::num(c.keys_per_sec)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Baseline gate.  Always: schema tag + structural validity, plus the
+/// IPS-vs-radix acceptance floor on this run's cells when the n = 10⁶
+/// u64 pair was measured.  Additionally, when the baseline's host
+/// fingerprint matches this host: fail on a >15% keys/sec regression in
+/// any cell present in both runs.
+fn grid_compare(path: &str, cells: &[GridCell]) -> Result<(), String> {
+    let text =
+        std::fs::read_to_string(path).map_err(|e| format!("cannot read baseline {path}: {e}"))?;
+    let doc = Json::parse(&text).map_err(|e| format!("baseline {path}: {e}"))?;
+    if doc.get("schema").and_then(Json::as_str) != Some(LOCALSORT_SCHEMA) {
+        return Err(format!("baseline {path}: schema tag is not {LOCALSORT_SCHEMA:?}"));
+    }
+    let base_cells = doc
+        .get("cells")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| format!("baseline {path}: missing cells array"))?;
+    for c in base_cells {
+        if c.get("n").and_then(Json::as_f64).is_none()
+            || c.get("domain").and_then(Json::as_str).is_none()
+            || c.get("engine").and_then(Json::as_str).is_none()
+            || c.get("keys_per_sec").and_then(Json::as_f64).is_none()
+        {
+            return Err(format!(
+                "baseline {path}: cell lacks n/domain/engine/keys_per_sec"
+            ));
+        }
+    }
+
+    // Acceptance: IPS ≥ 0.95× LSD radix at n = 10⁶ on u64 (the 5%
+    // tolerance absorbs run-to-run noise; "no slower" is the claim).
+    let find = |engine: LocalSortEngine| {
+        cells
+            .iter()
+            .find(|c| c.n == ACCEPT_N && c.domain == ACCEPT_DOMAIN && c.engine == engine)
+    };
+    if let (Some(ips), Some(radix)) =
+        (find(LocalSortEngine::Ips), find(LocalSortEngine::LsdRadix))
+    {
+        if ips.keys_per_sec < 0.95 * radix.keys_per_sec {
+            return Err(format!(
+                "ips {:.0} keys/sec slower than lsd-radix {:.0} at n={ACCEPT_N} {ACCEPT_DOMAIN}",
+                ips.keys_per_sec, radix.keys_per_sec
+            ));
+        }
+        println!(
+            "acceptance cell n={ACCEPT_N} {ACCEPT_DOMAIN}: ips {:.2}x lsd-radix",
+            ips.keys_per_sec / radix.keys_per_sec
+        );
+    }
+
+    let base_fp = doc
+        .get("host")
+        .and_then(|h| h.get("fingerprint"))
+        .and_then(Json::as_str)
+        .unwrap_or("<missing>");
+    if base_fp != fingerprint() {
+        println!(
+            "baseline host {:?} differs from this host {:?}: schema-only validation \
+             (refresh the numbers with ./ci.sh --bench-baseline)",
+            base_fp,
+            fingerprint()
+        );
+        return Ok(());
+    }
+    for bc in base_cells {
+        let bn = bc.get("n").and_then(Json::as_u64).unwrap_or(0) as usize;
+        let bd = bc.get("domain").and_then(Json::as_str).unwrap_or("");
+        let be = bc.get("engine").and_then(Json::as_str).unwrap_or("");
+        let Some(fresh) =
+            cells.iter().find(|c| c.n == bn && c.domain == bd && c.engine.tag() == be)
+        else {
+            continue;
+        };
+        let base = bc.get("keys_per_sec").and_then(Json::as_f64).unwrap_or(0.0);
+        if base > 0.0 && fresh.keys_per_sec < 0.85 * base {
+            return Err(format!(
+                "local-sort regression at n={bn} {bd}/{be}: \
+                 {:.0} keys/sec vs baseline {base:.0} (>15% below)",
+                fresh.keys_per_sec
+            ));
+        }
+    }
+    println!("local-sort baseline OK (host match, no cell regressed >15%)");
+    Ok(())
+}
+
 fn main() {
-    let smoke = std::env::args().any(|a| a == "--quick-smoke");
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--quick-smoke");
+    let opt = |name: &str| {
+        args.iter()
+            .position(|a| a == name)
+            .and_then(|i| args.get(i + 1))
+            .cloned()
+    };
+    let json_out = opt("--json");
+    let baseline = opt("--compare");
     if smoke {
         // Reuse the harness's fast profile (1 warm-up, 3 iterations).
         std::env::set_var("BENCH_FAST", "1");
@@ -48,6 +233,25 @@ fn main() {
         keys.sort_unstable();
         keys[0]
     });
+    bench("seq/ipssort/1M", |_| {
+        let mut keys = base.clone();
+        seq::ipssort(&mut keys);
+        keys[0]
+    });
+
+    // --- local-sort engine grid (ROADMAP 5b regression gate) -------------
+    // Old-vs-new base case: every engine × every key domain × n, on the
+    // identical uniform input per (domain, n).  `--json` snapshots the
+    // grid; `--compare` arms the regression + acceptance gates against a
+    // committed baseline.
+    let grid_ns: &[usize] = if smoke { &[10_000] } else { &[10_000, 100_000, 1_000_000] };
+    let mut grid_cells: Vec<GridCell> = Vec::new();
+    for &gn in grid_ns {
+        grid_domain::<i32>(gn, &mut grid_cells);
+        grid_domain::<u64>(gn, &mut grid_cells);
+        grid_domain::<F64>(gn, &mut grid_cells);
+        grid_domain::<Record>(gn, &mut grid_cells);
+    }
 
     // --- p-way merge -------------------------------------------------------
     let runs: Vec<Vec<i32>> = (0..16)
@@ -143,6 +347,19 @@ fn main() {
             bench("xla/local_sort/64K", |_| rt.sort(&keys).unwrap().len());
         }
         Err(e) => eprintln!("skipping xla bench: {e}"),
+    }
+
+    // --- local-sort baseline I/O ---------------------------------------------
+    if let Some(path) = &json_out {
+        std::fs::write(path, grid_to_json(&grid_cells).render())
+            .unwrap_or_else(|e| panic!("cannot write {path}: {e}"));
+        println!("wrote {path}");
+    }
+    if let Some(path) = &baseline {
+        if let Err(msg) = grid_compare(path, &grid_cells) {
+            eprintln!("local-sort gate failed: {msg}");
+            std::process::exit(1);
+        }
     }
 }
 

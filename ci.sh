@@ -1,6 +1,6 @@
 #!/usr/bin/env bash
 # Tier-1 gate plus hygiene checks.
-# Usage: ./ci.sh [--check-xla|--check-links|--conformance|--planner-smoke|--bench-baseline]
+# Usage: ./ci.sh [--check-xla|--check-links|--conformance|--planner-smoke|--bench-baseline|--localsort-fuzz]
 #
 # This is what .github/workflows/ci.yml runs; keep it the single source
 # of truth for "does the repo pass".
@@ -26,9 +26,16 @@
 #                         p/cheap L, deeper topology under punishing L.
 #   ./ci.sh --bench-baseline
 #                         run the full throughput grid (engine pool vs
-#                         per-job spin-up) and rewrite BENCH_baseline.json
-#                         with this host's numbers + fingerprint, arming
-#                         the >15% regression gate in the default run.
+#                         per-job spin-up) and the full local-sort engine
+#                         grid, rewriting BENCH_baseline.json and
+#                         BENCH_hotpaths.json with this host's numbers +
+#                         fingerprint, arming the >15% regression gates
+#                         in the default run.
+#   ./ci.sh --localsort-fuzz
+#                         release-mode differential sweep of the IPS
+#                         local-sort engine against quicksort/radixsort
+#                         (all domains × distributions × adversarial
+#                         shapes; also runs in the --conformance job).
 set -euo pipefail
 cd "$(dirname "$0")"
 
@@ -76,12 +83,23 @@ if [[ "${1:-}" == "--planner-smoke" ]]; then
     exit 0
 fi
 
+localsort_fuzz() {
+    echo "== localsort-fuzz: IPS vs quicksort/radixsort differential sweep (release) =="
+    cargo test --release --test localsort_diff -- --nocapture
+}
+
+if [[ "${1:-}" == "--localsort-fuzz" ]]; then
+    localsort_fuzz
+    exit 0
+fi
+
 if [[ "${1:-}" == "--conformance" ]]; then
     echo "== conformance: simulator-backend property suite (release) =="
     cargo test --release --test conformance -- --nocapture
     planner_smoke
     echo "== planner acceptance: chosen topology within 10% of exhaustive minimum =="
     cargo test --release --test planner_acceptance -- --nocapture
+    localsort_fuzz
     exit 0
 fi
 
@@ -90,7 +108,9 @@ if [[ "${1:-}" == "--bench-baseline" ]]; then
     # cargo runs bench binaries with the package dir as cwd; hand it an
     # absolute path so the baseline lands at the repo root.
     cargo bench --bench throughput -- --json "$(pwd)/BENCH_baseline.json"
-    echo "BENCH_baseline.json refreshed for this host; commit it to arm the regression gate"
+    echo "== hot_paths: full local-sort grid, rewriting BENCH_hotpaths.json =="
+    cargo bench --bench hot_paths -- --json "$(pwd)/BENCH_hotpaths.json"
+    echo "baselines refreshed for this host; commit both JSON files to arm the regression gates"
     exit 0
 fi
 
@@ -146,8 +166,12 @@ RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 
 check_links
 
-echo "== bench smoke-run: hot_paths --quick-smoke =="
-cargo bench --bench hot_paths -- --quick-smoke
+echo "== bench smoke-run: hot_paths --quick-smoke + local-sort baseline gate =="
+# Schema-validates BENCH_hotpaths.json and — when the committed baseline
+# carries this host's fingerprint — fails on a >15% keys/sec regression
+# in any shared local-sort grid cell.  The ips-vs-lsd-radix acceptance
+# floor applies on full (non-smoke) runs, which measure the n=1e6 cells.
+cargo bench --bench hot_paths -- --quick-smoke --compare "$(pwd)/BENCH_hotpaths.json"
 
 echo "== bench smoke-run: throughput --quick-smoke + baseline gate =="
 # Schema-validates BENCH_baseline.json, enforces the pool-speedup floor

@@ -300,7 +300,7 @@ pub fn measure_typed<K: StudyKey>(
     calib: &Calibration,
 ) -> RunRecord {
     assert_eq!(cfg.p, calib.p, "calibration/config processor mismatch");
-    let sort_cfg = SortConfig::default().with_seq(sweep.seq);
+    let sort_cfg = SortConfig::default().with_local_sort(cfg.local_sort);
     let host = calib.params();
 
     // Resolve the cell's topology choice up front so every warmup and
@@ -540,6 +540,7 @@ mod tests {
             p: 64,
             backend: Backend::Sim,
             topology: TopologyChoice::Default,
+            local_sort: crate::sort::LocalSortEngine::Quicksort,
         };
         let rec = measure_typed::<i32>(&cfg, &sweep, &calib);
         assert_eq!(rec.backend, "sim");
@@ -551,6 +552,26 @@ mod tests {
         let rec2 = measure_typed::<i32>(&cfg, &sweep, &calib);
         assert_eq!(rec.wall_us.mean, rec2.wall_us.mean);
         assert_eq!(rec.wall_us.stddev, rec2.wall_us.stddev);
+    }
+
+    #[test]
+    fn ips_cell_runs_and_labels_with_engine_suffix() {
+        let sweep = quick_sweep();
+        let calib = Calibration::from_params(&crate::bsp::params::cray_t3d(4));
+        let cfg = RunConfig {
+            algo: AlgoVariant::Det,
+            bench: Benchmark::Uniform,
+            domain: KeyDomain::U64,
+            n: 1 << 12,
+            p: 4,
+            backend: Backend::Sim,
+            topology: TopologyChoice::Default,
+            local_sort: crate::sort::LocalSortEngine::Ips,
+        };
+        let rec = measure_typed::<u64>(&cfg, &sweep, &calib);
+        // The engine rides the record's paper label: [DSI].
+        assert_eq!(rec.algo_label, "[DSI]");
+        assert!(rec.wall_us.mean > 0.0 && rec.predicted_us > 0.0);
     }
 
     #[test]
@@ -566,6 +587,7 @@ mod tests {
             p: 64,
             backend: Backend::Sim,
             topology: TopologyChoice::Auto,
+            local_sort: crate::sort::LocalSortEngine::Quicksort,
         };
         let rec = measure_typed::<i32>(&cfg, &sweep, &calib);
         let label = rec.topology.expect("depth-k cells record their topology");
@@ -599,6 +621,7 @@ mod tests {
             p: 4,
             backend: Backend::Threaded,
             topology: TopologyChoice::Default,
+            local_sort: crate::sort::LocalSortEngine::Quicksort,
         };
         let rec = measure_typed::<i32>(&cfg, &sweep, &calib);
         let priced: Vec<&PhaseStat> =
@@ -631,6 +654,7 @@ mod tests {
             p: 4,
             backend: Backend::Threaded,
             topology: TopologyChoice::Default,
+            local_sort: crate::sort::LocalSortEngine::Quicksort,
         };
         let rec = measure_config(&cfg, &sweep, &calib);
         assert_eq!(rec.domain, "u64");

@@ -7,8 +7,7 @@
 
 use crate::bsp::{Backend, BspParams, Topology, MAX_TOPOLOGY_DEPTH};
 use crate::gen::Benchmark;
-use crate::seq::SeqSortKind;
-use crate::sort::SortConfig;
+use crate::sort::{LocalSortEngine, SortConfig};
 use crate::util::cli::{Args, CliError};
 
 use super::calibrate::ProbePlan;
@@ -307,6 +306,8 @@ pub struct RunConfig {
     pub backend: Backend,
     /// Topology choice for this cell (only the depth-k variants read it).
     pub topology: TopologyChoice,
+    /// Local-sort engine for the per-processor base case.
+    pub local_sort: LocalSortEngine,
 }
 
 /// A full sweep: the cross-product of algorithms × benchmarks × key
@@ -338,8 +339,10 @@ pub struct SweepSpec {
     /// `--quick` preset uses one to ride a sim-backend `det @ p = 256`
     /// configuration along with its threaded grid.
     pub extras: Vec<RunConfig>,
-    /// Sequential backend for all runs.
-    pub seq: SeqSortKind,
+    /// Local-sort engines crossed with the grid (`[Quicksort]` by
+    /// default; `--local-sorts quicksort,lsd-radix,ips` sweeps the
+    /// base case, which shows up in each record's `algo_label` suffix).
+    pub local_sorts: Vec<LocalSortEngine>,
     /// Unrecorded warm-up runs per configuration.
     pub warmup: usize,
     /// Recorded repetitions per configuration (distinct seeds).
@@ -377,8 +380,9 @@ impl SweepSpec {
                 p: 256,
                 backend: Backend::Sim,
                 topology: TopologyChoice::Default,
+                local_sort: LocalSortEngine::Quicksort,
             }],
-            seq: SeqSortKind::Quick,
+            local_sorts: vec![LocalSortEngine::Quicksort],
             warmup: 1,
             reps: 2,
             seed: 0x0BEE,
@@ -399,7 +403,7 @@ impl SweepSpec {
             backends: vec![Backend::Threaded],
             topologies: vec![TopologyChoice::Default],
             extras: Vec::new(),
-            seq: SeqSortKind::Quick,
+            local_sorts: vec![LocalSortEngine::Quicksort],
             warmup: 1,
             reps: 3,
             seed: 0x0BEE,
@@ -410,9 +414,10 @@ impl SweepSpec {
 
     /// Build a sweep from CLI arguments: `--quick` selects the preset,
     /// otherwise the full study; list options (`--algos det,ran`,
-    /// `--benches U,DD`, `--domains i32,u64`, `--ns`, `--ps`) and the
-    /// scalar knobs (`--warmup`, `--reps`, `--seed`, `--tag`, `--seq`)
-    /// override either base.
+    /// `--benches U,DD`, `--domains i32,u64`, `--local-sorts
+    /// quicksort,ips`, `--ns`, `--ps`) and the scalar knobs
+    /// (`--warmup`, `--reps`, `--seed`, `--tag`, `--seq`) override
+    /// either base.
     pub fn from_args(args: &Args) -> Result<SweepSpec, CliError> {
         let mut spec = if args.flag("quick") {
             SweepSpec::quick()
@@ -447,9 +452,21 @@ impl SweepSpec {
             spec.topologies =
                 split_list(v).map(TopologyChoice::parse).collect::<Result<_, _>>()?;
         }
+        if let Some(v) = args.get("local-sorts") {
+            spec.local_sorts = split_list(v)
+                .map(|s| {
+                    LocalSortEngine::parse(s).ok_or_else(|| {
+                        CliError(format!(
+                            "unknown local-sort engine '{s}' (expected one of \
+                             quicksort, lsd-radix, ips)"
+                        ))
+                    })
+                })
+                .collect::<Result<_, _>>()?;
+        }
         // Any explicit grid override replaces the preset's extra cells:
         // the user asked for exactly this cross-product.
-        if ["algos", "benches", "domains", "backends", "topologies", "ns", "ps"]
+        if ["algos", "benches", "domains", "backends", "topologies", "local-sorts", "ns", "ps"]
             .iter()
             .any(|k| args.get(k).is_some())
         {
@@ -463,12 +480,12 @@ impl SweepSpec {
         if let Some(t) = args.get("tag") {
             spec.tag = t.to_string();
         }
+        // Historical single-engine spelling: `--seq radix` pins the
+        // whole sweep to one engine (now including `ips`).
         if let Some(s) = args.get("seq") {
-            spec.seq = match s {
-                "quick" | "q" => SeqSortKind::Quick,
-                "radix" | "r" => SeqSortKind::Radix,
-                other => return Err(CliError(format!("unknown --seq {other}"))),
-            };
+            let engine = LocalSortEngine::parse(s)
+                .ok_or_else(|| CliError(format!("unknown --seq {s}")))?;
+            spec.local_sorts = vec![engine];
         }
         spec.validate().map_err(CliError)?;
         Ok(spec)
@@ -488,6 +505,9 @@ impl SweepSpec {
         }
         if self.topologies.is_empty() {
             return Err("--topologies must be non-empty".into());
+        }
+        if self.local_sorts.is_empty() {
+            return Err("--local-sorts must be non-empty".into());
         }
         for choice in &self.topologies {
             if let TopologyChoice::Fixed(t) = choice {
@@ -532,10 +552,12 @@ impl SweepSpec {
     }
 
     /// The cross-product, in deterministic
-    /// (algo, bench, domain, n, p, backend, topology) nesting order,
-    /// followed by the [`SweepSpec::extras`] cells verbatim.  The
-    /// topology axis only multiplies the depth-k variants; every other
-    /// algorithm gets exactly one cell with [`TopologyChoice::Default`].
+    /// (algo, bench, domain, n, p, backend, topology, local_sort)
+    /// nesting order, followed by the [`SweepSpec::extras`] cells
+    /// verbatim.  The topology axis only multiplies the depth-k
+    /// variants; every other algorithm gets exactly one cell with
+    /// [`TopologyChoice::Default`].  The local-sort axis multiplies
+    /// every variant — all eleven share the Ph2 base case.
     pub fn configs(&self) -> Vec<RunConfig> {
         let mut out = Vec::new();
         for &algo in &self.algos {
@@ -551,15 +573,18 @@ impl SweepSpec {
                         for &p in &self.ps {
                             for &backend in &self.backends {
                                 for &topology in topologies {
-                                    out.push(RunConfig {
-                                        algo,
-                                        bench,
-                                        domain,
-                                        n,
-                                        p,
-                                        backend,
-                                        topology,
-                                    });
+                                    for &local_sort in &self.local_sorts {
+                                        out.push(RunConfig {
+                                            algo,
+                                            bench,
+                                            domain,
+                                            n,
+                                            p,
+                                            backend,
+                                            topology,
+                                            local_sort,
+                                        });
+                                    }
                                 }
                             }
                         }
@@ -659,6 +684,45 @@ mod tests {
         spec.ps = vec![8, 4];
         let err = spec.validate().unwrap_err();
         assert!(err.contains("2x4"), "{err}");
+    }
+
+    #[test]
+    fn local_sort_axis_multiplies_every_cell() {
+        let mut spec = SweepSpec::quick();
+        spec.extras.clear();
+        let base = spec.configs().len();
+        spec.local_sorts = crate::sort::ALL_ENGINES.to_vec();
+        assert_eq!(spec.configs().len(), 3 * base);
+        for engine in crate::sort::ALL_ENGINES {
+            assert!(spec.configs().iter().any(|c| c.local_sort == engine));
+        }
+        spec.local_sorts.clear();
+        assert!(spec.validate().is_err());
+    }
+
+    #[test]
+    fn local_sorts_cli_axis_and_seq_alias() {
+        let args = Args::parse(
+            sv(&["experiment", "--quick", "--local-sorts", "quicksort,ips"]),
+            &["local-sorts"],
+        )
+        .unwrap();
+        let spec = SweepSpec::from_args(&args).unwrap();
+        assert_eq!(
+            spec.local_sorts,
+            vec![LocalSortEngine::Quicksort, LocalSortEngine::Ips]
+        );
+        // Grid override drops the preset's extra cell: 24 base × 2.
+        assert_eq!(spec.configs().len(), 48);
+
+        let args =
+            Args::parse(sv(&["experiment", "--quick", "--seq", "ips"]), &["seq"]).unwrap();
+        let spec = SweepSpec::from_args(&args).unwrap();
+        assert_eq!(spec.local_sorts, vec![LocalSortEngine::Ips]);
+
+        let args =
+            Args::parse(sv(&["experiment", "--quick", "--seq", "bogo"]), &["seq"]).unwrap();
+        assert!(SweepSpec::from_args(&args).is_err());
     }
 
     #[test]

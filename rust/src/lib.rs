@@ -133,6 +133,6 @@ pub mod prelude {
     pub use crate::experiment::spec::{AlgoVariant, KeyDomain, TopologyChoice};
     pub use crate::gen::Benchmark;
     pub use crate::runtime::RuntimeError;
-    pub use crate::sort::SortConfig;
+    pub use crate::sort::{LocalSortEngine, SortConfig};
     pub use crate::sorter::{DomainOutputs, SortHandle, SortJob, SortRun, Sorter};
 }

@@ -16,11 +16,11 @@
 //!
 //! Common flags: `--max-n <keys>`, `--max-p <procs>`, `--full`,
 //! `--reps <k>`, `--seed <s>`; `sort` adds `--algo`, `--bench`, `--n`,
-//! `--p`, `--domain`, `--jobs`, `--seq`, `--no-dup`, and the
-//! multi-level topology flags
+//! `--p`, `--domain`, `--jobs`, `--local-sort` (alias `--seq`),
+//! `--no-dup`, and the multi-level topology flags
 //! `--groups`, `--topology`, `--levels auto`; `experiment` adds
 //! `--quick`, `--algos`, `--benches`, `--domains`, `--ns`, `--ps`,
-//! `--topologies`, `--warmup`, `--tag`, `--out`.
+//! `--topologies`, `--local-sorts`, `--warmup`, `--tag`, `--out`.
 
 use std::path::Path;
 
@@ -30,8 +30,7 @@ use bsp_sort::experiment::{self, SweepSpec};
 use bsp_sort::gen::Benchmark;
 use bsp_sort::metrics::RunReport;
 use bsp_sort::prelude::{KeyDomain, SortJob, SortRun, Sorter, TopologyChoice};
-use bsp_sort::seq::SeqSortKind;
-use bsp_sort::sort::{plan, DuplicatePolicy, SortConfig};
+use bsp_sort::sort::{plan, DuplicatePolicy, LocalSortEngine, SortConfig};
 use bsp_sort::tables::{self, runner, TableOpts};
 use bsp_sort::util::cli::Args;
 use bsp_sort::util::fmt_secs;
@@ -41,7 +40,7 @@ const VALUE_OPTS: &[&str] = &[
     "max-n", "max-p", "reps", "seed", "algo", "bench", "n", "p", "seq", "table",
     "algos", "benches", "domains", "ns", "ps", "warmup", "tag", "out",
     "backend", "backends", "groups", "topology", "levels", "topologies",
-    "domain", "jobs",
+    "domain", "jobs", "local-sort", "local-sorts",
 ];
 
 fn main() {
@@ -125,12 +124,20 @@ fn run(cmd: &str, args: &Args) -> Result<(), Box<dyn std::error::Error>> {
             // --jobs N submits N seed-varied copies to the engine pool
             // concurrently (service mode) and reports throughput.
             let jobs: usize = args.get_parsed("jobs", 1)?;
-            let seq = match args.get("seq").unwrap_or("quick") {
-                "quick" | "q" => SeqSortKind::Quick,
-                "radix" | "r" => SeqSortKind::Radix,
-                other => return Err(format!("unknown --seq {other}").into()),
-            };
-            let mut cfg = SortConfig::default().with_seq(seq);
+            // --local-sort is the canonical spelling for the
+            // per-processor base case (quicksort | lsd-radix | ips);
+            // --seq remains as the historical alias.
+            let engine_tag = args
+                .get("local-sort")
+                .or_else(|| args.get("seq"))
+                .unwrap_or("quicksort");
+            let engine = LocalSortEngine::parse(engine_tag).ok_or_else(|| {
+                format!(
+                    "unknown local-sort engine '{engine_tag}' \
+                     (expected one of quicksort, lsd-radix, ips)"
+                )
+            })?;
+            let mut cfg = SortConfig::default().with_local_sort(engine);
             if args.flag("no-dup") {
                 cfg = cfg.with_dup(DuplicatePolicy::Off);
             }
@@ -385,13 +392,15 @@ USAGE:
                        helman-det|helman-ran|psrs
                 --bench U|G|B|2-G|S|DD|WR --n 8388608 --p 64
                 [--domain i32|u64|f64|record] [--jobs N]
-                [--seq quick|radix] [--no-dup] [--backend threaded|sim]
+                [--local-sort quicksort|lsd-radix|ips] [--no-dup]
+                [--backend threaded|sim]
                 [--groups K | --topology K1xK2x... | --levels auto]
   bsp-sort experiment [--quick] [--algos det,ran,...] [--benches U,DD,...]
                       [--domains i32,u64,f64,record] [--ns N1,N2] [--ps P1,P2]
                       [--backends threaded,sim]
                       [--topologies default,auto,8x4x4]
-                      [--warmup W] [--reps R] [--seed S] [--seq quick|radix]
+                      [--local-sorts quicksort,lsd-radix,ips]
+                      [--warmup W] [--reps R] [--seed S]
                       [--tag T] [--out DIR]
   bsp-sort predict | validate-g | ablate-dup
   bsp-sort selftest
@@ -406,6 +415,13 @@ reused, so repeat sorts skip thread spin-up.  `sort --jobs N` submits
 N seed-varied copies concurrently through the pool's bounded queue
 (admission control rejects beyond the queue depth with a structured
 error) and reports jobs/sec; `--domain` picks the key domain per job.
+
+--local-sort picks the per-processor base case every BSP variant falls
+back to once keys are routed: quicksort ([.SQ]), LSD radix ([.SR]), or
+ips ([.SI]) — the in-place block-partitioning MSD engine (sampling →
+classification → block permutation → cleanup, see docs/ALGORITHMS.md).
+`experiment --local-sorts a,b` sweeps the engines as a grid axis, and
+`--seq quick|radix|ips` is kept as the historical single-engine alias.
 
 `experiment` calibrates the host's (g, L) and operation rate from
 micro-probes, runs the sweep cross-product with warmup + repetitions,

@@ -2,6 +2,7 @@
 //! merge kernels and binary searches the BSP algorithms run per
 //! processor, plus the paper's §1.1 operation-charging policy.
 
+pub mod ips;
 pub mod merge;
 pub mod ops;
 pub mod quicksort;
@@ -10,28 +11,33 @@ pub mod search;
 
 use crate::key::{Key, RadixKey};
 
+pub use ips::ipssort;
 pub use merge::{merge2, multiway_merge, multiway_merge_owned, multiway_merge_slices};
 pub use quicksort::quicksort;
 pub use radixsort::radixsort;
 
 /// Which sequential sorting backend a variant uses.
 ///
-/// The paper studies `[.SQ]` (quicksort) and `[.SR]` (radixsort); `Xla`
-/// is this repo's addition — the AOT-compiled Pallas bitonic network run
-/// through PJRT (runtime::XlaSort), exercised by examples and tests.
+/// The paper studies `[.SQ]` (quicksort) and `[.SR]` (radixsort); `Ips`
+/// (the in-place block-partitioning MSD radix engine, `seq::ips`) and
+/// `Xla` (the AOT-compiled Pallas bitonic network run through PJRT,
+/// runtime::XlaSort) are this repo's additions.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum SeqSortKind {
     Quick,
     Radix,
+    Ips,
     Xla,
 }
 
 impl SeqSortKind {
-    /// One-letter suffix used in variant names (\[DSQ\], \[DSR\], \[DSX\]).
+    /// One-letter suffix used in variant names (\[DSQ\], \[DSR\],
+    /// \[DSI\], \[DSX\]).
     pub fn suffix(&self) -> char {
         match self {
             SeqSortKind::Quick => 'Q',
             SeqSortKind::Radix => 'R',
+            SeqSortKind::Ips => 'I',
             SeqSortKind::Xla => 'X',
         }
     }
@@ -41,6 +47,10 @@ impl SeqSortKind {
         match self {
             SeqSortKind::Quick => ops::sort_charge(n),
             SeqSortKind::Radix => ops::radix_charge(n),
+            // Kind-level charge prices the 4-digit (32-bit) reference
+            // image; `IpsSorter::charge` scales by the domain's actual
+            // pass count, exactly like the Radix pair above.
+            SeqSortKind::Ips => ops::ips_charge(n),
             // The oblivious network performs n lg^2 n / 2 compare-
             // exchanges; on the T3D model we still charge its *work* —
             // the backend is for the TPU path where the VPU amortizes it.
@@ -97,12 +107,32 @@ impl<K: RadixKey> SeqSorter<K> for RadixSorter {
     }
 }
 
+/// In-place block-partitioning MSD radix backend ([.SI] variants) —
+/// domains with a radix image (see [`ips`]).
+pub struct IpsSorter;
+
+impl<K: RadixKey> SeqSorter<K> for IpsSorter {
+    fn sort(&self, keys: &mut Vec<K>) {
+        ips::ipssort(keys);
+    }
+    fn charge(&self, n: usize) -> f64 {
+        // Unlike LSD radix, the MSD recursion depth tracks the
+        // distinguishing prefix (≈ lg n bits), not the image width;
+        // the domain's pass count only caps it (`ops::ips_levels`).
+        ops::ips_charge_for(n, K::RADIX_PASSES)
+    }
+    fn name(&self) -> &'static str {
+        "ipssort"
+    }
+}
+
 /// Obtain a boxed backend for a kind (Xla requires the runtime and is
 /// constructed in `runtime::xla_sort`).
 pub fn backend<K: RadixKey>(kind: SeqSortKind) -> Box<dyn SeqSorter<K>> {
     match kind {
         SeqSortKind::Quick => Box::new(QuickSorter),
         SeqSortKind::Radix => Box::new(RadixSorter),
+        SeqSortKind::Ips => Box::new(IpsSorter),
         SeqSortKind::Xla => panic!("XlaSort requires runtime::xla_sort::XlaSorter::new()"),
     }
 }
@@ -113,13 +143,24 @@ mod tests {
 
     #[test]
     fn backends_sort_correctly() {
-        for kind in [SeqSortKind::Quick, SeqSortKind::Radix] {
+        for kind in [SeqSortKind::Quick, SeqSortKind::Radix, SeqSortKind::Ips] {
             let b = backend(kind);
             let mut keys = vec![5, -3, 9, 0, 5, -3];
             b.sort(&mut keys);
             assert_eq!(keys, vec![-3, -3, 0, 5, 5, 9], "{}", b.name());
             assert!(b.charge(1024) > 0.0);
         }
+    }
+
+    #[test]
+    fn ips_charge_caps_levels_at_the_domain_width() {
+        // At 1024 keys the distinguishing prefix is 10 bits → 2 levels
+        // on every domain with ≥ 2 digits; the i32/u64 charges agree
+        // (LSD radix, by contrast, doubles from 4 to 8 passes).
+        let i32_charge = SeqSorter::<i32>::charge(&IpsSorter, 1024);
+        let u64_charge = SeqSorter::<u64>::charge(&IpsSorter, 1024);
+        assert_eq!(i32_charge, ops::ips_charge_for(1024, 4));
+        assert_eq!(i32_charge, u64_charge);
     }
 
     #[test]
@@ -136,6 +177,7 @@ mod tests {
     fn suffixes() {
         assert_eq!(SeqSortKind::Quick.suffix(), 'Q');
         assert_eq!(SeqSortKind::Radix.suffix(), 'R');
+        assert_eq!(SeqSortKind::Ips.suffix(), 'I');
         assert_eq!(SeqSortKind::Xla.suffix(), 'X');
     }
 }

@@ -10,7 +10,7 @@
 use crate::bsp::engine::BspScope;
 use crate::key::{Key, RadixKey};
 use crate::primitives::bitonic::{self, BitonicItem};
-use crate::seq::{QuickSorter, RadixSorter, SeqSortKind, SeqSorter};
+use crate::seq::{IpsSorter, QuickSorter, RadixSorter, SeqSortKind, SeqSorter};
 
 use super::common::{ProcResult, PH2, PH5};
 use super::config::SortConfig;
@@ -27,6 +27,7 @@ where
     let sorter: &dyn SeqSorter<K> = match cfg.seq {
         SeqSortKind::Quick => &QuickSorter,
         SeqSortKind::Radix => &RadixSorter,
+        SeqSortKind::Ips => &IpsSorter,
         SeqSortKind::Xla => panic!("use sort_bsi_with for a custom backend"),
     };
     sort_bsi_with(ctx, &mut local, cfg, sorter)

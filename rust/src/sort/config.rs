@@ -16,6 +16,73 @@ use crate::seq::SeqSortKind;
 
 pub use crate::bsp::Backend;
 
+/// Selectable local-sort engine for the per-processor base case —
+/// the user-facing face of [`SeqSortKind`] (which additionally carries
+/// the runtime-only `Xla` backend that cannot be chosen from a config
+/// or the CLI).  Threaded through `SortJob::local_sort`, the CLI's
+/// `sort --local-sort`, and the experiment sweep's `--local-sorts`
+/// axis.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, Default)]
+pub enum LocalSortEngine {
+    /// `seq::quicksort` — the paper's `[.SQ]` comparison base case.
+    #[default]
+    Quicksort,
+    /// `seq::radixsort` — the paper's `[.SR]` LSD counting sort.
+    LsdRadix,
+    /// `seq::ips` — the in-place block-partitioning MSD engine
+    /// (`[.SI]`, this repo's addition).
+    Ips,
+}
+
+/// All selectable engines, in sweep order.
+pub const ALL_ENGINES: [LocalSortEngine; 3] = [
+    LocalSortEngine::Quicksort,
+    LocalSortEngine::LsdRadix,
+    LocalSortEngine::Ips,
+];
+
+impl LocalSortEngine {
+    /// CLI/report tag (`quicksort` | `lsd-radix` | `ips`).
+    pub fn tag(&self) -> &'static str {
+        match self {
+            LocalSortEngine::Quicksort => "quicksort",
+            LocalSortEngine::LsdRadix => "lsd-radix",
+            LocalSortEngine::Ips => "ips",
+        }
+    }
+
+    /// Parse a CLI spelling; accepts the tags plus the historical
+    /// `--seq` spellings (`quick`/`q`, `radix`/`r`, `i`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "quicksort" | "quick" | "q" => Some(LocalSortEngine::Quicksort),
+            "lsd-radix" | "radix" | "r" => Some(LocalSortEngine::LsdRadix),
+            "ips" | "i" => Some(LocalSortEngine::Ips),
+            _ => None,
+        }
+    }
+
+    /// The `SeqSortKind` this engine selects in [`SortConfig::seq`].
+    pub fn seq_kind(&self) -> SeqSortKind {
+        match self {
+            LocalSortEngine::Quicksort => SeqSortKind::Quick,
+            LocalSortEngine::LsdRadix => SeqSortKind::Radix,
+            LocalSortEngine::Ips => SeqSortKind::Ips,
+        }
+    }
+
+    /// Inverse of [`Self::seq_kind`]; `None` for the runtime-only
+    /// `Xla` backend.
+    pub fn from_seq(kind: SeqSortKind) -> Option<Self> {
+        match kind {
+            SeqSortKind::Quick => Some(LocalSortEngine::Quicksort),
+            SeqSortKind::Radix => Some(LocalSortEngine::LsdRadix),
+            SeqSortKind::Ips => Some(LocalSortEngine::Ips),
+            SeqSortKind::Xla => None,
+        }
+    }
+}
+
 /// Transparent duplicate handling (§5.1.1) on or off.
 ///
 /// `Off` reproduces the ablation of §6.4 ("Had we disabled the code for
@@ -97,6 +164,12 @@ impl SortConfig {
         self
     }
 
+    /// Select the sequential backend by [`LocalSortEngine`] (the
+    /// config-selectable subset of [`SeqSortKind`]).
+    pub fn with_local_sort(self, engine: LocalSortEngine) -> Self {
+        self.with_seq(engine.seq_kind())
+    }
+
     /// Replace the duplicate policy.
     pub fn with_dup(mut self, dup: DuplicatePolicy) -> Self {
         self.dup = dup;
@@ -147,5 +220,23 @@ mod tests {
             cfg.with_seq(SeqSortKind::Radix).variant_name(false),
             "[RSR]"
         );
+        assert_eq!(
+            cfg.with_local_sort(LocalSortEngine::Ips).variant_name(true),
+            "[DSI]"
+        );
+    }
+
+    #[test]
+    fn engine_tags_roundtrip_through_parse_and_seq_kind() {
+        for engine in ALL_ENGINES {
+            assert_eq!(LocalSortEngine::parse(engine.tag()), Some(engine));
+            assert_eq!(LocalSortEngine::from_seq(engine.seq_kind()), Some(engine));
+        }
+        // Historical --seq spellings keep working.
+        assert_eq!(LocalSortEngine::parse("quick"), Some(LocalSortEngine::Quicksort));
+        assert_eq!(LocalSortEngine::parse("radix"), Some(LocalSortEngine::LsdRadix));
+        assert_eq!(LocalSortEngine::parse("i"), Some(LocalSortEngine::Ips));
+        assert_eq!(LocalSortEngine::parse("bogus"), None);
+        assert_eq!(LocalSortEngine::from_seq(SeqSortKind::Xla), None);
     }
 }

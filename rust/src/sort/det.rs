@@ -13,7 +13,7 @@
 use crate::bsp::engine::BspScope;
 use crate::bsp::params::BspParams;
 use crate::key::{Key, RadixKey};
-use crate::seq::{SeqSorter, SeqSortKind, QuickSorter, RadixSorter};
+use crate::seq::{IpsSorter, SeqSorter, SeqSortKind, QuickSorter, RadixSorter};
 
 use super::common::{self, ProcResult, PH2, PH3};
 use super::config::{Oversampling, SortConfig};
@@ -54,6 +54,7 @@ pub fn sort_det_bsp<K: RadixKey, S: BspScope<K>>(
     let sorter: &dyn SeqSorter<K> = match cfg.seq {
         SeqSortKind::Quick => &QuickSorter,
         SeqSortKind::Radix => &RadixSorter,
+        SeqSortKind::Ips => &IpsSorter,
         SeqSortKind::Xla => panic!("use sort_det_bsp_with for a custom backend"),
     };
     sort_det_bsp_with(ctx, params, &mut local, n_total, cfg, sorter)

@@ -17,7 +17,7 @@ use crate::bsp::engine::BspScope;
 use crate::bsp::msg::SampleRec;
 use crate::bsp::params::BspParams;
 use crate::key::{Key, RadixKey};
-use crate::seq::{QuickSorter, RadixSorter, SeqSortKind, SeqSorter};
+use crate::seq::{IpsSorter, QuickSorter, RadixSorter, SeqSortKind, SeqSorter};
 use crate::util::rng::SplitMix64;
 
 use super::common::{self, ProcResult, PH2, PH3};
@@ -58,6 +58,7 @@ pub fn sort_iran_bsp<K: RadixKey, S: BspScope<K>>(
     let sorter: &dyn SeqSorter<K> = match cfg.seq {
         SeqSortKind::Quick => &QuickSorter,
         SeqSortKind::Radix => &RadixSorter,
+        SeqSortKind::Ips => &IpsSorter,
         SeqSortKind::Xla => panic!("use sort_iran_bsp_with for a custom backend"),
     };
     sort_iran_bsp_with(ctx, params, &mut local, n_total, cfg, seed, sorter)

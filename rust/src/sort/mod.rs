@@ -60,7 +60,10 @@ pub mod plan;
 pub mod ran;
 
 pub use common::ProcResult;
-pub use config::{Backend, DuplicatePolicy, Oversampling, SampleSortMethod, SortConfig};
+pub use config::{
+    Backend, DuplicatePolicy, LocalSortEngine, Oversampling, SampleSortMethod, SortConfig,
+    ALL_ENGINES,
+};
 
 /// Which top-level algorithm to run (CLI / tables dispatch).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]

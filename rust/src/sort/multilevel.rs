@@ -54,7 +54,7 @@ use crate::bsp::msg::{Payload, SampleRec};
 use crate::bsp::params::BspParams;
 use crate::key::RadixKey;
 use crate::primitives::{broadcast, prefix};
-use crate::seq::{ops, search, QuickSorter, RadixSorter, SeqSortKind, SeqSorter};
+use crate::seq::{ops, search, IpsSorter, QuickSorter, RadixSorter, SeqSortKind, SeqSorter};
 use crate::util::rng::SplitMix64;
 
 use super::common::{self, ProcResult, PH1, PH2, PH3, PH4, PH5};
@@ -340,7 +340,8 @@ pub fn sort_deep_det<K: RadixKey, S: GroupedScope<K>>(
     let sorter: &dyn SeqSorter<K> = match cfg.seq {
         SeqSortKind::Quick => &QuickSorter,
         SeqSortKind::Radix => &RadixSorter,
-        SeqSortKind::Xla => panic!("the multi-level sorts support the Quick/Radix backends"),
+        SeqSortKind::Ips => &IpsSorter,
+        SeqSortKind::Xla => panic!("the multi-level sorts support the Quick/Radix/Ips backends"),
     };
 
     // --- Ph2: local sort (deeper levels re-sort their received

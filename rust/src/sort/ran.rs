@@ -17,7 +17,7 @@ use crate::bsp::msg::{Payload, SampleRec};
 use crate::bsp::params::BspParams;
 use crate::key::RadixKey;
 use crate::primitives::broadcast;
-use crate::seq::{ops, QuickSorter, RadixSorter, SeqSortKind, SeqSorter};
+use crate::seq::{ops, IpsSorter, QuickSorter, RadixSorter, SeqSortKind, SeqSorter};
 use crate::util::rng::SplitMix64;
 
 use super::common::{splitter_rank, ProcResult, PH3, PH5, PH6, PH7};
@@ -41,7 +41,8 @@ pub fn sort_ran_bsp<K: RadixKey, S: BspScope<K>>(
     let sorter: &dyn SeqSorter<K> = match cfg.seq {
         SeqSortKind::Quick => &QuickSorter,
         SeqSortKind::Radix => &RadixSorter,
-        SeqSortKind::Xla => panic!("SORT_RAN_BSP supports Quick/Radix backends"),
+        SeqSortKind::Ips => &IpsSorter,
+        SeqSortKind::Xla => panic!("SORT_RAN_BSP supports Quick/Radix/Ips backends"),
     };
 
     if p == 1 {

@@ -103,6 +103,14 @@ impl SortJob {
         self
     }
 
+    /// Local-sort engine for the per-processor base case (shorthand
+    /// for `config(cfg.with_local_sort(engine))` keeping the other
+    /// knobs).
+    pub fn local_sort(mut self, engine: crate::sort::LocalSortEngine) -> SortJob {
+        self.cfg = self.cfg.with_local_sort(engine);
+        self
+    }
+
     /// Seed for the randomized variants.
     pub fn seed(mut self, seed: u64) -> SortJob {
         self.seed = seed;

@@ -440,6 +440,7 @@ mod tests {
             p: 16,
             backend: Backend::Sim,
             topology: TopologyChoice::Default,
+            local_sort: crate::sort::LocalSortEngine::Quicksort,
         }];
         spec.warmup = 0;
         spec.reps = 2;

@@ -44,7 +44,7 @@ use bsp_sort::experiment::{
 };
 use bsp_sort::gen::{generate_typed_for_proc, Benchmark};
 use bsp_sort::key::{Record, F64};
-use bsp_sort::sort::{det, iran, SampleSortMethod, SortConfig};
+use bsp_sort::sort::{det, iran, LocalSortEngine, SampleSortMethod, SortConfig, ALL_ENGINES};
 use bsp_sort::util::check::multiset_sig;
 
 /// One SplitMix64 step (the crate's own RNG), used as a scrambler for
@@ -389,6 +389,160 @@ fn conformance_depth3_p4096_f64() {
 #[test]
 fn conformance_depth3_p4096_record() {
     sweep_depth3::<Record>(25, 1 << 16, 4096, &[16, 16, 16]);
+}
+
+// --------------------------------------------------------------------
+// Local-sort engine axis (tiers 26–29): det / ran / det-k at
+// p ∈ {4, 64, 256} on the simulator, under all three engines
+// (quicksort, lsd-radix, ips).  The engine is a *base-case* choice: it
+// must never change what gets routed or when, only what the local sort
+// charges.  So for a fixed (algo, bench, n, p, seed):
+//
+// 1. the sorted output is bit-identical under all three engines, and
+// 2. the charged ledgers agree on superstep structure (count, labels,
+//    phases, procs, rounds) and on every communication charge (h_words,
+//    total_words) — only `max_ops` may differ, and across the engine
+//    set at least one superstep's ops *must* differ (otherwise the
+//    engine charge is not reaching the ledger at all).
+//
+// det-k pins its topology so the cost-model planner cannot resolve
+// different trees for different engines.
+// --------------------------------------------------------------------
+
+/// Ledger equality modulo local-sort ops: everything but `max_ops`
+/// must match; returns whether any superstep's ops differed.
+fn assert_only_ops_differ(a: &Ledger, b: &Ledger, label: &str) -> bool {
+    assert_eq!(a.supersteps.len(), b.supersteps.len(), "{label}: superstep count differs");
+    let mut ops_differ = false;
+    for (i, (x, y)) in a.supersteps.iter().zip(&b.supersteps).enumerate() {
+        assert_eq!(x.label, y.label, "{label} superstep {i}: label");
+        assert_eq!(x.phase, y.phase, "{label} superstep {i}: phase");
+        assert_eq!(x.procs, y.procs, "{label} superstep {i}: procs");
+        assert_eq!(x.round, y.round, "{label} superstep {i}: round");
+        assert_eq!(x.h_words, y.h_words, "{label} superstep {i} ({}): h_words", x.label);
+        assert_eq!(
+            x.total_words, y.total_words,
+            "{label} superstep {i} ({}): total_words",
+            x.label
+        );
+        ops_differ |= x.max_ops != y.max_ops;
+    }
+    ops_differ
+}
+
+/// Run one (algo, n, p) cell under every engine and check output
+/// identity + ledger invariance.  `dims` pins the depth-k topology.
+fn sweep_engine_axis<K: StudyKey>(
+    tier: u64,
+    algos: &[(AlgoVariant, Option<&[usize]>)],
+    benches: &[Benchmark],
+    n: usize,
+    p: usize,
+) {
+    let mut idx = 0u64;
+    for &(algo, dims) in algos {
+        for &bench in benches {
+            let seed = case_seed(tier, idx);
+            idx += 1;
+            let topology = dims.map(Topology::new);
+            let runs: Vec<(LocalSortEngine, _)> = ALL_ENGINES
+                .iter()
+                .map(|&engine| {
+                    let mut spec = RunSpec::new(algo, bench, p, n)
+                        .with_cfg(case_cfg(p).with_local_sort(engine))
+                        .with_backend(Backend::Sim);
+                    spec.topology = topology;
+                    spec.seed = seed;
+                    (engine, execute_typed::<K>(&spec))
+                })
+                .collect();
+            let (base_engine, base) = &runs[0];
+            let base_keys: Vec<K> =
+                base.outputs.iter().flat_map(|r| r.keys.iter().copied()).collect();
+            let mut any_ops_differ = false;
+            for (engine, run) in &runs[1..] {
+                let label = format!(
+                    "engine-axis algo={} bench={} domain={} n={n} p={p} {} vs {} replay-seed={seed:#x}",
+                    algo.tag(),
+                    bench.tag(),
+                    K::NAME,
+                    base_engine.tag(),
+                    engine.tag(),
+                );
+                let keys: Vec<K> =
+                    run.outputs.iter().flat_map(|r| r.keys.iter().copied()).collect();
+                assert_eq!(keys, base_keys, "{label}: outputs differ across engines");
+                any_ops_differ |= assert_only_ops_differ(&base.ledger, &run.ledger, &label);
+            }
+            assert!(
+                any_ops_differ,
+                "engine-axis algo={} bench={} n={n} p={p}: every engine charged identical \
+                 ops — the local-sort charge is not reaching the ledger",
+                algo.tag(),
+                bench.tag(),
+            );
+        }
+    }
+}
+
+#[test]
+fn conformance_engine_axis_p4_i32() {
+    sweep_engine_axis::<i32>(
+        26,
+        &[
+            (AlgoVariant::Det, None),
+            (AlgoVariant::Ran, None),
+            (AlgoVariant::DetK, Some(&[2, 2])),
+        ],
+        &[Benchmark::Uniform, Benchmark::DetDup],
+        1 << 12,
+        4,
+    );
+}
+
+#[test]
+fn conformance_engine_axis_p4_u64() {
+    sweep_engine_axis::<u64>(
+        27,
+        &[
+            (AlgoVariant::Det, None),
+            (AlgoVariant::Ran, None),
+            (AlgoVariant::DetK, Some(&[2, 2])),
+        ],
+        &[Benchmark::Uniform],
+        1 << 12,
+        4,
+    );
+}
+
+#[test]
+fn conformance_engine_axis_p64_i32() {
+    sweep_engine_axis::<i32>(
+        28,
+        &[
+            (AlgoVariant::Det, None),
+            (AlgoVariant::Ran, None),
+            (AlgoVariant::DetK, Some(&[8, 8])),
+        ],
+        &[Benchmark::Uniform],
+        1 << 14,
+        64,
+    );
+}
+
+#[test]
+fn conformance_engine_axis_p256_i32() {
+    sweep_engine_axis::<i32>(
+        29,
+        &[
+            (AlgoVariant::Det, None),
+            (AlgoVariant::Ran, None),
+            (AlgoVariant::DetK, Some(&[16, 16])),
+        ],
+        &[Benchmark::Uniform],
+        1 << 16,
+        256,
+    );
 }
 
 // --------------------------------------------------------------------

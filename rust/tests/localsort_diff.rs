@@ -1,0 +1,120 @@
+//! Differential sweep of the IPS local-sort engine (PR 8 satellite).
+//!
+//! For every key domain × §6.3 input distribution × adversarial shape,
+//! `seq::ipssort` must produce *byte-identical* output to both
+//! reference base cases (`seq::quicksort`, `seq::radixsort`) and
+//! preserve the input multiset fingerprint
+//! ([`bsp_sort::util::check::multiset_sig`]).  Cases are driven by the
+//! seeded `check` harness, so every failure message carries a
+//! `replay seed 0x…` that reproduces the exact input via
+//! [`bsp_sort::util::check::replay`].
+
+use bsp_sort::gen::{generate_typed_for_proc, GenKey, ALL_BENCHMARKS};
+use bsp_sort::key::{RadixKey, F64, Record};
+use bsp_sort::seq::{ips, ipssort, quicksort, radixsort};
+use bsp_sort::util::check::{check, multiset_sig};
+use bsp_sort::util::rng::SplitMix64;
+
+/// Run all three engines on copies of `input`; IPS must match both
+/// references exactly and leave the multiset fingerprint unchanged.
+fn assert_engines_agree<K: RadixKey>(input: &[K], label: &str) {
+    let sig_in = multiset_sig(input.iter().copied());
+    let mut by_quick = input.to_vec();
+    quicksort(&mut by_quick);
+    let mut by_radix = input.to_vec();
+    radixsort(&mut by_radix);
+    let mut by_ips = input.to_vec();
+    ipssort(&mut by_ips);
+    assert_eq!(
+        by_ips,
+        by_quick,
+        "{label}: ipssort differs from quicksort on {} keys",
+        input.len()
+    );
+    assert_eq!(
+        by_ips,
+        by_radix,
+        "{label}: ipssort differs from radixsort on {} keys",
+        input.len()
+    );
+    assert_eq!(
+        multiset_sig(by_ips.iter().copied()),
+        sig_in,
+        "{label}: ipssort changed the key multiset ({} keys)",
+        input.len()
+    );
+}
+
+/// A fresh domain key from the case RNG (payloads/aux vary too, so
+/// `Record` exercises distinct-payload duplicates).
+fn draw<K: GenKey>(rng: &mut SplitMix64) -> K {
+    let d = rng.next_u64() as i32;
+    let aux = rng.next_u64();
+    K::from_draw(d, aux)
+}
+
+/// The adversarial shapes of the issue checklist, instantiated in one
+/// domain.  `big` always exceeds the quicksort-fallback cutoff so the
+/// block classification/permutation/cleanup machinery actually runs.
+fn adversarial_shapes<K: GenKey>(rng: &mut SplitMix64) -> Vec<(&'static str, Vec<K>)> {
+    let big = ips::FALLBACK_CUTOFF + 100 + rng.below(2400) as usize;
+    let one: K = draw(rng);
+    let two: K = draw(rng);
+    let mut sorted: Vec<K> = (0..big).map(|_| draw(rng)).collect();
+    sorted.sort_unstable();
+    let mut reversed = sorted.clone();
+    reversed.reverse();
+    vec![
+        ("empty", Vec::new()),
+        ("single", vec![one]),
+        ("all-equal", vec![one; big]),
+        (
+            "two-value",
+            (0..big).map(|_| if rng.below(2) == 0 { one } else { two }).collect(),
+        ),
+        ("already-sorted", sorted),
+        ("reverse-sorted", reversed),
+    ]
+}
+
+/// §6.3 distributions × all four key domains, with the processor slice
+/// (`pid`, `p`) and the local size randomized per case.
+#[test]
+fn ips_matches_references_across_distributions() {
+    check("localsort_diff::distributions", |rng| {
+        let p = 1 + rng.below(8) as usize;
+        let pid = rng.below(p as u64) as usize;
+        let n = 1 + rng.below(3000) as usize;
+        for bench in ALL_BENCHMARKS {
+            let tag = bench.tag();
+            let keys: Vec<i32> = generate_typed_for_proc(bench, pid, p, n);
+            assert_engines_agree(&keys, &format!("i32/{tag}"));
+            let keys: Vec<u64> = generate_typed_for_proc(bench, pid, p, n);
+            assert_engines_agree(&keys, &format!("u64/{tag}"));
+            let keys: Vec<F64> = generate_typed_for_proc(bench, pid, p, n);
+            assert_engines_agree(&keys, &format!("f64/{tag}"));
+            let keys: Vec<Record> = generate_typed_for_proc(bench, pid, p, n);
+            assert_engines_agree(&keys, &format!("record/{tag}"));
+        }
+    });
+}
+
+/// Adversarial shapes (empty, single, all-equal, two-value, sorted,
+/// reverse-sorted) in all four domains.
+#[test]
+fn ips_matches_references_on_adversarial_shapes() {
+    check("localsort_diff::adversarial", |rng| {
+        for (shape, input) in adversarial_shapes::<i32>(rng) {
+            assert_engines_agree(&input, &format!("i32/{shape}"));
+        }
+        for (shape, input) in adversarial_shapes::<u64>(rng) {
+            assert_engines_agree(&input, &format!("u64/{shape}"));
+        }
+        for (shape, input) in adversarial_shapes::<F64>(rng) {
+            assert_engines_agree(&input, &format!("f64/{shape}"));
+        }
+        for (shape, input) in adversarial_shapes::<Record>(rng) {
+            assert_engines_agree(&input, &format!("record/{shape}"));
+        }
+    });
+}

@@ -58,9 +58,9 @@ fn run_two_level<K: GenKey + RadixKey>(
     (inputs, results, run.ledger)
 }
 
-/// det2 + ran2 over one domain and benchmark, both sequential backends.
+/// det2 + ran2 over one domain and benchmark, every sequential backend.
 fn run_domain<K: GenKey + RadixKey>(bench: Benchmark) {
-    for seq in [SeqSortKind::Quick, SeqSortKind::Radix] {
+    for seq in [SeqSortKind::Quick, SeqSortKind::Radix, SeqSortKind::Ips] {
         let (inputs, results, _) = run_two_level::<K>(true, bench, seq, false);
         let outputs: Vec<Vec<K>> = results.iter().map(|r| r.keys.clone()).collect();
         assert_sorted_permutation(
