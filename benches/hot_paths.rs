@@ -11,7 +11,7 @@
 //! --quick-smoke`) shrinks every size and iteration count so the whole
 //! file runs in seconds — benchmark code can no longer rot silently.
 //!
-//! The local-sort engine grid (n ∈ {10⁴, 10⁵, 10⁶} × four key domains ×
+//! The local-sort engine grid (n ∈ {10⁴, 10⁵, 10⁶} × five key domains ×
 //! {quicksort, lsd-radix, ips}) additionally supports:
 //!   --json <path>       write the grid as a hotpaths-baseline JSON
 //!   --compare <path>    validate a committed baseline: schema check
@@ -24,7 +24,7 @@
 use bsp_sort::bsp::{cray_t3d, BspMachine, Payload};
 use bsp_sort::experiment::{calibrate_host, ProbePlan};
 use bsp_sort::gen::{generate_for_proc, generate_typed_for_proc, Benchmark, GenKey};
-use bsp_sort::key::{RadixKey, F64, Record};
+use bsp_sort::key::{RadixKey, F64, Record, Str};
 use bsp_sort::seq;
 use bsp_sort::sort::{det, iran, LocalSortEngine, SortConfig, ALL_ENGINES};
 use bsp_sort::util::bench::bench;
@@ -251,6 +251,7 @@ fn main() {
         grid_domain::<u64>(gn, &mut grid_cells);
         grid_domain::<F64>(gn, &mut grid_cells);
         grid_domain::<Record>(gn, &mut grid_cells);
+        grid_domain::<Str>(gn, &mut grid_cells);
     }
 
     // --- p-way merge -------------------------------------------------------

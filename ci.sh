@@ -1,6 +1,6 @@
 #!/usr/bin/env bash
 # Tier-1 gate plus hygiene checks.
-# Usage: ./ci.sh [--check-xla|--check-links|--conformance|--planner-smoke|--bench-baseline|--localsort-fuzz]
+# Usage: ./ci.sh [--check-xla|--check-links|--conformance|--planner-smoke|--bench-baseline|--localsort-fuzz|--balance-audit]
 #
 # This is what .github/workflows/ci.yml runs; keep it the single source
 # of truth for "does the repo pass".
@@ -36,6 +36,14 @@
 #                         local-sort engine against quicksort/radixsort
 #                         (all domains × distributions × adversarial
 #                         shapes; also runs in the --conformance job).
+#   ./ci.sh --balance-audit
+#                         release-mode balance-envelope audit: all 11
+#                         variants × full benchmark set (incl. the skew
+#                         families) × p in {4,64,256,1024} on the
+#                         simulator, asserting the guaranteed envelopes
+#                         and rewriting docs/BALANCE.md with the
+#                         measured max-received/(n/p) ratio tables
+#                         (commit the file; also runs in --conformance).
 set -euo pipefail
 cd "$(dirname "$0")"
 
@@ -93,6 +101,18 @@ if [[ "${1:-}" == "--localsort-fuzz" ]]; then
     exit 0
 fi
 
+balance_audit() {
+    echo "== balance-audit: envelope assertions + docs/BALANCE.md rewrite (release) =="
+    BALANCE_AUDIT_WRITE="$(pwd)/docs/BALANCE.md" \
+        cargo test --release --test balance_audit -- --nocapture
+    echo "docs/BALANCE.md rewritten; commit it to record this sweep's ratios"
+}
+
+if [[ "${1:-}" == "--balance-audit" ]]; then
+    balance_audit
+    exit 0
+fi
+
 if [[ "${1:-}" == "--conformance" ]]; then
     echo "== conformance: simulator-backend property suite (release) =="
     cargo test --release --test conformance -- --nocapture
@@ -100,6 +120,7 @@ if [[ "${1:-}" == "--conformance" ]]; then
     echo "== planner acceptance: chosen topology within 10% of exhaustive minimum =="
     cargo test --release --test planner_acceptance -- --nocapture
     localsort_fuzz
+    balance_audit
     exit 0
 fi
 
@@ -190,6 +211,9 @@ test -s "$smokedir/BENCH_smoke.json" || {
     echo "BENCH_smoke.json missing or empty" >&2; exit 1; }
 grep -q '"schema": "bsp-sort/experiment-report/v4"' "$smokedir/BENCH_smoke.json" || {
     echo "schema tag missing from BENCH_smoke.json" >&2; exit 1; }
+# The quick preset rides one skew-benchmark cell (det @ [Z-100] @ p=8).
+grep -q '"bench": "\[Z-100\]"' "$smokedir/BENCH_smoke.json" || {
+    echo "zipf smoke cell missing from BENCH_smoke.json" >&2; exit 1; }
 test -s "$smokedir/BENCH_smoke.md" || {
     echo "BENCH_smoke.md missing or empty" >&2; exit 1; }
 rm -rf "$smokedir"

@@ -8,7 +8,7 @@ use crate::bsp::group::{GroupPartition, GroupedScope};
 use crate::bsp::ledger::{ratio_or_nan, Ledger};
 use crate::bsp::{Backend, Topology};
 use crate::gen::{generate_typed_for_proc, GenKey};
-use crate::key::{F64, RadixKey, Record};
+use crate::key::{F64, RadixKey, Record, Str};
 use crate::metrics::{Imbalance, RoutedVolume, RunReport};
 use crate::primitives::bitonic::BitonicItem;
 use crate::sort::common::ProcResult;
@@ -20,7 +20,7 @@ use super::spec::{AlgoVariant, KeyDomain, RunConfig, RunSpec, SweepSpec, Topolog
 
 /// Everything the full study demands of a key domain: generation
 /// ([`GenKey`]), the radix backend ([`RadixKey`]) and bitonic exchange
-/// ([`BitonicItem`]).  Blanket-implemented — all four built-in domains
+/// ([`BitonicItem`]).  Blanket-implemented — all five built-in domains
 /// qualify automatically.
 pub trait StudyKey: GenKey + RadixKey + BitonicItem<Self> {}
 
@@ -457,6 +457,7 @@ pub fn measure_config(cfg: &RunConfig, sweep: &SweepSpec, calib: &Calibration) -
         KeyDomain::U64 => measure_typed::<u64>(cfg, sweep, calib),
         KeyDomain::F64T => measure_typed::<F64>(cfg, sweep, calib),
         KeyDomain::RecordU32 => measure_typed::<Record>(cfg, sweep, calib),
+        KeyDomain::Str => measure_typed::<Str>(cfg, sweep, calib),
     }
 }
 

@@ -117,11 +117,19 @@ pub enum KeyDomain {
     F64T,
     /// `(u32 key, u32 payload)` records (`key::Record`).
     RecordU32,
+    /// Variable-length strings with an 8-byte prefix radix image
+    /// (`key::Str`, two wire words).
+    Str,
 }
 
 /// Every built-in domain, in report order.
-pub const ALL_DOMAINS: [KeyDomain; 4] =
-    [KeyDomain::I32, KeyDomain::U64, KeyDomain::F64T, KeyDomain::RecordU32];
+pub const ALL_DOMAINS: [KeyDomain; 5] = [
+    KeyDomain::I32,
+    KeyDomain::U64,
+    KeyDomain::F64T,
+    KeyDomain::RecordU32,
+    KeyDomain::Str,
+];
 
 impl KeyDomain {
     /// Stable CLI/report tag.
@@ -131,6 +139,7 @@ impl KeyDomain {
             KeyDomain::U64 => "u64",
             KeyDomain::F64T => "f64",
             KeyDomain::RecordU32 => "record",
+            KeyDomain::Str => "str",
         }
     }
 
@@ -360,9 +369,10 @@ impl SweepSpec {
     /// and `[DD]`, the `i32` and `u64` key domains, p ∈ {4, 8}, 16K
     /// keys, 1 warmup + 2 recorded reps — a complete miniature of the
     /// study (including one multi-level configuration) that finishes in
-    /// seconds.  One extra cell rides the deterministic simulator at
-    /// `det @ p = 256` so every CI smoke also exercises the sim backend
-    /// far beyond sensible thread counts.
+    /// seconds.  Two extra cells ride along: `det @ [Z] @ p = 8` so the
+    /// skew generators can't silently rot out of the smoke path, and
+    /// `det @ p = 256` on the deterministic simulator so every CI smoke
+    /// also exercises the sim backend far beyond sensible thread counts.
     pub fn quick() -> SweepSpec {
         SweepSpec {
             algos: vec![AlgoVariant::Det, AlgoVariant::Ran, AlgoVariant::Det2],
@@ -372,16 +382,28 @@ impl SweepSpec {
             ps: vec![4, 8],
             backends: vec![Backend::Threaded],
             topologies: vec![TopologyChoice::Default],
-            extras: vec![RunConfig {
-                algo: AlgoVariant::Det,
-                bench: Benchmark::Uniform,
-                domain: KeyDomain::I32,
-                n: 1 << 14,
-                p: 256,
-                backend: Backend::Sim,
-                topology: TopologyChoice::Default,
-                local_sort: LocalSortEngine::Quicksort,
-            }],
+            extras: vec![
+                RunConfig {
+                    algo: AlgoVariant::Det,
+                    bench: Benchmark::Zipf(crate::gen::DEFAULT_ZIPF_THETA100),
+                    domain: KeyDomain::I32,
+                    n: 1 << 14,
+                    p: 8,
+                    backend: Backend::Threaded,
+                    topology: TopologyChoice::Default,
+                    local_sort: LocalSortEngine::Quicksort,
+                },
+                RunConfig {
+                    algo: AlgoVariant::Det,
+                    bench: Benchmark::Uniform,
+                    domain: KeyDomain::I32,
+                    n: 1 << 14,
+                    p: 256,
+                    backend: Backend::Sim,
+                    topology: TopologyChoice::Default,
+                    local_sort: LocalSortEngine::Quicksort,
+                },
+            ],
             local_sorts: vec![LocalSortEngine::Quicksort],
             warmup: 1,
             reps: 2,
@@ -391,8 +413,9 @@ impl SweepSpec {
         }
     }
 
-    /// The default full study: both one-optimal algorithms over all
-    /// seven §6.3 distributions at the paper's smaller grid.
+    /// The default full study: both one-optimal algorithms over the
+    /// full benchmark set (§6.3 + skew families) at the paper's
+    /// smaller grid.
     pub fn default_study() -> SweepSpec {
         SweepSpec {
             algos: vec![AlgoVariant::Det, AlgoVariant::Iran],
@@ -631,9 +654,14 @@ mod tests {
         assert_eq!(spec.ps, vec![4, 8]);
         assert_eq!(spec.domains.len(), 2);
         // 3 algos × 2 benches × 2 domains × 1 n × 2 p × 1 backend, plus
-        // the sim-backend det @ p=256 extra cell.
-        assert_eq!(spec.configs().len(), 25);
-        let last = *spec.configs().last().unwrap();
+        // the det @ [Z] @ p=8 skew-generator cell and the sim-backend
+        // det @ p=256 extra cell.
+        assert_eq!(spec.configs().len(), 26);
+        let configs = spec.configs();
+        let zipf = configs[configs.len() - 2];
+        assert_eq!(zipf.bench, Benchmark::Zipf(crate::gen::DEFAULT_ZIPF_THETA100));
+        assert_eq!(zipf.p, 8);
+        let last = *configs.last().unwrap();
         assert_eq!(last.backend, Backend::Sim);
         assert_eq!(last.p, 256);
         assert_eq!(last.algo, AlgoVariant::Det);

@@ -1,30 +1,48 @@
-//! Sorting benchmark input generators (paper §6.3).
+//! Sorting benchmark input generators (paper §6.3 + skew expansion).
 //!
-//! Seven distributions, faithful to the paper's definitions, each
+//! The paper's seven distributions, faithful to their definitions, each
 //! generated *per processor* with the paper's seeding (`21 + 1001·i` for
-//! processor `i`, glibc `random()`):
+//! processor `i`, glibc `random()`), plus five skew families beyond the
+//! paper (the robustness question of Axtmann–Sanders, and the benchmark
+//! set of the bachelorthesis sorting benches):
 //!
-//! | tag    | name                      |
-//! |--------|---------------------------|
-//! | \[U\]    | Uniform                   |
-//! | \[G\]    | Gaussian (4-call average) |
-//! | \[B\]    | Bucket sorted             |
-//! | [g-G]  | g-Group (g = 2 default)   |
-//! | \[S\]    | Staggered                 |
-//! | \[DD\]   | Deterministic duplicates  |
-//! | \[WR\]   | Worst-case regular [39]   |
+//! | tag     | name                              |
+//! |---------|-----------------------------------|
+//! | \[U\]     | Uniform                           |
+//! | \[G\]     | Gaussian (4-call average)         |
+//! | \[B\]     | Bucket sorted                     |
+//! | [g-G]   | g-Group (g = 2 default, any g ≥ 2)|
+//! | \[S\]     | Staggered                         |
+//! | \[DD\]    | Deterministic duplicates          |
+//! | \[WR\]    | Worst-case regular [39]           |
+//! | [Z-θ]   | Zipf, exponent θ/100              |
+//! | \[X\]     | Exponential                       |
+//! | [AS-f]  | Almost sorted, f % perturbed      |
+//! | \[R\]     | Reverse (globally descending)     |
+//! | \[8D\]    | Eight-dup, `(i⁸ + n/2) mod n`     |
 //!
 //! `INT_MAX` below is the paper's "maximum integer value plus one ... in
 //! a 32-bit signed arithmetic data type", i.e. 2³¹.
 
-use crate::key::{F64, Key, Record};
+use crate::key::{F64, Key, Record, Str};
 use crate::runtime::error::RuntimeError;
 use crate::util::rng::{BsdRandom, SplitMix64};
 
 /// `INT_MAX` of the paper: 2³¹ (as i64 to avoid overflow in range math).
 pub const INT_MAX_P1: i64 = 1 << 31;
 
-/// The seven benchmark distributions of §6.3.
+/// Default Zipf exponent in hundredths: θ = 1.0, the classic harmonic
+/// head (~13 % of the mass on the top rank over [`ZIPF_RANKS`] ranks).
+pub const DEFAULT_ZIPF_THETA100: u32 = 100;
+
+/// Default \[AS-f\] perturbation: 5 % of each processor's keys displaced.
+pub const DEFAULT_ALMOST_SORTED_PCT: u32 = 5;
+
+/// Number of distinct ranks a [Z-θ] stream draws from.
+const ZIPF_RANKS: usize = 1024;
+
+/// The seven benchmark distributions of §6.3 plus the five skew
+/// families (zipf, exponential, almost-sorted, reverse, eight-dup).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Benchmark {
     /// \[U\] uniform over [0, 2³¹−1].
@@ -41,10 +59,25 @@ pub enum Benchmark {
     DetDup,
     /// \[WR\] worst-case-regular (the [39] adversary for regular sampling).
     WorstRegular,
+    /// [Z-θ] Zipf over [`ZIPF_RANKS`] ranks with exponent θ = `.0`/100:
+    /// rank k drawn with probability ∝ 1/k^θ, head rank = smallest key,
+    /// massively duplicated — adversarial for sampled splitters.
+    Zipf(u32),
+    /// \[X\] exponential: −ln(u)·INT_MAX/16, long sparse upper tail.
+    Exponential,
+    /// [AS-f] almost sorted: the globally sorted block deal with f % of
+    /// each processor's keys displaced by random transpositions.
+    AlmostSorted(u32),
+    /// \[R\] reverse: the globally sorted sequence, descending.
+    Reverse,
+    /// \[8D\] eight-dup: global index i ↦ `(i⁸ + n/2) mod n` — heavy,
+    /// irregular duplication (most eighth-power residues collapse).
+    EightDup,
 }
 
-/// The table order used throughout the paper: U, G, 2-G, B, S, DD, WR.
-pub const ALL_BENCHMARKS: [Benchmark; 7] = [
+/// Every benchmark in table order: the paper's U, G, 2-G, B, S, DD, WR,
+/// then the skew families Z, X, AS, R, 8D (default parameters).
+pub const ALL_BENCHMARKS: [Benchmark; 12] = [
     Benchmark::Uniform,
     Benchmark::Gaussian,
     Benchmark::GGroup(2),
@@ -52,6 +85,11 @@ pub const ALL_BENCHMARKS: [Benchmark; 7] = [
     Benchmark::Staggered,
     Benchmark::DetDup,
     Benchmark::WorstRegular,
+    Benchmark::Zipf(DEFAULT_ZIPF_THETA100),
+    Benchmark::Exponential,
+    Benchmark::AlmostSorted(DEFAULT_ALMOST_SORTED_PCT),
+    Benchmark::Reverse,
+    Benchmark::EightDup,
 ];
 
 impl Benchmark {
@@ -64,21 +102,53 @@ impl Benchmark {
             Benchmark::Staggered => "[S]".into(),
             Benchmark::DetDup => "[DD]".into(),
             Benchmark::WorstRegular => "[WR]".into(),
+            Benchmark::Zipf(t) => format!("[Z-{t}]"),
+            Benchmark::Exponential => "[X]".into(),
+            Benchmark::AlmostSorted(f) => format!("[AS-{f}]"),
+            Benchmark::Reverse => "[R]".into(),
+            Benchmark::EightDup => "[8D]".into(),
         }
     }
 
+    /// Parse a benchmark tag (brackets optional, case insensitive).
+    ///
+    /// The parameterized families accept any in-range parameter, not
+    /// just the table defaults: `<g>-G` for g ≥ 2 (divides-n is
+    /// validated at generation time, not here), `Z-<θ·100>` for
+    /// θ ∈ (0, 4], `AS-<f>` for f ∈ [0, 100].  Friendly aliases
+    /// (`zipf`, `exp`, `almost-sorted`, `reverse`, `eight-dup`) map to
+    /// the default parameters.
     pub fn parse(s: &str) -> Option<Benchmark> {
-        match s.trim_matches(|c| c == '[' || c == ']').to_ascii_uppercase().as_str() {
+        let t = s.trim_matches(|c| c == '[' || c == ']').to_ascii_uppercase();
+        match t.as_str() {
             "U" => Some(Benchmark::Uniform),
             "G" => Some(Benchmark::Gaussian),
             "B" => Some(Benchmark::Bucket),
-            "2-G" => Some(Benchmark::GGroup(2)),
-            "4-G" => Some(Benchmark::GGroup(4)),
-            "8-G" => Some(Benchmark::GGroup(8)),
             "S" => Some(Benchmark::Staggered),
             "DD" => Some(Benchmark::DetDup),
             "WR" => Some(Benchmark::WorstRegular),
-            _ => None,
+            "Z" | "ZIPF" => Some(Benchmark::Zipf(DEFAULT_ZIPF_THETA100)),
+            "X" | "EXP" | "EXPONENTIAL" => Some(Benchmark::Exponential),
+            "AS" | "ALMOST-SORTED" => {
+                Some(Benchmark::AlmostSorted(DEFAULT_ALMOST_SORTED_PCT))
+            }
+            "R" | "REV" | "REVERSE" => Some(Benchmark::Reverse),
+            "8D" | "8-DUP" | "EIGHT-DUP" => Some(Benchmark::EightDup),
+            other => {
+                if let Some(g) = other.strip_suffix("-G") {
+                    let g: usize = g.parse().ok()?;
+                    return (g >= 2).then_some(Benchmark::GGroup(g));
+                }
+                if let Some(t) = other.strip_prefix("Z-") {
+                    let t: u32 = t.parse().ok()?;
+                    return ((1..=400).contains(&t)).then_some(Benchmark::Zipf(t));
+                }
+                if let Some(f) = other.strip_prefix("AS-") {
+                    let f: u32 = f.parse().ok()?;
+                    return (f <= 100).then_some(Benchmark::AlmostSorted(f));
+                }
+                None
+            }
         }
     }
 
@@ -93,9 +163,14 @@ impl Benchmark {
     }
 }
 
-/// Every tag [`Benchmark::parse`] accepts (brackets optional, case
-/// insensitive).
-pub const VALID_BENCH_TAGS: &[&str] = &["U", "G", "B", "2-G", "4-G", "8-G", "S", "DD", "WR"];
+/// Tags [`Benchmark::parse`] accepts (brackets optional, case
+/// insensitive).  The `<g>-G` / `Z-<θ100>` / `AS-<pct>` entries are
+/// exemplars of the parameterized forms: any g ≥ 2, θ100 ∈ [1, 400]
+/// and pct ∈ [0, 100] parse.
+pub const VALID_BENCH_TAGS: &[&str] = &[
+    "U", "G", "B", "2-G", "4-G", "8-G", "16-G", "S", "DD", "WR", "Z", "Z-75", "X", "AS",
+    "AS-10", "R", "8D",
+];
 
 /// The paper's per-processor seed: `21 + 1001·i` (§6.3).
 pub fn paper_seed(pid: usize) -> u32 {
@@ -170,6 +245,11 @@ pub fn generate_for_proc(bench: Benchmark, pid: usize, p: usize, n_local: usize)
         }
         Benchmark::DetDup => det_dup(pid, p, n_local),
         Benchmark::WorstRegular => worst_regular(pid, p, n_local),
+        Benchmark::Zipf(t) => zipf(&mut rng, t, n_local),
+        Benchmark::Exponential => exponential(&mut rng, n_local),
+        Benchmark::AlmostSorted(f) => almost_sorted(&mut rng, f, pid, p, n_local),
+        Benchmark::Reverse => reverse_sorted(pid, p, n_local),
+        Benchmark::EightDup => eight_dup(pid, p, n_local),
     }
 }
 
@@ -222,14 +302,40 @@ impl GenKey for Record {
     }
 }
 
+impl GenKey for Str {
+    /// Seven base-26 uppercase characters encode the draw (26⁷ > 2³¹,
+    /// most significant first, so the mapping is strictly monotone in
+    /// the draw regardless of what follows), then an aux-derived
+    /// six-character lowercase suffix makes the strings variable-beyond-
+    /// prefix: equal draws share the full 7-byte head, so their 8-byte
+    /// radix image may collide while the keys differ — exactly the tie
+    /// case the prefix encoding must break.  `aux = 0` (the
+    /// duplicate-defined benchmarks) appends nothing, so equal draws
+    /// stay *equal* strings.
+    fn from_draw(draw: i32, aux: u64) -> Str {
+        let mut b = [0u8; Str::MAX_LEN];
+        let mut v = draw.max(0) as u64;
+        for slot in (0..7).rev() {
+            b[slot] = b'A' + (v % 26) as u8;
+            v /= 26;
+        }
+        if aux != 0 {
+            for (k, slot) in (7..13).enumerate() {
+                b[slot] = b'a' + ((aux >> (10 * k as u32)) % 26) as u8;
+            }
+        }
+        Str(b)
+    }
+}
+
 /// Typed variant of [`generate_for_proc`]: the same §6.3 distributions,
 /// mapped into key domain `K` (deterministic per `(bench, pid)` like the
 /// `i32` generators — the aux stream is seeded from the paper seed).
 ///
-/// For duplicate-defined benchmarks (\[DD\], whose *point* is massive key
-/// equality) the aux bits are zeroed: entropy in the domain's low bits
-/// would turn every equal draw into a distinct key and silently destroy
-/// the property §5.1.1 is stressed by.
+/// For duplicate-defined benchmarks (\[DD\], [Z-θ] and \[8D\], whose
+/// *point* is massive key equality) the aux bits are zeroed: entropy in
+/// the domain's low bits would turn every equal draw into a distinct
+/// key and silently destroy the property §5.1.1 is stressed by.
 pub fn generate_typed_for_proc<K: GenKey>(
     bench: Benchmark,
     pid: usize,
@@ -237,7 +343,8 @@ pub fn generate_typed_for_proc<K: GenKey>(
     n_local: usize,
 ) -> Vec<K> {
     let mut aux = SplitMix64::new(0x6B65_7973 ^ ((paper_seed(pid) as u64) << 17));
-    let dup_defined = matches!(bench, Benchmark::DetDup);
+    let dup_defined =
+        matches!(bench, Benchmark::DetDup | Benchmark::Zipf(_) | Benchmark::EightDup);
     generate_for_proc(bench, pid, p, n_local)
         .into_iter()
         .map(|draw| K::from_draw(draw, if dup_defined { 0 } else { aux.next_u64() }))
@@ -345,6 +452,93 @@ fn worst_regular(pid: usize, p: usize, n_local: usize) -> Vec<i32> {
     let scale = INT_MAX_P1 / (n_local as i64 * p as i64).max(1);
     (0..n_local)
         .map(|j| ((j as i64 * p as i64 + pid as i64) * scale.max(1)) as i32)
+        .collect()
+}
+
+/// [Z-θ] Zipf over [`ZIPF_RANKS`] ranks: rank k ∈ {1..R} is drawn with
+/// probability ∝ 1/k^θ (inverse-CDF over the cumulative weights) and
+/// maps to key `(k−1)·INT_MAX/R` — the head rank is a massively
+/// duplicated *smallest* key, so sampled splitters see a few huge
+/// equivalence classes instead of a smooth value range.
+fn zipf(rng: &mut BsdRandom, theta100: u32, n_local: usize) -> Vec<i32> {
+    let theta = theta100 as f64 / 100.0;
+    let mut cdf = Vec::with_capacity(ZIPF_RANKS);
+    let mut acc = 0.0f64;
+    for k in 1..=ZIPF_RANKS {
+        acc += (k as f64).powf(-theta);
+        cdf.push(acc);
+    }
+    let total = acc;
+    let scale = INT_MAX_P1 / ZIPF_RANKS as i64;
+    (0..n_local)
+        .map(|_| {
+            let u = rng.next_i32() as f64 / INT_MAX_P1 as f64 * total;
+            let rank = cdf.partition_point(|&c| c <= u);
+            (rank.min(ZIPF_RANKS - 1) as i64 * scale) as i32
+        })
+        .collect()
+}
+
+/// \[X\] Exponential: `−ln(u)·INT_MAX/16`, clipped to the 31-bit range —
+/// ~86 % of the mass below INT_MAX/8 and a long sparse upper tail, the
+/// opposite pressure of \[G\]'s central bulge.
+fn exponential(rng: &mut BsdRandom, n_local: usize) -> Vec<i32> {
+    let scale = (INT_MAX_P1 / 16) as f64;
+    (0..n_local)
+        .map(|_| {
+            let u = (rng.next_i32() as f64 + 1.0) / INT_MAX_P1 as f64; // (0, 1]
+            let v = (-u.ln() * scale) as i64;
+            v.min(INT_MAX_P1 - 1) as i32
+        })
+        .collect()
+}
+
+/// [AS-f] Almost sorted: the globally sorted sequence dealt to
+/// processors in contiguous blocks (processor 0 gets the smallest keys,
+/// so the untouched input is globally sorted), then `f` % of each
+/// processor's keys displaced by random transpositions — each swap
+/// moves two keys, so `f·n_local/100 / 2` swaps of distinct positions.
+fn almost_sorted(rng: &mut BsdRandom, pct: u32, pid: usize, p: usize, n_local: usize) -> Vec<i32> {
+    let n_total = (n_local * p) as i64;
+    let scale = (INT_MAX_P1 / n_total.max(1)).max(1);
+    let mut out: Vec<i32> =
+        (0..n_local).map(|j| (((pid * n_local + j) as i64) * scale) as i32).collect();
+    if n_local > 1 {
+        let swaps = n_local * pct.min(100) as usize / 200;
+        for _ in 0..swaps {
+            let i = rng.below(n_local as i32) as usize;
+            let j = (i + 1 + rng.below(n_local as i32 - 1) as usize) % n_local;
+            out.swap(i, j);
+        }
+    }
+    out
+}
+
+/// \[R\] Reverse: the globally sorted sequence in descending order, dealt
+/// in contiguous blocks — processor 0 holds the largest keys, every
+/// local run is strictly descending.
+fn reverse_sorted(pid: usize, p: usize, n_local: usize) -> Vec<i32> {
+    let n_total = (n_local * p) as i64;
+    let scale = (INT_MAX_P1 / n_total.max(1)).max(1);
+    (0..n_local)
+        .map(|j| ((n_total - 1 - (pid * n_local + j) as i64) * scale) as i32)
+        .collect()
+}
+
+/// \[8D\] Eight-dup (the bachelorthesis benchmark): global index i maps
+/// to `(i⁸ + n/2) mod n`.  For power-of-two n most eighth-power residues
+/// collapse, leaving a few hundred distinct values with wildly unequal
+/// multiplicities — duplication that, unlike \[DD\], is not block-aligned
+/// with processors.
+fn eight_dup(pid: usize, p: usize, n_local: usize) -> Vec<i32> {
+    let n_total = ((n_local * p) as u64).max(1);
+    (0..n_local)
+        .map(|j| {
+            let x = (pid * n_local + j) as u64 % n_total;
+            let sq = |v: u64| v * v % n_total;
+            let v8 = sq(sq(sq(x)));
+            ((v8 + n_total / 2) % n_total) as i32
+        })
         .collect()
 }
 
@@ -479,6 +673,149 @@ mod tests {
             assert!(msg.contains(tag), "missing {tag} in: {msg}");
         }
         assert!(Benchmark::parse_strict("").is_err());
+    }
+
+    #[test]
+    fn parse_any_g_group_with_range_check() {
+        // Regression: parse used to hardcode 2-G/4-G/8-G only.
+        assert_eq!(Benchmark::parse("16-G"), Some(Benchmark::GGroup(16)));
+        assert_eq!(Benchmark::parse("[32-g]"), Some(Benchmark::GGroup(32)));
+        assert_eq!(Benchmark::parse_strict("16-G").unwrap(), Benchmark::GGroup(16));
+        assert_eq!(Benchmark::GGroup(16).tag(), "[16-G]");
+        // g < 2 and non-numeric prefixes are rejected…
+        for bad in ["1-G", "0-G", "-G", "X-G", "2.5-G"] {
+            assert_eq!(Benchmark::parse(bad), None, "{bad}");
+        }
+        // …and the strict path's error names the accepted forms.
+        let msg = Benchmark::parse_strict("1-G").unwrap_err().to_string();
+        assert!(msg.contains("1-G") && msg.contains("16-G"), "{msg}");
+    }
+
+    #[test]
+    fn parse_skew_tags_and_aliases() {
+        assert_eq!(Benchmark::parse("zipf"), Some(Benchmark::Zipf(DEFAULT_ZIPF_THETA100)));
+        assert_eq!(Benchmark::parse("Z-75"), Some(Benchmark::Zipf(75)));
+        assert_eq!(Benchmark::parse("exp"), Some(Benchmark::Exponential));
+        assert_eq!(
+            Benchmark::parse("almost-sorted"),
+            Some(Benchmark::AlmostSorted(DEFAULT_ALMOST_SORTED_PCT))
+        );
+        assert_eq!(Benchmark::parse("AS-10"), Some(Benchmark::AlmostSorted(10)));
+        assert_eq!(Benchmark::parse("reverse"), Some(Benchmark::Reverse));
+        assert_eq!(Benchmark::parse("8d"), Some(Benchmark::EightDup));
+        assert_eq!(Benchmark::parse("eight-dup"), Some(Benchmark::EightDup));
+        // Out-of-range parameters are rejected.
+        assert_eq!(Benchmark::parse("Z-0"), None);
+        assert_eq!(Benchmark::parse("Z-401"), None);
+        assert_eq!(Benchmark::parse("AS-101"), None);
+    }
+
+    #[test]
+    fn zipf_concentrates_on_the_head_rank() {
+        use std::collections::HashMap;
+        let keys = generate_for_proc(Benchmark::Zipf(100), 0, P, 1 << 14);
+        let mut freq: HashMap<i32, usize> = HashMap::new();
+        for &k in &keys {
+            *freq.entry(k).or_default() += 1;
+        }
+        let (&top_key, &top) = freq.iter().max_by_key(|e| *e.1).unwrap();
+        // θ = 1 over 1024 ranks puts ~13 % of the mass on rank 1.
+        assert!(top as f64 > 0.08 * keys.len() as f64, "top={top}");
+        assert_eq!(top_key, 0, "the head rank maps to the smallest key");
+        assert!(freq.len() <= ZIPF_RANKS);
+    }
+
+    #[test]
+    fn exponential_mass_sits_in_the_low_range() {
+        let keys = generate_for_proc(Benchmark::Exponential, 0, P, 1 << 14);
+        assert!(keys.iter().all(|&k| k >= 0));
+        let low = keys.iter().filter(|&&k| (k as i64) < INT_MAX_P1 / 8).count();
+        // P(X < 2·mean) = 1 − e⁻² ≈ 0.86 with scale = INT_MAX/16.
+        assert!(low as f64 > 0.75 * keys.len() as f64, "low={low}");
+    }
+
+    #[test]
+    fn almost_sorted_is_mostly_sorted() {
+        let n_local = 1 << 12;
+        let descents = |keys: &[i32]| keys.windows(2).filter(|w| w[0] > w[1]).count();
+        // f = 0 is exactly the sorted block deal…
+        let clean = generate_for_proc(Benchmark::AlmostSorted(0), 1, P, n_local);
+        assert_eq!(descents(&clean), 0);
+        // …whose pid blocks tile the global order.
+        let next = generate_for_proc(Benchmark::AlmostSorted(0), 2, P, n_local);
+        assert!(clean[n_local - 1] < next[0], "blocks are globally ordered");
+        // f = 50 perturbs, but each transposition breaks at most 4
+        // adjacencies, so the stream stays mostly sorted.
+        let noisy = generate_for_proc(Benchmark::AlmostSorted(50), 1, P, n_local);
+        let swaps = n_local * 50 / 200;
+        let d = descents(&noisy);
+        assert!(d >= 1, "perturbation must actually perturb");
+        assert!(d <= 4 * swaps, "descents={d}");
+        // The multiset is the untouched deal.
+        let mut resorted = noisy.clone();
+        resorted.sort_unstable();
+        assert_eq!(resorted, clean);
+    }
+
+    #[test]
+    fn reverse_is_globally_descending() {
+        let a = generate_for_proc(Benchmark::Reverse, 0, P, 64);
+        let b = generate_for_proc(Benchmark::Reverse, 1, P, 64);
+        assert!(a.windows(2).all(|w| w[0] > w[1]), "per-proc strictly descending");
+        assert!(a[63] > b[0], "processor blocks descend too");
+        assert!(a.iter().all(|&k| k >= 0));
+    }
+
+    #[test]
+    fn eight_dup_is_duplicate_heavy() {
+        use std::collections::HashSet;
+        let mut all: Vec<i32> = Vec::new();
+        for pid in 0..P {
+            all.extend(generate_for_proc(Benchmark::EightDup, pid, P, N_LOCAL));
+        }
+        let n_total = P * N_LOCAL;
+        let distinct: HashSet<_> = all.iter().collect();
+        assert!(distinct.len() < n_total / 4, "distinct={}", distinct.len());
+        assert!(all.iter().all(|&k| k >= 0 && (k as usize) < n_total));
+    }
+
+    #[test]
+    fn typed_skew_benchmarks_keep_their_duplicates() {
+        // [Z-θ] and [8D] are duplicate-defined like [DD]: aux entropy
+        // must not split their equal draws into distinct wide keys.
+        use std::collections::HashSet;
+        for bench in [Benchmark::Zipf(100), Benchmark::EightDup] {
+            let draws: HashSet<i32> =
+                generate_for_proc(bench, 0, P, N_LOCAL).into_iter().collect();
+            let typed: HashSet<u64> =
+                generate_typed_for_proc::<u64>(bench, 0, P, N_LOCAL).into_iter().collect();
+            assert_eq!(
+                typed.len(),
+                draws.len(),
+                "{}: aux entropy split the duplicates",
+                bench.tag()
+            );
+        }
+    }
+
+    #[test]
+    fn str_mapping_is_monotone_and_dup_preserving() {
+        use crate::key::Str;
+        let draws = generate_for_proc(Benchmark::Staggered, 1, P, 256);
+        let typed: Vec<Str> = generate_typed_for_proc(Benchmark::Staggered, 1, P, 256);
+        for (i, a) in draws.iter().enumerate() {
+            for (j, b) in draws.iter().enumerate() {
+                if a < b {
+                    assert!(typed[i] < typed[j], "draw order must survive the Str mapping");
+                }
+            }
+        }
+        // Duplicate-defined benchmarks map equal draws to equal strings.
+        let dd: Vec<Str> = generate_typed_for_proc(Benchmark::DetDup, 0, P, 256);
+        let distinct: std::collections::HashSet<_> = dd.iter().collect();
+        let dd_draws: std::collections::HashSet<_> =
+            generate_for_proc(Benchmark::DetDup, 0, P, 256).into_iter().collect();
+        assert_eq!(distinct.len(), dd_draws.len());
     }
 
     #[test]

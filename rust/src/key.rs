@@ -6,15 +6,17 @@
 //! nothing in the algorithms depends on what a key is beyond a total order
 //! and a fixed wire width.  [`Key`] captures exactly that contract, so the
 //! same SPMD programs sort `i32` (the default instantiation everywhere),
-//! `u64`, total-ordered `f64` ([`F64`]) and `(u32 key, u32 payload)`
-//! records ([`Record`]).
+//! `u64`, total-ordered `f64` ([`F64`]), `(u32 key, u32 payload)`
+//! records ([`Record`]) and variable-length strings ([`Str`]).
 //!
 //! Wire format: the engine's communication word is the T3D's 64-bit
 //! integer (§6), so a key encodes into a fixed number of `u64` words
-//! ([`Key::WORDS`], all built-in domains fit one word) and the engine
-//! charges `h` from that width.  [`RadixKey`] additionally provides an
-//! order-preserving unsigned image for the LSD radix backend (`[.SR]`
-//! variants).
+//! ([`Key::WORDS`] — one for the scalar domains, two for [`Str`]) and
+//! the engine charges `h` from that width.  [`RadixKey`] additionally
+//! provides an order-preserving unsigned image for the radix backends
+//! (`[.SR]` variants and the IPS engine); [`Str`]'s image is its 8-byte
+//! prefix, with shared-prefix ties broken by a secondary comparison
+//! pass in the engines (see `RadixKey::IMAGE_EXACT`).
 
 #![warn(missing_docs)]
 
@@ -48,11 +50,28 @@ pub trait Key: Copy + Send + Sync + Ord + fmt::Debug + 'static {
     fn decode(words: &[u64]) -> Self;
 }
 
-/// A key domain with an order-preserving unsigned image, enabling the LSD
-/// radix backend: `a < b` iff `a.radix_image() < b.radix_image()`.
+/// A key domain with an order-preserving unsigned image, enabling the
+/// radix backends.
+///
+/// For most domains the image is *exact* — `a < b` iff
+/// `a.radix_image() < b.radix_image()` — and radix passes alone produce
+/// the fully sorted order.  A domain may instead provide a *prefix*
+/// image ([`IMAGE_EXACT`](RadixKey::IMAGE_EXACT)` = false`, e.g.
+/// [`Str`]'s first eight bytes): then only the weak laws hold
+///
+/// * `a <= b`  ⇒  `image(a) <= image(b)` (never order-reversing), and
+/// * `image(a) < image(b)`  ⇒  `a < b`,
+///
+/// so equal-image keys may still be unequal.  Radix engines handle this
+/// with a tie-break pass (`seq::break_image_ties`): after the passes,
+/// equal-image keys sit in one contiguous run, which is re-sorted by
+/// the full `Ord` order.
 pub trait RadixKey: Key {
     /// Number of 8-bit LSD counting passes covering the image.
     const RADIX_PASSES: u32;
+    /// Whether the image is exact (`a < b` iff image < image).  Prefix
+    /// images set `false` and rely on the engines' tie-break pass.
+    const IMAGE_EXACT: bool = true;
     /// The order-preserving unsigned image.
     fn radix_image(self) -> u64;
 }
@@ -222,6 +241,95 @@ impl RadixKey for Record {
     }
 }
 
+/// A variable-length string key, inline and fixed-capacity: up to
+/// [`Str::MAX_LEN`] non-NUL bytes, zero-padded.  Because `0` is reserved
+/// for padding (shorter strings sort before their extensions, exactly
+/// like byte-string order), the derived array-lexicographic `Ord` *is*
+/// variable-length byte-string order.
+///
+/// Wire format: the 16 bytes as two big-endian `u64` words — big-endian
+/// makes word-lexicographic order equal byte-lexicographic order, so
+/// the encoding is order-preserving (and exact, since it is the whole
+/// key).  The *radix image* is only the first word (the 8-byte prefix):
+/// keys sharing a prefix collide in the image and are separated by the
+/// engines' tie-break pass ([`RadixKey::IMAGE_EXACT`]` = false`).
+#[derive(Clone, Copy, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Str(
+    /// The bytes: content up to the first NUL, NUL-padded to 16.
+    pub [u8; 16],
+);
+
+impl Str {
+    /// Maximum string length (the fixed inline capacity).
+    pub const MAX_LEN: usize = 16;
+
+    /// Build from a byte string; `s` must be at most [`Str::MAX_LEN`]
+    /// bytes and contain no NUL (NUL is the padding sentinel).
+    pub fn from_bytes(s: &[u8]) -> Str {
+        assert!(s.len() <= Str::MAX_LEN, "Str holds at most 16 bytes, got {}", s.len());
+        debug_assert!(!s.contains(&0), "NUL is reserved for padding");
+        let mut b = [0u8; 16];
+        b[..s.len()].copy_from_slice(s);
+        Str(b)
+    }
+
+    /// The string length (bytes before the first NUL).
+    pub fn len(&self) -> usize {
+        self.0.iter().position(|&b| b == 0).unwrap_or(Str::MAX_LEN)
+    }
+
+    /// Whether this is the empty string.
+    pub fn is_empty(&self) -> bool {
+        self.0[0] == 0
+    }
+
+    /// The content bytes (padding stripped).
+    pub fn as_bytes(&self) -> &[u8] {
+        &self.0[..self.len()]
+    }
+}
+
+impl fmt::Debug for Str {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Str({:?})", String::from_utf8_lossy(self.as_bytes()))
+    }
+}
+
+impl Key for Str {
+    const WORDS: u64 = 2;
+    const NAME: &'static str = "str";
+
+    fn max_key() -> Str {
+        Str([0xFF; 16])
+    }
+    fn encode(self, out: &mut Vec<u64>) {
+        let hi: [u8; 8] = self.0[..8].try_into().expect("8-byte half");
+        let lo: [u8; 8] = self.0[8..].try_into().expect("8-byte half");
+        out.push(u64::from_be_bytes(hi));
+        out.push(u64::from_be_bytes(lo));
+    }
+    fn decode(words: &[u64]) -> Str {
+        let mut b = [0u8; 16];
+        b[..8].copy_from_slice(&words[0].to_be_bytes());
+        b[8..].copy_from_slice(&words[1].to_be_bytes());
+        Str(b)
+    }
+}
+
+impl RadixKey for Str {
+    const RADIX_PASSES: u32 = 8;
+    /// The 8-byte prefix is only a *prefix* image: keys sharing it may
+    /// differ in bytes 8..16.
+    const IMAGE_EXACT: bool = false;
+
+    /// The first eight bytes, big-endian — weakly monotone in the
+    /// byte-lexicographic order.
+    fn radix_image(self) -> u64 {
+        let hi: [u8; 8] = self.0[..8].try_into().expect("8-byte prefix");
+        u64::from_be_bytes(hi)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -244,6 +352,27 @@ mod tests {
         );
     }
 
+    /// A random [`Str`]: printable ASCII (never NUL), any length 0..=16.
+    fn arb_str(rng: &mut SplitMix64) -> Str {
+        let len = (rng.next_u64() % 17) as usize;
+        let mut b = [0u8; 16];
+        for slot in b.iter_mut().take(len) {
+            *slot = b'!' + (rng.next_u64() % 94) as u8;
+        }
+        Str(b)
+    }
+
+    /// A random [`Str`] sharing a fixed 8-byte prefix (image collisions
+    /// guaranteed), with a random short suffix.
+    fn arb_shared_prefix_str(rng: &mut SplitMix64) -> Str {
+        let mut s = *b"prefix!!\0\0\0\0\0\0\0\0";
+        let suffix = (rng.next_u64() % 9) as usize;
+        for slot in s.iter_mut().skip(8).take(suffix) {
+            *slot = b'a' + (rng.next_u64() % 26) as u8;
+        }
+        Str(s)
+    }
+
     #[test]
     fn roundtrip_all_domains_property() {
         check("key-roundtrip", |rng| {
@@ -254,6 +383,7 @@ mod tests {
                 key: rng.next_u64() as u32,
                 payload: rng.next_u64() as u32,
             });
+            roundtrip(arb_str(rng));
         });
     }
 
@@ -322,7 +452,87 @@ mod tests {
             assert!(F64(f64::from_bits(rng.next_u64())) <= F64::max_key());
             let r = Record { key: rng.next_u64() as u32, payload: rng.next_u64() as u32 };
             assert!(r <= Record::max_key());
+            assert!(arb_str(rng) <= Str::max_key());
         });
+    }
+
+    #[test]
+    fn str_wire_encoding_is_order_exact() {
+        // The full two-word big-endian encoding is order-*exact*:
+        // word-lexicographic order == byte-string order, both ways
+        // (encode(a) < encode(b) ⇒ a < b is the order-preservation law;
+        // the converse follows from injectivity).
+        check("key-str-encoding-order", |rng| {
+            let (a, b) = (arb_str(rng), arb_str(rng));
+            let mut wa = Vec::new();
+            let mut wb = Vec::new();
+            a.encode(&mut wa);
+            b.encode(&mut wb);
+            assert_eq!(
+                a.cmp(&b),
+                wa.cmp(&wb),
+                "wire order must equal key order for {a:?} vs {b:?}"
+            );
+        });
+    }
+
+    #[test]
+    fn str_prefix_image_is_weakly_monotone() {
+        // The 8-byte prefix image satisfies only the weak laws — the
+        // strict `image_matches_order` does not apply to `Str`.
+        check("key-str-image-weak-order", |rng| {
+            let (a, b) = (arb_str(rng), arb_str(rng));
+            if a < b {
+                assert!(a.radix_image() <= b.radix_image(), "{a:?} vs {b:?}");
+            }
+            if a.radix_image() < b.radix_image() {
+                assert!(a < b, "{a:?} vs {b:?}");
+            }
+            // Shared-prefix keys collide in the image while remaining
+            // distinct — the case the tie-break pass exists for.
+            let (c, d) = (arb_shared_prefix_str(rng), arb_shared_prefix_str(rng));
+            assert_eq!(c.radix_image(), d.radix_image());
+        });
+        assert!(!<Str as RadixKey>::IMAGE_EXACT);
+        assert!(<i32 as RadixKey>::IMAGE_EXACT);
+    }
+
+    #[test]
+    fn str_shared_prefix_ties_break_by_full_order_in_both_radix_engines() {
+        // A corpus dominated by image collisions (every key shares one
+        // 8-byte prefix, plus duplicates), big enough that `ipssort`
+        // leaves its quicksort fallback: both radix engines must agree
+        // with the comparison sort exactly.
+        use crate::seq::{ipssort, quicksort, radixsort};
+        let mut rng = SplitMix64::new(0x5741_5254);
+        let mut corpus: Vec<Str> = (0..2000).map(|_| arb_shared_prefix_str(&mut rng)).collect();
+        let dup = corpus[7];
+        corpus.extend(std::iter::repeat(dup).take(100));
+        let mut expect = corpus.clone();
+        quicksort(&mut expect);
+        let mut by_radix = corpus.clone();
+        radixsort(&mut by_radix);
+        assert_eq!(by_radix, expect, "radixsort must break shared-prefix ties");
+        let mut by_ips = corpus.clone();
+        ipssort(&mut by_ips);
+        assert_eq!(by_ips, expect, "ipssort must break shared-prefix ties");
+    }
+
+    #[test]
+    fn str_from_bytes_len_and_order_basics() {
+        let empty = Str::from_bytes(b"");
+        let a = Str::from_bytes(b"app");
+        let b = Str::from_bytes(b"apple");
+        let c = Str::from_bytes(b"applesauce!!!!!!");
+        assert!(empty.is_empty());
+        assert_eq!(empty.len(), 0);
+        assert_eq!(b.len(), 5);
+        assert_eq!(c.len(), 16);
+        // Shorter strings sort before their extensions (NUL padding).
+        assert!(empty < a && a < b && b < c);
+        assert_eq!(b.as_bytes(), b"apple");
+        assert_eq!(format!("{b:?}"), "Str(\"apple\")");
+        assert_eq!(Str::default(), empty);
     }
 
     #[test]

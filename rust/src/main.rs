@@ -390,13 +390,14 @@ USAGE:
   bsp-sort all-tables [--full]
   bsp-sort sort --algo det|iran|ran|bsi|det2|ran2|det-k|ran-k|
                        helman-det|helman-ran|psrs
-                --bench U|G|B|2-G|S|DD|WR --n 8388608 --p 64
-                [--domain i32|u64|f64|record] [--jobs N]
+                --bench U|G|B|<g>-G|S|DD|WR|Z[-t]|X|AS[-f]|R|8D
+                --n 8388608 --p 64
+                [--domain i32|u64|f64|record|str] [--jobs N]
                 [--local-sort quicksort|lsd-radix|ips] [--no-dup]
                 [--backend threaded|sim]
                 [--groups K | --topology K1xK2x... | --levels auto]
   bsp-sort experiment [--quick] [--algos det,ran,...] [--benches U,DD,...]
-                      [--domains i32,u64,f64,record] [--ns N1,N2] [--ps P1,P2]
+                      [--domains i32,u64,f64,record,str] [--ns N1,N2] [--ps P1,P2]
                       [--backends threaded,sim]
                       [--topologies default,auto,8x4x4]
                       [--local-sorts quicksort,lsd-radix,ips]
@@ -428,7 +429,14 @@ micro-probes, runs the sweep cross-product with warmup + repetitions,
 and writes BENCH_<tag>.json (schema bsp-sort/experiment-report/v4,
 validated after writing) plus BENCH_<tag>.md.  --quick is the CI-sized
 preset: det+ran+det2 on [U]+[DD], i32+u64, 16K keys, p in {4,8}, plus
-one sim-backend cell (det @ p=256).
+one skew-generator cell (det @ [Z] @ p=8) and one sim-backend cell
+(det @ p=256).
+
+Benchmarks: the paper's §6.3 set (U uniform, G gaussian, <g>-G group
+for any g >= 2, B bucket, S staggered, DD duplicates, WR worst-case
+regular) plus the skew families Z[-theta100] zipf, X exponential,
+AS[-pct] almost-sorted, R reverse, 8D eight-dup.  --domain str sorts
+variable-length strings (8-byte prefix radix image, two wire words).
 
 --backend sim (sort) / --backends sim (experiment) runs on the
 deterministic simulator: the identical SPMD programs on single-process

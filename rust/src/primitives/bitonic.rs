@@ -14,7 +14,7 @@
 
 use crate::bsp::engine::BspScope;
 use crate::bsp::msg::{Payload, SampleRec};
-use crate::key::{F64, Key, Record};
+use crate::key::{F64, Key, Record, Str};
 use crate::seq::ops;
 
 /// Items that can ride a [`Payload`] of key domain `K` through the
@@ -46,7 +46,7 @@ macro_rules! bitonic_bare_key {
     )*};
 }
 
-bitonic_bare_key!(i32, u64, F64, Record);
+bitonic_bare_key!(i32, u64, F64, Record, Str);
 
 impl<K: Key> BitonicItem<K> for SampleRec<K> {
     fn pack(items: Vec<Self>) -> Payload<K> {

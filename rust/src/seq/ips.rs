@@ -66,6 +66,13 @@ const DIGIT_BITS: u32 = 8;
 /// every recursion level) and recurses until buckets hit the quicksort
 /// fallback.  O(n) auxiliary space in the buffers, independent of
 /// recursion depth; depth is bounded by the 8 digits of the image.
+///
+/// Prefix-image domains (`K::IMAGE_EXACT == false`) finish with one
+/// tie-break pass: the recursion orders the array by image, leaving
+/// equal-image keys contiguous, and
+/// [`seq::break_image_ties`](super::break_image_ties) re-sorts each
+/// such run by the full `Ord` order (the quicksort fallback already
+/// compares full keys, so its runs are merely re-verified).
 pub fn ipssort<K: RadixKey>(a: &mut [K]) {
     if a.len() <= FALLBACK_CUTOFF {
         quicksort(a);
@@ -73,6 +80,7 @@ pub fn ipssort<K: RadixKey>(a: &mut [K]) {
     }
     let mut scratch = Scratch::new();
     sort_rec(a, &mut scratch);
+    super::break_image_ties(a);
 }
 
 /// Reusable per-sort working memory: the 256 partial-block buffers, the
@@ -112,8 +120,11 @@ fn sort_rec<K: RadixKey>(a: &mut [K], sc: &mut Scratch<K>) {
         return;
     }
     let Some(digit) = plan_digit(a) else {
-        // All images equal ⇒ all keys equal (the RadixKey order-
-        // preservation law makes the image injective) ⇒ sorted.
+        // All images equal ⇒ for exact images all keys are equal and
+        // the slice is sorted; for prefix images (IMAGE_EXACT = false)
+        // the keys may still differ past the prefix, but they form one
+        // contiguous equal-image run that the top-level tie-break pass
+        // in `ipssort` re-sorts by full `Ord`.
         return;
     };
     let shift = digit * DIGIT_BITS;
@@ -511,11 +522,35 @@ mod tests {
     #[test]
     fn equal_images_mean_equal_keys() {
         // Guard the injectivity assumption the all-equal short-circuit
-        // relies on: distinct records must have distinct images, and
-        // image order must follow key order (the RadixKey law).
+        // relies on for *exact*-image domains: distinct records must
+        // have distinct images, and image order must follow key order.
+        // (`key::Str` is the deliberate exception — IMAGE_EXACT = false
+        // — and is covered by the tie-break pass instead; see key.rs.)
         let a = crate::key::Record { key: 3, payload: 9 };
         let b = crate::key::Record { key: 3, payload: 10 };
         assert_ne!(a.radix_image(), b.radix_image());
         assert_eq!(a < b, a.radix_image() < b.radix_image());
+    }
+
+    #[test]
+    fn prefix_image_all_equal_run_is_tie_broken() {
+        // An input whose images are *all* equal but whose keys differ:
+        // sort_rec's plan_digit short-circuit returns immediately, and
+        // only the top-level tie-break pass can order it.
+        use crate::key::Str;
+        let mut rng = crate::util::rng::SplitMix64::new(0x7135);
+        let mut a: Vec<Str> = (0..(FALLBACK_CUTOFF * 2))
+            .map(|_| {
+                let mut b = *b"sameprfx\0\0\0\0\0\0\0\0";
+                for slot in b.iter_mut().skip(8).take((rng.next_u64() % 9) as usize) {
+                    *slot = b'a' + (rng.next_u64() % 26) as u8;
+                }
+                Str(b)
+            })
+            .collect();
+        let mut expect = a.clone();
+        expect.sort_unstable();
+        ipssort(&mut a);
+        assert_eq!(a, expect);
     }
 }

@@ -16,6 +16,34 @@ pub use merge::{merge2, multiway_merge, multiway_merge_owned, multiway_merge_sli
 pub use quicksort::quicksort;
 pub use radixsort::radixsort;
 
+/// Re-sort every maximal run of equal-image keys by the full `Ord`
+/// order — the tie-break pass for prefix-image domains
+/// (`K::IMAGE_EXACT == false`, e.g. `key::Str`).
+///
+/// Both radix engines order the array by `radix_image`, so after their
+/// passes equal-image keys sit in one contiguous run; for an exact
+/// image those keys are equal and this is a no-op (the engines skip the
+/// scan entirely), for a prefix image each run still needs its
+/// secondary comparison on the bytes the image dropped.
+pub fn break_image_ties<K: RadixKey>(a: &mut [K]) {
+    if K::IMAGE_EXACT {
+        return;
+    }
+    let n = a.len();
+    let mut i = 0;
+    while i < n {
+        let img = a[i].radix_image();
+        let mut j = i + 1;
+        while j < n && a[j].radix_image() == img {
+            j += 1;
+        }
+        if j - i > 1 {
+            a[i..j].sort_unstable();
+        }
+        i = j;
+    }
+}
+
 /// Which sequential sorting backend a variant uses.
 ///
 /// The paper studies `[.SQ]` (quicksort) and `[.SR]` (radixsort); `Ips`

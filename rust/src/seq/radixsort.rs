@@ -8,6 +8,13 @@
 //! for bare keys but required by the tagged variant used in tests),
 //! linear time; the charge policy prices it at 15 comparison-equivalents
 //! per key (ops.rs).
+//!
+//! Prefix-image domains (`K::IMAGE_EXACT == false`, e.g. `key::Str`)
+//! get one extra tie-break pass after the counting passes: the passes
+//! leave equal-image keys contiguous, and [`seq::break_image_ties`]
+//! re-sorts each such run by the full `Ord` order.
+//!
+//! [`seq::break_image_ties`]: super::break_image_ties
 
 use crate::key::RadixKey;
 
@@ -32,6 +39,7 @@ pub fn radixsort<K: RadixKey>(a: &mut [K]) {
     if !src_is_a {
         a.copy_from_slice(&scratch);
     }
+    super::break_image_ties(a);
 }
 
 /// One stable counting pass on byte `shift/8` of the radix image.
@@ -88,6 +96,23 @@ pub fn radixsort_pairs<K: RadixKey>(a: &mut [(K, u32)]) {
     }
     if !src_is_a {
         a.copy_from_slice(&scratch);
+    }
+    if !K::IMAGE_EXACT {
+        // Tie-break for prefix images, preserving stability: a *stable*
+        // by-key sort of each equal-image run keeps equal keys in the
+        // pass-stable payload order.
+        let mut i = 0;
+        while i < n {
+            let img = a[i].0.radix_image();
+            let mut j = i + 1;
+            while j < n && a[j].0.radix_image() == img {
+                j += 1;
+            }
+            if j - i > 1 {
+                a[i..j].sort_by(|x, y| x.0.cmp(&y.0));
+            }
+            i = j;
+        }
     }
 }
 

@@ -1,0 +1,376 @@
+//! Balance-envelope audit: every algorithm variant × the full benchmark
+//! set (the paper's §6.3 seven plus the skew families
+//! `[Z]`/`[X]`/`[AS]`/`[R]`/`[8D]`) × `p ∈ {4, 64, 256, 1024}` on the
+//! deterministic simulator, measuring the balance ratio
+//! `max_received / (n/p)` for every cell.
+//!
+//! Envelopes are asserted exactly where the paper guarantees them:
+//!
+//! * **\[DET\]** (Lemma 5.1, `(1 + 1/⌈ω⌉)·n/p + ⌈ω⌉·p`) and **\[BSI\]**
+//!   (exact `n/p`) are *any-input* deterministic bounds — asserted on
+//!   every benchmark, skew families included.
+//! * The randomized (\[IRAN\]/\[RAN\]) and multi-level
+//!   (det-2/ran-2/det-k/ran-k) variants carry high-probability or
+//!   composed envelopes (slackened as in the conformance suite so fixed
+//!   seeds stay robust): asserted on the seven §6.3 benchmarks,
+//!   *recorded but not asserted* on the skew families, where zipf /
+//!   eight-dup duplication can degrade random sampling.
+//! * The [39]/[40]/[44] baselines have no balance guarantee: their
+//!   ratios are recorded only, and a cell that fails outright (e.g.
+//!   [44]/PSRS under massive duplication at tiny `n/p`) becomes a note
+//!   rather than a test failure.
+//!
+//! `BALANCE_AUDIT_WRITE=<path> cargo test --release --test
+//! balance_audit` — wired as `./ci.sh --balance-audit` — regenerates
+//! the committed `docs/BALANCE.md` ratio tables from the same sweep;
+//! with the variable unset the writer test is a no-op and only the
+//! envelope assertions run.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use bsp_sort::bsp::{Backend, Topology};
+use bsp_sort::experiment::{
+    execute_typed, resolved_deep_topology, AlgoVariant, RunSpec, ALL_ALGOS,
+};
+use bsp_sort::gen::{Benchmark, ALL_BENCHMARKS};
+use bsp_sort::sort::{det, iran, SampleSortMethod, SortConfig};
+
+/// The audited grid: `(p, n)` per sweep, chosen so `n/p` spans three
+/// orders of magnitude (1024 / 256 / 256 / 16 keys per processor).
+const GRID: [(usize, usize); 4] = [(4, 1 << 12), (64, 1 << 14), (256, 1 << 16), (1024, 1 << 14)];
+
+/// The paper's §6.3 distributions are the leading seven of
+/// [`ALL_BENCHMARKS`]; everything after them is a skew family.
+const PAPER_BENCHES: usize = 7;
+
+fn is_paper_bench(bench: Benchmark) -> bool {
+    ALL_BENCHMARKS[..PAPER_BENCHES].contains(&bench)
+}
+
+/// One SplitMix64 step, the case-seed scrambler (same scheme as the
+/// conformance suite, different tag so the inputs are distinct).
+fn case_seed(p: u64, idx: u64) -> u64 {
+    bsp_sort::util::rng::SplitMix64::new(0xBA1A_5EED ^ (p << 32) ^ idx).next_u64()
+}
+
+/// Large-`p` cases use sequential sample sorting and ω = 1, exactly as
+/// the conformance suite does: the p²·⌈ω⌉ sample is intrinsic to the
+/// algorithms, and ω = 1 keeps the suite's runtime at its minimum while
+/// Lemma 5.1 still holds exactly (with ε = 1).
+fn case_cfg(p: usize) -> SortConfig {
+    if p >= 256 {
+        SortConfig::default()
+            .with_sample_sort(SampleSortMethod::Sequential)
+            .with_omega(1.0)
+    } else {
+        SortConfig::default()
+    }
+}
+
+/// The per-algorithm balance envelope on keys received by any
+/// processor, or `None` for baselines without a paper guarantee.
+/// Mirrors the conformance suite's bound table.
+fn balance_bound(algo: AlgoVariant, n: usize, p: usize, cfg: &SortConfig) -> Option<f64> {
+    let npp = n as f64 / p as f64;
+    match algo {
+        // Lemma 5.1, deterministic: (1 + 1/⌈ω⌉)·n/p + ⌈ω⌉·p.
+        AlgoVariant::Det => Some(det::nmax_bound(n, p, det::omega_det(cfg, n))),
+        // Claim 5.1 high-probability bound, slackened ×1.5 + ω·p + 64.
+        AlgoVariant::Iran | AlgoVariant::Ran => {
+            let w = iran::omega_ran(cfg, n);
+            Some(1.5 * iran::nmax_bound(n, p, w) + w * p as f64 + 64.0)
+        }
+        // Bitonic merge-split preserves local sizes exactly.
+        AlgoVariant::Bsi => Some(npp),
+        // Two composed oversampling slacks.
+        AlgoVariant::Det2 | AlgoVariant::Ran2 => {
+            let r = det::omega_det(cfg, n).ceil().max(1.0);
+            Some(3.0 * npp + 4.0 * r * p as f64 + 256.0)
+        }
+        // Depth-k: one oversampling slack per routing level.
+        AlgoVariant::DetK | AlgoVariant::RanK => {
+            let spec = RunSpec::new(algo, Benchmark::Uniform, p, n).with_cfg(*cfg);
+            let t: Topology = resolved_deep_topology(&spec);
+            let d = t.depth().max(1) as f64;
+            let r = det::omega_det(cfg, n).ceil().max(1.0);
+            Some(npp * 2.0f64.powf(d) + 4.0 * r * p as f64 * d + 512.0 * d)
+        }
+        AlgoVariant::HelmanDet | AlgoVariant::HelmanRan | AlgoVariant::Psrs => None,
+    }
+}
+
+/// Whether the cell's envelope is a hard assertion (see module doc).
+fn envelope_is_asserted(algo: AlgoVariant, bench: Benchmark) -> bool {
+    match algo {
+        AlgoVariant::Det | AlgoVariant::Bsi => true,
+        AlgoVariant::Iran
+        | AlgoVariant::Ran
+        | AlgoVariant::Det2
+        | AlgoVariant::Ran2
+        | AlgoVariant::DetK
+        | AlgoVariant::RanK => is_paper_bench(bench),
+        AlgoVariant::HelmanDet | AlgoVariant::HelmanRan | AlgoVariant::Psrs => false,
+    }
+}
+
+/// One measured cell of the audit.
+struct Cell {
+    algo: AlgoVariant,
+    bench: Benchmark,
+    /// `max_received / (n/p)`; `None` when the run itself failed (only
+    /// possible for unguaranteed baseline cells).
+    ratio: Option<f64>,
+    /// `envelope / (n/p)` when the variant has an envelope.
+    envelope: Option<f64>,
+    /// Envelope enforced by assertion for this (algo, bench).
+    asserted: bool,
+    /// Envelope present but not asserted, and the measured ratio rose
+    /// above it — the documented degradation cases.
+    exceeded: bool,
+    note: Option<String>,
+}
+
+fn first_line(msg: &str) -> &str {
+    msg.lines().next().unwrap_or("")
+}
+
+/// Run one cell on the simulator, assert its envelope where guaranteed,
+/// and record the measured ratio either way.
+fn audit_cell(algo: AlgoVariant, bench: Benchmark, n: usize, p: usize, seed: u64) -> Cell {
+    let cfg = case_cfg(p);
+    let npp = n as f64 / p as f64;
+    let mut spec = RunSpec::new(algo, bench, p, n).with_cfg(cfg).with_backend(Backend::Sim);
+    spec.seed = seed;
+    let label = format!(
+        "balance-audit algo={} bench={} n={n} p={p} backend=sim replay-seed={seed:#x}",
+        algo.tag(),
+        bench.tag(),
+    );
+    let asserted = envelope_is_asserted(algo, bench);
+    let bound = balance_bound(algo, n, p, &cfg);
+    let envelope = bound.map(|b| b / npp);
+
+    let run = match catch_unwind(AssertUnwindSafe(|| execute_typed::<i32>(&spec))) {
+        Ok(run) => run,
+        Err(e) => {
+            let msg = e
+                .downcast_ref::<String>()
+                .map(String::as_str)
+                .or_else(|| e.downcast_ref::<&str>().copied())
+                .unwrap_or("non-string panic payload")
+                .to_string();
+            assert!(!asserted, "[{label}] guaranteed cell failed to execute: {msg}");
+            return Cell {
+                algo,
+                bench,
+                ratio: None,
+                envelope,
+                asserted,
+                exceeded: false,
+                note: Some(format!("run failed: {}", first_line(&msg))),
+            };
+        }
+    };
+
+    let max_received = run.outputs.iter().map(|r| r.received).max().unwrap_or(0);
+    let ratio = max_received as f64 / npp;
+    let mut exceeded = false;
+    if let Some(b) = bound {
+        if max_received as f64 > b + 1.0 {
+            assert!(
+                !asserted,
+                "[{label}] received {max_received} keys > guaranteed balance bound {b:.1}"
+            );
+            exceeded = true;
+        }
+    }
+    Cell { algo, bench, ratio: Some(ratio), envelope, asserted, exceeded, note: None }
+}
+
+/// Sweep all 11 variants × all benchmarks at one `(p, n)`; cells come
+/// back algo-major (chunks of `ALL_BENCHMARKS.len()` share a variant).
+fn audit_p(p: usize, n: usize) -> Vec<Cell> {
+    let mut cells = Vec::with_capacity(ALL_ALGOS.len() * ALL_BENCHMARKS.len());
+    let mut idx = 0u64;
+    for algo in ALL_ALGOS {
+        for bench in ALL_BENCHMARKS {
+            let seed = case_seed(p as u64, idx);
+            idx += 1;
+            cells.push(audit_cell(algo, bench, n, p, seed));
+        }
+    }
+    cells
+}
+
+/// Print the sweep summary: counts plus every recorded degradation or
+/// baseline failure (the interesting rows of the table).
+fn report(p: usize, n: usize, cells: &[Cell]) {
+    let asserted = cells.iter().filter(|c| c.asserted).count();
+    let exceeded = cells.iter().filter(|c| c.exceeded).count();
+    let failed = cells.iter().filter(|c| c.note.is_some()).count();
+    println!(
+        "balance-audit p={p} n={n}: {} cells ({asserted} envelope-asserted, \
+         {exceeded} recorded-exceeded, {failed} baseline failures)",
+        cells.len()
+    );
+    for c in cells {
+        if c.exceeded {
+            println!(
+                "  recorded exceedance: algo={} bench={} ratio {:.2} > envelope {:.2}",
+                c.algo.tag(),
+                c.bench.tag(),
+                c.ratio.unwrap_or(f64::NAN),
+                c.envelope.unwrap_or(f64::NAN),
+            );
+        }
+        if let Some(note) = &c.note {
+            println!("  baseline note: algo={} bench={}: {note}", c.algo.tag(), c.bench.tag());
+        }
+    }
+}
+
+#[test]
+fn balance_envelopes_p4() {
+    let (p, n) = GRID[0];
+    report(p, n, &audit_p(p, n));
+}
+
+#[test]
+fn balance_envelopes_p64() {
+    let (p, n) = GRID[1];
+    report(p, n, &audit_p(p, n));
+}
+
+#[test]
+fn balance_envelopes_p256() {
+    let (p, n) = GRID[2];
+    report(p, n, &audit_p(p, n));
+}
+
+#[test]
+fn balance_envelopes_p1024() {
+    let (p, n) = GRID[3];
+    report(p, n, &audit_p(p, n));
+}
+
+// --------------------------------------------------------------------
+// docs/BALANCE.md writer (env-gated; a no-op in normal test runs).
+// --------------------------------------------------------------------
+
+fn render_table(p: usize, n: usize, cells: &[Cell]) -> String {
+    let mut s = format!("## p = {p} (n = {n}, n/p = {})\n\n", n / p);
+    s.push_str("| variant | envelope |");
+    for bench in ALL_BENCHMARKS {
+        s.push_str(&format!(" {} |", bench.tag()));
+    }
+    s.push('\n');
+    s.push_str("|---|---|");
+    for _ in ALL_BENCHMARKS {
+        s.push_str("---|");
+    }
+    s.push('\n');
+    for row in cells.chunks(ALL_BENCHMARKS.len()) {
+        let env = match row[0].envelope {
+            Some(e) => format!("{e:.2}"),
+            None => "—".to_string(),
+        };
+        s.push_str(&format!("| {} | {env} |", row[0].algo.tag()));
+        for c in row {
+            let rendered = match c.ratio {
+                Some(r) => format!(
+                    " {r:.2}{}{} |",
+                    if c.asserted { " †" } else { "" },
+                    if c.exceeded { " ⚠" } else { "" }
+                ),
+                None => " ✗ |".to_string(),
+            };
+            s.push_str(&rendered);
+        }
+        s.push('\n');
+    }
+    s.push('\n');
+    s
+}
+
+fn render_doc(sweeps: &[(usize, usize, Vec<Cell>)]) -> String {
+    let mut md = String::from(
+        "# Balance-envelope audit\n\n\
+         Generated by `rust/tests/balance_audit.rs` (regenerate with\n\
+         `./ci.sh --balance-audit`, which sets `BALANCE_AUDIT_WRITE`; the\n\
+         simulator is deterministic, so the numbers are reproducible\n\
+         constants for the committed seeds).\n\n\
+         Each cell is the measured balance ratio `max_received / (n/p)` for\n\
+         one algorithm × benchmark × machine size on the simulator backend.\n\
+         The *envelope* column is the variant's bound in the same units:\n\
+         Lemma 5.1 `(1 + 1/⌈ω⌉)·n/p + ⌈ω⌉·p` for [DET], exact `n/p` for\n\
+         [BSI], the slackened high-probability / composed envelopes of the\n\
+         conformance suite for the randomized and multi-level variants, and\n\
+         none for the [39]/[40]/[44] baselines.\n\n\
+         Markers: `†` the envelope is asserted for this cell (any-input\n\
+         guarantees everywhere; model-dependent envelopes on the seven §6.3\n\
+         benchmarks); `⚠` an unasserted envelope was exceeded — the\n\
+         documented skew degradations; `✗` the run itself failed (recorded\n\
+         for unguaranteed baselines only).\n\n",
+    );
+    for (p, n, cells) in sweeps {
+        md.push_str(&render_table(*p, *n, cells));
+    }
+
+    md.push_str("## Where the randomized variants degrade\n\n");
+    let mut any = false;
+    for (p, _, cells) in sweeps {
+        for c in cells.iter().filter(|c| c.exceeded) {
+            any = true;
+            md.push_str(&format!(
+                "- `{}` on `{}` at p = {p}: ratio {:.2} exceeds its slackened \
+                 envelope {:.2} (recorded, not asserted — the envelope is \
+                 derived for the paper's input model, not for this skew).\n",
+                c.algo.tag(),
+                c.bench.tag(),
+                c.ratio.unwrap_or(f64::NAN),
+                c.envelope.unwrap_or(f64::NAN),
+            ));
+        }
+    }
+    if !any {
+        md.push_str(
+            "No randomized or multi-level variant exceeded its slackened \
+             envelope on any skew benchmark in this sweep: the duplicate \
+             tagging of §5.1.1 keeps even zipf/eight-dup inputs within the \
+             recorded bounds at these machine sizes.\n",
+        );
+    }
+    let failures: Vec<String> = sweeps
+        .iter()
+        .flat_map(|(p, _, cells)| {
+            cells.iter().filter(|c| c.note.is_some()).map(move |c| {
+                format!(
+                    "- `{}` on `{}` at p = {p}: {}\n",
+                    c.algo.tag(),
+                    c.bench.tag(),
+                    c.note.as_deref().unwrap_or(""),
+                )
+            })
+        })
+        .collect();
+    if !failures.is_empty() {
+        md.push_str("\n## Baseline failures\n\n");
+        for f in failures {
+            md.push_str(&f);
+        }
+    }
+    md
+}
+
+#[test]
+fn balance_audit_writes_table_when_armed() {
+    let Ok(path) = std::env::var("BALANCE_AUDIT_WRITE") else {
+        println!("BALANCE_AUDIT_WRITE unset; not regenerating docs/BALANCE.md");
+        return;
+    };
+    let sweeps: Vec<(usize, usize, Vec<Cell>)> =
+        GRID.iter().map(|&(p, n)| (p, n, audit_p(p, n))).collect();
+    let md = render_doc(&sweeps);
+    std::fs::write(&path, md).unwrap_or_else(|e| panic!("cannot write {path}: {e}"));
+    println!("wrote {path}");
+}

@@ -10,11 +10,13 @@
 //! the host's thread budget; the simulator checks it at `p` up to 4096,
 //! seeded and bit-for-bit replayable.
 //!
-//! ~290 seeded cases: every algorithm variant and baseline ×
-//! benchmark distributions × all four key domains × `p ∈ {4 .. 1024}`,
-//! plus a depth-3 tier pinning `4×4×4` / `8×8×8` / `16×16×16` topology
-//! trees for det-k/ran-k at `p ∈ {64, 512, 4096}` over all four
-//! domains.  Each case asserts:
+//! ~390 seeded cases: every algorithm variant and baseline ×
+//! benchmark distributions (the §6.3 seven plus the skew families
+//! `[Z]`/`[X]`/`[AS]`/`[R]`/`[8D]`) × all five key domains (including
+//! `str`, whose radix image is an inexact 8-byte prefix) ×
+//! `p ∈ {4 .. 1024}`, plus a depth-3 tier pinning `4×4×4` / `8×8×8` /
+//! `16×16×16` topology trees for det-k/ran-k at `p ∈ {64, 512, 4096}`.
+//! Each case asserts:
 //!
 //! 1. **sortedness + size** (inside `execute_typed`, the harness gate),
 //! 2. **permutation** — order-independent multiset hash of the output
@@ -43,7 +45,7 @@ use bsp_sort::experiment::{
     execute_typed, resolved_deep_topology, AlgoVariant, RunSpec, StudyKey, ALL_ALGOS,
 };
 use bsp_sort::gen::{generate_typed_for_proc, Benchmark};
-use bsp_sort::key::{Record, F64};
+use bsp_sort::key::{Record, Str, F64};
 use bsp_sort::sort::{det, iran, LocalSortEngine, SampleSortMethod, SortConfig, ALL_ENGINES};
 use bsp_sort::util::check::multiset_sig;
 
@@ -311,7 +313,8 @@ fn conformance_p1024_duplicate_transparency() {
 // --------------------------------------------------------------------
 // Depth-3 tier: det-k / ran-k with pinned three-level topology trees on
 // the simulator — `4×4×4` at p = 64, `8×8×8` at p = 512, `16×16×16` at
-// p = 4096 — over all four key domains × {U, DD} (48 cases).  Exercises
+// p = 4096 — over four key domains (i32/u64/f64/record) × {U, DD}
+// (48 cases).  Exercises
 // the recursion one level past the paper's two-level experiments while
 // asserting the same four properties, with the balance envelope scaled
 // to depth 3.
@@ -494,7 +497,12 @@ fn conformance_engine_axis_p4_i32() {
             (AlgoVariant::Ran, None),
             (AlgoVariant::DetK, Some(&[2, 2])),
         ],
-        &[Benchmark::Uniform, Benchmark::DetDup],
+        &[
+            Benchmark::Uniform,
+            Benchmark::DetDup,
+            Benchmark::Zipf(100),
+            Benchmark::EightDup,
+        ],
         1 << 12,
         4,
     );
@@ -542,6 +550,68 @@ fn conformance_engine_axis_p256_i32() {
         &[Benchmark::Uniform],
         1 << 16,
         256,
+    );
+}
+
+// --------------------------------------------------------------------
+// Skew-workload tier (30): every algorithm × the five adversarial
+// distributions added beyond the paper's §6.3 set — zipf, exponential,
+// almost-sorted, reverse, eight-dup — on i32 at p = 4 (55 cases).
+// Zipf and eight-dup are duplicate-heavy, so this tier doubles as a
+// §5.1.1 transparency check for the skew generators.
+// --------------------------------------------------------------------
+
+const SKEW_BENCHES: [Benchmark; 5] = [
+    Benchmark::Zipf(100),
+    Benchmark::Exponential,
+    Benchmark::AlmostSorted(5),
+    Benchmark::Reverse,
+    Benchmark::EightDup,
+];
+
+#[test]
+fn conformance_p4_i32_skew_benchmarks() {
+    sweep_tier::<i32>(30, &ALL_ALGOS, &SKEW_BENCHES, 1 << 12, 4);
+}
+
+// --------------------------------------------------------------------
+// String-domain tiers (31–32): the `str` domain's radix image is an
+// *inexact* 8-byte prefix, so these tiers are the end-to-end proof that
+// shared-prefix tie-breaking survives every variant's routing — tier A
+// benches at p = 4 (33 cases) and {U, Z} at p = 64 (22 cases).
+// --------------------------------------------------------------------
+
+#[test]
+fn conformance_p4_str_all_algos() {
+    sweep_tier::<Str>(31, &ALL_ALGOS, &TIER_A_BENCHES, 1 << 12, 4);
+}
+
+#[test]
+fn conformance_p64_str_uniform_and_zipf() {
+    sweep_tier::<Str>(
+        32,
+        &ALL_ALGOS,
+        &[Benchmark::Uniform, Benchmark::Zipf(100)],
+        1 << 14,
+        64,
+    );
+}
+
+// --------------------------------------------------------------------
+// Engine axis on strings (tier 33): the three local-sort engines must
+// stay bit-identical on the prefix-image domain too — the radix engines
+// re-sort equal-image runs by full `Ord`, so their output matches the
+// comparison engine exactly.
+// --------------------------------------------------------------------
+
+#[test]
+fn conformance_engine_axis_p4_str() {
+    sweep_engine_axis::<Str>(
+        33,
+        &[(AlgoVariant::Det, None), (AlgoVariant::Ran, None)],
+        &[Benchmark::Uniform, Benchmark::Zipf(100)],
+        1 << 12,
+        4,
     );
 }
 

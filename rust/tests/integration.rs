@@ -2,11 +2,12 @@
 //! all algorithms × all benchmarks, the paper's invariants end to end.
 
 use bsp_sort::bsp::{cray_t3d, BspMachine};
+use bsp_sort::experiment::ALL_ALGOS;
 use bsp_sort::gen::{generate_all, generate_for_proc, Benchmark, ALL_BENCHMARKS};
 use bsp_sort::metrics::Imbalance;
 use bsp_sort::seq::SeqSortKind;
 use bsp_sort::sort::{det, iran, DuplicatePolicy, SortConfig};
-use bsp_sort::tables::runner::{execute, AlgoVariant, RunSpec};
+use bsp_sort::tables::runner::{execute, RunSpec};
 use bsp_sort::util::check::{check_cfg, CheckConfig};
 
 fn assert_globally_sorted(outputs: &[bsp_sort::sort::ProcResult], n: usize) {
@@ -24,15 +25,10 @@ fn assert_globally_sorted(outputs: &[bsp_sort::sort::ProcResult], n: usize) {
 
 #[test]
 fn every_algorithm_sorts_every_benchmark() {
+    // All eleven variants × the full benchmark set (§6.3 seven + the
+    // five skew families) on the threaded backend.
     let n = 1 << 12;
-    for algo in [
-        AlgoVariant::Det,
-        AlgoVariant::Iran,
-        AlgoVariant::Ran,
-        AlgoVariant::Bsi,
-        AlgoVariant::HelmanDet,
-        AlgoVariant::HelmanRan,
-    ] {
+    for algo in ALL_ALGOS {
         for bench in ALL_BENCHMARKS {
             let spec = RunSpec::new(algo, bench, 4, n);
             let report = execute(&spec); // panics internally if unsorted
@@ -50,7 +46,7 @@ fn multiset_preservation_randomized_property() {
         |rng| {
             let p = 1 << (1 + rng.below(3)); // 2, 4, 8
             let n = (p * (64 + rng.below(512) as usize)).next_power_of_two();
-            let bench = ALL_BENCHMARKS[rng.below(7) as usize];
+            let bench = ALL_BENCHMARKS[rng.below(ALL_BENCHMARKS.len() as u64) as usize];
             let params = cray_t3d(p);
             let machine = BspMachine::new(params);
             let cfg = SortConfig::default();

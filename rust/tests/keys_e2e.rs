@@ -1,6 +1,7 @@
 //! End-to-end runs of the generic sorting stack over every built-in key
-//! domain: `i32` (the paper's experiments), `u64`, total-ordered `f64`
-//! and `(u32 key, u32 payload)` records, at p ∈ {4, 8}.
+//! domain: `i32` (the paper's experiments), `u64`, total-ordered `f64`,
+//! `(u32 key, u32 payload)` records and variable-length strings
+//! (8-byte-prefix radix image), at p ∈ {4, 8}.
 //!
 //! For each domain, SORT_DET_BSP and SORT_RAN_BSP must produce a
 //! globally sorted permutation of the input, and the §5.1.1 duplicate
@@ -10,7 +11,7 @@
 
 use bsp_sort::bsp::{cray_t3d, BspMachine};
 use bsp_sort::gen::{generate_heavy_dup_for_proc, generate_typed_for_proc, Benchmark, GenKey};
-use bsp_sort::key::{F64, Key, RadixKey, Record};
+use bsp_sort::key::{F64, Key, RadixKey, Record, Str};
 use bsp_sort::seq::SeqSortKind;
 use bsp_sort::sort::{det, ran, SortConfig};
 
@@ -141,6 +142,14 @@ fn det_ran_sort_record_domain() {
 }
 
 #[test]
+fn det_ran_sort_str_domain() {
+    // Zipf concentrates draws on few ranks, so the string mapping's
+    // aux-derived suffixes are zeroed (duplicate-defined) and the sort
+    // faces massive shared-prefix equality — the tie-break pressure case.
+    run_domain::<Str>(Benchmark::Zipf(100));
+}
+
+#[test]
 fn duplicate_transparency_i32() {
     duplicate_transparency::<i32>();
 }
@@ -158,6 +167,11 @@ fn duplicate_transparency_f64() {
 #[test]
 fn duplicate_transparency_record() {
     duplicate_transparency::<Record>();
+}
+
+#[test]
+fn duplicate_transparency_str() {
+    duplicate_transparency::<Str>();
 }
 
 #[test]

@@ -10,7 +10,7 @@
 //! [`bsp_sort::util::check::replay`].
 
 use bsp_sort::gen::{generate_typed_for_proc, GenKey, ALL_BENCHMARKS};
-use bsp_sort::key::{RadixKey, F64, Record};
+use bsp_sort::key::{RadixKey, F64, Record, Str};
 use bsp_sort::seq::{ips, ipssort, quicksort, radixsort};
 use bsp_sort::util::check::{check, multiset_sig};
 use bsp_sort::util::rng::SplitMix64;
@@ -77,7 +77,7 @@ fn adversarial_shapes<K: GenKey>(rng: &mut SplitMix64) -> Vec<(&'static str, Vec
     ]
 }
 
-/// §6.3 distributions × all four key domains, with the processor slice
+/// §6.3 + skew distributions × all five key domains, with the processor slice
 /// (`pid`, `p`) and the local size randomized per case.
 #[test]
 fn ips_matches_references_across_distributions() {
@@ -95,12 +95,14 @@ fn ips_matches_references_across_distributions() {
             assert_engines_agree(&keys, &format!("f64/{tag}"));
             let keys: Vec<Record> = generate_typed_for_proc(bench, pid, p, n);
             assert_engines_agree(&keys, &format!("record/{tag}"));
+            let keys: Vec<Str> = generate_typed_for_proc(bench, pid, p, n);
+            assert_engines_agree(&keys, &format!("str/{tag}"));
         }
     });
 }
 
 /// Adversarial shapes (empty, single, all-equal, two-value, sorted,
-/// reverse-sorted) in all four domains.
+/// reverse-sorted) in all five domains.
 #[test]
 fn ips_matches_references_on_adversarial_shapes() {
     check("localsort_diff::adversarial", |rng| {
@@ -115,6 +117,9 @@ fn ips_matches_references_on_adversarial_shapes() {
         }
         for (shape, input) in adversarial_shapes::<Record>(rng) {
             assert_engines_agree(&input, &format!("record/{shape}"));
+        }
+        for (shape, input) in adversarial_shapes::<Str>(rng) {
+            assert_engines_agree(&input, &format!("str/{shape}"));
         }
     });
 }
