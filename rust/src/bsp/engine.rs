@@ -830,6 +830,7 @@ pub(super) fn finalize_ledger(builder: LedgerBuilder, names: Vec<String>, wall_u
             reporters: b.reporters,
             procs: b.procs,
             round: None,
+            io_blocks: 0,
         })
         .collect();
     // Group-scoped records follow the whole-machine ones.  Distinct
@@ -855,6 +856,7 @@ pub(super) fn finalize_ledger(builder: LedgerBuilder, names: Vec<String>, wall_u
             reporters: b.reporters,
             procs: b.procs,
             round: Some(round_ids[&(comm, step)]),
+            io_blocks: 0,
         });
     }
     debug_assert!(

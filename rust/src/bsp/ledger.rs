@@ -45,10 +45,17 @@ pub struct SuperstepRecord {
     /// each record is priced with its group-local effective machine
     /// ([`BspParams::scaled_to`]) rather than the full p.
     pub round: Option<usize>,
+    /// EM-BSP block transfers: max over processors of blocks moved
+    /// to/from the local store during this superstep.  Zero for every
+    /// in-core superstep; only the out-of-core driver (`ext/`) records
+    /// nonzero values, priced at `G_io` per block.
+    pub io_blocks: u64,
 }
 
 impl SuperstepRecord {
-    /// Predicted cost under `params`: `max{L, x + g·h}`, in µs.
+    /// Predicted cost under `params`: `max{L, x + g·h} + G_io·b`, in µs
+    /// (the EM-BSP `G·b` term is zero for in-core supersteps, which
+    /// carry `io_blocks = 0`).
     ///
     /// Group-scoped records (`round.is_some()`) price against the
     /// group-local effective machine `params.scaled_to(procs)` — a
@@ -56,7 +63,8 @@ impl SuperstepRecord {
     /// latency floor is the smaller machine's L, not the full
     /// machine's.
     pub fn predicted_us(&self, params: &BspParams) -> f64 {
-        self.pricing_params(params).superstep_cost_us(self.max_ops, self.h_words)
+        let pricing = self.pricing_params(params);
+        pricing.superstep_cost_us(self.max_ops, self.h_words) + pricing.io_us(self.io_blocks)
     }
 
     /// The parameters this record is priced with: `params` itself for
@@ -81,17 +89,20 @@ pub struct PhaseRecord {
     pub supersteps: usize,
     /// max over processors of wall time spent in the phase, µs.
     pub wall_us: f64,
+    /// EM-BSP block transfers attributed to this phase (0 in-core).
+    pub io_blocks: u64,
 }
 
 impl PhaseRecord {
     /// Predicted phase time: compute at the machine rate plus the
-    /// communication (incl. L floors) of its supersteps.
+    /// communication (incl. L floors) of its supersteps, plus the
+    /// EM-BSP `G_io·b` term for phases that touch the block store.
     pub fn predicted_us(&self, params: &BspParams) -> f64 {
         let comm = self.supersteps as f64 * params.l_us.max(0.0);
         // Each superstep floors at L; approximate the phase as
         // compute + max(L·steps, g·h) — h already summed across steps.
         let comm_gh = params.comm_us(self.h_words);
-        params.comp_us(self.max_ops) + comm_gh.max(comm)
+        params.comp_us(self.max_ops) + comm_gh.max(comm) + params.io_us(self.io_blocks)
     }
 }
 
@@ -296,6 +307,7 @@ mod tests {
             reporters: 4,
             procs: 4,
             round: None,
+            io_blocks: 0,
         }
     }
 
@@ -318,6 +330,23 @@ mod tests {
     }
 
     #[test]
+    fn io_blocks_price_at_g_io_on_top_of_the_superstep_cost() {
+        // An external superstep pays max{L, x + g·h} + G_io·b; in-core
+        // records (b = 0) are untouched by the EM term.
+        let params = cray_t3d(16); // L = 130, G_io = T3D synthetic
+        let g_io = params.io_us_per_block;
+        assert!(g_io > 0.0);
+        let mut s = mk("ext:runform", "PhE1:RunForm", 0.0, 0);
+        s.io_blocks = 10;
+        assert!((s.predicted_us(&params) - (130.0 + 10.0 * g_io)).abs() < 1e-9);
+        let in_core = mk("a", "Ph2", 7_000_000.0, 0);
+        assert!((in_core.predicted_us(&params) - 1_000_000.0).abs() < 1.0);
+        // Phase records carry the same term.
+        let ph = PhaseRecord { max_ops: 0.0, h_words: 0, supersteps: 1, wall_us: 1.0, io_blocks: 4 };
+        assert!((ph.predicted_us(&params) - (130.0 + 4.0 * g_io)).abs() < 1e-9);
+    }
+
+    #[test]
     fn l_floor_applies_to_empty_supersteps() {
         let params = cray_t3d(128);
         let mut ledger = Ledger::default();
@@ -337,11 +366,11 @@ mod tests {
         // Mirror the per-phase compute the engine would have recorded.
         ledger.phases.insert(
             "Ph2".into(),
-            PhaseRecord { max_ops: 14_000.0, h_words: 20, supersteps: 2, wall_us: 1.0 },
+            PhaseRecord { max_ops: 14_000.0, h_words: 20, supersteps: 2, wall_us: 1.0, io_blocks: 0 },
         );
         ledger.phases.insert(
             "Ph5".into(),
-            PhaseRecord { max_ops: 0.0, h_words: 500_000, supersteps: 1, wall_us: 1.0 },
+            PhaseRecord { max_ops: 0.0, h_words: 500_000, supersteps: 1, wall_us: 1.0, io_blocks: 0 },
         );
         let by_phase = ledger.phase_predicted_secs(&params);
         let total: f64 = by_phase.values().sum();
@@ -451,12 +480,12 @@ mod tests {
         ledger.supersteps.push(mk("a", "Ph5", 0.0, 1000));
         ledger.phases.insert(
             "Ph5".into(),
-            PhaseRecord { max_ops: 0.0, h_words: 1000, supersteps: 1, wall_us: 500.0 },
+            PhaseRecord { max_ops: 0.0, h_words: 1000, supersteps: 1, wall_us: 500.0, io_blocks: 0 },
         );
         // A wall-only phase the model never priced (no ops, no sync).
         ledger.phases.insert(
             "Ph1:Init".into(),
-            PhaseRecord { max_ops: 0.0, h_words: 0, supersteps: 0, wall_us: 3.0 },
+            PhaseRecord { max_ops: 0.0, h_words: 0, supersteps: 0, wall_us: 3.0, io_blocks: 0 },
         );
         let rows = ledger.phase_comparison(&params);
         assert_eq!(rows.len(), 2);

@@ -7,6 +7,13 @@
 //! sorts 1M keys in ~3 s).  The cost of a superstep is
 //! `max{L, x + g·h}` where `x` is the maximum number of basic operations
 //! on any processor and `h` the maximum words into/out of any processor.
+//!
+//! The out-of-core subsystem (`ext/`) extends the tuple with the EM-BSP
+//! third parameter `G_io`: the time to transfer one fixed-size block
+//! between a processor's memory and its local disk (the EM-BSP/BSP* line
+//! of work prices external supersteps as `max{L, x + g·h} + G·b` for `b`
+//! block transfers).  In-core supersteps carry `b = 0` and price exactly
+//! as before.
 
 /// The BSP parameter tuple plus the operation-rate calibration that turns
 /// abstract "basic computation steps" (comparisons) into microseconds.
@@ -20,6 +27,12 @@ pub struct BspParams {
     pub g_us_per_word: f64,
     /// Computation rate: comparisons per microsecond (T3D: ~7).
     pub comps_per_us: f64,
+    /// EM-BSP block-I/O gap `G_io`: microseconds per
+    /// [`crate::ext::DEFAULT_BLOCK_WORDS`]-word block moved to or from a
+    /// processor's local store.  Calibrated by the `calibrate.rs` I/O
+    /// probe on the threaded backend, synthetic on sim; zero for presets
+    /// that never price external runs.
+    pub io_us_per_block: f64,
 }
 
 impl BspParams {
@@ -31,15 +44,27 @@ impl BspParams {
     /// comparable to measured wall-clock — the paper's measured-vs-
     /// predicted methodology on whatever machine runs the study.
     pub fn host(p: usize, l_us: f64, g_us_per_word: f64, comps_per_us: f64) -> BspParams {
-        BspParams { p, l_us, g_us_per_word, comps_per_us }
+        BspParams { p, l_us, g_us_per_word, comps_per_us, io_us_per_block: 0.0 }
     }
 
-    /// Measurement-only placeholder parameters (L = g = 0, rate = 1):
-    /// used by the calibration probes themselves, which need a machine to
-    /// *execute* on before any prices exist.  Never price a prediction
-    /// with these.
+    /// Same parameters with the EM-BSP block-I/O gap set — builder-style
+    /// so `host(..)` keeps its 4-argument in-core signature.
+    pub fn with_io(self, io_us_per_block: f64) -> BspParams {
+        BspParams { io_us_per_block, ..self }
+    }
+
+    /// Measurement-only placeholder parameters (L = g = G_io = 0,
+    /// rate = 1): used by the calibration probes themselves, which need a
+    /// machine to *execute* on before any prices exist.  Never price a
+    /// prediction with these.
     pub fn unit(p: usize) -> BspParams {
-        BspParams { p, l_us: 0.0, g_us_per_word: 0.0, comps_per_us: 1.0 }
+        BspParams {
+            p,
+            l_us: 0.0,
+            g_us_per_word: 0.0,
+            comps_per_us: 1.0,
+            io_us_per_block: 0.0,
+        }
     }
 
     /// The effective machine seen by a processor *group* of `p_eff < p`
@@ -82,6 +107,12 @@ impl BspParams {
     pub fn comm_us(&self, h_words: u64) -> f64 {
         self.g_us_per_word * h_words as f64
     }
+
+    /// Time (µs) to transfer `blocks` fixed-size blocks between memory
+    /// and the local store (the EM-BSP `G·b` term; 0 for in-core steps).
+    pub fn io_us(&self, blocks: u64) -> f64 {
+        self.io_us_per_block * blocks as f64
+    }
 }
 
 /// Measured Cray T3D parameter points from §6 of the paper.
@@ -95,6 +126,14 @@ pub const T3D_POINTS: [(usize, f64, f64); 4] = [
 /// T3D computation rate: 7 comparisons per µs (§6: "7 comparisons per
 /// microsecond").
 pub const T3D_COMPS_PER_US: f64 = 7.0;
+
+/// Synthetic EM-BSP block-I/O gap for the T3D preset, in µs per
+/// 4096-word (32 KiB) block.  The paper never measures disks; this is a
+/// documented stand-in at ~100 MB/s sustained local-disk bandwidth
+/// (32 KiB / 100 MB/s ≈ 327 µs), so simulator external runs price
+/// deterministically and visibly dominate over `g` for block-sized
+/// payloads.  Host runs replace it with the calibrated probe value.
+pub const T3D_IO_US_PER_BLOCK: f64 = 327.0;
 
 /// BSP parameters of the paper's Cray T3D for `p` processors.
 ///
@@ -111,6 +150,7 @@ pub fn cray_t3d(p: usize) -> BspParams {
         l_us,
         g_us_per_word: g_us,
         comps_per_us: T3D_COMPS_PER_US,
+        io_us_per_block: T3D_IO_US_PER_BLOCK,
     }
 }
 
@@ -197,6 +237,20 @@ mod tests {
     fn comm_cost_is_linear_in_h() {
         let params = cray_t3d(64);
         assert!((params.comm_us(1000) - 280.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn io_cost_is_linear_in_blocks_and_defaults_off() {
+        let t3d = cray_t3d(16);
+        assert_eq!(t3d.io_us_per_block, T3D_IO_US_PER_BLOCK);
+        assert!((t3d.io_us(10) - 3270.0).abs() < 1e-9);
+        // host()/unit() stay in-core unless with_io() arms the G_io term.
+        let host = BspParams::host(4, 5.0, 0.01, 100.0);
+        assert_eq!(host.io_us(1_000_000), 0.0);
+        assert_eq!(host.with_io(50.0).io_us(4), 200.0);
+        assert_eq!(BspParams::unit(8).io_us_per_block, 0.0);
+        // with_io leaves the in-core tuple untouched.
+        assert_eq!(host.with_io(50.0).l_us, host.l_us);
     }
 
     #[test]

@@ -12,7 +12,12 @@
 //! * **compute** — the operation rate: a sequential quicksort of `n`
 //!   random keys, priced at the ledger's own charge policy
 //!   (`ops::sort_charge`, `n lg n`), exactly how the paper derives its
-//!   "7 comparisons per microsecond".
+//!   "7 comparisons per microsecond";
+//! * **block I/O** — the EM-BSP `G_io`: write-then-read a batch of
+//!   fixed-size blocks through a temp-file [`SpillBlockStore`], mean
+//!   wall µs per block transfer.  Simulator-backend calibrations carry
+//!   the synthetic model constant instead
+//!   ([`Calibration::from_params`]).
 //!
 //! Measurement is abstracted behind [`Prober`] so the arithmetic is
 //! testable on a deterministic fake clock ([`SyntheticProber`]): feeding
@@ -25,6 +30,7 @@ use crate::bsp::engine::BspMachine;
 use crate::bsp::ledger::Ledger;
 use crate::bsp::params::BspParams;
 use crate::bsp::Payload;
+use crate::ext::store::{BlockStore, SpillBlockStore, DEFAULT_BLOCK_WORDS};
 use crate::seq::{self, ops};
 use crate::util::bench::black_box;
 use crate::util::rng::SplitMix64;
@@ -40,6 +46,8 @@ pub struct ProbePlan {
     pub a2a_rounds: usize,
     /// Keys sorted by the operation-rate probe.
     pub comp_n: usize,
+    /// Blocks written-then-read by the `G_io` probe (0 skips it).
+    pub io_blocks: usize,
 }
 
 impl ProbePlan {
@@ -50,6 +58,7 @@ impl ProbePlan {
             a2a_h_words: vec![1 << 10, 1 << 12, 1 << 14, 1 << 16, 1 << 18],
             a2a_rounds: 8,
             comp_n: 1 << 16,
+            io_blocks: 64,
         }
     }
 
@@ -60,6 +69,7 @@ impl ProbePlan {
             a2a_h_words: vec![1 << 10, 1 << 12, 1 << 14],
             a2a_rounds: 4,
             comp_n: 1 << 13,
+            io_blocks: 16,
         }
     }
 }
@@ -76,6 +86,10 @@ pub struct Calibration {
     pub g_us_per_word: f64,
     /// Operation rate, comparisons per µs (sequential-sort probe).
     pub comps_per_us: f64,
+    /// EM-BSP block-transfer charge `G_io`, µs per block (temp-file
+    /// probe on the threaded backend, model constant on sim; 0 when
+    /// the probe is skipped — in-core pricing is unaffected).
+    pub g_io_us_per_block: f64,
     /// The (h_words, mean µs) points behind the g fit.
     pub a2a_points: Vec<(u64, f64)>,
     /// Intercept of the t(h) fit, µs — should land near `l_us`.
@@ -95,6 +109,7 @@ impl Calibration {
     /// in host microseconds, comparable to measured wall-clock.
     pub fn params(&self) -> BspParams {
         BspParams::host(self.p, self.l_us, self.g_us_per_word, self.comps_per_us)
+            .with_io(self.g_io_us_per_block)
     }
 
     /// A *synthetic* calibration carrying exactly `params` — no probes
@@ -111,6 +126,7 @@ impl Calibration {
             l_us: params.l_us,
             g_us_per_word: params.g_us_per_word,
             comps_per_us: params.comps_per_us,
+            g_io_us_per_block: params.io_us_per_block,
             a2a_points: vec![(1 << 10, line(1 << 10)), (1 << 14, line(1 << 14))],
             fit_intercept_us: params.l_us,
             fit_r2: 1.0,
@@ -130,6 +146,12 @@ pub trait Prober {
     fn a2a_us(&mut self, h_words: u64, rounds: usize) -> (u64, f64);
     /// Sequential-sort probe over `n` keys: `(charged ops, wall µs)`.
     fn comp_probe(&mut self, n: usize) -> (f64, f64);
+    /// Mean wall µs per block transfer over `blocks` block writes plus
+    /// `blocks` reads.  Defaults to 0 (no external store measured) so
+    /// pre-EM probers stay valid implementations.
+    fn io_us_per_block(&mut self, _blocks: usize) -> f64 {
+        0.0
+    }
 }
 
 /// The real prober: runs micro-programs on the threaded BSP engine.
@@ -192,6 +214,22 @@ impl Prober for HostProber {
         }
         (ops::sort_charge(base.len()), best)
     }
+
+    fn io_us_per_block(&mut self, blocks: usize) -> f64 {
+        if blocks == 0 {
+            return 0.0;
+        }
+        // An unwritable temp dir means no spill backend exists on this
+        // host: calibrate I/O-free rather than fail the whole study.
+        let Ok(store) = SpillBlockStore::new() else { return 0.0 };
+        let block = vec![0x10AD_B10Cu64; DEFAULT_BLOCK_WORDS];
+        let t0 = Instant::now();
+        let ids: Vec<_> = (0..blocks).map(|_| store.put(&block)).collect();
+        for id in ids {
+            black_box(store.read(id).len());
+        }
+        t0.elapsed().as_secs_f64() * 1e6 / (2 * blocks) as f64
+    }
 }
 
 /// A deterministic fake clock implementing the exact BSP model
@@ -204,6 +242,8 @@ pub struct SyntheticProber {
     pub g_us_per_word: f64,
     /// Injected rate, comparisons/µs.
     pub comps_per_us: f64,
+    /// Injected `G_io`, µs/block.
+    pub io_us_per_block: f64,
 }
 
 impl Prober for SyntheticProber {
@@ -218,6 +258,10 @@ impl Prober for SyntheticProber {
     fn comp_probe(&mut self, n: usize) -> (f64, f64) {
         let ops = ops::sort_charge(n);
         (ops, ops / self.comps_per_us)
+    }
+
+    fn io_us_per_block(&mut self, _blocks: usize) -> f64 {
+        self.io_us_per_block
     }
 }
 
@@ -261,6 +305,7 @@ pub fn calibrate_with<P: Prober>(p: usize, prober: &mut P, plan: &ProbePlan) -> 
     let pts: Vec<(f64, f64)> = a2a_points.iter().map(|&(h, t)| (h as f64, t)).collect();
     let (slope, intercept, r2) = fit_line(&pts);
     let (ops, us) = prober.comp_probe(plan.comp_n);
+    let g_io = prober.io_us_per_block(plan.io_blocks);
     Calibration {
         p,
         l_us,
@@ -268,6 +313,7 @@ pub fn calibrate_with<P: Prober>(p: usize, prober: &mut P, plan: &ProbePlan) -> 
         // the calibrated parameters a valid pricing model.
         g_us_per_word: slope.max(1e-6),
         comps_per_us: (ops / us.max(1e-9)).max(1e-3),
+        g_io_us_per_block: g_io.max(0.0),
         a2a_points,
         fit_intercept_us: intercept,
         fit_r2: r2,
@@ -306,12 +352,19 @@ mod tests {
         // The satellite requirement: a deterministic fake clock feeding
         // the exact model t = L + g·h must calibrate back to the
         // injected parameters within tolerance.
-        let (l, g, rate) = (130.0, 0.21, 7.0);
-        let mut prober = SyntheticProber { l_us: l, g_us_per_word: g, comps_per_us: rate };
+        let (l, g, rate, g_io) = (130.0, 0.21, 7.0, 327.0);
+        let mut prober = SyntheticProber {
+            l_us: l,
+            g_us_per_word: g,
+            comps_per_us: rate,
+            io_us_per_block: g_io,
+        };
         let calib = calibrate_with(16, &mut prober, &ProbePlan::default_plan());
         assert!((calib.l_us - l).abs() / l < 1e-9, "L={}", calib.l_us);
         assert!((calib.g_us_per_word - g).abs() / g < 1e-9, "g={}", calib.g_us_per_word);
         assert!((calib.comps_per_us - rate).abs() / rate < 1e-9);
+        assert_eq!(calib.g_io_us_per_block, g_io);
+        assert_eq!(calib.params().io_us_per_block, g_io);
         assert!((calib.fit_intercept_us - l).abs() / l < 1e-6);
         assert!(calib.fit_r2 > 0.999999);
         let params = calib.params();
@@ -341,7 +394,12 @@ mod tests {
             }
         }
         let mut prober = Noisy {
-            inner: SyntheticProber { l_us: 80.0, g_us_per_word: 0.3, comps_per_us: 50.0 },
+            inner: SyntheticProber {
+                l_us: 80.0,
+                g_us_per_word: 0.3,
+                comps_per_us: 50.0,
+                io_us_per_block: 0.0,
+            },
             flip: false,
         };
         let calib = calibrate_with(8, &mut prober, &ProbePlan::default_plan());
@@ -356,11 +414,17 @@ mod tests {
             a2a_h_words: vec![256, 1024, 4096],
             a2a_rounds: 3,
             comp_n: 1 << 11,
+            io_blocks: 4,
         };
         let calib = calibrate_host(2, &plan);
         assert!(calib.l_us.is_finite() && calib.l_us > 0.0, "L={}", calib.l_us);
         assert!(calib.g_us_per_word.is_finite() && calib.g_us_per_word > 0.0);
         assert!(calib.comps_per_us.is_finite() && calib.comps_per_us > 0.0);
+        assert!(
+            calib.g_io_us_per_block.is_finite() && calib.g_io_us_per_block >= 0.0,
+            "G_io={}",
+            calib.g_io_us_per_block
+        );
         assert_eq!(calib.a2a_points.len(), 3);
         assert!(calib.a2a_points.iter().all(|&(h, t)| h > 0 && t >= 0.0));
     }

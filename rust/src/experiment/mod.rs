@@ -59,8 +59,9 @@ pub use calibrate::{
 };
 pub use report::{StudyReport, SCHEMA};
 pub use run::{
-    avg_predicted_secs, execute, execute_typed, measure_config, measure_typed,
-    resolved_deep_topology, Balance, PhaseStat, RunRecord, SingleRun, StudyKey, SuperstepStat,
+    avg_predicted_secs, execute, execute_external_typed, execute_typed, measure_config,
+    measure_typed, resolved_deep_topology, Balance, PhaseStat, RunRecord, SingleRun, StudyKey,
+    SuperstepStat,
 };
 pub use spec::{
     AlgoVariant, KeyDomain, RunConfig, RunSpec, SweepSpec, TopologyChoice, ALL_ALGOS,
@@ -144,6 +145,7 @@ mod tests {
             a2a_h_words: vec![256, 1024],
             a2a_rounds: 2,
             comp_n: 1 << 10,
+            io_blocks: 2,
         };
         let report = run_study(&spec);
         assert_eq!(report.calibrations.len(), 1);

@@ -19,8 +19,11 @@ use super::run::RunRecord;
 /// Schema identifier written into (and required from) every report.
 /// v3 added the per-run `backend` field (`threaded` | `sim`); v4 added
 /// the per-run `topology` field (the shape label of a multi-level
-/// run's topology tree, e.g. `"8x4x4"`; `null` for one-level variants).
-pub const SCHEMA: &str = "bsp-sort/experiment-report/v4";
+/// run's topology tree, e.g. `"8x4x4"`; `null` for one-level variants);
+/// v5 added the EM-BSP block-I/O parameter — per-calibration
+/// `g_io_us_per_block`, per-run `mem_budget` (`null` for in-core
+/// cells), and per-superstep `io_blocks`.
+pub const SCHEMA: &str = "bsp-sort/experiment-report/v5";
 
 /// A complete study: calibrations for every probed `p` plus one
 /// [`RunRecord`] per sweep cell.
@@ -68,6 +71,9 @@ impl StudyReport {
                     ("l_us", Json::num(c.l_us)),
                     ("g_us_per_word", Json::num(c.g_us_per_word)),
                     ("comps_per_us", Json::num(c.comps_per_us)),
+                    // EM-BSP third parameter: charged µs per block of
+                    // external I/O (0 when the probe was skipped).
+                    ("g_io_us_per_block", Json::num(c.g_io_us_per_block)),
                     ("fit_intercept_us", Json::num(c.fit_intercept_us)),
                     ("fit_r2", Json::num(c.fit_r2)),
                     (
@@ -106,23 +112,30 @@ impl StudyReport {
             self.os, self.arch, SCHEMA
         ));
         out.push_str("## Calibrated machine parameters\n\n");
-        out.push_str("| p | L (µs) | g (µs/word) | comps/µs | fit r² | backend |\n");
-        out.push_str("|---:|---:|---:|---:|---:|---|\n");
+        out.push_str(
+            "| p | L (µs) | g (µs/word) | comps/µs | fit r² | backend | G_io (µs/blk) |\n",
+        );
+        out.push_str("|---:|---:|---:|---:|---:|---|---:|\n");
         for c in &self.calibrations {
             out.push_str(&format!(
-                "| {} | {:.2} | {:.4} | {:.1} | {:.4} | {} |\n",
-                c.p, c.l_us, c.g_us_per_word, c.comps_per_us, c.fit_r2, c.backend
+                "| {} | {:.2} | {:.4} | {:.1} | {:.4} | {} | {:.1} |\n",
+                c.p, c.l_us, c.g_us_per_word, c.comps_per_us, c.fit_r2, c.backend,
+                c.g_io_us_per_block
             ));
         }
         out.push_str("\n## Measured vs predicted (per configuration)\n\n");
         out.push_str(
             "| algo | bench | domain | backend | n | p | measured (s) | predicted (s) \
-             | meas/pred | max/avg keys | routed max/avg words |\n",
+             | meas/pred | max/avg keys | routed max/avg words | mem budget |\n",
         );
-        out.push_str("|---|---|---|---|---:|---:|---:|---:|---:|---:|---:|\n");
+        out.push_str("|---|---|---|---|---:|---:|---:|---:|---:|---:|---:|---:|\n");
         for r in &self.runs {
+            let budget = match r.mem_budget {
+                Some(m) => m.to_string(),
+                None => "—".to_string(),
+            };
             out.push_str(&format!(
-                "| {} | {} | {} | {} | {} | {} | {} | {} | {:.2} | {}/{:.0} | {}/{:.0} |\n",
+                "| {} | {} | {} | {} | {} | {} | {} | {} | {:.2} | {}/{:.0} | {}/{:.0} | {} |\n",
                 r.algo_label,
                 r.bench,
                 r.domain,
@@ -136,6 +149,7 @@ impl StudyReport {
                 r.balance.recv_mean,
                 r.balance.routed_words_max,
                 r.balance.routed_words_avg,
+                budget,
             ));
         }
         out.push_str("\n## Per-phase ratios\n\n");
@@ -211,6 +225,9 @@ fn run_to_json(r: &RunRecord) -> Json {
                     "round",
                     s.round.map(|r| Json::num(r as f64)).unwrap_or(Json::Null),
                 ),
+                // Charged external-I/O blocks (max over processors);
+                // non-zero only on the external-sort phases.
+                ("io_blocks", Json::num(s.io_blocks as f64)),
             ])
         })
         .collect();
@@ -229,6 +246,12 @@ fn run_to_json(r: &RunRecord) -> Json {
         ),
         ("n", Json::num(r.n as f64)),
         ("p", Json::num(r.p as f64)),
+        // External-memory budget in keys per processor; null marks an
+        // in-core cell.
+        (
+            "mem_budget",
+            r.mem_budget.map(|m| Json::num(m as f64)).unwrap_or(Json::Null),
+        ),
         ("warmup", Json::num(r.warmup as f64)),
         ("reps", Json::num(r.reps as f64)),
         (
@@ -277,6 +300,7 @@ mod tests {
                 l_us: 12.0,
                 g_us_per_word: 0.02,
                 comps_per_us: 150.0,
+                g_io_us_per_block: 327.0,
                 a2a_points: vec![(1024, 33.0), (4096, 95.0)],
                 fit_intercept_us: 12.5,
                 fit_r2: 0.998,
@@ -291,6 +315,7 @@ mod tests {
                 topology: None,
                 n: 4096,
                 p: 4,
+                mem_budget: None,
                 warmup: 1,
                 reps: 2,
                 wall_us: SampleStats { n: 2, min: 900.0, max: 1100.0, mean: 1000.0, stddev: 100.0 },
@@ -329,6 +354,7 @@ mod tests {
                     predicted_us: 35.0,
                     procs: 4,
                     round: None,
+                    io_blocks: 7,
                 }],
             }],
         }
@@ -348,6 +374,13 @@ mod tests {
         let phases = runs[0].get("phases").unwrap().as_arr().unwrap();
         assert!(phases[1].get("ratio").unwrap().is_null());
         assert_eq!(phases[0].get("ratio").unwrap().as_f64(), Some(1.25));
+        // v5 fields: calibration G_io, in-core null budget, superstep
+        // block-I/O counts.
+        let calib = &doc.get("calibrations").unwrap().as_arr().unwrap()[0];
+        assert_eq!(calib.get("g_io_us_per_block").unwrap().as_f64(), Some(327.0));
+        assert!(runs[0].get("mem_budget").unwrap().is_null());
+        let steps = runs[0].get("supersteps").unwrap().as_arr().unwrap();
+        assert_eq!(steps[0].get("io_blocks").unwrap().as_u64(), Some(7));
     }
 
     #[test]
@@ -355,6 +388,8 @@ mod tests {
         let md = sample_report().to_markdown();
         assert!(md.contains("# BSP sorting experiment — `unit`"));
         assert!(md.contains("| 4 | 12.00 | 0.0200 | 150.0 |"));
+        // The EM third parameter rides the end of the calibration row.
+        assert!(md.contains("| threaded | 327.0 |"));
         assert!(md.contains("[DSQ]"));
         assert!(md.contains("Ph2:SeqSort"));
         assert!(md.contains("| Ph1:Init | 0.0 | 1.0 | — |"));

@@ -143,9 +143,17 @@ pub fn execute_typed<K: StudyKey>(spec: &RunSpec) -> SingleRun<K> {
         .run_spec::<K>(spec)
         .unwrap_or_else(|e| panic!("BSP processor thread panicked: {e}"));
 
+    verify_outputs(&run.outputs, n);
+    SingleRun { outputs: run.outputs, ledger: run.ledger }
+}
+
+/// Harness-integrity guard shared by the in-core and external
+/// executors: the concatenated per-processor outputs must be globally
+/// sorted and total exactly `n` keys.
+fn verify_outputs<K: StudyKey>(outputs: &[ProcResult<K>], n: usize) {
     let mut total = 0usize;
     let mut last: Option<K> = None;
-    for r in &run.outputs {
+    for r in outputs {
         for &k in &r.keys {
             if let Some(prev) = last {
                 assert!(prev <= k, "harness: output not globally sorted");
@@ -155,7 +163,20 @@ pub fn execute_typed<K: StudyKey>(spec: &RunSpec) -> SingleRun<K> {
         total += r.keys.len();
     }
     assert_eq!(total, n, "harness: output size mismatch");
+}
 
+/// Execute one external-memory cell (`mem_budget = Some(budget)`)
+/// through [`crate::ext::sort_external`] and verify it under the same
+/// guards as the in-core path.  Input generation is the same
+/// deterministic per-processor stream the in-core cells draw, so the
+/// two paths are directly comparable key-for-key.
+pub fn execute_external_typed<K: StudyKey>(cfg: &RunConfig, budget: usize) -> SingleRun<K> {
+    let mut spec = crate::ext::ExtSortSpec::new(cfg.bench, cfg.n, cfg.p, budget);
+    spec.backend = cfg.backend;
+    spec.engine = cfg.local_sort;
+    let run = crate::ext::sort_external::<K>(&spec)
+        .unwrap_or_else(|e| panic!("external sort failed: {e}"));
+    verify_outputs(&run.outputs, cfg.n);
     SingleRun { outputs: run.outputs, ledger: run.ledger }
 }
 
@@ -248,6 +269,9 @@ pub struct SuperstepStat {
     /// Group-round index for group-scoped supersteps; `None` for
     /// whole-machine ones.
     pub round: Option<usize>,
+    /// Blocks of external I/O charged at this sync (max over
+    /// processors); zero everywhere except the external-sort phases.
+    pub io_blocks: u64,
 }
 
 /// A fully measured sweep cell: wall-clock statistics over the recorded
@@ -273,6 +297,10 @@ pub struct RunRecord {
     pub n: usize,
     /// Processors.
     pub p: usize,
+    /// External-memory budget in keys per processor; `None` for
+    /// in-core cells.  `Some` cells ran [`crate::ext::sort_external`]
+    /// instead of the cell's `algo`.
+    pub mem_budget: Option<usize>,
     /// Warm-up runs that preceded the recorded reps.
     pub warmup: usize,
     /// Recorded repetitions.
@@ -308,7 +336,12 @@ pub fn measure_typed<K: StudyKey>(
     // `auto` asks the planner under the *calibrated* machine (this is
     // where the topology axis meets the cost model), fixed shapes pass
     // through (validated against `p` by `SweepSpec::validate`).
-    let planned = match cfg.topology {
+    let planned = if cfg.mem_budget.is_some() {
+        // External cells run the two-phase EM sort, not the cell's
+        // algorithm — no topology tree to resolve.
+        None
+    } else {
+        match cfg.topology {
         TopologyChoice::Default => match cfg.algo {
             AlgoVariant::DetK | AlgoVariant::RanK => {
                 Some(multilevel::default_topology(cfg.p))
@@ -322,16 +355,35 @@ pub fn measure_typed<K: StudyKey>(
             _ => Some(plan::plan_det(cfg.n, &host, det::omega_det(&sort_cfg, cfg.n)).topology),
         },
         TopologyChoice::Fixed(t) => Some(t),
+        }
     };
     let mut spec = RunSpec::new(cfg.algo, cfg.bench, cfg.p, cfg.n)
         .with_cfg(sort_cfg)
         .with_backend(cfg.backend);
     spec.topology = planned;
-    let topology = match cfg.algo {
-        AlgoVariant::Det2 | AlgoVariant::Ran2 | AlgoVariant::DetK | AlgoVariant::RanK => {
-            Some(planned.unwrap_or_else(|| multilevel::default_topology(cfg.p)).label())
+    let topology = if cfg.mem_budget.is_some() {
+        None
+    } else {
+        match cfg.algo {
+            AlgoVariant::Det2 | AlgoVariant::Ran2 | AlgoVariant::DetK | AlgoVariant::RanK => {
+                Some(planned.unwrap_or_else(|| multilevel::default_topology(cfg.p)).label())
+            }
+            _ => None,
         }
-        _ => None,
+    };
+
+    // One rep of this cell: external cells route through the EM-BSP
+    // external sort (deterministic inputs — the seed only matters to
+    // the in-core randomized variants).
+    let run_once = |seed: u64| -> SingleRun<K> {
+        match cfg.mem_budget {
+            Some(budget) => execute_external_typed::<K>(cfg, budget),
+            None => {
+                let mut s = spec;
+                s.seed = seed;
+                execute_typed::<K>(&s)
+            }
+        }
     };
 
     // Warmup exists to heat caches and thread pools for the threaded
@@ -340,9 +392,7 @@ pub fn measure_typed<K: StudyKey>(
     // byte-identical results.
     if cfg.backend == Backend::Threaded {
         for w in 0..sweep.warmup {
-            let mut s = spec;
-            s.seed = sweep.seed.wrapping_sub(1 + w as u64);
-            let _ = execute_typed::<K>(&s);
+            let _ = run_once(sweep.seed.wrapping_sub(1 + w as u64));
         }
     }
 
@@ -359,9 +409,7 @@ pub fn measure_typed<K: StudyKey>(
     let mut last_ledger: Option<Ledger> = None;
 
     for r in 0..reps {
-        let mut s = spec;
-        s.seed = sweep.seed.wrapping_add(r as u64);
-        let single = execute_typed::<K>(&s);
+        let single = run_once(sweep.seed.wrapping_add(r as u64));
         wall_samples.push(single.ledger.wall_us);
         predicted_sum += single.ledger.predicted_us(&host);
         for row in single.ledger.phase_comparison(&host) {
@@ -426,18 +474,26 @@ pub fn measure_typed<K: StudyKey>(
             predicted_us: s.predicted_us(&host),
             procs: s.procs,
             round: s.round,
+            io_blocks: s.io_blocks,
         })
         .collect();
 
+    // External cells carry a label suffix so the tables never read an
+    // EM run as the in-core algorithm it displaced.
+    let algo_label = match cfg.mem_budget {
+        Some(_) => format!("{}+EM", cfg.algo.label(&sort_cfg)),
+        None => cfg.algo.label(&sort_cfg),
+    };
     RunRecord {
         algo: cfg.algo.tag().to_string(),
-        algo_label: cfg.algo.label(&sort_cfg),
+        algo_label,
         bench: cfg.bench.tag(),
         domain: cfg.domain.tag().to_string(),
         backend: cfg.backend.tag().to_string(),
         topology,
         n: cfg.n,
         p: cfg.p,
+        mem_budget: cfg.mem_budget,
         // Sim cells skip warmup (deterministic; nothing to warm).
         warmup: if cfg.backend == Backend::Threaded { sweep.warmup } else { 0 },
         reps,
@@ -468,8 +524,12 @@ mod tests {
     use crate::gen::Benchmark;
 
     fn t3d_like_calibration(p: usize) -> Calibration {
-        let mut prober =
-            SyntheticProber { l_us: 130.0, g_us_per_word: 0.21, comps_per_us: 7.0 };
+        let mut prober = SyntheticProber {
+            l_us: 130.0,
+            g_us_per_word: 0.21,
+            comps_per_us: 7.0,
+            io_us_per_block: 327.0,
+        };
         calibrate_with(p, &mut prober, &ProbePlan::quick())
     }
 
@@ -542,6 +602,7 @@ mod tests {
             backend: Backend::Sim,
             topology: TopologyChoice::Default,
             local_sort: crate::sort::LocalSortEngine::Quicksort,
+            mem_budget: None,
         };
         let rec = measure_typed::<i32>(&cfg, &sweep, &calib);
         assert_eq!(rec.backend, "sim");
@@ -568,6 +629,7 @@ mod tests {
             backend: Backend::Sim,
             topology: TopologyChoice::Default,
             local_sort: crate::sort::LocalSortEngine::Ips,
+            mem_budget: None,
         };
         let rec = measure_typed::<u64>(&cfg, &sweep, &calib);
         // The engine rides the record's paper label: [DSI].
@@ -589,6 +651,7 @@ mod tests {
             backend: Backend::Sim,
             topology: TopologyChoice::Auto,
             local_sort: crate::sort::LocalSortEngine::Quicksort,
+            mem_budget: None,
         };
         let rec = measure_typed::<i32>(&cfg, &sweep, &calib);
         let label = rec.topology.expect("depth-k cells record their topology");
@@ -623,6 +686,7 @@ mod tests {
             backend: Backend::Threaded,
             topology: TopologyChoice::Default,
             local_sort: crate::sort::LocalSortEngine::Quicksort,
+            mem_budget: None,
         };
         let rec = measure_typed::<i32>(&cfg, &sweep, &calib);
         let priced: Vec<&PhaseStat> =
@@ -644,6 +708,36 @@ mod tests {
     }
 
     #[test]
+    fn external_cell_measures_routes_through_the_em_sort() {
+        let mut sweep = quick_sweep();
+        sweep.reps = 1;
+        let calib = t3d_like_calibration(4);
+        let cfg = RunConfig {
+            algo: AlgoVariant::Det,
+            bench: Benchmark::Uniform,
+            domain: KeyDomain::I32,
+            n: 1 << 12,
+            p: 4,
+            backend: Backend::Sim,
+            topology: TopologyChoice::Default,
+            local_sort: crate::sort::LocalSortEngine::Quicksort,
+            mem_budget: Some(256),
+        };
+        let rec = measure_typed::<i32>(&cfg, &sweep, &calib);
+        assert_eq!(rec.mem_budget, Some(256));
+        assert_eq!(rec.algo_label, "[DSQ]+EM");
+        assert_eq!(rec.topology, None);
+        assert!(rec.wall_us.mean > 0.0 && rec.predicted_us > 0.0);
+        // The trace carries the charged block I/O of the external
+        // phases — the EM third parameter is visible in the record.
+        assert!(rec.supersteps.iter().any(|s| s.io_blocks > 0));
+        let in_core = RunConfig { mem_budget: None, ..cfg };
+        let rec2 = measure_typed::<i32>(&in_core, &sweep, &calib);
+        assert_eq!(rec2.mem_budget, None);
+        assert!(rec2.supersteps.iter().all(|s| s.io_blocks == 0));
+    }
+
+    #[test]
     fn balance_metrics_track_routing() {
         let sweep = quick_sweep();
         let calib = t3d_like_calibration(4);
@@ -656,6 +750,7 @@ mod tests {
             backend: Backend::Threaded,
             topology: TopologyChoice::Default,
             local_sort: crate::sort::LocalSortEngine::Quicksort,
+            mem_budget: None,
         };
         let rec = measure_config(&cfg, &sweep, &calib);
         assert_eq!(rec.domain, "u64");

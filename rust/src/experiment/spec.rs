@@ -317,6 +317,12 @@ pub struct RunConfig {
     pub topology: TopologyChoice,
     /// Local-sort engine for the per-processor base case.
     pub local_sort: LocalSortEngine,
+    /// Out-of-core memory budget in keys per processor.  `None` runs
+    /// the cell's algorithm in core; `Some(m)` runs the EM-BSP
+    /// external sort ([`crate::ext::sort_external`]) with that budget
+    /// instead — the cell's `local_sort` picks the run-formation
+    /// engine, and its `algo`/`topology` are not consulted.
+    pub mem_budget: Option<usize>,
 }
 
 /// A full sweep: the cross-product of algorithms × benchmarks × key
@@ -352,6 +358,10 @@ pub struct SweepSpec {
     /// default; `--local-sorts quicksort,lsd-radix,ips` sweeps the
     /// base case, which shows up in each record's `algo_label` suffix).
     pub local_sorts: Vec<LocalSortEngine>,
+    /// Memory budgets crossed with the grid (`[None]` by default — all
+    /// in-core; `--mem-budgets none,65536` rides external-sort cells
+    /// along every configuration).
+    pub mem_budgets: Vec<Option<usize>>,
     /// Unrecorded warm-up runs per configuration.
     pub warmup: usize,
     /// Recorded repetitions per configuration (distinct seeds).
@@ -392,6 +402,7 @@ impl SweepSpec {
                     backend: Backend::Threaded,
                     topology: TopologyChoice::Default,
                     local_sort: LocalSortEngine::Quicksort,
+                    mem_budget: None,
                 },
                 RunConfig {
                     algo: AlgoVariant::Det,
@@ -402,9 +413,11 @@ impl SweepSpec {
                     backend: Backend::Sim,
                     topology: TopologyChoice::Default,
                     local_sort: LocalSortEngine::Quicksort,
+                    mem_budget: None,
                 },
             ],
             local_sorts: vec![LocalSortEngine::Quicksort],
+            mem_budgets: vec![None],
             warmup: 1,
             reps: 2,
             seed: 0x0BEE,
@@ -427,6 +440,7 @@ impl SweepSpec {
             topologies: vec![TopologyChoice::Default],
             extras: Vec::new(),
             local_sorts: vec![LocalSortEngine::Quicksort],
+            mem_budgets: vec![None],
             warmup: 1,
             reps: 3,
             seed: 0x0BEE,
@@ -487,9 +501,28 @@ impl SweepSpec {
                 })
                 .collect::<Result<_, _>>()?;
         }
+        if let Some(v) = args.get("mem-budgets") {
+            spec.mem_budgets = split_list(v)
+                .map(|s| {
+                    if s.eq_ignore_ascii_case("none") || s == "0" {
+                        Ok(None)
+                    } else {
+                        s.parse::<usize>().map(Some).map_err(|_| {
+                            CliError(format!(
+                                "bad --mem-budgets entry '{s}' (expected a key count, \
+                                 or 'none' for in-core)"
+                            ))
+                        })
+                    }
+                })
+                .collect::<Result<_, _>>()?;
+        }
         // Any explicit grid override replaces the preset's extra cells:
         // the user asked for exactly this cross-product.
-        if ["algos", "benches", "domains", "backends", "topologies", "local-sorts", "ns", "ps"]
+        if [
+            "algos", "benches", "domains", "backends", "topologies", "local-sorts",
+            "mem-budgets", "ns", "ps",
+        ]
             .iter()
             .any(|k| args.get(k).is_some())
         {
@@ -531,6 +564,12 @@ impl SweepSpec {
         }
         if self.local_sorts.is_empty() {
             return Err("--local-sorts must be non-empty".into());
+        }
+        if self.mem_budgets.is_empty() {
+            return Err("--mem-budgets must be non-empty".into());
+        }
+        if self.mem_budgets.contains(&Some(0)) {
+            return Err("--mem-budgets entries must hold at least one key".into());
         }
         for choice in &self.topologies {
             if let TopologyChoice::Fixed(t) = choice {
@@ -575,12 +614,15 @@ impl SweepSpec {
     }
 
     /// The cross-product, in deterministic
-    /// (algo, bench, domain, n, p, backend, topology, local_sort)
-    /// nesting order, followed by the [`SweepSpec::extras`] cells
-    /// verbatim.  The topology axis only multiplies the depth-k
-    /// variants; every other algorithm gets exactly one cell with
-    /// [`TopologyChoice::Default`].  The local-sort axis multiplies
-    /// every variant — all eleven share the Ph2 base case.
+    /// (algo, bench, domain, n, p, backend, topology, local_sort,
+    /// mem_budget) nesting order, followed by the
+    /// [`SweepSpec::extras`] cells verbatim.  The topology axis only
+    /// multiplies the depth-k variants; every other algorithm gets
+    /// exactly one cell with [`TopologyChoice::Default`].  The
+    /// local-sort axis multiplies every variant — all eleven share the
+    /// Ph2 base case.  The mem-budget axis defaults to the single
+    /// in-core cell (`None`); any `Some(m)` entry rides an
+    /// external-sort cell along each configuration.
     pub fn configs(&self) -> Vec<RunConfig> {
         let mut out = Vec::new();
         for &algo in &self.algos {
@@ -597,16 +639,19 @@ impl SweepSpec {
                             for &backend in &self.backends {
                                 for &topology in topologies {
                                     for &local_sort in &self.local_sorts {
-                                        out.push(RunConfig {
-                                            algo,
-                                            bench,
-                                            domain,
-                                            n,
-                                            p,
-                                            backend,
-                                            topology,
-                                            local_sort,
-                                        });
+                                        for &mem_budget in &self.mem_budgets {
+                                            out.push(RunConfig {
+                                                algo,
+                                                bench,
+                                                domain,
+                                                n,
+                                                p,
+                                                backend,
+                                                topology,
+                                                local_sort,
+                                                mem_budget,
+                                            });
+                                        }
                                     }
                                 }
                             }
@@ -750,6 +795,39 @@ mod tests {
 
         let args =
             Args::parse(sv(&["experiment", "--quick", "--seq", "bogo"]), &["seq"]).unwrap();
+        assert!(SweepSpec::from_args(&args).is_err());
+    }
+
+    #[test]
+    fn mem_budget_axis_crosses_and_parses() {
+        let mut spec = SweepSpec::quick();
+        spec.extras.clear();
+        let base = spec.configs().len();
+        spec.mem_budgets = vec![None, Some(512)];
+        spec.validate().unwrap();
+        assert_eq!(spec.configs().len(), 2 * base);
+        assert!(spec.configs().iter().any(|c| c.mem_budget == Some(512)));
+        assert!(spec.configs().iter().any(|c| c.mem_budget.is_none()));
+        spec.mem_budgets = vec![Some(0)];
+        assert!(spec.validate().is_err());
+        spec.mem_budgets.clear();
+        assert!(spec.validate().is_err());
+
+        let args = Args::parse(
+            sv(&["experiment", "--quick", "--mem-budgets", "none,4096"]),
+            &["mem-budgets"],
+        )
+        .unwrap();
+        let spec = SweepSpec::from_args(&args).unwrap();
+        assert_eq!(spec.mem_budgets, vec![None, Some(4096)]);
+        // Explicit grid override drops the preset extras: 24 base × 2.
+        assert_eq!(spec.configs().len(), 48);
+
+        let args = Args::parse(
+            sv(&["experiment", "--quick", "--mem-budgets", "lots"]),
+            &["mem-budgets"],
+        )
+        .unwrap();
         assert!(SweepSpec::from_args(&args).is_err());
     }
 

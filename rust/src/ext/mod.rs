@@ -1,0 +1,23 @@
+//! Out-of-core (external-memory) sorting under the EM-BSP model.
+//!
+//! When the per-processor input exceeds a memory budget `M`, the sort
+//! becomes the classic two-phase external sort — form `⌈n_local/M⌉`
+//! sorted runs, then merge — with both phases on this crate's existing
+//! machinery: run formation pulls chunks through the persistent engine
+//! pool and the selected [`crate::sort::LocalSortEngine`]; the run
+//! merge is an SPMD program on the BSP engine using the loser tree of
+//! [`crate::seq::merge`].  The cost model grows the EM-BSP third
+//! parameter: each fixed-size block transferred to or from the
+//! [`store::BlockStore`] is charged `G_io` µs
+//! ([`crate::bsp::BspParams::io_us`]), calibrated on the host by the
+//! experiment prober or priced synthetically on the simulator
+//! ([`crate::bsp::params::T3D_IO_US_PER_BLOCK`]).
+//!
+//! Entry point: [`sort::sort_external`]; CLI surface:
+//! `bsp-sort sort --external --mem-budget <n>`.
+
+pub mod sort;
+pub mod store;
+
+pub use sort::{sort_external, ExtRun, ExtSortSpec, PHE1, PHE2, PHE3, PHE4};
+pub use store::{BlockId, BlockStore, MemBlockStore, SpillBlockStore, DEFAULT_BLOCK_WORDS};

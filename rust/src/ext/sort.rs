@@ -1,0 +1,504 @@
+//! Out-of-core EM-BSP sorting: streamed run formation + parallel
+//! multi-way run merge over a [`BlockStore`].
+//!
+//! The classic external sort shaped for the BSP substrate:
+//!
+//! 1. **Run formation** (`PhE1:RunForm`) — each processor's input is
+//!    pulled through the persistent engine pool as a closure task:
+//!    generate, slice into chunks of at most `mem_budget` keys, sort
+//!    each chunk with the selected [`LocalSortEngine`], and spill it to
+//!    the block store as one sorted *run* (plus ≤ 32 evenly spaced
+//!    samples per run for splitter selection).  Charges follow the
+//!    engine's own pricing ([`crate::seq::SeqSorter::charge`]).
+//! 2. **Parallel multi-way merge** (`PhE2..PhE4`) — an SPMD program on
+//!    the BSP engine: runs are dealt across the `p` processors
+//!    round-robin; each processor reads its runs back (`PhE2:MergeIO`,
+//!    the block reads the EM term prices), partitions every run at the
+//!    `p−1` sample splitters (`PhE3:Scatter`, one h-relation), and
+//!    merges the received sorted segments with the loser tree of
+//!    [`crate::seq::merge`] (`PhE4:Merge`, charged
+//!    [`crate::seq::ops::merge_charge`]).
+//!
+//! The output is per-processor [`ProcResult`]s exactly like the in-core
+//! sorts, so the conformance suite's sortedness and `multiset_sig`
+//! checks carry over unchanged — and because the generators are
+//! deterministic per `(bench, pid, p, n_local)`, an external run is
+//! bit-identical to the in-core sort of the same cell.
+//!
+//! Costs land in the ordinary [`Ledger`] with the EM extension: block
+//! transfers are recorded on the supersteps/phases that perform them
+//! (`io_blocks`), priced at `G_io` per block by
+//! [`BspParams::io_us`].  External jobs are submitted with
+//! `n_hint = usize::MAX` so the service never batches a spilling job
+//! onto a shared lane.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::bsp::ledger::{PhaseRecord, SuperstepRecord};
+use crate::bsp::params::T3D_IO_US_PER_BLOCK;
+use crate::bsp::{cray_t3d, Backend, BspParams, BspRun, BspScope, Ledger, Payload, SimMachine};
+use crate::experiment::run::StudyKey;
+use crate::ext::store::{
+    read_blocks, write_blocks, BlockId, BlockStore, MemBlockStore, SpillBlockStore,
+};
+use crate::gen::{generate_typed_for_proc, Benchmark};
+use crate::key::{self, Key};
+use crate::runtime::RuntimeError;
+use crate::seq::{self, multiway_merge_owned, ops};
+use crate::sort::{LocalSortEngine, ProcResult};
+use crate::sorter::Sorter;
+
+/// External phase names (the in-core sorts own `Ph1..Ph7`).
+pub const PHE1: &str = "PhE1:RunForm";
+/// Reading runs back from the block store.
+pub const PHE2: &str = "PhE2:MergeIO";
+/// Partitioning runs at the splitters and routing the segments.
+pub const PHE3: &str = "PhE3:Scatter";
+/// Loser-tree merge of the received segments.
+pub const PHE4: &str = "PhE4:Merge";
+
+/// Superstep label of the block-read barrier — the driver attributes
+/// the measured read transfers to this superstep's `io_blocks`.
+const EXT_READ_LABEL: &str = "ext:read";
+
+/// Samples kept per formed run for splitter selection (the paper's
+/// regular-oversampling idea, shrunk to run granularity).
+const RUN_SAMPLES: usize = 32;
+
+/// One external-sort job description.
+#[derive(Clone, Copy, Debug)]
+pub struct ExtSortSpec {
+    /// Input distribution (generated per processor, §6.3 seeding).
+    pub bench: Benchmark,
+    /// Total keys; must be divisible by `p`.
+    pub n_total: usize,
+    /// Processors.
+    pub p: usize,
+    /// Maximum keys resident per processor during run formation — the
+    /// EM "M".  Budgets below `n_total / p` force spilling into
+    /// multiple runs per processor.
+    pub mem_budget: usize,
+    /// `Threaded` spills to temp files; `Sim` uses the in-memory mock.
+    pub backend: Backend,
+    /// Local sort engine for run formation.
+    pub engine: LocalSortEngine,
+    /// Simulator machine parameters (`None`: Cray T3D with the
+    /// synthetic `G_io`).  Ignored by the threaded backend, whose
+    /// pricing is applied at report time.
+    pub params: Option<BspParams>,
+}
+
+impl ExtSortSpec {
+    /// A spec with the defaults the CLI exposes.
+    pub fn new(bench: Benchmark, n_total: usize, p: usize, mem_budget: usize) -> ExtSortSpec {
+        ExtSortSpec {
+            bench,
+            n_total,
+            p,
+            mem_budget,
+            backend: Backend::Threaded,
+            engine: LocalSortEngine::Quicksort,
+            params: None,
+        }
+    }
+
+    fn validate(&self) -> Result<(), RuntimeError> {
+        let fail = |msg: String| Err(RuntimeError::InvalidJob(msg));
+        if self.p == 0 {
+            return fail("external sort needs p >= 1".into());
+        }
+        if self.n_total % self.p != 0 {
+            return fail(format!(
+                "n = {} is not divisible by p = {} (per-processor generation)",
+                self.n_total, self.p
+            ));
+        }
+        if self.mem_budget == 0 {
+            return fail("mem-budget must be at least 1 key".into());
+        }
+        Ok(())
+    }
+}
+
+/// Result of an external sort: the in-core result shape plus the EM
+/// accounting the report surfaces.
+#[derive(Debug)]
+pub struct ExtRun<K = i32> {
+    /// Per-processor chunks of the global sorted order.
+    pub outputs: Vec<ProcResult<K>>,
+    /// Superstep/phase ledger including the `PhE*` external phases and
+    /// their `io_blocks`.
+    pub ledger: Ledger,
+    /// Sorted runs formed across all processors.
+    pub runs_formed: usize,
+    /// Blocks written to the store (run formation).
+    pub blocks_written: u64,
+    /// Blocks read back (merge).
+    pub blocks_read: u64,
+    /// `"mem"` or `"spill"`.
+    pub store_kind: &'static str,
+}
+
+/// A spilled sorted run: its block sequence and key count.
+#[derive(Clone, Debug)]
+struct RunMeta {
+    blocks: Vec<BlockId>,
+    len: usize,
+}
+
+/// What one processor's formation task returns to the driver.
+struct FormedRuns<K> {
+    runs: Vec<RunMeta>,
+    samples: Vec<K>,
+    charge: f64,
+    wall_us: f64,
+}
+
+/// Everything the merge program shares read-only across processors.
+struct MergeShared<K> {
+    store: Arc<dyn BlockStore>,
+    runs: Vec<RunMeta>,
+    splitters: Vec<K>,
+}
+
+/// Generate, chunk-sort and spill one processor's input (a pool
+/// closure task — runs on one lane, off the SPMD engines).
+fn form_runs<K: StudyKey>(
+    store: &dyn BlockStore,
+    bench: Benchmark,
+    pid: usize,
+    p: usize,
+    n_local: usize,
+    engine: LocalSortEngine,
+    mem_budget: usize,
+) -> FormedRuns<K> {
+    let started = Instant::now();
+    let sorter = seq::backend::<K>(engine.seq_kind());
+    let input = generate_typed_for_proc::<K>(bench, pid, p, n_local);
+    let mut runs = Vec::new();
+    let mut samples = Vec::new();
+    let mut charge = 0.0;
+    for chunk in input.chunks(mem_budget) {
+        let mut run = chunk.to_vec();
+        sorter.sort(&mut run);
+        charge += sorter.charge(run.len());
+        let m = run.len();
+        let s = RUN_SAMPLES.min(m);
+        // The last key of each of s equal segments — evenly spaced and
+        // including the run maximum.
+        for i in 0..s {
+            samples.push(run[(i + 1) * m / s - 1]);
+        }
+        // One encode pass to the wire image, then spill block by block.
+        charge += ops::linear_charge(m);
+        let blocks = write_blocks(store, &key::encode_all(&run));
+        runs.push(RunMeta { blocks, len: m });
+    }
+    FormedRuns { runs, samples, charge, wall_us: started.elapsed().as_secs_f64() * 1e6 }
+}
+
+/// The SPMD merge: read owned runs, scatter splitter segments, merge.
+/// Returns this processor's output and the blocks it read.
+fn merge_program<K: StudyKey, S: BspScope<K>>(
+    ctx: &mut S,
+    shared: &MergeShared<K>,
+) -> (ProcResult<K>, u64) {
+    let p = ctx.nprocs();
+    let pid = ctx.pid();
+
+    // PhE2 — read this processor's deal of the runs (round-robin by
+    // run index, so every processor pays a near-equal share of I/O).
+    ctx.phase(PHE2);
+    let mut blocks_read = 0u64;
+    let mut my_runs: Vec<Vec<K>> = Vec::new();
+    for (r, meta) in shared.runs.iter().enumerate() {
+        if r % p != pid {
+            continue;
+        }
+        let keys = key::decode_all::<K>(&read_blocks(shared.store.as_ref(), &meta.blocks));
+        debug_assert_eq!(keys.len(), meta.len, "run {r} length drifted through the store");
+        blocks_read += meta.blocks.len() as u64;
+        ctx.charge(ops::linear_charge(keys.len())); // decode pass
+        my_runs.push(keys);
+    }
+    ctx.sync(EXT_READ_LABEL);
+
+    // PhE3 — partition each run at the global splitters and route
+    // every segment to its destination.  Segments of one sorted run
+    // are themselves sorted, so each arrives merge-ready.
+    ctx.phase(PHE3);
+    for run in &my_runs {
+        ctx.charge((p as f64 - 1.0) * ops::bsearch_charge(run.len()));
+    }
+    for run in my_runs {
+        let mut bounds = Vec::with_capacity(p + 1);
+        bounds.push(0);
+        for s in &shared.splitters {
+            bounds.push(run.partition_point(|k| k < s));
+        }
+        bounds.push(run.len());
+        for dst in 0..p {
+            let seg = &run[bounds[dst]..bounds[dst + 1]];
+            if !seg.is_empty() {
+                ctx.send(dst, Payload::Keys(seg.to_vec()));
+            }
+        }
+    }
+    ctx.sync("ext:scatter");
+
+    // PhE4 — loser-tree merge of the received segments.
+    ctx.phase(PHE4);
+    let segments: Vec<Vec<K>> = ctx
+        .take_inbox()
+        .into_iter()
+        .map(|(_, payload)| match payload {
+            Payload::Keys(keys) => keys,
+            other => panic!("merge inbox expects keys, got {other:?}"),
+        })
+        .collect();
+    let received: usize = segments.iter().map(Vec::len).sum();
+    let q = segments.len();
+    ctx.charge(ops::merge_charge(received, q));
+    let keys = multiway_merge_owned(segments);
+    ctx.sync("ext:merge");
+    (ProcResult { keys, received, runs: q }, blocks_read)
+}
+
+/// The `p−1` splitters from the pooled run samples (driver side — the
+/// sample is tiny, ≤ 32 per run).  Empty sample ⇒ sentinel splitters,
+/// mirroring [`crate::sort::common::select_splitters`].
+fn splitters_from_samples<K: Key>(mut samples: Vec<K>, p: usize) -> (Vec<K>, f64) {
+    if p <= 1 {
+        return (Vec::new(), 0.0);
+    }
+    let m = samples.len();
+    if m == 0 {
+        return (vec![K::max_key(); p - 1], 0.0);
+    }
+    samples.sort_unstable();
+    let splitters =
+        (1..p).map(|i| samples[(i * m / p).saturating_sub(1).min(m - 1)]).collect();
+    (splitters, ops::sort_charge(m))
+}
+
+/// Run one external sort end to end.  See the module docs for the
+/// phase structure; the returned ledger prices under any
+/// [`BspParams`] whose `io_us_per_block` is set (e.g.
+/// [`cray_t3d`]`(p).with_io(T3D_IO_US_PER_BLOCK)`).
+pub fn sort_external<K: StudyKey>(spec: &ExtSortSpec) -> Result<ExtRun<K>, RuntimeError> {
+    spec.validate()?;
+    let p = spec.p;
+    let n_local = spec.n_total / p;
+    let store: Arc<dyn BlockStore> = match spec.backend {
+        Backend::Sim => Arc::new(MemBlockStore::new()),
+        Backend::Threaded => Arc::new(
+            SpillBlockStore::new()
+                .map_err(|e| RuntimeError::Service(format!("spill store: {e}")))?,
+        ),
+    };
+
+    // PhE1 — run formation, one pool task per processor.  Submitted as
+    // closure tasks so formation parallelism comes from pool lanes,
+    // not from spinning up an SPMD team for sequential work.
+    let pool = Sorter::global();
+    let mut handles = Vec::with_capacity(p);
+    for pid in 0..p {
+        let store = Arc::clone(&store);
+        let (bench, engine, budget) = (spec.bench, spec.engine, spec.mem_budget);
+        handles.push(pool.closure_engine().submit_task(
+            move || {
+                let formed =
+                    form_runs::<K>(store.as_ref(), bench, pid, p, n_local, engine, budget);
+                BspRun { outputs: vec![formed], ledger: Ledger::default() }
+            },
+            true,
+        )?);
+    }
+    let mut formed = Vec::with_capacity(p);
+    for handle in handles {
+        let mut run = handle.join()?;
+        formed.push(run.outputs.pop().expect("one formation result per task"));
+    }
+
+    let mut all_runs = Vec::new();
+    let mut samples = Vec::new();
+    let mut form_wall: f64 = 0.0;
+    let mut form_ops: f64 = 0.0;
+    let mut written_max = 0u64;
+    for f in &mut formed {
+        written_max = written_max.max(f.runs.iter().map(|r| r.blocks.len() as u64).sum());
+        all_runs.append(&mut f.runs);
+        samples.append(&mut f.samples);
+        form_wall = form_wall.max(f.wall_us);
+        form_ops = form_ops.max(f.charge);
+    }
+    let runs_formed = all_runs.len();
+    let (splitters, splitter_ops) = splitters_from_samples(samples, p);
+    form_ops += splitter_ops;
+
+    // PhE2–PhE4 — the SPMD merge, never batched (n_hint = usize::MAX).
+    let shared =
+        Arc::new(MergeShared { store: Arc::clone(&store), runs: all_runs, splitters });
+    let run: BspRun<(ProcResult<K>, u64)> = match spec.backend {
+        Backend::Threaded => {
+            let shared = Arc::clone(&shared);
+            pool.spmd_engine(p)
+                .submit_program_blocking::<K, _, _>(usize::MAX, move |ctx| {
+                    merge_program(ctx, &shared)
+                })?
+                .join()?
+        }
+        Backend::Sim => {
+            let params =
+                spec.params.unwrap_or_else(|| cray_t3d(p).with_io(T3D_IO_US_PER_BLOCK));
+            let shared = Arc::clone(&shared);
+            pool.closure_engine()
+                .submit_task(
+                    move || {
+                        SimMachine::new(params)
+                            .run_keys::<K, _, _>(|ctx| merge_program(ctx, &shared))
+                    },
+                    true,
+                )?
+                .join()?
+        }
+    };
+
+    let BspRun { outputs: pairs, mut ledger } = run;
+    let read_max = pairs.iter().map(|(_, b)| *b).max().unwrap_or(0);
+    let outputs: Vec<ProcResult<K>> = pairs.into_iter().map(|(r, _)| r).collect();
+
+    // Attribute the measured block transfers to the ledger: reads to
+    // the PhE2 barrier, writes to a synthetic formation superstep
+    // prepended ahead of the merge (formation ran outside the SPMD
+    // engines, so the driver records it — like the in-core driver's
+    // round-`None` supersteps).
+    for s in &mut ledger.supersteps {
+        if s.label == EXT_READ_LABEL {
+            s.io_blocks = read_max;
+        }
+    }
+    if let Some(phase) = ledger.phases.get_mut(PHE2) {
+        phase.io_blocks = read_max;
+    }
+    ledger.supersteps.insert(
+        0,
+        SuperstepRecord {
+            label: "ext:runform".into(),
+            phase: PHE1.into(),
+            max_ops: form_ops,
+            h_words: 0,
+            total_words: 0,
+            wall_us: form_wall,
+            reporters: p,
+            procs: p,
+            round: None,
+            io_blocks: written_max,
+        },
+    );
+    ledger.phases.insert(
+        PHE1.into(),
+        PhaseRecord {
+            max_ops: form_ops,
+            h_words: 0,
+            supersteps: 1,
+            wall_us: form_wall,
+            io_blocks: written_max,
+        },
+    );
+    ledger.wall_us += form_wall;
+
+    Ok(ExtRun {
+        outputs,
+        ledger,
+        runs_formed,
+        blocks_written: store.blocks_written(),
+        blocks_read: store.blocks_read(),
+        store_kind: store.kind(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::multiset_sig;
+
+    fn expected_sorted(bench: Benchmark, n: usize, p: usize) -> Vec<i32> {
+        let mut all: Vec<i32> =
+            (0..p).flat_map(|pid| generate_typed_for_proc::<i32>(bench, pid, p, n / p)).collect();
+        all.sort_unstable();
+        all
+    }
+
+    fn concat<K: Copy>(outputs: &[ProcResult<K>]) -> Vec<K> {
+        outputs.iter().flat_map(|r| r.keys.iter().copied()).collect()
+    }
+
+    #[test]
+    fn sim_external_sort_matches_the_in_core_order() {
+        let (n, p) = (4096, 4);
+        let mut spec = ExtSortSpec::new(Benchmark::Uniform, n, p, 256);
+        spec.backend = Backend::Sim;
+        let run = sort_external::<i32>(&spec).expect("sim external sort");
+        assert_eq!(run.store_kind, "mem");
+        assert_eq!(run.runs_formed, 4 * p); // 1024 local keys / 256 budget
+        assert_eq!(concat(&run.outputs), expected_sorted(Benchmark::Uniform, n, p));
+    }
+
+    #[test]
+    fn threaded_external_sort_spills_and_matches() {
+        let (n, p) = (4096, 4);
+        let spec = ExtSortSpec::new(Benchmark::DetDup, n, p, 200);
+        let run = sort_external::<i32>(&spec).expect("threaded external sort");
+        assert_eq!(run.store_kind, "spill");
+        assert!(run.runs_formed > p, "budget 200 < 1024 must force spilling");
+        assert!(run.blocks_written > 0 && run.blocks_read == run.blocks_written);
+        let got = concat(&run.outputs);
+        let expect = expected_sorted(Benchmark::DetDup, n, p);
+        assert_eq!(multiset_sig(got.iter().copied()), multiset_sig(expect.iter().copied()));
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn ledger_carries_io_blocks_on_the_external_phases() {
+        let mut spec = ExtSortSpec::new(Benchmark::Uniform, 8192, 4, 512);
+        spec.backend = Backend::Sim;
+        let run = sort_external::<i32>(&spec).expect("sim external sort");
+        let form = &run.ledger.phases[PHE1];
+        let io = &run.ledger.phases[PHE2];
+        assert!(form.io_blocks > 0, "formation must charge block writes");
+        assert!(io.io_blocks > 0, "merge must charge block reads");
+        assert_eq!(run.ledger.supersteps[0].phase, PHE1);
+        // Pricing with G_io strictly exceeds pricing without it.
+        let flat = cray_t3d(4);
+        let em = flat.with_io(T3D_IO_US_PER_BLOCK);
+        assert!(run.ledger.predicted_us(&em) > run.ledger.predicted_us(&flat));
+    }
+
+    #[test]
+    fn degenerate_budgets_and_shapes_still_sort() {
+        // Budget of one key: every run is a singleton (merge fan-in is
+        // maximal); p = 1: no splitters at all.
+        for (p, budget) in [(4usize, 1usize), (1, 7)] {
+            let mut spec = ExtSortSpec::new(Benchmark::Uniform, 256, p, budget);
+            spec.backend = Backend::Sim;
+            let run = sort_external::<i32>(&spec).expect("degenerate external sort");
+            assert_eq!(concat(&run.outputs), expected_sorted(Benchmark::Uniform, 256, p));
+        }
+    }
+
+    #[test]
+    fn invalid_specs_are_rejected() {
+        let bad_div = ExtSortSpec::new(Benchmark::Uniform, 100, 3, 8);
+        assert!(matches!(
+            sort_external::<i32>(&bad_div),
+            Err(RuntimeError::InvalidJob(_))
+        ));
+        let bad_budget = ExtSortSpec::new(Benchmark::Uniform, 96, 3, 0);
+        assert!(matches!(
+            sort_external::<i32>(&bad_budget),
+            Err(RuntimeError::InvalidJob(_))
+        ));
+    }
+}

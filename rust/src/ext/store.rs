@@ -1,0 +1,269 @@
+//! Fixed-size block storage for the out-of-core sorter.
+//!
+//! The EM-BSP model (PAPERS.md: Dehne et al.'s external-memory BSP)
+//! extends `(p, L, g)` with a per-block transfer charge `G_io`: every
+//! disk access moves one fixed-size block of `B` words.  This module is
+//! the storage substrate that makes the charge *countable*: a
+//! [`BlockStore`] hands out opaque [`BlockId`]s for block-sized word
+//! buffers and counts every `put`/`read` so the driver can attribute
+//! `G_io·b` to the ledger ([`crate::bsp::ledger`]).
+//!
+//! Two backends mirror the in-core `Backend::{Threaded, Sim}` split:
+//!
+//! * [`MemBlockStore`] — a heap-backed mock for the simulator path
+//!   (deterministic, no filesystem), still charging per block;
+//! * [`SpillBlockStore`] — a real temp-file backend (one file per
+//!   block under a private `bsp-ext-*` directory in
+//!   `std::env::temp_dir()`), removed on drop.
+//!
+//! Both are `Sync`: run formation writes from several pool lanes and
+//! the merge program reads from `p` SPMD processors concurrently.
+
+use std::collections::HashMap;
+use std::fs;
+use std::io;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Block capacity in 64-bit words.  4096 words = 32 KiB, the classic
+/// external-memory page granularity; every `put` of up to this many
+/// words costs exactly one block transfer.
+pub const DEFAULT_BLOCK_WORDS: usize = 4096;
+
+/// Opaque handle to one stored block, unique within its store.
+pub type BlockId = u64;
+
+/// A store of fixed-size word blocks with transfer accounting.
+///
+/// `put` and `read` each count one block transfer regardless of fill —
+/// that is the EM model's point: a half-empty block costs a full block.
+pub trait BlockStore: Send + Sync {
+    /// Store up to [`DEFAULT_BLOCK_WORDS`] words as one block.
+    fn put(&self, words: &[u64]) -> BlockId;
+    /// Read a block back; panics on an unknown id (a driver bug, not a
+    /// recoverable condition).
+    fn read(&self, id: BlockId) -> Vec<u64>;
+    /// Discard a block (uncounted — deletion is metadata, not transfer).
+    fn delete(&self, id: BlockId);
+    /// Cumulative blocks written through `put`.
+    fn blocks_written(&self) -> u64;
+    /// Cumulative blocks read through `read`.
+    fn blocks_read(&self) -> u64;
+    /// `"mem"` or `"spill"` — surfaced in reports.
+    fn kind(&self) -> &'static str;
+}
+
+/// Slice `words` into block-sized chunks and store them all; the ids
+/// come back in order, so `read_blocks` reassembles the exact buffer.
+pub fn write_blocks(store: &dyn BlockStore, words: &[u64]) -> Vec<BlockId> {
+    if words.is_empty() {
+        return Vec::new();
+    }
+    words.chunks(DEFAULT_BLOCK_WORDS).map(|c| store.put(c)).collect()
+}
+
+/// Read and concatenate a block sequence written by [`write_blocks`].
+pub fn read_blocks(store: &dyn BlockStore, ids: &[BlockId]) -> Vec<u64> {
+    let mut out = Vec::with_capacity(ids.len() * DEFAULT_BLOCK_WORDS);
+    for &id in ids {
+        out.extend_from_slice(&store.read(id));
+    }
+    out
+}
+
+/// In-memory block store — the simulator backend's mock.  Transfers
+/// are counted exactly as for the spill store, so predicted `G_io·b`
+/// terms are identical across backends for the same plan.
+#[derive(Default)]
+pub struct MemBlockStore {
+    blocks: Mutex<HashMap<BlockId, Vec<u64>>>,
+    next: AtomicU64,
+    written: AtomicU64,
+    read: AtomicU64,
+}
+
+impl MemBlockStore {
+    pub fn new() -> MemBlockStore {
+        MemBlockStore::default()
+    }
+}
+
+impl BlockStore for MemBlockStore {
+    fn put(&self, words: &[u64]) -> BlockId {
+        assert!(words.len() <= DEFAULT_BLOCK_WORDS, "block overflow: {} words", words.len());
+        let id = self.next.fetch_add(1, Ordering::Relaxed);
+        self.blocks.lock().expect("block map poisoned").insert(id, words.to_vec());
+        self.written.fetch_add(1, Ordering::Relaxed);
+        id
+    }
+
+    fn read(&self, id: BlockId) -> Vec<u64> {
+        self.read.fetch_add(1, Ordering::Relaxed);
+        self.blocks
+            .lock()
+            .expect("block map poisoned")
+            .get(&id)
+            .unwrap_or_else(|| panic!("unknown block id {id}"))
+            .clone()
+    }
+
+    fn delete(&self, id: BlockId) {
+        self.blocks.lock().expect("block map poisoned").remove(&id);
+    }
+
+    fn blocks_written(&self) -> u64 {
+        self.written.load(Ordering::Relaxed)
+    }
+
+    fn blocks_read(&self) -> u64 {
+        self.read.load(Ordering::Relaxed)
+    }
+
+    fn kind(&self) -> &'static str {
+        "mem"
+    }
+}
+
+/// Process-wide nonce so concurrent spill stores in one process get
+/// distinct directories (the pid alone does not disambiguate them).
+static SPILL_NONCE: AtomicU64 = AtomicU64::new(0);
+
+/// Temp-file block store — the threaded backend's real spill path.
+/// Each block is one `block-<id>.bin` file (words as little-endian
+/// bytes) under a fresh `bsp-ext-<pid>-<nonce>` directory in
+/// [`std::env::temp_dir`]; the whole directory is removed on drop, so
+/// an external sort leaves nothing behind (`ci.sh --extsort-smoke`
+/// asserts exactly that).
+pub struct SpillBlockStore {
+    dir: PathBuf,
+    next: AtomicU64,
+    written: AtomicU64,
+    read: AtomicU64,
+}
+
+impl SpillBlockStore {
+    /// Create the spill directory; fails only on filesystem errors
+    /// (unwritable temp dir).
+    pub fn new() -> io::Result<SpillBlockStore> {
+        let nonce = SPILL_NONCE.fetch_add(1, Ordering::Relaxed);
+        let dir = std::env::temp_dir().join(format!("bsp-ext-{}-{nonce}", std::process::id()));
+        fs::create_dir_all(&dir)?;
+        Ok(SpillBlockStore {
+            dir,
+            next: AtomicU64::new(0),
+            written: AtomicU64::new(0),
+            read: AtomicU64::new(0),
+        })
+    }
+
+    /// The spill directory (tests assert its lifecycle).
+    pub fn dir(&self) -> &std::path::Path {
+        &self.dir
+    }
+
+    fn path(&self, id: BlockId) -> PathBuf {
+        self.dir.join(format!("block-{id}.bin"))
+    }
+}
+
+impl Drop for SpillBlockStore {
+    fn drop(&mut self) {
+        let _ = fs::remove_dir_all(&self.dir);
+    }
+}
+
+impl BlockStore for SpillBlockStore {
+    fn put(&self, words: &[u64]) -> BlockId {
+        assert!(words.len() <= DEFAULT_BLOCK_WORDS, "block overflow: {} words", words.len());
+        let id = self.next.fetch_add(1, Ordering::Relaxed);
+        let mut bytes = Vec::with_capacity(words.len() * 8);
+        for w in words {
+            bytes.extend_from_slice(&w.to_le_bytes());
+        }
+        fs::write(self.path(id), bytes).expect("spill write failed");
+        self.written.fetch_add(1, Ordering::Relaxed);
+        id
+    }
+
+    fn read(&self, id: BlockId) -> Vec<u64> {
+        self.read.fetch_add(1, Ordering::Relaxed);
+        let bytes = fs::read(self.path(id)).expect("spill read failed");
+        assert_eq!(bytes.len() % 8, 0, "truncated spill block {id}");
+        bytes
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().expect("8-byte chunk")))
+            .collect()
+    }
+
+    fn delete(&self, id: BlockId) {
+        let _ = fs::remove_file(self.path(id));
+    }
+
+    fn blocks_written(&self) -> u64 {
+        self.written.load(Ordering::Relaxed)
+    }
+
+    fn blocks_read(&self) -> u64 {
+        self.read.load(Ordering::Relaxed)
+    }
+
+    fn kind(&self) -> &'static str {
+        "spill"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(store: &dyn BlockStore) {
+        let a = store.put(&[1, 2, 3]);
+        let b = store.put(&[u64::MAX, 0]);
+        assert_eq!(store.read(a), vec![1, 2, 3]);
+        assert_eq!(store.read(b), vec![u64::MAX, 0]);
+        assert_eq!(store.read(a), vec![1, 2, 3]); // re-read, recounted
+        assert_eq!(store.blocks_written(), 2);
+        assert_eq!(store.blocks_read(), 3);
+        store.delete(a);
+        store.delete(b);
+    }
+
+    #[test]
+    fn mem_store_roundtrips_and_counts() {
+        roundtrip(&MemBlockStore::new());
+    }
+
+    #[test]
+    fn spill_store_roundtrips_and_counts() {
+        let store = SpillBlockStore::new().expect("temp dir writable");
+        roundtrip(&store);
+    }
+
+    #[test]
+    fn spill_store_removes_its_directory_on_drop() {
+        let store = SpillBlockStore::new().expect("temp dir writable");
+        let dir = store.dir().to_path_buf();
+        store.put(&[7; 100]);
+        assert!(dir.is_dir());
+        drop(store);
+        assert!(!dir.exists(), "spill dir {} survived drop", dir.display());
+    }
+
+    #[test]
+    fn write_blocks_slices_at_block_capacity() {
+        let store = MemBlockStore::new();
+        let words: Vec<u64> = (0..2 * DEFAULT_BLOCK_WORDS as u64 + 5).collect();
+        let ids = write_blocks(&store, &words);
+        assert_eq!(ids.len(), 3); // 4096 + 4096 + 5
+        assert_eq!(store.blocks_written(), 3);
+        assert_eq!(read_blocks(&store, &ids), words);
+        assert!(write_blocks(&store, &[]).is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "block overflow")]
+    fn put_rejects_oversized_buffers() {
+        MemBlockStore::new().put(&vec![0u64; DEFAULT_BLOCK_WORDS + 1]);
+    }
+}

@@ -455,20 +455,37 @@ fn worst_regular(pid: usize, p: usize, n_local: usize) -> Vec<i32> {
         .collect()
 }
 
+/// Process-wide cache of Zipf CDFs keyed by θ·100.  A sweep touches a
+/// handful of θ values but calls [`zipf`] once per processor per rep, so
+/// without the cache a p = 128, 5-rep cell rebuilds the 1024-rank `powf`
+/// table 640 times.  The cached table is built with the *identical*
+/// accumulation order as before, so draws stay bit-identical.
+fn zipf_cdf(theta100: u32) -> std::sync::Arc<Vec<f64>> {
+    use std::collections::HashMap;
+    use std::sync::{Arc, Mutex, OnceLock};
+    static CACHE: OnceLock<Mutex<HashMap<u32, Arc<Vec<f64>>>>> = OnceLock::new();
+    let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+    let mut map = cache.lock().expect("zipf CDF cache poisoned");
+    Arc::clone(map.entry(theta100).or_insert_with(|| {
+        let theta = theta100 as f64 / 100.0;
+        let mut cdf = Vec::with_capacity(ZIPF_RANKS);
+        let mut acc = 0.0f64;
+        for k in 1..=ZIPF_RANKS {
+            acc += (k as f64).powf(-theta);
+            cdf.push(acc);
+        }
+        Arc::new(cdf)
+    }))
+}
+
 /// [Z-θ] Zipf over [`ZIPF_RANKS`] ranks: rank k ∈ {1..R} is drawn with
 /// probability ∝ 1/k^θ (inverse-CDF over the cumulative weights) and
 /// maps to key `(k−1)·INT_MAX/R` — the head rank is a massively
 /// duplicated *smallest* key, so sampled splitters see a few huge
 /// equivalence classes instead of a smooth value range.
 fn zipf(rng: &mut BsdRandom, theta100: u32, n_local: usize) -> Vec<i32> {
-    let theta = theta100 as f64 / 100.0;
-    let mut cdf = Vec::with_capacity(ZIPF_RANKS);
-    let mut acc = 0.0f64;
-    for k in 1..=ZIPF_RANKS {
-        acc += (k as f64).powf(-theta);
-        cdf.push(acc);
-    }
-    let total = acc;
+    let cdf = zipf_cdf(theta100);
+    let total = *cdf.last().expect("ZIPF_RANKS > 0");
     let scale = INT_MAX_P1 / ZIPF_RANKS as i64;
     (0..n_local)
         .map(|_| {
@@ -723,6 +740,43 @@ mod tests {
         assert!(top as f64 > 0.08 * keys.len() as f64, "top={top}");
         assert_eq!(top_key, 0, "the head rank maps to the smallest key");
         assert!(freq.len() <= ZIPF_RANKS);
+    }
+
+    #[test]
+    fn zipf_cache_is_bit_identical_to_the_uncached_generator() {
+        // Reference: the pre-cache generator body, rebuilding the CDF
+        // inline.  Any change to the cached accumulation order (e.g.
+        // summing in reverse or normalising) would break bit-identity
+        // with historical streams; this pins it.
+        fn zipf_reference(rng: &mut BsdRandom, theta100: u32, n_local: usize) -> Vec<i32> {
+            let theta = theta100 as f64 / 100.0;
+            let mut cdf = Vec::with_capacity(ZIPF_RANKS);
+            let mut acc = 0.0f64;
+            for k in 1..=ZIPF_RANKS {
+                acc += (k as f64).powf(-theta);
+                cdf.push(acc);
+            }
+            let total = acc;
+            let scale = INT_MAX_P1 / ZIPF_RANKS as i64;
+            (0..n_local)
+                .map(|_| {
+                    let u = rng.next_i32() as f64 / INT_MAX_P1 as f64 * total;
+                    let rank = cdf.partition_point(|&c| c <= u);
+                    (rank.min(ZIPF_RANKS - 1) as i64 * scale) as i32
+                })
+                .collect()
+        }
+        for theta100 in [25, 75, 100, 150, 300] {
+            for pid in [0, 3, P - 1] {
+                let mut rng = BsdRandom::new(paper_seed(pid));
+                let expect = zipf_reference(&mut rng, theta100, N_LOCAL);
+                let got = generate_for_proc(Benchmark::Zipf(theta100), pid, P, N_LOCAL);
+                assert_eq!(got, expect, "θ·100={theta100} pid={pid}");
+                // Second call hits the cache; streams must still agree.
+                let again = generate_for_proc(Benchmark::Zipf(theta100), pid, P, N_LOCAL);
+                assert_eq!(again, expect, "cached θ·100={theta100} pid={pid}");
+            }
+        }
     }
 
     #[test]

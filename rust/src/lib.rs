@@ -111,6 +111,7 @@
 pub mod baselines;
 pub mod bsp;
 pub mod experiment;
+pub mod ext;
 pub mod gen;
 pub mod key;
 pub mod metrics;

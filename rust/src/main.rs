@@ -17,10 +17,12 @@
 //! Common flags: `--max-n <keys>`, `--max-p <procs>`, `--full`,
 //! `--reps <k>`, `--seed <s>`; `sort` adds `--algo`, `--bench`, `--n`,
 //! `--p`, `--domain`, `--jobs`, `--local-sort` (alias `--seq`),
-//! `--no-dup`, and the multi-level topology flags
-//! `--groups`, `--topology`, `--levels auto`; `experiment` adds
+//! `--no-dup`, the multi-level topology flags
+//! `--groups`, `--topology`, `--levels auto`, and the out-of-core pair
+//! `--external --mem-budget`; `experiment` adds
 //! `--quick`, `--algos`, `--benches`, `--domains`, `--ns`, `--ps`,
-//! `--topologies`, `--local-sorts`, `--warmup`, `--tag`, `--out`.
+//! `--topologies`, `--local-sorts`, `--mem-budgets`, `--warmup`,
+//! `--tag`, `--out`.
 
 use std::path::Path;
 
@@ -40,7 +42,7 @@ const VALUE_OPTS: &[&str] = &[
     "max-n", "max-p", "reps", "seed", "algo", "bench", "n", "p", "seq", "table",
     "algos", "benches", "domains", "ns", "ps", "warmup", "tag", "out",
     "backend", "backends", "groups", "topology", "levels", "topologies",
-    "domain", "jobs", "local-sort", "local-sorts",
+    "domain", "jobs", "local-sort", "local-sorts", "mem-budget", "mem-budgets",
 ];
 
 fn main() {
@@ -148,6 +150,39 @@ fn run(cmd: &str, args: &Args) -> Result<(), Box<dyn std::error::Error>> {
             let backend = Backend::parse(backend_tag).ok_or_else(|| {
                 format!("unknown --backend '{backend_tag}' (expected threaded or sim)")
             })?;
+            // --external --mem-budget <keys>: the out-of-core EM-BSP
+            // sort — streamed run formation under the budget, then a
+            // parallel multi-way merge of the spilled runs.  It has no
+            // in-core algorithm or topology to pick, so it short-
+            // circuits here.
+            if args.flag("external") || args.get("mem-budget").is_some() {
+                let budget: usize = args.get_parsed("mem-budget", 0)?;
+                if budget == 0 {
+                    return Err(
+                        "--external needs --mem-budget <keys per processor> (≥ 1)".into()
+                    );
+                }
+                let mut spec = bsp_sort::ext::ExtSortSpec::new(bench, n, p, budget);
+                spec.backend = backend;
+                spec.engine = engine;
+                match domain {
+                    KeyDomain::I32 => print_ext(&bsp_sort::ext::sort_external::<i32>(&spec)?, &spec),
+                    KeyDomain::U64 => print_ext(&bsp_sort::ext::sort_external::<u64>(&spec)?, &spec),
+                    KeyDomain::F64T => print_ext(
+                        &bsp_sort::ext::sort_external::<bsp_sort::key::F64>(&spec)?,
+                        &spec,
+                    ),
+                    KeyDomain::RecordU32 => print_ext(
+                        &bsp_sort::ext::sort_external::<bsp_sort::key::Record>(&spec)?,
+                        &spec,
+                    ),
+                    KeyDomain::Str => print_ext(
+                        &bsp_sort::ext::sort_external::<bsp_sort::key::Str>(&spec)?,
+                        &spec,
+                    ),
+                }
+                return Ok(());
+            }
             // Topology selection for the multi-level variants: --groups
             // pins a depth-2 split, --topology a full divisor tree
             // (strictly validated against p, invalid shapes list the
@@ -293,6 +328,38 @@ fn print_sort_run(run: &SortRun, p: usize) {
     println!("measured (host) : {} s", fmt_secs(run.ledger.wall_us / 1e6));
 }
 
+/// Summary for `sort --external`: conformance facts (keys, sortedness),
+/// the external-memory evidence (runs, blocks, store backend) and the
+/// EM-priced model seconds next to the measured wall.
+fn print_ext<K: bsp_sort::experiment::StudyKey>(
+    run: &bsp_sort::ext::ExtRun<K>,
+    spec: &bsp_sort::ext::ExtSortSpec,
+) {
+    use bsp_sort::bsp::params::T3D_IO_US_PER_BLOCK;
+    let params = cray_t3d(spec.p).with_io(T3D_IO_US_PER_BLOCK);
+    let total: usize = run.outputs.iter().map(|r| r.keys.len()).sum();
+    let sorted = run
+        .outputs
+        .iter()
+        .flat_map(|r| r.keys.iter())
+        .zip(run.outputs.iter().flat_map(|r| r.keys.iter()).skip(1))
+        .all(|(a, b)| a <= b);
+    println!("external sort   : mem budget {} keys/proc", spec.mem_budget);
+    println!(
+        "keys            : {} across {} procs (globally sorted: {})",
+        total,
+        run.outputs.len(),
+        sorted
+    );
+    println!(
+        "runs formed     : {} ({} blocks written, {} read, store: {})",
+        run.runs_formed, run.blocks_written, run.blocks_read, run.store_kind
+    );
+    println!("G_io            : {T3D_IO_US_PER_BLOCK} µs/block (T3D model)");
+    println!("predicted T3D   : {} s", fmt_secs(run.ledger.predicted_secs(&params)));
+    println!("measured (host) : {} s", fmt_secs(run.ledger.wall_us / 1e6));
+}
+
 /// The `experiment` subcommand: build the sweep from flags, calibrate,
 /// run, write `BENCH_<tag>.{json,md}`, then re-read and schema-validate
 /// the JSON before declaring success.
@@ -308,8 +375,8 @@ fn run_experiment(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
 
     for c in &report.calibrations {
         println!(
-            "calibrated p={:<3}  L = {:>8.2} µs   g = {:.4} µs/word   rate = {:.1} comps/µs   (fit r² = {:.4})",
-            c.p, c.l_us, c.g_us_per_word, c.comps_per_us, c.fit_r2
+            "calibrated p={:<3}  L = {:>8.2} µs   g = {:.4} µs/word   rate = {:.1} comps/µs   G_io = {:.1} µs/blk   (fit r² = {:.4})",
+            c.p, c.l_us, c.g_us_per_word, c.comps_per_us, c.g_io_us_per_block, c.fit_r2
         );
     }
     for r in &report.runs {
@@ -396,11 +463,13 @@ USAGE:
                 [--local-sort quicksort|lsd-radix|ips] [--no-dup]
                 [--backend threaded|sim]
                 [--groups K | --topology K1xK2x... | --levels auto]
+                [--external --mem-budget M]
   bsp-sort experiment [--quick] [--algos det,ran,...] [--benches U,DD,...]
                       [--domains i32,u64,f64,record,str] [--ns N1,N2] [--ps P1,P2]
                       [--backends threaded,sim]
                       [--topologies default,auto,8x4x4]
                       [--local-sorts quicksort,lsd-radix,ips]
+                      [--mem-budgets none,65536]
                       [--warmup W] [--reps R] [--seed S]
                       [--tag T] [--out DIR]
   bsp-sort predict | validate-g | ablate-dup
@@ -426,7 +495,7 @@ classification → block permutation → cleanup, see docs/ALGORITHMS.md).
 
 `experiment` calibrates the host's (g, L) and operation rate from
 micro-probes, runs the sweep cross-product with warmup + repetitions,
-and writes BENCH_<tag>.json (schema bsp-sort/experiment-report/v4,
+and writes BENCH_<tag>.json (schema bsp-sort/experiment-report/v5,
 validated after writing) plus BENCH_<tag>.md.  --quick is the CI-sized
 preset: det+ran+det2 on [U]+[DD], i32+u64, 16K keys, p in {4,8}, plus
 one skew-generator cell (det @ [Z] @ p=8) and one sim-backend cell
@@ -437,6 +506,18 @@ for any g >= 2, B bucket, S staggered, DD duplicates, WR worst-case
 regular) plus the skew families Z[-theta100] zipf, X exponential,
 AS[-pct] almost-sorted, R reverse, 8D eight-dup.  --domain str sorts
 variable-length strings (8-byte prefix radix image, two wire words).
+
+sort --external --mem-budget M runs the out-of-core EM-BSP sort: each
+processor pulls its input through the selected local-sort engine in
+chunks of at most M keys, spills every sorted run to a block store
+(real temp files on the threaded backend, an in-memory mock on sim),
+then a parallel multi-way merge reads the runs back, splits them on
+sampled splitters and loser-tree-merges per processor.  The ledger
+charges block I/O under the EM third parameter G_io (calibrated by the
+experiment's I/O probe on hosts; the T3D constant on sim), so
+predictions price L, g and G_io together.  `experiment --mem-budgets
+none,65536` rides external cells along the sweep grid; budgets smaller
+than n/p force spilling.
 
 --backend sim (sort) / --backends sim (experiment) runs on the
 deterministic simulator: the identical SPMD programs on single-process

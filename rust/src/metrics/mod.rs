@@ -155,6 +155,7 @@ mod tests {
             reporters: 4,
             procs: 4,
             round: None,
+            io_blocks: 0,
         };
         ledger.supersteps.push(step(PH2, 9, 9)); // not routing: ignored
         ledger.supersteps.push(step(PH5, 300, 1000));

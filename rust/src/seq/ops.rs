@@ -40,7 +40,16 @@ pub const MERGE_CHARGE_FACTOR: f64 = 1.75;
 
 /// Charge for merging `q` sorted lists of total size `n`:
 /// `1.75 · n lg q` (calibrated; the paper's analysis uses `n lg q`).
+///
+/// For `q ≤ 1` there is nothing to merge — the "merge" is a straight
+/// copy of the single (or empty) run, so the charge is the linear `n`,
+/// not a full merge pass.  The external-memory merge prices per-pass
+/// fan-in through this function and hits the degenerate case whenever a
+/// processor owns a single run.
 pub fn merge_charge(n: usize, q: usize) -> f64 {
+    if q <= 1 {
+        return n as f64;
+    }
     MERGE_CHARGE_FACTOR * n as f64 * lg(q as f64).max(1.0)
 }
 
@@ -101,8 +110,19 @@ mod tests {
     #[test]
     fn merge_charge_is_calibrated_nlgq() {
         assert_eq!(merge_charge(1000, 8), 1.75 * 3000.0);
-        // q = 1: still a linear touch.
-        assert_eq!(merge_charge(4, 1), 7.0);
+    }
+
+    #[test]
+    fn merge_charge_degenerate_fanin_is_a_copy() {
+        // q ≤ 1: nothing to merge — a straight copy charges n, not a
+        // full 1.75·n merge pass (regression: the old policy priced a
+        // single-run "merge" as 1.75·n·max(lg 1, 1) = 1.75n).
+        assert_eq!(merge_charge(4, 1), 4.0);
+        assert_eq!(merge_charge(4, 0), 4.0);
+        assert_eq!(merge_charge(0, 1), 0.0);
+        // q = 2 is the boundary back to real merging: lg 2 = 1, so the
+        // calibrated 1.75·n applies from two runs upward.
+        assert_eq!(merge_charge(1000, 2), 1.75 * 1000.0);
     }
 
     #[test]

@@ -241,7 +241,7 @@ mod tests {
     fn planner_smoke_small_p_cheap_l_picks_flat() {
         // Small machine, negligible synchronization cost: no routing
         // level can pay for itself, the planner must stay one-level.
-        let params = BspParams { p: 8, l_us: 1.0, g_us_per_word: 0.1, comps_per_us: 10.0 };
+        let params = BspParams::host(8, 1.0, 0.1, 10.0);
         let plan = plan_det(1 << 20, &params, 4.0);
         assert_eq!(plan.topology, Topology::flat(8), "chose {}", plan.topology.label());
     }
@@ -251,8 +251,7 @@ mod tests {
         // Large machine with a punishing L: the one-level bitonic
         // sample sort pays L·lg²p; recursion over smaller cells must
         // win, and the chosen shape must be a real (priced) one.
-        let params =
-            BspParams { p: 1024, l_us: 200_000.0, g_us_per_word: 0.5, comps_per_us: 10.0 };
+        let params = BspParams::host(1024, 200_000.0, 0.5, 10.0);
         let plan = plan_det(1 << 22, &params, 4.0);
         assert!(
             plan.topology.depth() >= 2,

@@ -39,7 +39,7 @@ use crate::bsp::{Backend, BspCtx, BspRun, Ledger, Topology};
 use crate::experiment::run::{build_comms, run_cell, StudyKey};
 use crate::experiment::spec::{AlgoVariant, KeyDomain, RunSpec, TopologyChoice};
 use crate::gen::Benchmark;
-use crate::key::{Record, F64};
+use crate::key::{Record, Str, F64};
 use crate::runtime::RuntimeError;
 use crate::sort::common::ProcResult;
 use crate::sort::{det, iran, multilevel, plan, SortConfig};
@@ -231,6 +231,8 @@ pub enum DomainOutputs {
     F64T(Vec<ProcResult<F64>>),
     /// `(u32 key, u32 payload)` records.
     RecordU32(Vec<ProcResult<Record>>),
+    /// Fixed-capacity inline strings (`key::Str`).
+    Str(Vec<ProcResult<Str>>),
 }
 
 fn globally_sorted<K: crate::key::Key>(outs: &[ProcResult<K>]) -> bool {
@@ -256,6 +258,7 @@ impl DomainOutputs {
             DomainOutputs::U64(_) => KeyDomain::U64,
             DomainOutputs::F64T(_) => KeyDomain::F64T,
             DomainOutputs::RecordU32(_) => KeyDomain::RecordU32,
+            DomainOutputs::Str(_) => KeyDomain::Str,
         }
     }
 
@@ -266,6 +269,7 @@ impl DomainOutputs {
             DomainOutputs::U64(o) => o.len(),
             DomainOutputs::F64T(o) => o.len(),
             DomainOutputs::RecordU32(o) => o.len(),
+            DomainOutputs::Str(o) => o.len(),
         }
     }
 
@@ -276,6 +280,7 @@ impl DomainOutputs {
             DomainOutputs::U64(o) => o.iter().map(|r| r.keys.len()).sum(),
             DomainOutputs::F64T(o) => o.iter().map(|r| r.keys.len()).sum(),
             DomainOutputs::RecordU32(o) => o.iter().map(|r| r.keys.len()).sum(),
+            DomainOutputs::Str(o) => o.iter().map(|r| r.keys.len()).sum(),
         }
     }
 
@@ -287,6 +292,7 @@ impl DomainOutputs {
             DomainOutputs::U64(o) => globally_sorted(o),
             DomainOutputs::F64T(o) => globally_sorted(o),
             DomainOutputs::RecordU32(o) => globally_sorted(o),
+            DomainOutputs::Str(o) => globally_sorted(o),
         }
     }
 }
@@ -315,6 +321,8 @@ pub enum SortHandle {
     F64T(JobHandle<ProcResult<F64>>),
     /// Handle for a record job.
     RecordU32(JobHandle<ProcResult<Record>>),
+    /// Handle for a fixed-capacity string job.
+    Str(JobHandle<ProcResult<Str>>),
 }
 
 impl SortHandle {
@@ -329,6 +337,7 @@ impl SortHandle {
             SortHandle::U64(h) => h.join().map(|r| pack(r, DomainOutputs::U64)),
             SortHandle::F64T(h) => h.join().map(|r| pack(r, DomainOutputs::F64T)),
             SortHandle::RecordU32(h) => h.join().map(|r| pack(r, DomainOutputs::RecordU32)),
+            SortHandle::Str(h) => h.join().map(|r| pack(r, DomainOutputs::Str)),
         }
     }
 
@@ -339,6 +348,7 @@ impl SortHandle {
             SortHandle::U64(h) => h.is_done(),
             SortHandle::F64T(h) => h.is_done(),
             SortHandle::RecordU32(h) => h.is_done(),
+            SortHandle::Str(h) => h.is_done(),
         }
     }
 }
@@ -386,6 +396,7 @@ fn submit_domain(
         KeyDomain::RecordU32 => {
             SortHandle::RecordU32(submit_spec_on::<Record>(engine, spec, block)?)
         }
+        KeyDomain::Str => SortHandle::Str(submit_spec_on::<Str>(engine, spec, block)?),
     })
 }
 
@@ -488,6 +499,20 @@ impl Sorter {
             Backend::Sim => self.task_engine(),
         };
         submit_spec_on::<K>(&engine, *spec, true)?.join()
+    }
+
+    /// The pooled SPMD engine for `p`-processor jobs, for subsystems
+    /// (the out-of-core driver) that submit whole BSP programs rather
+    /// than [`SortJob`]s.  Callers must submit with `n_hint =
+    /// usize::MAX` so the service never batches a spilling job.
+    pub(crate) fn spmd_engine(&self, p: usize) -> Arc<Engine> {
+        self.engine_for(p)
+    }
+
+    /// The pooled closure-task engine (one lane per task), for
+    /// subsystems that run simulator machines or other opaque closures.
+    pub(crate) fn closure_engine(&self) -> Arc<Engine> {
+        self.task_engine()
     }
 
     /// Scheduling counters of the `p`-processor engine (`None` until a

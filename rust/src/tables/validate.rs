@@ -229,14 +229,17 @@ fn req_arr<'a>(ctx: &str, doc: &'a Json, key: &str) -> Result<&'a [Json], String
 }
 
 /// Validate a parsed experiment report against the
-/// `bsp-sort/experiment-report/v4` schema: schema tag, non-empty
-/// calibrations with positive (g, L, rate), non-empty runs each carrying
-/// an execution-backend tag (`threaded` | `sim`) and a topology label
-/// (`"2x4"`, `"8x4x4"`, … for multi-level runs; `null` otherwise),
-/// wall-clock statistics (virtual µs for `sim` runs), a positive
-/// end-to-end measured-vs-predicted ratio, per-phase rows (ratio
-/// positive or `null` for unpriced phases), balance metrics and a
-/// superstep trace.  Returns the first violation.
+/// `bsp-sort/experiment-report/v5` schema: schema tag, non-empty
+/// calibrations with positive (g, L, rate) and a non-negative EM-BSP
+/// `g_io_us_per_block`, non-empty runs each carrying an
+/// execution-backend tag (`threaded` | `sim`), a topology label
+/// (`"2x4"`, `"8x4x4"`, … for multi-level runs; `null` otherwise) and a
+/// `mem_budget` (≥ 1 keys per processor for external cells, `null` for
+/// in-core ones), wall-clock statistics (virtual µs for `sim` runs), a
+/// positive end-to-end measured-vs-predicted ratio, per-phase rows
+/// (ratio positive or `null` for unpriced phases), balance metrics and
+/// a superstep trace with non-negative `io_blocks`.  Returns the first
+/// violation.
 pub fn validate_report(doc: &Json) -> Result<(), String> {
     let schema = field("report", doc, "schema")?
         .as_str()
@@ -270,6 +273,8 @@ pub fn validate_report(doc: &Json) -> Result<(), String> {
         req_positive(&ctx, c, "l_us")?;
         req_positive(&ctx, c, "g_us_per_word")?;
         req_positive(&ctx, c, "comps_per_us")?;
+        // v5: the EM third parameter; 0 when the I/O probe was skipped.
+        req_nonneg(&ctx, c, "g_io_us_per_block")?;
         req_num(&ctx, c, "fit_r2")?;
         let pts = req_arr(&ctx, c, "a2a_points")?;
         if pts.is_empty() {
@@ -308,6 +313,19 @@ pub fn validate_report(doc: &Json) -> Result<(), String> {
         }
         req_positive(&ctx, r, "n")?;
         req_positive(&ctx, r, "p")?;
+        // v5: external cells record their per-processor key budget;
+        // in-core cells record null.
+        let mem_budget = field(&ctx, r, "mem_budget")?;
+        if !mem_budget.is_null() {
+            let v = mem_budget
+                .as_f64()
+                .ok_or_else(|| format!("{ctx}: 'mem_budget' must be a number or null"))?;
+            if v < 1.0 {
+                return Err(format!(
+                    "{ctx}: 'mem_budget' must hold at least one key (got {v})"
+                ));
+            }
+        }
         req_nonneg(&ctx, r, "warmup")?;
         req_positive(&ctx, r, "reps")?;
 
@@ -378,6 +396,8 @@ pub fn validate_report(doc: &Json) -> Result<(), String> {
             if !round.is_null() && round.as_f64().is_none() {
                 return Err(format!("{sctx}: 'round' must be a number or null"));
             }
+            // v5: charged external-I/O blocks at this sync.
+            req_nonneg(&sctx, s, "io_blocks")?;
         }
     }
     Ok(())
@@ -431,7 +451,9 @@ mod tests {
         spec.ns = vec![4096];
         spec.ps = vec![4];
         // A small sim-backend extra exercises the v3 backend field (and
-        // the synthetic model calibration) through the round-trip.
+        // the synthetic model calibration) through the round-trip; its
+        // spill-forcing mem budget exercises the v5 external-sort
+        // fields (mem_budget, io_blocks) the same way.
         spec.extras = vec![RunConfig {
             algo: AlgoVariant::Det,
             bench: Benchmark::Uniform,
@@ -441,6 +463,7 @@ mod tests {
             backend: Backend::Sim,
             topology: TopologyChoice::Default,
             local_sort: crate::sort::LocalSortEngine::Quicksort,
+            mem_budget: Some(128),
         }];
         spec.warmup = 0;
         spec.reps = 2;
@@ -450,6 +473,7 @@ mod tests {
             a2a_h_words: vec![256, 1024],
             a2a_rounds: 2,
             comp_n: 1 << 10,
+            io_blocks: 2,
         };
         let report = experiment::run_study(&spec);
         let text = report.to_json().render();
@@ -486,6 +510,17 @@ mod tests {
             .expect("sim run present");
         assert_eq!(sim.get("p").unwrap().as_u64(), Some(16));
         assert_eq!(sim.get("algo").unwrap().as_str(), Some("det"));
+        // v5: the external extra records its budget and charged block
+        // I/O; the in-core runs record a null budget and zero blocks.
+        assert_eq!(sim.get("mem_budget").unwrap().as_u64(), Some(128));
+        assert!(sim
+            .get("supersteps")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .any(|s| s.get("io_blocks").unwrap().as_u64().unwrap_or(0) > 0));
+        assert!(runs[0].get("mem_budget").unwrap().is_null());
         // And its pricing parameters are present, joinable by
         // (p, backend): a synthetic model calibration at p = 16 next to
         // the host calibration at p = 4.
@@ -508,6 +543,7 @@ mod tests {
                  "os": "linux", "arch": "x86_64",
                  "calibrations": [{{"p": 4, "backend": "threaded", "l_us": 1.0,
                    "g_us_per_word": 0.1, "comps_per_us": 10.0,
+                   "g_io_us_per_block": 327.0,
                    "fit_intercept_us": 1.0, "fit_r2": 1.0,
                    "a2a_points": [[64, 7.4]]}}],
                  "runs": [{{"algo": "det", "algo_label": "[DSQ]", "bench": "[U]",
@@ -527,6 +563,37 @@ mod tests {
         .unwrap();
         let err = validate_report(&doc).unwrap_err();
         assert!(err.contains("calibrations[0]") && err.contains("abacus"), "{err}");
+    }
+
+    #[test]
+    fn validate_report_rejects_empty_mem_budget() {
+        // A run claiming an external budget of zero keys is malformed.
+        let doc = Json::parse(&format!(
+            r#"{{"schema": "{SCHEMA}", "tag": "t", "created_unix_secs": 1,
+                 "os": "linux", "arch": "x86_64",
+                 "calibrations": [{{"p": 4, "backend": "threaded", "l_us": 1.0,
+                   "g_us_per_word": 0.1, "comps_per_us": 10.0,
+                   "g_io_us_per_block": 327.0,
+                   "fit_intercept_us": 1.0, "fit_r2": 1.0,
+                   "a2a_points": [[64, 7.4]]}}],
+                 "runs": [{{"algo": "det", "algo_label": "[DSQ]+EM", "bench": "[U]",
+                   "domain": "i32", "backend": "sim", "topology": null,
+                   "n": 4096, "p": 4, "mem_budget": 0}}]}}"#
+        ))
+        .unwrap();
+        let err = validate_report(&doc).unwrap_err();
+        assert!(err.contains("mem_budget"), "{err}");
+        // And a calibration without the v5 G_io field no longer passes.
+        let doc = Json::parse(&format!(
+            r#"{{"schema": "{SCHEMA}", "tag": "t", "created_unix_secs": 1,
+                 "os": "linux", "arch": "x86_64",
+                 "calibrations": [{{"p": 4, "backend": "threaded", "l_us": 1.0,
+                   "g_us_per_word": 0.1, "comps_per_us": 10.0}}],
+                 "runs": []}}"#
+        ))
+        .unwrap();
+        let err = validate_report(&doc).unwrap_err();
+        assert!(err.contains("g_io_us_per_block"), "{err}");
     }
 
     #[test]

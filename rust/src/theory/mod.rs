@@ -271,6 +271,88 @@ pub fn predict_det_multilevel(
     predict_det_topology(n, params, omega, &[k, params.p.div_ceil(k)])
 }
 
+/// The EM-BSP prediction for one external sort: the usual BSP terms
+/// plus the block-I/O bill, kept separate so reports can show the
+/// `G_io·b` share on its own.
+#[derive(Clone, Copy, Debug)]
+pub struct ExternalPrediction {
+    /// The BSP computation/communication prediction.
+    pub prediction: Prediction,
+    /// Predicted block transfers on the busiest processor (run-
+    /// formation writes + merge reads).
+    pub io_blocks: u64,
+    /// Those transfers priced at `G_io` ([`BspParams::io_us`]), µs.
+    pub io_us: f64,
+}
+
+impl ExternalPrediction {
+    /// Total predicted seconds including the I/O term.
+    pub fn total_secs(&self, params: &BspParams) -> f64 {
+        self.prediction.total_secs(params) + self.io_us / 1e6
+    }
+}
+
+/// Closed form for the out-of-core sort ([`crate::ext::sort_external`])
+/// under EM-BSP `(p, L, g, G_io)` — the same "predict, then compare to
+/// the measured ledger" methodology the in-core forms follow (§6.4).
+///
+/// With `n_p = n/p` keys per processor, memory budget `M` keys, and
+/// `R_p = ⌈n_p/M⌉` runs per processor:
+///
+/// * **run formation** — `R_p` chunk sorts totalling `n_p·lg(min(M,
+///   n_p))`, one encode pass `n_p`, and `⌈m·w/B⌉` block writes per
+///   run (`w` wire words per key, `B` block words);
+/// * **merge** — read the same blocks back (decode pass `n_p`),
+///   partition each run at `p−1` splitters (`R_p(p−1)·⌈lg M⌉`), one
+///   `g·n_p·w` routing superstep, and an `R`-way loser-tree merge
+///   ([`crate::seq::ops::merge_charge`] at fan-in `R = p·R_p`, the
+///   worst-case segment count);
+/// * **I/O** — `2·blocks_p` transfers at `G_io` each.
+///
+/// Like Props 5.1/5.3 this is an upper-bound shape, not an exact
+/// replay: the conformance gate is the ledger comparison, and this
+/// form tracks how the bill scales with `(n, p, M, G_io)`.
+pub fn predict_external(
+    n: usize,
+    params: &BspParams,
+    mem_budget: usize,
+    key_words: u64,
+) -> ExternalPrediction {
+    let p = params.p as f64;
+    let np = (n as f64 / p).max(1.0);
+    let n_local = (n / params.p.max(1)).max(1);
+    let m = mem_budget.max(1).min(n_local);
+    let runs_per_proc = n_local.div_ceil(m);
+    let total_runs = (runs_per_proc * params.p).max(1);
+
+    // Computation: chunk sorts + encode, decode, partition, merge.
+    let w = key_words.max(1) as usize;
+    let block = crate::ext::DEFAULT_BLOCK_WORDS;
+    let comp = np * lg(m as f64).max(1.0)
+        + 2.0 * np
+        + runs_per_proc as f64 * (p - 1.0) * lg(m as f64).max(1.0).ceil()
+        + crate::seq::ops::merge_charge(n_local, total_runs);
+
+    // Communication: the one scatter h-relation plus the three
+    // superstep floors (read, scatter, merge barriers).
+    let comm_us = params.comm_us((n_local * w) as u64) + 3.0 * params.l_us;
+
+    // I/O: every run's blocks written once and read once.
+    let full_runs = runs_per_proc.saturating_sub(1);
+    let tail = n_local - full_runs * m;
+    let blocks_per_proc = (full_runs * (m * w).div_ceil(block) + (tail * w).div_ceil(block)) as u64;
+    let io_blocks = 2 * blocks_per_proc;
+
+    let c_seq = seq_charge(n);
+    let pi = p * comp / c_seq;
+    let mu = p * (comm_us * params.comps_per_us) / c_seq;
+    ExternalPrediction {
+        prediction: Prediction { comp_ops: comp, comm_us, pi, mu },
+        io_blocks,
+        io_us: params.io_us(io_blocks),
+    }
+}
+
 /// Validity ranges: the conditions of Props 5.1/5.3.
 pub fn det_conditions_hold(n: usize, p: usize, omega: f64) -> bool {
     // p²ω² ≤ n / lg n and ω = O(lg n).
@@ -403,6 +485,38 @@ mod tests {
         let r3 = predict_ran_topology(n, &params, lg(n as f64).sqrt(), &[4, 4, 4]);
         assert_eq!(r3.effective, vec![4, 4, 4]);
         assert!(r3.prediction.comm_us > 0.0 && r3.prediction.comp_ops > 0.0);
+    }
+
+    #[test]
+    fn external_prediction_prices_the_io_term() {
+        use crate::bsp::params::T3D_IO_US_PER_BLOCK;
+        let n = 1usize << 20;
+        let flat = cray_t3d(16);
+        let em = flat.with_io(T3D_IO_US_PER_BLOCK);
+        let pred = predict_external(n, &em, 1 << 12, 1);
+        assert!(pred.io_blocks > 0);
+        assert!((pred.io_us - pred.io_blocks as f64 * T3D_IO_US_PER_BLOCK).abs() < 1e-6);
+        // Without G_io the same shape prices its transfers at zero.
+        let free = predict_external(n, &flat, 1 << 12, 1);
+        assert_eq!(free.io_blocks, pred.io_blocks);
+        assert_eq!(free.io_us, 0.0);
+        assert!(pred.total_secs(&em) > free.total_secs(&flat));
+    }
+
+    #[test]
+    fn tighter_budgets_cost_more_merge_and_never_less_io() {
+        let em = cray_t3d(16).with_io(327.0);
+        let n = 1usize << 20;
+        let tight = predict_external(n, &em, 1 << 10, 1);
+        let loose = predict_external(n, &em, 1 << 14, 1);
+        assert!(
+            tight.prediction.comp_ops > loose.prediction.comp_ops,
+            "more runs ⇒ a wider merge fan-in"
+        );
+        assert!(tight.io_blocks >= loose.io_blocks, "per-run rounding only adds blocks");
+        // Two-word keys double the block count (±rounding).
+        let wide = predict_external(n, &em, 1 << 14, 2);
+        assert!(wide.io_blocks >= 2 * loose.io_blocks - 2);
     }
 
     #[test]

@@ -1,0 +1,194 @@
+//! External-sort conformance tier: the out-of-core EM-BSP sort must be
+//! **bit-identical** to the in-core path on the same deterministic
+//! input stream.
+//!
+//! Both paths draw the same per-processor key stream
+//! (`gen::generate_typed_for_proc` is seeded by pid alone), and both
+//! end fully sorted under the domain's total `Ord`, so the
+//! concatenated outputs must match element-for-element — not just as
+//! multisets.  The suite asserts exactly that, across:
+//!
+//! * all five key domains (`i32`, `u64`, `f64`, `record`, `str`) ×
+//!   the `[U]` / `[DD]` / `[Z-100]` benchmarks on the simulator
+//!   backend (in-memory block store, virtual time, replayable);
+//! * spill-forcing budgets (`mem_budget ≪ n/p`) on the threaded
+//!   backend, where runs round-trip through real temp-file blocks;
+//! * the merge edge cases: a single run (`q = 1` loser-tree
+//!   degenerate), budgets larger than the input (no spill pressure),
+//!   `p = 1` (no scatter), and massive duplication at tiny `n/p`
+//!   (splitter ties → empty scatter segments).
+//!
+//! Every case also checks the order-independent multiset signature so
+//! a sortedness-preserving key corruption cannot slip through the
+//! element-wise comparison being vacuous.
+
+use bsp_sort::bsp::Backend;
+use bsp_sort::experiment::{execute_typed, AlgoVariant, RunSpec, StudyKey};
+use bsp_sort::ext::{sort_external, ExtRun, ExtSortSpec};
+use bsp_sort::gen::Benchmark;
+use bsp_sort::key::{Record, Str, F64};
+use bsp_sort::util::check::multiset_sig;
+
+/// Run the external sort and return it with its concatenated output.
+fn run_ext<K: StudyKey>(
+    bench: Benchmark,
+    n: usize,
+    p: usize,
+    budget: usize,
+    backend: Backend,
+) -> (ExtRun<K>, Vec<K>) {
+    let mut spec = ExtSortSpec::new(bench, n, p, budget);
+    spec.backend = backend;
+    let run = sort_external::<K>(&spec).expect("external sort completes");
+    let keys: Vec<K> = run.outputs.iter().flat_map(|r| r.keys.iter().copied()).collect();
+    (run, keys)
+}
+
+/// The in-core reference: the same cell through the DET BSP sort on
+/// the simulator (deterministic, engine-independent — any fully sorted
+/// permutation of the same input is the same sequence).
+fn in_core_reference<K: StudyKey>(bench: Benchmark, n: usize, p: usize) -> Vec<K> {
+    let spec = RunSpec::new(AlgoVariant::Det, bench, p, n).with_backend(Backend::Sim);
+    let single = execute_typed::<K>(&spec);
+    single.outputs.iter().flat_map(|r| r.keys.iter().copied()).collect()
+}
+
+/// One conformance case: external output ≡ in-core output, as a
+/// sequence and as a multiset, with the expected store backend.
+fn assert_conforms<K: StudyKey>(
+    bench: Benchmark,
+    n: usize,
+    p: usize,
+    budget: usize,
+    backend: Backend,
+) {
+    let (run, ext) = run_ext::<K>(bench, n, p, budget, backend);
+    let core = in_core_reference::<K>(bench, n, p);
+    let label = format!(
+        "{} n={n} p={p} budget={budget} backend={backend:?}",
+        bench.tag()
+    );
+    assert_eq!(ext.len(), core.len(), "{label}: size");
+    assert_eq!(
+        multiset_sig(ext.iter().copied()),
+        multiset_sig(core.iter().copied()),
+        "{label}: multiset signature"
+    );
+    assert_eq!(ext, core, "{label}: bit-identity");
+    let want_store = match backend {
+        Backend::Sim => "mem",
+        Backend::Threaded => "spill",
+    };
+    assert_eq!(run.store_kind, want_store, "{label}: store backend");
+    assert_eq!(run.blocks_read, run.blocks_written, "{label}: block accounting");
+}
+
+const BENCHES: [Benchmark; 3] =
+    [Benchmark::Uniform, Benchmark::DetDup, Benchmark::Zipf(100)];
+
+// ------------------------------------------------------------------
+// Domain × benchmark matrix on the simulator (spill-forcing budget:
+// 256 keys against n/p = 1024).
+// ------------------------------------------------------------------
+
+#[test]
+fn sim_external_matches_in_core_i32() {
+    for bench in BENCHES {
+        assert_conforms::<i32>(bench, 4096, 4, 256, Backend::Sim);
+    }
+}
+
+#[test]
+fn sim_external_matches_in_core_u64() {
+    for bench in BENCHES {
+        assert_conforms::<u64>(bench, 4096, 4, 256, Backend::Sim);
+    }
+}
+
+#[test]
+fn sim_external_matches_in_core_f64() {
+    for bench in BENCHES {
+        assert_conforms::<F64>(bench, 4096, 4, 256, Backend::Sim);
+    }
+}
+
+#[test]
+fn sim_external_matches_in_core_record() {
+    for bench in BENCHES {
+        assert_conforms::<Record>(bench, 4096, 4, 256, Backend::Sim);
+    }
+}
+
+#[test]
+fn sim_external_matches_in_core_str() {
+    for bench in BENCHES {
+        assert_conforms::<Str>(bench, 4096, 4, 256, Backend::Sim);
+    }
+}
+
+// ------------------------------------------------------------------
+// Threaded backend: the runs round-trip through real temp-file blocks.
+// ------------------------------------------------------------------
+
+#[test]
+fn threaded_spill_forced_matches_in_core() {
+    // budget 200 < n/p = 1024 forces 6 runs per processor to disk.
+    assert_conforms::<i32>(Benchmark::Uniform, 4096, 4, 200, Backend::Threaded);
+    assert_conforms::<u64>(Benchmark::DetDup, 4096, 4, 200, Backend::Threaded);
+}
+
+#[test]
+fn threaded_spill_counts_runs() {
+    let (run, _) = run_ext::<i32>(Benchmark::Uniform, 4096, 4, 200, Backend::Threaded);
+    // ⌈1024 / 200⌉ = 6 runs on each of the 4 processors.
+    assert_eq!(run.runs_formed, 24);
+    assert!(run.blocks_written > 0);
+}
+
+// ------------------------------------------------------------------
+// Merge edge cases: q = 1, oversized budgets, p = 1, duplicate floods.
+// ------------------------------------------------------------------
+
+#[test]
+fn budget_at_least_n_local_forms_one_run_per_proc() {
+    // No spill pressure: each processor sorts its whole input in core
+    // and the merge consumes exactly p runs.
+    let (run, ext) = run_ext::<i32>(Benchmark::Uniform, 4096, 4, 4096, Backend::Sim);
+    assert_eq!(run.runs_formed, 4);
+    assert_eq!(ext, in_core_reference::<i32>(Benchmark::Uniform, 4096, 4));
+}
+
+#[test]
+fn p1_single_run_is_the_q1_degenerate_merge() {
+    // One processor, budget ≥ n: a single run, no scatter, a q = 1
+    // merge (the loser tree's buffer-reuse path).
+    let (run, ext) = run_ext::<i32>(Benchmark::Uniform, 1024, 1, 2048, Backend::Sim);
+    assert_eq!(run.runs_formed, 1);
+    assert_eq!(ext, in_core_reference::<i32>(Benchmark::Uniform, 1024, 1));
+}
+
+#[test]
+fn p1_many_runs_merge_without_scatter() {
+    let (run, ext) = run_ext::<u64>(Benchmark::Zipf(100), 1024, 1, 100, Backend::Sim);
+    assert_eq!(run.runs_formed, 11); // ⌈1024 / 100⌉
+    assert_eq!(ext, in_core_reference::<u64>(Benchmark::Zipf(100), 1024, 1));
+}
+
+#[test]
+fn duplicate_floods_with_tiny_budgets_survive_empty_segments() {
+    // Massive key equality at n/p = 8 with budget 2: splitter ties
+    // route whole runs to single processors, leaving other scatter
+    // segments empty — the merge must not require one segment per
+    // (run, processor) pair.
+    for bench in [Benchmark::DetDup, Benchmark::EightDup] {
+        assert_conforms::<i32>(bench, 64, 8, 2, Backend::Sim);
+    }
+}
+
+#[test]
+fn minimum_budget_of_one_key_still_sorts() {
+    // The pathological floor: every key is its own run.
+    let (run, ext) = run_ext::<i32>(Benchmark::Uniform, 64, 4, 1, Backend::Sim);
+    assert_eq!(run.runs_formed, 64);
+    assert_eq!(ext, in_core_reference::<i32>(Benchmark::Uniform, 64, 4));
+}
